@@ -1,0 +1,103 @@
+//! End-to-end driver over the REAL three-layer stack.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example image_classification
+//! ```
+//!
+//! Loads the JAX/Pallas AOT artifacts (`artifacts/*.hlo.txt`, built once
+//! by python; python is NOT running now), spins up the data-parallel
+//! training system over the branch-versioned parameter server, and lets
+//! MLtuner drive the whole job: fork trial branches, measure
+//! convergence speeds from real training losses, pick tunables, train,
+//! re-tune on plateau.  Logs the loss curve and accuracy trajectory —
+//! the run recorded in EXPERIMENTS.md.
+//!
+//! Flags: --model (alexnet_proxy|inception_proxy) --variant (xla|pallas)
+//!        --workers N --seed N --train-examples N --max-epochs N
+
+use mltuner::apps::dnn::{DnnConfig, DnnSystem};
+use mltuner::optim::OptimizerKind;
+use mltuner::runtime::Runtime;
+use mltuner::tuner::{ConvergenceCriterion, MLtuner, TunerConfig};
+use mltuner::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "alexnet_proxy").to_string();
+    let variant = args.get_or("variant", "xla").to_string();
+    let workers = args.get_usize("workers", 4);
+    let seed = args.get_u64("seed", 0);
+    let train_examples = args.get_usize("train-examples", 8192);
+    let max_epochs = args.get_u64("max-epochs", 60);
+
+    let t0 = std::time::Instant::now();
+    let runtime = Runtime::load(args.get_or("artifacts-dir", "artifacts"))?;
+    let mm = runtime.model(&model)?;
+    println!(
+        "model {model} ({} params: {} -> {:?} -> {}), variant {variant}, {workers} workers",
+        mm.num_params(),
+        mm.input_dim,
+        mm.hidden,
+        mm.classes
+    );
+    let system = DnnSystem::new(
+        DnnConfig {
+            model: model.clone(),
+            variant,
+            num_workers: workers,
+            seed,
+            train_examples,
+            val_examples: 1024,
+            spread: 0.55,
+        },
+        runtime,
+        OptimizerKind::Sgd,
+    )?;
+    let space = system.space().clone();
+
+    let mut cfg = TunerConfig::new(space.clone());
+    cfg.seed = seed;
+    cfg.max_epochs = max_epochs;
+    cfg.convergence = ConvergenceCriterion::AccuracyPlateau { epochs: 4 };
+    cfg.max_trials_per_tuning = 24;
+    let mut tuner = MLtuner::new(system, cfg);
+    let report = tuner.run()?;
+
+    println!("\n=== end-to-end run (wall {:.1}s) ===", t0.elapsed().as_secs_f64());
+    println!("epochs:          {}", report.epochs);
+    println!("converged:       {}", report.converged);
+    println!("final accuracy:  {:.2}%", report.final_accuracy * 100.0);
+    println!(
+        "tuning overhead: {:.1}s of {:.1}s ({:.0}%)",
+        report.tuning_time,
+        report.total_time,
+        100.0 * report.tuning_time / report.total_time.max(1e-9)
+    );
+    for (i, t) in report.tunings.iter().enumerate() {
+        println!(
+            "tuning[{i}] {}: {} trials, trial_time {:.2}s → {}",
+            if t.initial { "initial" } else { "re-tune" },
+            t.trials,
+            t.trial_time,
+            t.chosen
+                .as_ref()
+                .map(|s| s.describe(&space))
+                .unwrap_or_else(|| "(model converged)".into())
+        );
+    }
+    println!("\nloss curve (every ~20th clock):");
+    for (i, (t, c, l)) in report.recorder.losses.iter().enumerate() {
+        if i % 20 == 0 {
+            println!("  t={t:8.2}s clock={c:5} loss={l:.4}");
+        }
+    }
+    println!("\naccuracy trajectory:");
+    for (t, e, a) in &report.recorder.accuracies {
+        println!("  t={t:8.2}s epoch={e:3} accuracy={:.2}%", a * 100.0);
+    }
+    if let Some(path) = args.get("csv") {
+        report.recorder.write_csv(std::fs::File::create(path)?)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: tune and train a benchmark in one call.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the simulated AlexNet-on-Cifar10 profile (no artifacts needed)
+//! so it finishes in seconds: MLtuner searches the 4-tunable space of
+//! Table 3, trains, re-tunes on every accuracy plateau, and stops when
+//! no better setting exists.
+
+use mltuner::apps::sim::{SimProfile, SimSystem};
+use mltuner::tuner::{MLtuner, TunerConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A training system: 8 simulated workers on the Cifar10 profile.
+    let system = SimSystem::new(SimProfile::alexnet_cifar10(), 8, 42);
+
+    // 2. MLtuner over the system's tunable space (learning rate,
+    //    momentum, per-machine batch size, data staleness — Table 3).
+    let mut cfg = TunerConfig::new(system.space.clone());
+    cfg.seed = 42;
+    cfg.max_epochs = 400;
+    let space = cfg.space.clone();
+    let mut tuner = MLtuner::new(system, cfg);
+
+    // 3. Run: initial tuning -> train -> re-tune on plateau -> converge.
+    let report = tuner.run()?;
+
+    println!("converged:      {}", report.converged);
+    println!("epochs:         {}", report.epochs);
+    println!("final accuracy: {:.1}%", report.final_accuracy * 100.0);
+    println!(
+        "total time:     {:.0}s simulated ({} tunings, {:.0}% tuning overhead)",
+        report.total_time,
+        report.tunings.len(),
+        100.0 * report.tuning_time / report.total_time
+    );
+    for (i, t) in report.tunings.iter().enumerate() {
+        println!(
+            "  tuning[{i}] {}: {} trials -> {}",
+            if t.initial { "initial" } else { "re-tune" },
+            t.trials,
+            t.chosen
+                .as_ref()
+                .map(|s| s.describe(&space))
+                .unwrap_or_else(|| "(model converged)".into())
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,139 @@
+"""AOT compile path: lower L2 entry points to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Run once at build time (`make artifacts`); the rust binary is then
+self-contained: it reads artifacts/manifest.json, loads the HLO text
+files with HloModuleProto::from_text_file, compiles them on the PJRT CPU
+client, and never touches python again.
+
+Usage: (cd python && python -m compile.aot --out-dir ../artifacts)
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Model profiles: proxies for the paper's benchmarks (DESIGN.md section
+# "Hardware adaptation & substitutions").  Batch-size grids follow
+# Table 3 of the paper; one compiled executable per batch-size variant.
+PROFILES = {
+    # AlexNet-on-Cifar10 stand-in: small, fast — used by tests,
+    # quickstart, and Fig.6-style sweeps on the real stack.
+    "alexnet_proxy": {
+        "input_dim": 64,
+        "hidden": [128, 128],
+        "classes": 10,
+        "batch_sizes": [4, 16, 64, 256],
+        "eval_batch": 256,
+        "variants": ["pallas", "xla"],
+    },
+    # Inception-BN-on-ILSVRC12 stand-in: larger (~1.4M params) — used by
+    # the end-to-end image_classification example.  The pallas variant
+    # is lowered for the small batch sizes only (interpret-mode pallas
+    # is a correctness path, ~40x slower at runtime on CPU).
+    "inception_proxy": {
+        "input_dim": 256,
+        "hidden": [1024, 1024],
+        "classes": 100,
+        "batch_sizes": [2, 4, 8, 16, 32],
+        "eval_batch": 128,
+        "variants": ["xla", "pallas"],
+        "pallas_max_batch": 4,
+    },
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(kind, profile_cfg, batch_size, variant):
+    make = model.make_grad_fn if kind == "grad" else model.make_eval_fn
+    fn, example = make(
+        profile_cfg["input_dim"],
+        profile_cfg["hidden"],
+        profile_cfg["classes"],
+        batch_size,
+        use_pallas=(variant == "pallas"),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*example))
+
+
+def build(out_dir, profiles=None):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "models": {}}
+    for name, cfg in PROFILES.items():
+        if profiles and name not in profiles:
+            continue
+        shapes = model.param_shapes(
+            cfg["input_dim"], cfg["hidden"], cfg["classes"]
+        )
+        entry = {
+            "input_dim": cfg["input_dim"],
+            "hidden": cfg["hidden"],
+            "classes": cfg["classes"],
+            "param_shapes": [list(s) for s in shapes],
+            "eval_batch": cfg["eval_batch"],
+            "artifacts": [],
+        }
+        jobs = []
+        for variant in cfg["variants"]:
+            for bs in cfg["batch_sizes"]:
+                if variant == "pallas" and bs > cfg.get(
+                    "pallas_max_batch", 10**9
+                ):
+                    continue
+                jobs.append(("grad", bs, variant))
+            jobs.append(("eval", cfg["eval_batch"], variant))
+        for kind, bs, variant in jobs:
+            fname = f"{name}_{kind}_bs{bs}_{variant}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            text = lower_entry(kind, cfg, bs, variant)
+            with open(path, "w") as f:
+                f.write(text)
+            entry["artifacts"].append(
+                {
+                    "kind": kind,
+                    "batch_size": bs,
+                    "variant": variant,
+                    "file": fname,
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                }
+            )
+            print(f"  wrote {fname} ({len(text)} chars)")
+        manifest["models"][name] = entry
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--profiles",
+        nargs="*",
+        help="subset of model profiles to build (default: all)",
+    )
+    args = ap.parse_args()
+    build(args.out_dir, args.profiles)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+All kernels lower with interpret=True (plain HLO) so the AOT artifacts
+run on the rust PJRT CPU client.  `ref` holds the pure-jnp oracles.
+"""
+
+from .dense import dense  # noqa: F401
+from .softmax_xent import softmax_xent  # noqa: F401

@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: fused dense layer forward (matmul + bias + activation).
+
+The paper's compute hot-spot is the DNN layer compute (cuDNN on the
+authors' GPUs).  Re-thought for the TPU model Pallas targets:
+
+  * the grid tiles the output [M, N] into (BM, BN) VMEM-resident blocks;
+  * the contraction dimension K is walked as the innermost grid axis so a
+    VMEM scratch accumulator carries partial sums between K-steps (the
+    HBM<->VMEM schedule the CUDA version expressed with threadblocks +
+    shared memory);
+  * the MXU is fed bf16/f32 (BM, BK) @ (BK, BN) tiles via
+    `preferred_element_type=f32` accumulation;
+  * bias add + activation are fused into the epilogue on the last K-step
+    so activations never round-trip to HBM.
+
+On this image Pallas MUST run with interpret=True (the CPU PJRT plugin
+cannot execute Mosaic custom-calls).  interpret=True lowers the kernel to
+plain HLO, so the AOT artifacts remain executable by the rust runtime.
+TPU efficiency is estimated from the BlockSpec (see DESIGN.md
+section "Hardware-Adaptation" and EXPERIMENTS.md section "Perf").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax._src import core as _jcore
+from jax.experimental import pallas as pl
+
+
+def _scratch(shape, dtype):
+    """VMEM-style scratch buffer (pl.ANY memory space under interpret)."""
+    return pl.MemoryRef(_jcore.ShapedArray(shape, dtype), pl.ANY)
+
+# Default block shapes: multiples of the 128x128 MXU tile / (8,128) VPU
+# lane layout.  BK walks the contraction dimension.
+BM, BN, BK = 128, 128, 128
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nsteps_k, activation):
+    """One (BM, BN) output tile; grid axis 2 walks K in BK chunks."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _epilogue():
+        acc = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif activation == "tanh":
+            acc = jnp.tanh(acc)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _pick_block(dim, pref):
+    """Largest divisor of `dim` that is <= pref (keeps the grid exact for
+    non-tile-aligned shapes; hypothesis sweeps these)."""
+    b = min(pref, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def dense(x, w, b, activation="relu"):
+    """Fused y = act(x @ w + b) via a Pallas tile kernel.
+
+    x: [M, K], w: [K, N], b: [N] -> y: [M, N] (dtype of x).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), b.shape
+    bm, bn, bk = _pick_block(m, BM), _pick_block(n, BN), _pick_block(k, BK)
+    nsteps_k = k // bk
+    grid = (m // bm, n // bn, nsteps_k)
+    kernel = functools.partial(
+        _dense_kernel, nsteps_k=nsteps_k, activation=activation
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[_scratch((bm, bn), jnp.float32)],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, b)
+
+
+def vmem_footprint_bytes(bm=BM, bn=BN, bk=BK, dtype_bytes=4):
+    """Static VMEM estimate for one grid step (x-tile + w-tile + bias +
+    out-tile + f32 accumulator).  Used by the Perf notes in DESIGN.md."""
+    return (
+        bm * bk * dtype_bytes  # x tile
+        + bk * bn * dtype_bytes  # w tile
+        + bn * dtype_bytes  # bias tile
+        + bm * bn * dtype_bytes  # out tile
+        + bm * bn * 4  # accumulator (always f32)
+    )

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package has an exact mathematical reference here;
+python/tests/test_kernel.py sweeps shapes and dtypes with hypothesis and
+asserts allclose between kernel and oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, activation="relu"):
+    """y = act(x @ w + b), f32 accumulation, cast back to x.dtype."""
+    y = (
+        jnp.dot(x, w, preferred_element_type=jnp.float32)
+        + b.astype(jnp.float32)
+    )
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation != "none":
+        raise ValueError(activation)
+    return y.astype(x.dtype)
+
+
+def softmax_xent_ref(logits, labels):
+    """(per-row -log softmax(logits)[label], softmax(logits) - onehot)."""
+    logits32 = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits32, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    loss = -jnp.sum(logp * onehot, axis=-1)
+    dlogits = (jnp.exp(logp) - onehot).astype(logits.dtype)
+    return loss, dlogits
+
+
+def mlp_forward_ref(params, x):
+    """Reference forward for the L2 MLP (list of (W, b), relu between)."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        act = "none" if i == len(params) - 1 else "relu"
+        h = dense_ref(h, w, b, activation=act)
+    return h
+
+
+def mlp_loss_ref(params, x, y):
+    """Mean cross-entropy of the reference MLP — differentiable, used to
+    check the hand-written backward in model.py against jax.grad."""
+    logits = mlp_forward_ref(params, x)
+    loss, _ = softmax_xent_ref(logits, y)
+    return jnp.mean(loss)

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: fused softmax + cross-entropy loss (and its gradient).
+
+Computes, per row of logits [B, C] with integer labels [B]:
+
+    p     = softmax(logits)            (numerically-stable, max-subtracted)
+    loss  = -log p[label]              (summed over the batch)
+    dlogits = p - onehot(label)        (the fused backward epilogue)
+
+Both the per-row loss vector and dlogits are produced in one pass so the
+L2 backward never rematerializes the softmax.  The grid tiles the batch
+dimension; each (BB, C) tile stays VMEM-resident.
+
+interpret=True (CPU PJRT cannot run Mosaic custom-calls) — see dense.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BB = 128  # batch tile
+
+
+def _softmax_xent_kernel(logits_ref, labels_ref, loss_ref, dlogits_ref):
+    logits = logits_ref[...].astype(jnp.float32)
+    labels = labels_ref[...]
+    c = logits.shape[-1]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    e = jnp.exp(shifted)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / z
+    logz = jnp.log(z)
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        == labels[:, None]
+    ).astype(jnp.float32)
+    # -log p[label] = logz - shifted[label]
+    loss_ref[...] = (logz[:, 0] - jnp.sum(shifted * onehot, axis=-1)).astype(
+        loss_ref.dtype
+    )
+    dlogits_ref[...] = (p - onehot).astype(dlogits_ref.dtype)
+
+
+def _pick_block(dim, pref):
+    b = min(pref, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@jax.jit
+def softmax_xent(logits, labels):
+    """Fused per-row cross-entropy loss + dlogits.
+
+    logits: [B, C] float, labels: [B] int32 ->
+      (loss [B] f32, dlogits [B, C] logits.dtype)
+    """
+    bsz, c = logits.shape
+    assert labels.shape == (bsz,), labels.shape
+    bb = _pick_block(bsz, BB)
+    return pl.pallas_call(
+        _softmax_xent_kernel,
+        grid=(bsz // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz,), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, c), logits.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(logits, labels)

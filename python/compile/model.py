@@ -1,0 +1,131 @@
+"""L2: the training-job compute graph in JAX, calling the L1 kernels.
+
+MLtuner's contribution is the L3 coordinator; the model here is the
+*training substrate* it drives — an MLP classifier standing in for the
+paper's CNNs (see DESIGN.md "Hardware adaptation & substitutions").
+
+Two entry points are lowered to HLO per (model profile, batch size):
+
+  grad_step(params..., x, y) -> (grads..., loss_sum)
+      forward + explicit hand-written backward.  Gradients are
+      normalized by the batch size *here*, mirroring the paper's setup
+      ("gradients ... are normalized with the training batch size before
+      sending to the parameter server, where the learning rate and
+      momentum are applied").  LR / momentum / adaptive-LR state live in
+      the rust parameter server (`optim/`), so tunables change at
+      runtime without recompilation.
+
+  eval_step(params..., x, y) -> (correct_count, loss_sum)
+      validation-accuracy pass for MLtuner's TESTING branches.
+
+Each entry point is lowered twice: variant="pallas" routes the forward
+through the L1 Pallas kernels (interpret=True → plain HLO), proving the
+three-layer composition; variant="xla" uses pure jnp (XLA-fused fast
+path for the larger end-to-end runs).  Both are verified against
+kernels/ref.py by python/tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense, softmax_xent
+from .kernels.ref import dense_ref, softmax_xent_ref
+
+
+def param_shapes(input_dim, hidden, classes):
+    """Flat parameter layout: [W1, b1, W2, b2, ...] shapes, in order."""
+    dims = [input_dim] + list(hidden) + [classes]
+    shapes = []
+    for i in range(len(dims) - 1):
+        shapes.append((dims[i], dims[i + 1]))
+        shapes.append((dims[i + 1],))
+    return shapes
+
+
+def _unflatten(flat):
+    """[W1, b1, W2, b2, ...] -> [(W1, b1), (W2, b2), ...]."""
+    assert len(flat) % 2 == 0
+    return [(flat[2 * i], flat[2 * i + 1]) for i in range(len(flat) // 2)]
+
+
+def _forward(layers, x, use_pallas):
+    """Returns (logits, activations) with activations[i] = input of layer i."""
+    dense_fn = dense if use_pallas else dense_ref
+    acts = [x]
+    h = x
+    n = len(layers)
+    for i, (w, b) in enumerate(layers):
+        act = "none" if i == n - 1 else "relu"
+        h = dense_fn(h, w, b, activation=act)
+        if i != n - 1:
+            acts.append(h)
+    return h, acts
+
+
+def grad_step(flat_params, x, y, use_pallas):
+    """Explicit forward + backward; returns (flat grads, loss_sum).
+
+    The backward is hand-written (pallas_call has no reverse-mode rule):
+    dlogits comes fused out of the softmax_xent kernel; the matmul
+    transposes are plain dots, which XLA fuses.
+    """
+    layers = _unflatten(flat_params)
+    bsz = x.shape[0]
+    logits, acts = _forward(layers, x, use_pallas)
+    xent = softmax_xent if use_pallas else softmax_xent_ref
+    loss_vec, dlogits = xent(logits, y)
+    loss_sum = jnp.sum(loss_vec)
+
+    # Batch-size normalization (see module docstring).
+    dh = dlogits.astype(jnp.float32) / jnp.float32(bsz)
+    grads = [None] * len(flat_params)
+    for i in reversed(range(len(layers))):
+        w, _b = layers[i]
+        a = acts[i]  # input of layer i
+        grads[2 * i] = jnp.dot(a.T, dh, preferred_element_type=jnp.float32)
+        grads[2 * i + 1] = jnp.sum(dh, axis=0)
+        if i > 0:
+            da = jnp.dot(dh, w.T, preferred_element_type=jnp.float32)
+            # relu mask: acts[i] is the *output* of relu at layer i-1.
+            dh = da * (acts[i] > 0).astype(jnp.float32)
+    return tuple(grads) + (loss_sum,)
+
+
+def eval_step(flat_params, x, y, use_pallas):
+    """Validation pass: (number of correct predictions, loss_sum)."""
+    layers = _unflatten(flat_params)
+    logits, _ = _forward(layers, x, use_pallas)
+    xent = softmax_xent if use_pallas else softmax_xent_ref
+    loss_vec, _ = xent(logits, y)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    correct = jnp.sum((pred == y).astype(jnp.float32))
+    return (correct, jnp.sum(loss_vec))
+
+
+def make_grad_fn(input_dim, hidden, classes, batch_size, use_pallas):
+    """Closure + example args for jax.jit(...).lower(...)."""
+    shapes = param_shapes(input_dim, hidden, classes)
+
+    def fn(*args):
+        flat_params = args[: len(shapes)]
+        x, y = args[len(shapes)], args[len(shapes) + 1]
+        return grad_step(list(flat_params), x, y, use_pallas)
+
+    example = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    example.append(jax.ShapeDtypeStruct((batch_size, input_dim), jnp.float32))
+    example.append(jax.ShapeDtypeStruct((batch_size,), jnp.int32))
+    return fn, example
+
+
+def make_eval_fn(input_dim, hidden, classes, batch_size, use_pallas):
+    shapes = param_shapes(input_dim, hidden, classes)
+
+    def fn(*args):
+        flat_params = args[: len(shapes)]
+        x, y = args[len(shapes)], args[len(shapes) + 1]
+        return eval_step(list(flat_params), x, y, use_pallas)
+
+    example = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    example.append(jax.ShapeDtypeStruct((batch_size, input_dim), jnp.float32))
+    example.append(jax.ShapeDtypeStruct((batch_size,), jnp.int32))
+    return fn, example

@@ -1,0 +1,215 @@
+//! Ablations of MLtuner's design choices (DESIGN.md §5):
+//!
+//! 1. **Noise-penalized convergence speed (§4.1)** vs the naive
+//!    first/last-point slope: how often does each estimator rank the
+//!    truly-better of two settings higher, from a short noisy trial?
+//! 2. **Automatic trial time (Algorithm 1)** vs TuPAQ-style fixed
+//!    trial lengths: chosen-setting quality and tuning cost.
+
+use mltuner::apps::sim::{SimProfile, SimSystem};
+use mltuner::comm::BranchType;
+use mltuner::summarizer::{ProgressPoint, ProgressSummarizer};
+use mltuner::training::TrainingSystem;
+use mltuner::tunable::TunableSetting;
+use mltuner::tuner::{ConvergenceCriterion, MLtuner, TunerConfig};
+use mltuner::util::bench::{table_header, table_row};
+use mltuner::util::rng::Rng;
+
+/// Naive estimator the paper argues against: slope from the first and
+/// last raw points, no downsampling, no noise penalty.
+fn naive_slope(trace: &[ProgressPoint]) -> f64 {
+    if trace.len() < 2 {
+        return 0.0;
+    }
+    let (a, b) = (trace[0], trace[trace.len() - 1]);
+    if b.t > a.t {
+        ((a.x - b.x) / (b.t - a.t)).max(0.0)
+    } else {
+        0.0
+    }
+}
+
+/// Downsampled slope WITHOUT the noise penalty (isolates the penalty's
+/// contribution from the downsampling's).
+fn unpenalized_speed(s: &ProgressSummarizer, trace: &[ProgressPoint]) -> f64 {
+    let ds = s.downsample(trace);
+    if ds.len() < 2 {
+        return 0.0;
+    }
+    let (a, b) = (ds[0], ds[ds.len() - 1]);
+    if b.t > a.t {
+        ((a.x - b.x) / (b.t - a.t)).max(0.0)
+    } else {
+        0.0
+    }
+}
+
+fn trial_trace(
+    sys: &mut SimSystem,
+    branch: u32,
+    parent: u32,
+    setting: &TunableSetting,
+    clocks: u64,
+) -> Vec<ProgressPoint> {
+    sys.fork_branch(0, branch, Some(parent), setting, BranchType::Training)
+        .unwrap();
+    let mut t = 0.0;
+    (0..clocks)
+        .map(|c| {
+            let p = sys.schedule_branch(c, branch).unwrap();
+            t += p.time;
+            ProgressPoint { t, x: p.value }
+        })
+        .collect()
+}
+
+fn ablate_summarizer() {
+    let profile = SimProfile::alexnet_cifar10();
+    let summarizer = ProgressSummarizer::default();
+    let mut rng = Rng::seed_from_u64(42);
+    table_header(
+        "Ablation 1 — pairwise ranking accuracy of speed estimators",
+        &["trial clocks", "paper (penalized)", "downsample only", "naive slope"],
+    );
+    for clocks in [15u64, 30, 60, 120] {
+        let mut wins = [0usize; 3];
+        let trials = 120;
+        for i in 0..trials {
+            let mut sys = SimSystem::new(profile.clone(), 8, 1000 + i);
+            let space = sys.space.clone();
+            // two random non-divergent candidate settings
+            let mut pick = || {
+                let u = vec![
+                    0.2 + 0.5 * rng.gen_f64(), // lr below divergence
+                    rng.gen_f64() * 0.5,
+                    rng.gen_f64(),
+                    0.0,
+                ];
+                space.decode(&u)
+            };
+            let (sa, sb) = (pick(), pick());
+            let ta = trial_trace(&mut sys, 1, 0, &sa, clocks);
+            let tb = trial_trace(&mut sys, 2, 0, &sb, clocks);
+            // ground truth: true-loss drop over the same horizon
+            let la = sys.branch_loss(1).unwrap();
+            let lb = sys.branch_loss(2).unwrap();
+            let a_better = la < lb;
+            let verdicts = [
+                summarizer.summarize(&ta).speed > summarizer.summarize(&tb).speed,
+                unpenalized_speed(&summarizer, &ta) > unpenalized_speed(&summarizer, &tb),
+                naive_slope(&ta) > naive_slope(&tb),
+            ];
+            for (w, v) in wins.iter_mut().zip(verdicts) {
+                if v == a_better {
+                    *w += 1;
+                }
+            }
+        }
+        table_row(&[
+            clocks.to_string(),
+            format!("{:.2}", wins[0] as f64 / trials as f64),
+            format!("{:.2}", wins[1] as f64 / trials as f64),
+            format!("{:.2}", wins[2] as f64 / trials as f64),
+        ]);
+    }
+}
+
+fn ablate_trial_time() {
+    table_header(
+        "Ablation 2 — Algorithm-1 auto trial time vs fixed trial lengths",
+        &["policy", "final_acc", "total_time", "tuning_time"],
+    );
+    let profile = SimProfile::alexnet_cifar10();
+    // paper: automatic doubling
+    let sys = SimSystem::new(profile.clone(), 8, 9);
+    let mut cfg = TunerConfig::new(sys.space.clone());
+    cfg.seed = 9;
+    cfg.max_epochs = 400;
+    cfg.convergence = ConvergenceCriterion::AccuracyPlateau { epochs: 20 };
+    let auto = MLtuner::new(sys, cfg).run().unwrap();
+    table_row(&[
+        "Algorithm 1 (auto)".into(),
+        format!("{:.3}", auto.final_accuracy),
+        format!("{:.0}s", auto.total_time),
+        format!("{:.0}s", auto.tuning_time),
+    ]);
+    // TuPAQ-style: fixed trial length ≈ 10 clocks of the reference
+    // batch size, emulated by capping the trial time very low (the
+    // doubling never engages) — under-measures and picks noisy winners.
+    for fixed_clocks in [10u64, 40] {
+        let mut sys = SimSystem::new(profile.clone(), 8, 9);
+        let space = sys.space.clone();
+        // emulate: try 20 random settings for fixed_clocks each; pick
+        // the best naive slope; train it to convergence.
+        let mut rng = Rng::seed_from_u64(7);
+        let mut best: Option<(TunableSetting, f64)> = None;
+        let mut tuning_time = 0.0;
+        let mut next_branch = 1u32;
+        for _ in 0..20 {
+            let u: Vec<f64> = (0..space.dim()).map(|_| rng.gen_f64()).collect();
+            let setting = space.decode(&u);
+            let b = next_branch;
+            next_branch += 1;
+            let trace = trial_trace(&mut sys, b, 0, &setting, fixed_clocks);
+            tuning_time += trace.last().map(|p| p.t).unwrap_or(0.0);
+            let speed = naive_slope(&trace);
+            sys.free_branch(0, b).unwrap();
+            if best.as_ref().map_or(true, |(_, s)| speed > *s) {
+                best = Some((setting, speed));
+            }
+        }
+        let (setting, _) = best.unwrap();
+        // train the winner
+        let b = next_branch;
+        sys.fork_branch(0, b, Some(0), &setting, BranchType::Training)
+            .unwrap();
+        let mut now = tuning_time;
+        let mut best_acc: f64 = 0.0;
+        let mut since = 0;
+        let mut tb = b + 1;
+        for epoch in 0..400u64 {
+            let clocks = sys.clocks_per_epoch(b).max(1);
+            let mut dead = false;
+            for c in 0..clocks {
+                let p = sys.schedule_branch(epoch * 10_000 + c, b).unwrap();
+                now += p.time;
+                if !p.value.is_finite() {
+                    dead = true;
+                    break;
+                }
+            }
+            sys.fork_branch(0, tb, Some(b), &setting, BranchType::Testing)
+                .unwrap();
+            let acc = sys.schedule_branch(0, tb).unwrap();
+            now += acc.time;
+            sys.free_branch(0, tb).unwrap();
+            tb += 1;
+            if acc.value > best_acc {
+                best_acc = acc.value;
+                since = 0;
+            } else {
+                since += 1;
+            }
+            if dead || since >= 20 {
+                break;
+            }
+        }
+        table_row(&[
+            format!("fixed {fixed_clocks}-clock trials (TuPAQ-style)"),
+            format!("{best_acc:.3}"),
+            format!("{now:.0}s"),
+            format!("{tuning_time:.0}s"),
+        ]);
+    }
+    println!(
+        "\nNo re-tuning in the fixed arms (TuPAQ tunes once) — the accuracy gap\n\
+         shows what Algorithm 1 + re-tuning buy."
+    );
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    ablate_summarizer();
+    ablate_trial_time();
+    println!("\n[bench wall time {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,30 @@
+//! Fig. 11: tuning-cost scalability with the number of tunables —
+//! standard 4-tunable space vs the duplicated 4x2 space.
+
+use mltuner::figures::fig11;
+use mltuner::util::bench::{table_header, table_row};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = fig11(&[1, 2, 3, 4, 5]).unwrap();
+    table_header(
+        "Fig 11 — scalability with more tunables",
+        &["tunables", "final_acc", "total_time", "init_tuning_time", "init_trials"],
+    );
+    for r in &rows {
+        table_row(&[
+            r.tunables.to_string(),
+            format!("{:.3}", r.final_accuracy),
+            format!("{:.0}s", r.total_time),
+            format!("{:.0}s", r.initial_tuning_time),
+            r.trials.to_string(),
+        ]);
+    }
+    if rows.len() == 2 {
+        println!(
+            "\ninitial-tuning-time ratio 8-vs-4 tunables: {:.2}x (paper: ~2x, same accuracy)",
+            rows[1].initial_tuning_time / rows[0].initial_tuning_time.max(1e-9)
+        );
+    }
+    println!("\n[bench wall time {:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,46 @@
+//! Fig. 3: MLtuner vs Spearmint vs Hyperband — runtime and achieved
+//! validation accuracies on the large (Inception-BN/ILSVRC12 profile)
+//! and small (AlexNet/Cifar10 profile) benchmarks.
+
+use mltuner::apps::sim::SimProfile;
+use mltuner::figures::fig3;
+use mltuner::util::bench::{table_header, table_row};
+
+fn run(profile: SimProfile, budget: f64, target_acc: f64) {
+    let title = format!("Fig 3 — {} (budget {:.0}s)", profile.name, budget);
+    table_header(&title, &["arm", "best_acc", "time_to_target", "total_time", "configs"]);
+    let arms = fig3(profile, budget, 1).unwrap();
+    for a in &arms {
+        let t_target = a
+            .curve
+            .iter()
+            .find(|&&(_, acc)| acc >= target_acc)
+            .map(|&(t, _)| format!("{t:.0}s"))
+            .unwrap_or_else(|| "never".into());
+        table_row(&[
+            a.name.into(),
+            format!("{:.3}", a.best_accuracy),
+            t_target,
+            format!("{:.0}s", a.total_time),
+            a.configs_tried.to_string(),
+        ]);
+    }
+    // curves for plotting
+    for a in &arms {
+        println!("# curve {}", a.name);
+        for (i, (t, acc)) in a.curve.iter().enumerate() {
+            if i % (a.curve.len() / 20).max(1) == 0 {
+                println!("{t:.0},{acc:.4}");
+            }
+        }
+    }
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    // large benchmark: budget = 5 simulated days (the paper's cut-off)
+    run(SimProfile::inception_bn(), 432_000.0, 0.60);
+    // small benchmark: generous budget, everyone converges
+    run(SimProfile::alexnet_cifar10(), 100_000.0, 0.70);
+    println!("\n[bench wall time {:.1}s]", t0.elapsed().as_secs_f64());
+}

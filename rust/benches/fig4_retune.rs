@@ -1,0 +1,31 @@
+//! Fig. 4: MLtuner tuning/re-tuning behaviour on the four deep-learning
+//! benchmarks — accuracy trajectory with shaded tuning spans.
+
+use mltuner::figures::fig4;
+use mltuner::util::bench::{table_header, table_row};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let runs = fig4(1).unwrap();
+    for r in &runs {
+        let title = format!(
+            "Fig 4 — {} (final {:.3} in {:.0}s)",
+            r.profile, r.final_accuracy, r.total_time
+        );
+        table_header(&title, &["kind", "start", "end"]);
+        for (s, e, initial) in &r.tuning_spans {
+            table_row(&[
+                if *initial { "initial-tuning" } else { "re-tuning" }.into(),
+                format!("{s:.0}s"),
+                format!("{e:.0}s"),
+            ]);
+        }
+        println!("# accuracy trajectory (time, epoch, acc)");
+        for (i, (t, e, a)) in r.accuracies.iter().enumerate() {
+            if i % (r.accuracies.len() / 25).max(1) == 0 {
+                println!("{t:.0},{e},{a:.4}");
+            }
+        }
+    }
+    println!("\n[bench wall time {:.1}s]", t0.elapsed().as_secs_f64());
+}

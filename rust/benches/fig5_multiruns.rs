@@ -1,0 +1,30 @@
+//! Fig. 5: MLtuner consistency over multiple runs — per-benchmark
+//! (time, accuracy) endpoints and their coefficients of variation.
+
+use mltuner::figures::fig5;
+use mltuner::util::bench::{table_header, table_row};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    // paper: 10 runs for Cifar10, 3 each for the larger benchmarks
+    let rows = fig5(10, 3).unwrap();
+    table_header(
+        "Fig 5 — multi-run consistency",
+        &["profile", "runs", "acc_mean", "acc_cov", "time_cov"],
+    );
+    for r in &rows {
+        let acc_mean =
+            r.finals.iter().map(|f| f.1).sum::<f64>() / r.finals.len() as f64;
+        table_row(&[
+            r.profile.into(),
+            r.finals.len().to_string(),
+            format!("{acc_mean:.3}"),
+            format!("{:.3}", r.acc_cov),
+            format!("{:.3}", r.time_cov),
+        ]);
+        for (t, a) in &r.finals {
+            println!("# run end: {t:.0}s acc {a:.3}");
+        }
+    }
+    println!("\n[bench wall time {:.1}s]", t0.elapsed().as_secs_f64());
+}

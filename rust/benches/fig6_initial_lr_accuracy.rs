@@ -1,0 +1,32 @@
+//! Fig. 6: converged validation accuracy vs initial learning rate for
+//! the six adaptive-LR algorithms, plus MLtuner's automatic pick.
+
+use mltuner::figures::fig6;
+use mltuner::util::bench::{table_header, table_row};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let grid = [1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+    let rows = fig6(&grid, 7).unwrap();
+    let mut cols: Vec<String> = vec!["optimizer".into()];
+    cols.extend(grid.iter().map(|g| format!("{g:.0e}")));
+    cols.push("mltuner_lr".into());
+    cols.push("mltuner_acc".into());
+    let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+    table_header("Fig 6 — converged accuracy vs initial LR", &cols_ref);
+    for r in &rows {
+        let mut cells = vec![r.optimizer.name().to_string()];
+        cells.extend(r.grid.iter().map(|(_, a)| format!("{a:.3}")));
+        cells.push(format!("{:.1e}", r.mltuner_pick.0));
+        cells.push(format!("{:.3}", r.mltuner_pick.1));
+        table_row(&cells);
+        // the paper's headline check: MLtuner within 2% of the optimum
+        let best = r.grid.iter().map(|g| g.1).fold(0.0, f64::max);
+        println!(
+            "# {}: optimum {best:.3}, mltuner gap {:+.3}",
+            r.optimizer.name(),
+            r.mltuner_pick.1 - best
+        );
+    }
+    println!("\n[bench wall time {:.1}s]", t0.elapsed().as_secs_f64());
+}

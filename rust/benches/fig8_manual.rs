@@ -1,0 +1,29 @@
+//! Fig. 8: MLtuner (tuning all four tunables) vs idealized manually
+//! tuned settings from the literature.
+
+use mltuner::figures::fig8;
+use mltuner::util::bench::{table_header, table_row};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = fig8(2).unwrap();
+    table_header(
+        "Fig 8 — MLtuner vs idealized manual settings",
+        &["profile", "manual_acc", "manual_time", "mltuner_acc", "mltuner_time", "slowdown"],
+    );
+    for r in &rows {
+        table_row(&[
+            r.profile.into(),
+            format!("{:.3}", r.manual_acc),
+            format!("{:.0}s", r.manual_time),
+            format!("{:.3}", r.mltuner_acc),
+            format!("{:.0}s", r.mltuner_time),
+            format!("{:.1}x", r.mltuner_time / r.manual_time.max(1e-9)),
+        ]);
+    }
+    println!(
+        "\npaper shape: accuracies match or exceed manual (Inception-BN/GoogLeNet\n\
+         exceed); slowdown ~5x on the small benchmark, smaller on large ones."
+    );
+    println!("\n[bench wall time {:.1}s]", t0.elapsed().as_secs_f64());
+}

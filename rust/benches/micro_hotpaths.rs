@@ -1,0 +1,195 @@
+//! Micro-benchmarks of the L3 hot paths (§Perf): parameter-server
+//! fork/free/update, branch switch (cache clear), progress summarizer,
+//! searcher proposals, and — when artifacts are present — the PJRT
+//! gradient-step dispatch.
+
+use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
+use mltuner::ps::cache::WorkerCache;
+use mltuner::ps::ParamServer;
+use mltuner::runtime::Runtime;
+use mltuner::searcher::{Proposal, SearcherKind};
+use mltuner::summarizer::{ProgressPoint, ProgressSummarizer};
+use mltuner::util::bench::{bench, black_box};
+use mltuner::util::rng::Rng;
+
+fn ps_with_model(rows: usize, row_len: usize) -> ParamServer {
+    let mut ps = ParamServer::new(8, Optimizer::new(OptimizerKind::Sgd));
+    for k in 0..rows {
+        ps.insert_row(0, 0, k as u64, vec![0.5; row_len]);
+    }
+    ps
+}
+
+fn main() {
+    println!("== L3 micro hot paths ==");
+
+    // ps fork/free cycle: ~alexnet_proxy model size (26k params → 7 rows)
+    {
+        let mut ps = ps_with_model(8, 4096);
+        let mut next = 1u32;
+        bench("ps fork+free (8x4096 rows, pooled)", 200.0, 20_000, || {
+            ps.fork_branch(next, 0).unwrap();
+            ps.free_branch(next).unwrap();
+            next += 1;
+        });
+    }
+    // ~inception_proxy size (1.4M params → 343 rows)
+    {
+        let mut ps = ps_with_model(343, 4096);
+        let mut next = 1u32;
+        bench("ps fork+free (343x4096 rows, pooled)", 300.0, 5_000, || {
+            ps.fork_branch(next, 0).unwrap();
+            ps.free_branch(next).unwrap();
+            next += 1;
+        });
+    }
+    // server-side update application
+    {
+        let mut ps = ps_with_model(343, 4096);
+        let grad = vec![0.01f32; 4096];
+        let h = Hyper { lr: 0.01, momentum: 0.9 };
+        let mut k = 0u64;
+        bench("ps apply_update (1 row of 4096)", 200.0, 100_000, || {
+            ps.apply_update(0, 0, k % 343, &grad, h, None).unwrap();
+            k += 1;
+        });
+    }
+    // branch switch = cache clear + refill
+    {
+        let ps = ps_with_model(343, 4096);
+        let mut cache = WorkerCache::new();
+        let mut b = 1u32;
+        bench("cache switch+refill (343 rows)", 300.0, 5_000, || {
+            cache.switch_branch(b);
+            for k in 0..343u64 {
+                if cache.get(0, k, 0, 0).is_none() {
+                    cache.put(0, k, ps.read_row(0, 0, k).unwrap().to_vec(), 0);
+                }
+            }
+            b += 1;
+        });
+    }
+    // summarizer over a long trace
+    {
+        let s = ProgressSummarizer::default();
+        let mut rng = Rng::seed_from_u64(1);
+        let trace: Vec<ProgressPoint> = (0..10_000)
+            .map(|i| ProgressPoint {
+                t: i as f64,
+                x: 10.0 - i as f64 * 1e-3 + rng.gen_normal() * 0.05,
+            })
+            .collect();
+        bench("summarizer (10k-point trace)", 200.0, 50_000, || {
+            black_box(s.summarize(&trace));
+        });
+    }
+    // searcher proposal cost at 40 observations
+    for kind in [SearcherKind::Random, SearcherKind::HyperOpt, SearcherKind::BayesianOpt] {
+        let mut s = kind.build(4, 1);
+        for i in 0..40 {
+            if let Proposal::Point(p) = s.propose() {
+                let speed = 1.0 - (p[0] - 0.4).abs() + i as f64 * 1e-3;
+                s.observe(p, speed);
+            }
+        }
+        bench(
+            &format!("searcher propose ({}, 40 obs)", s.name()),
+            300.0,
+            10_000,
+            || {
+                black_box(s.propose());
+            },
+        );
+    }
+    // PJRT grad-step dispatch (end-to-end L3→runtime hot path)
+    if let Ok(mut rt) = Runtime::load("artifacts") {
+        let mm = rt.model("alexnet_proxy").unwrap().clone();
+        for &bs in &[4usize, 64] {
+            if !mm.batch_sizes("xla").contains(&bs) {
+                continue;
+            }
+            let params: Vec<Vec<f32>> = mm
+                .param_shapes
+                .iter()
+                .map(|s| vec![0.01; s.iter().product()])
+                .collect();
+            let x = vec![0.1f32; bs * mm.input_dim];
+            let y = vec![0i32; bs];
+            // warm the executable cache
+            rt.run_grad("alexnet_proxy", bs, "xla", &params, &x, &y).unwrap();
+            bench(
+                &format!("pjrt grad step (alexnet_proxy bs={bs}, xla)"),
+                500.0,
+                2_000,
+                || {
+                    black_box(
+                        rt.run_grad("alexnet_proxy", bs, "xla", &params, &x, &y)
+                            .unwrap(),
+                    );
+                },
+            );
+        }
+        // pallas variant (the interpret-lowered L1 kernels)
+        if let Some(&bs) = mm.batch_sizes("pallas").first() {
+            let params: Vec<Vec<f32>> = mm
+                .param_shapes
+                .iter()
+                .map(|s| vec![0.01; s.iter().product()])
+                .collect();
+            let x = vec![0.1f32; bs * mm.input_dim];
+            let y = vec![0i32; bs];
+            rt.run_grad("alexnet_proxy", bs, "pallas", &params, &x, &y).unwrap();
+            bench(
+                &format!("pjrt grad step (alexnet_proxy bs={bs}, pallas)"),
+                500.0,
+                2_000,
+                || {
+                    black_box(
+                        rt.run_grad("alexnet_proxy", bs, "pallas", &params, &x, &y)
+                            .unwrap(),
+                    );
+                },
+            );
+        }
+    } else {
+        println!("(artifacts missing — pjrt benches skipped; run `make artifacts`)");
+    }
+
+    // Whole training clock of the real DnnSystem (gather → PJRT grad →
+    // server updates), the end-to-end L3 hot path.
+    if let Ok(rt) = Runtime::load("artifacts") {
+        use mltuner::apps::dnn::{DnnConfig, DnnSystem};
+        use mltuner::comm::BranchType;
+        use mltuner::training::TrainingSystem;
+        use mltuner::tunable::TunableSetting;
+        for (model, bs) in [("alexnet_proxy", 64.0), ("inception_proxy", 16.0)] {
+            let rt = Runtime::load("artifacts").unwrap();
+            let mut sys = DnnSystem::new(
+                DnnConfig {
+                    model: model.into(),
+                    num_workers: 4,
+                    train_examples: 2048,
+                    val_examples: 256,
+                    ..Default::default()
+                },
+                rt,
+                OptimizerKind::Sgd,
+            )
+            .unwrap();
+            let setting = TunableSetting::new(vec![0.01, 0.9, bs, 0.0]);
+            sys.fork_branch(0, 1, None, &setting, BranchType::Training).unwrap();
+            sys.schedule_branch(0, 1).unwrap(); // warm executable cache
+            let mut c = 1u64;
+            bench(
+                &format!("dnn training clock ({model} bs={bs} x4 workers)"),
+                1_000.0,
+                2_000,
+                || {
+                    black_box(sys.schedule_branch(c, 1).unwrap());
+                    c += 1;
+                },
+            );
+        }
+        let _ = rt;
+    }
+}

@@ -1,0 +1,403 @@
+//! DnnSystem: the real three-layer stack as a [`TrainingSystem`].
+//!
+//! Workers (the paper's GPU machines, simulated data-parallel in one
+//! process) pull parameter rows from the branch-versioned parameter
+//! server through their SSP caches, execute the AOT-compiled JAX/Pallas
+//! gradient artifact via PJRT, and push batch-normalized gradients back;
+//! the server applies LR/momentum/adaptive updates (`optim/`).  Branch
+//! fork = parameter-server fork + worker-local state snapshot (data
+//! cursors); branch switch clears the shared worker caches (§4.6).
+//!
+//! Testing branches run the eval artifact over the validation set and
+//! report accuracy, exactly as §4.5 describes.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use crate::util::rng::Rng;
+
+use crate::comm::{BranchId, BranchType, Clock};
+use crate::data::{BatchCursor, ImageDataset};
+use crate::optim::{Hyper, Optimizer, OptimizerKind};
+use crate::ps::cache::WorkerCache;
+use crate::ps::storage::{RowKey, TableId};
+use crate::ps::ParamServer;
+use crate::runtime::Runtime;
+use crate::training::{Progress, TrainingSystem};
+use crate::tunable::{TunableSetting, TunableSpace};
+
+/// Parameter rows are chunks of this many f32s (sharding granularity).
+pub const ROW_LEN: usize = 4096;
+
+#[derive(Debug, Clone)]
+struct DnnBranch {
+    tunable: TunableSetting,
+    branch_type: BranchType,
+    /// Per-worker data cursors — worker-local state, snapshotted with
+    /// the branch so a fork resumes exactly where the parent was.
+    cursors: Vec<BatchCursor>,
+    clocks_run: u64,
+}
+
+/// Configuration of a DNN training job.
+#[derive(Debug, Clone)]
+pub struct DnnConfig {
+    pub model: String,
+    /// Artifact variant: "pallas" (L1 kernels on the forward path) or
+    /// "xla" (pure-jnp fast path).
+    pub variant: String,
+    pub num_workers: usize,
+    pub seed: u64,
+    pub train_examples: usize,
+    pub val_examples: usize,
+    /// Dataset difficulty (cluster noise).
+    pub spread: f64,
+}
+
+impl Default for DnnConfig {
+    fn default() -> Self {
+        DnnConfig {
+            model: "alexnet_proxy".into(),
+            variant: "xla".into(),
+            num_workers: 4,
+            seed: 0,
+            train_examples: 4096,
+            val_examples: 512,
+            spread: 0.6,
+        }
+    }
+}
+
+/// The real-stack training system.
+pub struct DnnSystem {
+    pub cfg: DnnConfig,
+    runtime: Runtime,
+    ps: ParamServer,
+    caches: Vec<WorkerCache>,
+    branches: HashMap<BranchId, DnnBranch>,
+    train: ImageDataset,
+    val: ImageDataset,
+    param_shapes: Vec<Vec<usize>>,
+    space: TunableSpace,
+    /// Branch scheduled last clock (cache-clear detection).
+    last_scheduled: Option<BranchId>,
+    /// Scratch batch index buffer.
+    scratch_idx: Vec<usize>,
+}
+
+impl DnnSystem {
+    pub fn new(cfg: DnnConfig, runtime: Runtime, optimizer: OptimizerKind) -> Result<Self> {
+        let mm = runtime.model(&cfg.model)?.clone();
+        // One generation pass, split into train/val: both sides share
+        // the same class centers (a second seed would re-draw centers
+        // and make validation unlearnable).
+        let (train, val) = ImageDataset::gaussian_clusters(
+            cfg.train_examples + cfg.val_examples,
+            mm.input_dim,
+            mm.classes,
+            cfg.spread,
+            cfg.seed,
+        )
+        .split(cfg.val_examples);
+        let batch_sizes: Vec<f64> = mm
+            .batch_sizes(&cfg.variant)
+            .iter()
+            .map(|&b| b as f64)
+            .collect();
+        if batch_sizes.is_empty() {
+            bail!("no grad artifacts for variant {}", cfg.variant);
+        }
+        let space = TunableSpace::standard(&batch_sizes);
+        let mut ps = ParamServer::new(cfg.num_workers.max(1), Optimizer::new(optimizer));
+        // He-initialized parameters, chunked into rows.
+        let mut rng = Rng::seed_from_u64(cfg.seed.wrapping_add(2));
+                for (t, shape) in mm.param_shapes.iter().enumerate() {
+            let len: usize = shape.iter().product();
+            let scale = if shape.len() == 2 {
+                (2.0 / shape[0] as f64).sqrt()
+            } else {
+                0.0 // biases start at zero
+            };
+            let mut flat = Vec::with_capacity(len);
+            for _ in 0..len {
+                flat.push((rng.gen_normal() * scale) as f32);
+            }
+            for (i, chunk) in flat.chunks(ROW_LEN).enumerate() {
+                ps.insert_row(0, t as TableId, i as RowKey, chunk.to_vec());
+            }
+        }
+        let caches = (0..cfg.num_workers).map(|_| WorkerCache::new()).collect();
+        let cursors = (0..cfg.num_workers)
+            .map(|w| {
+                BatchCursor::new(
+                    train.partition(w, cfg.num_workers),
+                    cfg.seed.wrapping_add(100 + w as u64),
+                )
+            })
+            .collect();
+        let mut branches = HashMap::new();
+        branches.insert(
+            0,
+            DnnBranch {
+                tunable: space.decode(&vec![0.5; space.dim()]),
+                branch_type: BranchType::Training,
+                cursors,
+                clocks_run: 0,
+            },
+        );
+        Ok(DnnSystem {
+            cfg,
+            runtime,
+            ps,
+            caches,
+            branches,
+            train,
+            val,
+            param_shapes: mm.param_shapes,
+            space,
+            last_scheduled: None,
+            scratch_idx: Vec::new(),
+        })
+    }
+
+    pub fn space(&self) -> &TunableSpace {
+        &self.space
+    }
+
+    pub fn param_server(&self) -> &ParamServer {
+        &self.ps
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Assemble the flat parameter tensors for one worker, honoring its
+    /// SSP cache (staleness from the branch's tunable).
+    fn gather_params(
+        &mut self,
+        worker: usize,
+        branch: BranchId,
+        now: Clock,
+        staleness: u32,
+    ) -> Vec<Vec<f32>> {
+        let mut params = Vec::with_capacity(self.param_shapes.len());
+        for (t, shape) in self.param_shapes.iter().enumerate() {
+            let len: usize = shape.iter().product();
+            let mut flat = Vec::with_capacity(len);
+            let nrows = (len + ROW_LEN - 1) / ROW_LEN;
+            for r in 0..nrows {
+                // §Perf: at staleness 0 the cache can never satisfy a
+                // *next*-clock read (every clock refetches), so skip
+                // the cache bookkeeping entirely and copy straight from
+                // the shard — halves the gather's memory traffic.
+                if staleness == 0 {
+                    flat.extend_from_slice(
+                        self.ps
+                            .read_row(branch, t as TableId, r as RowKey)
+                            .expect("row must exist"),
+                    );
+                    continue;
+                }
+                let cache = &mut self.caches[worker];
+                if let Some(row) = cache.get(t as TableId, r as RowKey, now, staleness)
+                {
+                    flat.extend_from_slice(row);
+                    continue;
+                }
+                let row = self
+                    .ps
+                    .read_row(branch, t as TableId, r as RowKey)
+                    .expect("row must exist")
+                    .to_vec();
+                flat.extend_from_slice(&row);
+                self.caches[worker].put(t as TableId, r as RowKey, row, now);
+            }
+            debug_assert_eq!(flat.len(), len);
+            params.push(flat);
+        }
+        params
+    }
+
+    fn batch_of(
+        &mut self,
+        worker: usize,
+        branch: BranchId,
+        bs: usize,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let dim = self.train.dim;
+        let mut idx = std::mem::take(&mut self.scratch_idx);
+        self.branches
+            .get_mut(&branch)
+            .unwrap()
+            .cursors[worker]
+            .next_batch(bs, &mut idx);
+        let mut x = vec![0f32; bs * dim];
+        let mut y = Vec::with_capacity(bs);
+        for (bi, &i) in idx.iter().enumerate() {
+            self.train
+                .fill_example(i, &mut x[bi * dim..(bi + 1) * dim]);
+            y.push(self.train.y[i]);
+        }
+        self.scratch_idx = idx;
+        (x, y)
+    }
+
+    fn run_training_clock(&mut self, clock: Clock, branch: BranchId) -> Result<Progress> {
+        let b = self.branches.get(&branch).unwrap();
+        let tunable = b.tunable.clone();
+        let bs = tunable.batch_size(&self.space);
+        let staleness = tunable.staleness(&self.space);
+        let hyper = Hyper {
+            lr: tunable.lr(&self.space) as f32,
+            momentum: tunable.momentum(&self.space) as f32,
+        };
+        let local_clock = b.clocks_run;
+        let started = Instant::now();
+        let mut loss_sum = 0f64;
+        let model = self.cfg.model.clone();
+        let variant = self.cfg.variant.clone();
+        for w in 0..self.cfg.num_workers {
+            self.caches[w].switch_branch(branch);
+            let params = self.gather_params(w, branch, local_clock, staleness);
+            let (x, y) = self.batch_of(w, branch, bs);
+            let (grads, loss) =
+                self.runtime
+                    .run_grad(&model, bs, &variant, &params, &x, &y)?;
+            loss_sum += loss as f64;
+            // push batch-normalized gradients; server applies the rule.
+            for (t, grad) in grads.iter().enumerate() {
+                for (r, chunk) in grad.chunks(ROW_LEN).enumerate() {
+                    self.ps.apply_update(
+                        branch,
+                        t as TableId,
+                        r as RowKey,
+                        chunk,
+                        hyper,
+                        None,
+                    )?;
+                }
+            }
+        }
+        let b = self.branches.get_mut(&branch).unwrap();
+        b.clocks_run += 1;
+        let _ = clock;
+        Ok(Progress {
+            // per-worker mean loss summed over workers (paper: sum)
+            value: loss_sum / bs as f64,
+            time: started.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn run_testing_clock(&mut self, branch: BranchId) -> Result<Progress> {
+        let started = Instant::now();
+        // Evaluate on worker 0's assembled (fresh) parameters.
+        self.caches[0].switch_branch(branch);
+        let params = self.gather_params(0, branch, 0, 0);
+        let mm = self.runtime.model(&self.cfg.model)?.clone();
+        let eb = mm.eval_batch;
+        let dim = self.val.dim;
+        let mut correct = 0f64;
+        let mut total = 0usize;
+        let model = self.cfg.model.clone();
+        let variant = self.cfg.variant.clone();
+        let mut x = vec![0f32; eb * dim];
+        let mut y = vec![0i32; eb];
+        let full_batches = self.val.len() / eb;
+        for bi in 0..full_batches.max(1) {
+            for j in 0..eb {
+                let i = (bi * eb + j) % self.val.len();
+                self.val.fill_example(i, &mut x[j * dim..(j + 1) * dim]);
+                y[j] = self.val.y[i];
+            }
+            let (c, _l) = self
+                .runtime
+                .run_eval(&model, &variant, &params, &x, &y)?;
+            correct += c as f64;
+            total += eb;
+        }
+        Ok(Progress {
+            value: correct / total.max(1) as f64,
+            time: started.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+impl TrainingSystem for DnnSystem {
+    fn fork_branch(
+        &mut self,
+        _clock: Clock,
+        branch_id: BranchId,
+        parent: Option<BranchId>,
+        tunable: &TunableSetting,
+        branch_type: BranchType,
+    ) -> Result<()> {
+        let parent_id = parent.unwrap_or(0);
+        let parent_branch = match self.branches.get(&parent_id) {
+            None => bail!("parent branch {parent_id} missing"),
+            Some(b) => b.clone(),
+        };
+        self.ps.fork_branch(branch_id, parent_id)?;
+        self.branches.insert(
+            branch_id,
+            DnnBranch {
+                tunable: tunable.clone(),
+                branch_type,
+                cursors: parent_branch.cursors,
+                clocks_run: parent_branch.clocks_run,
+            },
+        );
+        Ok(())
+    }
+
+    fn free_branch(&mut self, _clock: Clock, branch_id: BranchId) -> Result<()> {
+        if branch_id == 0 {
+            bail!("cannot free the root branch");
+        }
+        if self.branches.remove(&branch_id).is_none() {
+            bail!("branch {branch_id} missing");
+        }
+        self.ps.free_branch(branch_id)
+    }
+
+    fn schedule_branch(&mut self, clock: Clock, branch_id: BranchId) -> Result<Progress> {
+        let ty = match self.branches.get(&branch_id) {
+            None => bail!("branch {branch_id} missing"),
+            Some(b) => b.branch_type,
+        };
+        self.last_scheduled = Some(branch_id);
+        match ty {
+            BranchType::Training => self.run_training_clock(clock, branch_id),
+            BranchType::Testing => self.run_testing_clock(branch_id),
+        }
+    }
+
+    fn clocks_per_epoch(&self, branch_id: BranchId) -> u64 {
+        let bs = self
+            .branches
+            .get(&branch_id)
+            .map(|b| b.tunable.batch_size(&self.space))
+            .unwrap_or(32) as u64;
+        let per_clock = bs * self.cfg.num_workers as u64;
+        ((self.train.len() as u64) + per_clock - 1) / per_clock
+    }
+
+    fn update_tunable(
+        &mut self,
+        branch_id: BranchId,
+        tunable: &TunableSetting,
+    ) -> Result<()> {
+        match self.branches.get_mut(&branch_id) {
+            None => bail!("branch {branch_id} missing"),
+            Some(b) => {
+                b.tunable = tunable.clone();
+                Ok(())
+            }
+        }
+    }
+
+    fn system_name(&self) -> &'static str {
+        "dnn"
+    }
+}

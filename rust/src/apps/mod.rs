@@ -1,0 +1,13 @@
+//! Application workloads (§5.1, Table 2).
+//!
+//! * [`sim`] — `SimSystem`: a calibrated analytic convergence model
+//!   standing in for the paper's 8-GPU / 32-node clusters; regenerates
+//!   every figure's *shape* in seconds (DESIGN.md §3 substitutions).
+//! * [`dnn`] — `DnnSystem`: the real three-layer stack (PJRT-executed
+//!   JAX/Pallas artifacts over the parameter-server substrate).
+//! * [`mf`] — `MfSystem`: native matrix-factorization SGD with
+//!   AdaRevision per-parameter learning rates (the paper's CPU app).
+
+pub mod dnn;
+pub mod mf;
+pub mod sim;

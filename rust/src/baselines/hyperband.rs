@@ -1,0 +1,203 @@
+//! Infinite-horizon Hyperband baseline (§5.2, Li et al. 2016).
+//!
+//! The total number of epochs to convergence is unknown, so the
+//! algorithm starts with a small budget and doubles it over time.  For
+//! each budget it runs successive halving: sample `n` random settings,
+//! train each for `r` epochs, keep the half with the higher validation
+//! accuracies, double `r`, repeat until one survives.
+
+use anyhow::Result;
+
+use crate::baselines::BaselineReport;
+use crate::comm::{BranchId, BranchType, TunerMsg};
+use crate::metrics::RunRecorder;
+use crate::searcher::{Proposal, RandomSearcher, Searcher};
+use crate::training::{MessageDriver, TrainingSystem};
+use crate::tunable::{TunableSetting, TunableSpace};
+
+pub struct HyperbandDriver<S: TrainingSystem> {
+    driver: MessageDriver<S>,
+    space: TunableSpace,
+    /// Epochs of the very first rung.
+    pub r0_epochs: u64,
+    pub seed: u64,
+}
+
+struct Arm {
+    branch: BranchId,
+    setting: TunableSetting,
+    acc: f64,
+    dead: bool,
+}
+
+impl<S: TrainingSystem> HyperbandDriver<S> {
+    pub fn new(system: S, space: TunableSpace, seed: u64) -> Self {
+        HyperbandDriver {
+            driver: MessageDriver::new(system),
+            space,
+            r0_epochs: 1,
+            seed,
+        }
+    }
+
+    pub fn run(&mut self, time_budget: f64) -> Result<BaselineReport> {
+        let mut sampler = RandomSearcher::new(self.space.dim(), self.seed);
+        let mut recorder = RunRecorder::new();
+        let mut configs = Vec::new();
+        let mut clock = 0u64;
+        let mut now = 0.0f64;
+        let mut next_branch = 1u32;
+        let mut best_acc = 0.0f64;
+        let mut round = 0u32;
+
+        'outer: while now < time_budget {
+            // Infinite horizon: double the bracket size every round.
+            let n_arms = 2usize.pow((round + 1).min(6)); // 2,4,8,…,64
+            round += 1;
+            let mut arms: Vec<Arm> = Vec::with_capacity(n_arms);
+            for _ in 0..n_arms {
+                let point = match sampler.propose() {
+                    Proposal::Exhausted => break,
+                    Proposal::Point(p) => p,
+                };
+                sampler.observe(point.clone(), 0.0);
+                let setting = self.space.decode(&point);
+                let branch = next_branch;
+                next_branch += 1;
+                self.driver.send(&TunerMsg::ForkBranch {
+                    clock,
+                    branch_id: branch,
+                    parent_branch_id: Some(0),
+                    tunable: setting.clone(),
+                    branch_type: BranchType::Training,
+                })?;
+                arms.push(Arm {
+                    branch,
+                    setting,
+                    acc: 0.0,
+                    dead: false,
+                });
+            }
+            let mut r = self.r0_epochs;
+            // successive halving
+            while arms.iter().filter(|a| !a.dead).count() > 0 {
+                for ai in 0..arms.len() {
+                    if arms[ai].dead {
+                        continue;
+                    }
+                    let branch = arms[ai].branch;
+                    let setting = arms[ai].setting.clone();
+                    let mut diverged = false;
+                    for _ in 0..r {
+                        let clocks =
+                            self.driver.system.clocks_per_epoch(branch).max(1);
+                        for _ in 0..clocks {
+                            let p = self
+                                .driver
+                                .send(&TunerMsg::ScheduleBranch {
+                                    clock,
+                                    branch_id: branch,
+                                })?
+                                .unwrap();
+                            clock += 1;
+                            now += p.time;
+                            recorder.record_loss(now, clock, p.value);
+                            if !p.value.is_finite() {
+                                diverged = true;
+                                break;
+                            }
+                            if now >= time_budget {
+                                break;
+                            }
+                        }
+                        if diverged || now >= time_budget {
+                            break;
+                        }
+                    }
+                    // measure accuracy
+                    let tb = next_branch;
+                    next_branch += 1;
+                    self.driver.send(&TunerMsg::ForkBranch {
+                        clock,
+                        branch_id: tb,
+                        parent_branch_id: Some(branch),
+                        tunable: setting.clone(),
+                        branch_type: BranchType::Testing,
+                    })?;
+                    let acc = self
+                        .driver
+                        .send(&TunerMsg::ScheduleBranch {
+                            clock,
+                            branch_id: tb,
+                        })?
+                        .unwrap();
+                    clock += 1;
+                    now += acc.time;
+                    self.driver.send(&TunerMsg::FreeBranch {
+                        clock,
+                        branch_id: tb,
+                    })?;
+                    let a = if diverged { 0.0 } else { acc.value };
+                    arms[ai].acc = a;
+                    recorder.record_accuracy(now, r, a);
+                    best_acc = best_acc.max(a);
+                    if diverged {
+                        arms[ai].dead = true;
+                        self.driver.send(&TunerMsg::FreeBranch {
+                            clock,
+                            branch_id: branch,
+                        })?;
+                        configs.push((setting, 0.0));
+                    }
+                    if now >= time_budget {
+                        // free all live arms and stop
+                        for arm in &mut arms {
+                            if !arm.dead {
+                                self.driver.send(&TunerMsg::FreeBranch {
+                                    clock,
+                                    branch_id: arm.branch,
+                                })?;
+                                arm.dead = true;
+                                configs.push((arm.setting.clone(), arm.acc));
+                            }
+                        }
+                        break 'outer;
+                    }
+                }
+                // stop the lower-accuracy half
+                let mut live: Vec<usize> = (0..arms.len())
+                    .filter(|&i| !arms[i].dead)
+                    .collect();
+                if live.len() <= 1 {
+                    for &i in &live {
+                        self.driver.send(&TunerMsg::FreeBranch {
+                            clock,
+                            branch_id: arms[i].branch,
+                        })?;
+                        arms[i].dead = true;
+                        configs.push((arms[i].setting.clone(), arms[i].acc));
+                    }
+                    break;
+                }
+                live.sort_by(|&a, &b| {
+                    arms[b].acc.partial_cmp(&arms[a].acc).unwrap()
+                });
+                for &i in &live[live.len() / 2..] {
+                    self.driver.send(&TunerMsg::FreeBranch {
+                        clock,
+                        branch_id: arms[i].branch,
+                    })?;
+                    arms[i].dead = true;
+                    configs.push((arms[i].setting.clone(), arms[i].acc));
+                }
+                r *= 2;
+            }
+        }
+        Ok(BaselineReport {
+            recorder,
+            configs,
+            best_accuracy: best_acc,
+            total_time: now,
+        })
+    }
+}

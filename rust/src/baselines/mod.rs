@@ -1,0 +1,32 @@
+//! State-of-the-art hyperparameter-tuning baselines (§5.2).
+//!
+//! As in the paper, the baselines' tuning logics are implemented inside
+//! our own harness (same training system, same branch machinery) to
+//! control for other performance factors:
+//!
+//! * [`spearmint::SpearmintDriver`] — Bayesian optimization proposing
+//!   settings that are each trained **from initialization to
+//!   completion** (fork from the pristine root branch).
+//! * [`hyperband::HyperbandDriver`] — the Infinite-horizon Hyperband
+//!   algorithm: doubling budgets, random sampling, successive halving
+//!   on validation accuracy.
+
+pub mod hyperband;
+pub mod spearmint;
+
+pub use hyperband::HyperbandDriver;
+pub use spearmint::SpearmintDriver;
+
+use crate::metrics::RunRecorder;
+use crate::tunable::TunableSetting;
+
+/// Result of one baseline tuning run.
+#[derive(Debug, Clone)]
+pub struct BaselineReport {
+    pub recorder: RunRecorder,
+    /// (setting, final validation accuracy) per configuration tried —
+    /// the dashed curves of Fig. 3.
+    pub configs: Vec<(TunableSetting, f64)>,
+    pub best_accuracy: f64,
+    pub total_time: f64,
+}

@@ -1,0 +1,259 @@
+//! MLtuner ↔ training-system message interface (§4.5, Table 1).
+//!
+//! MLtuner identifies each branch with a unique branch ID and uses
+//! `clock` as logical time — unique and totally ordered across all
+//! branches.  Branch operations are sent in clock order, with exactly
+//! one `ScheduleBranch` per clock; the training system reports progress
+//! with one `ReportProgress` per clock.  For distributed systems the
+//! operations are broadcast to all workers in the same order and the
+//! per-worker progress is folded with a user-defined aggregation
+//! (sum, for the SGD loss apps in the paper).
+
+pub mod transport;
+pub mod wire;
+
+use crate::tunable::TunableSetting;
+
+/// Logical time, unique and totally ordered across all branches.
+pub type Clock = u64;
+
+/// Unique branch identifier.
+pub type BranchId = u32;
+
+/// Branch type carried by [`TunerMsg::ForkBranch`]: `Testing` branches
+/// evaluate the model on validation data and report the validation
+/// accuracy as their progress (§4.5 "Evaluating the model").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BranchType {
+    #[default]
+    Training,
+    Testing,
+}
+
+/// Messages sent from MLtuner to the training system (Table 1).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TunerMsg {
+    /// Fork a branch by taking a consistent snapshot at `clock`.
+    ForkBranch {
+        clock: Clock,
+        branch_id: BranchId,
+        /// `None` forks from the pristine initial state (used by the
+        /// train-to-completion baselines).
+        parent_branch_id: Option<BranchId>,
+        tunable: TunableSetting,
+        branch_type: BranchType,
+    },
+    /// Free a branch at `clock`; the system reclaims its resources.
+    FreeBranch { clock: Clock, branch_id: BranchId },
+    /// Schedule `branch_id` to run (one clock of work) at `clock`.
+    ScheduleBranch { clock: Clock, branch_id: BranchId },
+}
+
+impl TunerMsg {
+    pub fn clock(&self) -> Clock {
+        match self {
+            TunerMsg::ForkBranch { clock, .. }
+            | TunerMsg::FreeBranch { clock, .. }
+            | TunerMsg::ScheduleBranch { clock, .. } => *clock,
+        }
+    }
+}
+
+/// Messages sent from the training system to MLtuner (Table 1).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SystemMsg {
+    /// Per-clock training progress (training loss for the SGD apps;
+    /// validation accuracy for Testing branches).  `time` is the
+    /// elapsed time of the clock in seconds (wall or simulated).
+    ReportProgress {
+        clock: Clock,
+        progress: f64,
+        time: f64,
+    },
+}
+
+/// Fold per-worker progress reports into one value (§4.5 "Distributed
+/// training support").  All SGD apps in the paper sum worker losses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProgressAggregation {
+    #[default]
+    Sum,
+    Mean,
+    Max,
+}
+
+impl ProgressAggregation {
+    pub fn fold(&self, parts: &[f64]) -> f64 {
+        if parts.is_empty() {
+            return f64::NAN;
+        }
+        match self {
+            ProgressAggregation::Sum => parts.iter().sum(),
+            ProgressAggregation::Mean => {
+                parts.iter().sum::<f64>() / parts.len() as f64
+            }
+            ProgressAggregation::Max => {
+                parts.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            }
+        }
+    }
+}
+
+/// Clock-order validator: enforces the §4.5 protocol invariants —
+/// branch operations arrive in clock order and exactly one
+/// `ScheduleBranch` is sent for every clock.  Both the in-process
+/// training systems and the tests wrap message streams in this.
+#[derive(Debug, Default)]
+pub struct ProtocolChecker {
+    last_clock: Option<Clock>,
+    schedules_seen: u64,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ProtocolError {
+    #[error("clock {got} not monotonically increasing (last {last})")]
+    OutOfOrder { got: Clock, last: Clock },
+    #[error("clock {clock} scheduled more than once")]
+    DuplicateSchedule { clock: Clock },
+    #[error("clock gap: expected schedule for clock {expected}, got {got}")]
+    MissingSchedule { expected: Clock, got: Clock },
+}
+
+impl ProtocolChecker {
+    pub fn check(&mut self, msg: &TunerMsg) -> Result<(), ProtocolError> {
+        let clock = msg.clock();
+        if let Some(last) = self.last_clock {
+            if clock < last {
+                return Err(ProtocolError::OutOfOrder { got: clock, last });
+            }
+        }
+        if let TunerMsg::ScheduleBranch { .. } = msg {
+            if clock != self.schedules_seen {
+                if clock < self.schedules_seen {
+                    return Err(ProtocolError::DuplicateSchedule { clock });
+                }
+                return Err(ProtocolError::MissingSchedule {
+                    expected: self.schedules_seen,
+                    got: clock,
+                });
+            }
+            self.schedules_seen += 1;
+        }
+        self.last_clock = Some(clock);
+        Ok(())
+    }
+
+    pub fn schedules_seen(&self) -> u64 {
+        self.schedules_seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(clock: Clock) -> TunerMsg {
+        TunerMsg::ScheduleBranch {
+            clock,
+            branch_id: 1,
+        }
+    }
+
+    #[test]
+    fn table1_signatures() {
+        // Table 1: ForkBranch(clock, branchId, parentBranchId, tunable[, type]),
+        // FreeBranch(clock, branchId), ScheduleBranch(clock, branchId),
+        // ReportProgress(clock, progress).
+        let fork = TunerMsg::ForkBranch {
+            clock: 0,
+            branch_id: 1,
+            parent_branch_id: Some(0),
+            tunable: TunableSetting::new(vec![0.01, 0.9, 32.0, 0.0]),
+            branch_type: BranchType::Training,
+        };
+        assert_eq!(fork.clock(), 0);
+        assert_eq!(fork.clone(), fork);
+        let free = TunerMsg::FreeBranch {
+            clock: 3,
+            branch_id: 1,
+        };
+        assert_eq!(free.clock(), 3);
+        let sched = TunerMsg::ScheduleBranch {
+            clock: 4,
+            branch_id: 2,
+        };
+        assert_eq!(sched.clock(), 4);
+        let r = SystemMsg::ReportProgress {
+            clock: 4,
+            progress: 1.25,
+            time: 0.5,
+        };
+        assert_eq!(r.clone(), r);
+        // the optional branch type defaults to Training
+        assert_eq!(BranchType::default(), BranchType::Training);
+    }
+
+    #[test]
+    fn aggregation_folds() {
+        let parts = [1.0, 2.0, 3.0];
+        assert_eq!(ProgressAggregation::Sum.fold(&parts), 6.0);
+        assert_eq!(ProgressAggregation::Mean.fold(&parts), 2.0);
+        assert_eq!(ProgressAggregation::Max.fold(&parts), 3.0);
+        assert!(ProgressAggregation::Sum.fold(&[]).is_nan());
+    }
+
+    #[test]
+    fn checker_accepts_clock_ordered_stream() {
+        let mut c = ProtocolChecker::default();
+        let tun = TunableSetting::new(vec![0.1]);
+        assert!(c
+            .check(&TunerMsg::ForkBranch {
+                clock: 0,
+                branch_id: 1,
+                parent_branch_id: None,
+                tunable: tun.clone(),
+                branch_type: BranchType::Training,
+            })
+            .is_ok());
+        assert!(c.check(&sched(0)).is_ok());
+        assert!(c.check(&sched(1)).is_ok());
+        assert!(c
+            .check(&TunerMsg::FreeBranch {
+                clock: 2,
+                branch_id: 1
+            })
+            .is_ok());
+        assert_eq!(c.schedules_seen(), 2);
+    }
+
+    #[test]
+    fn checker_rejects_out_of_order() {
+        let mut c = ProtocolChecker::default();
+        assert!(c.check(&sched(0)).is_ok());
+        assert!(c.check(&sched(1)).is_ok());
+        assert_eq!(
+            c.check(&TunerMsg::FreeBranch {
+                clock: 0,
+                branch_id: 1
+            }),
+            Err(ProtocolError::OutOfOrder { got: 0, last: 1 })
+        );
+    }
+
+    #[test]
+    fn checker_rejects_schedule_gap_and_duplicate() {
+        let mut c = ProtocolChecker::default();
+        assert!(c.check(&sched(0)).is_ok());
+        assert_eq!(
+            c.check(&sched(2)),
+            Err(ProtocolError::MissingSchedule {
+                expected: 1,
+                got: 2
+            })
+        );
+        assert_eq!(
+            c.check(&sched(0)),
+            Err(ProtocolError::DuplicateSchedule { clock: 0 })
+        );
+    }
+}

@@ -1,0 +1,238 @@
+//! In-process message transport (§4.5 "Distributed training support").
+//!
+//! MLtuner broadcasts every branch operation to all training workers
+//! **in the same order**, and each worker reports its per-clock
+//! progress separately; MLtuner folds the reports with a user-defined
+//! aggregation (sum for the SGD apps).  This module provides that
+//! broker over `std::sync::mpsc` channels with the wire encoding of
+//! [`super::wire`], so the coordinator-side code is identical whether
+//! the workers are threads here or processes on another machine.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::wire::{decode_system_msg, decode_tuner_msg, encode_system_msg, encode_tuner_msg};
+use super::{ProgressAggregation, SystemMsg, TunerMsg};
+
+/// Worker-side endpoint: receives ordered branch-operation lines,
+/// sends progress lines back.
+pub struct WorkerEndpoint {
+    pub worker_id: usize,
+    ops_rx: Receiver<String>,
+    progress_tx: Sender<(usize, String)>,
+}
+
+impl WorkerEndpoint {
+    /// Block for the next branch operation.
+    pub fn recv(&self) -> Result<TunerMsg> {
+        let line = self
+            .ops_rx
+            .recv()
+            .map_err(|_| anyhow!("coordinator hung up"))?;
+        decode_tuner_msg(&line)
+    }
+
+    /// Report this worker's progress for a clock.
+    pub fn report(&self, msg: &SystemMsg) -> Result<()> {
+        self.progress_tx
+            .send((self.worker_id, encode_system_msg(msg)))
+            .map_err(|_| anyhow!("coordinator hung up"))
+    }
+}
+
+/// Coordinator-side broker: broadcast ops, gather + fold progress.
+pub struct Broker {
+    ops_tx: Vec<Sender<String>>,
+    progress_rx: Receiver<(usize, String)>,
+    aggregation: ProgressAggregation,
+}
+
+impl Broker {
+    /// Create a broker and its `n` worker endpoints.
+    pub fn new(n: usize, aggregation: ProgressAggregation) -> (Broker, Vec<WorkerEndpoint>) {
+        assert!(n > 0);
+        let (progress_tx, progress_rx) = channel();
+        let mut ops_tx = Vec::with_capacity(n);
+        let mut endpoints = Vec::with_capacity(n);
+        for worker_id in 0..n {
+            let (tx, rx) = channel();
+            ops_tx.push(tx);
+            endpoints.push(WorkerEndpoint {
+                worker_id,
+                ops_rx: rx,
+                progress_tx: progress_tx.clone(),
+            });
+        }
+        (
+            Broker {
+                ops_tx,
+                progress_rx,
+                aggregation,
+            },
+            endpoints,
+        )
+    }
+
+    /// Broadcast one branch operation to every worker, in order.
+    pub fn broadcast(&self, msg: &TunerMsg) -> Result<()> {
+        let line = encode_tuner_msg(msg);
+        for tx in &self.ops_tx {
+            tx.send(line.clone())
+                .map_err(|_| anyhow!("worker hung up"))?;
+        }
+        Ok(())
+    }
+
+    /// Gather one progress report from every worker for `clock` and
+    /// fold them (§4.5: "aggregate the training progress with a
+    /// user-defined aggregation function").  Returns (value, max time).
+    pub fn gather_progress(&self, clock: u64) -> Result<(f64, f64)> {
+        let n = self.ops_tx.len();
+        let mut values = vec![f64::NAN; n];
+        let mut times = vec![0.0f64; n];
+        let mut got = 0;
+        while got < n {
+            let (worker, line) = self
+                .progress_rx
+                .recv()
+                .map_err(|_| anyhow!("workers hung up"))?;
+            let SystemMsg::ReportProgress {
+                clock: c,
+                progress,
+                time,
+            } = decode_system_msg(&line)?;
+            if c != clock {
+                anyhow::bail!("worker {worker} reported clock {c}, expected {clock}");
+            }
+            if values[worker].is_nan() {
+                got += 1;
+            }
+            values[worker] = progress;
+            times[worker] = time;
+        }
+        // wall time of a data-parallel clock = slowest worker
+        let time = times.iter().cloned().fold(0.0, f64::max);
+        Ok((self.aggregation.fold(&values), time))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::BranchType;
+    use crate::tunable::TunableSetting;
+
+    #[test]
+    fn broadcast_reaches_all_workers_in_order() {
+        let (broker, endpoints) = Broker::new(3, ProgressAggregation::Sum);
+        let msgs = vec![
+            TunerMsg::ForkBranch {
+                clock: 0,
+                branch_id: 1,
+                parent_branch_id: Some(0),
+                tunable: TunableSetting::new(vec![0.1]),
+                branch_type: BranchType::Training,
+            },
+            TunerMsg::ScheduleBranch {
+                clock: 0,
+                branch_id: 1,
+            },
+            TunerMsg::FreeBranch {
+                clock: 1,
+                branch_id: 1,
+            },
+        ];
+        for m in &msgs {
+            broker.broadcast(m).unwrap();
+        }
+        for ep in &endpoints {
+            for expected in &msgs {
+                assert_eq!(&ep.recv().unwrap(), expected);
+            }
+        }
+    }
+
+    #[test]
+    fn progress_gathering_folds_per_worker_reports() {
+        let (broker, endpoints) = Broker::new(4, ProgressAggregation::Sum);
+        // workers report out of order — gather must still line up
+        for (i, ep) in endpoints.iter().enumerate().rev() {
+            ep.report(&SystemMsg::ReportProgress {
+                clock: 5,
+                progress: (i + 1) as f64,
+                time: 0.1 * (i + 1) as f64,
+            })
+            .unwrap();
+        }
+        let (value, time) = broker.gather_progress(5).unwrap();
+        assert_eq!(value, 1.0 + 2.0 + 3.0 + 4.0);
+        assert!((time - 0.4).abs() < 1e-12, "slowest worker's time");
+    }
+
+    #[test]
+    fn clock_mismatch_is_an_error() {
+        let (broker, endpoints) = Broker::new(1, ProgressAggregation::Sum);
+        endpoints[0]
+            .report(&SystemMsg::ReportProgress {
+                clock: 9,
+                progress: 1.0,
+                time: 0.1,
+            })
+            .unwrap();
+        assert!(broker.gather_progress(5).is_err());
+    }
+
+    #[test]
+    fn threaded_worker_loop_end_to_end() {
+        // Full §4.5 deployment shape: worker threads consuming ordered
+        // branch ops and reporting per-clock progress over the wire.
+        let n = 4;
+        let (broker, endpoints) = Broker::new(n, ProgressAggregation::Sum);
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    loop {
+                        match ep.recv() {
+                            Err(_) => break, // coordinator done
+                            Ok(TunerMsg::ScheduleBranch { clock, .. }) => {
+                                ep.report(&SystemMsg::ReportProgress {
+                                    clock,
+                                    progress: 1.0 + ep.worker_id as f64,
+                                    time: 0.01,
+                                })
+                                .unwrap();
+                            }
+                            Ok(_) => {}
+                        }
+                    }
+                })
+            })
+            .collect();
+        broker
+            .broadcast(&TunerMsg::ForkBranch {
+                clock: 0,
+                branch_id: 1,
+                parent_branch_id: Some(0),
+                tunable: TunableSetting::new(vec![0.5]),
+                branch_type: BranchType::Training,
+            })
+            .unwrap();
+        for clock in 0..10u64 {
+            broker
+                .broadcast(&TunerMsg::ScheduleBranch {
+                    clock,
+                    branch_id: 1,
+                })
+                .unwrap();
+            let (value, time) = broker.gather_progress(clock).unwrap();
+            assert_eq!(value, 1.0 + 2.0 + 3.0 + 4.0);
+            assert!(time > 0.0);
+        }
+        drop(broker); // hang up; workers exit
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Wire format for the Table-1 messages (§4.5).
+//!
+//! MLtuner "works as a separate process that communicates with the
+//! training system via messages".  This module gives the messages a
+//! concrete wire encoding (line-delimited JSON, parsed by the in-tree
+//! `util::json`) so the coordinator and a training system can sit on
+//! opposite ends of any byte stream; [`super::transport`] provides the
+//! in-process broker used by the simulated deployments.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tunable::TunableSetting;
+use crate::util::json::Json;
+
+use super::{BranchType, SystemMsg, TunerMsg};
+
+/// Encode one tuner message as a single JSON line.
+pub fn encode_tuner_msg(msg: &TunerMsg) -> String {
+    match msg {
+        TunerMsg::ForkBranch {
+            clock,
+            branch_id,
+            parent_branch_id,
+            tunable,
+            branch_type,
+        } => {
+            let parent = parent_branch_id
+                .map(|p| p.to_string())
+                .unwrap_or_else(|| "null".into());
+            let vals: Vec<String> =
+                tunable.values.iter().map(|v| format!("{v:e}")).collect();
+            format!(
+                "{{\"op\":\"fork\",\"clock\":{clock},\"branch\":{branch_id},\"parent\":{parent},\"tunable\":[{}],\"type\":\"{}\"}}",
+                vals.join(","),
+                match branch_type {
+                    BranchType::Training => "training",
+                    BranchType::Testing => "testing",
+                }
+            )
+        }
+        TunerMsg::FreeBranch { clock, branch_id } => format!(
+            "{{\"op\":\"free\",\"clock\":{clock},\"branch\":{branch_id}}}"
+        ),
+        TunerMsg::ScheduleBranch { clock, branch_id } => format!(
+            "{{\"op\":\"schedule\",\"clock\":{clock},\"branch\":{branch_id}}}"
+        ),
+    }
+}
+
+/// Encode one system message as a single JSON line.
+pub fn encode_system_msg(msg: &SystemMsg) -> String {
+    match msg {
+        SystemMsg::ReportProgress {
+            clock,
+            progress,
+            time,
+        } => format!(
+            "{{\"op\":\"progress\",\"clock\":{clock},\"progress\":{progress:e},\"time\":{time:e}}}"
+        ),
+    }
+}
+
+fn field<'a>(v: &'a Json, k: &str) -> Result<&'a Json> {
+    v.get(k).ok_or_else(|| anyhow!("missing field {k}"))
+}
+
+/// Decode a tuner message from its wire line.
+pub fn decode_tuner_msg(line: &str) -> Result<TunerMsg> {
+    let v = Json::parse(line.trim())?;
+    let op = field(&v, "op")?
+        .as_str()
+        .ok_or_else(|| anyhow!("op not a string"))?;
+    let clock = field(&v, "clock")?
+        .as_f64()
+        .ok_or_else(|| anyhow!("bad clock"))? as u64;
+    match op {
+        "fork" => {
+            let branch_id = field(&v, "branch")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("bad branch"))? as u32;
+            let parent_branch_id = match field(&v, "parent")? {
+                Json::Null => None,
+                p => Some(p.as_f64().ok_or_else(|| anyhow!("bad parent"))? as u32),
+            };
+            let tunable = TunableSetting::new(
+                field(&v, "tunable")?
+                    .as_array()
+                    .ok_or_else(|| anyhow!("bad tunable"))?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad tunable value")))
+                    .collect::<Result<Vec<f64>>>()?,
+            );
+            let branch_type = match field(&v, "type")?.as_str() {
+                Some("training") => BranchType::Training,
+                Some("testing") => BranchType::Testing,
+                other => bail!("bad branch type {other:?}"),
+            };
+            Ok(TunerMsg::ForkBranch {
+                clock,
+                branch_id,
+                parent_branch_id,
+                tunable,
+                branch_type,
+            })
+        }
+        "free" | "schedule" => {
+            let branch_id = field(&v, "branch")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("bad branch"))? as u32;
+            Ok(if op == "free" {
+                TunerMsg::FreeBranch { clock, branch_id }
+            } else {
+                TunerMsg::ScheduleBranch { clock, branch_id }
+            })
+        }
+        other => bail!("unknown op {other}"),
+    }
+}
+
+/// Decode a system message from its wire line.
+pub fn decode_system_msg(line: &str) -> Result<SystemMsg> {
+    let v = Json::parse(line.trim())?;
+    match field(&v, "op")?.as_str() {
+        Some("progress") => Ok(SystemMsg::ReportProgress {
+            clock: field(&v, "clock")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("bad clock"))? as u64,
+            progress: field(&v, "progress")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("bad progress"))?,
+            time: field(&v, "time")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("bad time"))?,
+        }),
+        other => bail!("unknown op {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuner_msgs_roundtrip() {
+        let msgs = vec![
+            TunerMsg::ForkBranch {
+                clock: 7,
+                branch_id: 3,
+                parent_branch_id: Some(1),
+                tunable: TunableSetting::new(vec![1e-3, 0.9, 32.0, 0.0]),
+                branch_type: BranchType::Training,
+            },
+            TunerMsg::ForkBranch {
+                clock: 8,
+                branch_id: 4,
+                parent_branch_id: None,
+                tunable: TunableSetting::new(vec![]),
+                branch_type: BranchType::Testing,
+            },
+            TunerMsg::FreeBranch {
+                clock: 9,
+                branch_id: 3,
+            },
+            TunerMsg::ScheduleBranch {
+                clock: 10,
+                branch_id: 4,
+            },
+        ];
+        for m in msgs {
+            let line = encode_tuner_msg(&m);
+            let back = decode_tuner_msg(&line).unwrap();
+            assert_eq!(m, back, "wire: {line}");
+        }
+    }
+
+    #[test]
+    fn system_msgs_roundtrip() {
+        let m = SystemMsg::ReportProgress {
+            clock: 42,
+            progress: -1.25e-3,
+            time: 0.5,
+        };
+        assert_eq!(decode_system_msg(&encode_system_msg(&m)).unwrap(), m);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode_tuner_msg("not json").is_err());
+        assert!(decode_tuner_msg("{\"op\":\"dance\",\"clock\":0}").is_err());
+        assert!(decode_tuner_msg("{\"op\":\"fork\",\"clock\":0}").is_err());
+        assert!(decode_system_msg("{\"op\":\"progress\"}").is_err());
+    }
+
+    #[test]
+    fn float_precision_survives_the_wire() {
+        let m = TunerMsg::ForkBranch {
+            clock: 0,
+            branch_id: 1,
+            parent_branch_id: Some(0),
+            tunable: TunableSetting::new(vec![
+                1.2345678901234567e-5,
+                0.9999999999999999,
+            ]),
+            branch_type: BranchType::Training,
+        };
+        let back = decode_tuner_msg(&encode_tuner_msg(&m)).unwrap();
+        assert_eq!(m, back);
+    }
+}

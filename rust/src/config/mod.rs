@@ -1,0 +1,363 @@
+//! TOML experiment configuration and system builders — the launcher's
+//! config layer (`mltuner tune --config experiment.toml`).
+//!
+//! Parsed with the in-tree TOML-subset parser (`util::toml`); see the
+//! `configs/` directory for examples.
+
+use anyhow::{bail, Result};
+
+use crate::apps::dnn::{DnnConfig, DnnSystem};
+use crate::apps::mf::{MfConfig, MfSystem};
+use crate::apps::sim::{SimProfile, SimSystem};
+use crate::comm::{BranchId, BranchType, Clock};
+use crate::optim::OptimizerKind;
+use crate::runtime::Runtime;
+use crate::searcher::SearcherKind;
+use crate::training::{Progress, TrainingSystem};
+use crate::tunable::{TunableSetting, TunableSpace};
+use crate::tuner::{ConvergenceCriterion, TunerConfig};
+use crate::util::toml::TomlDoc;
+
+/// Top-level experiment config.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// "sim" | "dnn" | "mf"
+    pub app: String,
+    /// SimApp profile: inception_bn | googlenet | alexnet_cifar10 |
+    /// rnn_ucf101 | mf_netflix
+    pub profile: Option<String>,
+    pub workers: usize,
+    pub seed: u64,
+    pub searcher: String,
+    pub optimizer: String,
+    pub plateau_epochs: u32,
+    pub max_epochs: u64,
+    pub retune: bool,
+    /// Loss-threshold convergence (MF); accuracy plateau otherwise.
+    pub loss_threshold: Option<f64>,
+    pub dnn: DnnSection,
+    pub mf: MfSection,
+}
+
+#[derive(Debug, Clone)]
+pub struct DnnSection {
+    pub model: String,
+    pub variant: String,
+    pub artifacts_dir: String,
+    pub train_examples: usize,
+    pub val_examples: usize,
+    pub spread: f64,
+}
+
+impl Default for DnnSection {
+    fn default() -> Self {
+        DnnSection {
+            model: "alexnet_proxy".into(),
+            variant: "xla".into(),
+            artifacts_dir: "artifacts".into(),
+            train_examples: 4096,
+            val_examples: 512,
+            spread: 0.6,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct MfSection {
+    pub users: Option<usize>,
+    pub items: Option<usize>,
+    pub rank: Option<usize>,
+    pub n_ratings: Option<usize>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            app: "sim".into(),
+            profile: None,
+            workers: 8,
+            seed: 0,
+            searcher: "hyperopt".into(),
+            optimizer: "sgd".into(),
+            plateau_epochs: 5,
+            max_epochs: 200,
+            retune: true,
+            loss_threshold: None,
+            dnn: DnnSection::default(),
+            mf: MfSection::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(v) = doc.get_str("app") {
+            cfg.app = v.to_string();
+        }
+        if let Some(v) = doc.get_str("profile") {
+            cfg.profile = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_i64("workers") {
+            cfg.workers = v as usize;
+        }
+        if let Some(v) = doc.get_i64("seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_str("searcher") {
+            cfg.searcher = v.to_string();
+        }
+        if let Some(v) = doc.get_str("optimizer") {
+            cfg.optimizer = v.to_string();
+        }
+        if let Some(v) = doc.get_i64("plateau_epochs") {
+            cfg.plateau_epochs = v as u32;
+        }
+        if let Some(v) = doc.get_i64("max_epochs") {
+            cfg.max_epochs = v as u64;
+        }
+        if let Some(v) = doc.get_bool("retune") {
+            cfg.retune = v;
+        }
+        if let Some(v) = doc.get_f64("loss_threshold") {
+            cfg.loss_threshold = Some(v);
+        }
+        if let Some(v) = doc.get_str("dnn.model") {
+            cfg.dnn.model = v.to_string();
+        }
+        if let Some(v) = doc.get_str("dnn.variant") {
+            cfg.dnn.variant = v.to_string();
+        }
+        if let Some(v) = doc.get_str("dnn.artifacts_dir") {
+            cfg.dnn.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.get_i64("dnn.train_examples") {
+            cfg.dnn.train_examples = v as usize;
+        }
+        if let Some(v) = doc.get_i64("dnn.val_examples") {
+            cfg.dnn.val_examples = v as usize;
+        }
+        if let Some(v) = doc.get_f64("dnn.spread") {
+            cfg.dnn.spread = v;
+        }
+        if let Some(v) = doc.get_i64("mf.users") {
+            cfg.mf.users = Some(v as usize);
+        }
+        if let Some(v) = doc.get_i64("mf.items") {
+            cfg.mf.items = Some(v as usize);
+        }
+        if let Some(v) = doc.get_i64("mf.rank") {
+            cfg.mf.rank = Some(v as usize);
+        }
+        if let Some(v) = doc.get_i64("mf.n_ratings") {
+            cfg.mf.n_ratings = Some(v as usize);
+        }
+        Ok(cfg)
+    }
+
+    pub fn optimizer_kind(&self) -> Result<OptimizerKind> {
+        OptimizerKind::parse(&self.optimizer)
+            .ok_or_else(|| anyhow::anyhow!("unknown optimizer {}", self.optimizer))
+    }
+
+    pub fn searcher_kind(&self) -> Result<SearcherKind> {
+        SearcherKind::parse(&self.searcher)
+            .ok_or_else(|| anyhow::anyhow!("unknown searcher {}", self.searcher))
+    }
+
+    /// Build the training system described by this config.
+    pub fn build_system(&self) -> Result<(AnySystem, TunableSpace)> {
+        match self.app.as_str() {
+            "sim" => {
+                let name = self.profile.as_deref().unwrap_or("alexnet_cifar10");
+                let profile = SimProfile::by_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
+                let sys = SimSystem::new(profile, self.workers as u32, self.seed)
+                    .with_optimizer(self.optimizer_kind()?);
+                let space = sys.space.clone();
+                Ok((AnySystem::Sim(sys), space))
+            }
+            "dnn" => {
+                let d = &self.dnn;
+                let runtime = Runtime::load(&d.artifacts_dir)?;
+                let sys = DnnSystem::new(
+                    DnnConfig {
+                        model: d.model.clone(),
+                        variant: d.variant.clone(),
+                        num_workers: self.workers,
+                        seed: self.seed,
+                        train_examples: d.train_examples,
+                        val_examples: d.val_examples,
+                        spread: d.spread,
+                    },
+                    runtime,
+                    self.optimizer_kind()?,
+                )?;
+                let space = sys.space().clone();
+                Ok((AnySystem::Dnn(Box::new(sys)), space))
+            }
+            "mf" => {
+                let m = &self.mf;
+                let mut cfg = MfConfig {
+                    num_workers: self.workers,
+                    seed: self.seed,
+                    optimizer: self.optimizer_kind()?,
+                    ..Default::default()
+                };
+                if let Some(u) = m.users {
+                    cfg.users = u;
+                }
+                if let Some(i) = m.items {
+                    cfg.items = i;
+                }
+                if let Some(r) = m.rank {
+                    cfg.rank = r;
+                }
+                if let Some(n) = m.n_ratings {
+                    cfg.n_ratings = n;
+                }
+                let sys = MfSystem::new(cfg);
+                let space = sys.space().clone();
+                Ok((AnySystem::Mf(Box::new(sys)), space))
+            }
+            other => bail!("unknown app {other}"),
+        }
+    }
+
+    /// Build the tuner config for `space`.
+    pub fn tuner_config(&self, space: TunableSpace) -> Result<TunerConfig> {
+        let mut cfg = TunerConfig::new(space);
+        cfg.searcher = self.searcher_kind()?;
+        cfg.seed = self.seed;
+        cfg.max_epochs = self.max_epochs;
+        cfg.retune = self.retune;
+        cfg.convergence = match self.loss_threshold {
+            Some(value) => ConvergenceCriterion::LossThreshold { value },
+            None => ConvergenceCriterion::AccuracyPlateau {
+                epochs: self.plateau_epochs,
+            },
+        };
+        Ok(cfg)
+    }
+}
+
+/// Enum dispatch over the three training systems (keeps `MLtuner<S>`
+/// monomorphic without trait objects in the hot path).
+pub enum AnySystem {
+    Sim(SimSystem),
+    Dnn(Box<DnnSystem>),
+    Mf(Box<MfSystem>),
+}
+
+impl TrainingSystem for AnySystem {
+    fn fork_branch(
+        &mut self,
+        clock: Clock,
+        branch_id: BranchId,
+        parent: Option<BranchId>,
+        tunable: &TunableSetting,
+        branch_type: BranchType,
+    ) -> Result<()> {
+        match self {
+            AnySystem::Sim(s) => s.fork_branch(clock, branch_id, parent, tunable, branch_type),
+            AnySystem::Dnn(s) => s.fork_branch(clock, branch_id, parent, tunable, branch_type),
+            AnySystem::Mf(s) => s.fork_branch(clock, branch_id, parent, tunable, branch_type),
+        }
+    }
+
+    fn free_branch(&mut self, clock: Clock, branch_id: BranchId) -> Result<()> {
+        match self {
+            AnySystem::Sim(s) => s.free_branch(clock, branch_id),
+            AnySystem::Dnn(s) => s.free_branch(clock, branch_id),
+            AnySystem::Mf(s) => s.free_branch(clock, branch_id),
+        }
+    }
+
+    fn schedule_branch(&mut self, clock: Clock, branch_id: BranchId) -> Result<Progress> {
+        match self {
+            AnySystem::Sim(s) => s.schedule_branch(clock, branch_id),
+            AnySystem::Dnn(s) => s.schedule_branch(clock, branch_id),
+            AnySystem::Mf(s) => s.schedule_branch(clock, branch_id),
+        }
+    }
+
+    fn clocks_per_epoch(&self, branch_id: BranchId) -> u64 {
+        match self {
+            AnySystem::Sim(s) => s.clocks_per_epoch(branch_id),
+            AnySystem::Dnn(s) => s.clocks_per_epoch(branch_id),
+            AnySystem::Mf(s) => s.clocks_per_epoch(branch_id),
+        }
+    }
+
+    fn update_tunable(&mut self, branch_id: BranchId, tunable: &TunableSetting) -> Result<()> {
+        match self {
+            AnySystem::Sim(s) => s.update_tunable(branch_id, tunable),
+            AnySystem::Dnn(s) => s.update_tunable(branch_id, tunable),
+            AnySystem::Mf(s) => s.update_tunable(branch_id, tunable),
+        }
+    }
+
+    fn system_name(&self) -> &'static str {
+        match self {
+            AnySystem::Sim(s) => s.system_name(),
+            AnySystem::Dnn(s) => s.system_name(),
+            AnySystem::Mf(s) => s.system_name(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_roundtrip_minimal() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            app = "sim"
+            profile = "alexnet_cifar10"
+            seed = 7
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.app, "sim");
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.searcher, "hyperopt");
+        assert!(cfg.retune);
+        let (sys, space) = cfg.build_system().unwrap();
+        assert_eq!(sys.system_name(), "sim");
+        assert_eq!(space.dim(), 4);
+    }
+
+    #[test]
+    fn toml_mf_section() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            app = "mf"
+            optimizer = "adarevision"
+            loss_threshold = 100.0
+            [mf]
+            users = 50
+            items = 40
+            rank = 4
+            n_ratings = 500
+        "#,
+        )
+        .unwrap();
+        let (sys, space) = cfg.build_system().unwrap();
+        assert_eq!(sys.system_name(), "mf");
+        assert_eq!(space.dim(), 1);
+        let tc = cfg.tuner_config(space).unwrap();
+        assert_eq!(
+            tc.convergence,
+            ConvergenceCriterion::LossThreshold { value: 100.0 }
+        );
+    }
+
+    #[test]
+    fn bad_app_rejected() {
+        let cfg = ExperimentConfig::from_toml(r#"app = "nope""#).unwrap();
+        assert!(cfg.build_system().is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! Synthetic dataset generators (DESIGN.md §3 substitutions).
+//!
+//! * [`ImageDataset`] — Gaussian-cluster "images" standing in for
+//!   Cifar10 / ILSVRC12: `classes` cluster centers in `dim` dimensions;
+//!   examples are center + noise.  Separable enough that a correctly
+//!   tuned classifier climbs steadily, hard enough that tuning matters.
+//! * [`RatingsDataset`] — low-rank synthetic ratings standing in for
+//!   Netflix: `X ≈ L·R + noise`, sampled sparsely.
+//!
+//! Everything is deterministic per seed (Fig. 9 varies seeds on
+//! purpose; everything else must be reproducible).
+
+use crate::util::rng::Rng;
+
+/// Labeled feature vectors (the classifier workload).
+#[derive(Debug, Clone)]
+pub struct ImageDataset {
+    pub dim: usize,
+    pub classes: usize,
+    /// row-major [n, dim]
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+}
+
+impl ImageDataset {
+    /// `spread` controls difficulty: noise σ relative to unit-norm
+    /// cluster centers (≈1.0 is hard, ≈0.3 is easy).
+    pub fn gaussian_clusters(
+        n: usize,
+        dim: usize,
+        classes: usize,
+        spread: f64,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+                // unit-norm class centers
+        let mut centers = vec![0f32; classes * dim];
+        for c in 0..classes {
+            let mut norm = 0.0f64;
+            for d in 0..dim {
+                let v: f64 = rng.gen_normal();
+                centers[c * dim + d] = v as f32;
+                norm += v * v;
+            }
+            let inv = 1.0 / norm.sqrt().max(1e-9);
+            for d in 0..dim {
+                centers[c * dim + d] *= inv as f32;
+            }
+        }
+        let mut x = Vec::with_capacity(n * dim);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.gen_range(0, classes);
+            y.push(c as i32);
+            for d in 0..dim {
+                let noise: f64 = rng.gen_normal();
+                x.push(centers[c * dim + d] + (noise * spread) as f32);
+            }
+        }
+        ImageDataset {
+            dim,
+            classes,
+            x,
+            y,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Copy example `i`'s features into `out`.
+    pub fn fill_example(&self, i: usize, out: &mut [f32]) {
+        out.copy_from_slice(&self.x[i * self.dim..(i + 1) * self.dim]);
+    }
+
+    /// Split into (train, validation) — same cluster centers, disjoint
+    /// examples (a fresh dataset per seed would have *different*
+    /// centers and be unlearnable).
+    pub fn split(mut self, val: usize) -> (ImageDataset, ImageDataset) {
+        assert!(val < self.len());
+        let n_train = self.len() - val;
+        let vx = self.x.split_off(n_train * self.dim);
+        let vy = self.y.split_off(n_train);
+        let val_ds = ImageDataset {
+            dim: self.dim,
+            classes: self.classes,
+            x: vx,
+            y: vy,
+        };
+        (self, val_ds)
+    }
+
+    /// The contiguous index range of worker `w` out of `num_workers`
+    /// (data-parallel partitioning).
+    pub fn partition(&self, w: usize, num_workers: usize) -> std::ops::Range<usize> {
+        let n = self.len();
+        let lo = w * n / num_workers;
+        let hi = (w + 1) * n / num_workers;
+        lo..hi
+    }
+}
+
+/// Epoch-shuffled mini-batch cursor over one worker's partition.
+#[derive(Debug, Clone)]
+pub struct BatchCursor {
+    indices: Vec<usize>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl BatchCursor {
+    pub fn new(range: std::ops::Range<usize>, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut indices: Vec<usize> = range.collect();
+        rng.shuffle(&mut indices);
+        BatchCursor {
+            indices,
+            pos: 0,
+            rng,
+        }
+    }
+
+    /// Next `bs` example indices, reshuffling at epoch boundaries
+    /// ("shuffle the training data every epoch", §5.1).
+    pub fn next_batch(&mut self, bs: usize, out: &mut Vec<usize>) {
+        out.clear();
+        for _ in 0..bs {
+            if self.pos >= self.indices.len() {
+                self.rng.shuffle(&mut self.indices);
+                self.pos = 0;
+            }
+            out.push(self.indices[self.pos]);
+            self.pos += 1;
+        }
+    }
+}
+
+/// Sparse ratings: (user, item, rating) triples from a low-rank model.
+#[derive(Debug, Clone)]
+pub struct RatingsDataset {
+    pub users: usize,
+    pub items: usize,
+    pub ratings: Vec<(u32, u32, f32)>,
+}
+
+impl RatingsDataset {
+    pub fn low_rank(
+        users: usize,
+        items: usize,
+        rank_true: usize,
+        n_ratings: usize,
+        noise: f64,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+                let scale = (1.0 / rank_true as f64).sqrt();
+        let mut l = vec![0f32; users * rank_true];
+        let mut r = vec![0f32; items * rank_true];
+        for v in l.iter_mut().chain(r.iter_mut()) {
+            *v = (rng.gen_normal() * scale) as f32;
+        }
+        let mut ratings = Vec::with_capacity(n_ratings);
+        for _ in 0..n_ratings {
+            let u = rng.gen_range(0, users) as u32;
+            let i = rng.gen_range(0, items) as u32;
+            let mut dot = 0f32;
+            for k in 0..rank_true {
+                dot += l[u as usize * rank_true + k] * r[i as usize * rank_true + k];
+            }
+            let e: f64 = rng.gen_normal();
+            ratings.push((u, i, dot + (e * noise) as f32));
+        }
+        RatingsDataset {
+            users,
+            items,
+            ratings,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ratings.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ratings.is_empty()
+    }
+
+    pub fn partition(&self, w: usize, num_workers: usize) -> &[(u32, u32, f32)] {
+        let n = self.len();
+        let lo = w * n / num_workers;
+        let hi = (w + 1) * n / num_workers;
+        &self.ratings[lo..hi]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clusters_deterministic_and_labeled() {
+        let a = ImageDataset::gaussian_clusters(100, 8, 4, 0.3, 42);
+        let b = ImageDataset::gaussian_clusters(100, 8, 4, 0.3, 42);
+        let c = ImageDataset::gaussian_clusters(100, 8, 4, 0.3, 43);
+        assert_eq!(a.x, b.x);
+        assert_ne!(a.x, c.x);
+        assert!(a.y.iter().all(|&l| (0..4).contains(&l)));
+        assert_eq!(a.x.len(), 100 * 8);
+    }
+
+    #[test]
+    fn clusters_are_separable() {
+        // nearest-center classification should beat chance easily
+        let ds = ImageDataset::gaussian_clusters(400, 16, 4, 0.2, 7);
+        // recompute centers from the labeled data
+        let mut centers = vec![0f64; 4 * 16];
+        let mut counts = [0usize; 4];
+        for i in 0..ds.len() {
+            let c = ds.y[i] as usize;
+            counts[c] += 1;
+            for d in 0..16 {
+                centers[c * 16 + d] += ds.x[i * 16 + d] as f64;
+            }
+        }
+        for c in 0..4 {
+            for d in 0..16 {
+                centers[c * 16 + d] /= counts[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let mut best = (f64::INFINITY, 0);
+            for c in 0..4 {
+                let mut d2 = 0.0;
+                for d in 0..16 {
+                    let diff = ds.x[i * 16 + d] as f64 - centers[c * 16 + d];
+                    d2 += diff * diff;
+                }
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            if best.1 == ds.y[i] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 300, "only {correct}/400 correct");
+    }
+
+    #[test]
+    fn partitions_cover_and_disjoint() {
+        let ds = ImageDataset::gaussian_clusters(103, 4, 2, 0.5, 1);
+        let mut seen = vec![false; ds.len()];
+        for w in 0..8 {
+            for i in ds.partition(w, 8) {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn cursor_visits_all_before_repeat() {
+        let mut cur = BatchCursor::new(0..10, 3);
+        let mut out = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        cur.next_batch(10, &mut out);
+        for &i in &out {
+            seen.insert(i);
+        }
+        assert_eq!(seen.len(), 10, "one epoch visits every example");
+    }
+
+    #[test]
+    fn ratings_low_rank_recoverable() {
+        let ds = RatingsDataset::low_rank(50, 40, 4, 2000, 0.01, 9);
+        assert_eq!(ds.len(), 2000);
+        // ratings are bounded-ish (low-rank dot products)
+        let max = ds.ratings.iter().map(|r| r.2.abs()).fold(0f32, f32::max);
+        assert!(max < 10.0);
+        let p = ds.partition(3, 8);
+        assert_eq!(p.len(), 250);
+    }
+}

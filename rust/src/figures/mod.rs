@@ -1,0 +1,647 @@
+//! Figure/table regeneration experiments (§5, DESIGN.md experiment
+//! index).  Each function reproduces one figure's experiment on the
+//! simulated benchmarks (or the native MF app) and returns the series
+//! the paper plots; the `rust/benches/fig*.rs` binaries print them as
+//! tables (`cargo bench --bench fig3_sota`, …).
+//!
+//! Absolute numbers are testbed-dependent; the *shapes* (who wins, by
+//! roughly what factor, where crossovers fall) are the reproduction
+//! target — see EXPERIMENTS.md for paper-vs-measured.
+
+use anyhow::Result;
+
+use crate::apps::mf::{MfConfig, MfSystem};
+use crate::apps::sim::{optimizer_gain, SimProfile, SimSystem};
+use crate::baselines::{BaselineReport, HyperbandDriver, SpearmintDriver};
+use crate::comm::BranchType;
+use crate::metrics::coefficient_of_variation;
+use crate::optim::OptimizerKind;
+use crate::training::TrainingSystem;
+use crate::tunable::{TunableSpace, TunableSpec};
+use crate::tuner::{ConvergenceCriterion, MLtuner, TunerConfig, TunerReport};
+
+/// Convenience: full MLtuner run on a simulated profile.
+pub fn mltuner_run(
+    profile: SimProfile,
+    seed: u64,
+    plateau_epochs: u32,
+    max_epochs: u64,
+) -> Result<TunerReport> {
+    let sys = SimSystem::new(profile, 8, seed);
+    let mut cfg = TunerConfig::new(sys.space.clone());
+    cfg.seed = seed;
+    cfg.max_epochs = max_epochs;
+    cfg.convergence = ConvergenceCriterion::AccuracyPlateau {
+        epochs: plateau_epochs,
+    };
+    let mut tuner = MLtuner::new(sys, cfg);
+    tuner.run()
+}
+
+/// Fixed-setting run (no tuner search; optional LR decay schedule) —
+/// the "manually tuned" arms of Figs. 6/8/9.
+pub struct ManualSchedule {
+    pub lr0: f64,
+    pub momentum: f64,
+    pub batch_size: f64,
+    pub staleness: f64,
+    /// multiply LR by `decay_factor` every `decay_every` epochs (1.0 =
+    /// no decay).
+    pub decay_factor: f64,
+    pub decay_every: u64,
+}
+
+pub struct ManualResult {
+    pub final_accuracy: f64,
+    pub total_time: f64,
+    pub epochs: u64,
+}
+
+pub fn manual_run(
+    profile: SimProfile,
+    sched: &ManualSchedule,
+    optimizer: OptimizerKind,
+    seed: u64,
+    plateau_epochs: u32,
+    max_epochs: u64,
+) -> Result<ManualResult> {
+    let mut sys = SimSystem::new(profile, 8, seed).with_optimizer(optimizer);
+    let space = sys.space.clone();
+    let mk = |lr: f64| {
+        space.decode(&[
+            space.specs[0].encode(lr),
+            space.specs[1].encode(sched.momentum),
+            space.specs[2].encode(sched.batch_size),
+            space.specs[3].encode(sched.staleness),
+        ])
+    };
+    let mut lr = sched.lr0;
+    sys.fork_branch(0, 1, None, &mk(lr), BranchType::Training)?;
+    let mut now = 0.0;
+    let mut clock = 0u64;
+    let mut best_acc = f64::NEG_INFINITY;
+    let mut since_improve = 0u32;
+    let mut epoch = 0u64;
+    let mut next_branch = 2u32;
+    while epoch < max_epochs {
+        let clocks = sys.clocks_per_epoch(1).max(1);
+        let mut diverged = false;
+        for _ in 0..clocks {
+            let p = sys.schedule_branch(clock, 1)?;
+            clock += 1;
+            now += p.time;
+            if !p.value.is_finite() {
+                diverged = true;
+                break;
+            }
+        }
+        epoch += 1;
+        // validation via a testing fork
+        let tb = next_branch;
+        next_branch += 1;
+        sys.fork_branch(clock, tb, Some(1), &mk(lr), BranchType::Testing)?;
+        let acc = sys.schedule_branch(clock, tb)?;
+        clock += 1;
+        now += acc.time;
+        sys.free_branch(clock, tb)?;
+        if acc.value > best_acc + 1e-9 {
+            best_acc = acc.value;
+            since_improve = 0;
+        } else {
+            since_improve += 1;
+        }
+        if diverged || since_improve >= plateau_epochs {
+            break;
+        }
+        if sched.decay_factor != 1.0 && epoch % sched.decay_every.max(1) == 0 {
+            lr *= sched.decay_factor;
+            sys.update_tunable(1, &mk(lr))?;
+        }
+    }
+    Ok(ManualResult {
+        final_accuracy: best_acc.max(0.0),
+        total_time: now,
+        epochs: epoch,
+    })
+}
+
+// ----- Fig. 3: MLtuner vs Spearmint vs Hyperband -----
+
+pub struct Fig3Arm {
+    pub name: &'static str,
+    /// best-so-far validation accuracy over time
+    pub curve: Vec<(f64, f64)>,
+    pub best_accuracy: f64,
+    pub total_time: f64,
+    pub configs_tried: usize,
+}
+
+pub fn fig3(profile: SimProfile, budget: f64, seed: u64) -> Result<Vec<Fig3Arm>> {
+    let plateau = if profile.name == "alexnet_cifar10" { 20 } else { 5 };
+    let mut arms = Vec::new();
+
+    let report = mltuner_run(profile.clone(), seed, plateau, 3000)?;
+    arms.push(Fig3Arm {
+        name: "MLtuner",
+        curve: report.recorder.best_accuracy_curve(),
+        best_accuracy: report.final_accuracy,
+        total_time: report.total_time,
+        configs_tried: report.tunings.iter().map(|t| t.trials).sum(),
+    });
+
+    let push_baseline = |arms: &mut Vec<Fig3Arm>, name, r: BaselineReport| {
+        arms.push(Fig3Arm {
+            name,
+            curve: r.recorder.best_accuracy_curve(),
+            best_accuracy: r.best_accuracy,
+            total_time: r.total_time,
+            configs_tried: r.configs.len(),
+        });
+    };
+    let sys = SimSystem::new(profile.clone(), 8, seed);
+    let space = sys.space.clone();
+    let r = SpearmintDriver::new(sys, space, seed).run(budget)?;
+    push_baseline(&mut arms, "Spearmint", r);
+
+    let sys = SimSystem::new(profile, 8, seed);
+    let space = sys.space.clone();
+    let r = HyperbandDriver::new(sys, space, seed).run(budget)?;
+    push_baseline(&mut arms, "Hyperband", r);
+    Ok(arms)
+}
+
+// ----- Fig. 4/5: tuning behaviour + multi-run consistency -----
+
+pub struct Fig4Run {
+    pub profile: &'static str,
+    pub accuracies: Vec<(f64, u64, f64)>,
+    pub tuning_spans: Vec<(f64, f64, bool)>,
+    pub final_accuracy: f64,
+    pub total_time: f64,
+}
+
+pub fn fig4(seed: u64) -> Result<Vec<Fig4Run>> {
+    SimProfile::dl_profiles()
+        .into_iter()
+        .map(|p| {
+            let plateau = if p.name == "alexnet_cifar10" { 20 } else { 5 };
+            let name = p.name;
+            let report = mltuner_run(p, seed, plateau, 3000)?;
+            Ok(Fig4Run {
+                profile: name,
+                accuracies: report.recorder.accuracies.clone(),
+                tuning_spans: report
+                    .tunings
+                    .iter()
+                    .map(|t| (t.started, t.ended, t.initial))
+                    .collect(),
+                final_accuracy: report.final_accuracy,
+                total_time: report.total_time,
+            })
+        })
+        .collect()
+}
+
+pub struct Fig5Row {
+    pub profile: &'static str,
+    pub finals: Vec<(f64, f64)>, // (time, accuracy) per run
+    pub time_cov: f64,
+    pub acc_cov: f64,
+}
+
+pub fn fig5(runs_small: usize, runs_large: usize) -> Result<Vec<Fig5Row>> {
+    let mut out = Vec::new();
+    for p in SimProfile::dl_profiles() {
+        let (plateau, runs) = if p.name == "alexnet_cifar10" {
+            (20, runs_small)
+        } else {
+            (5, runs_large)
+        };
+        let name = p.name;
+        let mut finals = Vec::new();
+        for seed in 0..runs as u64 {
+            let r = mltuner_run(p.clone(), seed * 31 + 1, plateau, 3000)?;
+            finals.push((r.total_time, r.final_accuracy));
+        }
+        let times: Vec<f64> = finals.iter().map(|f| f.0).collect();
+        let accs: Vec<f64> = finals.iter().map(|f| f.1).collect();
+        out.push(Fig5Row {
+            profile: name,
+            time_cov: coefficient_of_variation(&times),
+            acc_cov: coefficient_of_variation(&accs),
+            finals,
+        });
+    }
+    Ok(out)
+}
+
+// ----- Fig. 6: converged accuracy vs initial LR per adaptive rule -----
+
+pub struct Fig6Row {
+    pub optimizer: OptimizerKind,
+    pub grid: Vec<(f64, f64)>, // (lr, converged accuracy)
+    pub mltuner_pick: (f64, f64),
+}
+
+fn lr_only_space() -> TunableSpace {
+    TunableSpace::new(vec![TunableSpec::Log {
+        name: "lr".into(),
+        min: 1e-5,
+        max: 1.0,
+    }])
+}
+
+pub fn fig6(grid: &[f64], seed: u64) -> Result<Vec<Fig6Row>> {
+    let profile = SimProfile::alexnet_cifar10();
+    let mut rows = Vec::new();
+    for kind in OptimizerKind::ADAPTIVE {
+        let mut grid_results = Vec::new();
+        for &lr in grid {
+            let space = lr_only_space();
+            let sys =
+                SimSystem::with_space(profile.clone(), space.clone(), 8, seed)
+                    .with_optimizer(kind);
+            let mut cfg = TunerConfig::new(space.clone());
+            cfg.initial_setting = Some(space.decode(&[space.specs[0].encode(lr)]));
+            cfg.retune = false;
+            cfg.convergence = ConvergenceCriterion::AccuracyPlateau { epochs: 10 };
+            cfg.max_epochs = 250;
+            cfg.seed = seed;
+            let r = MLtuner::new(sys, cfg).run()?;
+            grid_results.push((lr, r.final_accuracy));
+        }
+        // MLtuner tunes only the initial LR (no re-tuning) — §5.3
+        let space = lr_only_space();
+        let sys = SimSystem::with_space(profile.clone(), space.clone(), 8, seed)
+            .with_optimizer(kind);
+        let mut cfg = TunerConfig::new(space.clone());
+        cfg.retune = false;
+        cfg.convergence = ConvergenceCriterion::AccuracyPlateau { epochs: 10 };
+        cfg.max_epochs = 250;
+        cfg.seed = seed;
+        let r = MLtuner::new(sys, cfg).run()?;
+        rows.push(Fig6Row {
+            optimizer: kind,
+            grid: grid_results,
+            mltuner_pick: (r.final_setting.lr(&space), r.final_accuracy),
+        });
+    }
+    Ok(rows)
+}
+
+// ----- Fig. 7: MF convergence time vs initial AdaRevision LR -----
+
+pub struct Fig7Result {
+    pub grid: Vec<(f64, Option<u64>)>, // (lr, passes to threshold)
+    pub mltuner_passes: u64,
+    pub mltuner_lr: f64,
+    pub threshold: f64,
+}
+
+pub fn fig7(grid: &[f64], seed: u64, cap_passes: u64) -> Result<Fig7Result> {
+    let mk = || {
+        MfSystem::new(MfConfig {
+            users: 300,
+            items: 200,
+            rank: 16,
+            n_ratings: 20_000,
+            num_workers: 8,
+            seed,
+            ..Default::default()
+        })
+    };
+    let threshold = mk().default_threshold();
+    let mut grid_results = Vec::new();
+    for &lr in grid {
+        let mut sys = mk();
+        let space = sys.space().clone();
+        let setting = space.decode(&[space.specs[0].encode(lr)]);
+        sys.fork_branch(0, 1, None, &setting, BranchType::Training)?;
+        let mut passes = None;
+        for c in 0..cap_passes {
+            let p = sys.schedule_branch(c, 1)?;
+            if !p.value.is_finite() {
+                break;
+            }
+            if p.value <= threshold {
+                passes = Some(c + 1);
+                break;
+            }
+        }
+        grid_results.push((lr, passes));
+    }
+    let sys = mk();
+    let space = sys.space().clone();
+    let mut cfg = TunerConfig::new(space.clone());
+    cfg.convergence = ConvergenceCriterion::LossThreshold { value: threshold };
+    cfg.retune = false;
+    cfg.seed = seed;
+    cfg.max_epochs = cap_passes * 4;
+    let mut tuner = MLtuner::new(sys, cfg);
+    let r = tuner.run()?;
+    // MLtuner's total cost in passes = clocks (1 clock = 1 pass),
+    // including every tuning trial's clocks.
+    let passes = r.clocks;
+    Ok(Fig7Result {
+        grid: grid_results,
+        mltuner_passes: passes,
+        mltuner_lr: r.final_setting.lr(&space),
+        threshold,
+    })
+}
+
+// ----- Fig. 8: MLtuner vs idealized manual settings -----
+
+pub struct Fig8Row {
+    pub profile: &'static str,
+    pub manual_acc: f64,
+    pub manual_time: f64,
+    pub mltuner_acc: f64,
+    pub mltuner_time: f64,
+}
+
+pub fn fig8(seed: u64) -> Result<Vec<Fig8Row>> {
+    // The paper's literature-suggested manual schedules, mapped onto
+    // the profiles (raw LRs; momentum 0.9, staleness 0):
+    let arms: Vec<(SimProfile, ManualSchedule, u32)> = vec![
+        (
+            SimProfile::inception_bn(),
+            ManualSchedule {
+                lr0: 0.045,
+                momentum: 0.9,
+                batch_size: 32.0,
+                staleness: 0.0,
+                decay_factor: 0.97, // -3% every epoch [Ioffe & Szegedy]
+                decay_every: 1,
+            },
+            5,
+        ),
+        (
+            SimProfile::googlenet(),
+            ManualSchedule {
+                lr0: 0.03, // scaled analog of the paper's setting
+                momentum: 0.9,
+                batch_size: 32.0,
+                staleness: 0.0,
+                decay_factor: 0.96, // -4% every 8 epochs [Szegedy et al.]
+                decay_every: 8,
+            },
+            5,
+        ),
+        (
+            SimProfile::alexnet_cifar10(),
+            ManualSchedule {
+                lr0: 0.01,
+                momentum: 0.9,
+                batch_size: 256.0,
+                staleness: 0.0,
+                decay_factor: 1.0, // optimal fixed RMSProp LR (paper)
+                decay_every: 1,
+            },
+            20,
+        ),
+        (
+            SimProfile::rnn_ucf101(),
+            ManualSchedule {
+                lr0: 0.001,
+                momentum: 0.9,
+                batch_size: 1.0,
+                staleness: 0.0,
+                decay_factor: 0.926, // -7.4% every epoch [Donahue et al.]
+                decay_every: 1,
+            },
+            5,
+        ),
+    ];
+    let mut rows = Vec::new();
+    for (profile, sched, plateau) in arms {
+        let name = profile.name;
+        let optimizer = if name == "alexnet_cifar10" {
+            OptimizerKind::RmsProp
+        } else {
+            OptimizerKind::Sgd
+        };
+        // For RMSProp the preferred LR band is shifted; translate the
+        // manual raw LR into the rule's preferred scale.
+        let manual_lr0 = if optimizer == OptimizerKind::RmsProp {
+            optimizer_gain(optimizer, profile.opt_lr).0 * (1.0 - 0.9 * 0.9)
+        } else {
+            sched.lr0
+        };
+        let manual = manual_run(
+            profile.clone(),
+            &ManualSchedule {
+                lr0: manual_lr0,
+                ..sched
+            },
+            optimizer,
+            seed,
+            // run manual arms to full saturation, as the paper does
+            plateau * 2,
+            4000,
+        )?;
+        let report = mltuner_run(profile, seed, plateau, 3000)?;
+        rows.push(Fig8Row {
+            profile: name,
+            manual_acc: manual.final_accuracy,
+            manual_time: manual.total_time,
+            mltuner_acc: report.final_accuracy,
+            mltuner_time: report.total_time,
+        });
+    }
+    Ok(rows)
+}
+
+// ----- Fig. 9: fixed-setting run-to-run variance -----
+
+pub struct Fig9Result {
+    pub same_seed_times: Vec<f64>,
+    pub distinct_seed_times: Vec<f64>,
+    pub same_cov: f64,
+    pub distinct_cov: f64,
+    pub acc_cov: f64,
+}
+
+pub fn fig9(runs: usize) -> Result<Fig9Result> {
+    let profile = SimProfile::alexnet_cifar10();
+    let sched = ManualSchedule {
+        lr0: optimizer_gain(OptimizerKind::RmsProp, profile.opt_lr).0
+            * (1.0 - 0.9 * 0.9),
+        momentum: 0.9,
+        batch_size: 256.0,
+        staleness: 0.0,
+        decay_factor: 1.0,
+        decay_every: 1,
+    };
+    // "Same seed" runs share data/init seed; the residual variance
+    // models non-deterministic floating-point reduction order, which
+    // the SimSystem folds into its per-branch rng stream (branch ids
+    // differ run to run is not available here, so we perturb the rng
+    // stream by run index while keeping the data seed fixed).
+    let mut same = Vec::new();
+    let mut distinct = Vec::new();
+    let mut accs = Vec::new();
+    for run in 0..runs as u64 {
+        let r = manual_run(
+            profile.clone(),
+            &sched,
+            OptimizerKind::RmsProp,
+            1_000 + run, // distinct rng stream, same "experiment"
+            20,
+            2000,
+        )?;
+        same.push(r.total_time);
+        accs.push(r.final_accuracy);
+        let r = manual_run(
+            profile.clone(),
+            &sched,
+            OptimizerKind::RmsProp,
+            31 * run + 7, // fully distinct seeds
+            20,
+            2000,
+        )?;
+        distinct.push(r.total_time);
+    }
+    Ok(Fig9Result {
+        same_cov: coefficient_of_variation(&same),
+        distinct_cov: coefficient_of_variation(&distinct),
+        acc_cov: coefficient_of_variation(&accs),
+        same_seed_times: same,
+        distinct_seed_times: distinct,
+    })
+}
+
+// ----- Fig. 10: robustness to suboptimal initial settings -----
+
+pub struct Fig10Row {
+    pub start_lr: f64,
+    pub final_accuracy: f64,
+    pub total_time: f64,
+    pub retunings: usize,
+}
+
+pub fn fig10(starts: &[f64], seed: u64) -> Result<Vec<Fig10Row>> {
+    let profile = SimProfile::alexnet_cifar10();
+    let mut rows = Vec::new();
+    for (i, &lr) in starts.iter().enumerate() {
+        let sys = SimSystem::new(profile.clone(), 8, seed + i as u64);
+        let space = sys.space.clone();
+        let mut cfg = TunerConfig::new(space.clone());
+        cfg.initial_setting = Some(space.decode(&[
+            space.specs[0].encode(lr),
+            0.3,
+            0.8,
+            0.0,
+        ]));
+        cfg.seed = seed + i as u64;
+        cfg.max_epochs = 600;
+        cfg.convergence = ConvergenceCriterion::AccuracyPlateau { epochs: 5 };
+        let r = MLtuner::new(sys, cfg).run()?;
+        rows.push(Fig10Row {
+            start_lr: lr,
+            final_accuracy: r.final_accuracy,
+            total_time: r.total_time,
+            retunings: r.tunings.len(),
+        });
+    }
+    Ok(rows)
+}
+
+// ----- Fig. 11: scalability with more tunables -----
+
+pub struct Fig11Row {
+    pub tunables: usize,
+    pub final_accuracy: f64,
+    pub total_time: f64,
+    pub tuning_time: f64,
+    /// duration of the initial tuning stage (the Fig. 11 comparison)
+    pub initial_tuning_time: f64,
+    pub trials: usize,
+}
+
+pub fn fig11(seeds: &[u64]) -> Result<Vec<Fig11Row>> {
+    let profile = SimProfile::alexnet_cifar10();
+    let spaces = [
+        TunableSpace::standard(&profile.batch_sizes),
+        TunableSpace::standard_duplicated(&profile.batch_sizes),
+    ];
+    let mut rows = Vec::new();
+    for space in spaces {
+        let (mut acc, mut total, mut tuning, mut initial, mut trials) =
+            (0.0, 0.0, 0.0, 0.0, 0usize);
+        for &seed in seeds {
+            let sys = SimSystem::with_space(profile.clone(), space.clone(), 8, seed);
+            let mut cfg = TunerConfig::new(space.clone());
+            cfg.seed = seed;
+            cfg.max_epochs = 600;
+            cfg.convergence = ConvergenceCriterion::AccuracyPlateau { epochs: 20 };
+            let r = MLtuner::new(sys, cfg).run()?;
+            acc += r.final_accuracy;
+            total += r.total_time;
+            tuning += r.tuning_time;
+            if let Some(t0) = r.tunings.iter().find(|t| t.initial) {
+                initial += t0.ended - t0.started;
+                trials += t0.trials;
+            }
+        }
+        let n = seeds.len() as f64;
+        rows.push(Fig11Row {
+            tunables: space.dim(),
+            final_accuracy: acc / n,
+            total_time: total / n,
+            tuning_time: tuning / n,
+            initial_tuning_time: initial / n,
+            trials: (trials as f64 / n) as usize,
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_run_trains_and_stops() {
+        let r = manual_run(
+            SimProfile::alexnet_cifar10(),
+            &ManualSchedule {
+                lr0: 0.01,
+                momentum: 0.9,
+                batch_size: 256.0,
+                staleness: 0.0,
+                decay_factor: 0.95,
+                decay_every: 1,
+            },
+            OptimizerKind::Sgd,
+            3,
+            10,
+            800,
+        )
+        .unwrap();
+        assert!(r.final_accuracy > 0.5, "{}", r.final_accuracy);
+        assert!(r.epochs < 800);
+    }
+
+    #[test]
+    fn manual_divergent_lr_stops_early_with_low_accuracy() {
+        let r = manual_run(
+            SimProfile::alexnet_cifar10(),
+            &ManualSchedule {
+                lr0: 1.0,
+                momentum: 0.9,
+                batch_size: 4.0,
+                staleness: 0.0,
+                decay_factor: 1.0,
+                decay_every: 1,
+            },
+            OptimizerKind::Sgd,
+            3,
+            10,
+            800,
+        )
+        .unwrap();
+        assert!(r.final_accuracy < 0.1);
+        assert!(r.epochs <= 2);
+    }
+}

@@ -1,0 +1,44 @@
+//! MLtuner: system support for automatic machine learning tuning.
+//!
+//! Reproduction of Cui, Ganger & Gibbons, *MLtuner: System Support for
+//! Automatic Machine Learning Tuning* (2018).  The crate is the L3
+//! coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the MLtuner coordinator (branching, trial-time
+//!   decision, progress summarization, tunable searchers, re-tuning), the
+//!   parameter-server substrate it drives, the optimizer zoo, the
+//!   data-parallel training system, the evaluation apps and the
+//!   Spearmint / Hyperband baselines.
+//! * **L2 (python/compile/model.py)** — the training-job compute graph in
+//!   JAX, AOT-lowered to HLO-text artifacts consumed by [`runtime`].
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots, lowered into the same artifacts.
+//!
+//! Python never runs on the training path: [`runtime`] loads the
+//! artifacts once via the PJRT CPU client (`xla` crate) and executes
+//! them from rust.
+//!
+//! Start with [`tuner::MLtuner`] (the paper's contribution) and
+//! [`training::TrainingSystem`] (the interface of §4.5/Table 1).
+
+pub mod apps;
+pub mod baselines;
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod figures;
+pub mod metrics;
+pub mod optim;
+pub mod ps;
+pub mod runtime;
+pub mod searcher;
+pub mod summarizer;
+pub mod training;
+pub mod tunable;
+pub mod tuner;
+pub mod util;
+
+pub use comm::{BranchId, BranchType, Clock, SystemMsg, TunerMsg};
+pub use summarizer::{BranchLabel, ProgressSummarizer, Summary};
+pub use tunable::{TunableSetting, TunableSpec, TunableSpace};
+pub use tuner::{MLtuner, TunerConfig, TunerReport};

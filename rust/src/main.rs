@@ -1,0 +1,183 @@
+//! `mltuner` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//! * `tune`     — run MLtuner-managed training from a TOML config (or
+//!                `--app`/`--profile` flags), print the report, dump CSV.
+//! * `baseline` — run the Spearmint / Hyperband baseline tuners (§5.2).
+//! * `train`    — train a fixed hard-coded tunable setting (no tuner).
+//! * `info`     — show the artifact manifest and available profiles.
+//!
+//! Examples:
+//! ```text
+//! mltuner tune --app sim --profile inception_bn --seed 1 --csv run.csv
+//! mltuner tune --config configs/dnn_quickstart.toml
+//! mltuner baseline --kind hyperband --profile alexnet_cifar10
+//! mltuner train --profile googlenet --lr 0.03 --momentum 0.9
+//! ```
+
+use anyhow::{bail, Result};
+
+use mltuner::baselines::{HyperbandDriver, SpearmintDriver};
+use mltuner::config::ExperimentConfig;
+use mltuner::runtime::Runtime;
+use mltuner::tuner::MLtuner;
+use mltuner::util::cli::Args;
+
+const USAGE: &str = "\
+mltuner — automatic machine learning tuning (paper reproduction)
+
+USAGE: mltuner <tune|baseline|train|info> [--flags]
+
+tune:     --config <file.toml> | --app sim --profile <name>
+          --seed N --searcher hyperopt|random|grid|spearmint --csv out.csv
+baseline: --kind spearmint|hyperband --profile <name> --seed N
+          --budget <virtual seconds> --csv out.csv
+train:    --profile <name> --lr F --momentum F --seed N --max-epochs N
+info:     --artifacts-dir artifacts
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "tune" => cmd_tune(&args),
+        "baseline" => cmd_baseline(&args),
+        "train" => cmd_train(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            eprint!("{USAGE}");
+            if cmd.is_empty() {
+                Ok(())
+            } else {
+                bail!("unknown subcommand {cmd}")
+            }
+        }
+    }
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => ExperimentConfig::from_toml(&format!(
+            "app = \"{}\"\nprofile = \"{}\"\nseed = {}\nsearcher = \"{}\"\n",
+            args.get_or("app", "sim"),
+            args.get_or("profile", "alexnet_cifar10"),
+            args.get_u64("seed", 0),
+            args.get_or("searcher", "hyperopt"),
+        ))?,
+    };
+    let (system, space) = cfg.build_system()?;
+    let tuner_cfg = cfg.tuner_config(space.clone())?;
+    let mut tuner = MLtuner::new(system, tuner_cfg);
+    let report = tuner.run()?;
+    println!("=== MLtuner report ===");
+    println!("epochs:          {}", report.epochs);
+    println!("converged:       {}", report.converged);
+    println!("final accuracy:  {:.4}", report.final_accuracy);
+    println!("final loss:      {:.4e}", report.final_loss);
+    println!("total time:      {:.1}s", report.total_time);
+    println!(
+        "tuning overhead: {:.1}s ({:.1}%)",
+        report.tuning_time,
+        100.0 * report.tuning_time / report.total_time.max(1e-9)
+    );
+    println!("tunings:         {}", report.tunings.len());
+    for (i, t) in report.tunings.iter().enumerate() {
+        println!(
+            "  [{}] {} trials={} trial_time={:.1}s chosen={}",
+            i,
+            if t.initial { "initial" } else { "re-tune" },
+            t.trials,
+            t.trial_time,
+            t.chosen
+                .as_ref()
+                .map(|s| s.describe(&space))
+                .unwrap_or_else(|| "(none)".into())
+        );
+    }
+    if let Some(path) = args.get("csv") {
+        let f = std::fs::File::create(path)?;
+        report.recorder.write_csv(f)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let kind = args.get_or("kind", "hyperband");
+    let seed = args.get_u64("seed", 0);
+    let budget = args.get_f64("budget", 432_000.0);
+    let cfg = ExperimentConfig::from_toml(&format!(
+        "app = \"sim\"\nprofile = \"{}\"\nseed = {seed}\n",
+        args.get_or("profile", "alexnet_cifar10"),
+    ))?;
+    let (system, space) = cfg.build_system()?;
+    let report = match kind {
+        "spearmint" => SpearmintDriver::new(system, space, seed).run(budget)?,
+        "hyperband" => HyperbandDriver::new(system, space, seed).run(budget)?,
+        other => bail!("unknown baseline {other}"),
+    };
+    println!("=== {kind} report ===");
+    println!("configs tried:  {}", report.configs.len());
+    println!("best accuracy:  {:.4}", report.best_accuracy);
+    println!("total time:     {:.1}s", report.total_time);
+    if let Some(path) = args.get("csv") {
+        let f = std::fs::File::create(path)?;
+        report.recorder.write_csv(f)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let lr = args.get_f64("lr", 0.01);
+    let momentum = args.get_f64("momentum", 0.9);
+    let cfg = ExperimentConfig::from_toml(&format!(
+        "app = \"sim\"\nprofile = \"{}\"\nseed = {}\nmax_epochs = {}\nretune = false\n",
+        args.get_or("profile", "alexnet_cifar10"),
+        args.get_u64("seed", 0),
+        args.get_u64("max-epochs", 60),
+    ))?;
+    let (system, space) = cfg.build_system()?;
+    let mut tuner_cfg = cfg.tuner_config(space.clone())?;
+    let mut u = vec![0.5; space.dim()];
+    u[0] = space.specs[0].encode(lr);
+    u[1] = space.specs[1].encode(momentum);
+    tuner_cfg.initial_setting = Some(space.decode(&u));
+    let mut tuner = MLtuner::new(system, tuner_cfg);
+    let report = tuner.run()?;
+    println!(
+        "fixed setting lr={lr} m={momentum}: epochs={} acc={:.4} time={:.1}s",
+        report.epochs, report.final_accuracy, report.total_time
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("SimApp profiles: inception_bn googlenet alexnet_cifar10 rnn_ucf101 mf_netflix");
+    let dir = args.get_or("artifacts-dir", "artifacts");
+    match Runtime::load(dir) {
+        Err(e) => println!("artifacts: unavailable ({e})"),
+        Ok(rt) => {
+            let mut names: Vec<_> = rt.manifest.models.keys().collect();
+            names.sort();
+            for name in names {
+                let m = &rt.manifest.models[name];
+                println!(
+                    "model {name}: {} params, dims {}->{:?}->{}",
+                    m.num_params(),
+                    m.input_dim,
+                    m.hidden,
+                    m.classes
+                );
+                for a in &m.artifacts {
+                    println!(
+                        "  {} bs={} variant={} ({})",
+                        a.kind, a.batch_size, a.variant, a.file
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}

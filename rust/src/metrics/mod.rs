@@ -1,0 +1,176 @@
+//! Run recorder: the time-series every figure is plotted from.
+//!
+//! Records (time, clock, training loss) samples, (time, epoch,
+//! validation accuracy) points, and labeled events (tuning started /
+//! ended, re-tunings — the shaded regions of Fig. 4).  Dumps CSV for
+//! external plotting and computes the summary statistics the paper
+//! reports (time-to-accuracy, converged accuracy, CoV across runs).
+
+use std::io::Write;
+
+/// One labeled event on the run timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub time: f64,
+    pub label: String,
+}
+
+/// Recorded time series of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunRecorder {
+    /// (time, clock, reported training loss)
+    pub losses: Vec<(f64, u64, f64)>,
+    /// (time, epoch, validation accuracy)
+    pub accuracies: Vec<(f64, u64, f64)>,
+    pub events: Vec<Event>,
+}
+
+impl RunRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_loss(&mut self, time: f64, clock: u64, loss: f64) {
+        self.losses.push((time, clock, loss));
+    }
+
+    pub fn record_accuracy(&mut self, time: f64, epoch: u64, acc: f64) {
+        self.accuracies.push((time, epoch, acc));
+    }
+
+    pub fn event(&mut self, time: f64, label: impl Into<String>) {
+        self.events.push(Event {
+            time,
+            label: label.into(),
+        });
+    }
+
+    /// Best validation accuracy seen so far at each recorded point —
+    /// the bold "max accuracy over time" curves of Fig. 3.
+    pub fn best_accuracy_curve(&self) -> Vec<(f64, f64)> {
+        let mut best = 0.0f64;
+        self.accuracies
+            .iter()
+            .map(|&(t, _, a)| {
+                best = best.max(a);
+                (t, best)
+            })
+            .collect()
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.accuracies
+            .iter()
+            .map(|&(_, _, a)| a)
+            .fold(None, |acc, a| Some(acc.map_or(a, |b: f64| b.max(a))))
+    }
+
+    /// First time the best-so-far accuracy reaches `target` (Fig. 3's
+    /// convergence-time metric).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.best_accuracy_curve()
+            .into_iter()
+            .find(|&(_, a)| a >= target)
+            .map(|(t, _)| t)
+    }
+
+    /// First time the training loss drops to `threshold` (the MF
+    /// convergence metric).
+    pub fn time_to_loss(&self, threshold: f64) -> Option<f64> {
+        self.losses
+            .iter()
+            .find(|&&(_, _, l)| l <= threshold)
+            .map(|&(t, _, _)| t)
+    }
+
+    pub fn total_time(&self) -> f64 {
+        let lt = self.losses.last().map(|&(t, _, _)| t).unwrap_or(0.0);
+        let at = self.accuracies.last().map(|&(t, _, _)| t).unwrap_or(0.0);
+        lt.max(at)
+    }
+
+    /// Write the three series as CSV sections.
+    pub fn write_csv<W: Write>(&self, mut w: W) -> std::io::Result<()> {
+        writeln!(w, "# losses")?;
+        writeln!(w, "time,clock,loss")?;
+        for (t, c, l) in &self.losses {
+            writeln!(w, "{t},{c},{l}")?;
+        }
+        writeln!(w, "# accuracies")?;
+        writeln!(w, "time,epoch,accuracy")?;
+        for (t, e, a) in &self.accuracies {
+            writeln!(w, "{t},{e},{a}")?;
+        }
+        writeln!(w, "# events")?;
+        writeln!(w, "time,label")?;
+        for ev in &self.events {
+            writeln!(w, "{},{}", ev.time, ev.label)?;
+        }
+        Ok(())
+    }
+}
+
+/// Coefficient of variation = σ/μ (Fig. 9's run-variance statistic).
+pub fn coefficient_of_variation(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    let n = values.len() as f64;
+    let mean = values.iter().sum::<f64>() / n;
+    if mean == 0.0 {
+        return f64::NAN;
+    }
+    let var = values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_accuracy_curve_is_monotone() {
+        let mut r = RunRecorder::new();
+        for (i, a) in [0.1, 0.3, 0.2, 0.5, 0.4].iter().enumerate() {
+            r.record_accuracy(i as f64, i as u64, *a);
+        }
+        let curve = r.best_accuracy_curve();
+        assert_eq!(
+            curve.iter().map(|&(_, a)| a).collect::<Vec<_>>(),
+            vec![0.1, 0.3, 0.3, 0.5, 0.5]
+        );
+        assert_eq!(r.final_accuracy(), Some(0.5));
+    }
+
+    #[test]
+    fn time_to_targets() {
+        let mut r = RunRecorder::new();
+        r.record_accuracy(1.0, 0, 0.2);
+        r.record_accuracy(2.0, 1, 0.6);
+        r.record_loss(0.5, 0, 10.0);
+        r.record_loss(1.5, 1, 2.0);
+        assert_eq!(r.time_to_accuracy(0.5), Some(2.0));
+        assert_eq!(r.time_to_accuracy(0.9), None);
+        assert_eq!(r.time_to_loss(5.0), Some(1.5));
+    }
+
+    #[test]
+    fn cov_matches_hand_computation() {
+        // values 1,2,3: mean 2, pop-var 2/3
+        let cov = coefficient_of_variation(&[1.0, 2.0, 3.0]);
+        assert!((cov - (2.0f64 / 3.0).sqrt() / 2.0).abs() < 1e-12);
+        assert!(coefficient_of_variation(&[]).is_nan());
+    }
+
+    #[test]
+    fn csv_has_all_sections() {
+        let mut r = RunRecorder::new();
+        r.record_loss(0.0, 0, 1.0);
+        r.record_accuracy(1.0, 0, 0.5);
+        r.event(0.5, "tuning_start");
+        let mut buf = Vec::new();
+        r.write_csv(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.contains("# losses") && s.contains("# accuracies") && s.contains("tuning_start"));
+    }
+}

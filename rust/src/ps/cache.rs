@@ -1,0 +1,160 @@
+//! Worker-side parameter cache with SSP staleness (§2.2, §4.6).
+//!
+//! Each ML worker keeps a local cache of parameter rows.  Under a
+//! bounded-staleness (SSP) consistency model a cached row read at clock
+//! `c_read` may be used at clock `c` as long as `c - c_read <= s`, where
+//! `s` is the data-staleness tunable.
+//!
+//! Per §4.6, MLtuner runs only one branch at a time, so the cache is
+//! **shared between branches and cleared on every branch switch** —
+//! sharing the cache memory (instead of duplicating it per branch) is
+//! what makes the GPU-memory-constrained systems fit.
+
+use std::collections::HashMap;
+
+use crate::comm::{BranchId, Clock};
+
+use super::storage::{RowKey, TableId};
+
+#[derive(Debug, Clone)]
+struct CachedRow {
+    data: Vec<f32>,
+    /// Clock at which this row was fetched from the server.
+    fetched_at: Clock,
+}
+
+/// Cache statistics (hit ratio is a §Perf metric).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub stale_evictions: u64,
+    pub branch_clears: u64,
+}
+
+/// One worker's parameter cache.
+#[derive(Debug, Default)]
+pub struct WorkerCache {
+    rows: HashMap<(TableId, RowKey), CachedRow>,
+    current_branch: Option<BranchId>,
+    stats: CacheStats,
+}
+
+impl WorkerCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Point the cache at `branch`; clears it if the branch changed
+    /// (branches share the cache memory, §4.6).
+    pub fn switch_branch(&mut self, branch: BranchId) {
+        if self.current_branch != Some(branch) {
+            if self.current_branch.is_some() {
+                self.stats.branch_clears += 1;
+            }
+            self.rows.clear();
+            self.current_branch = Some(branch);
+        }
+    }
+
+    /// Read a row if present and fresh enough under staleness bound
+    /// `staleness` at clock `now`.
+    pub fn get(
+        &mut self,
+        table: TableId,
+        key: RowKey,
+        now: Clock,
+        staleness: u32,
+    ) -> Option<&[f32]> {
+        // Split borrow: decide staleness first.
+        let fresh = match self.rows.get(&(table, key)) {
+            None => {
+                self.stats.misses += 1;
+                return None;
+            }
+            Some(row) => now.saturating_sub(row.fetched_at) <= staleness as Clock,
+        };
+        if fresh {
+            self.stats.hits += 1;
+            Some(&self.rows.get(&(table, key)).unwrap().data)
+        } else {
+            self.rows.remove(&(table, key));
+            self.stats.stale_evictions += 1;
+            self.stats.misses += 1;
+            None
+        }
+    }
+
+    /// Install a freshly-fetched row.
+    pub fn put(&mut self, table: TableId, key: RowKey, data: Vec<f32>, now: Clock) {
+        self.rows.insert((table, key), CachedRow { data, fetched_at: now });
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn current_branch(&self) -> Option<BranchId> {
+        self.current_branch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_within_staleness_bound() {
+        let mut c = WorkerCache::new();
+        c.switch_branch(0);
+        c.put(0, 1, vec![1.0], 10);
+        assert!(c.get(0, 1, 10, 0).is_some()); // same clock, s=0
+        assert!(c.get(0, 1, 13, 3).is_some()); // 3 stale, s=3
+        assert_eq!(c.stats().hits, 2);
+    }
+
+    #[test]
+    fn miss_beyond_staleness_bound_evicts() {
+        let mut c = WorkerCache::new();
+        c.switch_branch(0);
+        c.put(0, 1, vec![1.0], 10);
+        assert!(c.get(0, 1, 12, 1).is_none()); // 2 stale > s=1
+        assert_eq!(c.stats().stale_evictions, 1);
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn ssp_never_exposes_staleness_above_bound() {
+        let mut c = WorkerCache::new();
+        c.switch_branch(0);
+        for s in [0u32, 1, 3, 7] {
+            for age in 0..10u64 {
+                c.put(0, 9, vec![0.0], 100);
+                let got = c.get(0, 9, 100 + age, s);
+                assert_eq!(got.is_some(), age <= s as u64, "age={age} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn branch_switch_clears_shared_cache() {
+        let mut c = WorkerCache::new();
+        c.switch_branch(1);
+        c.put(0, 1, vec![1.0], 0);
+        c.switch_branch(2);
+        assert!(c.is_empty());
+        assert_eq!(c.stats().branch_clears, 1);
+        // switching to the same branch again does NOT clear
+        c.put(0, 1, vec![2.0], 0);
+        c.switch_branch(2);
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -1,0 +1,315 @@
+//! Parameter-server substrate (§4.6): the IterStore / GeePS analog that
+//! MLtuner's branch operations drive.
+//!
+//! Parameter data lives as key→row pairs in memory, sharded across
+//! server shards (one per worker machine in the paper's deployments).
+//! Branch support adds the branch ID as an additional index field; forks
+//! copy the parent's rows out of a user-level [`pool::MemoryPool`], and
+//! frees reclaim them.  Optimizer slot state is row-resident and is
+//! forked/freed together with the data, so a branch snapshot is a
+//! *consistent* snapshot of all training state.
+
+pub mod cache;
+pub mod thread_cache;
+pub mod pool;
+pub mod storage;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::comm::BranchId;
+use crate::optim::{Hyper, Optimizer};
+
+use pool::{MemoryPool, PoolStats};
+use storage::{Entry, RowKey, Shard, TableId};
+
+/// Sharded, branch-versioned parameter server.
+#[derive(Debug)]
+pub struct ParamServer {
+    shards: Vec<Shard>,
+    pool: MemoryPool,
+    optimizer: Optimizer,
+    /// rows per branch (all shards), for accounting.
+    branch_rows: HashMap<BranchId, usize>,
+}
+
+impl ParamServer {
+    pub fn new(num_shards: usize, optimizer: Optimizer) -> Self {
+        assert!(num_shards > 0);
+        ParamServer {
+            shards: (0..num_shards).map(|_| Shard::default()).collect(),
+            pool: MemoryPool::new(),
+            optimizer,
+            branch_rows: HashMap::new(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn optimizer(&self) -> &Optimizer {
+        &self.optimizer
+    }
+
+    #[inline]
+    fn shard_of(&self, table: TableId, key: RowKey) -> usize {
+        // Cheap deterministic router: mix table into the key.
+        let h = key
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(table as u64);
+        (h % self.shards.len() as u64) as usize
+    }
+
+    /// Install a fresh row into `branch` (used when initializing the
+    /// root branch's model state).
+    pub fn insert_row(
+        &mut self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        data: Vec<f32>,
+    ) {
+        let sid = self.shard_of(table, key);
+        let mut entry = Entry {
+            data,
+            slots: Vec::new(),
+            step: 0,
+        };
+        self.optimizer.init_slots(&mut entry);
+        self.shards[sid].insert(branch, table, key, entry);
+        *self.branch_rows.entry(branch).or_insert(0) += 1;
+    }
+
+    /// Fork `child` from `parent`: a consistent snapshot of parameter
+    /// data + optimizer state, copied via the memory pool.
+    pub fn fork_branch(&mut self, child: BranchId, parent: BranchId) -> Result<()> {
+        if self.branch_rows.contains_key(&child) {
+            bail!("branch {child} already exists");
+        }
+        if !self.branch_rows.contains_key(&parent) {
+            bail!("parent branch {parent} does not exist");
+        }
+        let mut rows = 0;
+        for shard in &mut self.shards {
+            rows += shard.fork(child, parent, &mut self.pool);
+        }
+        self.branch_rows.insert(child, rows);
+        Ok(())
+    }
+
+    /// Free `branch`, reclaiming all its memory into the pool.
+    pub fn free_branch(&mut self, branch: BranchId) -> Result<()> {
+        if self.branch_rows.remove(&branch).is_none() {
+            bail!("branch {branch} does not exist");
+        }
+        for shard in &mut self.shards {
+            shard.free(branch, &mut self.pool);
+        }
+        Ok(())
+    }
+
+    pub fn branch_exists(&self, branch: BranchId) -> bool {
+        self.branch_rows.contains_key(&branch)
+    }
+
+    pub fn live_branches(&self) -> Vec<BranchId> {
+        let mut v: Vec<_> = self.branch_rows.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn branch_row_count(&self, branch: BranchId) -> usize {
+        self.branch_rows.get(&branch).copied().unwrap_or(0)
+    }
+
+    /// Read one row (server-side authoritative copy).
+    pub fn read_row(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+    ) -> Option<&[f32]> {
+        let sid = self.shard_of(table, key);
+        self.shards[sid].get(branch, table, key).map(|e| &e.data[..])
+    }
+
+    /// AdaRevision's read: row data plus the current grad-accumulator
+    /// snapshot `z` (to be handed back as `z_old` with the update).
+    pub fn read_row_with_accum(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+    ) -> Option<(&[f32], Option<&[f32]>)> {
+        let sid = self.shard_of(table, key);
+        self.shards[sid].get(branch, table, key).map(|e| {
+            let z = e.slots.get(1).map(|s| &s[..]);
+            (&e.data[..], z)
+        })
+    }
+
+    /// Apply one batch-normalized gradient to a row; the server applies
+    /// the learning rate / momentum / adaptive rule (`hyper` carries the
+    /// tunables).
+    pub fn apply_update(
+        &mut self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        grad: &[f32],
+        hyper: Hyper,
+        z_old: Option<&[f32]>,
+    ) -> Result<()> {
+        let sid = self.shard_of(table, key);
+        let opt = self.optimizer;
+        match self.shards[sid].get_mut(branch, table, key) {
+            None => bail!("row ({table},{key}) missing in branch {branch}"),
+            Some(entry) => {
+                opt.apply(hyper, entry, grad, z_old);
+                Ok(())
+            }
+        }
+    }
+
+    /// Enumerate a branch's (table, key) pairs across all shards.
+    pub fn keys(&self, branch: BranchId) -> Vec<(TableId, RowKey)> {
+        let mut all = Vec::with_capacity(self.branch_row_count(branch));
+        for shard in &self.shards {
+            all.extend(shard.keys(branch));
+        }
+        all.sort_unstable();
+        all
+    }
+
+    /// Gather a whole table of `branch` into a flat vec ordered by key
+    /// (how the DNN app reassembles flattened tensors for PJRT).
+    pub fn gather_table(&self, branch: BranchId, table: TableId) -> Vec<f32> {
+        let mut keys: Vec<RowKey> = self
+            .keys(branch)
+            .into_iter()
+            .filter(|(t, _)| *t == table)
+            .map(|(_, k)| k)
+            .collect();
+        keys.sort_unstable();
+        let mut out = Vec::new();
+        for k in keys {
+            out.extend_from_slice(self.read_row(branch, table, k).unwrap());
+        }
+        out
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::OptimizerKind;
+
+    fn ps(kind: OptimizerKind) -> ParamServer {
+        ParamServer::new(4, Optimizer::new(kind))
+    }
+
+    fn init_root(ps: &mut ParamServer, rows: usize, len: usize) {
+        for k in 0..rows {
+            ps.insert_row(0, 0, k as RowKey, vec![k as f32; len]);
+        }
+    }
+
+    #[test]
+    fn insert_read_roundtrip_across_shards() {
+        let mut ps = ps(OptimizerKind::Sgd);
+        init_root(&mut ps, 64, 8);
+        for k in 0..64u64 {
+            assert_eq!(ps.read_row(0, 0, k).unwrap()[0], k as f32);
+        }
+        assert_eq!(ps.branch_row_count(0), 64);
+    }
+
+    #[test]
+    fn fork_then_update_isolated() {
+        let mut ps = ps(OptimizerKind::Sgd);
+        init_root(&mut ps, 8, 4);
+        ps.fork_branch(1, 0).unwrap();
+        ps.apply_update(1, 0, 3, &[1.0; 4], Hyper { lr: 1.0, momentum: 0.0 }, None)
+            .unwrap();
+        assert_eq!(ps.read_row(0, 0, 3).unwrap()[0], 3.0);
+        assert_eq!(ps.read_row(1, 0, 3).unwrap()[0], 2.0);
+    }
+
+    #[test]
+    fn optimizer_state_snapshots_with_branch() {
+        // Momentum accumulated in the parent must carry into the fork;
+        // updates after the fork must not leak back.
+        let mut ps = ps(OptimizerKind::Sgd);
+        init_root(&mut ps, 1, 1);
+        let h = Hyper { lr: 0.1, momentum: 0.9 };
+        ps.apply_update(0, 0, 0, &[1.0], h, None).unwrap();
+        ps.fork_branch(1, 0).unwrap();
+        // both take the same next step => same velocity was copied
+        ps.apply_update(0, 0, 0, &[1.0], h, None).unwrap();
+        ps.apply_update(1, 0, 0, &[1.0], h, None).unwrap();
+        assert_eq!(
+            ps.read_row(0, 0, 0).unwrap()[0],
+            ps.read_row(1, 0, 0).unwrap()[0]
+        );
+    }
+
+    #[test]
+    fn free_unknown_branch_errors() {
+        let mut ps = ps(OptimizerKind::Sgd);
+        init_root(&mut ps, 1, 1);
+        assert!(ps.free_branch(42).is_err());
+        assert!(ps.fork_branch(1, 42).is_err());
+        ps.fork_branch(1, 0).unwrap();
+        assert!(ps.fork_branch(1, 0).is_err(), "duplicate child");
+    }
+
+    #[test]
+    fn fork_free_cycle_reuses_pool_memory() {
+        let mut ps = ps(OptimizerKind::Adam);
+        init_root(&mut ps, 32, 16);
+        ps.fork_branch(1, 0).unwrap();
+        ps.free_branch(1).unwrap();
+        let allocated_before = ps.pool_stats().allocated;
+        for b in 2..50u32 {
+            ps.fork_branch(b, 0).unwrap();
+            ps.free_branch(b).unwrap();
+        }
+        // steady state: everything comes from the pool
+        assert_eq!(ps.pool_stats().allocated, allocated_before);
+        assert!(ps.pool_stats().reused > 0);
+    }
+
+    #[test]
+    fn gather_table_orders_by_key() {
+        let mut ps = ps(OptimizerKind::Sgd);
+        ps.insert_row(0, 0, 2, vec![3.0, 4.0]);
+        ps.insert_row(0, 0, 0, vec![0.0]);
+        ps.insert_row(0, 0, 1, vec![1.0, 2.0]);
+        ps.insert_row(0, 1, 0, vec![9.0]); // other table ignored
+        assert_eq!(ps.gather_table(0, 0), vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn adarevision_roundtrip_through_server() {
+        let mut ps = ps(OptimizerKind::AdaRevision);
+        init_root(&mut ps, 1, 2);
+        let (_, z) = ps.read_row_with_accum(0, 0, 0).unwrap();
+        let z_old = z.map(|s| s.to_vec());
+        ps.apply_update(
+            0,
+            0,
+            0,
+            &[1.0, -1.0],
+            Hyper { lr: 0.1, momentum: 0.0 },
+            z_old.as_deref(),
+        )
+        .unwrap();
+        assert!(ps.read_row(0, 0, 0).unwrap()[0] < 0.0);
+    }
+}

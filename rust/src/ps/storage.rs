@@ -1,0 +1,208 @@
+//! Branch-versioned parameter storage (§4.6).
+//!
+//! Parameter data is key→row in memory, sharded across server shards;
+//! to support MLtuner the branch ID is an **additional field in the
+//! index**: each shard keeps a per-branch map of rows.  Forking a
+//! branch allocates storage from the memory pool and copies the parent
+//! branch's rows; freeing a branch reclaims all its memory to the pool.
+//!
+//! Each row carries its optimizer slot buffers (momentum / adaptive-LR
+//! accumulators), which are *training state* and therefore snapshotted
+//! and restored with the branch, exactly like the parameter values.
+
+use std::collections::HashMap;
+
+use crate::comm::BranchId;
+
+use super::pool::MemoryPool;
+
+/// Row key within a table (e.g. chunk index of a flattened tensor, or
+/// user/movie id for matrix factorization).
+pub type RowKey = u64;
+
+/// Table id (one logical tensor / factor matrix per table).
+pub type TableId = u32;
+
+/// One parameter row plus its optimizer slots.
+#[derive(Debug, Default)]
+pub struct Entry {
+    pub data: Vec<f32>,
+    /// Optimizer slot buffers (meaning depends on `optim::Optimizer`):
+    /// slot 0 = velocity / first moment, slot 1 = second moment, …
+    pub slots: Vec<Vec<f32>>,
+    /// Per-row update counter (drives Adam bias correction and
+    /// AdaRevision's revision bookkeeping).
+    pub step: u64,
+}
+
+/// One server shard: branch id → (table, key) → entry.
+#[derive(Debug, Default)]
+pub struct Shard {
+    branches: HashMap<BranchId, HashMap<(TableId, RowKey), Entry>>,
+}
+
+impl Shard {
+    pub fn insert(
+        &mut self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        entry: Entry,
+    ) {
+        self.branches
+            .entry(branch)
+            .or_default()
+            .insert((table, key), entry);
+    }
+
+    pub fn get(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+    ) -> Option<&Entry> {
+        self.branches.get(&branch)?.get(&(table, key))
+    }
+
+    pub fn get_mut(
+        &mut self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+    ) -> Option<&mut Entry> {
+        self.branches.get_mut(&branch)?.get_mut(&(table, key))
+    }
+
+    /// Copy-on-fork: duplicate every parent row (and its optimizer
+    /// slots) into `child`, drawing buffers from `pool`.
+    pub fn fork(
+        &mut self,
+        child: BranchId,
+        parent: BranchId,
+        pool: &mut MemoryPool,
+    ) -> usize {
+        let parent_rows: Vec<((TableId, RowKey), Vec<f32>, Vec<Vec<f32>>, u64)> =
+            match self.branches.get(&parent) {
+                None => Vec::new(),
+                Some(rows) => rows
+                    .iter()
+                    .map(|(k, e)| {
+                        (
+                            *k,
+                            pool.alloc_copy(&e.data),
+                            e.slots.iter().map(|s| pool.alloc_copy(s)).collect(),
+                            e.step,
+                        )
+                    })
+                    .collect(),
+            };
+        let n = parent_rows.len();
+        let child_map = self.branches.entry(child).or_default();
+        for (k, data, slots, step) in parent_rows {
+            child_map.insert(k, Entry { data, slots, step });
+        }
+        n
+    }
+
+    /// Free a branch, reclaiming all its buffers into `pool`.
+    pub fn free(&mut self, branch: BranchId, pool: &mut MemoryPool) -> usize {
+        match self.branches.remove(&branch) {
+            None => 0,
+            Some(rows) => {
+                let n = rows.len();
+                for (_, e) in rows {
+                    pool.recycle(e.data);
+                    for s in e.slots {
+                        pool.recycle(s);
+                    }
+                }
+                n
+            }
+        }
+    }
+
+    pub fn branch_row_count(&self, branch: BranchId) -> usize {
+        self.branches.get(&branch).map_or(0, |m| m.len())
+    }
+
+    pub fn live_branches(&self) -> Vec<BranchId> {
+        let mut v: Vec<_> = self.branches.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Iterate all (table, key) pairs of a branch (row enumeration for
+    /// bulk reads).
+    pub fn keys(&self, branch: BranchId) -> Vec<(TableId, RowKey)> {
+        self.branches
+            .get(&branch)
+            .map(|m| m.keys().copied().collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(vals: &[f32]) -> Entry {
+        Entry {
+            data: vals.to_vec(),
+            slots: vec![vec![0.0; vals.len()]],
+            step: 0,
+        }
+    }
+
+    #[test]
+    fn fork_copies_parent_rows_and_slots() {
+        let mut shard = Shard::default();
+        let mut pool = MemoryPool::new();
+        shard.insert(0, 0, 7, entry(&[1.0, 2.0]));
+        shard.insert(0, 1, 3, entry(&[5.0]));
+        let n = shard.fork(1, 0, &mut pool);
+        assert_eq!(n, 2);
+        assert_eq!(shard.get(1, 0, 7).unwrap().data, vec![1.0, 2.0]);
+        assert_eq!(shard.get(1, 1, 3).unwrap().slots.len(), 1);
+    }
+
+    #[test]
+    fn fork_isolates_child_from_parent_writes() {
+        let mut shard = Shard::default();
+        let mut pool = MemoryPool::new();
+        shard.insert(0, 0, 0, entry(&[1.0]));
+        shard.fork(1, 0, &mut pool);
+        shard.get_mut(0, 0, 0).unwrap().data[0] = 99.0;
+        assert_eq!(shard.get(1, 0, 0).unwrap().data[0], 1.0);
+        shard.get_mut(1, 0, 0).unwrap().data[0] = -1.0;
+        assert_eq!(shard.get(0, 0, 0).unwrap().data[0], 99.0);
+    }
+
+    #[test]
+    fn free_reclaims_to_pool_and_removes_rows() {
+        let mut shard = Shard::default();
+        let mut pool = MemoryPool::new();
+        shard.insert(0, 0, 0, entry(&[1.0, 2.0, 3.0]));
+        shard.fork(1, 0, &mut pool);
+        let freed = shard.free(1, &mut pool);
+        assert_eq!(freed, 1);
+        assert!(shard.get(1, 0, 0).is_none());
+        // data buffer + 1 slot buffer reclaimed
+        assert_eq!(pool.stats().idle, 2);
+    }
+
+    #[test]
+    fn fork_of_missing_parent_is_empty() {
+        let mut shard = Shard::default();
+        let mut pool = MemoryPool::new();
+        assert_eq!(shard.fork(5, 99, &mut pool), 0);
+        assert_eq!(shard.branch_row_count(5), 0);
+    }
+
+    #[test]
+    fn live_branches_sorted() {
+        let mut shard = Shard::default();
+        shard.insert(3, 0, 0, entry(&[0.0]));
+        shard.insert(1, 0, 0, entry(&[0.0]));
+        assert_eq!(shard.live_branches(), vec![1, 3]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Two-level worker cache (§4.6): IterStore provides a distinct
+//! **thread-level cache** for each worker thread on top of the
+//! machine-level cache, to avoid lock contention between the threads
+//! of one worker machine.
+//!
+//! The thread cache is a small, lock-free-by-ownership L1 over the
+//! shared machine cache (L2).  Both levels are branch-oblivious and are
+//! cleared on branch switch, exactly like [`super::cache::WorkerCache`].
+
+use std::collections::HashMap;
+
+use crate::comm::{BranchId, Clock};
+
+use super::cache::WorkerCache;
+use super::storage::{RowKey, TableId};
+
+/// Per-thread L1 over a shared machine-level L2.
+#[derive(Debug, Default)]
+pub struct ThreadCache {
+    rows: HashMap<(TableId, RowKey), (Vec<f32>, Clock)>,
+    current_branch: Option<BranchId>,
+    pub hits: u64,
+    pub misses: u64,
+    /// max rows held (thread caches are small by design)
+    capacity: usize,
+}
+
+impl ThreadCache {
+    pub fn new(capacity: usize) -> Self {
+        ThreadCache {
+            capacity: capacity.max(1),
+            ..Default::default()
+        }
+    }
+
+    pub fn switch_branch(&mut self, branch: BranchId) {
+        if self.current_branch != Some(branch) {
+            self.rows.clear();
+            self.current_branch = Some(branch);
+        }
+    }
+
+    /// Two-level read: L1, then L2 (filling L1), then `fetch` (filling
+    /// both).  `staleness` applies at both levels.
+    pub fn get_or_fetch(
+        &mut self,
+        l2: &mut WorkerCache,
+        table: TableId,
+        key: RowKey,
+        now: Clock,
+        staleness: u32,
+        fetch: impl FnOnce() -> Vec<f32>,
+    ) -> Vec<f32> {
+        if let Some((row, fetched_at)) = self.rows.get(&(table, key)) {
+            if now.saturating_sub(*fetched_at) <= staleness as Clock {
+                self.hits += 1;
+                return row.clone();
+            }
+            self.rows.remove(&(table, key));
+        }
+        self.misses += 1;
+        let (row, fetched_at) = match l2.get(table, key, now, staleness) {
+            Some(r) => (r.to_vec(), now),
+            None => {
+                let r = fetch();
+                l2.put(table, key, r.clone(), now);
+                (r, now)
+            }
+        };
+        if self.rows.len() >= self.capacity {
+            // trivial eviction: drop an arbitrary entry (thread caches
+            // hold the handful of rows a thread's minibatch touches)
+            if let Some(k) = self.rows.keys().next().copied() {
+                self.rows.remove(&k);
+            }
+        }
+        self.rows.insert((table, key), (row.clone(), fetched_at));
+        row
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l1_hits_avoid_l2_and_fetch() {
+        let mut l1 = ThreadCache::new(8);
+        let mut l2 = WorkerCache::new();
+        l1.switch_branch(1);
+        l2.switch_branch(1);
+        let mut fetches = 0;
+        for _ in 0..5 {
+            let row = l1.get_or_fetch(&mut l2, 0, 7, 0, 0, || {
+                fetches += 1;
+                vec![1.0, 2.0]
+            });
+            assert_eq!(row, vec![1.0, 2.0]);
+        }
+        assert_eq!(fetches, 1, "only the first read fetches");
+        assert_eq!(l1.hits, 4);
+        // L2 was filled by the first miss
+        assert!(l2.get(0, 7, 0, 0).is_some());
+    }
+
+    #[test]
+    fn l2_serves_other_threads_without_refetch() {
+        let mut t1 = ThreadCache::new(8);
+        let mut t2 = ThreadCache::new(8);
+        let mut l2 = WorkerCache::new();
+        for c in [&mut t1, &mut t2] {
+            c.switch_branch(1);
+        }
+        l2.switch_branch(1);
+        let mut fetches = 0;
+        t1.get_or_fetch(&mut l2, 0, 3, 0, 0, || {
+            fetches += 1;
+            vec![9.0]
+        });
+        // second thread: L1 miss, L2 hit, no fetch
+        t2.get_or_fetch(&mut l2, 0, 3, 0, 0, || {
+            fetches += 1;
+            vec![0.0]
+        });
+        assert_eq!(fetches, 1);
+        assert_eq!(t2.misses, 1);
+    }
+
+    #[test]
+    fn staleness_honored_at_both_levels() {
+        let mut l1 = ThreadCache::new(8);
+        let mut l2 = WorkerCache::new();
+        l1.switch_branch(1);
+        l2.switch_branch(1);
+        let mut fetches = 0;
+        l1.get_or_fetch(&mut l2, 0, 1, 10, 1, || {
+            fetches += 1;
+            vec![1.0]
+        });
+        // clock 11, staleness 1: still fresh
+        l1.get_or_fetch(&mut l2, 0, 1, 11, 1, || {
+            fetches += 1;
+            vec![2.0]
+        });
+        assert_eq!(fetches, 1);
+        // clock 12: both levels stale → refetch
+        let row = l1.get_or_fetch(&mut l2, 0, 1, 12, 1, || {
+            fetches += 1;
+            vec![3.0]
+        });
+        assert_eq!(fetches, 2);
+        assert_eq!(row, vec![3.0]);
+    }
+
+    #[test]
+    fn branch_switch_clears_l1() {
+        let mut l1 = ThreadCache::new(8);
+        let mut l2 = WorkerCache::new();
+        l1.switch_branch(1);
+        l2.switch_branch(1);
+        l1.get_or_fetch(&mut l2, 0, 1, 0, 0, || vec![1.0]);
+        assert_eq!(l1.len(), 1);
+        l1.switch_branch(2);
+        assert!(l1.is_empty());
+    }
+
+    #[test]
+    fn capacity_bounded() {
+        let mut l1 = ThreadCache::new(2);
+        let mut l2 = WorkerCache::new();
+        l1.switch_branch(1);
+        l2.switch_branch(1);
+        for k in 0..10u64 {
+            l1.get_or_fetch(&mut l2, 0, k, 0, 0, || vec![k as f32]);
+        }
+        assert!(l1.len() <= 2);
+    }
+}

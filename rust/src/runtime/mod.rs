@@ -1,0 +1,391 @@
+//! PJRT runtime: load the AOT artifacts emitted by `python/compile/aot.py`
+//! and execute them from the rust training path.
+//!
+//! Python runs only at build time; this module makes the binary
+//! self-contained afterwards.  Interchange is **HLO text** (see
+//! aot.py's module docstring): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! One compiled executable per (model, entry kind, batch-size variant),
+//! cached after first use.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// artifacts/manifest.json (written by aot.py).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: u32,
+    pub models: HashMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Parse the manifest from JSON text (aot.py's output format).
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let format = v
+            .get("format")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest: missing format"))? as u32;
+        let mut models = HashMap::new();
+        let model_obj = v
+            .get("models")
+            .and_then(Json::as_object)
+            .ok_or_else(|| anyhow!("manifest: missing models"))?;
+        for (name, m) in model_obj {
+            let usize_field = |k: &str| -> Result<usize> {
+                m.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("manifest model {name}: missing {k}"))
+            };
+            let hidden = m
+                .get("hidden")
+                .and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("manifest: missing hidden"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let param_shapes = m
+                .get("param_shapes")
+                .and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("manifest: missing param_shapes"))?
+                .iter()
+                .map(|s| {
+                    s.as_array()
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .ok_or_else(|| anyhow!("bad shape"))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            let artifacts = m
+                .get("artifacts")
+                .and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("manifest: missing artifacts"))?
+                .iter()
+                .map(|a| {
+                    Ok(ArtifactEntry {
+                        kind: a
+                            .get("kind")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("artifact: missing kind"))?
+                            .to_string(),
+                        batch_size: a
+                            .get("batch_size")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("artifact: missing batch_size"))?,
+                        variant: a
+                            .get("variant")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("artifact: missing variant"))?
+                            .to_string(),
+                        file: a
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("artifact: missing file"))?
+                            .to_string(),
+                        sha256: a
+                            .get("sha256")
+                            .and_then(Json::as_str)
+                            .unwrap_or("")
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<ArtifactEntry>>>()?;
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    input_dim: usize_field("input_dim")?,
+                    hidden,
+                    classes: usize_field("classes")?,
+                    param_shapes,
+                    eval_batch: usize_field("eval_batch")?,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { format, models })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub input_dim: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub eval_batch: usize,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl ModelManifest {
+    pub fn num_params(&self) -> usize {
+        self.param_shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>())
+            .sum()
+    }
+
+    pub fn batch_sizes(&self, variant: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "grad" && a.variant == variant)
+            .map(|a| a.batch_size)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub kind: String,
+    pub batch_size: usize,
+    pub variant: String,
+    pub file: String,
+    pub sha256: String,
+}
+
+/// Key of a compiled executable in the cache.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct ExeKey {
+    model: String,
+    kind: String,
+    batch_size: usize,
+    variant: String,
+}
+
+/// The PJRT runtime: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<ExeKey, xla::PjRtLoadedExecutable>,
+    /// compile count (a §Perf metric: compiles happen once per variant).
+    pub compiles: u64,
+}
+
+impl Runtime {
+    /// Load `artifacts/manifest.json` under `dir` and connect the PJRT
+    /// CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {mpath:?} (run `make artifacts`)"))?;
+        let manifest = Manifest::from_json_text(&text)?;
+        if manifest.format != 1 {
+            bail!("unsupported manifest format {}", manifest.format);
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+            compiles: 0,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.manifest
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name} not in manifest"))
+    }
+
+    fn ensure_compiled(&mut self, key: &ExeKey) -> Result<()> {
+        if self.cache.contains_key(key) {
+            return Ok(());
+        }
+        let model = self.model(&key.model)?;
+        let entry = model
+            .artifacts
+            .iter()
+            .find(|a| {
+                a.kind == key.kind
+                    && a.batch_size == key.batch_size
+                    && a.variant == key.variant
+            })
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact {}:{} bs={} variant={}",
+                    key.model,
+                    key.kind,
+                    key.batch_size,
+                    key.variant
+                )
+            })?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        self.compiles += 1;
+        self.cache.insert(key.clone(), exe);
+        Ok(())
+    }
+
+    fn execute(
+        &mut self,
+        key: &ExeKey,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(key)?;
+        let exe = self.cache.get(key).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+    }
+
+    /// Run one gradient step: `(params, x, y) → (grads, loss_sum)`.
+    /// `params` are the flat tensors in manifest order; gradients come
+    /// back batch-normalized (see model.py).
+    pub fn run_grad(
+        &mut self,
+        model: &str,
+        batch_size: usize,
+        variant: &str,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(Vec<Vec<f32>>, f32)> {
+        let mm = self.model(model)?.clone();
+        if params.len() != mm.param_shapes.len() {
+            bail!(
+                "expected {} param tensors, got {}",
+                mm.param_shapes.len(),
+                params.len()
+            );
+        }
+        let key = ExeKey {
+            model: model.into(),
+            kind: "grad".into(),
+            batch_size,
+            variant: variant.into(),
+        };
+        let inputs = self.marshal_inputs(&mm, params, x, y, batch_size)?;
+        let outs = self.execute(&key, &inputs)?;
+        if outs.len() != params.len() + 1 {
+            bail!("expected {} outputs, got {}", params.len() + 1, outs.len());
+        }
+        let mut grads = Vec::with_capacity(params.len());
+        for lit in &outs[..params.len()] {
+            grads.push(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?);
+        }
+        let loss = outs[params.len()]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok((grads, loss))
+    }
+
+    /// Run one validation pass: `(params, x, y) → (correct, loss_sum)`.
+    pub fn run_eval(
+        &mut self,
+        model: &str,
+        variant: &str,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        let mm = self.model(model)?.clone();
+        let batch_size = mm.eval_batch;
+        let key = ExeKey {
+            model: model.into(),
+            kind: "eval".into(),
+            batch_size,
+            variant: variant.into(),
+        };
+        let inputs = self.marshal_inputs(&mm, params, x, y, batch_size)?;
+        let outs = self.execute(&key, &inputs)?;
+        let correct = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let loss = outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        Ok((correct, loss))
+    }
+
+    fn marshal_inputs(
+        &self,
+        mm: &ModelManifest,
+        params: &[Vec<f32>],
+        x: &[f32],
+        y: &[i32],
+        batch_size: usize,
+    ) -> Result<Vec<xla::Literal>> {
+        if x.len() != batch_size * mm.input_dim {
+            bail!(
+                "x has {} elements, want {}*{}",
+                x.len(),
+                batch_size,
+                mm.input_dim
+            );
+        }
+        if y.len() != batch_size {
+            bail!("y has {} labels, want {batch_size}", y.len());
+        }
+        let mut inputs = Vec::with_capacity(params.len() + 2);
+        for (p, shape) in params.iter().zip(&mm.param_shapes) {
+            let expect: usize = shape.iter().product();
+            if p.len() != expect {
+                bail!("param tensor size {} != shape {:?}", p.len(), shape);
+            }
+            let lit = xla::Literal::vec1(p);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            inputs.push(lit.reshape(&dims).map_err(|e| anyhow!("{e:?}"))?);
+        }
+        inputs.push(
+            xla::Literal::vec1(x)
+                .reshape(&[batch_size as i64, mm.input_dim as i64])
+                .map_err(|e| anyhow!("{e:?}"))?,
+        );
+        inputs.push(xla::Literal::vec1(y));
+        Ok(inputs)
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full end-to-end runtime tests live in rust/tests/integration_runtime.rs
+    // (they need `make artifacts`).  Here: manifest parsing only.
+
+    #[test]
+    fn manifest_parses_and_reports_sizes() {
+        let json = r#"{
+            "format": 1,
+            "models": {
+                "m": {
+                    "input_dim": 4, "hidden": [8], "classes": 3,
+                    "param_shapes": [[4,8],[8],[8,3],[3]],
+                    "eval_batch": 16,
+                    "artifacts": [
+                        {"kind":"grad","batch_size":4,"variant":"xla","file":"a.hlo.txt"},
+                        {"kind":"grad","batch_size":8,"variant":"xla","file":"b.hlo.txt"},
+                        {"kind":"eval","batch_size":16,"variant":"xla","file":"c.hlo.txt"}
+                    ]
+                }
+            }
+        }"#;
+        let m = Manifest::from_json_text(json).unwrap();
+        let mm = &m.models["m"];
+        assert_eq!(mm.num_params(), 4 * 8 + 8 + 8 * 3 + 3);
+        assert_eq!(mm.batch_sizes("xla"), vec![4, 8]);
+        assert_eq!(mm.batch_sizes("pallas"), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,262 @@
+//! Minimal Gaussian-process regression for the Bayesian-optimization
+//! searcher: Matérn-5/2 kernel, jittered Cholesky factorization, and
+//! posterior mean/variance prediction.  Self-contained (no BLAS).
+
+/// Dense symmetric positive-definite solver via Cholesky.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    /// Lower-triangular factor, row-major n×n.
+    l: Vec<f64>,
+    n: usize,
+}
+
+impl Cholesky {
+    /// Factor `a` (row-major n×n, SPD).  Adds `jitter` to the diagonal,
+    /// escalating ×10 until the factorization succeeds.
+    pub fn new(mut a: Vec<f64>, n: usize, mut jitter: f64) -> Option<Self> {
+        assert_eq!(a.len(), n * n);
+        for _attempt in 0..8 {
+            let mut l = a.clone();
+            if Self::factor_in_place(&mut l, n) {
+                return Some(Cholesky { l, n });
+            }
+            for i in 0..n {
+                a[i * n + i] += jitter;
+            }
+            jitter *= 10.0;
+        }
+        None
+    }
+
+    fn factor_in_place(l: &mut [f64], n: usize) -> bool {
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = l[i * n + j];
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return false;
+                    }
+                    l[i * n + j] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+            for j in (i + 1)..n {
+                l[i * n + j] = 0.0;
+            }
+        }
+        true
+    }
+
+    /// Solve `L y = b` (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[i * n + k] * y[k];
+            }
+            y[i] = s / self.l[i * n + i];
+        }
+        y
+    }
+
+    /// Solve `A x = b` via `L L^T x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let y = self.solve_lower(b);
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.l[k * n + i] * x[k];
+            }
+            x[i] = s / self.l[i * n + i];
+        }
+        x
+    }
+}
+
+/// Matérn-5/2 covariance with isotropic lengthscale.
+pub fn matern52(a: &[f64], b: &[f64], lengthscale: f64, signal_var: f64) -> f64 {
+    let mut d2 = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        d2 += d * d;
+    }
+    let r = d2.sqrt() / lengthscale;
+    let s5 = 5f64.sqrt();
+    signal_var * (1.0 + s5 * r + 5.0 * r * r / 3.0) * (-s5 * r).exp()
+}
+
+/// A fitted GP posterior over observations `(xs, ys)`.
+#[derive(Debug)]
+pub struct Gp {
+    xs: Vec<Vec<f64>>,
+    alpha: Vec<f64>,
+    chol: Cholesky,
+    lengthscale: f64,
+    signal_var: f64,
+    y_mean: f64,
+    y_std: f64,
+}
+
+impl Gp {
+    /// Fit with normalized targets and moment-matched hyperparameters
+    /// (fixed lengthscale heuristic — Spearmint would marginalize, but
+    /// for tunable search a robust fixed scale suffices).
+    pub fn fit(xs: Vec<Vec<f64>>, ys: &[f64], noise_var: f64) -> Option<Self> {
+        let n = xs.len();
+        if n == 0 {
+            return None;
+        }
+        let y_mean = ys.iter().sum::<f64>() / n as f64;
+        let var =
+            ys.iter().map(|y| (y - y_mean).powi(2)).sum::<f64>() / n as f64;
+        let y_std = var.sqrt().max(1e-12);
+        let ys_n: Vec<f64> = ys.iter().map(|y| (y - y_mean) / y_std).collect();
+        let dim = xs[0].len().max(1);
+        let lengthscale = 0.5 * (dim as f64).sqrt();
+        let signal_var = 1.0;
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i * n + j] = matern52(&xs[i], &xs[j], lengthscale, signal_var);
+                if i == j {
+                    k[i * n + j] += noise_var;
+                }
+            }
+        }
+        let chol = Cholesky::new(k, n, 1e-8)?;
+        let alpha = chol.solve(&ys_n);
+        Some(Gp {
+            xs,
+            alpha,
+            chol,
+            lengthscale,
+            signal_var,
+            y_mean,
+            y_std,
+        })
+    }
+
+    /// Posterior mean and variance at `x` (in original y units).
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let n = self.xs.len();
+        let kx: Vec<f64> = (0..n)
+            .map(|i| matern52(&self.xs[i], x, self.lengthscale, self.signal_var))
+            .collect();
+        let mean_n: f64 = kx.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
+        let v = self.chol.solve_lower(&kx);
+        let var_n = (self.signal_var - v.iter().map(|vi| vi * vi).sum::<f64>())
+            .max(1e-12);
+        (
+            mean_n * self.y_std + self.y_mean,
+            var_n * self.y_std * self.y_std,
+        )
+    }
+
+    /// Expected improvement over `best` (maximization).
+    pub fn expected_improvement(&self, x: &[f64], best: f64) -> f64 {
+        let (mu, var) = self.predict(x);
+        let sigma = var.sqrt();
+        if sigma < 1e-12 {
+            return (mu - best).max(0.0);
+        }
+        let z = (mu - best) / sigma;
+        let (pdf, cdf) = (norm_pdf(z), norm_cdf(z));
+        (mu - best) * cdf + sigma * pdf
+    }
+}
+
+fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Abramowitz–Stegun approximation of the standard normal CDF.
+pub fn norm_cdf(z: f64) -> f64 {
+    let t = 1.0 / (1.0 + 0.2316419 * z.abs());
+    let poly = t
+        * (0.319381530
+            + t * (-0.356563782
+                + t * (1.781477937 + t * (-1.821255978 + t * 1.330274429))));
+    let tail = norm_pdf(z.abs()) * poly;
+    if z >= 0.0 {
+        1.0 - tail
+    } else {
+        tail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_solves_identity() {
+        let chol = Cholesky::new(vec![1.0, 0.0, 0.0, 1.0], 2, 0.0).unwrap();
+        assert_eq!(chol.solve(&[3.0, -4.0]), vec![3.0, -4.0]);
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = [[4,2],[2,3]], b = [10, 9] => x = [1.5, 2]
+        let chol = Cholesky::new(vec![4.0, 2.0, 2.0, 3.0], 2, 0.0).unwrap();
+        let x = chol.solve(&[10.0, 9.0]);
+        assert!((x[0] - 1.5).abs() < 1e-10);
+        assert!((x[1] - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn cholesky_jitters_semidefinite() {
+        // Singular matrix: needs jitter to factor.
+        let a = vec![1.0, 1.0, 1.0, 1.0];
+        assert!(Cholesky::new(a, 2, 1e-9).is_some());
+    }
+
+    #[test]
+    fn matern_is_one_at_zero_distance_and_decays() {
+        let k0 = matern52(&[0.5, 0.5], &[0.5, 0.5], 0.3, 1.0);
+        let k1 = matern52(&[0.0, 0.0], &[1.0, 1.0], 0.3, 1.0);
+        assert!((k0 - 1.0).abs() < 1e-12);
+        assert!(k1 < 0.1 && k1 > 0.0);
+    }
+
+    #[test]
+    fn gp_interpolates_observations() {
+        let xs = vec![vec![0.0], vec![0.5], vec![1.0]];
+        let ys = [0.0, 1.0, 0.0];
+        let gp = Gp::fit(xs, &ys, 1e-6).unwrap();
+        for (x, y) in [(0.0, 0.0), (0.5, 1.0), (1.0, 0.0)] {
+            let (mu, _) = gp.predict(&[x]);
+            assert!((mu - y).abs() < 0.05, "gp({x})={mu}, want {y}");
+        }
+        // uncertainty is larger away from data
+        let (_, var_at) = gp.predict(&[0.5]);
+        let (_, var_off) = gp.predict(&[0.25]);
+        assert!(var_off > var_at);
+    }
+
+    #[test]
+    fn ei_prefers_unexplored_promising_regions() {
+        let xs = vec![vec![0.0], vec![1.0]];
+        let ys = [0.0, 0.8];
+        let gp = Gp::fit(xs, &ys, 1e-6).unwrap();
+        // near the best observation, EI should beat the worst corner
+        let ei_good = gp.expected_improvement(&[0.9], 0.8);
+        let ei_bad = gp.expected_improvement(&[0.0], 0.8);
+        assert!(ei_good > ei_bad);
+    }
+
+    #[test]
+    fn norm_cdf_sanity() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!(norm_cdf(3.0) > 0.99);
+        assert!(norm_cdf(-3.0) < 0.01);
+        assert!((norm_cdf(1.0) - 0.8413).abs() < 1e-3);
+    }
+}

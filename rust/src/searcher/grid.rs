@@ -1,0 +1,97 @@
+//! GridSearcher: discretizes the continuous search space into a grid
+//! and proposes each grid point in turn (§4.3).  Works surprisingly
+//! well for low-dimensional cases (e.g. a single tunable); exhausts.
+
+use super::{Proposal, Searcher};
+
+#[derive(Debug)]
+pub struct GridSearcher {
+    dim: usize,
+    points_per_dim: usize,
+    next: usize,
+    total: usize,
+    observations: Vec<(Vec<f64>, f64)>,
+}
+
+impl GridSearcher {
+    pub fn new(dim: usize, points_per_dim: usize) -> Self {
+        assert!(points_per_dim >= 1);
+        GridSearcher {
+            dim,
+            points_per_dim,
+            next: 0,
+            total: points_per_dim.pow(dim as u32),
+            observations: Vec::new(),
+        }
+    }
+
+    /// Grid coordinate for index `i` along one dimension: bucket centers
+    /// so that discrete tunables decode onto distinct values.
+    fn coord(&self, i: usize) -> f64 {
+        (i as f64 + 0.5) / self.points_per_dim as f64
+    }
+}
+
+impl Searcher for GridSearcher {
+    fn propose(&mut self) -> Proposal {
+        if self.next >= self.total {
+            return Proposal::Exhausted;
+        }
+        let mut idx = self.next;
+        self.next += 1;
+        let mut point = Vec::with_capacity(self.dim);
+        for _ in 0..self.dim {
+            point.push(self.coord(idx % self.points_per_dim));
+            idx /= self.points_per_dim;
+        }
+        Proposal::Point(point)
+    }
+
+    fn observe(&mut self, point: Vec<f64>, speed: f64) {
+        self.observations.push((point, speed));
+    }
+
+    fn observations(&self) -> &[(Vec<f64>, f64)] {
+        &self.observations
+    }
+
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumerates_full_grid_then_exhausts() {
+        let mut s = GridSearcher::new(2, 3);
+        let mut seen = std::collections::BTreeSet::new();
+        loop {
+            match s.propose() {
+                Proposal::Exhausted => break,
+                Proposal::Point(p) => {
+                    seen.insert(
+                        p.iter()
+                            .map(|u| format!("{u:.3}"))
+                            .collect::<Vec<_>>()
+                            .join(","),
+                    );
+                }
+            }
+        }
+        assert_eq!(seen.len(), 9);
+        assert_eq!(s.propose(), Proposal::Exhausted);
+    }
+
+    #[test]
+    fn one_dim_grid_is_bucket_centers() {
+        let mut s = GridSearcher::new(1, 4);
+        let mut pts = Vec::new();
+        while let Proposal::Point(p) = s.propose() {
+            pts.push(p[0]);
+        }
+        assert_eq!(pts, vec![0.125, 0.375, 0.625, 0.875]);
+    }
+}

@@ -1,0 +1,176 @@
+//! Tunable searchers (§4.3): black-box optimizers proposing unit-cube
+//! points; the observed objective is the (noise-penalized) convergence
+//! speed from the progress summarizer.
+//!
+//! Implemented searchers, as in the paper: [`RandomSearcher`],
+//! [`GridSearcher`], [`BayesianOptSearcher`] (Spearmint-style GP +
+//! expected improvement) and [`TpeSearcher`] (the HyperOpt algorithm —
+//! MLtuner's default).  The stopping condition is the paper's
+//! rule-of-thumb: stop when the top five best non-zero convergence
+//! speeds differ by less than 10%.
+
+pub mod bayesian;
+pub mod gp;
+pub mod grid;
+pub mod random;
+pub mod tpe;
+
+pub use bayesian::BayesianOptSearcher;
+pub use grid::GridSearcher;
+pub use random::RandomSearcher;
+pub use tpe::TpeSearcher;
+
+/// A searcher proposal.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Proposal {
+    /// Try this unit-cube point next.
+    Point(Vec<f64>),
+    /// The search space is exhausted (GridSearcher only).
+    Exhausted,
+}
+
+/// Black-box tunable searcher over the unit cube `[0,1]^d`.
+pub trait Searcher: Send {
+    /// Propose the next point to evaluate.
+    fn propose(&mut self) -> Proposal;
+    /// Report the convergence speed achieved by a proposed point
+    /// (0.0 for diverged/unstable settings).
+    fn observe(&mut self, point: Vec<f64>, speed: f64);
+    /// All observations so far (point, speed).
+    fn observations(&self) -> &[(Vec<f64>, f64)];
+    fn name(&self) -> &'static str;
+}
+
+/// Which searcher to instantiate (config-file selectable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SearcherKind {
+    Random,
+    Grid,
+    BayesianOpt,
+    /// HyperOpt/TPE — the paper's default searcher.
+    #[default]
+    HyperOpt,
+}
+
+impl SearcherKind {
+    pub fn build(self, dim: usize, seed: u64) -> Box<dyn Searcher> {
+        match self {
+            SearcherKind::Random => Box::new(RandomSearcher::new(dim, seed)),
+            SearcherKind::Grid => Box::new(GridSearcher::new(dim, 5)),
+            SearcherKind::BayesianOpt => {
+                Box::new(BayesianOptSearcher::new(dim, seed))
+            }
+            SearcherKind::HyperOpt => Box::new(TpeSearcher::new(dim, seed)),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "random" => Some(SearcherKind::Random),
+            "grid" => Some(SearcherKind::Grid),
+            "bayesian_opt" | "bayesian" | "spearmint" => {
+                Some(SearcherKind::BayesianOpt)
+            }
+            "hyperopt" | "tpe" => Some(SearcherKind::HyperOpt),
+            _ => None,
+        }
+    }
+}
+
+/// The paper's stopping condition: stop searching when the top five
+/// best **non-zero** convergence speeds differ by less than 10%.
+#[derive(Debug, Clone, Copy)]
+pub struct StoppingCondition {
+    pub top_n: usize,
+    pub rel_tolerance: f64,
+}
+
+impl Default for StoppingCondition {
+    fn default() -> Self {
+        StoppingCondition {
+            top_n: 5,
+            rel_tolerance: 0.10,
+        }
+    }
+}
+
+impl StoppingCondition {
+    pub fn should_stop(&self, observations: &[(Vec<f64>, f64)]) -> bool {
+        let mut speeds: Vec<f64> = observations
+            .iter()
+            .map(|(_, s)| *s)
+            .filter(|s| *s > 0.0)
+            .collect();
+        if speeds.len() < self.top_n {
+            return false;
+        }
+        speeds.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let top = &speeds[..self.top_n];
+        let best = top[0];
+        let worst = top[self.top_n - 1];
+        (best - worst) / best < self.rel_tolerance
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(speeds: &[f64]) -> Vec<(Vec<f64>, f64)> {
+        speeds.iter().map(|&s| (vec![0.5], s)).collect()
+    }
+
+    #[test]
+    fn stopping_needs_five_nonzero() {
+        let c = StoppingCondition::default();
+        assert!(!c.should_stop(&obs(&[1.0, 1.0, 1.0, 1.0])));
+        assert!(!c.should_stop(&obs(&[1.0, 1.0, 1.0, 1.0, 0.0])));
+        assert!(c.should_stop(&obs(&[1.0, 1.0, 1.0, 1.0, 1.0])));
+    }
+
+    #[test]
+    fn stopping_tolerance_boundary() {
+        let c = StoppingCondition::default();
+        // spread clearly above 10% => keep searching
+        assert!(!c.should_stop(&obs(&[1.0, 1.0, 1.0, 1.0, 0.88])));
+        assert!(c.should_stop(&obs(&[1.0, 1.0, 1.0, 1.0, 0.91])));
+        // worse tails beyond the top-5 don't matter
+        assert!(c.should_stop(&obs(&[1.0, 0.99, 0.98, 0.97, 0.96, 0.1, 0.0])));
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(SearcherKind::parse("hyperopt"), Some(SearcherKind::HyperOpt));
+        assert_eq!(SearcherKind::parse("spearmint"), Some(SearcherKind::BayesianOpt));
+        assert_eq!(SearcherKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_searchers_propose_in_unit_cube() {
+        for kind in [
+            SearcherKind::Random,
+            SearcherKind::Grid,
+            SearcherKind::BayesianOpt,
+            SearcherKind::HyperOpt,
+        ] {
+            let mut s = kind.build(3, 7);
+            for i in 0..30 {
+                match s.propose() {
+                    Proposal::Exhausted => break,
+                    Proposal::Point(p) => {
+                        assert_eq!(p.len(), 3);
+                        assert!(
+                            p.iter().all(|&u| (0.0..=1.0).contains(&u)),
+                            "{:?} out of cube: {p:?}",
+                            s.name()
+                        );
+                        // feed back a synthetic objective
+                        let speed = 1.0 - (p[0] - 0.3).abs();
+                        s.observe(p, speed + 0.01 * i as f64);
+                    }
+                }
+            }
+            assert!(!s.observations().is_empty(), "{}", s.name());
+        }
+    }
+}

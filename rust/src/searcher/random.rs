@@ -1,0 +1,69 @@
+//! RandomSearcher: uniform samples from the search space, ignoring the
+//! convergence speeds of previous trials (§4.3).
+
+use crate::util::rng::Rng;
+
+use super::{Proposal, Searcher};
+
+#[derive(Debug)]
+pub struct RandomSearcher {
+    dim: usize,
+    rng: Rng,
+    observations: Vec<(Vec<f64>, f64)>,
+}
+
+impl RandomSearcher {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        RandomSearcher {
+            dim,
+            rng: Rng::seed_from_u64(seed),
+            observations: Vec::new(),
+        }
+    }
+}
+
+impl Searcher for RandomSearcher {
+    fn propose(&mut self) -> Proposal {
+        Proposal::Point((0..self.dim).map(|_| self.rng.gen_f64()).collect())
+    }
+
+    fn observe(&mut self, point: Vec<f64>, speed: f64) {
+        self.observations.push((point, speed));
+    }
+
+    fn observations(&self) -> &[(Vec<f64>, f64)] {
+        &self.observations
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p1 = RandomSearcher::new(4, 1).propose();
+        let p2 = RandomSearcher::new(4, 1).propose();
+        let p3 = RandomSearcher::new(4, 2).propose();
+        assert_eq!(p1, p2);
+        assert_ne!(p1, p3);
+    }
+
+    #[test]
+    fn covers_the_cube() {
+        let mut s = RandomSearcher::new(1, 0);
+        let mut lo = 1.0f64;
+        let mut hi = 0.0f64;
+        for _ in 0..200 {
+            if let Proposal::Point(p) = s.propose() {
+                lo = lo.min(p[0]);
+                hi = hi.max(p[0]);
+            }
+        }
+        assert!(lo < 0.1 && hi > 0.9);
+    }
+}

@@ -1,0 +1,188 @@
+//! TpeSearcher: the HyperOpt algorithm (Tree-structured Parzen
+//! Estimator, Bergstra et al.) — MLtuner's default searcher (§4.3).
+//!
+//! Observations are split by convergence speed into a "good" set (top
+//! γ quantile) and a "bad" set.  Each dimension gets two 1-D Parzen
+//! mixtures, `l(x)` over good points and `g(x)` over bad points;
+//! candidates are sampled from `l` and the one maximizing `l(x)/g(x)`
+//! is proposed.
+
+use crate::util::rng::Rng;
+
+use super::{Proposal, Searcher};
+
+const N_STARTUP_MIN: usize = 10;
+const N_CANDIDATES: usize = 24;
+const GAMMA: f64 = 0.25;
+
+#[derive(Debug)]
+pub struct TpeSearcher {
+    dim: usize,
+    rng: Rng,
+    observations: Vec<(Vec<f64>, f64)>,
+    /// Random warm-up trials before the Parzen model kicks in; scales
+    /// with dimensionality (as HyperOpt's startup budget effectively
+    /// does) — this is what makes tuning cost grow with the number of
+    /// tunables (Fig. 11).
+    n_startup: usize,
+}
+
+impl TpeSearcher {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        TpeSearcher {
+            dim,
+            rng: Rng::seed_from_u64(seed),
+            observations: Vec::new(),
+            n_startup: N_STARTUP_MIN.max(2 * dim + 2),
+        }
+    }
+
+    fn random_point(&mut self) -> Vec<f64> {
+        (0..self.dim).map(|_| self.rng.gen_f64()).collect()
+    }
+
+    /// Split observed points into (good, bad) by the γ quantile of speed.
+    fn split(&self) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        let mut idx: Vec<usize> = (0..self.observations.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.observations[b]
+                .1
+                .partial_cmp(&self.observations[a].1)
+                .unwrap()
+        });
+        let n_good = ((GAMMA * idx.len() as f64).ceil() as usize)
+            .clamp(1, idx.len().saturating_sub(1).max(1));
+        let good = idx[..n_good]
+            .iter()
+            .map(|&i| self.observations[i].0.clone())
+            .collect();
+        let bad = idx[n_good..]
+            .iter()
+            .map(|&i| self.observations[i].0.clone())
+            .collect();
+        (good, bad)
+    }
+}
+
+/// Parzen mixture density at `x` over 1-D centers with bandwidth `bw`,
+/// plus a uniform smoothing component (keeps g(x) > 0 everywhere).
+fn parzen_density(x: f64, centers: &[f64], bw: f64) -> f64 {
+    let uniform = 1.0; // density of U[0,1]
+    if centers.is_empty() {
+        return uniform;
+    }
+    let norm = 1.0 / ((2.0 * std::f64::consts::PI).sqrt() * bw);
+    let mut acc = 0.0;
+    for &c in centers {
+        let z = (x - c) / bw;
+        acc += norm * (-0.5 * z * z).exp();
+    }
+    // mixture: points + one uniform pseudo-component
+    (acc + uniform) / (centers.len() as f64 + 1.0)
+}
+
+fn bandwidth(n: usize) -> f64 {
+    // Scott-style shrinking bandwidth on the unit interval.
+    (1.0 / (n as f64 + 1.0)).max(0.08)
+}
+
+impl Searcher for TpeSearcher {
+    fn propose(&mut self) -> Proposal {
+        if self.observations.len() < self.n_startup {
+            return Proposal::Point(self.random_point());
+        }
+        let (good, bad) = self.split();
+        let bw_good = bandwidth(good.len());
+        let bw_bad = bandwidth(bad.len());
+        let mut best: Option<(Vec<f64>, f64)> = None;
+        for _ in 0..N_CANDIDATES {
+            // sample each dim from l(x): pick a good center, jitter.
+            let mut cand = Vec::with_capacity(self.dim);
+            for d in 0..self.dim {
+                let c = good[self.rng.gen_range(0, good.len())][d];
+                let mut v = self.rng.gen_normal_with(c, bw_good);
+                if !(0.0..=1.0).contains(&v) {
+                    v = self.rng.gen_f64();
+                }
+                cand.push(v);
+            }
+            // score = sum_d log l_d(x) - log g_d(x)
+            let mut score = 0.0;
+            for d in 0..self.dim {
+                let centers_g: Vec<f64> = good.iter().map(|p| p[d]).collect();
+                let centers_b: Vec<f64> = bad.iter().map(|p| p[d]).collect();
+                let l = parzen_density(cand[d], &centers_g, bw_good);
+                let g = parzen_density(cand[d], &centers_b, bw_bad);
+                score += l.ln() - g.ln();
+            }
+            if best.as_ref().map_or(true, |(_, s)| score > *s) {
+                best = Some((cand, score));
+            }
+        }
+        Proposal::Point(best.unwrap().0)
+    }
+
+    fn observe(&mut self, point: Vec<f64>, speed: f64) {
+        self.observations.push((point, speed));
+    }
+
+    fn observations(&self) -> &[(Vec<f64>, f64)] {
+        &self.observations
+    }
+
+    fn name(&self) -> &'static str {
+        "hyperopt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn startup_is_random_then_model_based() {
+        let mut s = TpeSearcher::new(2, 3);
+        let n0 = s.n_startup;
+        for i in 0..n0 {
+            if let Proposal::Point(p) = s.propose() {
+                s.observe(p, i as f64);
+            }
+        }
+        // after startup it still proposes valid points
+        match s.propose() {
+            Proposal::Point(p) => {
+                assert_eq!(p.len(), 2);
+                assert!(p.iter().all(|&u| (0.0..=1.0).contains(&u)));
+            }
+            Proposal::Exhausted => panic!("TPE never exhausts"),
+        }
+    }
+
+    #[test]
+    fn concentrates_near_good_region() {
+        let mut s = TpeSearcher::new(1, 11);
+        let f = |x: f64| (-(x - 0.2f64).powi(2) * 50.0).exp();
+        for _ in 0..40 {
+            if let Proposal::Point(p) = s.propose() {
+                let y = f(p[0]);
+                s.observe(p, y);
+            }
+        }
+        // late proposals should cluster near 0.2
+        let late: Vec<f64> = s.observations()[30..]
+            .iter()
+            .map(|(p, _)| p[0])
+            .collect();
+        let near = late.iter().filter(|&&x| (x - 0.2).abs() < 0.25).count();
+        assert!(
+            near * 2 >= late.len(),
+            "late proposals not concentrated: {late:?}"
+        );
+    }
+
+    #[test]
+    fn parzen_density_positive_everywhere() {
+        assert!(parzen_density(0.9, &[], 0.1) > 0.0);
+        assert!(parzen_density(0.0, &[1.0], 0.05) > 0.0);
+    }
+}

@@ -1,0 +1,315 @@
+//! Progress summarizer (§4.1): turn a noisy per-clock progress trace
+//! into a conservative convergence-speed estimate and a stability label.
+//!
+//! The trace `{(t_i, x_i)}` is down-sampled into `K` non-overlapping
+//! windows (window value = mean of its points); the noisiness is the
+//! maximum upward jump between consecutive down-sampled points; the
+//! speed is penalized by that noise:
+//!
+//! ```text
+//! noise(x̃)  = max(max_i (x̃_{i+1} - x̃_i), 0)
+//! speed     = max((-range(x̃) - noise(x̃)) / range(t̃), 0)
+//! ```
+//!
+//! Labels: **converging** if `range(x̃) < 0` and
+//! `noise(x̃) < ε·|range(x̃)|`; **diverged** if the trace contains
+//! numerically-overflowed values; otherwise **unstable** (needs a longer
+//! trial).  Defaults `K = 10` (white-noise false-positive < 0.1%) and
+//! `ε = 1/K` are the paper's and need no user tuning.
+
+/// One progress observation: (timestamp seconds, progress value).
+/// For SGD apps the progress value is the per-clock training loss.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProgressPoint {
+    pub t: f64,
+    pub x: f64,
+}
+
+/// Stability label assigned to a trial branch (§4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchLabel {
+    /// Stable converging progress; its speed is trustworthy.
+    Converging,
+    /// Numerically overflowed (NaN/inf loss).  Speed is reported as 0
+    /// and all diverged branches are treated as equally bad.
+    Diverged,
+    /// Neither: the speed estimate needs a longer trial to stabilize.
+    Unstable,
+}
+
+/// Output of [`ProgressSummarizer::summarize`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub label: BranchLabel,
+    /// Conservative (noise-penalized) convergence speed, ≥ 0.
+    pub speed: f64,
+    /// `x̃_K - x̃_1` of the down-sampled trace (negative when improving).
+    pub range_x: f64,
+    /// Maximum upward jump between consecutive down-sampled points.
+    pub noise: f64,
+    /// The down-sampled trace itself (for logging / debugging).
+    pub downsampled: Vec<ProgressPoint>,
+}
+
+impl Summary {
+    fn diverged() -> Self {
+        Summary {
+            label: BranchLabel::Diverged,
+            speed: 0.0,
+            range_x: f64::INFINITY,
+            noise: f64::INFINITY,
+            downsampled: Vec::new(),
+        }
+    }
+}
+
+/// The summarizer module.  `K` and `ε` are fixed by the paper's analysis
+/// (§4.1 "Deciding number of samples and stability threshold") — users
+/// never tune them.
+#[derive(Debug, Clone)]
+pub struct ProgressSummarizer {
+    /// Number of down-sampling windows (paper: 10).
+    pub k: usize,
+    /// Stability threshold (paper: 1/K).
+    pub epsilon: f64,
+}
+
+impl Default for ProgressSummarizer {
+    fn default() -> Self {
+        let k = 10;
+        ProgressSummarizer {
+            k,
+            epsilon: 1.0 / k as f64,
+        }
+    }
+}
+
+impl ProgressSummarizer {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 2, "need at least 2 windows");
+        ProgressSummarizer {
+            k,
+            epsilon: 1.0 / k as f64,
+        }
+    }
+
+    /// Down-sample `trace` into at most `self.k` windows by uniform
+    /// division; each window's value is the mean of its points.
+    pub fn downsample(&self, trace: &[ProgressPoint]) -> Vec<ProgressPoint> {
+        if trace.is_empty() {
+            return Vec::new();
+        }
+        let k = self.k.min(trace.len());
+        let n = trace.len();
+        let mut out = Vec::with_capacity(k);
+        for w in 0..k {
+            let lo = w * n / k;
+            let hi = ((w + 1) * n / k).max(lo + 1);
+            let slice = &trace[lo..hi];
+            let inv = 1.0 / slice.len() as f64;
+            let (mut st, mut sx) = (0.0, 0.0);
+            for p in slice {
+                st += p.t;
+                sx += p.x;
+            }
+            out.push(ProgressPoint {
+                t: st * inv,
+                x: sx * inv,
+            });
+        }
+        out
+    }
+
+    /// Summarize a trial branch's progress trace (§4.1).
+    pub fn summarize(&self, trace: &[ProgressPoint]) -> Summary {
+        // Divergence: numerically overflowed numbers anywhere in the trace.
+        if trace.iter().any(|p| !p.x.is_finite()) {
+            return Summary::diverged();
+        }
+        let ds = self.downsample(trace);
+        // The K-window false-positive analysis (§4.1) needs K actual
+        // windows: traces shorter than K points can never be labelled
+        // Converging (a 3-point monotone run is 12.5% likely by chance).
+        let enough_points = trace.len() >= self.k;
+        if ds.len() < 2 {
+            return Summary {
+                label: BranchLabel::Unstable,
+                speed: 0.0,
+                range_x: 0.0,
+                noise: 0.0,
+                downsampled: ds,
+            };
+        }
+        let range_x = ds[ds.len() - 1].x - ds[0].x;
+        let range_t = ds[ds.len() - 1].t - ds[0].t;
+        let noise = ds
+            .windows(2)
+            .map(|w| w[1].x - w[0].x)
+            .fold(0.0f64, f64::max)
+            .max(0.0);
+        let speed = if range_t > 0.0 {
+            ((-range_x - noise) / range_t).max(0.0)
+        } else {
+            0.0
+        };
+        let label = if enough_points
+            && range_x < 0.0
+            && noise < self.epsilon * range_x.abs()
+        {
+            BranchLabel::Converging
+        } else {
+            BranchLabel::Unstable
+        };
+        Summary {
+            label,
+            speed,
+            range_x,
+            noise,
+            downsampled: ds,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(xs: &[f64]) -> Vec<ProgressPoint> {
+        xs.iter()
+            .enumerate()
+            .map(|(i, &x)| ProgressPoint { t: i as f64, x })
+            .collect()
+    }
+
+    #[test]
+    fn clean_descent_is_converging() {
+        let s = ProgressSummarizer::default();
+        let tr = trace(&(0..100).map(|i| 10.0 - 0.05 * i as f64).collect::<Vec<_>>());
+        let sum = s.summarize(&tr);
+        assert_eq!(sum.label, BranchLabel::Converging);
+        // slope ≈ 0.05/clock, zero noise
+        assert!(sum.noise == 0.0);
+        assert!((sum.speed - 0.05).abs() < 5e-3, "speed={}", sum.speed);
+    }
+
+    #[test]
+    fn flat_trace_is_unstable_not_converging() {
+        let s = ProgressSummarizer::default();
+        let sum = s.summarize(&trace(&[5.0; 50]));
+        assert_eq!(sum.label, BranchLabel::Unstable);
+        assert_eq!(sum.speed, 0.0);
+    }
+
+    #[test]
+    fn nan_or_inf_is_diverged_with_zero_speed() {
+        let s = ProgressSummarizer::default();
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut tr = trace(&[3.0, 2.0, 1.5]);
+            tr.push(ProgressPoint { t: 3.0, x: bad });
+            let sum = s.summarize(&tr);
+            assert_eq!(sum.label, BranchLabel::Diverged);
+            assert_eq!(sum.speed, 0.0);
+        }
+    }
+
+    #[test]
+    fn diverged_branches_are_equal_quality() {
+        // §4.1: a diverged branch with smaller loss is NOT better.
+        let s = ProgressSummarizer::default();
+        let a = s.summarize(&trace(&[1.0, 2.0, f64::INFINITY]));
+        let b = s.summarize(&trace(&[1.0, 2e30, f64::INFINITY]));
+        assert_eq!(a.speed, b.speed);
+        assert_eq!(a.label, b.label);
+    }
+
+    #[test]
+    fn noise_penalty_reduces_speed() {
+        let s = ProgressSummarizer::new(5);
+        // Strictly decreasing trace vs same trend with one upward jump.
+        let clean = trace(&[10.0, 8.0, 6.0, 4.0, 2.0]);
+        let jumpy = trace(&[10.0, 8.0, 9.0, 4.0, 2.0]);
+        let sc = s.summarize(&clean);
+        let sj = s.summarize(&jumpy);
+        assert!(sj.speed < sc.speed);
+        assert!(sj.noise > 0.0);
+    }
+
+    #[test]
+    fn jumpy_trace_is_unstable() {
+        let s = ProgressSummarizer::new(5);
+        // ends lower but with a big upward excursion (> ε·|range|)
+        let sum = s.summarize(&trace(&[10.0, 4.0, 9.0, 5.0, 8.0]));
+        assert_eq!(sum.label, BranchLabel::Unstable);
+    }
+
+    #[test]
+    fn increasing_trace_has_zero_speed() {
+        let s = ProgressSummarizer::default();
+        let sum = s.summarize(&trace(&(0..50).map(|i| i as f64).collect::<Vec<_>>()));
+        assert_eq!(sum.speed, 0.0);
+        assert_eq!(sum.label, BranchLabel::Unstable);
+    }
+
+    #[test]
+    fn downsample_window_counts_and_means() {
+        let s = ProgressSummarizer::new(2);
+        let tr = trace(&[1.0, 3.0, 5.0, 7.0]);
+        let ds = s.downsample(&tr);
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0].x, 2.0);
+        assert_eq!(ds[1].x, 6.0);
+    }
+
+    #[test]
+    fn downsample_short_trace_keeps_points() {
+        let s = ProgressSummarizer::default();
+        let tr = trace(&[4.0, 3.0, 2.0]);
+        assert_eq!(s.downsample(&tr).len(), 3);
+        assert_eq!(s.downsample(&[]).len(), 0);
+    }
+
+    #[test]
+    fn longer_trial_stabilizes_noisy_converging_trace() {
+        // §4.2's premise: with more points per window, noise averages
+        // out and a genuinely-converging branch becomes Converging.
+        let s = ProgressSummarizer::default();
+        let noisy = |n: usize| -> Vec<ProgressPoint> {
+            (0..n)
+                .map(|i| {
+                    let base = 10.0 - 8.0 * (i as f64) / (n as f64);
+                    // deterministic "noise", ±2.0 (dominates the
+                    // per-point trend on the short trace)
+                    let jitter = if i % 2 == 0 { 2.0 } else { -2.0 };
+                    ProgressPoint {
+                        t: i as f64,
+                        x: base + jitter,
+                    }
+                })
+                .collect()
+        };
+        let short = s.summarize(&noisy(10));
+        let long = s.summarize(&noisy(400));
+        assert_eq!(short.label, BranchLabel::Unstable);
+        assert_eq!(long.label, BranchLabel::Converging);
+    }
+
+    #[test]
+    fn speed_is_time_scale_aware() {
+        let s = ProgressSummarizer::default();
+        let slow: Vec<_> = (0..100)
+            .map(|i| ProgressPoint {
+                t: 10.0 * i as f64,
+                x: 10.0 - 0.05 * i as f64,
+            })
+            .collect();
+        let fast: Vec<_> = (0..100)
+            .map(|i| ProgressPoint {
+                t: i as f64,
+                x: 10.0 - 0.05 * i as f64,
+            })
+            .collect();
+        let ss = s.summarize(&slow);
+        let sf = s.summarize(&fast);
+        assert!((sf.speed / ss.speed - 10.0).abs() < 1e-6);
+    }
+}

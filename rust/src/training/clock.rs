@@ -1,0 +1,126 @@
+//! SSP (stale synchronous parallel) clock manager (§2.2).
+//!
+//! Tracks per-worker clocks for data-parallel training.  Under a
+//! staleness bound `s`, a worker at clock `c` may proceed only if every
+//! other worker has reached at least `c - s`; equivalently, worker
+//! clocks never spread more than `s` apart.  `s = 0` is BSP (bulk
+//! synchronous); larger `s` lets fast workers run ahead, trading
+//! parameter freshness for pipeline efficiency — the data-staleness
+//! tunable of Table 3.
+
+use crate::comm::Clock;
+
+#[derive(Debug, Clone)]
+pub struct SspClock {
+    worker_clocks: Vec<Clock>,
+    staleness: u32,
+}
+
+impl SspClock {
+    pub fn new(num_workers: usize, staleness: u32) -> Self {
+        assert!(num_workers > 0);
+        SspClock {
+            worker_clocks: vec![0; num_workers],
+            staleness,
+        }
+    }
+
+    pub fn staleness(&self) -> u32 {
+        self.staleness
+    }
+
+    pub fn set_staleness(&mut self, staleness: u32) {
+        self.staleness = staleness;
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.worker_clocks.len()
+    }
+
+    /// Slowest worker's clock — the globally-visible "stable" clock.
+    pub fn min_clock(&self) -> Clock {
+        *self.worker_clocks.iter().min().unwrap()
+    }
+
+    pub fn worker_clock(&self, w: usize) -> Clock {
+        self.worker_clocks[w]
+    }
+
+    /// May worker `w` start its next clock without violating the bound?
+    pub fn can_advance(&self, w: usize) -> bool {
+        self.worker_clocks[w] < self.min_clock() + self.staleness as Clock + 1
+    }
+
+    /// Worker `w` finished one clock of work.
+    pub fn advance(&mut self, w: usize) {
+        debug_assert!(self.can_advance(w), "SSP bound violated by worker {w}");
+        self.worker_clocks[w] += 1;
+    }
+
+    /// Reset all workers to clock 0 (branch switch).
+    pub fn reset(&mut self) {
+        self.worker_clocks.iter_mut().for_each(|c| *c = 0);
+    }
+
+    /// Maximum clock spread currently in the system.
+    pub fn spread(&self) -> Clock {
+        let max = *self.worker_clocks.iter().max().unwrap();
+        max - self.min_clock()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bsp_locksteps_workers() {
+        let mut c = SspClock::new(2, 0);
+        assert!(c.can_advance(0));
+        c.advance(0);
+        // worker 0 must now wait for worker 1
+        assert!(!c.can_advance(0));
+        assert!(c.can_advance(1));
+        c.advance(1);
+        assert!(c.can_advance(0));
+    }
+
+    #[test]
+    fn staleness_allows_bounded_runahead() {
+        let mut c = SspClock::new(2, 3);
+        for _ in 0..4 {
+            assert!(c.can_advance(0));
+            c.advance(0);
+        }
+        // 4 ahead of worker 1's clock 0 => blocked (bound is 3)
+        assert!(!c.can_advance(0));
+        assert_eq!(c.spread(), 4);
+        c.advance(1);
+        assert!(c.can_advance(0));
+    }
+
+    #[test]
+    fn spread_never_exceeds_bound_plus_one() {
+        // greedy scheduler: always advance the first advanceable worker
+        let mut c = SspClock::new(4, 2);
+        for _ in 0..100 {
+            for w in 0..4 {
+                if c.can_advance(w) {
+                    c.advance(w);
+                    break;
+                }
+            }
+            assert!(c.spread() <= 3);
+        }
+    }
+
+    #[test]
+    fn reset_returns_to_zero() {
+        let mut c = SspClock::new(2, 1);
+        c.advance(0);
+        c.advance(1);
+        c.reset();
+        assert_eq!(c.min_clock(), 0);
+        assert_eq!(c.spread(), 0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Training-system abstraction (§4.5) and the data-parallel machinery
+//! shared by the real apps (§4.6).
+//!
+//! A [`TrainingSystem`] is anything MLtuner can drive with Table-1
+//! branch operations: fork a branch from a consistent snapshot, free a
+//! branch, schedule a branch for one clock and get back its progress
+//! report.  Three implementations ship with this crate:
+//!
+//! * [`crate::apps::sim::SimSystem`] — calibrated analytic convergence
+//!   model (regenerates the paper's figures in seconds),
+//! * [`crate::apps::dnn::DnnSystem`] — the real three-layer stack:
+//!   PJRT-executed JAX/Pallas artifacts over the parameter server,
+//! * [`crate::apps::mf::MfSystem`] — native matrix-factorization SGD
+//!   with AdaRevision (the paper's CPU app).
+
+pub mod clock;
+
+use anyhow::Result;
+
+use crate::comm::{BranchId, BranchType, Clock, ProtocolChecker, TunerMsg};
+use crate::tunable::TunableSetting;
+
+/// One clock's progress report: `value` is the aggregated training loss
+/// (or validation accuracy for Testing branches); `time` is the elapsed
+/// seconds of this clock — wall time for the real apps, virtual time
+/// for the simulator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Progress {
+    pub value: f64,
+    pub time: f64,
+}
+
+/// The training-system side of the Table-1 message interface.
+///
+/// Branch 0 is the root: the pristine initial training state, created
+/// at system construction and never scheduled directly.
+pub trait TrainingSystem {
+    /// Fork `branch_id` from `parent` (None = root) with `tunable`.
+    fn fork_branch(
+        &mut self,
+        clock: Clock,
+        branch_id: BranchId,
+        parent: Option<BranchId>,
+        tunable: &TunableSetting,
+        branch_type: BranchType,
+    ) -> Result<()>;
+
+    /// Free `branch_id`, reclaiming its resources.
+    fn free_branch(&mut self, clock: Clock, branch_id: BranchId) -> Result<()>;
+
+    /// Run `branch_id` for one clock; returns its progress report.
+    fn schedule_branch(
+        &mut self,
+        clock: Clock,
+        branch_id: BranchId,
+    ) -> Result<Progress>;
+
+    /// Clocks per epoch for this branch (depends on its batch size).
+    fn clocks_per_epoch(&self, branch_id: BranchId) -> u64;
+
+    /// Update a *running* branch's tunable setting in place.  Not part
+    /// of the paper's MLtuner interface — used only by the manual
+    /// LR-decay baseline drivers of Fig. 8.
+    fn update_tunable(
+        &mut self,
+        _branch_id: BranchId,
+        _tunable: &TunableSetting,
+    ) -> Result<()> {
+        anyhow::bail!("this training system does not support update_tunable")
+    }
+
+    /// Human-readable system name (logging).
+    fn system_name(&self) -> &'static str {
+        "training-system"
+    }
+}
+
+/// Message-level driver: validates the §4.5 protocol (clock order, one
+/// schedule per clock) before dispatching to the [`TrainingSystem`].
+/// MLtuner and the baselines drive systems exclusively through this.
+pub struct MessageDriver<S: TrainingSystem> {
+    pub system: S,
+    checker: ProtocolChecker,
+}
+
+impl<S: TrainingSystem> MessageDriver<S> {
+    pub fn new(system: S) -> Self {
+        MessageDriver {
+            system,
+            checker: ProtocolChecker::default(),
+        }
+    }
+
+    /// Dispatch one tuner message; `ScheduleBranch` returns progress.
+    pub fn send(&mut self, msg: &TunerMsg) -> Result<Option<Progress>> {
+        self.checker.check(msg)?;
+        match msg {
+            TunerMsg::ForkBranch {
+                clock,
+                branch_id,
+                parent_branch_id,
+                tunable,
+                branch_type,
+            } => {
+                self.system.fork_branch(
+                    *clock,
+                    *branch_id,
+                    *parent_branch_id,
+                    tunable,
+                    *branch_type,
+                )?;
+                Ok(None)
+            }
+            TunerMsg::FreeBranch { clock, branch_id } => {
+                self.system.free_branch(*clock, *branch_id)?;
+                Ok(None)
+            }
+            TunerMsg::ScheduleBranch { clock, branch_id } => {
+                Ok(Some(self.system.schedule_branch(*clock, *branch_id)?))
+            }
+        }
+    }
+
+    pub fn schedules_seen(&self) -> u64 {
+        self.checker.schedules_seen()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Trivial in-memory system for driver tests.
+    #[derive(Default)]
+    struct Toy {
+        branches: HashMap<BranchId, f64>,
+    }
+
+    impl TrainingSystem for Toy {
+        fn fork_branch(
+            &mut self,
+            _c: Clock,
+            b: BranchId,
+            parent: Option<BranchId>,
+            _t: &TunableSetting,
+            _ty: BranchType,
+        ) -> Result<()> {
+            let v = parent
+                .map(|p| *self.branches.get(&p).unwrap_or(&10.0))
+                .unwrap_or(10.0);
+            self.branches.insert(b, v);
+            Ok(())
+        }
+        fn free_branch(&mut self, _c: Clock, b: BranchId) -> Result<()> {
+            self.branches.remove(&b);
+            Ok(())
+        }
+        fn schedule_branch(&mut self, _c: Clock, b: BranchId) -> Result<Progress> {
+            let v = self.branches.get_mut(&b).unwrap();
+            *v *= 0.9;
+            Ok(Progress {
+                value: *v,
+                time: 1.0,
+            })
+        }
+        fn clocks_per_epoch(&self, _b: BranchId) -> u64 {
+            10
+        }
+    }
+
+    #[test]
+    fn driver_enforces_clock_order() {
+        let mut d = MessageDriver::new(Toy::default());
+        let t = TunableSetting::new(vec![]);
+        d.send(&TunerMsg::ForkBranch {
+            clock: 0,
+            branch_id: 1,
+            parent_branch_id: None,
+            tunable: t,
+            branch_type: BranchType::Training,
+        })
+        .unwrap();
+        let p = d
+            .send(&TunerMsg::ScheduleBranch {
+                clock: 0,
+                branch_id: 1,
+            })
+            .unwrap()
+            .unwrap();
+        assert!(p.value < 10.0);
+        // re-sending clock 0 schedule violates the protocol
+        assert!(d
+            .send(&TunerMsg::ScheduleBranch {
+                clock: 0,
+                branch_id: 1
+            })
+            .is_err());
+    }
+}

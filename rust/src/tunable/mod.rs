@@ -1,0 +1,332 @@
+//! Training-tunable specifications and search-space geometry (§3.1).
+//!
+//! MLtuner requires users to specify each tunable with its *type* —
+//! discrete, continuous in linear scale, or continuous in log scale —
+//! and its range of valid values.  Searchers operate on the unit cube
+//! `[0,1]^d`; this module owns the encode/decode between cube
+//! coordinates and concrete tunable values.
+
+/// One tunable's type + valid range (paper §3.1, Table 3).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TunableSpec {
+    /// Finite set of valid values (e.g. batch size, staleness bound).
+    Discrete { name: String, values: Vec<f64> },
+    /// Continuous, linear scale (e.g. momentum in [0, 1]).
+    Linear { name: String, min: f64, max: f64 },
+    /// Continuous, log10 scale (e.g. learning rate 10^[-5, 0]).
+    /// `min`/`max` are the concrete values (both > 0), not exponents.
+    Log { name: String, min: f64, max: f64 },
+}
+
+impl TunableSpec {
+    pub fn name(&self) -> &str {
+        match self {
+            TunableSpec::Discrete { name, .. }
+            | TunableSpec::Linear { name, .. }
+            | TunableSpec::Log { name, .. } => name,
+        }
+    }
+
+    /// Map a unit-cube coordinate `u ∈ [0,1]` to a concrete value.
+    pub fn decode(&self, u: f64) -> f64 {
+        let u = u.clamp(0.0, 1.0);
+        match self {
+            TunableSpec::Discrete { values, .. } => {
+                debug_assert!(!values.is_empty());
+                let idx = (u * values.len() as f64).floor() as usize;
+                values[idx.min(values.len() - 1)]
+            }
+            TunableSpec::Linear { min, max, .. } => min + u * (max - min),
+            TunableSpec::Log { min, max, .. } => {
+                let (lmin, lmax) = (min.log10(), max.log10());
+                10f64.powf(lmin + u * (lmax - lmin))
+            }
+        }
+    }
+
+    /// Map a concrete value back to a unit-cube coordinate.  Discrete
+    /// values snap to the nearest member's bucket center.
+    pub fn encode(&self, v: f64) -> f64 {
+        match self {
+            TunableSpec::Discrete { values, .. } => {
+                let idx = values
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        (*a - v).abs().partial_cmp(&(*b - v).abs()).unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                (idx as f64 + 0.5) / values.len() as f64
+            }
+            TunableSpec::Linear { min, max, .. } => {
+                if max == min {
+                    0.5
+                } else {
+                    ((v - min) / (max - min)).clamp(0.0, 1.0)
+                }
+            }
+            TunableSpec::Log { min, max, .. } => {
+                let (lmin, lmax) = (min.log10(), max.log10());
+                if lmax == lmin {
+                    0.5
+                } else {
+                    ((v.log10() - lmin) / (lmax - lmin)).clamp(0.0, 1.0)
+                }
+            }
+        }
+    }
+
+    /// Number of distinct values (None for continuous).
+    pub fn cardinality(&self) -> Option<usize> {
+        match self {
+            TunableSpec::Discrete { values, .. } => Some(values.len()),
+            _ => None,
+        }
+    }
+}
+
+/// The full search space: an ordered list of tunables.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TunableSpace {
+    pub specs: Vec<TunableSpec>,
+}
+
+impl TunableSpace {
+    pub fn new(specs: Vec<TunableSpec>) -> Self {
+        Self { specs }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.specs.iter().position(|s| s.name() == name)
+    }
+
+    /// Decode a unit-cube point into a concrete [`TunableSetting`].
+    pub fn decode(&self, u: &[f64]) -> TunableSetting {
+        assert_eq!(u.len(), self.dim());
+        TunableSetting {
+            values: self
+                .specs
+                .iter()
+                .zip(u)
+                .map(|(s, &ui)| s.decode(ui))
+                .collect(),
+        }
+    }
+
+    /// Encode a concrete setting back into the unit cube.
+    pub fn encode(&self, setting: &TunableSetting) -> Vec<f64> {
+        assert_eq!(setting.values.len(), self.dim());
+        self.specs
+            .iter()
+            .zip(&setting.values)
+            .map(|(s, &v)| s.encode(v))
+            .collect()
+    }
+
+    /// The paper's standard 4-tunable space (Table 3): learning rate
+    /// (log 10^[-5,0]), momentum (linear [0,1]), per-machine batch size
+    /// (model-specific discrete grid), data staleness ({0,1,3,7}).
+    pub fn standard(batch_sizes: &[f64]) -> Self {
+        Self::new(vec![
+            TunableSpec::Log {
+                name: "lr".into(),
+                min: 1e-5,
+                max: 1.0,
+            },
+            TunableSpec::Linear {
+                name: "momentum".into(),
+                min: 0.0,
+                max: 1.0,
+            },
+            TunableSpec::Discrete {
+                name: "batch_size".into(),
+                values: batch_sizes.to_vec(),
+            },
+            TunableSpec::Discrete {
+                name: "staleness".into(),
+                values: vec![0.0, 1.0, 3.0, 7.0],
+            },
+        ])
+    }
+
+    /// Fig. 11's "4×2 tunables" setup: the standard space plus a
+    /// duplicated copy whose extra tunables are transparent to the
+    /// training system (they only enlarge the search space).
+    pub fn standard_duplicated(batch_sizes: &[f64]) -> Self {
+        let mut space = Self::standard(batch_sizes);
+        let extra: Vec<TunableSpec> = space
+            .specs
+            .iter()
+            .map(|s| match s.clone() {
+                TunableSpec::Discrete { name, values } => TunableSpec::Discrete {
+                    name: format!("{name}_dup"),
+                    values,
+                },
+                TunableSpec::Linear { name, min, max } => TunableSpec::Linear {
+                    name: format!("{name}_dup"),
+                    min,
+                    max,
+                },
+                TunableSpec::Log { name, min, max } => TunableSpec::Log {
+                    name: format!("{name}_dup"),
+                    min,
+                    max,
+                },
+            })
+            .collect();
+        space.specs.extend(extra);
+        space
+    }
+}
+
+/// A concrete assignment of every tunable in a [`TunableSpace`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunableSetting {
+    pub values: Vec<f64>,
+}
+
+impl TunableSetting {
+    pub fn new(values: Vec<f64>) -> Self {
+        Self { values }
+    }
+
+    /// Value of the tunable called `name` within `space`.
+    pub fn get(&self, space: &TunableSpace, name: &str) -> Option<f64> {
+        space.index_of(name).map(|i| self.values[i])
+    }
+
+    pub fn lr(&self, space: &TunableSpace) -> f64 {
+        self.get(space, "lr").unwrap_or(0.01)
+    }
+
+    pub fn momentum(&self, space: &TunableSpace) -> f64 {
+        self.get(space, "momentum").unwrap_or(0.0)
+    }
+
+    pub fn batch_size(&self, space: &TunableSpace) -> usize {
+        self.get(space, "batch_size").unwrap_or(32.0) as usize
+    }
+
+    pub fn staleness(&self, space: &TunableSpace) -> u32 {
+        self.get(space, "staleness").unwrap_or(0.0) as u32
+    }
+
+    pub fn describe(&self, space: &TunableSpace) -> String {
+        space
+            .specs
+            .iter()
+            .zip(&self.values)
+            .map(|(s, v)| format!("{}={:.4e}", s.name(), v))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lr_spec() -> TunableSpec {
+        TunableSpec::Log {
+            name: "lr".into(),
+            min: 1e-5,
+            max: 1.0,
+        }
+    }
+
+    #[test]
+    fn log_decode_endpoints() {
+        let s = lr_spec();
+        assert!((s.decode(0.0) - 1e-5).abs() < 1e-12);
+        assert!((s.decode(1.0) - 1.0).abs() < 1e-9);
+        // midpoint of log space is 10^-2.5
+        assert!((s.decode(0.5) - 10f64.powf(-2.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_roundtrip() {
+        let s = lr_spec();
+        for &v in &[1e-5, 1e-4, 3e-3, 0.5, 1.0] {
+            let u = s.encode(v);
+            assert!((s.decode(u) - v).abs() / v < 1e-9, "v={v}");
+        }
+    }
+
+    #[test]
+    fn discrete_decode_covers_all_values() {
+        let s = TunableSpec::Discrete {
+            name: "bs".into(),
+            values: vec![4.0, 16.0, 64.0, 256.0],
+        };
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..100 {
+            let v = s.decode(i as f64 / 99.0);
+            seen.insert(v as i64);
+        }
+        assert_eq!(seen.len(), 4);
+        // u=1.0 must not index out of bounds
+        assert_eq!(s.decode(1.0), 256.0);
+    }
+
+    #[test]
+    fn discrete_roundtrip_snaps() {
+        let s = TunableSpec::Discrete {
+            name: "stale".into(),
+            values: vec![0.0, 1.0, 3.0, 7.0],
+        };
+        for &v in &[0.0, 1.0, 3.0, 7.0] {
+            assert_eq!(s.decode(s.encode(v)), v);
+        }
+        // off-grid values snap to nearest
+        assert_eq!(s.decode(s.encode(2.9)), 3.0);
+        assert_eq!(s.decode(s.encode(100.0)), 7.0);
+    }
+
+    #[test]
+    fn linear_roundtrip_and_clamp() {
+        let s = TunableSpec::Linear {
+            name: "m".into(),
+            min: 0.0,
+            max: 1.0,
+        };
+        assert_eq!(s.decode(s.encode(0.9)), 0.9);
+        assert_eq!(s.encode(2.0), 1.0);
+        assert_eq!(s.decode(-0.5), 0.0);
+    }
+
+    #[test]
+    fn standard_space_layout() {
+        let sp = TunableSpace::standard(&[2.0, 4.0, 8.0, 16.0, 32.0]);
+        assert_eq!(sp.dim(), 4);
+        assert_eq!(sp.index_of("lr"), Some(0));
+        assert_eq!(sp.index_of("staleness"), Some(3));
+        let setting = sp.decode(&[0.5, 0.9, 0.99, 0.0]);
+        assert_eq!(setting.batch_size(&sp), 32);
+        assert_eq!(setting.staleness(&sp), 0);
+        assert!((setting.momentum(&sp) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicated_space_doubles_dim() {
+        let sp = TunableSpace::standard_duplicated(&[4.0]);
+        assert_eq!(sp.dim(), 8);
+        assert_eq!(sp.index_of("lr_dup"), Some(4));
+        // real tunable accessors still resolve to the originals
+        let setting = sp.decode(&vec![0.5; 8]);
+        assert!(setting.lr(&sp) > 0.0);
+    }
+
+    #[test]
+    fn space_encode_decode_roundtrip() {
+        let sp = TunableSpace::standard(&[4.0, 16.0, 64.0]);
+        let setting = sp.decode(&[0.3, 0.7, 0.5, 0.8]);
+        let u = sp.encode(&setting);
+        let setting2 = sp.decode(&u);
+        assert_eq!(setting, setting2);
+    }
+}

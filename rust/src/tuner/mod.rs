@@ -1,0 +1,717 @@
+//! MLtuner core (§3, §4): snapshot/branch-based trial-and-error tuning
+//! of training tunables within a single execution.
+//!
+//! The tuning procedure (Fig. 2 of the paper):
+//!
+//! 1. Tag the current training state as the **parent branch**.
+//! 2. Ask the tunable searcher for a setting; **fork** a trial branch
+//!    from the parent and run it for the current *trial time*.
+//! 3. Summarize its progress into a convergence speed; report the speed
+//!    back to the searcher.
+//! 4. The trial time itself is decided by doubling (Algorithm 1) until
+//!    at least one setting shows *stable converging* progress.
+//! 5. When the searcher's stopping condition fires (top-5 non-zero
+//!    speeds within 10%), keep the best branch, free the rest, and
+//!    continue training.
+//! 6. **Re-tune** when the validation accuracy plateaus, with the
+//!    per-setting trial time bounded by one epoch and the trial count
+//!    bounded by the previous tuning's count (§4.4) — so a converged
+//!    model terminates the search.
+//!
+//! Outside Algorithm-1 exploration at most three branches are live:
+//! parent, current best, current trial (§4.6).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use crate::comm::{BranchId, BranchType, TunerMsg};
+use crate::metrics::RunRecorder;
+use crate::searcher::{Proposal, Searcher, SearcherKind, StoppingCondition};
+use crate::summarizer::{BranchLabel, ProgressPoint, ProgressSummarizer};
+use crate::training::{MessageDriver, Progress, TrainingSystem};
+use crate::tunable::{TunableSetting, TunableSpace};
+
+/// When is the model converged?
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConvergenceCriterion {
+    /// Validation accuracy has not increased over the last N epochs
+    /// (5 for ILSVRC12/RNN, 20 for Cifar10 in the paper).
+    AccuracyPlateau { epochs: u32 },
+    /// Training loss reached a fixed threshold (the MF protocol).
+    LossThreshold { value: f64 },
+}
+
+/// MLtuner configuration.  Everything has paper defaults; only the
+/// tunable space is the user's job (§3.1).
+#[derive(Debug, Clone)]
+pub struct TunerConfig {
+    pub space: TunableSpace,
+    pub searcher: SearcherKind,
+    pub stopping: StoppingCondition,
+    pub convergence: ConvergenceCriterion,
+    /// Re-tune on plateau (§4.4)?  Off for the MF app and §5.3 runs.
+    pub retune: bool,
+    /// Skip the initial tuning stage and start from this setting
+    /// (the Fig. 10 robustness experiments).
+    pub initial_setting: Option<TunableSetting>,
+    pub seed: u64,
+    /// Safety rails (never hit in sane runs).
+    pub max_epochs: u64,
+    pub max_trials_per_tuning: usize,
+    pub max_trial_doublings: u32,
+    /// Clocks used to estimate a branch's per-clock time (§4.5: "first
+    /// schedule that branch to run for some small number of clocks").
+    pub measure_clocks: u64,
+}
+
+impl TunerConfig {
+    pub fn new(space: TunableSpace) -> Self {
+        TunerConfig {
+            space,
+            searcher: SearcherKind::HyperOpt,
+            stopping: StoppingCondition::default(),
+            convergence: ConvergenceCriterion::AccuracyPlateau { epochs: 5 },
+            retune: true,
+            initial_setting: None,
+            seed: 0,
+            max_epochs: 10_000,
+            max_trials_per_tuning: 64,
+            max_trial_doublings: 24,
+            measure_clocks: 3,
+        }
+    }
+}
+
+/// One tuning / re-tuning episode's record (the shaded spans of Fig. 4).
+#[derive(Debug, Clone)]
+pub struct TuningRecord {
+    pub started: f64,
+    pub ended: f64,
+    pub trials: usize,
+    pub trial_time: f64,
+    pub chosen: Option<TunableSetting>,
+    pub best_speed: f64,
+    pub initial: bool,
+}
+
+/// Final report of a tuned training run.
+#[derive(Debug, Clone)]
+pub struct TunerReport {
+    pub recorder: RunRecorder,
+    pub tunings: Vec<TuningRecord>,
+    pub final_accuracy: f64,
+    pub final_loss: f64,
+    pub total_time: f64,
+    pub tuning_time: f64,
+    pub epochs: u64,
+    /// Total clocks scheduled (training + all tuning trials).
+    pub clocks: u64,
+    pub converged: bool,
+    pub final_setting: TunableSetting,
+}
+
+/// A live trial branch during a tuning episode.
+struct Trial {
+    branch: BranchId,
+    point: Vec<f64>,
+    setting: TunableSetting,
+    trace: Vec<ProgressPoint>,
+    run_time: f64,
+}
+
+/// The MLtuner coordinator, wrapping a training system.
+pub struct MLtuner<S: TrainingSystem> {
+    pub driver: MessageDriver<S>,
+    pub cfg: TunerConfig,
+    summarizer: ProgressSummarizer,
+    clock: u64,
+    next_branch: BranchId,
+    /// Accumulated run time (virtual or wall seconds, system-defined).
+    now: f64,
+    tuning_time: f64,
+    pub recorder: RunRecorder,
+    tunings: Vec<TuningRecord>,
+}
+
+impl<S: TrainingSystem> MLtuner<S> {
+    pub fn new(system: S, cfg: TunerConfig) -> Self {
+        MLtuner {
+            driver: MessageDriver::new(system),
+            cfg,
+            summarizer: ProgressSummarizer::default(),
+            clock: 0,
+            next_branch: 1,
+            now: 0.0,
+            tuning_time: 0.0,
+            recorder: RunRecorder::new(),
+            tunings: Vec::new(),
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    // ----- branch plumbing (Table 1 messages, §4.5) -----
+
+    fn fork(
+        &mut self,
+        parent: BranchId,
+        setting: &TunableSetting,
+        ty: BranchType,
+    ) -> Result<BranchId> {
+        let id = self.next_branch;
+        self.next_branch += 1;
+        self.driver.send(&TunerMsg::ForkBranch {
+            clock: self.clock,
+            branch_id: id,
+            parent_branch_id: Some(parent),
+            tunable: setting.clone(),
+            branch_type: ty,
+        })?;
+        Ok(id)
+    }
+
+    fn free(&mut self, branch: BranchId) -> Result<()> {
+        self.driver.send(&TunerMsg::FreeBranch {
+            clock: self.clock,
+            branch_id: branch,
+        })?;
+        Ok(())
+    }
+
+    fn schedule(&mut self, branch: BranchId) -> Result<Progress> {
+        let p = self
+            .driver
+            .send(&TunerMsg::ScheduleBranch {
+                clock: self.clock,
+                branch_id: branch,
+            })?
+            .expect("schedule returns progress");
+        self.clock += 1;
+        self.now += p.time;
+        Ok(p)
+    }
+
+    /// Run a trial branch until its total run time reaches `target`
+    /// seconds (at least `measure_clocks` clocks the first time, to
+    /// measure its per-clock time).  Stops early on numeric overflow.
+    fn run_trial_until(&mut self, trial: &mut Trial, target: f64) -> Result<()> {
+        let min_clocks = if trial.trace.is_empty() {
+            self.cfg.measure_clocks.max(1)
+        } else {
+            1
+        };
+        let mut ran = 0u64;
+        while trial.run_time < target || ran < min_clocks {
+            let p = self.schedule(trial.branch)?;
+            trial.run_time += p.time;
+            trial.trace.push(ProgressPoint {
+                t: trial.run_time,
+                x: p.value,
+            });
+            ran += 1;
+            if !p.value.is_finite() {
+                break; // diverged — no point burning more clocks
+            }
+            if ran >= min_clocks && trial.run_time >= target {
+                break;
+            }
+            // guard: a zero-time system would spin forever
+            if ran > 1_000_000 {
+                bail!("trial branch reported zero-time clocks");
+            }
+        }
+        Ok(())
+    }
+
+    /// One tuning episode (Fig. 2 + Algorithm 1).  Forks trials from
+    /// `parent`; returns the winning branch (already trained for its
+    /// trial time) or None if no converging setting was found within
+    /// bounds.  `trial_time_cap`/`max_trials` implement §4.4's re-tune
+    /// bounds; pass `f64::INFINITY`/large for initial tuning.
+    fn tune_once(
+        &mut self,
+        parent: BranchId,
+        trial_time_cap: f64,
+        max_trials: usize,
+        episode: usize,
+        initial: bool,
+    ) -> Result<(Option<(BranchId, TunableSetting, f64)>, usize)> {
+        let started = self.now;
+        self.recorder.event(started, if initial { "tuning_start" } else { "retuning_start" });
+        let mut searcher: Box<dyn Searcher> = self
+            .cfg
+            .searcher
+            .build(self.cfg.space.dim(), self.cfg.seed.wrapping_add(episode as u64 * 7919));
+        let mut trials: Vec<Trial> = Vec::new();
+        let mut trial_time = 0.0f64;
+        let mut exhausted = false;
+        let mut doublings = 0u32;
+        let mut trials_forked = 0usize;
+
+        // ---- Algorithm 1: decide the trial time ----
+        let decided: Option<f64> = loop {
+            // Propose one new setting per round (its decision time
+            // lower-bounds the trial time, §4.2).
+            if !exhausted && trials_forked < max_trials {
+                let t0 = Instant::now();
+                match searcher.propose() {
+                    Proposal::Exhausted => exhausted = true,
+                    Proposal::Point(point) => {
+                        let decision = t0.elapsed().as_secs_f64();
+                        trial_time = trial_time.max(decision);
+                        let setting = self.cfg.space.decode(&point);
+                        let branch =
+                            self.fork(parent, &setting, BranchType::Training)?;
+                        trials.push(Trial {
+                            branch,
+                            point,
+                            setting,
+                            trace: Vec::new(),
+                            run_time: 0.0,
+                        });
+                        trials_forked += 1;
+                    }
+                }
+            }
+            if trials.is_empty() {
+                break None;
+            }
+            let target = trial_time.min(trial_time_cap);
+            for t in &mut trials {
+                self.run_trial_until(t, target)?;
+            }
+            trial_time = trials
+                .iter()
+                .map(|t| t.run_time)
+                .fold(trial_time, f64::max);
+
+            // Summarize; drop diverged branches (speed 0, §4.1).
+            let mut keep = Vec::new();
+            let mut best_converging: Option<(usize, f64)> = None;
+            for (i, t) in trials.iter().enumerate() {
+                let s = self.summarizer.summarize(&t.trace);
+                match s.label {
+                    BranchLabel::Diverged => {
+                        searcher.observe(t.point.clone(), 0.0);
+                    }
+                    BranchLabel::Converging => {
+                        if best_converging.map_or(true, |(_, sp)| s.speed > sp) {
+                            best_converging = Some((i, s.speed));
+                        }
+                        keep.push(i);
+                    }
+                    BranchLabel::Unstable => keep.push(i),
+                }
+            }
+            // free diverged branches
+            let mut kept_trials = Vec::new();
+            for (i, t) in trials.drain(..).enumerate() {
+                if keep.contains(&i) {
+                    kept_trials.push(t);
+                } else {
+                    self.free(t.branch)?;
+                }
+            }
+            // remap best index into kept vector
+            let best_converging = best_converging.map(|(i, sp)| {
+                let new_i = keep.iter().position(|&k| k == i).unwrap();
+                (new_i, sp)
+            });
+            trials = kept_trials;
+
+            if let Some((best_i, best_speed)) = best_converging {
+                // Trial time decided: keep the best converging branch,
+                // observe + free the others (Algorithm 1's last step).
+                let mut best = None;
+                for (i, t) in trials.drain(..).enumerate() {
+                    let s = self.summarizer.summarize(&t.trace);
+                    if i == best_i {
+                        searcher.observe(t.point.clone(), best_speed);
+                        best = Some(t);
+                    } else {
+                        searcher.observe(t.point.clone(), s.speed);
+                        self.free(t.branch)?;
+                    }
+                }
+                trials.push(best.unwrap());
+                break Some(trial_time);
+            }
+
+            // No converging branch yet.  Double the trial time (clamped
+            // to the §4.4 per-setting cap); at the cap, keep proposing
+            // *new* settings each round until the trial-count bound —
+            // only then conclude that no converging setting exists
+            // (i.e., the model has converged).
+            let at_cap = trial_time >= trial_time_cap
+                && trials
+                    .iter()
+                    .all(|t| t.run_time >= trial_time_cap);
+            let budget_spent = trials_forked >= max_trials || exhausted;
+            if (at_cap && budget_spent)
+                || doublings > self.cfg.max_trial_doublings
+            {
+                break None;
+            }
+            if trial_time < trial_time_cap {
+                trial_time = (trial_time * 2.0).min(trial_time_cap);
+                doublings += 1;
+            }
+        };
+
+        let Some(trial_time) = decided else {
+            // No converging setting within bounds: free everything.
+            for t in trials.drain(..) {
+                self.free(t.branch)?;
+            }
+            let ended = self.now;
+            self.tuning_time += ended - started;
+            self.recorder.event(ended, "tuning_end");
+            self.tunings.push(TuningRecord {
+                started,
+                ended,
+                trials: trials_forked,
+                trial_time: 0.0,
+                chosen: None,
+                best_speed: 0.0,
+                initial,
+            });
+            return Ok((None, trials_forked));
+        };
+
+        // ---- keep searching with the decided trial time ----
+        let mut best = trials.pop().expect("best branch from Algorithm 1");
+        let mut best_speed = self.summarizer.summarize(&best.trace).speed;
+        while trials_forked < max_trials
+            && !self.cfg.stopping.should_stop(searcher.observations())
+        {
+            let point = match searcher.propose() {
+                Proposal::Exhausted => break,
+                Proposal::Point(p) => p,
+            };
+            let setting = self.cfg.space.decode(&point);
+            let branch = self.fork(parent, &setting, BranchType::Training)?;
+            let mut trial = Trial {
+                branch,
+                point,
+                setting,
+                trace: Vec::new(),
+                run_time: 0.0,
+            };
+            trials_forked += 1;
+            self.run_trial_until(&mut trial, trial_time.min(trial_time_cap))?;
+            let s = self.summarizer.summarize(&trial.trace);
+            let speed = match s.label {
+                BranchLabel::Converging => s.speed,
+                _ => 0.0, // unstable settings score 0 at decided trial time
+            };
+            searcher.observe(trial.point.clone(), speed);
+            if speed > best_speed {
+                self.free(best.branch)?;
+                best = trial;
+                best_speed = speed;
+            } else {
+                self.free(trial.branch)?;
+            }
+        }
+
+        let ended = self.now;
+        self.tuning_time += ended - started;
+        self.recorder.event(ended, "tuning_end");
+        self.tunings.push(TuningRecord {
+            started,
+            ended,
+            trials: trials_forked,
+            trial_time,
+            chosen: Some(best.setting.clone()),
+            best_speed,
+            initial,
+        });
+        Ok((Some((best.branch, best.setting, best_speed)), trials_forked))
+    }
+
+    /// Measure validation accuracy via a TESTING branch (§4.5).
+    fn eval_accuracy(&mut self, train_branch: BranchId) -> Result<f64> {
+        let setting = self.cfg.space.decode(&vec![0.5; self.cfg.space.dim()]);
+        let b = self.fork(train_branch, &setting, BranchType::Testing)?;
+        let p = self.schedule(b)?;
+        self.free(b)?;
+        Ok(p.value)
+    }
+
+    /// Run the full MLtuner-managed training (§5.1 protocol): initial
+    /// tuning, epoch-wise training with validation, re-tuning on
+    /// plateau, stop at convergence.
+    pub fn run(&mut self) -> Result<TunerReport> {
+        let mut episode = 0usize;
+        // --- initial tuning (or hard-coded initial setting, Fig. 10) ---
+        let (mut train_branch, mut setting, mut prev_trials) =
+            match self.cfg.initial_setting.clone() {
+                Some(s) => {
+                    let b = self.fork(0, &s, BranchType::Training)?;
+                    (b, s, self.cfg.max_trials_per_tuning)
+                }
+                None => {
+                    let (best, trials) = self.tune_once(
+                        0,
+                        f64::INFINITY,
+                        self.cfg.max_trials_per_tuning,
+                        episode,
+                        true,
+                    )?;
+                    match best {
+                        None => bail!("initial tuning found no converging setting"),
+                        Some((b, s, _)) => (b, s, trials),
+                    }
+                }
+            };
+        episode += 1;
+
+        // --- training loop ---
+        let mut epoch = 0u64;
+        let mut best_acc = f64::NEG_INFINITY;
+        let mut last_acc = 0.0f64;
+        let mut last_loss = f64::INFINITY;
+        let mut epochs_since_improve = 0u32;
+        let mut converged = false;
+        #[allow(unused_assignments)]
+        let mut epoch_time_est = 0.0f64;
+
+        'training: while epoch < self.cfg.max_epochs {
+            let clocks = self.driver.system.clocks_per_epoch(train_branch).max(1);
+            let epoch_started = self.now;
+            let mut loss_acc = 0.0f64;
+            let mut loss_n = 0u64;
+            for _ in 0..clocks {
+                let p = self.schedule(train_branch)?;
+                self.recorder.record_loss(self.now, self.clock, p.value);
+                if p.value.is_finite() {
+                    loss_acc += p.value;
+                    loss_n += 1;
+                }
+                if let ConvergenceCriterion::LossThreshold { value } =
+                    self.cfg.convergence
+                {
+                    if p.value.is_finite() && p.value <= value {
+                        last_loss = p.value;
+                        converged = true;
+                        epoch += 1; // count the partial epoch
+                        break 'training;
+                    }
+                }
+            }
+            epoch += 1;
+            epoch_time_est = self.now - epoch_started;
+            last_loss = if loss_n > 0 {
+                loss_acc / loss_n as f64
+            } else {
+                f64::INFINITY
+            };
+
+            match self.cfg.convergence {
+                ConvergenceCriterion::LossThreshold { .. } => {
+                    // handled inside the clock loop; keep training
+                }
+                ConvergenceCriterion::AccuracyPlateau { epochs } => {
+                    let acc = self.eval_accuracy(train_branch)?;
+                    last_acc = acc;
+                    self.recorder.record_accuracy(self.now, epoch, acc);
+                    if acc > best_acc + 1e-6 {
+                        best_acc = acc;
+                        epochs_since_improve = 0;
+                    } else {
+                        epochs_since_improve += 1;
+                    }
+                    // Re-tune one epoch before the convergence
+                    // condition would fire (§5.1).
+                    let trigger = epochs.saturating_sub(1).max(1);
+                    if epochs_since_improve >= trigger {
+                        if !self.cfg.retune {
+                            converged = true;
+                            break 'training;
+                        }
+                        // §4.4 bounds: per-setting trial ≤ 1 epoch,
+                        // trials ≤ previous tuning's count.
+                        let cap = if epoch_time_est > 0.0 {
+                            epoch_time_est
+                        } else {
+                            f64::INFINITY
+                        };
+                        let (best, trials) = self.tune_once(
+                            train_branch,
+                            cap,
+                            prev_trials.max(1),
+                            episode,
+                            false,
+                        )?;
+                        episode += 1;
+                        match best {
+                            Some((b, s, _)) => {
+                                // continue on the re-tuned branch; the
+                                // old parent is superseded.
+                                if train_branch != 0 {
+                                    self.free(train_branch)?;
+                                }
+                                train_branch = b;
+                                setting = s;
+                                prev_trials = trials;
+                                epochs_since_improve = 0;
+                            }
+                            None => {
+                                // no converging setting exists anymore:
+                                // the model has converged (§4.4).
+                                converged = true;
+                                break 'training;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let final_accuracy = if matches!(
+            self.cfg.convergence,
+            ConvergenceCriterion::AccuracyPlateau { .. }
+        ) {
+            best_acc.max(last_acc)
+        } else {
+            0.0
+        };
+        Ok(TunerReport {
+            recorder: self.recorder.clone(),
+            tunings: self.tunings.clone(),
+            final_accuracy,
+            final_loss: last_loss,
+            total_time: self.now,
+            tuning_time: self.tuning_time,
+            epochs: epoch,
+            clocks: self.clock,
+            converged,
+            final_setting: setting,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::sim::{SimProfile, SimSystem};
+
+    fn tuner_for(
+        profile: SimProfile,
+        seed: u64,
+    ) -> MLtuner<SimSystem> {
+        let sys = SimSystem::new(profile, 8, seed);
+        let mut cfg = TunerConfig::new(sys.space.clone());
+        cfg.seed = seed;
+        cfg.convergence = ConvergenceCriterion::AccuracyPlateau { epochs: 5 };
+        cfg.max_epochs = 400;
+        MLtuner::new(sys, cfg)
+    }
+
+    #[test]
+    fn initial_tuning_finds_converging_setting() {
+        let mut t = tuner_for(SimProfile::alexnet_cifar10(), 3);
+        let (best, trials) = t.tune_once(0, f64::INFINITY, 64, 0, true).unwrap();
+        let (_, setting, speed) = best.expect("should find a setting");
+        assert!(speed > 0.0);
+        assert!(trials >= 5, "needs >=5 non-zero speeds to stop, got {trials}");
+        // chosen LR must be in a sane band (not 1e-5, not 1.0)
+        let lr = setting.lr(&t.cfg.space);
+        assert!(lr > 1e-4 && lr < 0.9, "lr={lr}");
+    }
+
+    #[test]
+    fn full_run_converges_to_good_accuracy() {
+        let mut t = tuner_for(SimProfile::alexnet_cifar10(), 5);
+        let report = t.run().unwrap();
+        assert!(report.converged);
+        assert!(
+            report.final_accuracy > 0.70,
+            "accuracy {}",
+            report.final_accuracy
+        );
+        assert!(!report.tunings.is_empty());
+        assert!(report.tunings[0].initial);
+    }
+
+    #[test]
+    fn retuning_improves_over_initial_plateau() {
+        let mut t = tuner_for(SimProfile::alexnet_cifar10(), 11);
+        let report = t.run().unwrap();
+        // at least one re-tuning should have happened (the LR-decay effect)
+        assert!(
+            report.tunings.len() >= 2,
+            "expected re-tunings, got {:?}",
+            report.tunings.len()
+        );
+        // accuracy after the last re-tuning ≥ accuracy before it
+        let retune_t = report.tunings[1].started;
+        let before = report
+            .recorder
+            .accuracies
+            .iter()
+            .filter(|&&(t, _, _)| t < retune_t)
+            .map(|&(_, _, a)| a)
+            .fold(0.0, f64::max);
+        assert!(report.final_accuracy >= before - 0.02);
+    }
+
+    #[test]
+    fn hardcoded_initial_setting_skips_initial_tuning() {
+        let sys = SimSystem::new(SimProfile::alexnet_cifar10(), 8, 9);
+        let space = sys.space.clone();
+        let mut cfg = TunerConfig::new(space.clone());
+        // suboptimal (10x too small) initial LR — convergent but slow,
+        // as in the paper's random suboptimal picks
+        let bad = space.decode(&[0.55, 0.2, 0.9, 0.0]);
+        cfg.initial_setting = Some(bad);
+        cfg.max_epochs = 120;
+        cfg.seed = 9;
+        let mut t = MLtuner::new(sys, cfg);
+        let report = t.run().unwrap();
+        // no tuning episode before training started ⇒ first tuning is a re-tune
+        assert!(report.tunings.iter().all(|r| !r.initial));
+        // robustness (Fig. 10): re-tuning recovers decent accuracy
+        assert!(
+            report.final_accuracy > 0.60,
+            "accuracy {}",
+            report.final_accuracy
+        );
+    }
+
+    #[test]
+    fn loss_threshold_convergence_for_mf_profile() {
+        let sys = SimSystem::new(SimProfile::mf_netflix(), 32, 1);
+        let space = sys.space.clone();
+        let mut cfg = TunerConfig::new(space);
+        cfg.convergence = ConvergenceCriterion::LossThreshold { value: 8.32e6 * 32.0 };
+        cfg.retune = false;
+        cfg.max_epochs = 4000;
+        cfg.seed = 1;
+        let mut t = MLtuner::new(sys, cfg);
+        let report = t.run().unwrap();
+        assert!(report.converged, "never reached the loss threshold");
+        assert!(report.final_loss <= 8.32e6 * 32.0 * 1.01);
+    }
+
+    #[test]
+    fn branch_count_stays_bounded_outside_exploration() {
+        let mut t = tuner_for(SimProfile::alexnet_cifar10(), 21);
+        let report = t.run().unwrap();
+        let _ = report;
+        // §4.6: outside Algorithm-1 exploration only parent + best +
+        // trial (+ root + testing transient) live.  During exploration
+        // one branch per doubling round can accumulate; the doubling
+        // budget bounds that.
+        assert!(
+            t.driver.system.peak_branches
+                <= t.cfg.max_trials_per_tuning + 8,
+            "peak branches {}",
+            t.driver.system.peak_branches
+        );
+        // and at the end only root + train branch remain
+        assert!(t.driver.system.live_branches() <= 2);
+    }
+}

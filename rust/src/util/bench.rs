@@ -1,0 +1,116 @@
+//! Micro-bench harness (offline substrate — `criterion` is not
+//! vendored).  Warm-up + timed iterations with median / mean / p95
+//! reporting, `black_box` to defeat const-folding, and a tabular
+//! printer shared by the figure-regeneration benches.
+
+use std::time::Instant;
+
+/// Opaque value sink (stable `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Time `f` adaptively: warm up, then run enough iterations to cover
+/// ~`target_ms` of wall time (bounded by `max_iters`).
+pub fn bench<F: FnMut()>(name: &str, target_ms: f64, max_iters: usize, mut f: F) -> BenchStats {
+    // warm-up
+    for _ in 0..3.min(max_iters) {
+        f();
+    }
+    // estimate one iteration
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().as_nanos().max(1) as f64;
+    let budget_ns = target_ms * 1e6;
+    let iters = ((budget_ns / est) as usize).clamp(5, max_iters);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        median_ns: samples[samples.len() / 2],
+        p95_ns: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        min_ns: samples[0],
+    };
+    stats.print();
+    stats
+}
+
+/// Print a figure-regeneration table header.
+pub fn table_header(title: &str, columns: &[&str]) {
+    println!();
+    println!("=== {title} ===");
+    println!("{}", columns.join("\t"));
+}
+
+/// Print one row of a figure table.
+pub fn table_row(cells: &[String]) {
+    println!("{}", cells.join("\t"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let mut acc = 0u64;
+        let s = bench("noop-ish", 5.0, 1000, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

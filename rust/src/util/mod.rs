@@ -1,0 +1,9 @@
+//! Offline substrates: the small libraries this build vendors in-tree
+//! because only the PJRT bridge crates are available offline
+//! (see Cargo.toml).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod toml;

@@ -1,0 +1,230 @@
+//! Minimal TOML-subset parser (offline substrate — the `toml` crate is
+//! not vendored).  Supports the config grammar this crate uses:
+//! `[section]` / `[section.sub]` headers, `key = value` with strings,
+//! integers, floats, booleans, and flat arrays.  Comments with `#`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path key → value.  Keys inside
+/// `[section]` become `section.key`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("toml error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError {
+                line: ln + 1,
+                msg: msg.into(),
+            };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|m| err(&m))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.values.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(|v| v.as_i64())
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(|v| v.as_bool())
+    }
+
+    /// All keys under a `section.` prefix exist?
+    pub fn has_section(&self, section: &str) -> bool {
+        let prefix = format!("{section}.");
+        self.values.keys().any(|k| k.starts_with(&prefix))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a string literal would break this, but our config
+    // grammar never embeds '#' in strings.
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::String(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Integer(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+            app = "sim"          # trailing comment
+            seed = 42
+            retune = true
+            threshold = 8.32e6
+            [mf]
+            users = 1_000
+            sizes = [2, 4, 8]
+        "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("app"), Some("sim"));
+        assert_eq!(doc.get_i64("seed"), Some(42));
+        assert_eq!(doc.get_bool("retune"), Some(true));
+        assert_eq!(doc.get_f64("threshold"), Some(8.32e6));
+        assert_eq!(doc.get_i64("mf.users"), Some(1000));
+        assert!(doc.has_section("mf"));
+        assert!(!doc.has_section("dnn"));
+        match doc.get("mf.sizes").unwrap() {
+            TomlValue::Array(a) => assert_eq!(a.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let e = TomlDoc::parse("a = 1\nb : 2\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(TomlDoc::parse("a = ").is_err());
+        assert!(TomlDoc::parse("a = \"x").is_err());
+        assert!(TomlDoc::parse("[s\na=1").is_err());
+    }
+
+    #[test]
+    fn integers_vs_floats() {
+        let doc = TomlDoc::parse("i = 3\nf = 3.0\n").unwrap();
+        assert_eq!(doc.get("i"), Some(&TomlValue::Integer(3)));
+        assert_eq!(doc.get("f"), Some(&TomlValue::Float(3.0)));
+        assert_eq!(doc.get_f64("i"), Some(3.0));
+    }
+}

@@ -1,0 +1,146 @@
+//! Integration: parameter-server substrate under realistic branch
+//! churn — the access pattern MLtuner generates (fork / train / free,
+//! testing forks, memory-pool steady state).
+
+use mltuner::comm::BranchId;
+use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
+use mltuner::ps::cache::WorkerCache;
+use mltuner::ps::storage::RowKey;
+use mltuner::ps::ParamServer;
+use mltuner::util::rng::Rng;
+
+fn server_with_model(rows: usize, row_len: usize, kind: OptimizerKind) -> ParamServer {
+    let mut ps = ParamServer::new(8, Optimizer::new(kind));
+    let mut rng = Rng::seed_from_u64(0);
+    for k in 0..rows {
+        let row: Vec<f32> = (0..row_len).map(|_| rng.gen_normal() as f32).collect();
+        ps.insert_row(0, 0, k as RowKey, row);
+    }
+    ps
+}
+
+#[test]
+fn tuning_episode_branch_churn() {
+    // Simulate an MLtuner episode: fork 12 trials from the root, update
+    // some, free all but the winner, then fork the next generation from
+    // the winner.  Pool must reach steady state; no branch leaks.
+    let mut ps = server_with_model(128, 256, OptimizerKind::Sgd);
+    let h = Hyper { lr: 0.01, momentum: 0.9 };
+    let mut winner: BranchId = 0;
+    let mut next: BranchId = 1;
+    for _generation in 0..5 {
+        let trials: Vec<BranchId> = (0..12)
+            .map(|_| {
+                let b = next;
+                next += 1;
+                ps.fork_branch(b, winner).unwrap();
+                b
+            })
+            .collect();
+        for &b in &trials {
+            for k in 0..128u64 {
+                ps.apply_update(b, 0, k, &vec![0.1; 256], h, None).unwrap();
+            }
+        }
+        for &b in &trials[1..] {
+            ps.free_branch(b).unwrap();
+        }
+        if winner != 0 {
+            ps.free_branch(winner).unwrap();
+        }
+        winner = trials[0];
+    }
+    assert_eq!(ps.live_branches().len(), 2); // root + current winner
+    let stats = ps.pool_stats();
+    assert!(stats.reused > stats.allocated, "{stats:?}");
+}
+
+#[test]
+fn momentum_state_follows_branch_lineage() {
+    // Momentum accumulated before a fork must influence the child the
+    // same way it influences the parent (consistent snapshot of ALL
+    // training state, §4.6).
+    let mut ps = server_with_model(4, 8, OptimizerKind::Sgd);
+    let h = Hyper { lr: 0.1, momentum: 0.9 };
+    for _ in 0..5 {
+        for k in 0..4u64 {
+            ps.apply_update(0, 0, k, &vec![1.0; 8], h, None).unwrap();
+        }
+    }
+    ps.fork_branch(1, 0).unwrap();
+    for k in 0..4u64 {
+        ps.apply_update(0, 0, k, &vec![1.0; 8], h, None).unwrap();
+        ps.apply_update(1, 0, k, &vec![1.0; 8], h, None).unwrap();
+    }
+    for k in 0..4u64 {
+        assert_eq!(
+            ps.read_row(0, 0, k).unwrap(),
+            ps.read_row(1, 0, k).unwrap()
+        );
+    }
+}
+
+#[test]
+fn adam_and_adarevision_state_snapshot() {
+    for kind in [OptimizerKind::Adam, OptimizerKind::AdaRevision] {
+        let mut ps = server_with_model(2, 4, kind);
+        let h = Hyper { lr: 0.01, momentum: 0.0 };
+        for _ in 0..3 {
+            ps.apply_update(0, 0, 0, &[0.5; 4], h, None).unwrap();
+        }
+        ps.fork_branch(7, 0).unwrap();
+        ps.apply_update(0, 0, 0, &[0.5; 4], h, None).unwrap();
+        ps.apply_update(7, 0, 0, &[0.5; 4], h, None).unwrap();
+        assert_eq!(
+            ps.read_row(0, 0, 0).unwrap(),
+            ps.read_row(7, 0, 0).unwrap(),
+            "{kind:?} slot state must snapshot with the branch"
+        );
+    }
+}
+
+#[test]
+fn worker_cache_over_branch_switches() {
+    // Shared cache across branch switches: hits within a branch, full
+    // invalidation on switch, SSP staleness honored within a branch.
+    let mut ps = server_with_model(16, 32, OptimizerKind::Sgd);
+    ps.fork_branch(1, 0).unwrap();
+    ps.fork_branch(2, 0).unwrap();
+    let mut cache = WorkerCache::new();
+    for (clock, &branch) in [1u32, 1, 2, 1].iter().enumerate() {
+        cache.switch_branch(branch);
+        for k in 0..16u64 {
+            let now = clock as u64;
+            if cache.get(0, k, now, 1).is_none() {
+                let row = ps.read_row(branch, 0, k).unwrap().to_vec();
+                cache.put(0, k, row, now);
+            }
+        }
+    }
+    let st = cache.stats();
+    // 3 branch switches happened (1->2, 2->1); each forced 16 misses
+    assert_eq!(st.branch_clears, 2);
+    assert!(st.misses >= 48);
+}
+
+#[test]
+fn deep_branch_lineage() {
+    // Chain of forks (what repeated re-tuning produces): state flows
+    // down the lineage, intermediate branches can be freed safely.
+    let mut ps = server_with_model(8, 16, OptimizerKind::Sgd);
+    let h = Hyper { lr: 1.0, momentum: 0.0 };
+    let mut parent = 0u32;
+    for g in 1..=10u32 {
+        ps.fork_branch(g, parent).unwrap();
+        ps.apply_update(g, 0, 0, &vec![1.0; 16], h, None).unwrap();
+        if parent != 0 {
+            ps.free_branch(parent).unwrap();
+        }
+        parent = g;
+    }
+    // branch 10 accumulated 10 updates of -1.0 on row 0
+    let base = ps.read_row(0, 0, 0).unwrap()[0];
+    let end = ps.read_row(10, 0, 0).unwrap()[0];
+    assert!((base - end - 10.0).abs() < 1e-5, "{base} -> {end}");
+    assert_eq!(ps.live_branches(), vec![0, 10]);
+}

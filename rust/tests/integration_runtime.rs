@@ -1,0 +1,212 @@
+//! Integration: the real three-layer stack — PJRT runtime loading the
+//! JAX/Pallas AOT artifacts and the DnnSystem training on them.
+//!
+//! Requires `make artifacts` (skipped gracefully if absent).
+
+use mltuner::apps::dnn::{DnnConfig, DnnSystem};
+use mltuner::comm::BranchType;
+use mltuner::optim::OptimizerKind;
+use mltuner::runtime::Runtime;
+use mltuner::training::TrainingSystem;
+use mltuner::tunable::TunableSetting;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn runtime() -> Option<Runtime> {
+    artifacts_dir().map(|d| Runtime::load(d).expect("load runtime"))
+}
+
+#[test]
+fn manifest_lists_expected_models() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model("alexnet_proxy").unwrap();
+    assert_eq!(m.input_dim, 64);
+    assert_eq!(m.classes, 10);
+    assert_eq!(m.param_shapes.len(), 6); // 3 layers x (W, b)
+    assert!(!m.batch_sizes("xla").is_empty());
+    assert!(!m.batch_sizes("pallas").is_empty());
+    assert!(rt.model("inception_proxy").is_ok());
+}
+
+fn init_params(rt: &Runtime, model: &str, seed: u64) -> Vec<Vec<f32>> {
+    use mltuner::util::rng::Rng;
+    let mm = rt.model(model).unwrap();
+    let mut rng = Rng::seed_from_u64(seed);
+    mm.param_shapes
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            let scale = if s.len() == 2 {
+                (2.0 / s[0] as f64).sqrt()
+            } else {
+                0.0
+            };
+            (0..n).map(|_| (rng.gen_normal() * scale) as f32).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn grad_artifact_executes_and_loss_is_sane() {
+    let Some(mut rt) = runtime() else { return };
+    let mm = rt.model("alexnet_proxy").unwrap().clone();
+    let bs = mm.batch_sizes("xla")[0];
+    let params = init_params(&rt, "alexnet_proxy", 1);
+    let x = vec![0.1f32; bs * mm.input_dim];
+    let y: Vec<i32> = (0..bs as i32).map(|i| i % mm.classes as i32).collect();
+    let (grads, loss) = rt
+        .run_grad("alexnet_proxy", bs, "xla", &params, &x, &y)
+        .unwrap();
+    assert_eq!(grads.len(), params.len());
+    for (g, p) in grads.iter().zip(&params) {
+        assert_eq!(g.len(), p.len());
+        assert!(g.iter().all(|v| v.is_finite()));
+    }
+    // per-example loss for 10 classes starts near ln(10) ~= 2.3
+    let per_example = loss / bs as f32;
+    assert!((1.0..5.0).contains(&per_example), "loss {per_example}");
+}
+
+#[test]
+fn pallas_and_xla_variants_agree_numerically() {
+    // The L1 kernels lowered into the artifact must produce the same
+    // gradients as the pure-jnp variant — the rust-side counterpart of
+    // python/tests/test_model.py.
+    let Some(mut rt) = runtime() else { return };
+    let mm = rt.model("alexnet_proxy").unwrap().clone();
+    let bs = *mm
+        .batch_sizes("pallas")
+        .iter()
+        .find(|b| mm.batch_sizes("xla").contains(b))
+        .expect("common batch size");
+    let params = init_params(&rt, "alexnet_proxy", 2);
+    let x: Vec<f32> = (0..bs * mm.input_dim)
+        .map(|i| ((i % 17) as f32 - 8.0) / 10.0)
+        .collect();
+    let y: Vec<i32> = (0..bs as i32).map(|i| (i * 3) % 10).collect();
+    let (g1, l1) = rt
+        .run_grad("alexnet_proxy", bs, "pallas", &params, &x, &y)
+        .unwrap();
+    let (g2, l2) = rt
+        .run_grad("alexnet_proxy", bs, "xla", &params, &x, &y)
+        .unwrap();
+    assert!((l1 - l2).abs() / l2.abs().max(1.0) < 1e-3, "{l1} vs {l2}");
+    for (a, b) in g1.iter().zip(&g2) {
+        for (x1, x2) in a.iter().zip(b) {
+            assert!((x1 - x2).abs() < 1e-3 + 1e-2 * x2.abs(), "{x1} vs {x2}");
+        }
+    }
+}
+
+#[test]
+fn eval_artifact_counts_correct_predictions() {
+    let Some(mut rt) = runtime() else { return };
+    let mm = rt.model("alexnet_proxy").unwrap().clone();
+    let eb = mm.eval_batch;
+    let params = init_params(&rt, "alexnet_proxy", 3);
+    let x = vec![0.05f32; eb * mm.input_dim];
+    let y = vec![0i32; eb];
+    let (correct, loss) = rt
+        .run_eval("alexnet_proxy", "xla", &params, &x, &y)
+        .unwrap();
+    assert!((0.0..=eb as f32).contains(&correct));
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(mut rt) = runtime() else { return };
+    let mm = rt.model("alexnet_proxy").unwrap().clone();
+    let bs = mm.batch_sizes("xla")[0];
+    let params = init_params(&rt, "alexnet_proxy", 4);
+    let x = vec![0.0f32; bs * mm.input_dim];
+    let y = vec![0i32; bs];
+    for _ in 0..3 {
+        rt.run_grad("alexnet_proxy", bs, "xla", &params, &x, &y)
+            .unwrap();
+    }
+    assert_eq!(rt.compiles, 1, "must compile once, then hit the cache");
+}
+
+#[test]
+fn dnn_system_trains_and_loss_decreases() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let mut sys = DnnSystem::new(
+        DnnConfig {
+            train_examples: 1024,
+            val_examples: 256,
+            num_workers: 2,
+            spread: 0.4,
+            ..Default::default()
+        },
+        rt,
+        OptimizerKind::Sgd,
+    )
+    .unwrap();
+    // lr=0.05, momentum=0.9, smallest batch size, staleness 0
+    let setting = TunableSetting::new(vec![0.05, 0.9, 4.0, 0.0]);
+    sys.fork_branch(0, 1, None, &setting, BranchType::Training)
+        .unwrap();
+    let mut first_epoch = 0.0;
+    let mut last_epoch = 0.0;
+    let clocks = 384u64; // ~3 epochs at 8 examples/clock
+    for c in 0..clocks {
+        let v = sys.schedule_branch(c, 1).unwrap().value;
+        if c < 32 {
+            first_epoch += v;
+        }
+        if c >= clocks - 32 {
+            last_epoch += v;
+        }
+    }
+    assert!(
+        last_epoch < first_epoch * 0.8,
+        "loss did not decrease: {first_epoch} -> {last_epoch}"
+    );
+    // validation accuracy beats chance (10 classes)
+    sys.fork_branch(clocks, 2, Some(1), &setting, BranchType::Testing)
+        .unwrap();
+    let acc = sys.schedule_branch(clocks, 2).unwrap().value;
+    assert!(acc > 0.15, "accuracy {acc}");
+}
+
+#[test]
+fn dnn_branches_are_isolated() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir).unwrap();
+    let mut sys = DnnSystem::new(
+        DnnConfig {
+            train_examples: 256,
+            val_examples: 128,
+            num_workers: 2,
+            ..Default::default()
+        },
+        rt,
+        OptimizerKind::Sgd,
+    )
+    .unwrap();
+    let good = TunableSetting::new(vec![0.05, 0.9, 4.0, 0.0]);
+    let crazy = TunableSetting::new(vec![10.0, 0.99, 4.0, 0.0]);
+    sys.fork_branch(0, 1, None, &good, BranchType::Training).unwrap();
+    for c in 0..10 {
+        sys.schedule_branch(c, 1).unwrap();
+    }
+    // fork a crazy-LR branch from the trained one; wreck it
+    sys.fork_branch(10, 2, Some(1), &crazy, BranchType::Training).unwrap();
+    for c in 10..20 {
+        sys.schedule_branch(c, 2).unwrap();
+    }
+    // the parent still trains fine after the crazy branch is freed
+    sys.free_branch(20, 2).unwrap();
+    let p = sys.schedule_branch(20, 1).unwrap();
+    assert!(p.value.is_finite());
+}

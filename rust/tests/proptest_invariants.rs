@@ -1,0 +1,324 @@
+//! Property tests over coordinator invariants (hand-rolled harness —
+//! `proptest` is not vendored offline; `prop!` runs a closure over many
+//! seeded random cases and reports the failing seed).
+
+use mltuner::comm::{BranchType, ProtocolChecker, TunerMsg};
+use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
+use mltuner::ps::ParamServer;
+use mltuner::summarizer::{BranchLabel, ProgressPoint, ProgressSummarizer};
+use mltuner::tunable::{TunableSetting, TunableSpace, TunableSpec};
+use mltuner::training::clock::SspClock;
+use mltuner::util::rng::Rng;
+
+/// Run `f` over `n` seeded cases; panic with the seed on failure.
+fn prop(n: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::seed_from_u64(seed * 0x9E37_79B9 + 17);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_space(rng: &mut Rng) -> TunableSpace {
+    let dim = rng.gen_range(1, 6);
+    let specs = (0..dim)
+        .map(|i| match rng.gen_range(0, 3) {
+            0 => {
+                let k = rng.gen_range(1, 6);
+                TunableSpec::Discrete {
+                    name: format!("d{i}"),
+                    values: (0..k).map(|j| j as f64 * 3.0 + 1.0).collect(),
+                }
+            }
+            1 => TunableSpec::Linear {
+                name: format!("l{i}"),
+                min: -2.0 + rng.gen_f64(),
+                max: 1.0 + rng.gen_f64() * 5.0,
+            },
+            _ => TunableSpec::Log {
+                name: format!("g{i}"),
+                min: 10f64.powf(-1.0 - 4.0 * rng.gen_f64()),
+                max: 10f64.powf(rng.gen_f64()),
+            },
+        })
+        .collect();
+    TunableSpace::new(specs)
+}
+
+#[test]
+fn prop_tunable_encode_decode_roundtrip() {
+    // decode∘encode∘decode is idempotent for every space and point.
+    prop(200, |rng| {
+        let space = random_space(rng);
+        let u: Vec<f64> = (0..space.dim()).map(|_| rng.gen_f64()).collect();
+        let setting = space.decode(&u);
+        let u2 = space.encode(&setting);
+        let setting2 = space.decode(&u2);
+        for (a, b) in setting.values.iter().zip(&setting2.values) {
+            assert!(
+                (a - b).abs() <= 1e-9 * a.abs().max(1.0),
+                "{a} != {b} in {space:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_decoded_values_always_in_range() {
+    prop(200, |rng| {
+        let space = random_space(rng);
+        let u: Vec<f64> = (0..space.dim())
+            .map(|_| rng.gen_f64() * 1.4 - 0.2) // deliberately out of cube
+            .collect();
+        let setting = space.decode(&u);
+        for (spec, v) in space.specs.iter().zip(&setting.values) {
+            match spec {
+                TunableSpec::Discrete { values, .. } => {
+                    assert!(values.contains(v))
+                }
+                TunableSpec::Linear { min, max, .. } => {
+                    assert!(*v >= *min - 1e-12 && *v <= *max + 1e-12)
+                }
+                TunableSpec::Log { min, max, .. } => {
+                    assert!(*v >= *min * (1.0 - 1e-9) && *v <= *max * (1.0 + 1e-9))
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_summarizer_speed_nonnegative_and_time_scaling() {
+    // speed ≥ 0 always; compressing time by c multiplies speed by c.
+    let s = ProgressSummarizer::default();
+    prop(200, |rng| {
+        let n = rng.gen_range(2, 200);
+        let mut x = 10.0;
+        let trace: Vec<ProgressPoint> = (0..n)
+            .map(|i| {
+                x += rng.gen_normal() - 0.1;
+                ProgressPoint { t: i as f64 + 1.0, x }
+            })
+            .collect();
+        let sum = s.summarize(&trace);
+        assert!(sum.speed >= 0.0);
+        let fast: Vec<ProgressPoint> = trace
+            .iter()
+            .map(|p| ProgressPoint { t: p.t / 4.0, x: p.x })
+            .collect();
+        let sum_fast = s.summarize(&fast);
+        if sum.speed > 0.0 {
+            assert!(
+                (sum_fast.speed / sum.speed - 4.0).abs() < 1e-6,
+                "time scaling broke: {} vs {}",
+                sum_fast.speed,
+                sum.speed
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_summarizer_never_labels_white_noise_converging() {
+    // The K=10 design bound: flat white noise should (almost) never be
+    // labelled Converging.  With 400 seeds we allow zero occurrences
+    // (expected rate < 0.1%).
+    let s = ProgressSummarizer::default();
+    let mut converging = 0;
+    for seed in 0..400u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let trace: Vec<ProgressPoint> = (0..50)
+            .map(|i| ProgressPoint {
+                t: i as f64,
+                x: rng.gen_normal(),
+            })
+            .collect();
+        if s.summarize(&trace).label == BranchLabel::Converging {
+            converging += 1;
+        }
+    }
+    assert!(converging <= 1, "white noise converged {converging}/400");
+}
+
+#[test]
+fn prop_protocol_checker_accepts_valid_streams_rejects_mutations() {
+    prop(100, |rng| {
+        // build a valid stream: per clock, one schedule, with optional
+        // fork/free before it.
+        let mut msgs = Vec::new();
+        let mut clock = 0u64;
+        for _ in 0..rng.gen_range(1, 30) {
+            if rng.gen_f64() < 0.3 {
+                msgs.push(TunerMsg::ForkBranch {
+                    clock,
+                    branch_id: rng.gen_range(1, 100) as u32,
+                    parent_branch_id: Some(0),
+                    tunable: TunableSetting::new(vec![0.5]),
+                    branch_type: BranchType::Training,
+                });
+            }
+            msgs.push(TunerMsg::ScheduleBranch {
+                clock,
+                branch_id: 1,
+            });
+            clock += 1;
+            if rng.gen_f64() < 0.2 {
+                msgs.push(TunerMsg::FreeBranch {
+                    clock,
+                    branch_id: rng.gen_range(1, 100) as u32,
+                });
+            }
+        }
+        let mut checker = ProtocolChecker::default();
+        for m in &msgs {
+            checker.check(m).expect("valid stream rejected");
+        }
+        // mutate one schedule clock => must be rejected somewhere
+        let mut mutated = msgs.clone();
+        let sched_idx: Vec<usize> = mutated
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| matches!(m, TunerMsg::ScheduleBranch { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        let pick = sched_idx[rng.gen_range(0, sched_idx.len())];
+        if let TunerMsg::ScheduleBranch { clock, .. } = &mut mutated[pick] {
+            *clock += 1 + rng.gen_range(0, 5) as u64;
+        }
+        let mut checker = ProtocolChecker::default();
+        let ok = mutated.iter().all(|m| checker.check(m).is_ok());
+        assert!(!ok, "mutated stream accepted");
+    });
+}
+
+#[test]
+fn prop_ps_fork_free_preserves_row_counts_and_pool() {
+    // After arbitrary fork/free interleavings, live branches have
+    // exactly the root's row count and freeing everything returns the
+    // pool to steady state.
+    prop(60, |rng| {
+        let mut ps = ParamServer::new(
+            rng.gen_range(1, 8),
+            Optimizer::new(OptimizerKind::Sgd),
+        );
+        let rows = rng.gen_range(1, 40);
+        for k in 0..rows {
+            ps.insert_row(0, 0, k as u64, vec![0.0; rng.gen_range(1, 16)]);
+        }
+        let mut live: Vec<u32> = vec![0];
+        let mut next = 1u32;
+        for _ in 0..rng.gen_range(1, 40) {
+            if rng.gen_f64() < 0.6 || live.len() == 1 {
+                let parent = live[rng.gen_range(0, live.len())];
+                ps.fork_branch(next, parent).unwrap();
+                live.push(next);
+                next += 1;
+            } else {
+                let idx = rng.gen_range(1, live.len());
+                let b = live.swap_remove(idx);
+                ps.free_branch(b).unwrap();
+            }
+            for &b in &live {
+                assert_eq!(ps.branch_row_count(b), rows);
+            }
+        }
+        let mut sorted = live.clone();
+        sorted.sort_unstable();
+        assert_eq!(ps.live_branches(), sorted);
+    });
+}
+
+#[test]
+fn prop_ps_update_only_touches_target_row_and_branch() {
+    prop(60, |rng| {
+        let mut ps = ParamServer::new(4, Optimizer::new(OptimizerKind::Sgd));
+        let rows = rng.gen_range(2, 16) as u64;
+        for k in 0..rows {
+            ps.insert_row(0, 0, k, vec![1.0; 4]);
+        }
+        ps.fork_branch(1, 0).unwrap();
+        let target = rng.gen_range(0, rows as usize) as u64;
+        ps.apply_update(
+            1,
+            0,
+            target,
+            &[0.5; 4],
+            Hyper { lr: 1.0, momentum: 0.0 },
+            None,
+        )
+        .unwrap();
+        for k in 0..rows {
+            assert_eq!(ps.read_row(0, 0, k).unwrap(), &[1.0; 4], "root touched");
+            if k != target {
+                assert_eq!(ps.read_row(1, 0, k).unwrap(), &[1.0; 4]);
+            } else {
+                assert_eq!(ps.read_row(1, 0, k).unwrap(), &[0.5; 4]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ssp_spread_never_exceeds_bound() {
+    prop(100, |rng| {
+        let workers = rng.gen_range(1, 9);
+        let staleness = rng.gen_range(0, 8) as u32;
+        let mut clock = SspClock::new(workers, staleness);
+        for _ in 0..300 {
+            let w = rng.gen_range(0, workers);
+            if clock.can_advance(w) {
+                clock.advance(w);
+            }
+            assert!(
+                clock.spread() <= staleness as u64 + 1,
+                "spread {} > bound {}",
+                clock.spread(),
+                staleness + 1
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_optimizers_reduce_quadratic_loss_on_random_starts() {
+    // Every rule, from random starts with reasonable LR, must not
+    // increase the loss over a long horizon.
+    prop(40, |rng| {
+        for kind in [
+            OptimizerKind::Sgd,
+            OptimizerKind::AdaGrad,
+            OptimizerKind::RmsProp,
+            OptimizerKind::Adam,
+            OptimizerKind::AdaRevision,
+        ] {
+            let opt = Optimizer::new(kind);
+            let dim = rng.gen_range(1, 8);
+            let mut e = mltuner::ps::storage::Entry {
+                data: (0..dim).map(|_| rng.gen_normal() as f32 * 3.0).collect(),
+                slots: Vec::new(),
+                step: 0,
+            };
+            let start: f32 = e.data.iter().map(|v| v * v).sum();
+            let lr = match kind {
+                OptimizerKind::Sgd => 0.05,
+                _ => 0.3,
+            };
+            for _ in 0..500 {
+                let grad = e.data.clone();
+                opt.apply(
+                    Hyper { lr, momentum: 0.3 },
+                    &mut e,
+                    &grad,
+                    None,
+                );
+            }
+            let end: f32 = e.data.iter().map(|v| v * v).sum();
+            assert!(end <= start * 1.01 && end.is_finite(), "{kind:?}: {start} -> {end}");
+        }
+    });
+}
