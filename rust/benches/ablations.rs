@@ -5,14 +5,19 @@
 //!    truly-better of two settings higher, from a short noisy trial?
 //! 2. **Automatic trial time (Algorithm 1)** vs TuPAQ-style fixed
 //!    trial lengths: chosen-setting quality and tuning cost.
+//! 3. **Copy-on-write branch snapshots (§4.6)** vs eager deep-copy
+//!    forks: fork latency across model sizes — COW must be flat in
+//!    model bytes and ≥10× cheaper at DNN scale.
 
 use mltuner::apps::sim::{SimProfile, SimSystem};
 use mltuner::comm::BranchType;
+use mltuner::ps::pool::MemoryPool;
+use mltuner::ps::storage::{Entry, Shard};
 use mltuner::summarizer::{ProgressPoint, ProgressSummarizer};
 use mltuner::training::TrainingSystem;
 use mltuner::tunable::TunableSetting;
 use mltuner::tuner::{ConvergenceCriterion, MLtuner, TunerConfig};
-use mltuner::util::bench::{table_header, table_row};
+use mltuner::util::bench::{bench, table_header, table_row};
 use mltuner::util::rng::Rng;
 
 /// Naive estimator the paper argues against: slope from the first and
@@ -207,9 +212,72 @@ fn ablate_trial_time() {
     );
 }
 
+fn ablate_fork_cost() {
+    table_header(
+        "Ablation 3 — branch fork latency: COW vs eager deep-copy",
+        &["model (rows x row_len)", "cow mean", "eager mean", "eager/cow"],
+    );
+    // 26k params (alexnet_proxy) -> 8.4M params (large DNN); one
+    // SGD velocity slot per row, like the real server under Sgd.
+    for (rows, row_len) in [(8usize, 4096usize), (343, 4096), (2048, 4096)] {
+        let build = || {
+            let mut shard = Shard::default();
+            for k in 0..rows {
+                shard.insert(
+                    0,
+                    0,
+                    k as u64,
+                    Entry {
+                        data: vec![0.5; row_len],
+                        slots: vec![vec![0.0; row_len]],
+                        step: 0,
+                    },
+                );
+            }
+            shard
+        };
+        let mut pool = MemoryPool::new();
+        let mut shard = build();
+        let mut next = 1u32;
+        let cow = bench(
+            &format!("cow fork+free ({rows}x{row_len})"),
+            150.0,
+            20_000,
+            || {
+                shard.fork(next, 0, &mut pool);
+                shard.free(next, &mut pool);
+                next += 1;
+            },
+        );
+        let mut shard = build();
+        let mut next = 1u32;
+        let eager = bench(
+            &format!("eager fork+free ({rows}x{row_len})"),
+            250.0,
+            5_000,
+            || {
+                shard.fork_eager(next, 0, &mut pool);
+                shard.free(next, &mut pool);
+                next += 1;
+            },
+        );
+        table_row(&[
+            format!("{rows}x{row_len}"),
+            format!("{:.1}µs", cow.mean_ns / 1e3),
+            format!("{:.1}µs", eager.mean_ns / 1e3),
+            format!("{:.1}x", eager.mean_ns / cow.mean_ns.max(1.0)),
+        ]);
+    }
+    println!(
+        "\nCOW forks clone only the branch index (Arc bumps), so their cost\n\
+         tracks #rows, not model bytes; eager forks copy every buffer."
+    );
+}
+
 fn main() {
     let t0 = std::time::Instant::now();
     ablate_summarizer();
     ablate_trial_time();
+    ablate_fork_cost();
     println!("\n[bench wall time {:.1}s]", t0.elapsed().as_secs_f64());
 }

@@ -5,6 +5,8 @@
 
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
 use mltuner::ps::cache::WorkerCache;
+use mltuner::ps::pool::MemoryPool;
+use mltuner::ps::storage::{Entry, Shard};
 use mltuner::ps::ParamServer;
 use mltuner::runtime::Runtime;
 use mltuner::searcher::{Proposal, SearcherKind};
@@ -20,28 +22,82 @@ fn ps_with_model(rows: usize, row_len: usize) -> ParamServer {
     ps
 }
 
+/// Build a shard directly (exposes the eager-fork baseline the
+/// `ParamServer` API no longer routes through).
+fn shard_with_model(rows: usize, row_len: usize) -> Shard {
+    let mut shard = Shard::default();
+    for k in 0..rows {
+        shard.insert(
+            0,
+            0,
+            k as u64,
+            Entry {
+                data: vec![0.5; row_len],
+                slots: vec![vec![0.0; row_len]],
+                step: 0,
+            },
+        );
+    }
+    shard
+}
+
 fn main() {
     println!("== L3 micro hot paths ==");
 
-    // ps fork/free cycle: ~alexnet_proxy model size (26k params → 7 rows)
-    {
-        let mut ps = ps_with_model(8, 4096);
+    // Branch fork/free under copy-on-write: cost must be independent of
+    // row length (model bytes) — only the index size (#rows) matters.
+    // 8x4096 ≈ alexnet_proxy (26k params), 343x4096 ≈ inception_proxy
+    // (1.4M params), 2048x4096 ≈ a 8.4M-param DNN.
+    for (rows, label) in [(8usize, "8x4096"), (343, "343x4096"), (2048, "2048x4096")] {
+        let mut ps = ps_with_model(rows, 4096);
         let mut next = 1u32;
-        bench("ps fork+free (8x4096 rows, pooled)", 200.0, 20_000, || {
-            ps.fork_branch(next, 0).unwrap();
-            ps.free_branch(next).unwrap();
-            next += 1;
-        });
+        bench(
+            &format!("ps fork+free COW ({label} rows)"),
+            200.0,
+            20_000,
+            || {
+                ps.fork_branch(next, 0).unwrap();
+                ps.free_branch(next).unwrap();
+                next += 1;
+            },
+        );
     }
-    // ~inception_proxy size (1.4M params → 343 rows)
+    // Eager deep-copy baseline (the pre-COW fork), same sizes: O(model
+    // bytes) per fork.  The COW/eager gap at the DNN sizes is the
+    // tentpole speedup; record both in CHANGES.md.
+    for (rows, label) in [(8usize, "8x4096"), (343, "343x4096"), (2048, "2048x4096")] {
+        let mut shard = shard_with_model(rows, 4096);
+        let mut pool = MemoryPool::new();
+        let mut next = 1u32;
+        bench(
+            &format!("shard fork_eager+free ({label} rows, pooled)"),
+            300.0,
+            5_000,
+            || {
+                shard.fork_eager(next, 0, &mut pool);
+                shard.free(next, &mut pool);
+                next += 1;
+            },
+        );
+    }
+    // First write after a COW fork: the deferred per-row
+    // materialization cost a trial pays only for rows it touches.
     {
         let mut ps = ps_with_model(343, 4096);
+        let grad = vec![0.01f32; 4096];
+        let h = Hyper { lr: 0.01, momentum: 0.9 };
         let mut next = 1u32;
-        bench("ps fork+free (343x4096 rows, pooled)", 300.0, 5_000, || {
-            ps.fork_branch(next, 0).unwrap();
-            ps.free_branch(next).unwrap();
-            next += 1;
-        });
+        bench(
+            "ps fork + first-write 1 row + free (COW materialize)",
+            200.0,
+            20_000,
+            || {
+                ps.fork_branch(next, 0).unwrap();
+                ps.apply_update(next, 0, 0, &grad, h, None).unwrap();
+                ps.free_branch(next).unwrap();
+                next += 1;
+            },
+        );
     }
     // server-side update application
     {

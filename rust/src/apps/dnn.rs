@@ -24,7 +24,7 @@ use crate::ps::cache::WorkerCache;
 use crate::ps::storage::{RowKey, TableId};
 use crate::ps::ParamServer;
 use crate::runtime::Runtime;
-use crate::training::{Progress, TrainingSystem};
+use crate::training::{Progress, SnapshotStats, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
 
 /// Parameter rows are chunks of this many f32s (sharding granularity).
@@ -399,5 +399,14 @@ impl TrainingSystem for DnnSystem {
 
     fn system_name(&self) -> &'static str {
         "dnn"
+    }
+
+    fn snapshot_stats(&self) -> SnapshotStats {
+        SnapshotStats {
+            live_branches: self.branches.len(),
+            peak_branches: self.ps.peak_branches(),
+            forks: self.ps.fork_count(),
+            cow_buffer_copies: self.ps.cow_buffer_copies(),
+        }
     }
 }

@@ -23,7 +23,7 @@ use crate::data::RatingsDataset;
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
 use crate::ps::storage::{RowKey, TableId};
 use crate::ps::ParamServer;
-use crate::training::{Progress, TrainingSystem};
+use crate::training::{Progress, SnapshotStats, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpec, TunableSpace};
 
 const T_USER: TableId = 0;
@@ -304,6 +304,15 @@ impl TrainingSystem for MfSystem {
 
     fn system_name(&self) -> &'static str {
         "mf"
+    }
+
+    fn snapshot_stats(&self) -> SnapshotStats {
+        SnapshotStats {
+            live_branches: self.branches.len(),
+            peak_branches: self.ps.peak_branches(),
+            forks: self.ps.fork_count(),
+            cow_buffer_copies: self.ps.cow_buffer_copies(),
+        }
     }
 }
 

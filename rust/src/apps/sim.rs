@@ -39,7 +39,7 @@ use crate::util::rng::Rng;
 
 use crate::comm::{BranchId, BranchType, Clock};
 use crate::optim::OptimizerKind;
-use crate::training::{Progress, TrainingSystem};
+use crate::training::{Progress, SnapshotStats, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
 
 /// Calibrated constants for one benchmark profile.
@@ -548,6 +548,17 @@ impl TrainingSystem for SimSystem {
 
     fn system_name(&self) -> &'static str {
         "sim"
+    }
+
+    fn snapshot_stats(&self) -> SnapshotStats {
+        SnapshotStats {
+            live_branches: self.branches.len(),
+            peak_branches: self.peak_branches,
+            forks: self.forked,
+            // the simulator's branch state is a few scalars — no
+            // parameter buffers exist to copy
+            cow_buffer_copies: 0,
+        }
     }
 }
 

@@ -109,15 +109,32 @@ pub struct ProtocolChecker {
     schedules_seen: u64,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ProtocolError {
-    #[error("clock {got} not monotonically increasing (last {last})")]
     OutOfOrder { got: Clock, last: Clock },
-    #[error("clock {clock} scheduled more than once")]
     DuplicateSchedule { clock: Clock },
-    #[error("clock gap: expected schedule for clock {expected}, got {got}")]
     MissingSchedule { expected: Clock, got: Clock },
 }
+
+impl std::fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtocolError::OutOfOrder { got, last } => write!(
+                f,
+                "clock {got} not monotonically increasing (last {last})"
+            ),
+            ProtocolError::DuplicateSchedule { clock } => {
+                write!(f, "clock {clock} scheduled more than once")
+            }
+            ProtocolError::MissingSchedule { expected, got } => write!(
+                f,
+                "clock gap: expected schedule for clock {expected}, got {got}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
 
 impl ProtocolChecker {
     pub fn check(&mut self, msg: &TunerMsg) -> Result<(), ProtocolError> {

@@ -13,7 +13,7 @@ use crate::comm::{BranchId, BranchType, Clock};
 use crate::optim::OptimizerKind;
 use crate::runtime::Runtime;
 use crate::searcher::SearcherKind;
-use crate::training::{Progress, TrainingSystem};
+use crate::training::{Progress, SnapshotStats, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
 use crate::tuner::{ConvergenceCriterion, TunerConfig};
 use crate::util::toml::TomlDoc;
@@ -303,6 +303,14 @@ impl TrainingSystem for AnySystem {
             AnySystem::Sim(s) => s.system_name(),
             AnySystem::Dnn(s) => s.system_name(),
             AnySystem::Mf(s) => s.system_name(),
+        }
+    }
+
+    fn snapshot_stats(&self) -> SnapshotStats {
+        match self {
+            AnySystem::Sim(s) => s.snapshot_stats(),
+            AnySystem::Dnn(s) => s.snapshot_stats(),
+            AnySystem::Mf(s) => s.snapshot_stats(),
         }
     }
 }

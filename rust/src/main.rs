@@ -82,6 +82,12 @@ fn cmd_tune(args: &Args) -> Result<()> {
         100.0 * report.tuning_time / report.total_time.max(1e-9)
     );
     println!("tunings:         {}", report.tunings.len());
+    println!(
+        "branching:       {} forks, peak {} live, {} COW buffer copies",
+        report.snapshots.forks,
+        report.snapshots.peak_branches,
+        report.snapshots.cow_buffer_copies
+    );
     for (i, t) in report.tunings.iter().enumerate() {
         println!(
             "  [{}] {} trials={} trial_time={:.1}s chosen={}",

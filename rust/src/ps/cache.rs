@@ -9,7 +9,13 @@
 //! **shared between branches and cleared on every branch switch** —
 //! sharing the cache memory (instead of duplicating it per branch) is
 //! what makes the GPU-memory-constrained systems fit.
+//!
+//! The server's copy-on-write branch storage is invisible here: a
+//! cached row is a worker-private value copy, so server-side
+//! materialization never invalidates it.  Staleness (SSP) and branch
+//! switches remain the only two invalidation sources.
 
+use std::collections::hash_map::Entry as MapEntry;
 use std::collections::HashMap;
 
 use crate::comm::{BranchId, Clock};
@@ -66,22 +72,24 @@ impl WorkerCache {
         now: Clock,
         staleness: u32,
     ) -> Option<&[f32]> {
-        // Split borrow: decide staleness first.
-        let fresh = match self.rows.get(&(table, key)) {
-            None => {
-                self.stats.misses += 1;
-                return None;
+        // Single hash lookup on the hot path (§Perf): the occupied
+        // entry serves both the freshness check and the hit/evict.
+        match self.rows.entry((table, key)) {
+            MapEntry::Occupied(e) => {
+                if now.saturating_sub(e.get().fetched_at) <= staleness as Clock {
+                    self.stats.hits += 1;
+                    Some(&e.into_mut().data)
+                } else {
+                    e.remove();
+                    self.stats.stale_evictions += 1;
+                    self.stats.misses += 1;
+                    None
+                }
             }
-            Some(row) => now.saturating_sub(row.fetched_at) <= staleness as Clock,
-        };
-        if fresh {
-            self.stats.hits += 1;
-            Some(&self.rows.get(&(table, key)).unwrap().data)
-        } else {
-            self.rows.remove(&(table, key));
-            self.stats.stale_evictions += 1;
-            self.stats.misses += 1;
-            None
+            MapEntry::Vacant(_) => {
+                self.stats.misses += 1;
+                None
+            }
         }
     }
 

@@ -3,11 +3,15 @@
 //!
 //! Parameter data lives as key→row pairs in memory, sharded across
 //! server shards (one per worker machine in the paper's deployments).
-//! Branch support adds the branch ID as an additional index field; forks
-//! copy the parent's rows out of a user-level [`pool::MemoryPool`], and
-//! frees reclaim them.  Optimizer slot state is row-resident and is
-//! forked/freed together with the data, so a branch snapshot is a
-//! *consistent* snapshot of all training state.
+//! Branch support adds the branch ID as an additional index field.
+//! Branches are **copy-on-write** (see [`storage`]): a fork snapshots
+//! only the index (O(#rows) pointer copies, zero buffer traffic), the
+//! first write to a row under a branch materializes a private copy from
+//! the user-level [`pool::MemoryPool`], and a free reclaims a row's
+//! buffers only when the freed branch was its last owner.  Optimizer
+//! slot state is row-resident and is snapshotted together with the
+//! data, so a branch snapshot is a *consistent* snapshot of all
+//! training state.
 
 pub mod cache;
 pub mod thread_cache;
@@ -15,6 +19,7 @@ pub mod pool;
 pub mod storage;
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -32,6 +37,10 @@ pub struct ParamServer {
     optimizer: Optimizer,
     /// rows per branch (all shards), for accounting.
     branch_rows: HashMap<BranchId, usize>,
+    /// Branch forks served since construction.
+    forks: u64,
+    /// Peak number of simultaneously-live branches (§4.6 memory check).
+    peak_branches: usize,
 }
 
 impl ParamServer {
@@ -42,6 +51,8 @@ impl ParamServer {
             pool: MemoryPool::new(),
             optimizer,
             branch_rows: HashMap::new(),
+            forks: 0,
+            peak_branches: 0,
         }
     }
 
@@ -63,7 +74,10 @@ impl ParamServer {
     }
 
     /// Install a fresh row into `branch` (used when initializing the
-    /// root branch's model state).
+    /// root branch's model state).  Re-inserting an existing key
+    /// overwrites it: the displaced row's buffers are reclaimed when
+    /// this branch was their last owner, and the row count is not
+    /// double-counted.
     pub fn insert_row(
         &mut self,
         branch: BranchId,
@@ -78,12 +92,22 @@ impl ParamServer {
             step: 0,
         };
         self.optimizer.init_slots(&mut entry);
-        self.shards[sid].insert(branch, table, key, entry);
-        *self.branch_rows.entry(branch).or_insert(0) += 1;
+        match self.shards[sid].insert(branch, table, key, entry) {
+            Some(displaced) => {
+                if let Ok(old) = Arc::try_unwrap(displaced) {
+                    self.pool.recycle_entry(old);
+                }
+            }
+            None => {
+                *self.branch_rows.entry(branch).or_insert(0) += 1;
+            }
+        }
+        self.peak_branches = self.peak_branches.max(self.branch_rows.len());
     }
 
-    /// Fork `child` from `parent`: a consistent snapshot of parameter
-    /// data + optimizer state, copied via the memory pool.
+    /// Fork `child` from `parent`: a consistent copy-on-write snapshot
+    /// of parameter data + optimizer state.  Cost is O(#rows) index
+    /// clones — independent of row length, no buffer copies.
     pub fn fork_branch(&mut self, child: BranchId, parent: BranchId) -> Result<()> {
         if self.branch_rows.contains_key(&child) {
             bail!("branch {child} already exists");
@@ -96,10 +120,14 @@ impl ParamServer {
             rows += shard.fork(child, parent, &mut self.pool);
         }
         self.branch_rows.insert(child, rows);
+        self.forks += 1;
+        self.peak_branches = self.peak_branches.max(self.branch_rows.len());
         Ok(())
     }
 
-    /// Free `branch`, reclaiming all its memory into the pool.
+    /// Free `branch`.  Row buffers return to the pool only once their
+    /// last owning branch is freed; rows still shared with ancestors or
+    /// siblings stay live under those owners.
     pub fn free_branch(&mut self, branch: BranchId) -> Result<()> {
         if self.branch_rows.remove(&branch).is_none() {
             bail!("branch {branch} does not exist");
@@ -122,6 +150,35 @@ impl ParamServer {
 
     pub fn branch_row_count(&self, branch: BranchId) -> usize {
         self.branch_rows.get(&branch).copied().unwrap_or(0)
+    }
+
+    /// Branch forks served since construction.
+    pub fn fork_count(&self) -> u64 {
+        self.forks
+    }
+
+    /// Peak number of simultaneously-live branches.
+    pub fn peak_branches(&self) -> usize {
+        self.peak_branches
+    }
+
+    /// Buffers privately materialized by copy-on-write since
+    /// construction (the pool is only ever drawn from for COW copies).
+    pub fn cow_buffer_copies(&self) -> u64 {
+        let s = self.pool.stats();
+        s.allocated + s.reused
+    }
+
+    /// Is this row's buffer still shared with another branch?
+    /// (Test/bench introspection of the COW state.)
+    pub fn row_shared(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+    ) -> Option<bool> {
+        let sid = self.shard_of(table, key);
+        self.shards[sid].row_shared(branch, table, key)
     }
 
     /// Read one row (server-side authoritative copy).
@@ -152,7 +209,9 @@ impl ParamServer {
 
     /// Apply one batch-normalized gradient to a row; the server applies
     /// the learning rate / momentum / adaptive rule (`hyper` carries the
-    /// tunables).
+    /// tunables).  The write goes through the copy-on-write path: a row
+    /// still shared with other branches is privately materialized
+    /// first.
     pub fn apply_update(
         &mut self,
         branch: BranchId,
@@ -164,7 +223,7 @@ impl ParamServer {
     ) -> Result<()> {
         let sid = self.shard_of(table, key);
         let opt = self.optimizer;
-        match self.shards[sid].get_mut(branch, table, key) {
+        match self.shards[sid].get_mut(branch, table, key, &mut self.pool) {
             None => bail!("row ({table},{key}) missing in branch {branch}"),
             Some(entry) => {
                 opt.apply(hyper, entry, grad, z_old);
@@ -231,6 +290,32 @@ mod tests {
     }
 
     #[test]
+    fn reinsert_overwrites_without_double_count() {
+        let mut ps = ps(OptimizerKind::Sgd);
+        ps.insert_row(0, 0, 0, vec![1.0, 2.0]);
+        ps.insert_row(0, 0, 0, vec![3.0, 4.0]);
+        assert_eq!(ps.branch_row_count(0), 1);
+        assert_eq!(ps.read_row(0, 0, 0).unwrap(), &[3.0, 4.0]);
+        // the displaced sole-owner row (data + velocity) was reclaimed
+        assert_eq!(ps.pool_stats().idle, 2);
+    }
+
+    #[test]
+    fn fork_copies_no_buffers() {
+        // The COW contract: forking even a large branch allocates and
+        // copies nothing — only the index is cloned.
+        let mut ps = ps(OptimizerKind::Adam);
+        init_root(&mut ps, 64, 256);
+        let before = ps.pool_stats();
+        ps.fork_branch(1, 0).unwrap();
+        let after = ps.pool_stats();
+        assert_eq!(before, after, "fork must not touch the pool");
+        assert_eq!(ps.branch_row_count(1), 64);
+        assert_eq!(ps.row_shared(1, 0, 0), Some(true));
+        assert_eq!(ps.fork_count(), 1);
+    }
+
+    #[test]
     fn fork_then_update_isolated() {
         let mut ps = ps(OptimizerKind::Sgd);
         init_root(&mut ps, 8, 4);
@@ -239,6 +324,9 @@ mod tests {
             .unwrap();
         assert_eq!(ps.read_row(0, 0, 3).unwrap()[0], 3.0);
         assert_eq!(ps.read_row(1, 0, 3).unwrap()[0], 2.0);
+        // only the written row was materialized
+        assert_eq!(ps.row_shared(1, 0, 3), Some(false));
+        assert_eq!(ps.row_shared(1, 0, 4), Some(true));
     }
 
     #[test]
@@ -254,8 +342,8 @@ mod tests {
         ps.apply_update(0, 0, 0, &[1.0], h, None).unwrap();
         ps.apply_update(1, 0, 0, &[1.0], h, None).unwrap();
         assert_eq!(
-            ps.read_row(0, 0, 0).unwrap()[0],
-            ps.read_row(1, 0, 0).unwrap()[0]
+            ps.read_row(0, 0, 0).unwrap(),
+            ps.read_row(1, 0, 0).unwrap()
         );
     }
 
@@ -270,19 +358,48 @@ mod tests {
     }
 
     #[test]
-    fn fork_free_cycle_reuses_pool_memory() {
+    fn fork_write_free_cycle_reuses_pool_memory() {
+        // Steady-state tuning churn: fork a trial, update every row
+        // (worst-case materialization), free it.  After the first
+        // cycle the pool serves every materialization.
         let mut ps = ps(OptimizerKind::Adam);
         init_root(&mut ps, 32, 16);
-        ps.fork_branch(1, 0).unwrap();
-        ps.free_branch(1).unwrap();
+        let h = Hyper { lr: 0.01, momentum: 0.0 };
+        let cycle = |ps: &mut ParamServer, b: BranchId| {
+            ps.fork_branch(b, 0).unwrap();
+            for k in 0..32u64 {
+                ps.apply_update(b, 0, k, &[0.1; 16], h, None).unwrap();
+            }
+            ps.free_branch(b).unwrap();
+        };
+        cycle(&mut ps, 1);
         let allocated_before = ps.pool_stats().allocated;
         for b in 2..50u32 {
-            ps.fork_branch(b, 0).unwrap();
-            ps.free_branch(b).unwrap();
+            cycle(&mut ps, b);
         }
         // steady state: everything comes from the pool
         assert_eq!(ps.pool_stats().allocated, allocated_before);
         assert!(ps.pool_stats().reused > 0);
+    }
+
+    #[test]
+    fn shared_free_keeps_pool_idle_exact() {
+        // Free a branch whose rows are still shared: nothing enters the
+        // pool.  Free the remaining owner of materialized rows: exactly
+        // those buffers enter the pool.
+        let mut ps = ps(OptimizerKind::Sgd); // 1 slot => 2 buffers/row
+        init_root(&mut ps, 8, 4);
+        ps.fork_branch(1, 0).unwrap();
+        ps.fork_branch(2, 0).unwrap();
+        ps.free_branch(1).unwrap();
+        assert_eq!(ps.pool_stats().idle, 0, "shared rows must not recycle");
+        let h = Hyper { lr: 1.0, momentum: 0.0 };
+        ps.apply_update(2, 0, 0, &[1.0; 4], h, None).unwrap();
+        ps.apply_update(2, 0, 1, &[1.0; 4], h, None).unwrap();
+        ps.free_branch(2).unwrap();
+        // only branch 2's two materialized rows (data + velocity each)
+        assert_eq!(ps.pool_stats().idle, 4);
+        assert_eq!(ps.live_branches(), vec![0]);
     }
 
     #[test]

@@ -1,12 +1,25 @@
 //! User-level memory pool for branch data (§4.6).
 //!
-//! When a branch is forked the parameter server allocates its storage
-//! from this pool; when a branch is freed all its buffers are reclaimed
-//! for future branches.  Pooling keeps fork latency at memcpy cost and
-//! avoids allocator churn in the tuning loop, where branches are forked
-//! and freed continuously.
+//! Under the copy-on-write storage layer (see [`super::storage`]) the
+//! pool is no longer on the *fork* path — forks copy no buffers at
+//! all.  It serves the two remaining buffer-churn paths of the tuning
+//! loop:
+//!
+//! * **first-write materialization** ([`MemoryPool::alloc_entry_copy`]):
+//!   when a branch first writes a shared row, its private copy's
+//!   buffers are drawn from here;
+//! * **last-owner reclamation** ([`MemoryPool::recycle_entry`]): when
+//!   the final branch referencing a row is freed, the row's buffers
+//!   are parked here for future materializations.
+//!
+//! Pooling keeps steady-state tuning (fork → write some rows → free)
+//! allocation-free after warm-up and avoids allocator churn, and its
+//! `idle` statistic is an exact census of reclaimed-but-unreused
+//! buffers — the invariant the proptest suite checks.
 
 use std::collections::BTreeMap;
+
+use super::storage::Entry;
 
 /// Size-bucketed free list of `Vec<f32>` buffers.
 #[derive(Debug, Default)]
@@ -33,8 +46,14 @@ impl MemoryPool {
     }
 
     /// Get a zero-length buffer with capacity ≥ `len`, preferring an
-    /// idle buffer of exactly-matching capacity bucket.
+    /// idle buffer of exactly-matching capacity bucket.  Zero-length
+    /// requests are not pooled and not counted, mirroring
+    /// [`MemoryPool::recycle`]'s zero-capacity skip — this keeps the
+    /// allocated/idle conservation exact.
     pub fn alloc(&mut self, len: usize) -> Vec<f32> {
+        if len == 0 {
+            return Vec::new();
+        }
         if let Some(bucket) = self.free.get_mut(&len) {
             if let Some(mut buf) = bucket.pop() {
                 self.stats.reused += 1;
@@ -48,11 +67,22 @@ impl MemoryPool {
         Vec::with_capacity(len)
     }
 
-    /// Allocate and fill with a copy of `src` (the fork hot path).
+    /// Allocate and fill with a copy of `src` (the copy-on-write
+    /// materialization hot path).
     pub fn alloc_copy(&mut self, src: &[f32]) -> Vec<f32> {
         let mut buf = self.alloc(src.len());
         buf.extend_from_slice(src);
         buf
+    }
+
+    /// Materialize a private copy of a whole entry — row data, every
+    /// optimizer slot buffer, and the step counter.
+    pub fn alloc_entry_copy(&mut self, src: &Entry) -> Entry {
+        Entry {
+            data: self.alloc_copy(&src.data),
+            slots: src.slots.iter().map(|s| self.alloc_copy(s)).collect(),
+            step: src.step,
+        }
     }
 
     /// Return a buffer to the pool for future branches.
@@ -64,6 +94,14 @@ impl MemoryPool {
         self.stats.idle += 1;
         self.stats.idle_len += cap as u64;
         self.free.entry(cap).or_default().push(buf);
+    }
+
+    /// Reclaim all buffers of a last-owner entry.
+    pub fn recycle_entry(&mut self, entry: Entry) {
+        self.recycle(entry.data);
+        for s in entry.slots {
+            self.recycle(s);
+        }
     }
 
     pub fn stats(&self) -> PoolStats {
@@ -97,9 +135,32 @@ mod tests {
     }
 
     #[test]
+    fn entry_copy_and_recycle_roundtrip() {
+        let mut pool = MemoryPool::new();
+        let src = Entry {
+            data: vec![1.0; 8],
+            slots: vec![vec![2.0; 8], vec![3.0; 8]],
+            step: 7,
+        };
+        let copy = pool.alloc_entry_copy(&src);
+        assert_eq!(copy.data, src.data);
+        assert_eq!(copy.slots, src.slots);
+        assert_eq!(copy.step, 7);
+        assert_eq!(pool.stats().allocated, 3);
+        pool.recycle_entry(copy);
+        assert_eq!(pool.stats().idle, 3);
+        // the next materialization is allocation-free
+        let again = pool.alloc_entry_copy(&src);
+        assert_eq!(pool.stats().allocated, 3);
+        assert_eq!(pool.stats().reused, 3);
+        assert_eq!(again.data, src.data);
+    }
+
+    #[test]
     fn fork_free_cycle_never_leaks_allocations() {
-        // Steady-state fork/free must stop allocating after warm-up:
-        // the invariant behind §4.6's "reclaimed to the memory pool".
+        // Steady-state materialize/reclaim must stop allocating after
+        // warm-up: the invariant behind §4.6's "reclaimed to the
+        // memory pool".
         let mut pool = MemoryPool::new();
         let src = vec![0.5f32; 128];
         let mut held = Vec::new();
@@ -120,5 +181,19 @@ mod tests {
         let mut pool = MemoryPool::new();
         pool.recycle(Vec::new());
         assert_eq!(pool.stats().idle, 0);
+    }
+
+    #[test]
+    fn zero_length_allocs_are_uncounted() {
+        // Symmetry with recycle()'s zero-capacity skip: an alloc(0) /
+        // recycle roundtrip must leave the conservation counters
+        // untouched (idle == allocated stays provable).
+        let mut pool = MemoryPool::new();
+        let buf = pool.alloc(0);
+        assert!(buf.is_empty());
+        assert_eq!(pool.stats().allocated, 0);
+        let copy = pool.alloc_copy(&[]);
+        pool.recycle(copy);
+        assert_eq!(pool.stats(), PoolStats::default());
     }
 }

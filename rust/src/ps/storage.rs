@@ -1,16 +1,52 @@
-//! Branch-versioned parameter storage (§4.6).
+//! Branch-versioned parameter storage (§4.6) with **copy-on-write
+//! snapshots**.
 //!
 //! Parameter data is key→row in memory, sharded across server shards;
 //! to support MLtuner the branch ID is an **additional field in the
-//! index**: each shard keeps a per-branch map of rows.  Forking a
-//! branch allocates storage from the memory pool and copies the parent
-//! branch's rows; freeing a branch reclaims all its memory to the pool.
+//! index**: each shard keeps a per-branch map of rows.
+//!
+//! ## Copy-on-write design
+//!
+//! MLtuner's trial-and-error loop forks and frees branches
+//! continuously, so snapshot cost is the substrate's hottest path.  A
+//! naive fork deep-copies every parameter row and every optimizer slot
+//! buffer — O(model size) allocation and memcpy per trial branch,
+//! exactly the cost the paper argues a tuning-aware parameter server
+//! must avoid.  Instead, rows are stored as [`Arc`]-shared [`Entry`]s
+//! and snapshots are taken lazily:
+//!
+//! * **Fork** clones only the parent branch's *index*: O(#rows) `Arc`
+//!   pointer bumps, zero buffer copies.  Fork latency is therefore
+//!   independent of row length (model size) — see the
+//!   `micro_hotpaths` / `ablations` benches.
+//! * **First write** to a row under a branch materializes a private
+//!   copy ([`Shard::get_mut`]): if the row's `Arc` is shared, the
+//!   entry's buffers are duplicated through the [`MemoryPool`]
+//!   (`alloc_entry_copy`) and the branch's index slot is repointed at
+//!   the private copy.  Sole-owner rows are written in place with no
+//!   copy at all.  A trial branch that touches k of n rows pays for k
+//!   copies, not n.
+//! * **Free** removes the branch's index and recycles a row's buffers
+//!   into the pool **only when the branch was the row's last owner**
+//!   (`Arc::try_unwrap` succeeds).  Rows still shared by the parent or
+//!   sibling branches are merely unreferenced; their memory is
+//!   reclaimed later, when the final owner is freed.  This keeps
+//!   [`MemoryPool`] `idle` accounting exact: a buffer is parked in the
+//!   free list if and only if no live branch can reach it.
 //!
 //! Each row carries its optimizer slot buffers (momentum / adaptive-LR
 //! accumulators), which are *training state* and therefore snapshotted
-//! and restored with the branch, exactly like the parameter values.
+//! and restored with the branch, exactly like the parameter values:
+//! parent and child see identical velocities/accumulators at fork time
+//! and diverge only through their own writes.
+//!
+//! The eager deep-copy fork is retained as [`Shard::fork_eager`] — it
+//! is the measured baseline in the benches and a semantic cross-check
+//! in the tests, not a production path.
 
+use std::collections::hash_map::Entry as MapEntry;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::comm::BranchId;
 
@@ -35,24 +71,28 @@ pub struct Entry {
     pub step: u64,
 }
 
-/// One server shard: branch id → (table, key) → entry.
+/// One server shard: branch id → (table, key) → shared entry.
 #[derive(Debug, Default)]
 pub struct Shard {
-    branches: HashMap<BranchId, HashMap<(TableId, RowKey), Entry>>,
+    branches: HashMap<BranchId, HashMap<(TableId, RowKey), Arc<Entry>>>,
 }
 
 impl Shard {
+    /// Install a fresh row.  Returns the displaced entry when
+    /// `(branch, table, key)` was already present so the caller can
+    /// reclaim sole-owner buffers (keeping the pool's idle census
+    /// exact — see [`ParamServer::insert_row`](super::ParamServer)).
     pub fn insert(
         &mut self,
         branch: BranchId,
         table: TableId,
         key: RowKey,
         entry: Entry,
-    ) {
+    ) -> Option<Arc<Entry>> {
         self.branches
             .entry(branch)
             .or_default()
-            .insert((table, key), entry);
+            .insert((table, key), Arc::new(entry))
     }
 
     pub fn get(
@@ -61,59 +101,123 @@ impl Shard {
         table: TableId,
         key: RowKey,
     ) -> Option<&Entry> {
-        self.branches.get(&branch)?.get(&(table, key))
+        self.branches
+            .get(&branch)?
+            .get(&(table, key))
+            .map(|arc| &**arc)
     }
 
+    /// Mutable access with copy-on-write: if the row is shared with
+    /// other branches, a private copy is materialized from `pool`
+    /// first; sole-owner rows are handed out in place.
     pub fn get_mut(
         &mut self,
         branch: BranchId,
         table: TableId,
         key: RowKey,
+        pool: &mut MemoryPool,
     ) -> Option<&mut Entry> {
-        self.branches.get_mut(&branch)?.get_mut(&(table, key))
+        let arc = self.branches.get_mut(&branch)?.get_mut(&(table, key))?;
+        if Arc::strong_count(arc) > 1 {
+            let private = pool.alloc_entry_copy(&**arc);
+            *arc = Arc::new(private);
+        }
+        // sole owner now (this module never creates Weak refs)
+        Some(Arc::get_mut(arc).expect("row must be sole-owned after COW"))
     }
 
-    /// Copy-on-fork: duplicate every parent row (and its optimizer
-    /// slots) into `child`, drawing buffers from `pool`.
+    /// Is this row's buffer shared with another branch?  (Test/bench
+    /// introspection of the COW state.)
+    pub fn row_shared(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+    ) -> Option<bool> {
+        self.branches
+            .get(&branch)?
+            .get(&(table, key))
+            .map(|arc| Arc::strong_count(arc) > 1)
+    }
+
+    /// Copy-on-write fork: `child` gets a clone of the parent's *index*
+    /// only — O(#rows) pointer copies, no buffer copies.  Returns the
+    /// number of rows snapshotted.  A missing parent forks nothing (no
+    /// phantom child branch is registered); if `child` already holds
+    /// rows, displaced sole-owner entries are reclaimed into `pool` so
+    /// the idle census stays exact.
     pub fn fork(
         &mut self,
         child: BranchId,
         parent: BranchId,
         pool: &mut MemoryPool,
     ) -> usize {
-        let parent_rows: Vec<((TableId, RowKey), Vec<f32>, Vec<Vec<f32>>, u64)> =
-            match self.branches.get(&parent) {
-                None => Vec::new(),
-                Some(rows) => rows
-                    .iter()
-                    .map(|(k, e)| {
-                        (
-                            *k,
-                            pool.alloc_copy(&e.data),
-                            e.slots.iter().map(|s| pool.alloc_copy(s)).collect(),
-                            e.step,
-                        )
-                    })
-                    .collect(),
-            };
-        let n = parent_rows.len();
-        let child_map = self.branches.entry(child).or_default();
-        for (k, data, slots, step) in parent_rows {
-            child_map.insert(k, Entry { data, slots, step });
+        let snapshot = match self.branches.get(&parent) {
+            None => return 0,
+            Some(rows) => rows.clone(), // Arc clones: pointer bumps only
+        };
+        let n = snapshot.len();
+        match self.branches.entry(child) {
+            // common case (fresh child): adopt the snapshot wholesale,
+            // no per-entry re-hash
+            MapEntry::Vacant(slot) => {
+                slot.insert(snapshot);
+            }
+            MapEntry::Occupied(mut slot) => {
+                let child_map = slot.get_mut();
+                for (k, arc) in snapshot {
+                    if let Some(displaced) = child_map.insert(k, arc) {
+                        if let Ok(entry) = Arc::try_unwrap(displaced) {
+                            pool.recycle_entry(entry);
+                        }
+                    }
+                }
+            }
         }
         n
     }
 
-    /// Free a branch, reclaiming all its buffers into `pool`.
+    /// Eager deep-copy fork: the pre-COW behavior, duplicating every
+    /// parent row (and its optimizer slots) into `child` through
+    /// `pool`.  Kept as the measured baseline for the fork benches and
+    /// as a semantic cross-check in tests.
+    pub fn fork_eager(
+        &mut self,
+        child: BranchId,
+        parent: BranchId,
+        pool: &mut MemoryPool,
+    ) -> usize {
+        let parent_rows: Vec<((TableId, RowKey), Entry)> =
+            match self.branches.get(&parent) {
+                None => return 0,
+                Some(rows) => rows
+                    .iter()
+                    .map(|(k, e)| (*k, pool.alloc_entry_copy(e)))
+                    .collect(),
+            };
+        let n = parent_rows.len();
+        let child_map = self.branches.entry(child).or_default();
+        for (k, entry) in parent_rows {
+            if let Some(displaced) = child_map.insert(k, Arc::new(entry)) {
+                if let Ok(old) = Arc::try_unwrap(displaced) {
+                    pool.recycle_entry(old);
+                }
+            }
+        }
+        n
+    }
+
+    /// Free a branch.  Buffers are reclaimed into `pool` only for rows
+    /// whose last owner this branch was; rows still shared by siblings
+    /// or ancestors stay live under their other owners.
     pub fn free(&mut self, branch: BranchId, pool: &mut MemoryPool) -> usize {
         match self.branches.remove(&branch) {
             None => 0,
             Some(rows) => {
                 let n = rows.len();
-                for (_, e) in rows {
-                    pool.recycle(e.data);
-                    for s in e.slots {
-                        pool.recycle(s);
+                for (_, arc) in rows {
+                    if let Ok(entry) = Arc::try_unwrap(arc) {
+                        pool.recycle_entry(entry);
                     }
                 }
                 n
@@ -154,15 +258,20 @@ mod tests {
     }
 
     #[test]
-    fn fork_copies_parent_rows_and_slots() {
+    fn fork_shares_parent_rows_and_slots() {
         let mut shard = Shard::default();
         let mut pool = MemoryPool::new();
         shard.insert(0, 0, 7, entry(&[1.0, 2.0]));
         shard.insert(0, 1, 3, entry(&[5.0]));
         let n = shard.fork(1, 0, &mut pool);
         assert_eq!(n, 2);
+        // zero buffer copies: nothing was drawn from the pool
+        assert_eq!(pool.stats().allocated + pool.stats().reused, 0);
         assert_eq!(shard.get(1, 0, 7).unwrap().data, vec![1.0, 2.0]);
         assert_eq!(shard.get(1, 1, 3).unwrap().slots.len(), 1);
+        // zero buffer copies: both branches point at the same entries
+        assert_eq!(shard.row_shared(1, 0, 7), Some(true));
+        assert_eq!(shard.row_shared(0, 1, 3), Some(true));
     }
 
     #[test]
@@ -171,14 +280,35 @@ mod tests {
         let mut pool = MemoryPool::new();
         shard.insert(0, 0, 0, entry(&[1.0]));
         shard.fork(1, 0, &mut pool);
-        shard.get_mut(0, 0, 0).unwrap().data[0] = 99.0;
+        shard.get_mut(0, 0, 0, &mut pool).unwrap().data[0] = 99.0;
         assert_eq!(shard.get(1, 0, 0).unwrap().data[0], 1.0);
-        shard.get_mut(1, 0, 0).unwrap().data[0] = -1.0;
+        shard.get_mut(1, 0, 0, &mut pool).unwrap().data[0] = -1.0;
         assert_eq!(shard.get(0, 0, 0).unwrap().data[0], 99.0);
+        // after both wrote, neither row is shared any more
+        assert_eq!(shard.row_shared(0, 0, 0), Some(false));
+        assert_eq!(shard.row_shared(1, 0, 0), Some(false));
     }
 
     #[test]
-    fn free_reclaims_to_pool_and_removes_rows() {
+    fn first_write_materializes_then_writes_in_place() {
+        let mut shard = Shard::default();
+        let mut pool = MemoryPool::new();
+        shard.insert(0, 0, 0, entry(&[1.0, 2.0]));
+        shard.fork(1, 0, &mut pool);
+        assert_eq!(shard.row_shared(1, 0, 0), Some(true));
+        shard.get_mut(1, 0, 0, &mut pool).unwrap().data[0] = 5.0;
+        // one materialization: data + 1 slot buffer
+        assert_eq!(pool.stats().allocated, 2);
+        shard.get_mut(1, 0, 0, &mut pool).unwrap().data[1] = 6.0;
+        // second write is in place — no further pool traffic
+        assert_eq!(pool.stats().allocated, 2);
+        assert_eq!(pool.stats().reused, 0);
+        assert_eq!(shard.get(1, 0, 0).unwrap().data, vec![5.0, 6.0]);
+        assert_eq!(shard.get(0, 0, 0).unwrap().data, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn free_of_shared_branch_recycles_nothing() {
         let mut shard = Shard::default();
         let mut pool = MemoryPool::new();
         shard.insert(0, 0, 0, entry(&[1.0, 2.0, 3.0]));
@@ -186,7 +316,23 @@ mod tests {
         let freed = shard.free(1, &mut pool);
         assert_eq!(freed, 1);
         assert!(shard.get(1, 0, 0).is_none());
-        // data buffer + 1 slot buffer reclaimed
+        // the parent still owns the row — nothing may enter the pool
+        assert_eq!(pool.stats().idle, 0);
+        assert_eq!(shard.get(0, 0, 0).unwrap().data, vec![1.0, 2.0, 3.0]);
+        assert_eq!(shard.row_shared(0, 0, 0), Some(false));
+    }
+
+    #[test]
+    fn free_of_last_owner_recycles_to_pool() {
+        let mut shard = Shard::default();
+        let mut pool = MemoryPool::new();
+        shard.insert(0, 0, 0, entry(&[1.0, 2.0, 3.0]));
+        shard.fork(1, 0, &mut pool);
+        // materialize the child's private copy, then free the child
+        shard.get_mut(1, 0, 0, &mut pool).unwrap().data[0] = 4.0;
+        let freed = shard.free(1, &mut pool);
+        assert_eq!(freed, 1);
+        // the private data + slot buffers were last-owner reclaimed
         assert_eq!(pool.stats().idle, 2);
     }
 
@@ -195,7 +341,38 @@ mod tests {
         let mut shard = Shard::default();
         let mut pool = MemoryPool::new();
         assert_eq!(shard.fork(5, 99, &mut pool), 0);
+        // no phantom child branch may be registered by the failed fork
         assert_eq!(shard.branch_row_count(5), 0);
+        assert!(shard.live_branches().is_empty());
+    }
+
+    #[test]
+    fn eager_fork_matches_cow_fork_semantics() {
+        let mk = || {
+            let mut shard = Shard::default();
+            shard.insert(0, 0, 0, entry(&[1.0, 2.0]));
+            shard.insert(0, 0, 1, entry(&[3.0]));
+            shard
+        };
+        let mut pool = MemoryPool::new();
+        let (mut cow, mut eager) = (mk(), mk());
+        assert_eq!(cow.fork(1, 0, &mut pool), eager.fork_eager(1, 0, &mut pool));
+        for shard in [&mut cow, &mut eager] {
+            shard.get_mut(1, 0, 0, &mut pool).unwrap().data[0] = 9.0;
+        }
+        for k in 0..2u64 {
+            assert_eq!(
+                cow.get(1, 0, k).unwrap().data,
+                eager.get(1, 0, k).unwrap().data
+            );
+            assert_eq!(
+                cow.get(0, 0, k).unwrap().data,
+                eager.get(0, 0, k).unwrap().data
+            );
+        }
+        // eager forks are born private
+        assert_eq!(eager.row_shared(1, 0, 1), Some(false));
+        assert_eq!(cow.row_shared(1, 0, 1), Some(true));
     }
 
     #[test]

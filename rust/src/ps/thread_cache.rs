@@ -6,6 +6,9 @@
 //! The thread cache is a small, lock-free-by-ownership L1 over the
 //! shared machine cache (L2).  Both levels are branch-oblivious and are
 //! cleared on branch switch, exactly like [`super::cache::WorkerCache`].
+//! Like the L2, the L1 holds worker-private value copies, so the
+//! server's copy-on-write branch storage never invalidates it: SSP
+//! staleness and branch switches are the only invalidation sources.
 
 use std::collections::HashMap;
 

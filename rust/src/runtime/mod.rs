@@ -7,11 +7,24 @@
 //! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
 //! One compiled executable per (model, entry kind, batch-size variant),
 //! cached after first use.
+//!
+//! The PJRT execution path needs the heavy `xla` bridge crate, which is
+//! not installable offline, so it is gated behind the **`pjrt` cargo
+//! feature** (see Cargo.toml).  Manifest parsing is dependency-free and
+//! always available; without the feature, [`Runtime`] is a stub whose
+//! constructor returns a clear "built without pjrt" error, and every
+//! caller (the DNN app, `mltuner info`, the benches, the integration
+//! tests) degrades gracefully exactly as it does when artifacts are
+//! missing.
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 use crate::util::json::Json;
 
@@ -150,6 +163,7 @@ pub struct ArtifactEntry {
 }
 
 /// Key of a compiled executable in the cache.
+#[cfg(feature = "pjrt")]
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct ExeKey {
     model: String,
@@ -159,6 +173,7 @@ struct ExeKey {
 }
 
 /// The PJRT runtime: client + manifest + executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -168,6 +183,7 @@ pub struct Runtime {
     pub compiles: u64,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load `artifacts/manifest.json` under `dir` and connect the PJRT
     /// CPU client.
@@ -358,6 +374,71 @@ impl Runtime {
     }
 }
 
+/// Feature-off stub with the same public surface as the real runtime.
+/// [`Runtime::load`] always fails (so a stub can never actually be
+/// constructed); the remaining methods exist only so callers compile
+/// unchanged.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
+pub struct Runtime {
+    pub manifest: Manifest,
+    /// compile count (a §Perf metric: compiles happen once per variant).
+    pub compiles: u64,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Always errors: this binary was built without PJRT support.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(
+            "PJRT runtime unavailable: mltuner was built without the `pjrt` \
+             feature (artifacts dir {:?}); rebuild with `--features pjrt` \
+             after adding the optional `xla` dependency — see Cargo.toml",
+            dir.as_ref()
+        )
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.manifest
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name} not in manifest"))
+    }
+
+    fn unavailable(&self) -> anyhow::Error {
+        anyhow!("PJRT runtime unavailable: built without the `pjrt` feature")
+    }
+
+    /// Run one gradient step — unavailable without the `pjrt` feature.
+    pub fn run_grad(
+        &mut self,
+        _model: &str,
+        _batch_size: usize,
+        _variant: &str,
+        _params: &[Vec<f32>],
+        _x: &[f32],
+        _y: &[i32],
+    ) -> Result<(Vec<Vec<f32>>, f32)> {
+        Err(self.unavailable())
+    }
+
+    /// Run one validation pass — unavailable without the `pjrt` feature.
+    pub fn run_eval(
+        &mut self,
+        _model: &str,
+        _variant: &str,
+        _params: &[Vec<f32>],
+        _x: &[f32],
+        _y: &[i32],
+    ) -> Result<(f32, f32)> {
+        Err(self.unavailable())
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -387,5 +468,12 @@ mod tests {
         assert_eq!(mm.num_params(), 4 * 8 + 8 + 8 * 3 + 3);
         assert_eq!(mm.batch_sizes("xla"), vec![4, 8]);
         assert_eq!(mm.batch_sizes("pallas"), Vec::<usize>::new());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_load_reports_missing_feature() {
+        let err = Runtime::load("artifacts").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "unhelpful error: {err}");
     }
 }

@@ -140,7 +140,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn startup_is_random_then_model_based() {
+    fn startup_is_random_then_model_based() -> anyhow::Result<()> {
         let mut s = TpeSearcher::new(2, 3);
         let n0 = s.n_startup;
         for i in 0..n0 {
@@ -154,8 +154,11 @@ mod tests {
                 assert_eq!(p.len(), 2);
                 assert!(p.iter().all(|&u| (0.0..=1.0).contains(&u)));
             }
-            Proposal::Exhausted => panic!("TPE never exhausts"),
+            Proposal::Exhausted => {
+                anyhow::bail!("TPE must never report an exhausted search space")
+            }
         }
+        Ok(())
     }
 
     #[test]

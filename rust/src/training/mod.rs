@@ -30,6 +30,24 @@ pub struct Progress {
     pub time: f64,
 }
 
+/// Snapshot-efficiency introspection (§4.6): how much branching cost a
+/// training system actually paid.  For parameter-server-backed systems
+/// `cow_buffer_copies` counts the buffers privately materialized by
+/// copy-on-write — with lazy snapshots it is proportional to the rows
+/// *written* under trial branches, not to forks × model size.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SnapshotStats {
+    /// Branches currently live (root included).
+    pub live_branches: usize,
+    /// Peak number of simultaneously-live branches.
+    pub peak_branches: usize,
+    /// Branch forks served since construction.
+    pub forks: u64,
+    /// Buffers privately materialized by copy-on-write (0 for systems
+    /// without parameter-server storage, e.g. the simulator).
+    pub cow_buffer_copies: u64,
+}
+
 /// The training-system side of the Table-1 message interface.
 ///
 /// Branch 0 is the root: the pristine initial training state, created
@@ -72,6 +90,12 @@ pub trait TrainingSystem {
     /// Human-readable system name (logging).
     fn system_name(&self) -> &'static str {
         "training-system"
+    }
+
+    /// Snapshot-efficiency counters (§4.6).  Systems without branch
+    /// bookkeeping may keep the zeroed default.
+    fn snapshot_stats(&self) -> SnapshotStats {
+        SnapshotStats::default()
     }
 }
 

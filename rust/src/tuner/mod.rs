@@ -28,7 +28,7 @@ use crate::comm::{BranchId, BranchType, TunerMsg};
 use crate::metrics::RunRecorder;
 use crate::searcher::{Proposal, Searcher, SearcherKind, StoppingCondition};
 use crate::summarizer::{BranchLabel, ProgressPoint, ProgressSummarizer};
-use crate::training::{MessageDriver, Progress, TrainingSystem};
+use crate::training::{MessageDriver, Progress, SnapshotStats, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
 
 /// When is the model converged?
@@ -108,6 +108,9 @@ pub struct TunerReport {
     pub clocks: u64,
     pub converged: bool,
     pub final_setting: TunableSetting,
+    /// Branch-snapshot efficiency counters from the training system
+    /// (§4.6): fork count, peak live branches, copy-on-write traffic.
+    pub snapshots: SnapshotStats,
 }
 
 /// A live trial branch during a tuning episode.
@@ -589,6 +592,7 @@ impl<S: TrainingSystem> MLtuner<S> {
             clocks: self.clock,
             converged,
             final_setting: setting,
+            snapshots: self.driver.system.snapshot_stats(),
         })
     }
 }
@@ -700,7 +704,6 @@ mod tests {
     fn branch_count_stays_bounded_outside_exploration() {
         let mut t = tuner_for(SimProfile::alexnet_cifar10(), 21);
         let report = t.run().unwrap();
-        let _ = report;
         // §4.6: outside Algorithm-1 exploration only parent + best +
         // trial (+ root + testing transient) live.  During exploration
         // one branch per doubling round can accumulate; the doubling
@@ -713,5 +716,9 @@ mod tests {
         );
         // and at the end only root + train branch remain
         assert!(t.driver.system.live_branches() <= 2);
+        // the report carries the same accounting
+        assert_eq!(report.snapshots.live_branches, t.driver.system.live_branches());
+        assert_eq!(report.snapshots.peak_branches, t.driver.system.peak_branches);
+        assert!(report.snapshots.forks > 0);
     }
 }

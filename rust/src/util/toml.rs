@@ -52,12 +52,19 @@ pub struct TomlDoc {
     pub values: BTreeMap<String, TomlValue>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("toml error on line {line}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 impl TomlDoc {
     pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
@@ -181,7 +188,9 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parses_flat_and_sections() {
+    fn parses_flat_and_sections() -> anyhow::Result<()> {
+        // TomlError implements std::error::Error, so `?` propagates it
+        // through anyhow instead of panicking on malformed input.
         let doc = TomlDoc::parse(
             r#"
             app = "sim"          # trailing comment
@@ -192,8 +201,7 @@ mod tests {
             users = 1_000
             sizes = [2, 4, 8]
         "#,
-        )
-        .unwrap();
+        )?;
         assert_eq!(doc.get_str("app"), Some("sim"));
         assert_eq!(doc.get_i64("seed"), Some(42));
         assert_eq!(doc.get_bool("retune"), Some(true));
@@ -201,10 +209,11 @@ mod tests {
         assert_eq!(doc.get_i64("mf.users"), Some(1000));
         assert!(doc.has_section("mf"));
         assert!(!doc.has_section("dnn"));
-        match doc.get("mf.sizes").unwrap() {
-            TomlValue::Array(a) => assert_eq!(a.len(), 3),
-            _ => panic!(),
+        match doc.get("mf.sizes") {
+            Some(TomlValue::Array(a)) => assert_eq!(a.len(), 3),
+            other => anyhow::bail!("mf.sizes should parse as an array, got {other:?}"),
         }
+        Ok(())
     }
 
     #[test]

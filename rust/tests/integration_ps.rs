@@ -1,6 +1,8 @@
 //! Integration: parameter-server substrate under realistic branch
 //! churn — the access pattern MLtuner generates (fork / train / free,
-//! testing forks, memory-pool steady state).
+//! testing forks, memory-pool steady state) — and the copy-on-write
+//! snapshot invariants: forks copy no buffers, first writes
+//! materialize private rows, frees recycle only last-owner rows.
 
 use mltuner::comm::BranchId;
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
@@ -53,6 +55,69 @@ fn tuning_episode_branch_churn() {
     assert_eq!(ps.live_branches().len(), 2); // root + current winner
     let stats = ps.pool_stats();
     assert!(stats.reused > stats.allocated, "{stats:?}");
+}
+
+#[test]
+fn fork_is_zero_copy_until_first_write() {
+    // The COW contract end-to-end: a fork of a DNN-sized branch moves
+    // no parameter bytes; only rows actually written under the child
+    // get materialized, and writes never leak in either direction.
+    let mut ps = server_with_model(512, 1024, OptimizerKind::Adam);
+    let before = ps.pool_stats();
+    ps.fork_branch(1, 0).unwrap();
+    assert_eq!(ps.pool_stats(), before, "fork touched the pool");
+    for k in 0..512u64 {
+        assert_eq!(ps.row_shared(1, 0, k), Some(true), "row {k} not shared");
+    }
+    let h = Hyper { lr: 0.1, momentum: 0.9 };
+    let parent_row0: Vec<f32> = ps.read_row(0, 0, 0).unwrap().to_vec();
+    ps.apply_update(1, 0, 0, &vec![1.0; 1024], h, None).unwrap();
+    // child write isolated from parent ...
+    assert_eq!(ps.read_row(0, 0, 0).unwrap(), &parent_row0[..]);
+    assert_ne!(ps.read_row(1, 0, 0).unwrap(), &parent_row0[..]);
+    // ... and parent write isolated from child
+    let child_row1: Vec<f32> = ps.read_row(1, 0, 1).unwrap().to_vec();
+    ps.apply_update(0, 0, 1, &vec![1.0; 1024], h, None).unwrap();
+    assert_eq!(ps.read_row(1, 0, 1).unwrap(), &child_row1[..]);
+    // exactly two rows materialized (data + 2 Adam slots each)
+    assert_eq!(ps.pool_stats().allocated, 2 * 3);
+    assert_eq!(ps.row_shared(1, 0, 2), Some(true), "untouched row copied");
+}
+
+#[test]
+fn free_recycles_only_last_owner_rows() {
+    // Pool `idle` accounting when shared rows are freed: freeing a
+    // branch whose rows are still shared by a sibling recycles
+    // nothing; freeing the final owner recycles exactly its private
+    // rows.
+    let mut ps = server_with_model(16, 64, OptimizerKind::Sgd); // 2 bufs/row
+    let h = Hyper { lr: 0.1, momentum: 0.0 };
+    ps.fork_branch(1, 0).unwrap();
+    ps.fork_branch(2, 1).unwrap();
+    for k in 0..4u64 {
+        ps.apply_update(2, 0, k, &vec![0.1; 64], h, None).unwrap();
+    }
+    // branch 1's rows are all still shared with root and/or branch 2
+    ps.free_branch(1).unwrap();
+    assert_eq!(ps.pool_stats().idle, 0, "shared rows must not recycle");
+    // branch 2 owns its 4 materialized rows privately
+    ps.free_branch(2).unwrap();
+    assert_eq!(ps.pool_stats().idle, 4 * 2);
+    // root remains fully intact
+    assert_eq!(ps.live_branches(), vec![0]);
+    assert_eq!(ps.branch_row_count(0), 16);
+}
+
+#[test]
+fn fork_of_missing_parent_errors_cleanly() {
+    let mut ps = server_with_model(4, 8, OptimizerKind::Sgd);
+    let err = ps.fork_branch(3, 99).unwrap_err().to_string();
+    assert!(err.contains("99"), "unhelpful error: {err}");
+    // the failed fork must leave no partial branch behind
+    assert!(!ps.branch_exists(3));
+    assert_eq!(ps.live_branches(), vec![0]);
+    ps.fork_branch(3, 0).unwrap();
+    assert!(ps.branch_exists(3));
 }
 
 #[test]

@@ -234,6 +234,151 @@ fn prop_ps_fork_free_preserves_row_counts_and_pool() {
 }
 
 #[test]
+fn prop_cow_branches_match_deep_copy_reference() {
+    // The copy-on-write storage must be observationally identical to
+    // eager deep-copy snapshots: run random fork / write / free
+    // interleavings against a reference model that deep-copies every
+    // branch, and compare every row of every live branch.
+    prop(40, |rng| {
+        use std::collections::HashMap;
+        const LEN: usize = 8;
+        let lr = 0.5f32;
+        let mut ps = ParamServer::new(
+            rng.gen_range(1, 6),
+            Optimizer::new(OptimizerKind::Sgd),
+        );
+        let rows = rng.gen_range(1, 12) as u64;
+        let mut reference: HashMap<u32, Vec<Vec<f32>>> = HashMap::new();
+        let mut root = Vec::new();
+        for k in 0..rows {
+            let row: Vec<f32> = (0..LEN).map(|_| rng.gen_normal() as f32).collect();
+            ps.insert_row(0, 0, k, row.clone());
+            root.push(row);
+        }
+        reference.insert(0, root);
+        let mut live: Vec<u32> = vec![0];
+        let mut next = 1u32;
+        for _ in 0..rng.gen_range(10, 60) {
+            match rng.gen_range(0, 10) {
+                // fork from a random live branch
+                0..=2 => {
+                    let parent = live[rng.gen_range(0, live.len())];
+                    ps.fork_branch(next, parent).unwrap();
+                    let snap = reference[&parent].clone(); // eager deep copy
+                    reference.insert(next, snap);
+                    live.push(next);
+                    next += 1;
+                }
+                // fork from a missing parent must fail without a trace
+                3 => {
+                    assert!(ps.fork_branch(next, next + 1000).is_err());
+                    assert!(!ps.branch_exists(next));
+                }
+                // free a random non-root branch
+                4 if live.len() > 1 => {
+                    let idx = rng.gen_range(1, live.len());
+                    let b = live.swap_remove(idx);
+                    ps.free_branch(b).unwrap();
+                    reference.remove(&b);
+                }
+                // write a random row of a random branch
+                _ => {
+                    let b = live[rng.gen_range(0, live.len())];
+                    let k = rng.gen_range(0, rows as usize) as u64;
+                    let grad: Vec<f32> =
+                        (0..LEN).map(|_| rng.gen_normal() as f32).collect();
+                    ps.apply_update(
+                        b,
+                        0,
+                        k,
+                        &grad,
+                        Hyper { lr, momentum: 0.0 },
+                        None,
+                    )
+                    .unwrap();
+                    let row = &mut reference.get_mut(&b).unwrap()[k as usize];
+                    for (p, g) in row.iter_mut().zip(&grad) {
+                        *p -= lr * g;
+                    }
+                }
+            }
+            for &b in &live {
+                for k in 0..rows {
+                    assert_eq!(
+                        ps.read_row(b, 0, k).unwrap(),
+                        &reference[&b][k as usize][..],
+                        "branch {b} row {k} diverged from reference"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pool_reclaims_every_materialized_buffer() {
+    // Conservation: with the root never written, once every non-root
+    // branch is freed, every buffer the pool ever handed out for COW
+    // materialization must be parked back in its free list
+    // (idle == allocated), regardless of the fork/write/free order.
+    prop(40, |rng| {
+        let mut ps = ParamServer::new(
+            rng.gen_range(1, 6),
+            Optimizer::new(OptimizerKind::Sgd),
+        );
+        let rows = rng.gen_range(1, 10) as u64;
+        for k in 0..rows {
+            ps.insert_row(0, 0, k, vec![1.0; rng.gen_range(1, 12)]);
+        }
+        let mut live: Vec<u32> = Vec::new();
+        let mut next = 1u32;
+        for _ in 0..rng.gen_range(5, 50) {
+            match rng.gen_range(0, 6) {
+                0 | 1 => {
+                    let parent = if live.is_empty() || rng.gen_f64() < 0.3 {
+                        0
+                    } else {
+                        live[rng.gen_range(0, live.len())]
+                    };
+                    ps.fork_branch(next, parent).unwrap();
+                    live.push(next);
+                    next += 1;
+                }
+                2 if !live.is_empty() => {
+                    let idx = rng.gen_range(0, live.len());
+                    ps.free_branch(live.swap_remove(idx)).unwrap();
+                }
+                _ if !live.is_empty() => {
+                    let b = live[rng.gen_range(0, live.len())];
+                    let k = rng.gen_range(0, rows as usize) as u64;
+                    let len = ps.read_row(b, 0, k).unwrap().len();
+                    ps.apply_update(
+                        b,
+                        0,
+                        k,
+                        &vec![0.1; len],
+                        Hyper { lr: 0.5, momentum: 0.0 },
+                        None,
+                    )
+                    .unwrap();
+                }
+                _ => {}
+            }
+        }
+        for b in live {
+            ps.free_branch(b).unwrap();
+        }
+        let stats = ps.pool_stats();
+        assert_eq!(
+            stats.idle, stats.allocated,
+            "leaked or over-recycled buffers: {stats:?}"
+        );
+        assert_eq!(ps.live_branches(), vec![0]);
+        assert_eq!(ps.branch_row_count(0), rows as usize);
+    });
+}
+
+#[test]
 fn prop_ps_update_only_touches_target_row_and_branch() {
     prop(60, |rng| {
         let mut ps = ParamServer::new(4, Optimizer::new(OptimizerKind::Sgd));

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): build + tests on the default
+# feature set, plus clippy when the component is installed.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy -- -D warnings
+else
+    echo "tier1: cargo-clippy not installed, skipping lint step"
+fi
+
+echo "tier1: OK"
