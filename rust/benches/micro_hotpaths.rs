@@ -1,12 +1,15 @@
 //! Micro-benchmarks of the L3 hot paths (§Perf): parameter-server
-//! fork/free/update, branch switch (cache clear), progress summarizer,
-//! searcher proposals, and — when artifacts are present — the PJRT
-//! gradient-step dispatch.
+//! fork/free/update, batched vs looped updates, multi-threaded shard
+//! update throughput, branch switch (cache clear), progress
+//! summarizer, searcher proposals, and — when artifacts are present —
+//! the PJRT gradient-step dispatch.
+
+use std::time::Instant;
 
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
 use mltuner::ps::cache::WorkerCache;
 use mltuner::ps::pool::MemoryPool;
-use mltuner::ps::storage::{Entry, Shard};
+use mltuner::ps::storage::{Entry, RowKey, Shard, TableId};
 use mltuner::ps::ParamServer;
 use mltuner::runtime::Runtime;
 use mltuner::searcher::{Proposal, SearcherKind};
@@ -15,11 +18,55 @@ use mltuner::util::bench::{bench, black_box};
 use mltuner::util::rng::Rng;
 
 fn ps_with_model(rows: usize, row_len: usize) -> ParamServer {
-    let mut ps = ParamServer::new(8, Optimizer::new(OptimizerKind::Sgd));
+    let ps = ParamServer::new(8, Optimizer::new(OptimizerKind::Sgd));
     for k in 0..rows {
         ps.insert_row(0, 0, k as u64, vec![0.5; row_len]);
     }
     ps
+}
+
+/// Aggregate update throughput with `threads` workers batch-updating
+/// disjoint row slices of the 2048x4096 table (the acceptance table):
+/// returns rows/sec.  Each worker pushes 64-row batches through
+/// `apply_batch` — routed once, one lock acquisition per shard.
+fn shard_update_throughput(threads: usize, passes: usize) -> (f64, u64) {
+    const TABLE_ROWS: usize = 2048;
+    let ps = ps_with_model(TABLE_ROWS, 4096);
+    let grad = vec![0.01f32; 4096];
+    let h = Hyper { lr: 0.01, momentum: 0.9 };
+    let per_thread = TABLE_ROWS / threads * passes;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..threads {
+            let ps = &ps;
+            let grad = &grad;
+            s.spawn(move || {
+                // disjoint slice: rows with index % threads == w
+                let keys: Vec<RowKey> = (0..TABLE_ROWS)
+                    .filter(|k| k % threads == w)
+                    .map(|k| k as RowKey)
+                    .collect();
+                let mut done = 0usize;
+                let mut updates: Vec<(TableId, RowKey, &[f32])> =
+                    Vec::with_capacity(64);
+                let mut cursor = 0usize;
+                while done < per_thread {
+                    updates.clear();
+                    for _ in 0..64 {
+                        updates.push((0, keys[cursor % keys.len()], &grad[..]));
+                        cursor += 1;
+                        done += 1;
+                    }
+                    ps.apply_batch(0, &updates, h).unwrap();
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    (
+        (threads * per_thread) as f64 / secs.max(1e-12),
+        ps.server_stats().shard_lock_contentions,
+    )
 }
 
 /// Build a shard directly (exposes the eager-fork baseline the
@@ -49,7 +96,7 @@ fn main() {
     // 8x4096 ≈ alexnet_proxy (26k params), 343x4096 ≈ inception_proxy
     // (1.4M params), 2048x4096 ≈ a 8.4M-param DNN.
     for (rows, label) in [(8usize, "8x4096"), (343, "343x4096"), (2048, "2048x4096")] {
-        let mut ps = ps_with_model(rows, 4096);
+        let ps = ps_with_model(rows, 4096);
         let mut next = 1u32;
         bench(
             &format!("ps fork+free COW ({label} rows)"),
@@ -83,7 +130,7 @@ fn main() {
     // First write after a COW fork: the deferred per-row
     // materialization cost a trial pays only for rows it touches.
     {
-        let mut ps = ps_with_model(343, 4096);
+        let ps = ps_with_model(343, 4096);
         let grad = vec![0.01f32; 4096];
         let h = Hyper { lr: 0.01, momentum: 0.9 };
         let mut next = 1u32;
@@ -101,7 +148,7 @@ fn main() {
     }
     // server-side update application
     {
-        let mut ps = ps_with_model(343, 4096);
+        let ps = ps_with_model(343, 4096);
         let grad = vec![0.01f32; 4096];
         let h = Hyper { lr: 0.01, momentum: 0.9 };
         let mut k = 0u64;
@@ -109,6 +156,44 @@ fn main() {
             ps.apply_update(0, 0, k % 343, &grad, h, None).unwrap();
             k += 1;
         });
+    }
+    // batched vs looped updates: one routing pass + one lock
+    // acquisition per shard vs one lock per row (the tentpole's
+    // single-thread win; the multi-thread win is below).
+    {
+        let ps = ps_with_model(343, 4096);
+        let grad = vec![0.01f32; 4096];
+        let h = Hyper { lr: 0.01, momentum: 0.9 };
+        let keys: Vec<RowKey> = (0..64u64).collect();
+        bench("ps apply_update x64 rows (looped)", 300.0, 20_000, || {
+            for &k in &keys {
+                ps.apply_update(0, 0, k, &grad, h, None).unwrap();
+            }
+        });
+        let updates: Vec<(TableId, RowKey, &[f32])> =
+            keys.iter().map(|&k| (0, k, &grad[..])).collect();
+        bench("ps apply_batch  x64 rows (1 call)", 300.0, 20_000, || {
+            ps.apply_batch(0, &updates, h).unwrap();
+        });
+    }
+    // Multi-threaded shard throughput on the 2048x4096 acceptance
+    // table: aggregate batched-update rows/sec at 1/2/4/8 worker
+    // threads over disjoint row slices.  Acceptance: >=2x aggregate
+    // throughput at 4 threads over the single-threaded path.
+    {
+        println!("\n== sharded update throughput (2048x4096 table, 8 shards) ==");
+        let mut base = 0f64;
+        for threads in [1usize, 2, 4, 8] {
+            let (thru, contended) = shard_update_throughput(threads, 4);
+            if threads == 1 {
+                base = thru;
+            }
+            println!(
+                "{threads} threads: {:>12.0} row-updates/s  ({:.2}x vs 1 thread, {contended} lock contentions)",
+                thru,
+                thru / base.max(1.0),
+            );
+        }
     }
     // branch switch = cache clear + refill
     {
@@ -119,7 +204,7 @@ fn main() {
             cache.switch_branch(b);
             for k in 0..343u64 {
                 if cache.get(0, k, 0, 0).is_none() {
-                    cache.put(0, k, ps.read_row(0, 0, k).unwrap().to_vec(), 0);
+                    cache.put(0, k, ps.read_row(0, 0, k).unwrap(), 0);
                 }
             }
             b += 1;

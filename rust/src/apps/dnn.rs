@@ -1,12 +1,27 @@
 //! DnnSystem: the real three-layer stack as a [`TrainingSystem`].
 //!
-//! Workers (the paper's GPU machines, simulated data-parallel in one
-//! process) pull parameter rows from the branch-versioned parameter
+//! Workers (the paper's GPU machines, driven data-parallel from worker
+//! threads) pull parameter rows from the branch-versioned parameter
 //! server through their SSP caches, execute the AOT-compiled JAX/Pallas
-//! gradient artifact via PJRT, and push batch-normalized gradients back;
-//! the server applies LR/momentum/adaptive updates (`optim/`).  Branch
-//! fork = parameter-server fork + worker-local state snapshot (data
-//! cursors); branch switch clears the shared worker caches (§4.6).
+//! gradient artifact via PJRT, and push batch-normalized gradients back
+//! through the server's **batched update path**; the server applies
+//! LR/momentum/adaptive updates (`optim/`).  Branch fork =
+//! parameter-server fork + worker-local state snapshot (data cursors);
+//! branch switch clears the shared worker caches (§4.6).
+//!
+//! ## Thread model of one training clock
+//!
+//! 1. **Gather (parallel)** — one thread per worker: switch that
+//!    worker's cache to the branch, assemble the flat parameter
+//!    tensors (server read locks only), and draw the worker's
+//!    mini-batch from its private cursor.
+//! 2. **Dispatch (sequential)** — the PJRT gradient executions run one
+//!    after another: the runtime owns a single CPU device and an
+//!    executable cache behind `&mut self`, so interleaving buys
+//!    nothing (see `runtime/`).
+//! 3. **Push (parallel)** — one thread per worker again: each pushes
+//!    its whole gradient as ONE [`ParamServer::apply_batch`] call —
+//!    routed once, grouped per shard, one lock acquisition per shard.
 //!
 //! Testing branches run the eval artifact over the validation set and
 //! report accuracy, exactly as §4.5 describes.
@@ -69,6 +84,77 @@ impl Default for DnnConfig {
     }
 }
 
+/// One worker's inputs for a gradient step, assembled in the parallel
+/// gather phase.
+struct WorkerJob {
+    params: Vec<Vec<f32>>,
+    x: Vec<f32>,
+    y: Vec<i32>,
+}
+
+/// Assemble the flat parameter tensors for one worker, honoring its
+/// SSP cache (staleness from the branch's tunable).  Free function so
+/// the gather phase can run one worker per thread against the shared
+/// server.
+fn gather_worker_params(
+    ps: &ParamServer,
+    cache: &mut WorkerCache,
+    param_shapes: &[Vec<usize>],
+    branch: BranchId,
+    now: Clock,
+    staleness: u32,
+) -> Vec<Vec<f32>> {
+    let mut params = Vec::with_capacity(param_shapes.len());
+    for (t, shape) in param_shapes.iter().enumerate() {
+        let len: usize = shape.iter().product();
+        let mut flat = Vec::with_capacity(len);
+        let nrows = (len + ROW_LEN - 1) / ROW_LEN;
+        for r in 0..nrows {
+            // §Perf: at staleness 0 the cache can never satisfy a
+            // *next*-clock read (every clock refetches), so skip the
+            // cache bookkeeping entirely and copy straight out of the
+            // shard's read lock — halves the gather's memory traffic.
+            if staleness == 0 {
+                ps.with_row(branch, t as TableId, r as RowKey, |e| {
+                    flat.extend_from_slice(&e.data)
+                })
+                .expect("row must exist");
+                continue;
+            }
+            if let Some(row) = cache.get(t as TableId, r as RowKey, now, staleness) {
+                flat.extend_from_slice(row);
+                continue;
+            }
+            let row = ps
+                .read_row(branch, t as TableId, r as RowKey)
+                .expect("row must exist");
+            flat.extend_from_slice(&row);
+            cache.put(t as TableId, r as RowKey, row, now);
+        }
+        debug_assert_eq!(flat.len(), len);
+        params.push(flat);
+    }
+    params
+}
+
+/// Draw one worker's mini-batch from its private cursor.
+fn assemble_batch(
+    train: &ImageDataset,
+    cursor: &mut BatchCursor,
+    bs: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    let dim = train.dim;
+    let mut idx = Vec::with_capacity(bs);
+    cursor.next_batch(bs, &mut idx);
+    let mut x = vec![0f32; bs * dim];
+    let mut y = Vec::with_capacity(bs);
+    for (bi, &i) in idx.iter().enumerate() {
+        train.fill_example(i, &mut x[bi * dim..(bi + 1) * dim]);
+        y.push(train.y[i]);
+    }
+    (x, y)
+}
+
 /// The real-stack training system.
 pub struct DnnSystem {
     pub cfg: DnnConfig,
@@ -82,8 +168,6 @@ pub struct DnnSystem {
     space: TunableSpace,
     /// Branch scheduled last clock (cache-clear detection).
     last_scheduled: Option<BranchId>,
-    /// Scratch batch index buffer.
-    scratch_idx: Vec<usize>,
 }
 
 impl DnnSystem {
@@ -109,10 +193,10 @@ impl DnnSystem {
             bail!("no grad artifacts for variant {}", cfg.variant);
         }
         let space = TunableSpace::standard(&batch_sizes);
-        let mut ps = ParamServer::new(cfg.num_workers.max(1), Optimizer::new(optimizer));
+        let ps = ParamServer::new(cfg.num_workers.max(1), Optimizer::new(optimizer));
         // He-initialized parameters, chunked into rows.
         let mut rng = Rng::seed_from_u64(cfg.seed.wrapping_add(2));
-                for (t, shape) in mm.param_shapes.iter().enumerate() {
+        for (t, shape) in mm.param_shapes.iter().enumerate() {
             let len: usize = shape.iter().product();
             let scale = if shape.len() == 2 {
                 (2.0 / shape[0] as f64).sqrt()
@@ -157,7 +241,6 @@ impl DnnSystem {
             param_shapes: mm.param_shapes,
             space,
             last_scheduled: None,
-            scratch_idx: Vec::new(),
         })
     }
 
@@ -173,79 +256,8 @@ impl DnnSystem {
         &self.runtime
     }
 
-    /// Assemble the flat parameter tensors for one worker, honoring its
-    /// SSP cache (staleness from the branch's tunable).
-    fn gather_params(
-        &mut self,
-        worker: usize,
-        branch: BranchId,
-        now: Clock,
-        staleness: u32,
-    ) -> Vec<Vec<f32>> {
-        let mut params = Vec::with_capacity(self.param_shapes.len());
-        for (t, shape) in self.param_shapes.iter().enumerate() {
-            let len: usize = shape.iter().product();
-            let mut flat = Vec::with_capacity(len);
-            let nrows = (len + ROW_LEN - 1) / ROW_LEN;
-            for r in 0..nrows {
-                // §Perf: at staleness 0 the cache can never satisfy a
-                // *next*-clock read (every clock refetches), so skip
-                // the cache bookkeeping entirely and copy straight from
-                // the shard — halves the gather's memory traffic.
-                if staleness == 0 {
-                    flat.extend_from_slice(
-                        self.ps
-                            .read_row(branch, t as TableId, r as RowKey)
-                            .expect("row must exist"),
-                    );
-                    continue;
-                }
-                let cache = &mut self.caches[worker];
-                if let Some(row) = cache.get(t as TableId, r as RowKey, now, staleness)
-                {
-                    flat.extend_from_slice(row);
-                    continue;
-                }
-                let row = self
-                    .ps
-                    .read_row(branch, t as TableId, r as RowKey)
-                    .expect("row must exist")
-                    .to_vec();
-                flat.extend_from_slice(&row);
-                self.caches[worker].put(t as TableId, r as RowKey, row, now);
-            }
-            debug_assert_eq!(flat.len(), len);
-            params.push(flat);
-        }
-        params
-    }
-
-    fn batch_of(
-        &mut self,
-        worker: usize,
-        branch: BranchId,
-        bs: usize,
-    ) -> (Vec<f32>, Vec<i32>) {
-        let dim = self.train.dim;
-        let mut idx = std::mem::take(&mut self.scratch_idx);
-        self.branches
-            .get_mut(&branch)
-            .unwrap()
-            .cursors[worker]
-            .next_batch(bs, &mut idx);
-        let mut x = vec![0f32; bs * dim];
-        let mut y = Vec::with_capacity(bs);
-        for (bi, &i) in idx.iter().enumerate() {
-            self.train
-                .fill_example(i, &mut x[bi * dim..(bi + 1) * dim]);
-            y.push(self.train.y[i]);
-        }
-        self.scratch_idx = idx;
-        (x, y)
-    }
-
     fn run_training_clock(&mut self, clock: Clock, branch: BranchId) -> Result<Progress> {
-        let b = self.branches.get(&branch).unwrap();
+        let b = self.branches.get_mut(&branch).unwrap();
         let tunable = b.tunable.clone();
         let bs = tunable.batch_size(&self.space);
         let staleness = tunable.staleness(&self.space);
@@ -254,33 +266,102 @@ impl DnnSystem {
             momentum: tunable.momentum(&self.space) as f32,
         };
         let local_clock = b.clocks_run;
+        // Cursors leave the branch record for the duration of the
+        // clock so worker threads can hold disjoint &mut to them.
+        let mut cursors = std::mem::take(&mut b.cursors);
         let started = Instant::now();
-        let mut loss_sum = 0f64;
+
+        // Phase 1 (parallel): per-worker gather + batch assembly.
+        let jobs: Vec<WorkerJob> = {
+            let ps = &self.ps;
+            let train = &self.train;
+            let shapes = &self.param_shapes[..];
+            std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .caches
+                    .iter_mut()
+                    .zip(cursors.iter_mut())
+                    .map(|(cache, cursor)| {
+                        s.spawn(move || {
+                            cache.switch_branch(branch);
+                            let params = gather_worker_params(
+                                ps,
+                                cache,
+                                shapes,
+                                branch,
+                                local_clock,
+                                staleness,
+                            );
+                            let (x, y) = assemble_batch(train, cursor, bs);
+                            WorkerJob { params, x, y }
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("gather worker panicked"))
+                    .collect()
+            })
+        };
+
+        // Phase 2 (sequential): PJRT gradient dispatch — the runtime
+        // owns one device and its executable cache.
         let model = self.cfg.model.clone();
         let variant = self.cfg.variant.clone();
-        for w in 0..self.cfg.num_workers {
-            self.caches[w].switch_branch(branch);
-            let params = self.gather_params(w, branch, local_clock, staleness);
-            let (x, y) = self.batch_of(w, branch, bs);
-            let (grads, loss) =
-                self.runtime
-                    .run_grad(&model, bs, &variant, &params, &x, &y)?;
-            loss_sum += loss as f64;
-            // push batch-normalized gradients; server applies the rule.
-            for (t, grad) in grads.iter().enumerate() {
-                for (r, chunk) in grad.chunks(ROW_LEN).enumerate() {
-                    self.ps.apply_update(
-                        branch,
-                        t as TableId,
-                        r as RowKey,
-                        chunk,
-                        hyper,
-                        None,
-                    )?;
+        let mut worker_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(jobs.len());
+        let mut loss_sum = 0f64;
+        let mut dispatch_err: Option<anyhow::Error> = None;
+        for job in &jobs {
+            match self
+                .runtime
+                .run_grad(&model, bs, &variant, &job.params, &job.x, &job.y)
+            {
+                Ok((grads, loss)) => {
+                    loss_sum += loss as f64;
+                    worker_grads.push(grads);
+                }
+                Err(e) => {
+                    dispatch_err = Some(e);
+                    break;
                 }
             }
         }
+
+        // Phase 3 (parallel): each worker pushes its batch-normalized
+        // gradients as one routed, per-shard-grouped batch; the server
+        // applies the rule under one lock acquisition per shard.
+        let push_result: Result<()> = match dispatch_err {
+            Some(e) => Err(e),
+            None => {
+                let ps = &self.ps;
+                let results: Vec<Result<()>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = worker_grads
+                        .iter()
+                        .map(|grads| {
+                            s.spawn(move || -> Result<()> {
+                                let mut updates: Vec<(TableId, RowKey, &[f32])> = Vec::new();
+                                for (t, grad) in grads.iter().enumerate() {
+                                    for (r, chunk) in grad.chunks(ROW_LEN).enumerate() {
+                                        updates.push((t as TableId, r as RowKey, chunk));
+                                    }
+                                }
+                                ps.apply_batch(branch, &updates, hyper)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("push worker panicked"))
+                        .collect()
+                });
+                results.into_iter().find(|r| r.is_err()).unwrap_or(Ok(()))
+            }
+        };
+
+        // Cursors return to the branch record even on error.
         let b = self.branches.get_mut(&branch).unwrap();
+        b.cursors = cursors;
+        push_result?;
         b.clocks_run += 1;
         let _ = clock;
         Ok(Progress {
@@ -294,7 +375,14 @@ impl DnnSystem {
         let started = Instant::now();
         // Evaluate on worker 0's assembled (fresh) parameters.
         self.caches[0].switch_branch(branch);
-        let params = self.gather_params(0, branch, 0, 0);
+        let params = gather_worker_params(
+            &self.ps,
+            &mut self.caches[0],
+            &self.param_shapes,
+            branch,
+            0,
+            0,
+        );
         let mm = self.runtime.model(&self.cfg.model)?.clone();
         let eb = mm.eval_batch;
         let dim = self.val.dim;
@@ -402,11 +490,15 @@ impl TrainingSystem for DnnSystem {
     }
 
     fn snapshot_stats(&self) -> SnapshotStats {
+        let srv = self.ps.server_stats();
         SnapshotStats {
             live_branches: self.branches.len(),
             peak_branches: self.ps.peak_branches(),
             forks: self.ps.fork_count(),
             cow_buffer_copies: self.ps.cow_buffer_copies(),
+            shard_lock_contentions: srv.shard_lock_contentions,
+            batch_calls: srv.batch_calls,
+            batched_rows: srv.batched_rows,
         }
     }
 }

@@ -11,6 +11,14 @@
 //! Factor rows live in the branch-versioned parameter server: table 0 =
 //! user factors, table 1 = item factors, one row per user/item — the
 //! natural fit for the paper's key-value sharding.
+//!
+//! The clock is **data-parallel** (the paper's deployment shape): each
+//! of the `num_workers` worker threads accumulates partial gradients
+//! over its rating partition against the shared concurrent
+//! [`ParamServer`] (read locks only), the partials are merged in worker
+//! order, and the per-row updates are pushed back from all workers in
+//! parallel over disjoint row sets (one AdaRevision read+update per
+//! touched row).
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -61,17 +69,41 @@ struct MfBranch {
     clocks_run: u64,
 }
 
+/// One worker thread's private gradient accumulators (dense over rows,
+/// lazily zeroed through the touched flags).
+#[derive(Debug)]
+struct WorkerScratch {
+    grad_l: Vec<Vec<f32>>,
+    grad_r: Vec<Vec<f32>>,
+    touched_l: Vec<bool>,
+    touched_r: Vec<bool>,
+}
+
+impl WorkerScratch {
+    fn new(users: usize, items: usize, rank: usize) -> Self {
+        WorkerScratch {
+            grad_l: vec![vec![0.0; rank]; users],
+            grad_r: vec![vec![0.0; rank]; items],
+            touched_l: vec![false; users],
+            touched_r: vec![false; items],
+        }
+    }
+
+    fn reset(&mut self) {
+        self.touched_l.iter_mut().for_each(|t| *t = false);
+        self.touched_r.iter_mut().for_each(|t| *t = false);
+    }
+}
+
 pub struct MfSystem {
     pub cfg: MfConfig,
     ps: ParamServer,
     data: RatingsDataset,
     branches: HashMap<BranchId, MfBranch>,
     space: TunableSpace,
-    /// scratch per-row gradient accumulators (key → grad)
-    grad_l: Vec<Vec<f32>>,
-    grad_r: Vec<Vec<f32>>,
-    touched_l: Vec<bool>,
-    touched_r: Vec<bool>,
+    /// Per-worker scratch gradient accumulators; index 0 doubles as
+    /// the merge target.
+    scratch: Vec<WorkerScratch>,
 }
 
 impl MfSystem {
@@ -91,12 +123,12 @@ impl MfSystem {
             min: 1e-5,
             max: 10.0,
         }]);
-        let mut ps = ParamServer::new(
+        let ps = ParamServer::new(
             cfg.num_workers.max(1),
             Optimizer::new(cfg.optimizer),
         );
         let mut rng = Rng::seed_from_u64(cfg.seed.wrapping_add(7));
-                let scale = (1.0 / cfg.rank as f64).sqrt();
+        let scale = (1.0 / cfg.rank as f64).sqrt();
         for u in 0..cfg.users {
             let row: Vec<f32> = (0..cfg.rank)
                 .map(|_| (rng.gen_normal() * scale) as f32)
@@ -118,11 +150,11 @@ impl MfSystem {
                 clocks_run: 0,
             },
         );
+        let workers = cfg.num_workers.max(1);
         MfSystem {
-            grad_l: vec![vec![0.0; cfg.rank]; cfg.users],
-            grad_r: vec![vec![0.0; cfg.rank]; cfg.items],
-            touched_l: vec![false; cfg.users],
-            touched_r: vec![false; cfg.items],
+            scratch: (0..workers)
+                .map(|_| WorkerScratch::new(cfg.users, cfg.items, cfg.rank))
+                .collect(),
             cfg,
             ps,
             data,
@@ -137,11 +169,13 @@ impl MfSystem {
 
     /// Current training loss (sum of squared errors) of a branch.
     pub fn loss_of(&self, branch: BranchId) -> f64 {
+        let mut lu: Vec<f32> = Vec::new();
+        let mut ri: Vec<f32> = Vec::new();
         let mut loss = 0f64;
         for &(u, i, r) in &self.data.ratings {
-            let lu = self.ps.read_row(branch, T_USER, u as RowKey).unwrap();
-            let ri = self.ps.read_row(branch, T_ITEM, i as RowKey).unwrap();
-            let pred: f32 = lu.iter().zip(ri).map(|(a, b)| a * b).sum();
+            assert!(self.ps.read_row_into(branch, T_USER, u as RowKey, &mut lu));
+            assert!(self.ps.read_row_into(branch, T_ITEM, i as RowKey, &mut ri));
+            let pred: f32 = lu.iter().zip(&ri).map(|(a, b)| a * b).sum();
             let e = (pred - r) as f64;
             loss += e * e;
         }
@@ -213,69 +247,145 @@ impl TrainingSystem for MfSystem {
             momentum: 0.0,
         };
 
-        // One clock = one whole pass: accumulate per-row gradients
-        // (workers' partitions concatenate to the full pass), compute
-        // the pre-update loss on the fly.
-        let mut loss = 0f64;
-        self.touched_l.iter_mut().for_each(|t| *t = false);
-        self.touched_r.iter_mut().for_each(|t| *t = false);
-        for w in 0..self.cfg.num_workers {
-            for &(u, i, r) in self.data.partition(w, self.cfg.num_workers) {
-                let (u, i) = (u as usize, i as usize);
-                let lu = self.ps.read_row(branch_id, T_USER, u as RowKey).unwrap();
-                let ri = self.ps.read_row(branch_id, T_ITEM, i as RowKey).unwrap();
-                let pred: f32 = lu.iter().zip(ri).map(|(a, b)| a * b).sum();
-                let e = pred - r;
-                loss += (e as f64) * (e as f64);
-                if !self.touched_l[u] {
-                    self.grad_l[u].iter_mut().for_each(|g| *g = 0.0);
-                    self.touched_l[u] = true;
+        // One clock = one whole pass, data-parallel.
+        //
+        // Phase 1 (parallel): each worker thread accumulates partial
+        // per-row gradients over its rating partition, reading factor
+        // rows from the shared server (read locks only — no writes
+        // happen during this phase, so reads are stable), and computes
+        // its share of the pre-update loss.
+        let workers = self.scratch.len();
+        let rank = self.cfg.rank;
+        let ps = &self.ps;
+        let data = &self.data;
+        let mut partial_losses = vec![0f64; workers];
+        std::thread::scope(|s| {
+            for ((w, scratch), loss_slot) in self
+                .scratch
+                .iter_mut()
+                .enumerate()
+                .zip(partial_losses.iter_mut())
+            {
+                s.spawn(move || {
+                    scratch.reset();
+                    let mut lu: Vec<f32> = Vec::new();
+                    let mut ri: Vec<f32> = Vec::new();
+                    let mut loss = 0f64;
+                    for &(u, i, r) in data.partition(w, workers) {
+                        let (u, i) = (u as usize, i as usize);
+                        assert!(ps.read_row_into(branch_id, T_USER, u as RowKey, &mut lu));
+                        assert!(ps.read_row_into(branch_id, T_ITEM, i as RowKey, &mut ri));
+                        let pred: f32 = lu.iter().zip(&ri).map(|(a, b)| a * b).sum();
+                        let e = pred - r;
+                        loss += (e as f64) * (e as f64);
+                        if !scratch.touched_l[u] {
+                            scratch.grad_l[u].iter_mut().for_each(|g| *g = 0.0);
+                            scratch.touched_l[u] = true;
+                        }
+                        if !scratch.touched_r[i] {
+                            scratch.grad_r[i].iter_mut().for_each(|g| *g = 0.0);
+                            scratch.touched_r[i] = true;
+                        }
+                        for k in 0..rank {
+                            scratch.grad_l[u][k] += e * ri[k];
+                            scratch.grad_r[i][k] += e * lu[k];
+                        }
+                    }
+                    *loss_slot = loss;
+                });
+            }
+        });
+        let loss: f64 = partial_losses.iter().sum();
+
+        // Phase 2 (merge, worker order): fold workers 1.. into worker
+        // 0's partials — the full-pass gradient, grouped exactly like
+        // the sequential reference (each worker's partial is its own
+        // in-order sum).
+        {
+            let (acc, rest) = self.scratch.split_at_mut(1);
+            let acc = &mut acc[0];
+            for part in rest.iter_mut() {
+                for u in 0..self.cfg.users {
+                    if !part.touched_l[u] {
+                        continue;
+                    }
+                    if !acc.touched_l[u] {
+                        acc.grad_l[u].iter_mut().for_each(|g| *g = 0.0);
+                        acc.touched_l[u] = true;
+                    }
+                    for k in 0..rank {
+                        acc.grad_l[u][k] += part.grad_l[u][k];
+                    }
                 }
-                if !self.touched_r[i] {
-                    self.grad_r[i].iter_mut().for_each(|g| *g = 0.0);
-                    self.touched_r[i] = true;
-                }
-                for k in 0..self.cfg.rank {
-                    self.grad_l[u][k] += e * ri[k];
-                    self.grad_r[i][k] += e * lu[k];
+                for i in 0..self.cfg.items {
+                    if !part.touched_r[i] {
+                        continue;
+                    }
+                    if !acc.touched_r[i] {
+                        acc.grad_r[i].iter_mut().for_each(|g| *g = 0.0);
+                        acc.touched_r[i] = true;
+                    }
+                    for k in 0..rank {
+                        acc.grad_r[i][k] += part.grad_r[i][k];
+                    }
                 }
             }
         }
-        // Apply per-row updates through the server (AdaRevision gets
-        // the z snapshot read before applying).
-        for u in 0..self.cfg.users {
-            if !self.touched_l[u] {
-                continue;
-            }
-            let z_old = self
-                .ps
-                .read_row_with_accum(branch_id, T_USER, u as RowKey)
-                .and_then(|(_, z)| z.map(|s| s.to_vec()));
-            self.ps.apply_update(
-                branch_id,
-                T_USER,
-                u as RowKey,
-                &self.grad_l[u],
-                hyper,
-                z_old.as_deref(),
-            )?;
-        }
-        for i in 0..self.cfg.items {
-            if !self.touched_r[i] {
-                continue;
-            }
-            let z_old = self
-                .ps
-                .read_row_with_accum(branch_id, T_ITEM, i as RowKey)
-                .and_then(|(_, z)| z.map(|s| s.to_vec()));
-            self.ps.apply_update(
-                branch_id,
-                T_ITEM,
-                i as RowKey,
-                &self.grad_r[i],
-                hyper,
-                z_old.as_deref(),
-            )?;
+
+        // Phase 3 (parallel): push the merged per-row updates through
+        // the server from all workers, disjoint row sets per worker
+        // (row index mod workers).  AdaRevision gets the z snapshot
+        // read just before its row's update, as in the sequential path.
+        let acc = &self.scratch[0];
+        let users = self.cfg.users;
+        let items = self.cfg.items;
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    s.spawn(move || -> Result<()> {
+                        for u in (w..users).step_by(workers) {
+                            if !acc.touched_l[u] {
+                                continue;
+                            }
+                            let z_old = ps
+                                .read_row_with_accum(branch_id, T_USER, u as RowKey)
+                                .and_then(|(_, z)| z);
+                            ps.apply_update(
+                                branch_id,
+                                T_USER,
+                                u as RowKey,
+                                &acc.grad_l[u],
+                                hyper,
+                                z_old.as_deref(),
+                            )?;
+                        }
+                        for i in (w..items).step_by(workers) {
+                            if !acc.touched_r[i] {
+                                continue;
+                            }
+                            let z_old = ps
+                                .read_row_with_accum(branch_id, T_ITEM, i as RowKey)
+                                .and_then(|(_, z)| z);
+                            ps.apply_update(
+                                branch_id,
+                                T_ITEM,
+                                i as RowKey,
+                                &acc.grad_r[i],
+                                hyper,
+                                z_old.as_deref(),
+                            )?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("mf update worker panicked"))
+                .collect()
+        });
+        for r in results {
+            r?;
         }
         self.branches.get_mut(&branch_id).unwrap().clocks_run += 1;
         Ok(Progress {
@@ -307,11 +417,15 @@ impl TrainingSystem for MfSystem {
     }
 
     fn snapshot_stats(&self) -> SnapshotStats {
+        let srv = self.ps.server_stats();
         SnapshotStats {
             live_branches: self.branches.len(),
             peak_branches: self.ps.peak_branches(),
             forks: self.ps.fork_count(),
             cow_buffer_copies: self.ps.cow_buffer_copies(),
+            shard_lock_contentions: srv.shard_lock_contentions,
+            batch_calls: srv.batch_calls,
+            batched_rows: srv.batched_rows,
         }
     }
 }
@@ -408,5 +522,26 @@ mod tests {
         let tuned = mk(0.3);
         let tiny = mk(1e-4);
         assert!(tuned < tiny * 0.8, "tuned {tuned} vs tiny {tiny}");
+    }
+
+    #[test]
+    fn single_worker_config_still_trains() {
+        // the data-parallel clock must degrade cleanly to one worker
+        let mut sys = MfSystem::new(MfConfig {
+            users: 30,
+            items: 20,
+            rank: 4,
+            n_ratings: 600,
+            num_workers: 1,
+            ..Default::default()
+        });
+        let s = lr_setting(&sys, 0.3);
+        sys.fork_branch(0, 1, None, &s, BranchType::Training).unwrap();
+        let first = sys.schedule_branch(0, 1).unwrap().value;
+        let mut last = first;
+        for c in 1..30 {
+            last = sys.schedule_branch(c, 1).unwrap().value;
+        }
+        assert!(last < first, "loss {first} -> {last}");
     }
 }

@@ -556,8 +556,9 @@ impl TrainingSystem for SimSystem {
             peak_branches: self.peak_branches,
             forks: self.forked,
             // the simulator's branch state is a few scalars — no
-            // parameter buffers exist to copy
+            // parameter buffers exist to copy, no shards to contend on
             cow_buffer_copies: 0,
+            ..SnapshotStats::default()
         }
     }
 }

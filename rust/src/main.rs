@@ -88,6 +88,12 @@ fn cmd_tune(args: &Args) -> Result<()> {
         report.snapshots.peak_branches,
         report.snapshots.cow_buffer_copies
     );
+    println!(
+        "server:          {} rows in {} update batches, {} shard-lock contentions",
+        report.snapshots.batched_rows,
+        report.snapshots.batch_calls,
+        report.snapshots.shard_lock_contentions
+    );
     for (i, t) in report.tunings.iter().enumerate() {
         println!(
             "  [{}] {} trials={} trial_time={:.1}s chosen={}",

@@ -14,6 +14,14 @@
 //!
 //! All of these *still require the user to pick the initial learning
 //! rate* — that is exactly the knob MLtuner tunes in §5.3.
+//!
+//! [`Optimizer`] is a plain-old-data rule description (`Copy + Send +
+//! Sync`): the concurrent sharded server shares one instance across
+//! all worker threads without synchronization, because every piece of
+//! *mutable* optimizer state (velocity, moment, accumulator slots and
+//! the step counter) is row-resident in [`Entry`] and therefore
+//! protected by the owning shard's lock — and snapshotted/forked with
+//! the branch like any other training state.
 
 use crate::ps::storage::Entry;
 
@@ -366,6 +374,16 @@ mod tests {
         assert_eq!(Optimizer::new(OptimizerKind::Sgd).num_slots(), 1);
         assert_eq!(Optimizer::new(OptimizerKind::Adam).num_slots(), 2);
         assert_eq!(Optimizer::new(OptimizerKind::AdaRevision).num_slots(), 2);
+    }
+
+    #[test]
+    fn optimizer_is_sync_shareable() {
+        // the concurrent server shares one Optimizer across N worker
+        // threads — this must never silently regress
+        fn assert_shareable<T: Send + Sync + Copy>() {}
+        assert_shareable::<Optimizer>();
+        assert_shareable::<Hyper>();
+        assert_shareable::<OptimizerKind>();
     }
 
     #[test]

@@ -14,6 +14,12 @@
 //! cached row is a worker-private value copy, so server-side
 //! materialization never invalidates it.  Staleness (SSP) and branch
 //! switches remain the only two invalidation sources.
+//!
+//! Under the concurrent engine each cache is **owned by exactly one
+//! worker thread per clock** (the gather phase hands each spawned
+//! thread `&mut` to its own cache), so the cache itself needs no
+//! internal locking — `Send` ownership transfer is the whole
+//! synchronization story, mirroring IterStore's thread-private caches.
 
 use std::collections::hash_map::Entry as MapEntry;
 use std::collections::HashMap;

@@ -1,17 +1,76 @@
 //! Parameter-server substrate (§4.6): the IterStore / GeePS analog that
-//! MLtuner's branch operations drive.
+//! MLtuner's branch operations drive — now a **concurrent sharded
+//! engine** rather than a single-threaded `&mut self` object.
 //!
 //! Parameter data lives as key→row pairs in memory, sharded across
 //! server shards (one per worker machine in the paper's deployments).
-//! Branch support adds the branch ID as an additional index field.
-//! Branches are **copy-on-write** (see [`storage`]): a fork snapshots
-//! only the index (O(#rows) pointer copies, zero buffer traffic), the
-//! first write to a row under a branch materializes a private copy from
-//! the user-level [`pool::MemoryPool`], and a free reclaims a row's
-//! buffers only when the freed branch was its last owner.  Optimizer
-//! slot state is row-resident and is snapshotted together with the
-//! data, so a branch snapshot is a *consistent* snapshot of all
-//! training state.
+//! Branch support adds the branch ID as an additional index field, and
+//! branches are **copy-on-write** (see [`storage`]): a fork snapshots
+//! only the index, the first write to a row under a branch materializes
+//! a private copy, and a free reclaims a row's buffers only when the
+//! freed branch was its last owner.  Optimizer slot state is
+//! row-resident and is snapshotted together with the data, so a branch
+//! snapshot is a *consistent* snapshot of all training state — and,
+//! because slots travel with the row, a shard's write lock is the only
+//! synchronization an update needs: there is no separate optimizer
+//! state store to keep coherent.
+//!
+//! ## Thread model and lock hierarchy
+//!
+//! The server exposes an entirely `&self` API and is `Send + Sync`:
+//! data-parallel workers drive it concurrently from N threads (the
+//! paper's deployment shape).  Three kinds of state, three locks:
+//!
+//! * **Per-shard state** — each shard's row index *plus its own
+//!   [`MemoryPool`] arena* lives behind one `RwLock<ShardState>`.
+//!   Readers (`read_row`, `with_row`, `row_shared`; `gather_table`
+//!   additionally requires its branch to stay live for the whole call)
+//!   take shared read locks and never block each other; writers
+//!   (`insert_row`, `apply_update`, `apply_batch`, branch fan-out) take
+//!   the write lock.  The pool is *inside* the shard lock on purpose:
+//!   copy-on-write materialization and last-owner reclamation then need
+//!   no second lock, and a buffer recycled on shard `s` is reused by
+//!   shard `s` — the per-pool `idle` census stays an exact census.
+//! * **Control plane** — branch bookkeeping (`branch_rows`, fork
+//!   count, peak live branches) is a small `Mutex<ControlPlane>`.  It
+//!   is held for the *whole* of `fork_branch`/`free_branch`, which
+//!   serializes branch ops against each other (they are rare: §4.6
+//!   keeps at most a handful of branches live) while leaving the
+//!   update/read hot path — which never touches the control plane —
+//!   completely unaffected.
+//! * **Counters** — contention and batching statistics are relaxed
+//!   atomics, lock-free on every path.
+//!
+//! Lock order is `control plane → shard`, and shard locks are taken
+//! one at a time (or concurrently by *independent* fan-out threads, one
+//! shard each), so there is no lock-order cycle anywhere: update paths
+//! take only a single shard lock, branch ops take control first and
+//! never a second shard lock from the same thread.  `insert_row` takes
+//! a shard lock and the control mutex *sequentially*, never nested.
+//!
+//! ## Batched updates
+//!
+//! The row-at-a-time [`ParamServer::apply_update`] acquires one write
+//! lock per row.  The hot path for data-parallel training is
+//! [`ParamServer::apply_batch`]: route every `(table, key)` once, group
+//! the updates per shard, and apply each shard's whole group under a
+//! **single** lock acquisition.  Groups are visited starting at a
+//! rotating shard offset so concurrent workers pushing whole-model
+//! batches do not convoy on shard 0.  A batch is *not* atomic across
+//! shards: on a missing row the call stops and reports the error, with
+//! earlier groups already applied (the same partial-application a
+//! sequence of `apply_update` calls would leave behind).  Within one
+//! key, batch order equals call order, so `apply_batch` is
+//! observationally identical to the equivalent `apply_update` sequence
+//! (`prop_apply_batch_equals_update_sequence` checks this).
+//!
+//! ## Branch fan-out
+//!
+//! `fork_branch`/`free_branch` touch every shard.  For small branches
+//! the loop is sequential (a fork is O(#rows) `Arc` bumps — cheaper
+//! than spawning); at [`PARALLEL_BRANCH_OP_MIN_ROWS`] rows and above
+//! the fan-out runs one scoped thread per shard, each locking only its
+//! own shard.
 
 pub mod cache;
 pub mod thread_cache;
@@ -19,9 +78,10 @@ pub mod pool;
 pub mod storage;
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard, TryLockError};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::comm::BranchId;
 use crate::optim::{Hyper, Optimizer};
@@ -29,12 +89,26 @@ use crate::optim::{Hyper, Optimizer};
 use pool::{MemoryPool, PoolStats};
 use storage::{Entry, RowKey, Shard, TableId};
 
-/// Sharded, branch-versioned parameter server.
-#[derive(Debug)]
-pub struct ParamServer {
-    shards: Vec<Shard>,
+/// Branch fork/free fan-out runs one thread per shard at this many
+/// rows and above; below it the per-shard loop is sequential (an
+/// index-only fork is cheaper than thread spawns).
+pub const PARALLEL_BRANCH_OP_MIN_ROWS: usize = 8192;
+
+/// One shard's lock domain: its row index and its private buffer pool.
+/// Keeping the pool inside the shard lock makes copy-on-write
+/// materialization and last-owner reclamation single-lock operations
+/// and keeps each pool's `idle` census exact.
+#[derive(Debug, Default)]
+struct ShardState {
+    shard: Shard,
     pool: MemoryPool,
-    optimizer: Optimizer,
+}
+
+/// Branch bookkeeping shared by all shards.  Guarded by one mutex that
+/// is held across whole branch operations, serializing fork/free
+/// against each other without touching the update hot path.
+#[derive(Debug, Default)]
+struct ControlPlane {
     /// rows per branch (all shards), for accounting.
     branch_rows: HashMap<BranchId, usize>,
     /// Branch forks served since construction.
@@ -43,16 +117,107 @@ pub struct ParamServer {
     peak_branches: usize,
 }
 
+/// Lock-free concurrency counters (relaxed atomics).
+#[derive(Debug, Default)]
+struct Counters {
+    /// Shard lock acquisitions that found the lock held (would-block).
+    contended: AtomicU64,
+    /// `apply_batch` invocations (also drives the anti-convoy shard
+    /// rotation).
+    batch_calls: AtomicU64,
+    /// Rows applied through `apply_batch`.
+    batched_rows: AtomicU64,
+}
+
+/// Concurrency statistics snapshot (surfaced through
+/// [`crate::training::SnapshotStats`] and `mltuner tune`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Shard-lock acquisitions that had to wait behind another thread.
+    pub shard_lock_contentions: u64,
+    /// Number of `apply_batch` calls served.
+    pub batch_calls: u64,
+    /// Rows applied through the batched path.
+    pub batched_rows: u64,
+}
+
+#[inline]
+fn lock_control(m: &Mutex<ControlPlane>) -> MutexGuard<'_, ControlPlane> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Read-lock a shard, counting contention without double-locking.
+fn read_shard<'a>(
+    lock: &'a RwLock<ShardState>,
+    counters: &Counters,
+) -> RwLockReadGuard<'a, ShardState> {
+    match lock.try_read() {
+        Ok(g) => g,
+        Err(TryLockError::WouldBlock) => {
+            counters.contended.fetch_add(1, Ordering::Relaxed);
+            lock.read().unwrap_or_else(|e| e.into_inner())
+        }
+        Err(TryLockError::Poisoned(e)) => e.into_inner(),
+    }
+}
+
+/// Write-lock a shard, counting contention without double-locking.
+fn write_shard<'a>(
+    lock: &'a RwLock<ShardState>,
+    counters: &Counters,
+) -> RwLockWriteGuard<'a, ShardState> {
+    match lock.try_write() {
+        Ok(g) => g,
+        Err(TryLockError::WouldBlock) => {
+            counters.contended.fetch_add(1, Ordering::Relaxed);
+            lock.write().unwrap_or_else(|e| e.into_inner())
+        }
+        Err(TryLockError::Poisoned(e)) => e.into_inner(),
+    }
+}
+
+/// splitmix64 finalizer: a full-avalanche mix so that `h % n` is
+/// uniform even for tiny shard counts and structured key patterns.
+/// (The previous router multiplied the key by one odd constant, which
+/// leaves the low bits — everything `% n` sees for small `n` —
+/// poorly mixed for strided key sets.)
+#[inline]
+fn splitmix64(mut h: u64) -> u64 {
+    h = h.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^= h >> 31;
+    h
+}
+
+/// Deterministic shard router: mix the table into the key, then
+/// avalanche.  Pure function of `(table, key, n)` so every thread
+/// routes identically without touching shared state.
+#[inline]
+fn route(table: TableId, key: RowKey, n: usize) -> usize {
+    let h = splitmix64(key ^ (table as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+    (h % n as u64) as usize
+}
+
+/// Sharded, branch-versioned, **concurrent** parameter server.
+#[derive(Debug)]
+pub struct ParamServer {
+    shards: Vec<RwLock<ShardState>>,
+    control: Mutex<ControlPlane>,
+    optimizer: Optimizer,
+    counters: Counters,
+}
+
 impl ParamServer {
     pub fn new(num_shards: usize, optimizer: Optimizer) -> Self {
         assert!(num_shards > 0);
         ParamServer {
-            shards: (0..num_shards).map(|_| Shard::default()).collect(),
-            pool: MemoryPool::new(),
+            shards: (0..num_shards).map(|_| RwLock::default()).collect(),
+            control: Mutex::new(ControlPlane::default()),
             optimizer,
-            branch_rows: HashMap::new(),
-            forks: 0,
-            peak_branches: 0,
+            counters: Counters::default(),
         }
     }
 
@@ -65,12 +230,8 @@ impl ParamServer {
     }
 
     #[inline]
-    fn shard_of(&self, table: TableId, key: RowKey) -> usize {
-        // Cheap deterministic router: mix table into the key.
-        let h = key
-            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            .wrapping_add(table as u64);
-        (h % self.shards.len() as u64) as usize
+    fn sid(&self, table: TableId, key: RowKey) -> usize {
+        route(table, key, self.shards.len())
     }
 
     /// Install a fresh row into `branch` (used when initializing the
@@ -78,118 +239,203 @@ impl ParamServer {
     /// overwrites it: the displaced row's buffers are reclaimed when
     /// this branch was their last owner, and the row count is not
     /// double-counted.
-    pub fn insert_row(
-        &mut self,
-        branch: BranchId,
-        table: TableId,
-        key: RowKey,
-        data: Vec<f32>,
-    ) {
-        let sid = self.shard_of(table, key);
+    pub fn insert_row(&self, branch: BranchId, table: TableId, key: RowKey, data: Vec<f32>) {
+        let sid = self.sid(table, key);
         let mut entry = Entry {
             data,
             slots: Vec::new(),
             step: 0,
         };
         self.optimizer.init_slots(&mut entry);
-        match self.shards[sid].insert(branch, table, key, entry) {
-            Some(displaced) => {
-                if let Ok(old) = Arc::try_unwrap(displaced) {
-                    self.pool.recycle_entry(old);
+        // shard lock and control mutex are taken sequentially, never
+        // nested (lock-order discipline, see module docs).
+        let displaced = {
+            let mut st = write_shard(&self.shards[sid], &self.counters);
+            let ShardState { shard, pool } = &mut *st;
+            match shard.insert(branch, table, key, entry) {
+                Some(old) => {
+                    if let Ok(old) = Arc::try_unwrap(old) {
+                        pool.recycle_entry(old);
+                    }
+                    true
                 }
+                None => false,
             }
-            None => {
-                *self.branch_rows.entry(branch).or_insert(0) += 1;
-            }
+        };
+        if !displaced {
+            let mut ctl = lock_control(&self.control);
+            *ctl.branch_rows.entry(branch).or_insert(0) += 1;
+            ctl.peak_branches = ctl.peak_branches.max(ctl.branch_rows.len());
         }
-        self.peak_branches = self.peak_branches.max(self.branch_rows.len());
     }
 
     /// Fork `child` from `parent`: a consistent copy-on-write snapshot
     /// of parameter data + optimizer state.  Cost is O(#rows) index
-    /// clones — independent of row length, no buffer copies.
-    pub fn fork_branch(&mut self, child: BranchId, parent: BranchId) -> Result<()> {
-        if self.branch_rows.contains_key(&child) {
+    /// clones — independent of row length, no buffer copies.  Large
+    /// branches fan out one thread per shard (see module docs); the
+    /// control plane stays locked throughout, so branch ops are
+    /// serialized against each other but never against updates/reads.
+    pub fn fork_branch(&self, child: BranchId, parent: BranchId) -> Result<()> {
+        let mut ctl = lock_control(&self.control);
+        if ctl.branch_rows.contains_key(&child) {
             bail!("branch {child} already exists");
         }
-        if !self.branch_rows.contains_key(&parent) {
+        let Some(&parent_rows) = ctl.branch_rows.get(&parent) else {
             bail!("parent branch {parent} does not exist");
-        }
-        let mut rows = 0;
-        for shard in &mut self.shards {
-            rows += shard.fork(child, parent, &mut self.pool);
-        }
-        self.branch_rows.insert(child, rows);
-        self.forks += 1;
-        self.peak_branches = self.peak_branches.max(self.branch_rows.len());
+        };
+        let rows = self.fan_out(parent_rows, |shard, pool| shard.fork(child, parent, pool));
+        ctl.branch_rows.insert(child, rows);
+        ctl.forks += 1;
+        ctl.peak_branches = ctl.peak_branches.max(ctl.branch_rows.len());
         Ok(())
     }
 
-    /// Free `branch`.  Row buffers return to the pool only once their
-    /// last owning branch is freed; rows still shared with ancestors or
-    /// siblings stay live under those owners.
-    pub fn free_branch(&mut self, branch: BranchId) -> Result<()> {
-        if self.branch_rows.remove(&branch).is_none() {
+    /// Run `op` on every shard (under its write lock), one scoped
+    /// thread per shard when the branch is large enough, sequentially
+    /// otherwise.  Returns the summed per-shard results.  Shared
+    /// fan-out machinery of `fork_branch`/`free_branch` — keep the
+    /// threshold and lock discipline in exactly one place.
+    fn fan_out<F>(&self, branch_rows: usize, op: F) -> usize
+    where
+        F: Fn(&mut Shard, &mut MemoryPool) -> usize + Sync,
+    {
+        if self.shards.len() > 1 && branch_rows >= PARALLEL_BRANCH_OP_MIN_ROWS {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .shards
+                    .iter()
+                    .map(|lock| {
+                        let counters = &self.counters;
+                        let op = &op;
+                        scope.spawn(move || {
+                            let mut st = write_shard(lock, counters);
+                            let ShardState { shard, pool } = &mut *st;
+                            op(shard, pool)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard fan-out worker panicked"))
+                    .sum()
+            })
+        } else {
+            let mut total = 0;
+            for lock in &self.shards {
+                let mut st = write_shard(lock, &self.counters);
+                let ShardState { shard, pool } = &mut *st;
+                total += op(shard, pool);
+            }
+            total
+        }
+    }
+
+    /// Free `branch`.  Row buffers return to their shard's pool only
+    /// once their last owning branch is freed; rows still shared with
+    /// ancestors or siblings stay live under those owners.  Fans out
+    /// like [`ParamServer::fork_branch`].
+    pub fn free_branch(&self, branch: BranchId) -> Result<()> {
+        let mut ctl = lock_control(&self.control);
+        let Some(rows) = ctl.branch_rows.remove(&branch) else {
             bail!("branch {branch} does not exist");
-        }
-        for shard in &mut self.shards {
-            shard.free(branch, &mut self.pool);
-        }
+        };
+        self.fan_out(rows, |shard, pool| shard.free(branch, pool));
         Ok(())
     }
 
     pub fn branch_exists(&self, branch: BranchId) -> bool {
-        self.branch_rows.contains_key(&branch)
+        lock_control(&self.control).branch_rows.contains_key(&branch)
     }
 
     pub fn live_branches(&self) -> Vec<BranchId> {
-        let mut v: Vec<_> = self.branch_rows.keys().copied().collect();
+        let mut v: Vec<_> = lock_control(&self.control)
+            .branch_rows
+            .keys()
+            .copied()
+            .collect();
         v.sort_unstable();
         v
     }
 
     pub fn branch_row_count(&self, branch: BranchId) -> usize {
-        self.branch_rows.get(&branch).copied().unwrap_or(0)
+        lock_control(&self.control)
+            .branch_rows
+            .get(&branch)
+            .copied()
+            .unwrap_or(0)
     }
 
     /// Branch forks served since construction.
     pub fn fork_count(&self) -> u64 {
-        self.forks
+        lock_control(&self.control).forks
     }
 
     /// Peak number of simultaneously-live branches.
     pub fn peak_branches(&self) -> usize {
-        self.peak_branches
+        lock_control(&self.control).peak_branches
     }
 
     /// Buffers privately materialized by copy-on-write since
-    /// construction (the pool is only ever drawn from for COW copies).
+    /// construction (the pools are only ever drawn from for COW copies).
     pub fn cow_buffer_copies(&self) -> u64 {
-        let s = self.pool.stats();
+        let s = self.pool_stats();
         s.allocated + s.reused
+    }
+
+    /// Concurrency counters: lock contention and batching statistics.
+    pub fn server_stats(&self) -> ServerStats {
+        ServerStats {
+            shard_lock_contentions: self.counters.contended.load(Ordering::Relaxed),
+            batch_calls: self.counters.batch_calls.load(Ordering::Relaxed),
+            batched_rows: self.counters.batched_rows.load(Ordering::Relaxed),
+        }
     }
 
     /// Is this row's buffer still shared with another branch?
     /// (Test/bench introspection of the COW state.)
-    pub fn row_shared(
+    pub fn row_shared(&self, branch: BranchId, table: TableId, key: RowKey) -> Option<bool> {
+        let sid = self.sid(table, key);
+        let st = read_shard(&self.shards[sid], &self.counters);
+        st.shard.row_shared(branch, table, key)
+    }
+
+    /// Run `f` over one row under the shard's read lock, without
+    /// copying.  Returns `None` when the row is absent.  Do not call
+    /// re-entrantly for a second row while inside `f` — a writer
+    /// queued between the two read acquisitions of the same shard can
+    /// deadlock; take rows one at a time (`read_row_into`) instead.
+    pub fn with_row<R>(
         &self,
         branch: BranchId,
         table: TableId,
         key: RowKey,
-    ) -> Option<bool> {
-        let sid = self.shard_of(table, key);
-        self.shards[sid].row_shared(branch, table, key)
+        f: impl FnOnce(&Entry) -> R,
+    ) -> Option<R> {
+        let sid = self.sid(table, key);
+        let st = read_shard(&self.shards[sid], &self.counters);
+        st.shard.get(branch, table, key).map(f)
     }
 
     /// Read one row (server-side authoritative copy).
-    pub fn read_row(
+    pub fn read_row(&self, branch: BranchId, table: TableId, key: RowKey) -> Option<Vec<f32>> {
+        self.with_row(branch, table, key, |e| e.data.clone())
+    }
+
+    /// Copy one row into `buf` (cleared first), avoiding a fresh
+    /// allocation on repeated reads.  Returns false when the row is
+    /// absent.
+    pub fn read_row_into(
         &self,
         branch: BranchId,
         table: TableId,
         key: RowKey,
-    ) -> Option<&[f32]> {
-        let sid = self.shard_of(table, key);
-        self.shards[sid].get(branch, table, key).map(|e| &e.data[..])
+        buf: &mut Vec<f32>,
+    ) -> bool {
+        self.with_row(branch, table, key, |e| {
+            buf.clear();
+            buf.extend_from_slice(&e.data);
+        })
+        .is_some()
     }
 
     /// AdaRevision's read: row data plus the current grad-accumulator
@@ -199,11 +445,9 @@ impl ParamServer {
         branch: BranchId,
         table: TableId,
         key: RowKey,
-    ) -> Option<(&[f32], Option<&[f32]>)> {
-        let sid = self.shard_of(table, key);
-        self.shards[sid].get(branch, table, key).map(|e| {
-            let z = e.slots.get(1).map(|s| &s[..]);
-            (&e.data[..], z)
+    ) -> Option<(Vec<f32>, Option<Vec<f32>>)> {
+        self.with_row(branch, table, key, |e| {
+            (e.data.clone(), e.slots.get(1).cloned())
         })
     }
 
@@ -211,9 +455,10 @@ impl ParamServer {
     /// the learning rate / momentum / adaptive rule (`hyper` carries the
     /// tunables).  The write goes through the copy-on-write path: a row
     /// still shared with other branches is privately materialized
-    /// first.
+    /// first.  One shard write-lock acquisition per call — prefer
+    /// [`ParamServer::apply_batch`] on the data-parallel hot path.
     pub fn apply_update(
-        &mut self,
+        &self,
         branch: BranchId,
         table: TableId,
         key: RowKey,
@@ -221,9 +466,11 @@ impl ParamServer {
         hyper: Hyper,
         z_old: Option<&[f32]>,
     ) -> Result<()> {
-        let sid = self.shard_of(table, key);
+        let sid = self.sid(table, key);
         let opt = self.optimizer;
-        match self.shards[sid].get_mut(branch, table, key, &mut self.pool) {
+        let mut st = write_shard(&self.shards[sid], &self.counters);
+        let ShardState { shard, pool } = &mut *st;
+        match shard.get_mut(branch, table, key, pool) {
             None => bail!("row ({table},{key}) missing in branch {branch}"),
             Some(entry) => {
                 opt.apply(hyper, entry, grad, z_old);
@@ -232,11 +479,68 @@ impl ParamServer {
         }
     }
 
+    /// Apply a whole batch of updates: route every key once, group the
+    /// updates per shard, and apply each shard's group under a single
+    /// write-lock acquisition.  Observationally identical to calling
+    /// [`ParamServer::apply_update`] per element in order (same-key
+    /// updates stay in call order; distinct rows are independent).  Not
+    /// atomic across shards: a missing row stops the batch with earlier
+    /// groups already applied, exactly like the equivalent update
+    /// sequence.
+    pub fn apply_batch(
+        &self,
+        branch: BranchId,
+        updates: &[(TableId, RowKey, &[f32])],
+        hyper: Hyper,
+    ) -> Result<()> {
+        let n = self.shards.len();
+        if updates.is_empty() {
+            return Ok(());
+        }
+        // Stagger the shard visit order across concurrent callers so
+        // data-parallel workers pushing whole-model batches don't
+        // convoy on shard 0.  (Also counts the call — empty batches
+        // were returned above, so the per-batch stats stay honest.)
+        let rotation = self.counters.batch_calls.fetch_add(1, Ordering::Relaxed) as usize % n;
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, &(table, key, _)) in updates.iter().enumerate() {
+            groups[route(table, key, n)].push(i);
+        }
+        let opt = self.optimizer;
+        let mut applied = 0u64;
+        let mut result = Ok(());
+        'shards: for off in 0..n {
+            let sid = (rotation + off) % n;
+            if groups[sid].is_empty() {
+                continue;
+            }
+            let mut st = write_shard(&self.shards[sid], &self.counters);
+            let ShardState { shard, pool } = &mut *st;
+            for &i in &groups[sid] {
+                let (table, key, grad) = updates[i];
+                match shard.get_mut(branch, table, key, pool) {
+                    None => {
+                        result = Err(anyhow!(
+                            "row ({table},{key}) missing in branch {branch}"
+                        ));
+                        break 'shards;
+                    }
+                    Some(entry) => {
+                        opt.apply(hyper, entry, grad, None);
+                        applied += 1;
+                    }
+                }
+            }
+        }
+        self.counters.batched_rows.fetch_add(applied, Ordering::Relaxed);
+        result
+    }
+
     /// Enumerate a branch's (table, key) pairs across all shards.
     pub fn keys(&self, branch: BranchId) -> Vec<(TableId, RowKey)> {
         let mut all = Vec::with_capacity(self.branch_row_count(branch));
-        for shard in &self.shards {
-            all.extend(shard.keys(branch));
+        for lock in &self.shards {
+            all.extend(read_shard(lock, &self.counters).shard.keys(branch));
         }
         all.sort_unstable();
         all
@@ -244,6 +548,14 @@ impl ParamServer {
 
     /// Gather a whole table of `branch` into a flat vec ordered by key
     /// (how the DNN app reassembles flattened tensors for PJRT).
+    ///
+    /// Caller contract: `branch` must stay live for the duration of
+    /// the call.  The row set is snapshotted per shard and the rows
+    /// are then re-read one lock at a time, so a concurrent
+    /// `free_branch(branch)` landing in between panics here rather
+    /// than returning silently truncated tensors.  (MLtuner's protocol
+    /// guarantees this: only the single-threaded coordinator frees
+    /// branches, never while a clock is running on one.)
     pub fn gather_table(&self, branch: BranchId, table: TableId) -> Vec<f32> {
         let mut keys: Vec<RowKey> = self
             .keys(branch)
@@ -254,13 +566,30 @@ impl ParamServer {
         keys.sort_unstable();
         let mut out = Vec::new();
         for k in keys {
-            out.extend_from_slice(self.read_row(branch, table, k).unwrap());
+            self.with_row(branch, table, k, |e| out.extend_from_slice(&e.data))
+                .expect("row vanished during gather");
         }
         out
     }
 
+    /// Aggregate pool statistics over every shard's arena.  Exactness
+    /// is preserved by aggregation: each buffer lives its whole
+    /// recycle/reuse life inside one shard's pool.
     pub fn pool_stats(&self) -> PoolStats {
-        self.pool.stats()
+        let mut total = PoolStats::default();
+        for lock in &self.shards {
+            total.accumulate(read_shard(lock, &self.counters).pool.stats());
+        }
+        total
+    }
+
+    /// Per-shard row counts of a branch (routing-balance
+    /// introspection).
+    pub fn shard_row_counts(&self, branch: BranchId) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|lock| read_shard(lock, &self.counters).shard.branch_row_count(branch))
+            .collect()
     }
 }
 
@@ -273,16 +602,23 @@ mod tests {
         ParamServer::new(4, Optimizer::new(kind))
     }
 
-    fn init_root(ps: &mut ParamServer, rows: usize, len: usize) {
+    fn init_root(ps: &ParamServer, rows: usize, len: usize) {
         for k in 0..rows {
             ps.insert_row(0, 0, k as RowKey, vec![k as f32; len]);
         }
     }
 
     #[test]
+    fn server_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ParamServer>();
+        assert_send_sync::<Optimizer>();
+    }
+
+    #[test]
     fn insert_read_roundtrip_across_shards() {
-        let mut ps = ps(OptimizerKind::Sgd);
-        init_root(&mut ps, 64, 8);
+        let ps = ps(OptimizerKind::Sgd);
+        init_root(&ps, 64, 8);
         for k in 0..64u64 {
             assert_eq!(ps.read_row(0, 0, k).unwrap()[0], k as f32);
         }
@@ -291,7 +627,7 @@ mod tests {
 
     #[test]
     fn reinsert_overwrites_without_double_count() {
-        let mut ps = ps(OptimizerKind::Sgd);
+        let ps = ps(OptimizerKind::Sgd);
         ps.insert_row(0, 0, 0, vec![1.0, 2.0]);
         ps.insert_row(0, 0, 0, vec![3.0, 4.0]);
         assert_eq!(ps.branch_row_count(0), 1);
@@ -304,8 +640,8 @@ mod tests {
     fn fork_copies_no_buffers() {
         // The COW contract: forking even a large branch allocates and
         // copies nothing — only the index is cloned.
-        let mut ps = ps(OptimizerKind::Adam);
-        init_root(&mut ps, 64, 256);
+        let ps = ps(OptimizerKind::Adam);
+        init_root(&ps, 64, 256);
         let before = ps.pool_stats();
         ps.fork_branch(1, 0).unwrap();
         let after = ps.pool_stats();
@@ -317,8 +653,8 @@ mod tests {
 
     #[test]
     fn fork_then_update_isolated() {
-        let mut ps = ps(OptimizerKind::Sgd);
-        init_root(&mut ps, 8, 4);
+        let ps = ps(OptimizerKind::Sgd);
+        init_root(&ps, 8, 4);
         ps.fork_branch(1, 0).unwrap();
         ps.apply_update(1, 0, 3, &[1.0; 4], Hyper { lr: 1.0, momentum: 0.0 }, None)
             .unwrap();
@@ -333,24 +669,21 @@ mod tests {
     fn optimizer_state_snapshots_with_branch() {
         // Momentum accumulated in the parent must carry into the fork;
         // updates after the fork must not leak back.
-        let mut ps = ps(OptimizerKind::Sgd);
-        init_root(&mut ps, 1, 1);
+        let ps = ps(OptimizerKind::Sgd);
+        init_root(&ps, 1, 1);
         let h = Hyper { lr: 0.1, momentum: 0.9 };
         ps.apply_update(0, 0, 0, &[1.0], h, None).unwrap();
         ps.fork_branch(1, 0).unwrap();
         // both take the same next step => same velocity was copied
         ps.apply_update(0, 0, 0, &[1.0], h, None).unwrap();
         ps.apply_update(1, 0, 0, &[1.0], h, None).unwrap();
-        assert_eq!(
-            ps.read_row(0, 0, 0).unwrap(),
-            ps.read_row(1, 0, 0).unwrap()
-        );
+        assert_eq!(ps.read_row(0, 0, 0).unwrap(), ps.read_row(1, 0, 0).unwrap());
     }
 
     #[test]
     fn free_unknown_branch_errors() {
-        let mut ps = ps(OptimizerKind::Sgd);
-        init_root(&mut ps, 1, 1);
+        let ps = ps(OptimizerKind::Sgd);
+        init_root(&ps, 1, 1);
         assert!(ps.free_branch(42).is_err());
         assert!(ps.fork_branch(1, 42).is_err());
         ps.fork_branch(1, 0).unwrap();
@@ -362,20 +695,20 @@ mod tests {
         // Steady-state tuning churn: fork a trial, update every row
         // (worst-case materialization), free it.  After the first
         // cycle the pool serves every materialization.
-        let mut ps = ps(OptimizerKind::Adam);
-        init_root(&mut ps, 32, 16);
+        let ps = ps(OptimizerKind::Adam);
+        init_root(&ps, 32, 16);
         let h = Hyper { lr: 0.01, momentum: 0.0 };
-        let cycle = |ps: &mut ParamServer, b: BranchId| {
+        let cycle = |ps: &ParamServer, b: BranchId| {
             ps.fork_branch(b, 0).unwrap();
             for k in 0..32u64 {
                 ps.apply_update(b, 0, k, &[0.1; 16], h, None).unwrap();
             }
             ps.free_branch(b).unwrap();
         };
-        cycle(&mut ps, 1);
+        cycle(&ps, 1);
         let allocated_before = ps.pool_stats().allocated;
         for b in 2..50u32 {
-            cycle(&mut ps, b);
+            cycle(&ps, b);
         }
         // steady state: everything comes from the pool
         assert_eq!(ps.pool_stats().allocated, allocated_before);
@@ -387,8 +720,8 @@ mod tests {
         // Free a branch whose rows are still shared: nothing enters the
         // pool.  Free the remaining owner of materialized rows: exactly
         // those buffers enter the pool.
-        let mut ps = ps(OptimizerKind::Sgd); // 1 slot => 2 buffers/row
-        init_root(&mut ps, 8, 4);
+        let ps = ps(OptimizerKind::Sgd); // 1 slot => 2 buffers/row
+        init_root(&ps, 8, 4);
         ps.fork_branch(1, 0).unwrap();
         ps.fork_branch(2, 0).unwrap();
         ps.free_branch(1).unwrap();
@@ -404,7 +737,7 @@ mod tests {
 
     #[test]
     fn gather_table_orders_by_key() {
-        let mut ps = ps(OptimizerKind::Sgd);
+        let ps = ps(OptimizerKind::Sgd);
         ps.insert_row(0, 0, 2, vec![3.0, 4.0]);
         ps.insert_row(0, 0, 0, vec![0.0]);
         ps.insert_row(0, 0, 1, vec![1.0, 2.0]);
@@ -414,10 +747,9 @@ mod tests {
 
     #[test]
     fn adarevision_roundtrip_through_server() {
-        let mut ps = ps(OptimizerKind::AdaRevision);
-        init_root(&mut ps, 1, 2);
-        let (_, z) = ps.read_row_with_accum(0, 0, 0).unwrap();
-        let z_old = z.map(|s| s.to_vec());
+        let ps = ps(OptimizerKind::AdaRevision);
+        init_root(&ps, 1, 2);
+        let (_, z_old) = ps.read_row_with_accum(0, 0, 0).unwrap();
         ps.apply_update(
             0,
             0,
@@ -428,5 +760,94 @@ mod tests {
         )
         .unwrap();
         assert!(ps.read_row(0, 0, 0).unwrap()[0] < 0.0);
+    }
+
+    #[test]
+    fn apply_batch_matches_looped_updates() {
+        let batched = ps(OptimizerKind::Sgd);
+        let looped = ps(OptimizerKind::Sgd);
+        init_root(&batched, 16, 4);
+        init_root(&looped, 16, 4);
+        let h = Hyper { lr: 0.5, momentum: 0.9 };
+        let grad = [1.0f32; 4];
+        // duplicate keys on purpose: same-key order must be preserved
+        let keys: [RowKey; 6] = [3, 7, 3, 0, 15, 3];
+        let updates: Vec<(TableId, RowKey, &[f32])> =
+            keys.iter().map(|&k| (0, k, &grad[..])).collect();
+        batched.apply_batch(0, &updates, h).unwrap();
+        for &k in &keys {
+            looped.apply_update(0, 0, k, &grad, h, None).unwrap();
+        }
+        for k in 0..16u64 {
+            assert_eq!(
+                batched.read_row(0, 0, k).unwrap(),
+                looped.read_row(0, 0, k).unwrap(),
+                "row {k} diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_batch_missing_row_errors() {
+        let ps = ps(OptimizerKind::Sgd);
+        init_root(&ps, 4, 2);
+        let grad = [1.0f32; 2];
+        let updates: Vec<(TableId, RowKey, &[f32])> =
+            vec![(0, 0, &grad[..]), (0, 99, &grad[..])];
+        let err = ps.apply_batch(0, &updates, Hyper::default()).unwrap_err();
+        assert!(err.to_string().contains("99"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn batch_counters_track_calls_and_rows() {
+        let ps = ps(OptimizerKind::Sgd);
+        init_root(&ps, 16, 4);
+        let grad = [0.1f32; 4];
+        let updates: Vec<(TableId, RowKey, &[f32])> =
+            (0..16u64).map(|k| (0, k, &grad[..])).collect();
+        ps.apply_batch(0, &updates, Hyper::default()).unwrap();
+        ps.apply_batch(0, &updates[..4], Hyper::default()).unwrap();
+        let st = ps.server_stats();
+        assert_eq!(st.batch_calls, 2);
+        assert_eq!(st.batched_rows, 20);
+        // single-threaded: no shard lock was ever contended
+        assert_eq!(st.shard_lock_contentions, 0);
+    }
+
+    #[test]
+    fn shard_routing_balances_bench_table() {
+        // The splitmix64-mixed router must spread the 2048-row bench
+        // table so no shard holds more than 2x the mean, for every
+        // small shard count (the regime where the old multiply-only
+        // router clustered).
+        for shards in [2usize, 3, 4, 5, 7, 8, 16] {
+            let ps = ParamServer::new(shards, Optimizer::new(OptimizerKind::Sgd));
+            for k in 0..2048u64 {
+                ps.insert_row(0, 0, k, vec![0.0]);
+            }
+            let counts = ps.shard_row_counts(0);
+            assert_eq!(counts.iter().sum::<usize>(), 2048);
+            let mean = 2048.0 / shards as f64;
+            let max = *counts.iter().max().unwrap();
+            assert!(
+                (max as f64) <= 2.0 * mean,
+                "{shards} shards: counts {counts:?} (mean {mean:.0})"
+            );
+        }
+    }
+
+    #[test]
+    fn routing_mixes_tables_apart() {
+        // Rows with the same key in different tables must not all land
+        // on the same shard (the MF app keys both factor tables 0..n).
+        let ps = ParamServer::new(4, Optimizer::new(OptimizerKind::Sgd));
+        for t in 0..2u32 {
+            for k in 0..512u64 {
+                ps.insert_row(0, t, k, vec![0.0]);
+            }
+        }
+        let counts = ps.shard_row_counts(0);
+        let max = *counts.iter().max().unwrap();
+        assert!((max as f64) <= 2.0 * 256.0, "counts {counts:?}");
     }
 }

@@ -16,6 +16,12 @@
 //! allocation-free after warm-up and avoids allocator churn, and its
 //! `idle` statistic is an exact census of reclaimed-but-unreused
 //! buffers — the invariant the proptest suite checks.
+//!
+//! Under the concurrent engine each server shard owns a **private pool
+//! arena** guarded by the shard's lock (see [`super`]): a buffer is
+//! materialized and reclaimed by the same shard, so no cross-shard
+//! synchronization is needed and per-arena censuses stay exact.  The
+//! server-wide view is the field-wise sum ([`PoolStats::accumulate`]).
 
 use std::collections::BTreeMap;
 
@@ -38,6 +44,18 @@ pub struct PoolStats {
     pub idle: u64,
     /// f32 slots currently parked in the free list.
     pub idle_len: u64,
+}
+
+impl PoolStats {
+    /// Field-wise accumulation, used to aggregate the per-shard arenas
+    /// into a server-wide view.  Exact because every buffer's whole
+    /// alloc/recycle/reuse life happens inside one arena.
+    pub fn accumulate(&mut self, other: PoolStats) {
+        self.reused += other.reused;
+        self.allocated += other.allocated;
+        self.idle += other.idle;
+        self.idle_len += other.idle_len;
+    }
 }
 
 impl MemoryPool {
@@ -174,6 +192,13 @@ mod tests {
             held.push(b);
         }
         assert_eq!(pool.stats().allocated, after_warmup + 1);
+    }
+
+    #[test]
+    fn stats_accumulate_fieldwise() {
+        let mut a = PoolStats { reused: 1, allocated: 2, idle: 3, idle_len: 4 };
+        a.accumulate(PoolStats { reused: 10, allocated: 20, idle: 30, idle_len: 40 });
+        assert_eq!(a, PoolStats { reused: 11, allocated: 22, idle: 33, idle_len: 44 });
     }
 
     #[test]

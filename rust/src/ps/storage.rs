@@ -43,6 +43,18 @@
 //! The eager deep-copy fork is retained as [`Shard::fork_eager`] — it
 //! is the measured baseline in the benches and a semantic cross-check
 //! in the tests, not a production path.
+//!
+//! ## Concurrency
+//!
+//! A `Shard` is deliberately lock-free *internally*: under the
+//! concurrent engine (see [`super`]) each shard lives behind its own
+//! `RwLock` together with its private [`MemoryPool`] arena, and every
+//! method here runs with that lock held.  `&self` methods run under
+//! the shared read lock (many concurrent readers), `&mut self` methods
+//! under the exclusive write lock.  The `Arc<Entry>` sharing *between*
+//! shard-local branch indexes never crosses a shard boundary — the
+//! router assigns a `(table, key)` to exactly one shard — so strong
+//! counts are only ever observed and mutated under one shard's lock.
 
 use std::collections::hash_map::Entry as MapEntry;
 use std::collections::HashMap;

@@ -9,6 +9,9 @@
 //! Like the L2, the L1 holds worker-private value copies, so the
 //! server's copy-on-write branch storage never invalidates it: SSP
 //! staleness and branch switches are the only invalidation sources.
+//! Both levels rely on single-thread ownership (`&mut` handed to one
+//! worker thread at a time) rather than internal locks — the shard
+//! locks live server-side, in [`super`].
 
 use std::collections::HashMap;
 

@@ -16,6 +16,18 @@
 //! caller (the DNN app, `mltuner info`, the benches, the integration
 //! tests) degrades gracefully exactly as it does when artifacts are
 //! missing.
+//!
+//! ## Thread model
+//!
+//! The runtime is deliberately **not** `Sync`: it owns a single PJRT
+//! CPU device and an executable cache behind `&mut self`, and the
+//! `xla` bridge types make no cross-thread promises.  The DNN app's
+//! data-parallel clock therefore runs its gradient dispatches
+//! sequentially through the one runtime (phase 2 of
+//! `apps::dnn::DnnSystem`), while the parameter-server gather and
+//! batched-update phases on either side fan out across worker
+//! threads — the phases this crate's concurrency actually targets.
+//! A multi-device runtime pool is ROADMAP material.
 
 use std::collections::HashMap;
 #[cfg(feature = "pjrt")]

@@ -12,6 +12,14 @@
 //!   PJRT-executed JAX/Pallas artifacts over the parameter server,
 //! * [`crate::apps::mf::MfSystem`] — native matrix-factorization SGD
 //!   with AdaRevision (the paper's CPU app).
+//!
+//! The MLtuner protocol itself is single-threaded — one message at a
+//! time through [`MessageDriver`] — but *inside* one `schedule_branch`
+//! clock the parameter-server-backed systems fan the work out across
+//! `num_workers` threads against the concurrent sharded
+//! [`crate::ps::ParamServer`] (data-parallel clocks, the paper's
+//! deployment shape).  [`SnapshotStats`] reports how the server
+//! absorbed that load.
 
 pub mod clock;
 
@@ -34,7 +42,10 @@ pub struct Progress {
 /// training system actually paid.  For parameter-server-backed systems
 /// `cow_buffer_copies` counts the buffers privately materialized by
 /// copy-on-write — with lazy snapshots it is proportional to the rows
-/// *written* under trial branches, not to forks × model size.
+/// *written* under trial branches, not to forks × model size.  The
+/// concurrency counters (`shard_lock_contentions`, `batch_calls`,
+/// `batched_rows`) report how the sharded engine absorbed the
+/// data-parallel update traffic of the worker threads.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SnapshotStats {
     /// Branches currently live (root included).
@@ -46,6 +57,13 @@ pub struct SnapshotStats {
     /// Buffers privately materialized by copy-on-write (0 for systems
     /// without parameter-server storage, e.g. the simulator).
     pub cow_buffer_copies: u64,
+    /// Shard-lock acquisitions that had to wait behind another thread
+    /// (0 for systems without a sharded server, e.g. the simulator).
+    pub shard_lock_contentions: u64,
+    /// Batched-update calls served by the parameter server.
+    pub batch_calls: u64,
+    /// Rows applied through the batched update path.
+    pub batched_rows: u64,
 }
 
 /// The training-system side of the Table-1 message interface.

@@ -108,8 +108,12 @@ pub struct TunerReport {
     pub clocks: u64,
     pub converged: bool,
     pub final_setting: TunableSetting,
-    /// Branch-snapshot efficiency counters from the training system
-    /// (§4.6): fork count, peak live branches, copy-on-write traffic.
+    /// Branch-snapshot efficiency and server-concurrency counters from
+    /// the training system (§4.6): fork count, peak live branches,
+    /// copy-on-write traffic, and — for sharded-server systems — how
+    /// the engine absorbed the data-parallel update load (batched rows
+    /// per batch call, shard-lock contention).  `mltuner tune` prints
+    /// them after the branching line.
     pub snapshots: SnapshotStats,
 }
 

@@ -12,7 +12,7 @@ use mltuner::ps::ParamServer;
 use mltuner::util::rng::Rng;
 
 fn server_with_model(rows: usize, row_len: usize, kind: OptimizerKind) -> ParamServer {
-    let mut ps = ParamServer::new(8, Optimizer::new(kind));
+    let ps = ParamServer::new(8, Optimizer::new(kind));
     let mut rng = Rng::seed_from_u64(0);
     for k in 0..rows {
         let row: Vec<f32> = (0..row_len).map(|_| rng.gen_normal() as f32).collect();
@@ -26,7 +26,7 @@ fn tuning_episode_branch_churn() {
     // Simulate an MLtuner episode: fork 12 trials from the root, update
     // some, free all but the winner, then fork the next generation from
     // the winner.  Pool must reach steady state; no branch leaks.
-    let mut ps = server_with_model(128, 256, OptimizerKind::Sgd);
+    let ps = server_with_model(128, 256, OptimizerKind::Sgd);
     let h = Hyper { lr: 0.01, momentum: 0.9 };
     let mut winner: BranchId = 0;
     let mut next: BranchId = 1;
@@ -62,7 +62,7 @@ fn fork_is_zero_copy_until_first_write() {
     // The COW contract end-to-end: a fork of a DNN-sized branch moves
     // no parameter bytes; only rows actually written under the child
     // get materialized, and writes never leak in either direction.
-    let mut ps = server_with_model(512, 1024, OptimizerKind::Adam);
+    let ps = server_with_model(512, 1024, OptimizerKind::Adam);
     let before = ps.pool_stats();
     ps.fork_branch(1, 0).unwrap();
     assert_eq!(ps.pool_stats(), before, "fork touched the pool");
@@ -70,13 +70,13 @@ fn fork_is_zero_copy_until_first_write() {
         assert_eq!(ps.row_shared(1, 0, k), Some(true), "row {k} not shared");
     }
     let h = Hyper { lr: 0.1, momentum: 0.9 };
-    let parent_row0: Vec<f32> = ps.read_row(0, 0, 0).unwrap().to_vec();
+    let parent_row0: Vec<f32> = ps.read_row(0, 0, 0).unwrap();
     ps.apply_update(1, 0, 0, &vec![1.0; 1024], h, None).unwrap();
     // child write isolated from parent ...
     assert_eq!(ps.read_row(0, 0, 0).unwrap(), &parent_row0[..]);
     assert_ne!(ps.read_row(1, 0, 0).unwrap(), &parent_row0[..]);
     // ... and parent write isolated from child
-    let child_row1: Vec<f32> = ps.read_row(1, 0, 1).unwrap().to_vec();
+    let child_row1: Vec<f32> = ps.read_row(1, 0, 1).unwrap();
     ps.apply_update(0, 0, 1, &vec![1.0; 1024], h, None).unwrap();
     assert_eq!(ps.read_row(1, 0, 1).unwrap(), &child_row1[..]);
     // exactly two rows materialized (data + 2 Adam slots each)
@@ -90,7 +90,7 @@ fn free_recycles_only_last_owner_rows() {
     // branch whose rows are still shared by a sibling recycles
     // nothing; freeing the final owner recycles exactly its private
     // rows.
-    let mut ps = server_with_model(16, 64, OptimizerKind::Sgd); // 2 bufs/row
+    let ps = server_with_model(16, 64, OptimizerKind::Sgd); // 2 bufs/row
     let h = Hyper { lr: 0.1, momentum: 0.0 };
     ps.fork_branch(1, 0).unwrap();
     ps.fork_branch(2, 1).unwrap();
@@ -110,7 +110,7 @@ fn free_recycles_only_last_owner_rows() {
 
 #[test]
 fn fork_of_missing_parent_errors_cleanly() {
-    let mut ps = server_with_model(4, 8, OptimizerKind::Sgd);
+    let ps = server_with_model(4, 8, OptimizerKind::Sgd);
     let err = ps.fork_branch(3, 99).unwrap_err().to_string();
     assert!(err.contains("99"), "unhelpful error: {err}");
     // the failed fork must leave no partial branch behind
@@ -125,7 +125,7 @@ fn momentum_state_follows_branch_lineage() {
     // Momentum accumulated before a fork must influence the child the
     // same way it influences the parent (consistent snapshot of ALL
     // training state, §4.6).
-    let mut ps = server_with_model(4, 8, OptimizerKind::Sgd);
+    let ps = server_with_model(4, 8, OptimizerKind::Sgd);
     let h = Hyper { lr: 0.1, momentum: 0.9 };
     for _ in 0..5 {
         for k in 0..4u64 {
@@ -148,7 +148,7 @@ fn momentum_state_follows_branch_lineage() {
 #[test]
 fn adam_and_adarevision_state_snapshot() {
     for kind in [OptimizerKind::Adam, OptimizerKind::AdaRevision] {
-        let mut ps = server_with_model(2, 4, kind);
+        let ps = server_with_model(2, 4, kind);
         let h = Hyper { lr: 0.01, momentum: 0.0 };
         for _ in 0..3 {
             ps.apply_update(0, 0, 0, &[0.5; 4], h, None).unwrap();
@@ -168,7 +168,7 @@ fn adam_and_adarevision_state_snapshot() {
 fn worker_cache_over_branch_switches() {
     // Shared cache across branch switches: hits within a branch, full
     // invalidation on switch, SSP staleness honored within a branch.
-    let mut ps = server_with_model(16, 32, OptimizerKind::Sgd);
+    let ps = server_with_model(16, 32, OptimizerKind::Sgd);
     ps.fork_branch(1, 0).unwrap();
     ps.fork_branch(2, 0).unwrap();
     let mut cache = WorkerCache::new();
@@ -177,7 +177,7 @@ fn worker_cache_over_branch_switches() {
         for k in 0..16u64 {
             let now = clock as u64;
             if cache.get(0, k, now, 1).is_none() {
-                let row = ps.read_row(branch, 0, k).unwrap().to_vec();
+                let row = ps.read_row(branch, 0, k).unwrap();
                 cache.put(0, k, row, now);
             }
         }
@@ -192,7 +192,7 @@ fn worker_cache_over_branch_switches() {
 fn deep_branch_lineage() {
     // Chain of forks (what repeated re-tuning produces): state flows
     // down the lineage, intermediate branches can be freed safely.
-    let mut ps = server_with_model(8, 16, OptimizerKind::Sgd);
+    let ps = server_with_model(8, 16, OptimizerKind::Sgd);
     let h = Hyper { lr: 1.0, momentum: 0.0 };
     let mut parent = 0u32;
     for g in 1..=10u32 {

@@ -202,7 +202,7 @@ fn prop_ps_fork_free_preserves_row_counts_and_pool() {
     // exactly the root's row count and freeing everything returns the
     // pool to steady state.
     prop(60, |rng| {
-        let mut ps = ParamServer::new(
+        let ps = ParamServer::new(
             rng.gen_range(1, 8),
             Optimizer::new(OptimizerKind::Sgd),
         );
@@ -243,7 +243,7 @@ fn prop_cow_branches_match_deep_copy_reference() {
         use std::collections::HashMap;
         const LEN: usize = 8;
         let lr = 0.5f32;
-        let mut ps = ParamServer::new(
+        let ps = ParamServer::new(
             rng.gen_range(1, 6),
             Optimizer::new(OptimizerKind::Sgd),
         );
@@ -322,7 +322,7 @@ fn prop_pool_reclaims_every_materialized_buffer() {
     // materialization must be parked back in its free list
     // (idle == allocated), regardless of the fork/write/free order.
     prop(40, |rng| {
-        let mut ps = ParamServer::new(
+        let ps = ParamServer::new(
             rng.gen_range(1, 6),
             Optimizer::new(OptimizerKind::Sgd),
         );
@@ -381,7 +381,7 @@ fn prop_pool_reclaims_every_materialized_buffer() {
 #[test]
 fn prop_ps_update_only_touches_target_row_and_branch() {
     prop(60, |rng| {
-        let mut ps = ParamServer::new(4, Optimizer::new(OptimizerKind::Sgd));
+        let ps = ParamServer::new(4, Optimizer::new(OptimizerKind::Sgd));
         let rows = rng.gen_range(2, 16) as u64;
         for k in 0..rows {
             ps.insert_row(0, 0, k, vec![1.0; 4]);
@@ -405,6 +405,71 @@ fn prop_ps_update_only_touches_target_row_and_branch() {
                 assert_eq!(ps.read_row(1, 0, k).unwrap(), &[0.5; 4]);
             }
         }
+    });
+}
+
+#[test]
+fn prop_apply_batch_equals_update_sequence() {
+    // The batched update path must be observationally identical to the
+    // equivalent sequence of row-at-a-time updates, for every shard
+    // count, optimizer (slot state included via subsequent reads), and
+    // batch — duplicate keys allowed (same-key order is preserved by
+    // per-shard grouping), COW materialization included (the batch is
+    // applied to a forked branch), and the pool traffic must match.
+    prop(60, |rng| {
+        let shards = rng.gen_range(1, 8);
+        let kind = [
+            OptimizerKind::Sgd,
+            OptimizerKind::Adam,
+            OptimizerKind::AdaGrad,
+        ][rng.gen_range(0, 3)];
+        let rows = rng.gen_range(1, 12) as u64;
+        let len = rng.gen_range(1, 8);
+        let init: Vec<Vec<f32>> = (0..rows)
+            .map(|_| (0..len).map(|_| rng.gen_normal() as f32).collect())
+            .collect();
+        let batched = ParamServer::new(shards, Optimizer::new(kind));
+        let looped = ParamServer::new(shards, Optimizer::new(kind));
+        for (k, row) in init.iter().enumerate() {
+            batched.insert_row(0, 0, k as u64, row.clone());
+            looped.insert_row(0, 0, k as u64, row.clone());
+        }
+        batched.fork_branch(1, 0).unwrap();
+        looped.fork_branch(1, 0).unwrap();
+        let h = Hyper { lr: 0.3, momentum: 0.5 };
+        let n_up = rng.gen_range(1, 30);
+        let grads: Vec<(u64, Vec<f32>)> = (0..n_up)
+            .map(|_| {
+                (
+                    rng.gen_range(0, rows as usize) as u64,
+                    (0..len).map(|_| rng.gen_normal() as f32).collect(),
+                )
+            })
+            .collect();
+        let updates: Vec<(u32, u64, &[f32])> =
+            grads.iter().map(|(k, g)| (0u32, *k, &g[..])).collect();
+        batched.apply_batch(1, &updates, h).unwrap();
+        for (k, g) in &grads {
+            looped.apply_update(1, 0, *k, g, h, None).unwrap();
+        }
+        for k in 0..rows {
+            assert_eq!(
+                batched.read_row(1, 0, k).unwrap(),
+                looped.read_row(1, 0, k).unwrap(),
+                "branch row {k} diverged ({kind:?}, {shards} shards)"
+            );
+            assert_eq!(
+                batched.read_row(0, 0, k).unwrap(),
+                looped.read_row(0, 0, k).unwrap(),
+                "root row {k} diverged"
+            );
+        }
+        // identical COW materialization traffic
+        assert_eq!(
+            batched.pool_stats().allocated,
+            looped.pool_stats().allocated
+        );
+        assert_eq!(batched.server_stats().batched_rows, n_up as u64);
     });
 }
 

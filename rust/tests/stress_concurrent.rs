@@ -1,0 +1,254 @@
+//! Multi-threaded stress tests of the concurrent sharded parameter
+//! server: N writer threads churning fork/write/free while the COW
+//! invariants (write isolation across forks, last-owner pool
+//! reclamation, exact `idle` census) must keep holding, checked
+//! against single-threaded reference expectations.
+//!
+//! Every branch here is forked from the immutable root and written by
+//! exactly one thread (MLtuner's actual access shape: trial branches
+//! are private, data-parallel workers split rows disjointly), so the
+//! expected row values are exact even under arbitrary thread
+//! interleavings.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Barrier;
+
+use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
+use mltuner::ps::storage::{RowKey, TableId};
+use mltuner::ps::{ParamServer, PARALLEL_BRANCH_OP_MIN_ROWS};
+
+const ROWS: usize = 64;
+const LEN: usize = 16;
+
+/// Root rows: row k holds `k as f32` in every slot.
+fn server(shards: usize) -> ParamServer {
+    let ps = ParamServer::new(shards, Optimizer::new(OptimizerKind::Sgd));
+    for k in 0..ROWS {
+        ps.insert_row(0, 0, k as RowKey, vec![k as f32; LEN]);
+    }
+    ps
+}
+
+#[test]
+fn concurrent_fork_write_free_churn_keeps_cow_invariants() {
+    // 8 threads x 25 fork/write/free cycles each, mixing the batched
+    // and row-at-a-time update paths.  Each thread checks its own
+    // branch against the single-threaded reference model (root value
+    // minus lr per recorded write), then the final state must show a
+    // pristine root and an exact pool census.
+    let threads = 8usize;
+    let iters = 25usize;
+    let ps = server(8);
+    let h = Hyper { lr: 0.5, momentum: 0.0 };
+    let barrier = Barrier::new(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let ps = &ps;
+            let barrier = &barrier;
+            s.spawn(move || {
+                barrier.wait();
+                for i in 0..iters {
+                    let b = (1 + t * iters + i) as u32;
+                    ps.fork_branch(b, 0).unwrap();
+                    // deterministic per-branch write set (duplicates
+                    // allowed: a row may be hit more than once)
+                    let wrote: Vec<RowKey> = (0..(1 + (t + i) % 5))
+                        .map(|j| ((t * 13 + i * 7 + j * 3) % ROWS) as RowKey)
+                        .collect();
+                    let grad = vec![1.0f32; LEN];
+                    if i % 2 == 0 {
+                        let updates: Vec<(TableId, RowKey, &[f32])> =
+                            wrote.iter().map(|&k| (0, k, &grad[..])).collect();
+                        ps.apply_batch(b, &updates, h).unwrap();
+                    } else {
+                        for &k in &wrote {
+                            ps.apply_update(b, 0, k, &grad, h, None).unwrap();
+                        }
+                    }
+                    // single-threaded reference: branch forked from the
+                    // immutable root, written only by this thread =>
+                    // row k = k - 0.5 * (times written)
+                    let mut expect: HashMap<RowKey, f32> = HashMap::new();
+                    for &k in &wrote {
+                        *expect.entry(k).or_insert(k as f32) -= 0.5;
+                    }
+                    for (&k, &v) in &expect {
+                        let row = ps.read_row(b, 0, k).unwrap();
+                        assert!(
+                            row.iter().all(|&x| x == v),
+                            "branch {b} row {k}: {row:?} != {v}"
+                        );
+                        assert_eq!(ps.row_shared(b, 0, k), Some(false));
+                    }
+                    // an untouched row must still share the root buffer
+                    let untouched =
+                        (0..ROWS as RowKey).find(|k| !expect.contains_key(k)).unwrap();
+                    assert_eq!(ps.row_shared(b, 0, untouched), Some(true));
+                    assert_eq!(ps.branch_row_count(b), ROWS);
+                    ps.free_branch(b).unwrap();
+                }
+            });
+        }
+    });
+    // all trial branches freed: root alone, untouched
+    assert_eq!(ps.live_branches(), vec![0]);
+    assert_eq!(ps.branch_row_count(0), ROWS);
+    for k in 0..ROWS as RowKey {
+        let row = ps.read_row(0, 0, k).unwrap();
+        assert!(row.iter().all(|&x| x == k as f32), "root row {k} corrupted");
+    }
+    // exact idle census: every buffer ever materialized for a branch
+    // was reclaimed by its last-owner free (conservation law)
+    let pool = ps.pool_stats();
+    assert_eq!(pool.idle, pool.allocated, "pool census drifted: {pool:?}");
+    assert!(pool.allocated > 0, "stress never materialized anything?");
+}
+
+#[test]
+fn data_parallel_batched_updates_match_sequential() {
+    // N threads each batch-update a disjoint key slice of ONE branch —
+    // the paper's data-parallel clock shape.  Every row has exactly
+    // one writer, so the result must equal the sequential run bit for
+    // bit (momentum slots included), and so must the COW traffic.
+    let threads = 4usize;
+    let par = server(8);
+    let seq = server(8);
+    par.fork_branch(1, 0).unwrap();
+    seq.fork_branch(1, 0).unwrap();
+    let h = Hyper { lr: 0.1, momentum: 0.9 };
+    let grad = vec![0.25f32; LEN];
+    let passes = 10usize;
+    std::thread::scope(|s| {
+        for w in 0..threads {
+            let par = &par;
+            let grad = &grad;
+            s.spawn(move || {
+                for _ in 0..passes {
+                    let updates: Vec<(TableId, RowKey, &[f32])> = (0..ROWS)
+                        .filter(|k| k % threads == w)
+                        .map(|k| (0, k as RowKey, &grad[..]))
+                        .collect();
+                    par.apply_batch(1, &updates, h).unwrap();
+                }
+            });
+        }
+    });
+    for _ in 0..passes {
+        for k in 0..ROWS as RowKey {
+            seq.apply_update(1, 0, k, &grad, h, None).unwrap();
+        }
+    }
+    for k in 0..ROWS as RowKey {
+        assert_eq!(
+            par.read_row(1, 0, k).unwrap(),
+            seq.read_row(1, 0, k).unwrap(),
+            "row {k} diverged from the sequential reference"
+        );
+    }
+    assert_eq!(
+        par.pool_stats().allocated,
+        seq.pool_stats().allocated,
+        "COW materialization traffic diverged"
+    );
+    let stats = par.server_stats();
+    assert_eq!(stats.batched_rows, (ROWS * passes) as u64);
+    assert_eq!(stats.batch_calls, (threads * passes) as u64);
+}
+
+#[test]
+fn concurrent_readers_never_observe_other_branches_traffic() {
+    // A writer hammers branch 1 with whole-table batches while reader
+    // threads continuously verify the root is bit-identical to its
+    // initial state: COW write isolation under real concurrency.
+    let ps = server(4);
+    ps.fork_branch(1, 0).unwrap();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let writer = s.spawn(|| {
+            let h = Hyper { lr: 0.01, momentum: 0.0 };
+            let grad = vec![0.5f32; LEN];
+            for _ in 0..200 {
+                let updates: Vec<(TableId, RowKey, &[f32])> = (0..ROWS)
+                    .map(|k| (0, k as RowKey, &grad[..]))
+                    .collect();
+                ps.apply_batch(1, &updates, h).unwrap();
+            }
+            stop.store(true, Ordering::Release);
+        });
+        for _ in 0..3 {
+            s.spawn(|| {
+                let mut buf = Vec::new();
+                while !stop.load(Ordering::Acquire) {
+                    for k in 0..ROWS as RowKey {
+                        assert!(ps.read_row_into(0, 0, k, &mut buf));
+                        assert!(
+                            buf.iter().all(|&x| x == k as f32),
+                            "root row {k} observed mid-mutation: {buf:?}"
+                        );
+                    }
+                }
+            });
+        }
+        writer.join().unwrap();
+    });
+    // the writer materialized every row exactly once
+    assert_eq!(ps.pool_stats().allocated, (ROWS * 2) as u64); // data + velocity
+}
+
+#[test]
+fn concurrent_branch_ops_and_updates_interleave_safely() {
+    // One thread churns fork/free of its own lineage while another
+    // updates a long-lived branch: branch ops serialize on the control
+    // plane but must not corrupt concurrent updates.
+    let ps = server(8);
+    ps.fork_branch(1, 0).unwrap();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for g in 0..100u32 {
+                let b = 100 + g;
+                ps.fork_branch(b, 0).unwrap();
+                assert_eq!(ps.branch_row_count(b), ROWS);
+                ps.free_branch(b).unwrap();
+            }
+        });
+        s.spawn(|| {
+            let h = Hyper { lr: 1.0, momentum: 0.0 };
+            let grad = vec![1.0f32; LEN];
+            for _ in 0..100 {
+                ps.apply_update(1, 0, 0, &grad, h, None).unwrap();
+            }
+        });
+    });
+    // branch 1, row 0: 100 updates of -lr*1.0 over root value 0.0
+    let row = ps.read_row(1, 0, 0).unwrap();
+    assert!(row.iter().all(|&x| x == -100.0), "{row:?}");
+    assert_eq!(ps.live_branches(), vec![0, 1]);
+    let pool = ps.pool_stats();
+    // branch 1 materialized 1 row; nothing else may linger
+    assert_eq!(pool.idle, pool.allocated - 2, "{pool:?}");
+}
+
+#[test]
+fn parallel_branch_fanout_preserves_invariants() {
+    // Cross the parallel fan-out threshold so fork/free run one thread
+    // per shard: the COW contract (no pool traffic on fork, exact
+    // reclamation on free) must be indistinguishable from the
+    // sequential path.
+    let rows = PARALLEL_BRANCH_OP_MIN_ROWS + 1000;
+    let ps = ParamServer::new(8, Optimizer::new(OptimizerKind::Sgd));
+    for k in 0..rows {
+        ps.insert_row(0, 0, k as RowKey, vec![1.0; 4]);
+    }
+    let before = ps.pool_stats();
+    ps.fork_branch(1, 0).unwrap();
+    assert_eq!(ps.pool_stats(), before, "parallel fork touched a pool");
+    assert_eq!(ps.branch_row_count(1), rows);
+    let h = Hyper { lr: 1.0, momentum: 0.0 };
+    ps.apply_update(1, 0, 7, &[1.0; 4], h, None).unwrap();
+    ps.free_branch(1).unwrap();
+    // exactly the one materialized row (data + velocity) came back
+    assert_eq!(ps.pool_stats().idle, 2);
+    assert_eq!(ps.live_branches(), vec![0]);
+    assert_eq!(ps.branch_row_count(0), rows);
+}

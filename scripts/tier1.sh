@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 verification (see ROADMAP.md): build + tests on the default
-# feature set, plus clippy when the component is installed.
+# feature set, plus fmt/clippy when the components are installed.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -8,10 +8,29 @@ cd "$(dirname "$0")/../rust"
 cargo build --release
 cargo test -q
 
+# Concurrency stress suite again at release opt-level, with the libtest
+# runner forced to run the stress tests in parallel with each other —
+# more cross-test thread pressure than the default scheduling gives.
+cargo test --release --test stress_concurrent -- --test-threads=8
+
+if cargo fmt --version >/dev/null 2>&1; then
+    # Advisory until the one-shot `cargo fmt` sweep lands (ROADMAP):
+    # the pre-rustfmt tree is not fully clean, and reformatting it is
+    # its own mechanical PR, not a rider on feature work.
+    cargo fmt --check \
+        || echo "tier1: WARNING — tree is not rustfmt-clean (advisory)"
+else
+    echo "tier1: rustfmt not installed, skipping format check"
+fi
+
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy -- -D warnings
 else
     echo "tier1: cargo-clippy not installed, skipping lint step"
 fi
+
+# Benches must keep compiling at release opt-level (they are the perf
+# acceptance artifacts for the sharded-server work).
+cargo build --release --benches
 
 echo "tier1: OK"
