@@ -31,10 +31,7 @@ fn fixed_run(kind: OptimizerKind, lr: f64, seed: u64) -> f64 {
     cfg.convergence = ConvergenceCriterion::AccuracyPlateau { epochs: 10 };
     cfg.max_epochs = 250;
     cfg.seed = seed;
-    MLtuner::new(sys, cfg)
-        .run()
-        .map(|r| r.final_accuracy)
-        .unwrap_or(0.0)
+    MLtuner::new(sys, cfg).run().map(|r| r.final_accuracy).unwrap_or(0.0)
 }
 
 /// Let MLtuner pick the initial LR for the algorithm.

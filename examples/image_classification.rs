@@ -63,7 +63,10 @@ fn main() -> anyhow::Result<()> {
     let mut tuner = MLtuner::new(system, cfg);
     let report = tuner.run()?;
 
-    println!("\n=== end-to-end run (wall {:.1}s) ===", t0.elapsed().as_secs_f64());
+    println!(
+        "\n=== end-to-end run (wall {:.1}s) ===",
+        t0.elapsed().as_secs_f64()
+    );
     println!("epochs:          {}", report.epochs);
     println!("converged:       {}", report.converged);
     println!("final accuracy:  {:.2}%", report.final_accuracy * 100.0);

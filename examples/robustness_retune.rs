@@ -14,7 +14,10 @@ use mltuner::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let profile = SimProfile::alexnet_cifar10();
-    println!("profile: {} (accuracy ceiling {:.2})\n", profile.name, profile.acc_max);
+    println!(
+        "profile: {} (accuracy ceiling {:.2})\n",
+        profile.name, profile.acc_max
+    );
 
     // tuned baseline
     let sys = SimSystem::new(profile.clone(), 8, 99);

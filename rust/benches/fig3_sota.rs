@@ -8,7 +8,13 @@ use mltuner::util::bench::{table_header, table_row};
 
 fn run(profile: SimProfile, budget: f64, target_acc: f64) {
     let title = format!("Fig 3 — {} (budget {:.0}s)", profile.name, budget);
-    table_header(&title, &["arm", "best_acc", "time_to_target", "total_time", "configs"]);
+    table_header(&title, &[
+        "arm",
+        "best_acc",
+        "time_to_target",
+        "total_time",
+        "configs",
+    ]);
     let arms = fig3(profile, budget, 1).unwrap();
     for a in &arms {
         let t_target = a

@@ -17,7 +17,8 @@ fn main() {
     for (lr, p) in &r.grid {
         table_row(&[
             format!("{lr:.1e}"),
-            p.map(|v| v.to_string()).unwrap_or_else(|| ">cap/diverged".into()),
+            p.map(|v| v.to_string())
+                .unwrap_or_else(|| ">cap/diverged".into()),
         ]);
         if let Some(v) = p {
             best = best.min(*v);

@@ -21,8 +21,14 @@ fn main() {
         format!("{:.3}", r.distinct_cov),
         "—".into(),
     ]);
-    println!("# same-seed times: {:?}", r.same_seed_times.iter().map(|t| *t as u64).collect::<Vec<_>>());
-    println!("# distinct-seed times: {:?}", r.distinct_seed_times.iter().map(|t| *t as u64).collect::<Vec<_>>());
+    println!(
+        "# same-seed times: {:?}",
+        r.same_seed_times.iter().map(|t| *t as u64).collect::<Vec<_>>()
+    );
+    println!(
+        "# distinct-seed times: {:?}",
+        r.distinct_seed_times.iter().map(|t| *t as u64).collect::<Vec<_>>()
+    );
     println!("\npaper: CoV 0.16 / 0.18 for times, 0.01 for accuracies");
     println!("\n[bench wall time {:.1}s]", t0.elapsed().as_secs_f64());
 }

@@ -8,9 +8,9 @@ use std::time::Instant;
 
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
 use mltuner::ps::cache::WorkerCache;
+use mltuner::ps::ParamServer;
 use mltuner::ps::pool::MemoryPool;
 use mltuner::ps::storage::{Entry, RowKey, Shard, TableId};
-use mltuner::ps::ParamServer;
 use mltuner::runtime::Runtime;
 use mltuner::searcher::{Proposal, SearcherKind};
 use mltuner::summarizer::{ProgressPoint, ProgressSummarizer};
@@ -257,7 +257,8 @@ fn main() {
             let x = vec![0.1f32; bs * mm.input_dim];
             let y = vec![0i32; bs];
             // warm the executable cache
-            rt.run_grad("alexnet_proxy", bs, "xla", &params, &x, &y).unwrap();
+            rt.run_grad("alexnet_proxy", bs, "xla", &params, &x, &y)
+                .unwrap();
             bench(
                 &format!("pjrt grad step (alexnet_proxy bs={bs}, xla)"),
                 500.0,
@@ -279,7 +280,8 @@ fn main() {
                 .collect();
             let x = vec![0.1f32; bs * mm.input_dim];
             let y = vec![0i32; bs];
-            rt.run_grad("alexnet_proxy", bs, "pallas", &params, &x, &y).unwrap();
+            rt.run_grad("alexnet_proxy", bs, "pallas", &params, &x, &y)
+                .unwrap();
             bench(
                 &format!("pjrt grad step (alexnet_proxy bs={bs}, pallas)"),
                 500.0,
@@ -318,7 +320,8 @@ fn main() {
             )
             .unwrap();
             let setting = TunableSetting::new(vec![0.01, 0.9, bs, 0.0]);
-            sys.fork_branch(0, 1, None, &setting, BranchType::Training).unwrap();
+            sys.fork_branch(0, 1, None, &setting, BranchType::Training)
+                .unwrap();
             sys.schedule_branch(0, 1).unwrap(); // warm executable cache
             let mut c = 1u64;
             bench(

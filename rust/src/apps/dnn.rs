@@ -36,8 +36,8 @@ use crate::comm::{BranchId, BranchType, Clock};
 use crate::data::{BatchCursor, ImageDataset};
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
 use crate::ps::cache::WorkerCache;
-use crate::ps::storage::{RowKey, TableId};
 use crate::ps::ParamServer;
+use crate::ps::storage::{RowKey, TableId};
 use crate::runtime::Runtime;
 use crate::training::{Progress, SnapshotStats, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
@@ -399,9 +399,7 @@ impl DnnSystem {
                 self.val.fill_example(i, &mut x[j * dim..(j + 1) * dim]);
                 y[j] = self.val.y[i];
             }
-            let (c, _l) = self
-                .runtime
-                .run_eval(&model, &variant, &params, &x, &y)?;
+            let (c, _l) = self.runtime.run_eval(&model, &variant, &params, &x, &y)?;
             correct += c as f64;
             total += eb;
         }
@@ -471,11 +469,7 @@ impl TrainingSystem for DnnSystem {
         ((self.train.len() as u64) + per_clock - 1) / per_clock
     }
 
-    fn update_tunable(
-        &mut self,
-        branch_id: BranchId,
-        tunable: &TunableSetting,
-    ) -> Result<()> {
+    fn update_tunable(&mut self, branch_id: BranchId, tunable: &TunableSetting) -> Result<()> {
         match self.branches.get_mut(&branch_id) {
             None => bail!("branch {branch_id} missing"),
             Some(b) => {

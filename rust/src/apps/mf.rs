@@ -29,10 +29,10 @@ use crate::util::rng::Rng;
 use crate::comm::{BranchId, BranchType, Clock};
 use crate::data::RatingsDataset;
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
-use crate::ps::storage::{RowKey, TableId};
 use crate::ps::ParamServer;
+use crate::ps::storage::{RowKey, TableId};
 use crate::training::{Progress, SnapshotStats, TrainingSystem};
-use crate::tunable::{TunableSetting, TunableSpec, TunableSpace};
+use crate::tunable::{TunableSetting, TunableSpace, TunableSpec};
 
 const T_USER: TableId = 0;
 const T_ITEM: TableId = 1;
@@ -123,22 +123,15 @@ impl MfSystem {
             min: 1e-5,
             max: 10.0,
         }]);
-        let ps = ParamServer::new(
-            cfg.num_workers.max(1),
-            Optimizer::new(cfg.optimizer),
-        );
+        let ps = ParamServer::new(cfg.num_workers.max(1), Optimizer::new(cfg.optimizer));
         let mut rng = Rng::seed_from_u64(cfg.seed.wrapping_add(7));
         let scale = (1.0 / cfg.rank as f64).sqrt();
         for u in 0..cfg.users {
-            let row: Vec<f32> = (0..cfg.rank)
-                .map(|_| (rng.gen_normal() * scale) as f32)
-                .collect();
+            let row: Vec<f32> = (0..cfg.rank).map(|_| (rng.gen_normal() * scale) as f32).collect();
             ps.insert_row(0, T_USER, u as RowKey, row);
         }
         for i in 0..cfg.items {
-            let row: Vec<f32> = (0..cfg.rank)
-                .map(|_| (rng.gen_normal() * scale) as f32)
-                .collect();
+            let row: Vec<f32> = (0..cfg.rank).map(|_| (rng.gen_normal() * scale) as f32).collect();
             ps.insert_row(0, T_ITEM, i as RowKey, row);
         }
         let mut branches = HashMap::new();
@@ -398,11 +391,7 @@ impl TrainingSystem for MfSystem {
         1 // one clock IS one whole data pass (Table 2)
     }
 
-    fn update_tunable(
-        &mut self,
-        branch_id: BranchId,
-        tunable: &TunableSetting,
-    ) -> Result<()> {
+    fn update_tunable(&mut self, branch_id: BranchId, tunable: &TunableSetting) -> Result<()> {
         match self.branches.get_mut(&branch_id) {
             None => bail!("branch {branch_id} missing"),
             Some(b) => {

@@ -420,11 +420,7 @@ impl TrainingSystem for SimSystem {
         Ok(())
     }
 
-    fn schedule_branch(
-        &mut self,
-        _clock: Clock,
-        branch_id: BranchId,
-    ) -> Result<Progress> {
+    fn schedule_branch(&mut self, _clock: Clock, branch_id: BranchId) -> Result<Progress> {
         let p = self.profile.clone();
         let num_workers = self.num_workers as f64;
         let u;
@@ -532,11 +528,7 @@ impl TrainingSystem for SimSystem {
         (self.profile.examples + per_clock - 1) / per_clock
     }
 
-    fn update_tunable(
-        &mut self,
-        branch_id: BranchId,
-        tunable: &TunableSetting,
-    ) -> Result<()> {
+    fn update_tunable(&mut self, branch_id: BranchId, tunable: &TunableSetting) -> Result<()> {
         match self.branches.get_mut(&branch_id) {
             None => bail!("branch {branch_id} missing"),
             Some(b) => {
@@ -610,7 +602,10 @@ mod tests {
         let init = sys.profile.init_loss;
         let drop_tiny = init - sys.branch_loss(1).unwrap();
         let drop_good = init - sys.branch_loss(2).unwrap();
-        assert!(drop_good > 20.0 * drop_tiny.max(1e-12), "{drop_good} vs {drop_tiny}");
+        assert!(
+            drop_good > 20.0 * drop_tiny.max(1e-12),
+            "{drop_good} vs {drop_tiny}"
+        );
     }
 
     #[test]

@@ -165,9 +165,7 @@ impl<S: TrainingSystem> HyperbandDriver<S> {
                     }
                 }
                 // stop the lower-accuracy half
-                let mut live: Vec<usize> = (0..arms.len())
-                    .filter(|&i| !arms[i].dead)
-                    .collect();
+                let mut live: Vec<usize> = (0..arms.len()).filter(|&i| !arms[i].dead).collect();
                 if live.len() <= 1 {
                     for &i in &live {
                         self.driver.send(&TunerMsg::FreeBranch {

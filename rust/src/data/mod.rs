@@ -25,15 +25,9 @@ pub struct ImageDataset {
 impl ImageDataset {
     /// `spread` controls difficulty: noise σ relative to unit-norm
     /// cluster centers (≈1.0 is hard, ≈0.3 is easy).
-    pub fn gaussian_clusters(
-        n: usize,
-        dim: usize,
-        classes: usize,
-        spread: f64,
-        seed: u64,
-    ) -> Self {
+    pub fn gaussian_clusters(n: usize, dim: usize, classes: usize, spread: f64, seed: u64) -> Self {
         let mut rng = Rng::seed_from_u64(seed);
-                // unit-norm class centers
+        // unit-norm class centers
         let mut centers = vec![0f32; classes * dim];
         for c in 0..classes {
             let mut norm = 0.0f64;

@@ -41,5 +41,5 @@ pub mod util;
 pub use comm::{BranchId, BranchType, Clock, SystemMsg, TunerMsg};
 pub use summarizer::{BranchLabel, ProgressSummarizer, Summary};
 pub use training::{Progress, SnapshotStats, TrainingSystem};
-pub use tunable::{TunableSetting, TunableSpec, TunableSpace};
+pub use tunable::{TunableSetting, TunableSpace, TunableSpec};
 pub use tuner::{MLtuner, TunerConfig, TunerReport};

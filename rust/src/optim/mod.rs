@@ -34,10 +34,7 @@ pub struct Hyper {
 
 impl Default for Hyper {
     fn default() -> Self {
-        Hyper {
-            lr: 0.01,
-            momentum: 0.0,
-        }
+        Hyper { lr: 0.01, momentum: 0.0 }
     }
 }
 
@@ -145,13 +142,7 @@ impl Optimizer {
     /// Apply one update to `entry.data` in place.  `grad` is the
     /// batch-normalized gradient; `z_old` is AdaRevision's snapshot of
     /// the grad-accumulator at read time (ignored by other rules).
-    pub fn apply(
-        &self,
-        hyper: Hyper,
-        entry: &mut Entry,
-        grad: &[f32],
-        z_old: Option<&[f32]>,
-    ) {
+    pub fn apply(&self, hyper: Hyper, entry: &mut Entry, grad: &[f32], z_old: Option<&[f32]>) {
         debug_assert_eq!(entry.data.len(), grad.len());
         self.init_slots(entry);
         entry.step += 1;

@@ -101,7 +101,10 @@ impl WorkerCache {
 
     /// Install a freshly-fetched row.
     pub fn put(&mut self, table: TableId, key: RowKey, data: Vec<f32>, now: Clock) {
-        self.rows.insert((table, key), CachedRow { data, fetched_at: now });
+        self.rows.insert((table, key), CachedRow {
+            data,
+            fetched_at: now,
+        });
     }
 
     pub fn len(&self) -> usize {

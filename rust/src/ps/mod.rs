@@ -73,9 +73,9 @@
 //! own shard.
 
 pub mod cache;
-pub mod thread_cache;
 pub mod pool;
 pub mod storage;
+pub mod thread_cache;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -348,21 +348,13 @@ impl ParamServer {
     }
 
     pub fn live_branches(&self) -> Vec<BranchId> {
-        let mut v: Vec<_> = lock_control(&self.control)
-            .branch_rows
-            .keys()
-            .copied()
-            .collect();
+        let mut v: Vec<_> = lock_control(&self.control).branch_rows.keys().copied().collect();
         v.sort_unstable();
         v
     }
 
     pub fn branch_row_count(&self, branch: BranchId) -> usize {
-        lock_control(&self.control)
-            .branch_rows
-            .get(&branch)
-            .copied()
-            .unwrap_or(0)
+        lock_control(&self.control).branch_rows.get(&branch).copied().unwrap_or(0)
     }
 
     /// Branch forks served since construction.
@@ -520,9 +512,7 @@ impl ParamServer {
                 let (table, key, grad) = updates[i];
                 match shard.get_mut(branch, table, key, pool) {
                     None => {
-                        result = Err(anyhow!(
-                            "row ({table},{key}) missing in branch {branch}"
-                        ));
+                        result = Err(anyhow!("row ({table},{key}) missing in branch {branch}"));
                         break 'shards;
                     }
                     Some(entry) => {

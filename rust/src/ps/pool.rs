@@ -196,9 +196,24 @@ mod tests {
 
     #[test]
     fn stats_accumulate_fieldwise() {
-        let mut a = PoolStats { reused: 1, allocated: 2, idle: 3, idle_len: 4 };
-        a.accumulate(PoolStats { reused: 10, allocated: 20, idle: 30, idle_len: 40 });
-        assert_eq!(a, PoolStats { reused: 11, allocated: 22, idle: 33, idle_len: 44 });
+        let mut a = PoolStats {
+            reused: 1,
+            allocated: 2,
+            idle: 3,
+            idle_len: 4,
+        };
+        a.accumulate(PoolStats {
+            reused: 10,
+            allocated: 20,
+            idle: 30,
+            idle_len: 40,
+        });
+        assert_eq!(a, PoolStats {
+            reused: 11,
+            allocated: 22,
+            idle: 33,
+            idle_len: 44,
+        });
     }
 
     #[test]

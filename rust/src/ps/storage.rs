@@ -107,16 +107,8 @@ impl Shard {
             .insert((table, key), Arc::new(entry))
     }
 
-    pub fn get(
-        &self,
-        branch: BranchId,
-        table: TableId,
-        key: RowKey,
-    ) -> Option<&Entry> {
-        self.branches
-            .get(&branch)?
-            .get(&(table, key))
-            .map(|arc| &**arc)
+    pub fn get(&self, branch: BranchId, table: TableId, key: RowKey) -> Option<&Entry> {
+        self.branches.get(&branch)?.get(&(table, key)).map(|arc| &**arc)
     }
 
     /// Mutable access with copy-on-write: if the row is shared with
@@ -140,12 +132,7 @@ impl Shard {
 
     /// Is this row's buffer shared with another branch?  (Test/bench
     /// introspection of the COW state.)
-    pub fn row_shared(
-        &self,
-        branch: BranchId,
-        table: TableId,
-        key: RowKey,
-    ) -> Option<bool> {
+    pub fn row_shared(&self, branch: BranchId, table: TableId, key: RowKey) -> Option<bool> {
         self.branches
             .get(&branch)?
             .get(&(table, key))
@@ -158,12 +145,7 @@ impl Shard {
     /// phantom child branch is registered); if `child` already holds
     /// rows, displaced sole-owner entries are reclaimed into `pool` so
     /// the idle census stays exact.
-    pub fn fork(
-        &mut self,
-        child: BranchId,
-        parent: BranchId,
-        pool: &mut MemoryPool,
-    ) -> usize {
+    pub fn fork(&mut self, child: BranchId, parent: BranchId, pool: &mut MemoryPool) -> usize {
         let snapshot = match self.branches.get(&parent) {
             None => return 0,
             Some(rows) => rows.clone(), // Arc clones: pointer bumps only

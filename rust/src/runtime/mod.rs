@@ -30,9 +30,9 @@
 //! A multi-device runtime pool is ROADMAP material.
 
 use std::collections::HashMap;
+use std::path::Path;
 #[cfg(feature = "pjrt")]
 use std::path::PathBuf;
-use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 #[cfg(feature = "pjrt")]
@@ -261,11 +261,7 @@ impl Runtime {
         Ok(())
     }
 
-    fn execute(
-        &mut self,
-        key: &ExeKey,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
+    fn execute(&mut self, key: &ExeKey, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         self.ensure_compiled(key)?;
         let exe = self.cache.get(key).unwrap();
         let result = exe

@@ -44,20 +44,15 @@ impl Searcher for BayesianOptSearcher {
             return Proposal::Point(vec![0.0; self.dim]);
         }
         if self.observations.len() < WARMUP {
-            return Proposal::Point(
-                (0..self.dim).map(|_| self.rng.gen_f64()).collect(),
-            );
+            return Proposal::Point((0..self.dim).map(|_| self.rng.gen_f64()).collect());
         }
-        let xs: Vec<Vec<f64>> =
-            self.observations.iter().map(|(x, _)| x.clone()).collect();
+        let xs: Vec<Vec<f64>> = self.observations.iter().map(|(x, _)| x.clone()).collect();
         let ys: Vec<f64> = self.observations.iter().map(|(_, y)| *y).collect();
         let best = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         let gp = match Gp::fit(xs, &ys, 1e-6) {
             Some(gp) => gp,
             None => {
-                return Proposal::Point(
-                    (0..self.dim).map(|_| self.rng.gen_f64()).collect(),
-                )
+                return Proposal::Point((0..self.dim).map(|_| self.rng.gen_f64()).collect())
             }
         };
         let mut best_x: Option<Vec<f64>> = None;
@@ -113,10 +108,6 @@ mod tests {
             .iter()
             .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
             .unwrap();
-        assert!(
-            (best.0[0] - 0.7).abs() < 0.15,
-            "best x = {:?}",
-            best.0
-        );
+        assert!((best.0[0] - 0.7).abs() < 0.15, "best x = {:?}", best.0);
     }
 }

@@ -152,8 +152,7 @@ impl Gp {
             .collect();
         let mean_n: f64 = kx.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
         let v = self.chol.solve_lower(&kx);
-        let var_n = (self.signal_var - v.iter().map(|vi| vi * vi).sum::<f64>())
-            .max(1e-12);
+        let var_n = (self.signal_var - v.iter().map(|vi| vi * vi).sum::<f64>()).max(1e-12);
         (
             mean_n * self.y_std + self.y_mean,
             var_n * self.y_std * self.y_std,

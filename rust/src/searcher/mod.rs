@@ -140,8 +140,14 @@ mod tests {
 
     #[test]
     fn kind_parse() {
-        assert_eq!(SearcherKind::parse("hyperopt"), Some(SearcherKind::HyperOpt));
-        assert_eq!(SearcherKind::parse("spearmint"), Some(SearcherKind::BayesianOpt));
+        assert_eq!(
+            SearcherKind::parse("hyperopt"),
+            Some(SearcherKind::HyperOpt)
+        );
+        assert_eq!(
+            SearcherKind::parse("spearmint"),
+            Some(SearcherKind::BayesianOpt)
+        );
         assert_eq!(SearcherKind::parse("nope"), None);
     }
 

@@ -52,14 +52,8 @@ impl TpeSearcher {
         });
         let n_good = ((GAMMA * idx.len() as f64).ceil() as usize)
             .clamp(1, idx.len().saturating_sub(1).max(1));
-        let good = idx[..n_good]
-            .iter()
-            .map(|&i| self.observations[i].0.clone())
-            .collect();
-        let bad = idx[n_good..]
-            .iter()
-            .map(|&i| self.observations[i].0.clone())
-            .collect();
+        let good = idx[..n_good].iter().map(|&i| self.observations[i].0.clone()).collect();
+        let bad = idx[n_good..].iter().map(|&i| self.observations[i].0.clone()).collect();
         (good, bad)
     }
 }
@@ -172,10 +166,7 @@ mod tests {
             }
         }
         // late proposals should cluster near 0.2
-        let late: Vec<f64> = s.observations()[30..]
-            .iter()
-            .map(|(p, _)| p[0])
-            .collect();
+        let late: Vec<f64> = s.observations()[30..].iter().map(|(p, _)| p[0]).collect();
         let near = late.iter().filter(|&&x| (x - 0.2).abs() < 0.25).count();
         assert!(
             near * 2 >= late.len(),

@@ -85,11 +85,7 @@ pub trait TrainingSystem {
     fn free_branch(&mut self, clock: Clock, branch_id: BranchId) -> Result<()>;
 
     /// Run `branch_id` for one clock; returns its progress report.
-    fn schedule_branch(
-        &mut self,
-        clock: Clock,
-        branch_id: BranchId,
-    ) -> Result<Progress>;
+    fn schedule_branch(&mut self, clock: Clock, branch_id: BranchId) -> Result<Progress>;
 
     /// Clocks per epoch for this branch (depends on its batch size).
     fn clocks_per_epoch(&self, branch_id: BranchId) -> u64;
@@ -97,11 +93,7 @@ pub trait TrainingSystem {
     /// Update a *running* branch's tunable setting in place.  Not part
     /// of the paper's MLtuner interface — used only by the manual
     /// LR-decay baseline drivers of Fig. 8.
-    fn update_tunable(
-        &mut self,
-        _branch_id: BranchId,
-        _tunable: &TunableSetting,
-    ) -> Result<()> {
+    fn update_tunable(&mut self, _branch_id: BranchId, _tunable: &TunableSetting) -> Result<()> {
         anyhow::bail!("this training system does not support update_tunable")
     }
 
@@ -201,10 +193,7 @@ mod tests {
         fn schedule_branch(&mut self, _c: Clock, b: BranchId) -> Result<Progress> {
             let v = self.branches.get_mut(&b).unwrap();
             *v *= 0.9;
-            Ok(Progress {
-                value: *v,
-                time: 1.0,
-            })
+            Ok(Progress { value: *v, time: 1.0 })
         }
         fn clocks_per_epoch(&self, _b: BranchId) -> u64 {
             10

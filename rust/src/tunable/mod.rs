@@ -109,12 +109,7 @@ impl TunableSpace {
     pub fn decode(&self, u: &[f64]) -> TunableSetting {
         assert_eq!(u.len(), self.dim());
         TunableSetting {
-            values: self
-                .specs
-                .iter()
-                .zip(u)
-                .map(|(s, &ui)| s.decode(ui))
-                .collect(),
+            values: self.specs.iter().zip(u).map(|(s, &ui)| s.decode(ui)).collect(),
         }
     }
 

@@ -246,11 +246,11 @@ impl<S: TrainingSystem> MLtuner<S> {
         initial: bool,
     ) -> Result<(Option<(BranchId, TunableSetting, f64)>, usize)> {
         let started = self.now;
-        self.recorder.event(started, if initial { "tuning_start" } else { "retuning_start" });
-        let mut searcher: Box<dyn Searcher> = self
-            .cfg
-            .searcher
-            .build(self.cfg.space.dim(), self.cfg.seed.wrapping_add(episode as u64 * 7919));
+        let label = if initial { "tuning_start" } else { "retuning_start" };
+        self.recorder.event(started, label);
+        let searcher_seed = self.cfg.seed.wrapping_add(episode as u64 * 7919);
+        let mut searcher: Box<dyn Searcher> =
+            self.cfg.searcher.build(self.cfg.space.dim(), searcher_seed);
         let mut trials: Vec<Trial> = Vec::new();
         let mut trial_time = 0.0f64;
         let mut exhausted = false;
@@ -289,10 +289,7 @@ impl<S: TrainingSystem> MLtuner<S> {
             for t in &mut trials {
                 self.run_trial_until(t, target)?;
             }
-            trial_time = trials
-                .iter()
-                .map(|t| t.run_time)
-                .fold(trial_time, f64::max);
+            trial_time = trials.iter().map(|t| t.run_time).fold(trial_time, f64::max);
 
             // Summarize; drop diverged branches (speed 0, §4.1).
             let mut keep = Vec::new();
@@ -352,9 +349,7 @@ impl<S: TrainingSystem> MLtuner<S> {
             // only then conclude that no converging setting exists
             // (i.e., the model has converged).
             let at_cap = trial_time >= trial_time_cap
-                && trials
-                    .iter()
-                    .all(|t| t.run_time >= trial_time_cap);
+                && trials.iter().all(|t| t.run_time >= trial_time_cap);
             let budget_spent = trials_forked >= max_trials || exhausted;
             if (at_cap && budget_spent)
                 || doublings > self.cfg.max_trial_doublings
@@ -606,10 +601,7 @@ mod tests {
     use super::*;
     use crate::apps::sim::{SimProfile, SimSystem};
 
-    fn tuner_for(
-        profile: SimProfile,
-        seed: u64,
-    ) -> MLtuner<SimSystem> {
+    fn tuner_for(profile: SimProfile, seed: u64) -> MLtuner<SimSystem> {
         let sys = SimSystem::new(profile, 8, seed);
         let mut cfg = TunerConfig::new(sys.space.clone());
         cfg.seed = seed;
@@ -624,7 +616,10 @@ mod tests {
         let (best, trials) = t.tune_once(0, f64::INFINITY, 64, 0, true).unwrap();
         let (_, setting, speed) = best.expect("should find a setting");
         assert!(speed > 0.0);
-        assert!(trials >= 5, "needs >=5 non-zero speeds to stop, got {trials}");
+        assert!(
+            trials >= 5,
+            "needs >=5 non-zero speeds to stop, got {trials}"
+        );
         // chosen LR must be in a sane band (not 1e-5, not 1.0)
         let lr = setting.lr(&t.cfg.space);
         assert!(lr > 1e-4 && lr < 0.9, "lr={lr}");
@@ -694,7 +689,9 @@ mod tests {
         let sys = SimSystem::new(SimProfile::mf_netflix(), 32, 1);
         let space = sys.space.clone();
         let mut cfg = TunerConfig::new(space);
-        cfg.convergence = ConvergenceCriterion::LossThreshold { value: 8.32e6 * 32.0 };
+        cfg.convergence = ConvergenceCriterion::LossThreshold {
+            value: 8.32e6 * 32.0,
+        };
         cfg.retune = false;
         cfg.max_epochs = 4000;
         cfg.seed = 1;
@@ -721,8 +718,14 @@ mod tests {
         // and at the end only root + train branch remain
         assert!(t.driver.system.live_branches() <= 2);
         // the report carries the same accounting
-        assert_eq!(report.snapshots.live_branches, t.driver.system.live_branches());
-        assert_eq!(report.snapshots.peak_branches, t.driver.system.peak_branches);
+        assert_eq!(
+            report.snapshots.live_branches,
+            t.driver.system.live_branches()
+        );
+        assert_eq!(
+            report.snapshots.peak_branches,
+            t.driver.system.peak_branches
+        );
         assert!(report.snapshots.forks > 0);
     }
 }

@@ -19,10 +19,7 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map_or(false, |n| !n.starts_with("--"))
-                {
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
                     let v = it.next().unwrap();
                     out.flags.insert(name.to_string(), v);
                 } else {
@@ -48,21 +45,15 @@ impl Args {
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name)
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(default)
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
-        self.get(name)
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(default)
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name)
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(default)
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
     pub fn get_bool(&self, name: &str, default: bool) -> bool {

@@ -202,10 +202,7 @@ impl<'a> Parser<'a> {
                                     .to_digit(16)
                                     .ok_or_else(|| self.err("bad hex digit"))?;
                         }
-                        out.push(
-                            char::from_u32(code)
-                                .ok_or_else(|| self.err("bad codepoint"))?,
-                        );
+                        out.push(char::from_u32(code).ok_or_else(|| self.err("bad codepoint"))?);
                     }
                     _ => return Err(self.err("bad escape")),
                 },

@@ -95,8 +95,7 @@ impl TomlDoc {
             if key.is_empty() {
                 return Err(err("empty key"));
             }
-            let value = parse_value(line[eq + 1..].trim())
-                .map_err(|m| err(&m))?;
+            let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
             let full = if section.is_empty() {
                 key.to_string()
             } else {

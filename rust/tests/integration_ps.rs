@@ -7,8 +7,8 @@
 use mltuner::comm::BranchId;
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
 use mltuner::ps::cache::WorkerCache;
-use mltuner::ps::storage::RowKey;
 use mltuner::ps::ParamServer;
+use mltuner::ps::storage::RowKey;
 use mltuner::util::rng::Rng;
 
 fn server_with_model(rows: usize, row_len: usize, kind: OptimizerKind) -> ParamServer {
@@ -138,10 +138,7 @@ fn momentum_state_follows_branch_lineage() {
         ps.apply_update(1, 0, k, &vec![1.0; 8], h, None).unwrap();
     }
     for k in 0..4u64 {
-        assert_eq!(
-            ps.read_row(0, 0, k).unwrap(),
-            ps.read_row(1, 0, k).unwrap()
-        );
+        assert_eq!(ps.read_row(0, 0, k).unwrap(), ps.read_row(1, 0, k).unwrap());
     }
 }
 

@@ -114,9 +114,7 @@ fn eval_artifact_counts_correct_predictions() {
     let params = init_params(&rt, "alexnet_proxy", 3);
     let x = vec![0.05f32; eb * mm.input_dim];
     let y = vec![0i32; eb];
-    let (correct, loss) = rt
-        .run_eval("alexnet_proxy", "xla", &params, &x, &y)
-        .unwrap();
+    let (correct, loss) = rt.run_eval("alexnet_proxy", "xla", &params, &x, &y).unwrap();
     assert!((0.0..=eb as f32).contains(&correct));
     assert!(loss.is_finite() && loss > 0.0);
 }
@@ -196,12 +194,14 @@ fn dnn_branches_are_isolated() {
     .unwrap();
     let good = TunableSetting::new(vec![0.05, 0.9, 4.0, 0.0]);
     let crazy = TunableSetting::new(vec![10.0, 0.99, 4.0, 0.0]);
-    sys.fork_branch(0, 1, None, &good, BranchType::Training).unwrap();
+    sys.fork_branch(0, 1, None, &good, BranchType::Training)
+        .unwrap();
     for c in 0..10 {
         sys.schedule_branch(c, 1).unwrap();
     }
     // fork a crazy-LR branch from the trained one; wreck it
-    sys.fork_branch(10, 2, Some(1), &crazy, BranchType::Training).unwrap();
+    sys.fork_branch(10, 2, Some(1), &crazy, BranchType::Training)
+        .unwrap();
     for c in 10..20 {
         sys.schedule_branch(c, 2).unwrap();
     }

@@ -19,11 +19,13 @@ fn sim_tuner(profile: SimProfile, searcher: SearcherKind, seed: u64) -> MLtuner<
 
 #[test]
 fn hyperopt_tunes_cifar_profile_to_convergence() {
-    let report = sim_tuner(SimProfile::alexnet_cifar10(), SearcherKind::HyperOpt, 5)
-        .run()
-        .unwrap();
+    let report = sim_tuner(SimProfile::alexnet_cifar10(), SearcherKind::HyperOpt, 5).run().unwrap();
     assert!(report.converged);
-    assert!(report.final_accuracy > 0.70, "acc {}", report.final_accuracy);
+    assert!(
+        report.final_accuracy > 0.70,
+        "acc {}",
+        report.final_accuracy
+    );
     // re-tunings happened and decreased the learning rate over time
     let lrs: Vec<f64> = report
         .tunings
@@ -39,11 +41,13 @@ fn hyperopt_tunes_cifar_profile_to_convergence() {
 
 #[test]
 fn random_searcher_also_converges() {
-    let report = sim_tuner(SimProfile::alexnet_cifar10(), SearcherKind::Random, 9)
-        .run()
-        .unwrap();
+    let report = sim_tuner(SimProfile::alexnet_cifar10(), SearcherKind::Random, 9).run().unwrap();
     assert!(report.converged);
-    assert!(report.final_accuracy > 0.65, "acc {}", report.final_accuracy);
+    assert!(
+        report.final_accuracy > 0.65,
+        "acc {}",
+        report.final_accuracy
+    );
 }
 
 #[test]
@@ -54,7 +58,11 @@ fn bayesian_searcher_survives_its_corner_start() {
         .run()
         .unwrap();
     assert!(report.converged);
-    assert!(report.final_accuracy > 0.60, "acc {}", report.final_accuracy);
+    assert!(
+        report.final_accuracy > 0.60,
+        "acc {}",
+        report.final_accuracy
+    );
 }
 
 #[test]
@@ -62,11 +70,13 @@ fn large_profile_tuning_overhead_is_small() {
     // Paper §5.2: little overhead (2-6%) from the initial tuning stage
     // on the large ILSVRC12 benchmarks (the overall tuning overhead is
     // dominated by the final re-tuning, which the paper also reports).
-    let report = sim_tuner(SimProfile::inception_bn(), SearcherKind::HyperOpt, 1)
-        .run()
-        .unwrap();
+    let report = sim_tuner(SimProfile::inception_bn(), SearcherKind::HyperOpt, 1).run().unwrap();
     assert!(report.converged);
-    assert!(report.final_accuracy > 0.60, "acc {}", report.final_accuracy);
+    assert!(
+        report.final_accuracy > 0.60,
+        "acc {}",
+        report.final_accuracy
+    );
     let initial = &report.tunings[0];
     assert!(initial.initial);
     let initial_cost = initial.ended - initial.started;
@@ -115,7 +125,11 @@ fn duplicated_tunables_still_converge() {
     cfg.max_epochs = 400;
     let report = MLtuner::new(sys, cfg).run().unwrap();
     assert!(report.converged);
-    assert!(report.final_accuracy > 0.65, "acc {}", report.final_accuracy);
+    assert!(
+        report.final_accuracy > 0.65,
+        "acc {}",
+        report.final_accuracy
+    );
 }
 
 #[test]

@@ -6,8 +6,8 @@ use mltuner::comm::{BranchType, ProtocolChecker, TunerMsg};
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
 use mltuner::ps::ParamServer;
 use mltuner::summarizer::{BranchLabel, ProgressPoint, ProgressSummarizer};
-use mltuner::tunable::{TunableSetting, TunableSpace, TunableSpec};
 use mltuner::training::clock::SspClock;
+use mltuner::tunable::{TunableSetting, TunableSpace, TunableSpec};
 use mltuner::util::rng::Rng;
 
 /// Run `f` over `n` seeded cases; panic with the seed on failure.
@@ -102,14 +102,20 @@ fn prop_summarizer_speed_nonnegative_and_time_scaling() {
         let trace: Vec<ProgressPoint> = (0..n)
             .map(|i| {
                 x += rng.gen_normal() - 0.1;
-                ProgressPoint { t: i as f64 + 1.0, x }
+                ProgressPoint {
+                    t: i as f64 + 1.0,
+                    x,
+                }
             })
             .collect();
         let sum = s.summarize(&trace);
         assert!(sum.speed >= 0.0);
         let fast: Vec<ProgressPoint> = trace
             .iter()
-            .map(|p| ProgressPoint { t: p.t / 4.0, x: p.x })
+            .map(|p| ProgressPoint {
+                t: p.t / 4.0,
+                x: p.x,
+            })
             .collect();
         let sum_fast = s.summarize(&fast);
         if sum.speed > 0.0 {
@@ -202,10 +208,7 @@ fn prop_ps_fork_free_preserves_row_counts_and_pool() {
     // exactly the root's row count and freeing everything returns the
     // pool to steady state.
     prop(60, |rng| {
-        let ps = ParamServer::new(
-            rng.gen_range(1, 8),
-            Optimizer::new(OptimizerKind::Sgd),
-        );
+        let ps = ParamServer::new(rng.gen_range(1, 8), Optimizer::new(OptimizerKind::Sgd));
         let rows = rng.gen_range(1, 40);
         for k in 0..rows {
             ps.insert_row(0, 0, k as u64, vec![0.0; rng.gen_range(1, 16)]);
@@ -243,10 +246,7 @@ fn prop_cow_branches_match_deep_copy_reference() {
         use std::collections::HashMap;
         const LEN: usize = 8;
         let lr = 0.5f32;
-        let ps = ParamServer::new(
-            rng.gen_range(1, 6),
-            Optimizer::new(OptimizerKind::Sgd),
-        );
+        let ps = ParamServer::new(rng.gen_range(1, 6), Optimizer::new(OptimizerKind::Sgd));
         let rows = rng.gen_range(1, 12) as u64;
         let mut reference: HashMap<u32, Vec<Vec<f32>>> = HashMap::new();
         let mut root = Vec::new();
@@ -322,10 +322,7 @@ fn prop_pool_reclaims_every_materialized_buffer() {
     // materialization must be parked back in its free list
     // (idle == allocated), regardless of the fork/write/free order.
     prop(40, |rng| {
-        let ps = ParamServer::new(
-            rng.gen_range(1, 6),
-            Optimizer::new(OptimizerKind::Sgd),
-        );
+        let ps = ParamServer::new(rng.gen_range(1, 6), Optimizer::new(OptimizerKind::Sgd));
         let rows = rng.gen_range(1, 10) as u64;
         for k in 0..rows {
             ps.insert_row(0, 0, k, vec![1.0; rng.gen_range(1, 12)]);
@@ -520,15 +517,13 @@ fn prop_optimizers_reduce_quadratic_loss_on_random_starts() {
             };
             for _ in 0..500 {
                 let grad = e.data.clone();
-                opt.apply(
-                    Hyper { lr, momentum: 0.3 },
-                    &mut e,
-                    &grad,
-                    None,
-                );
+                opt.apply(Hyper { lr, momentum: 0.3 }, &mut e, &grad, None);
             }
             let end: f32 = e.data.iter().map(|v| v * v).sum();
-            assert!(end <= start * 1.01 && end.is_finite(), "{kind:?}: {start} -> {end}");
+            assert!(
+                end <= start * 1.01 && end.is_finite(),
+                "{kind:?}: {start} -> {end}"
+            );
         }
     });
 }

@@ -16,7 +16,7 @@ use std::sync::Barrier;
 
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
 use mltuner::ps::storage::{RowKey, TableId};
-use mltuner::ps::{ParamServer, PARALLEL_BRANCH_OP_MIN_ROWS};
+use mltuner::ps::{PARALLEL_BRANCH_OP_MIN_ROWS, ParamServer};
 
 const ROWS: usize = 64;
 const LEN: usize = 16;
