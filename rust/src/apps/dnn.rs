@@ -36,8 +36,8 @@ use crate::comm::{BranchId, BranchType, Clock};
 use crate::data::{BatchCursor, ImageDataset};
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
 use crate::ps::cache::WorkerCache;
-use crate::ps::ParamServer;
 use crate::ps::storage::{RowKey, TableId};
+use crate::ps::{ParamServer, ParamStore, PsHandle};
 use crate::runtime::Runtime;
 use crate::training::{Progress, SnapshotStats, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
@@ -95,9 +95,9 @@ struct WorkerJob {
 /// Assemble the flat parameter tensors for one worker, honoring its
 /// SSP cache (staleness from the branch's tunable).  Free function so
 /// the gather phase can run one worker per thread against the shared
-/// server.
+/// store (in-process server or remote shard servers alike).
 fn gather_worker_params(
-    ps: &ParamServer,
+    ps: &PsHandle,
     cache: &mut WorkerCache,
     param_shapes: &[Vec<usize>],
     branch: BranchId,
@@ -112,13 +112,14 @@ fn gather_worker_params(
         for r in 0..nrows {
             // §Perf: at staleness 0 the cache can never satisfy a
             // *next*-clock read (every clock refetches), so skip the
-            // cache bookkeeping entirely and copy straight out of the
-            // shard's read lock — halves the gather's memory traffic.
+            // cache bookkeeping entirely and append straight out of
+            // the store (zero-copy from the shard's read lock for a
+            // local store) — halves the gather's memory traffic.
             if staleness == 0 {
-                ps.with_row(branch, t as TableId, r as RowKey, |e| {
-                    flat.extend_from_slice(&e.data)
-                })
-                .expect("row must exist");
+                let found = ps
+                    .extend_row_into(branch, t as TableId, r as RowKey, &mut flat)
+                    .expect("parameter store read failed");
+                assert!(found, "row must exist");
                 continue;
             }
             if let Some(row) = cache.get(t as TableId, r as RowKey, now, staleness) {
@@ -127,6 +128,7 @@ fn gather_worker_params(
             }
             let row = ps
                 .read_row(branch, t as TableId, r as RowKey)
+                .expect("parameter store read failed")
                 .expect("row must exist");
             flat.extend_from_slice(&row);
             cache.put(t as TableId, r as RowKey, row, now);
@@ -159,7 +161,7 @@ fn assemble_batch(
 pub struct DnnSystem {
     pub cfg: DnnConfig,
     runtime: Runtime,
-    ps: ParamServer,
+    ps: PsHandle,
     caches: Vec<WorkerCache>,
     branches: HashMap<BranchId, DnnBranch>,
     train: ImageDataset,
@@ -172,6 +174,17 @@ pub struct DnnSystem {
 
 impl DnnSystem {
     pub fn new(cfg: DnnConfig, runtime: Runtime, optimizer: OptimizerKind) -> Result<Self> {
+        let ps = PsHandle::Local(ParamServer::new(
+            cfg.num_workers.max(1),
+            Optimizer::new(optimizer),
+        ));
+        Self::with_store(cfg, runtime, ps)
+    }
+
+    /// Build the system on an existing store (`PsHandle::Remote` runs
+    /// the gather/push phases against shard-server processes); model
+    /// initialization inserts the parameter rows through the store.
+    pub fn with_store(cfg: DnnConfig, runtime: Runtime, ps: PsHandle) -> Result<Self> {
         let mm = runtime.model(&cfg.model)?.clone();
         // One generation pass, split into train/val: both sides share
         // the same class centers (a second seed would re-draw centers
@@ -193,7 +206,14 @@ impl DnnSystem {
             bail!("no grad artifacts for variant {}", cfg.variant);
         }
         let space = TunableSpace::standard(&batch_sizes);
-        let ps = ParamServer::new(cfg.num_workers.max(1), Optimizer::new(optimizer));
+        // A long-lived shard-server set may still hold branches from a
+        // previous tune session; free them so this session's forks
+        // start from a clean index (root rows are overwritten below).
+        for b in ps.live_branches()? {
+            if b != 0 {
+                ps.free_branch(b)?;
+            }
+        }
         // He-initialized parameters, chunked into rows.
         let mut rng = Rng::seed_from_u64(cfg.seed.wrapping_add(2));
         for (t, shape) in mm.param_shapes.iter().enumerate() {
@@ -208,7 +228,7 @@ impl DnnSystem {
                 flat.push((rng.gen_normal() * scale) as f32);
             }
             for (i, chunk) in flat.chunks(ROW_LEN).enumerate() {
-                ps.insert_row(0, t as TableId, i as RowKey, chunk.to_vec());
+                ps.insert_row(0, t as TableId, i as RowKey, chunk.to_vec())?;
             }
         }
         let caches = (0..cfg.num_workers).map(|_| WorkerCache::new()).collect();
@@ -248,7 +268,8 @@ impl DnnSystem {
         &self.space
     }
 
-    pub fn param_server(&self) -> &ParamServer {
+    /// The parameter store this system drives (test introspection).
+    pub fn store(&self) -> &PsHandle {
         &self.ps
     }
 
@@ -484,15 +505,16 @@ impl TrainingSystem for DnnSystem {
     }
 
     fn snapshot_stats(&self) -> SnapshotStats {
-        let srv = self.ps.server_stats();
+        // aggregated across shard servers for a remote store
+        let s = self.ps.store_stats().unwrap_or_default();
         SnapshotStats {
             live_branches: self.branches.len(),
-            peak_branches: self.ps.peak_branches(),
-            forks: self.ps.fork_count(),
-            cow_buffer_copies: self.ps.cow_buffer_copies(),
-            shard_lock_contentions: srv.shard_lock_contentions,
-            batch_calls: srv.batch_calls,
-            batched_rows: srv.batched_rows,
+            peak_branches: s.peak_branches,
+            forks: s.forks,
+            cow_buffer_copies: s.cow_buffer_copies,
+            shard_lock_contentions: s.server.shard_lock_contentions,
+            batch_calls: s.server.batch_calls,
+            batched_rows: s.server.batched_rows,
         }
     }
 }

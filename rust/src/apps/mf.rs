@@ -19,6 +19,13 @@
 //! order, and the per-row updates are pushed back from all workers in
 //! parallel over disjoint row sets (one AdaRevision read+update per
 //! touched row).
+//!
+//! The system drives its store through the [`ParamStore`] interface of
+//! a [`PsHandle`], so the same clock code runs against the in-process
+//! server ([`MfSystem::new`]) or a set of remote shard servers
+//! ([`MfSystem::with_store`] with a
+//! [`crate::ps::remote::RemoteParamServer`]) — and, because row data
+//! crosses the wire as f32 bit patterns, both runs are bit-identical.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -29,8 +36,8 @@ use crate::util::rng::Rng;
 use crate::comm::{BranchId, BranchType, Clock};
 use crate::data::RatingsDataset;
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
-use crate::ps::ParamServer;
 use crate::ps::storage::{RowKey, TableId};
+use crate::ps::{ParamServer, ParamStore, PsHandle};
 use crate::training::{Progress, SnapshotStats, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace, TunableSpec};
 
@@ -79,6 +86,20 @@ struct WorkerScratch {
     touched_r: Vec<bool>,
 }
 
+/// Read one factor row through the store, panicking on transport
+/// failure (worker threads have no error channel; a dead shard server
+/// fails the clock loudly rather than training on garbage).
+fn read_factor(
+    ps: &PsHandle,
+    branch: BranchId,
+    table: TableId,
+    key: RowKey,
+    buf: &mut Vec<f32>,
+) -> bool {
+    ps.read_row_into(branch, table, key, buf)
+        .expect("parameter store read failed")
+}
+
 impl WorkerScratch {
     fn new(users: usize, items: usize, rank: usize) -> Self {
         WorkerScratch {
@@ -97,7 +118,7 @@ impl WorkerScratch {
 
 pub struct MfSystem {
     pub cfg: MfConfig,
-    ps: ParamServer,
+    ps: PsHandle,
     data: RatingsDataset,
     branches: HashMap<BranchId, MfBranch>,
     space: TunableSpace,
@@ -108,6 +129,27 @@ pub struct MfSystem {
 
 impl MfSystem {
     pub fn new(cfg: MfConfig) -> Self {
+        let ps = PsHandle::Local(ParamServer::new(
+            cfg.num_workers.max(1),
+            Optimizer::new(cfg.optimizer),
+        ));
+        Self::with_store(cfg, ps).expect("in-process store construction cannot fail")
+    }
+
+    /// Build the system on an existing store — the remote entry point:
+    /// pass `PsHandle::Remote` to run the same data-parallel clocks
+    /// against a set of shard-server processes.  The store's optimizer
+    /// must match the config (the rule is applied server-side).  Model
+    /// initialization inserts the factor rows through the store, so a
+    /// remote run ships them over the wire here.
+    pub fn with_store(cfg: MfConfig, ps: PsHandle) -> Result<Self> {
+        if ps.optimizer_kind() != cfg.optimizer {
+            bail!(
+                "store optimizer {} does not match configured optimizer {}",
+                ps.optimizer_kind().name(),
+                cfg.optimizer.name()
+            );
+        }
         let data = RatingsDataset::low_rank(
             cfg.users,
             cfg.items,
@@ -123,16 +165,24 @@ impl MfSystem {
             min: 1e-5,
             max: 10.0,
         }]);
-        let ps = ParamServer::new(cfg.num_workers.max(1), Optimizer::new(cfg.optimizer));
+        // A long-lived shard-server set may still hold branches from a
+        // previous tune session; free them so this session's forks
+        // start from a clean index (the root's rows are overwritten by
+        // the inserts below, with displaced buffers reclaimed).
+        for b in ps.live_branches()? {
+            if b != 0 {
+                ps.free_branch(b)?;
+            }
+        }
         let mut rng = Rng::seed_from_u64(cfg.seed.wrapping_add(7));
         let scale = (1.0 / cfg.rank as f64).sqrt();
         for u in 0..cfg.users {
             let row: Vec<f32> = (0..cfg.rank).map(|_| (rng.gen_normal() * scale) as f32).collect();
-            ps.insert_row(0, T_USER, u as RowKey, row);
+            ps.insert_row(0, T_USER, u as RowKey, row)?;
         }
         for i in 0..cfg.items {
             let row: Vec<f32> = (0..cfg.rank).map(|_| (rng.gen_normal() * scale) as f32).collect();
-            ps.insert_row(0, T_ITEM, i as RowKey, row);
+            ps.insert_row(0, T_ITEM, i as RowKey, row)?;
         }
         let mut branches = HashMap::new();
         branches.insert(
@@ -144,7 +194,7 @@ impl MfSystem {
             },
         );
         let workers = cfg.num_workers.max(1);
-        MfSystem {
+        Ok(MfSystem {
             scratch: (0..workers)
                 .map(|_| WorkerScratch::new(cfg.users, cfg.items, cfg.rank))
                 .collect(),
@@ -153,11 +203,16 @@ impl MfSystem {
             data,
             branches,
             space,
-        }
+        })
     }
 
     pub fn space(&self) -> &TunableSpace {
         &self.space
+    }
+
+    /// The parameter store this system drives (test introspection).
+    pub fn store(&self) -> &PsHandle {
+        &self.ps
     }
 
     /// Current training loss (sum of squared errors) of a branch.
@@ -166,8 +221,8 @@ impl MfSystem {
         let mut ri: Vec<f32> = Vec::new();
         let mut loss = 0f64;
         for &(u, i, r) in &self.data.ratings {
-            assert!(self.ps.read_row_into(branch, T_USER, u as RowKey, &mut lu));
-            assert!(self.ps.read_row_into(branch, T_ITEM, i as RowKey, &mut ri));
+            assert!(read_factor(&self.ps, branch, T_USER, u as RowKey, &mut lu));
+            assert!(read_factor(&self.ps, branch, T_ITEM, i as RowKey, &mut ri));
             let pred: f32 = lu.iter().zip(&ri).map(|(a, b)| a * b).sum();
             let e = (pred - r) as f64;
             loss += e * e;
@@ -266,8 +321,8 @@ impl TrainingSystem for MfSystem {
                     let mut loss = 0f64;
                     for &(u, i, r) in data.partition(w, workers) {
                         let (u, i) = (u as usize, i as usize);
-                        assert!(ps.read_row_into(branch_id, T_USER, u as RowKey, &mut lu));
-                        assert!(ps.read_row_into(branch_id, T_ITEM, i as RowKey, &mut ri));
+                        assert!(read_factor(ps, branch_id, T_USER, u as RowKey, &mut lu));
+                        assert!(read_factor(ps, branch_id, T_ITEM, i as RowKey, &mut ri));
                         let pred: f32 = lu.iter().zip(&ri).map(|(a, b)| a * b).sum();
                         let e = pred - r;
                         loss += (e as f64) * (e as f64);
@@ -341,7 +396,7 @@ impl TrainingSystem for MfSystem {
                                 continue;
                             }
                             let z_old = ps
-                                .read_row_with_accum(branch_id, T_USER, u as RowKey)
+                                .read_row_with_accum(branch_id, T_USER, u as RowKey)?
                                 .and_then(|(_, z)| z);
                             ps.apply_update(
                                 branch_id,
@@ -357,7 +412,7 @@ impl TrainingSystem for MfSystem {
                                 continue;
                             }
                             let z_old = ps
-                                .read_row_with_accum(branch_id, T_ITEM, i as RowKey)
+                                .read_row_with_accum(branch_id, T_ITEM, i as RowKey)?
                                 .and_then(|(_, z)| z);
                             ps.apply_update(
                                 branch_id,
@@ -406,15 +461,18 @@ impl TrainingSystem for MfSystem {
     }
 
     fn snapshot_stats(&self) -> SnapshotStats {
-        let srv = self.ps.server_stats();
+        // aggregated across shard servers for a remote store; an
+        // unreachable store reports zeros rather than failing the
+        // (infallible) stats path
+        let s = self.ps.store_stats().unwrap_or_default();
         SnapshotStats {
             live_branches: self.branches.len(),
-            peak_branches: self.ps.peak_branches(),
-            forks: self.ps.fork_count(),
-            cow_buffer_copies: self.ps.cow_buffer_copies(),
-            shard_lock_contentions: srv.shard_lock_contentions,
-            batch_calls: srv.batch_calls,
-            batched_rows: srv.batched_rows,
+            peak_branches: s.peak_branches,
+            forks: s.forks,
+            cow_buffer_copies: s.cow_buffer_copies,
+            shard_lock_contentions: s.server.shard_lock_contentions,
+            batch_calls: s.server.batch_calls,
+            batched_rows: s.server.batched_rows,
         }
     }
 }

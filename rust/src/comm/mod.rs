@@ -1,14 +1,34 @@
-//! MLtuner ↔ training-system message interface (§4.5, Table 1).
+//! MLtuner ↔ training-system messaging: a **two-plane protocol** over
+//! interchangeable byte streams (§4.5, §4.6).
 //!
-//! MLtuner identifies each branch with a unique branch ID and uses
-//! `clock` as logical time — unique and totally ordered across all
-//! branches.  Branch operations are sent in clock order, with exactly
-//! one `ScheduleBranch` per clock; the training system reports progress
-//! with one `ReportProgress` per clock.  For distributed systems the
-//! operations are broadcast to all workers in the same order and the
-//! per-worker progress is folded with a user-defined aggregation
-//! (sum, for the SGD loss apps in the paper).
+//! **Control plane** — the Table-1 interface.  MLtuner identifies each
+//! branch with a unique branch ID and uses `clock` as logical time —
+//! unique and totally ordered across all branches.  Branch operations
+//! ([`TunerMsg`]) are sent in clock order, with exactly one
+//! `ScheduleBranch` per clock; the training system reports progress
+//! ([`SystemMsg`]) with one `ReportProgress` per clock.  For
+//! distributed systems the operations are broadcast to all workers in
+//! the same order and the per-worker progress is folded with a
+//! user-defined aggregation (sum, for the SGD loss apps in the paper).
+//!
+//! **Data plane** — the parameter-server RPCs
+//! ([`wire::PsRequest`]/[`wire::PsReply`]) a training process issues
+//! against remote shard servers: row reads, routed batched updates,
+//! replicated branch fork/free, and the stats probe.  Row payloads are
+//! f32 bit patterns, so remote runs are bit-identical to local ones.
+//!
+//! Three carriers implement the byte stream:
+//!
+//! * [`wire`] — the frame codec itself (one JSON object per frame),
+//!   shared by every carrier;
+//! * [`transport`] — the in-process broker (mpsc channels) used by the
+//!   simulated multi-worker deployments;
+//! * [`socket`] — real TCP / Unix-domain sockets with line or
+//!   length-prefix framing, carrying both planes between processes
+//!   (the `mltuner serve` / `mltuner tune --ps remote://...`
+//!   deployment, see [`crate::ps::remote`]).
 
+pub mod socket;
 pub mod transport;
 pub mod wire;
 

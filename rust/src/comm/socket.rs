@@ -1,0 +1,524 @@
+//! Byte-stream transport over real sockets (§4.5 "works as a separate
+//! process") — TCP and Unix-domain, carrying both protocol planes of
+//! [`super::wire`]: the TunerMsg/SystemMsg control plane and the
+//! PsRequest/PsReply parameter-server data plane.
+//!
+//! Framing is selectable per connection and must match on both ends:
+//!
+//! * [`Framing::Line`] — one JSON frame per `\n`-terminated line (the
+//!   encoding of `wire.rs` never emits a newline inside a frame).
+//!   Human-readable; `nc` works against it.
+//! * [`Framing::Length`] — a 4-byte big-endian payload length followed
+//!   by the payload bytes.  Self-delimiting without scanning, and the
+//!   framing the truncation/garbage tests exercise: a frame whose
+//!   header promises more bytes than [`MAX_FRAME_LEN`] is rejected
+//!   outright instead of allocating unboundedly.
+//!
+//! Addresses are parsed by [`SocketSpec`]: `host:port`,
+//! `tcp://host:port`, or `unix:/path/to.sock`.  A client-side server
+//! list (`remote://addr1,addr2,...`) is parsed by
+//! [`parse_server_list`].  TCP connections set `TCP_NODELAY`: the data
+//! plane is request/response, where Nagle+delayed-ACK would add ~40 ms
+//! to every RPC.
+
+use std::fmt;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::wire::{
+    decode_system_msg, decode_tuner_msg, encode_system_msg, encode_tuner_msg,
+};
+use super::{SystemMsg, TunerMsg};
+
+/// Upper bound on one frame's payload (64 MiB).  Far above any real
+/// frame (the largest is an `apply_batch` group), small enough that a
+/// garbage length header cannot drive an unbounded allocation.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// One socket address, TCP or Unix-domain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SocketSpec {
+    /// `host:port` (port 0 = ephemeral, resolved at bind).
+    Tcp(String),
+    /// Filesystem path of a Unix-domain socket.
+    Unix(String),
+}
+
+impl SocketSpec {
+    /// Parse `host:port`, `tcp://host:port`, or `unix:/path`.
+    pub fn parse(s: &str) -> Result<SocketSpec> {
+        let s = s.trim();
+        if let Some(path) = s.strip_prefix("unix:") {
+            let path = path.strip_prefix("//").unwrap_or(path);
+            if path.is_empty() {
+                bail!("empty unix socket path in {s:?}");
+            }
+            return Ok(SocketSpec::Unix(path.to_string()));
+        }
+        let addr = s.strip_prefix("tcp://").unwrap_or(s);
+        // require host:port shape (rsplit: IPv6 hosts contain ':')
+        match addr.rsplit_once(':') {
+            Some((host, port)) if !host.is_empty() && port.parse::<u16>().is_ok() => {
+                Ok(SocketSpec::Tcp(addr.to_string()))
+            }
+            _ => bail!("bad socket address {s:?} (want host:port or unix:/path)"),
+        }
+    }
+
+    /// Connect a client [`Conn`] to this address.
+    pub fn connect(&self, framing: Framing) -> Result<Conn> {
+        match self {
+            SocketSpec::Tcp(addr) => {
+                let stream =
+                    TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+                Conn::from_tcp(stream, framing)
+            }
+            #[cfg(unix)]
+            SocketSpec::Unix(path) => {
+                let stream =
+                    UnixStream::connect(path).with_context(|| format!("connecting to {path}"))?;
+                Conn::from_unix(stream, framing)
+            }
+            #[cfg(not(unix))]
+            SocketSpec::Unix(path) => {
+                bail!("unix-domain sockets unsupported on this platform: {path}")
+            }
+        }
+    }
+}
+
+impl fmt::Display for SocketSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SocketSpec::Tcp(addr) => write!(f, "{addr}"),
+            SocketSpec::Unix(path) => write!(f, "unix:{path}"),
+        }
+    }
+}
+
+/// Parse a client-side shard-server list: `remote://addr1,addr2,...`
+/// (the `remote://` prefix is optional so bare comma lists also work).
+pub fn parse_server_list(s: &str) -> Result<Vec<SocketSpec>> {
+    let list = s.trim().strip_prefix("remote://").unwrap_or(s.trim());
+    let specs = list
+        .split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(SocketSpec::parse)
+        .collect::<Result<Vec<_>>>()?;
+    if specs.is_empty() {
+        bail!("empty shard-server list {s:?}");
+    }
+    Ok(specs)
+}
+
+/// Frame delimiting on the byte stream; must match on both ends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Framing {
+    #[default]
+    Line,
+    Length,
+}
+
+impl Framing {
+    pub fn parse(s: &str) -> Result<Framing> {
+        match s {
+            "line" => Ok(Framing::Line),
+            "length" => Ok(Framing::Length),
+            other => bail!("unknown framing {other:?} (want line|length)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Framing::Line => "line",
+            Framing::Length => "length",
+        }
+    }
+}
+
+/// Encode one length-prefixed frame (4-byte big-endian header).
+pub fn encode_length_frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 4);
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Decode one length-prefixed frame from the front of `buf`.
+///
+/// Returns `Ok(None)` when the buffer holds only a truncated frame
+/// (header or payload incomplete — the caller needs more bytes), and
+/// an error when the header promises more than [`MAX_FRAME_LEN`].
+pub fn decode_length_frame(buf: &[u8]) -> Result<Option<(Vec<u8>, usize)>> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len > MAX_FRAME_LEN {
+        bail!("frame length {len} exceeds maximum {MAX_FRAME_LEN}");
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    Ok(Some((buf[4..4 + len].to_vec(), 4 + len)))
+}
+
+/// One framed, buffered, bidirectional connection.
+pub struct Conn {
+    reader: BufReader<Box<dyn Read + Send>>,
+    writer: BufWriter<Box<dyn Write + Send>>,
+    framing: Framing,
+}
+
+impl Conn {
+    pub fn from_tcp(stream: TcpStream, framing: Framing) -> Result<Conn> {
+        // request/response RPCs: never let Nagle hold a frame back
+        stream.set_nodelay(true)?;
+        let reader = stream.try_clone()?;
+        Ok(Conn {
+            reader: BufReader::new(Box::new(reader)),
+            writer: BufWriter::new(Box::new(stream)),
+            framing,
+        })
+    }
+
+    #[cfg(unix)]
+    pub fn from_unix(stream: UnixStream, framing: Framing) -> Result<Conn> {
+        let reader = stream.try_clone()?;
+        Ok(Conn {
+            reader: BufReader::new(Box::new(reader)),
+            writer: BufWriter::new(Box::new(stream)),
+            framing,
+        })
+    }
+
+    pub fn framing(&self) -> Framing {
+        self.framing
+    }
+
+    /// Send one frame (flushes: every frame is an RPC half).
+    pub fn send(&mut self, payload: &str) -> Result<()> {
+        match self.framing {
+            Framing::Line => {
+                if payload.as_bytes().contains(&b'\n') {
+                    bail!("line framing cannot carry embedded newlines");
+                }
+                self.writer.write_all(payload.as_bytes())?;
+                self.writer.write_all(b"\n")?;
+            }
+            Framing::Length => {
+                if payload.len() > MAX_FRAME_LEN {
+                    bail!("frame length {} exceeds maximum {MAX_FRAME_LEN}", payload.len());
+                }
+                self.writer
+                    .write_all(&(payload.len() as u32).to_be_bytes())?;
+                self.writer.write_all(payload.as_bytes())?;
+            }
+        }
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Receive one frame; `Ok(None)` on clean EOF at a frame boundary.
+    pub fn recv(&mut self) -> Result<Option<String>> {
+        match self.framing {
+            Framing::Line => {
+                let mut line = String::new();
+                let n = self.reader.read_line(&mut line)?;
+                if n == 0 {
+                    return Ok(None);
+                }
+                while line.ends_with('\n') || line.ends_with('\r') {
+                    line.pop();
+                }
+                Ok(Some(line))
+            }
+            Framing::Length => {
+                let mut header = [0u8; 4];
+                match self.reader.read_exact(&mut header) {
+                    Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                        return Ok(None)
+                    }
+                    r => r?,
+                }
+                let len = u32::from_be_bytes(header) as usize;
+                if len > MAX_FRAME_LEN {
+                    bail!("frame length {len} exceeds maximum {MAX_FRAME_LEN}");
+                }
+                let mut payload = vec![0u8; len];
+                self.reader
+                    .read_exact(&mut payload)
+                    .context("truncated frame")?;
+                String::from_utf8(payload)
+                    .map(Some)
+                    .map_err(|_| anyhow!("frame is not utf-8"))
+            }
+        }
+    }
+
+    /// Receive one frame, treating EOF as an error (RPC reply wanted).
+    pub fn recv_expect(&mut self) -> Result<String> {
+        self.recv()?
+            .ok_or_else(|| anyhow!("peer closed the connection mid-protocol"))
+    }
+
+    // -- control-plane helpers: Table-1 messages over the socket -----
+
+    pub fn send_tuner_msg(&mut self, msg: &TunerMsg) -> Result<()> {
+        self.send(&encode_tuner_msg(msg))
+    }
+
+    pub fn recv_tuner_msg(&mut self) -> Result<Option<TunerMsg>> {
+        match self.recv()? {
+            None => Ok(None),
+            Some(line) => Ok(Some(decode_tuner_msg(&line)?)),
+        }
+    }
+
+    pub fn send_system_msg(&mut self, msg: &SystemMsg) -> Result<()> {
+        self.send(&encode_system_msg(msg))
+    }
+
+    pub fn recv_system_msg(&mut self) -> Result<Option<SystemMsg>> {
+        match self.recv()? {
+            None => Ok(None),
+            Some(line) => Ok(Some(decode_system_msg(&line)?)),
+        }
+    }
+}
+
+/// A bound listener (TCP or Unix-domain).
+pub enum PsListener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, String),
+}
+
+impl PsListener {
+    /// Bind to `spec`.  For TCP port 0 the kernel picks an ephemeral
+    /// port; [`PsListener::local_spec`] reports the resolved address.
+    pub fn bind(spec: &SocketSpec) -> Result<PsListener> {
+        match spec {
+            SocketSpec::Tcp(addr) => {
+                let l = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+                Ok(PsListener::Tcp(l))
+            }
+            #[cfg(unix)]
+            SocketSpec::Unix(path) => {
+                // a stale socket file from a dead server blocks bind
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path).with_context(|| format!("binding {path}"))?;
+                Ok(PsListener::Unix(l, path.clone()))
+            }
+            #[cfg(not(unix))]
+            SocketSpec::Unix(path) => {
+                bail!("unix-domain sockets unsupported on this platform: {path}")
+            }
+        }
+    }
+
+    /// The bound address (with the kernel-resolved port for TCP :0).
+    pub fn local_spec(&self) -> Result<SocketSpec> {
+        match self {
+            PsListener::Tcp(l) => Ok(SocketSpec::Tcp(l.local_addr()?.to_string())),
+            #[cfg(unix)]
+            PsListener::Unix(_, path) => Ok(SocketSpec::Unix(path.clone())),
+        }
+    }
+
+    /// Block for the next connection.
+    pub fn accept(&self, framing: Framing) -> Result<Conn> {
+        match self {
+            PsListener::Tcp(l) => {
+                let (stream, _) = l.accept()?;
+                Conn::from_tcp(stream, framing)
+            }
+            #[cfg(unix)]
+            PsListener::Unix(l, _) => {
+                let (stream, _) = l.accept()?;
+                Conn::from_unix(stream, framing)
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for PsListener {
+    fn drop(&mut self) {
+        if let PsListener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::BranchType;
+    use crate::tunable::TunableSetting;
+
+    fn ephemeral_tcp() -> (PsListener, SocketSpec) {
+        let l = PsListener::bind(&SocketSpec::parse("127.0.0.1:0").unwrap()).unwrap();
+        let spec = l.local_spec().unwrap();
+        (l, spec)
+    }
+
+    fn echo_roundtrip(listener: PsListener, spec: SocketSpec, framing: Framing) {
+        let server = std::thread::spawn(move || {
+            let mut conn = listener.accept(framing).unwrap();
+            while let Some(frame) = conn.recv().unwrap() {
+                conn.send(&format!("echo:{frame}")).unwrap();
+            }
+        });
+        let mut conn = spec.connect(framing).unwrap();
+        for payload in ["hello", "", "{\"op\":\"stats\"}", "x".repeat(100_000).as_str()] {
+            conn.send(payload).unwrap();
+            assert_eq!(conn.recv_expect().unwrap(), format!("echo:{payload}"));
+        }
+        drop(conn); // EOF ends the echo loop
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_line_framing_roundtrip() {
+        let (l, spec) = ephemeral_tcp();
+        echo_roundtrip(l, spec, Framing::Line);
+    }
+
+    #[test]
+    fn tcp_length_framing_roundtrip() {
+        let (l, spec) = ephemeral_tcp();
+        echo_roundtrip(l, spec, Framing::Length);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_roundtrip() {
+        let path = std::env::temp_dir().join(format!("mltuner-sock-test-{}", std::process::id()));
+        let spec = SocketSpec::Unix(path.to_string_lossy().into_owned());
+        let listener = PsListener::bind(&spec).unwrap();
+        echo_roundtrip(listener, spec.clone(), Framing::Length);
+        // Drop removed the socket file, so a rebind must succeed.
+        let listener = PsListener::bind(&spec).unwrap();
+        drop(listener);
+    }
+
+    #[test]
+    fn control_plane_messages_cross_a_real_socket() {
+        // The §4.5 shape over TCP: coordinator sends ordered branch
+        // ops, worker answers with per-clock progress.
+        let (listener, spec) = ephemeral_tcp();
+        let worker = std::thread::spawn(move || {
+            let mut conn = listener.accept(Framing::Line).unwrap();
+            let mut got = Vec::new();
+            while let Some(msg) = conn.recv_tuner_msg().unwrap() {
+                if let TunerMsg::ScheduleBranch { clock, .. } = msg {
+                    conn.send_system_msg(&SystemMsg::ReportProgress {
+                        clock,
+                        progress: clock as f64 * 2.0,
+                        time: 0.5,
+                    })
+                    .unwrap();
+                }
+                got.push(msg);
+            }
+            got
+        });
+        let mut conn = spec.connect(Framing::Line).unwrap();
+        let fork = TunerMsg::ForkBranch {
+            clock: 0,
+            branch_id: 1,
+            parent_branch_id: Some(0),
+            tunable: TunableSetting::new(vec![1.25e-3]),
+            branch_type: BranchType::Training,
+        };
+        conn.send_tuner_msg(&fork).unwrap();
+        for clock in 0..3u64 {
+            let sched = TunerMsg::ScheduleBranch {
+                clock,
+                branch_id: 1,
+            };
+            conn.send_tuner_msg(&sched).unwrap();
+            let reply = conn.recv_system_msg().unwrap().unwrap();
+            assert_eq!(reply, SystemMsg::ReportProgress {
+                clock,
+                progress: clock as f64 * 2.0,
+                time: 0.5,
+            });
+        }
+        drop(conn);
+        let got = worker.join().unwrap();
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0], fork);
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(
+            SocketSpec::parse("127.0.0.1:80").unwrap(),
+            SocketSpec::Tcp("127.0.0.1:80".into())
+        );
+        assert_eq!(
+            SocketSpec::parse("tcp://h.example:9000").unwrap(),
+            SocketSpec::Tcp("h.example:9000".into())
+        );
+        assert_eq!(
+            SocketSpec::parse("unix:/tmp/x.sock").unwrap(),
+            SocketSpec::Unix("/tmp/x.sock".into())
+        );
+        assert_eq!(
+            SocketSpec::parse("unix:///tmp/x.sock").unwrap(),
+            SocketSpec::Unix("/tmp/x.sock".into())
+        );
+        assert!(SocketSpec::parse("").is_err());
+        assert!(SocketSpec::parse("no-port").is_err());
+        assert!(SocketSpec::parse("host:notaport").is_err());
+        assert!(SocketSpec::parse("unix:").is_err());
+        let list = parse_server_list("remote://127.0.0.1:1,127.0.0.1:2").unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[1], SocketSpec::Tcp("127.0.0.1:2".into()));
+        assert!(parse_server_list("remote://").is_err());
+        // round-trip through Display
+        for s in ["10.0.0.1:5001", "unix:/run/mltuner.sock"] {
+            let spec = SocketSpec::parse(s).unwrap();
+            assert_eq!(SocketSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn length_frame_codec_rejects_truncation_and_garbage() {
+        let frame = encode_length_frame(b"abc");
+        assert_eq!(frame, vec![0, 0, 0, 3, b'a', b'b', b'c']);
+        // whole frame decodes
+        let (payload, used) = decode_length_frame(&frame).unwrap().unwrap();
+        assert_eq!((payload.as_slice(), used), (&b"abc"[..], 7));
+        // every truncation is "need more bytes", never a wrong decode
+        for cut in 0..frame.len() {
+            assert!(decode_length_frame(&frame[..cut]).unwrap().is_none(), "cut {cut}");
+        }
+        // a garbage header promising 4 GiB is rejected outright
+        let garbage = [0xff, 0xff, 0xff, 0xff, 0, 0];
+        assert!(decode_length_frame(&garbage).is_err());
+        // concatenated frames decode one at a time
+        let mut two = encode_length_frame(b"x");
+        two.extend(encode_length_frame(b"yz"));
+        let (p1, used) = decode_length_frame(&two).unwrap().unwrap();
+        assert_eq!(p1, b"x");
+        let (p2, _) = decode_length_frame(&two[used..]).unwrap().unwrap();
+        assert_eq!(p2, b"yz");
+    }
+
+    #[test]
+    fn line_framing_rejects_embedded_newline() {
+        let (listener, spec) = ephemeral_tcp();
+        let _server = std::thread::spawn(move || {
+            let _conn = listener.accept(Framing::Line);
+        });
+        let mut conn = spec.connect(Framing::Line).unwrap();
+        assert!(conn.send("a\nb").is_err());
+    }
+}

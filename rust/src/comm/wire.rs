@@ -1,18 +1,43 @@
-//! Wire format for the Table-1 messages (§4.5).
+//! Wire format for the two protocol planes (§4.5, §4.6).
 //!
 //! MLtuner "works as a separate process that communicates with the
-//! training system via messages".  This module gives the messages a
-//! concrete wire encoding (line-delimited JSON, parsed by the in-tree
-//! `util::json`) so the coordinator and a training system can sit on
-//! opposite ends of any byte stream; [`super::transport`] provides the
-//! in-process broker used by the simulated deployments.
+//! training system via messages".  This module gives both planes a
+//! concrete wire encoding (one JSON object per frame, parsed by the
+//! in-tree `util::json`) so the endpoints can sit on opposite ends of
+//! any byte stream — the in-process [`super::transport`] broker or the
+//! real sockets of [`super::socket`]:
+//!
+//! * **Control plane** — the Table-1 tuner/system messages
+//!   ([`TunerMsg`]/[`SystemMsg`]): fork/free/schedule broadcast in
+//!   clock order, per-clock progress reports folded by the
+//!   coordinator.  Human-oriented float encoding (`{v:e}`, shortest
+//!   round-trippable decimal).
+//! * **Data plane** — the parameter-server RPCs
+//!   ([`PsRequest`]/[`PsReply`]) that a remote training process issues
+//!   against a shard server: row reads, batched updates, branch
+//!   fork/free replication, and the stats probe.  Row payloads are
+//!   `f32` values encoded as their IEEE-754 **bit patterns** (`u32`
+//!   integers), so every value — including NaN payloads and the
+//!   infinities a diverging trial produces — survives the wire
+//!   bit-exact, which is what makes remote training runs bit-identical
+//!   to local ones.
+//!
+//! Numbers are decoded *strictly*: `clock`/`branch`/key/bit-pattern
+//! fields reject non-integral, negative, and out-of-range values
+//! instead of silently truncating through `as` casts.
+
+use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::optim::Hyper;
+use crate::ps::pool::PoolStats;
+use crate::ps::ServerStats;
+use crate::ps::storage::{RowKey, TableId};
 use crate::tunable::TunableSetting;
 use crate::util::json::Json;
 
-use super::{BranchType, SystemMsg, TunerMsg};
+use super::{BranchId, BranchType, SystemMsg, TunerMsg};
 
 /// Encode one tuner message as a single JSON line.
 pub fn encode_tuner_msg(msg: &TunerMsg) -> String {
@@ -64,23 +89,51 @@ fn field<'a>(v: &'a Json, k: &str) -> Result<&'a Json> {
     v.get(k).ok_or_else(|| anyhow!("missing field {k}"))
 }
 
+/// Exclusive integer bound for wire numbers: 2^53.  The JSON number
+/// type (f64) represents every integer *below* 2^53 exactly; 2^53
+/// itself is excluded because 2^53 + 1 also parses to that same f64,
+/// so accepting it would readmit a silent truncation.
+const INT_BOUND: f64 = 9_007_199_254_740_992.0;
+
+/// Strictly decode an unsigned integer field: non-numbers,
+/// non-integral values, negatives, and values at or beyond 2^53 are
+/// errors, never silent `as` truncations.
+fn num_u64(v: &Json, what: &str) -> Result<u64> {
+    let f = v.as_f64().ok_or_else(|| anyhow!("bad {what}: not a number"))?;
+    if !f.is_finite() || f.fract() != 0.0 || !(0.0..INT_BOUND).contains(&f) {
+        bail!("bad {what}: {f} is not an unsigned integer");
+    }
+    Ok(f as u64)
+}
+
+fn num_u32(v: &Json, what: &str) -> Result<u32> {
+    let n = num_u64(v, what)?;
+    u32::try_from(n).map_err(|_| anyhow!("bad {what}: {n} out of u32 range"))
+}
+
+fn num_usize(v: &Json, what: &str) -> Result<usize> {
+    let n = num_u64(v, what)?;
+    usize::try_from(n).map_err(|_| anyhow!("bad {what}: {n} out of usize range"))
+}
+
+/// Decode one `f32` from its wire form (IEEE-754 bit pattern).
+fn num_f32_bits(v: &Json, what: &str) -> Result<f32> {
+    Ok(f32::from_bits(num_u32(v, what)?))
+}
+
 /// Decode a tuner message from its wire line.
 pub fn decode_tuner_msg(line: &str) -> Result<TunerMsg> {
     let v = Json::parse(line.trim())?;
     let op = field(&v, "op")?
         .as_str()
         .ok_or_else(|| anyhow!("op not a string"))?;
-    let clock = field(&v, "clock")?
-        .as_f64()
-        .ok_or_else(|| anyhow!("bad clock"))? as u64;
+    let clock = num_u64(field(&v, "clock")?, "clock")?;
     match op {
         "fork" => {
-            let branch_id = field(&v, "branch")?
-                .as_f64()
-                .ok_or_else(|| anyhow!("bad branch"))? as u32;
+            let branch_id = num_u32(field(&v, "branch")?, "branch")?;
             let parent_branch_id = match field(&v, "parent")? {
                 Json::Null => None,
-                p => Some(p.as_f64().ok_or_else(|| anyhow!("bad parent"))? as u32),
+                p => Some(num_u32(p, "parent")?),
             };
             let tunable = TunableSetting::new(
                 field(&v, "tunable")?
@@ -104,9 +157,7 @@ pub fn decode_tuner_msg(line: &str) -> Result<TunerMsg> {
             })
         }
         "free" | "schedule" => {
-            let branch_id = field(&v, "branch")?
-                .as_f64()
-                .ok_or_else(|| anyhow!("bad branch"))? as u32;
+            let branch_id = num_u32(field(&v, "branch")?, "branch")?;
             Ok(if op == "free" {
                 TunerMsg::FreeBranch { clock, branch_id }
             } else {
@@ -122,9 +173,7 @@ pub fn decode_system_msg(line: &str) -> Result<SystemMsg> {
     let v = Json::parse(line.trim())?;
     match field(&v, "op")?.as_str() {
         Some("progress") => Ok(SystemMsg::ReportProgress {
-            clock: field(&v, "clock")?
-                .as_f64()
-                .ok_or_else(|| anyhow!("bad clock"))? as u64,
+            clock: num_u64(field(&v, "clock")?, "clock")?,
             progress: field(&v, "progress")?
                 .as_f64()
                 .ok_or_else(|| anyhow!("bad progress"))?,
@@ -133,6 +182,424 @@ pub fn decode_system_msg(line: &str) -> Result<SystemMsg> {
                 .ok_or_else(|| anyhow!("bad time"))?,
         }),
         other => bail!("unknown op {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data plane: parameter-server RPC frames
+// ---------------------------------------------------------------------------
+
+/// One request from a remote training process to a shard server.
+///
+/// `ForkBranch`/`FreeBranch` are broadcast by the client to **every**
+/// shard server (branch index replication), exactly like the control
+/// plane broadcasts branch ops to every worker; row ops are routed to
+/// the one server owning the row's global shard.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PsRequest {
+    /// Handshake: which global shards does this server own, and with
+    /// which optimizer was its engine built?
+    Hello,
+    /// Install a fresh row (root-branch model initialization).
+    InsertRow {
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        data: Vec<f32>,
+    },
+    /// Read one row; `with_accum` additionally returns the
+    /// AdaRevision grad-accumulator snapshot (slot 1).
+    ReadRow {
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        with_accum: bool,
+    },
+    /// Apply one row update (the AdaRevision path, which carries the
+    /// `z_old` snapshot read together with the row).
+    ApplyUpdate {
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        grad: Vec<f32>,
+        hyper: Hyper,
+        z_old: Option<Vec<f32>>,
+    },
+    /// Apply this server's group of a routed batch under the engine's
+    /// batched path (one lock acquisition per local shard).
+    ApplyBatch {
+        branch: BranchId,
+        hyper: Hyper,
+        updates: Vec<(TableId, RowKey, Vec<f32>)>,
+    },
+    /// Fork `child` from `parent` on this server's shards.
+    ForkBranch { child: BranchId, parent: BranchId },
+    /// Free `branch` on this server's shards (last-owner buffers are
+    /// reclaimed into the server-local pools).
+    FreeBranch { branch: BranchId },
+    /// Probe the server's concurrency/pool/branch counters.
+    ServerStats,
+    /// Ask the server process to exit after acknowledging.
+    Shutdown,
+}
+
+/// Per-shard-server statistics returned by [`PsRequest::ServerStats`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PsStats {
+    pub server: ServerStats,
+    pub pool: PoolStats,
+    pub forks: u64,
+    pub peak_branches: usize,
+    /// Live branches with their server-local row counts, sorted by id.
+    pub branches: Vec<(BranchId, usize)>,
+}
+
+/// One reply from a shard server.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PsReply {
+    Hello {
+        shard_begin: usize,
+        shard_end: usize,
+        optimizer: String,
+    },
+    Ok,
+    Row {
+        data: Option<Vec<f32>>,
+        accum: Option<Vec<f32>>,
+    },
+    Stats(PsStats),
+    Err { message: String },
+}
+
+/// Escape a string for a JSON string literal (the in-tree parser
+/// understands exactly these escapes).
+fn push_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Append an f32 slice as a JSON array of bit patterns.
+fn push_f32_bits(out: &mut String, data: &[f32]) {
+    out.push('[');
+    for (i, v) in data.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{}", v.to_bits());
+    }
+    out.push(']');
+}
+
+fn push_opt_f32_bits(out: &mut String, data: Option<&[f32]>) {
+    match data {
+        None => out.push_str("null"),
+        Some(d) => push_f32_bits(out, d),
+    }
+}
+
+fn f32_bits_array(v: &Json, what: &str) -> Result<Vec<f32>> {
+    v.as_array()
+        .ok_or_else(|| anyhow!("bad {what}: not an array"))?
+        .iter()
+        .map(|x| num_f32_bits(x, what))
+        .collect()
+}
+
+fn opt_f32_bits_array(v: &Json, what: &str) -> Result<Option<Vec<f32>>> {
+    match v {
+        Json::Null => Ok(None),
+        v => Ok(Some(f32_bits_array(v, what)?)),
+    }
+}
+
+fn push_hyper(out: &mut String, hyper: Hyper) {
+    let _ = write!(
+        out,
+        "\"lr\":{},\"momentum\":{}",
+        hyper.lr.to_bits(),
+        hyper.momentum.to_bits()
+    );
+}
+
+fn hyper_of(v: &Json) -> Result<Hyper> {
+    Ok(Hyper {
+        lr: num_f32_bits(field(v, "lr")?, "lr")?,
+        momentum: num_f32_bits(field(v, "momentum")?, "momentum")?,
+    })
+}
+
+/// Encode one PS request as a single JSON frame.
+pub fn encode_ps_request(req: &PsRequest) -> String {
+    let mut out = String::new();
+    match req {
+        PsRequest::Hello => out.push_str("{\"op\":\"hello\"}"),
+        PsRequest::InsertRow {
+            branch,
+            table,
+            key,
+            data,
+        } => {
+            let _ = write!(
+                out,
+                "{{\"op\":\"insert\",\"branch\":{branch},\"table\":{table},\"key\":{key},\"data\":"
+            );
+            push_f32_bits(&mut out, data);
+            out.push('}');
+        }
+        PsRequest::ReadRow {
+            branch,
+            table,
+            key,
+            with_accum,
+        } => {
+            let _ = write!(
+                out,
+                "{{\"op\":\"read\",\"branch\":{branch},\"table\":{table},\"key\":{key},\"accum\":{with_accum}}}"
+            );
+        }
+        PsRequest::ApplyUpdate {
+            branch,
+            table,
+            key,
+            grad,
+            hyper,
+            z_old,
+        } => {
+            let _ = write!(
+                out,
+                "{{\"op\":\"update\",\"branch\":{branch},\"table\":{table},\"key\":{key},"
+            );
+            push_hyper(&mut out, *hyper);
+            out.push_str(",\"grad\":");
+            push_f32_bits(&mut out, grad);
+            out.push_str(",\"z_old\":");
+            push_opt_f32_bits(&mut out, z_old.as_deref());
+            out.push('}');
+        }
+        PsRequest::ApplyBatch {
+            branch,
+            hyper,
+            updates,
+        } => {
+            let _ = write!(out, "{{\"op\":\"batch\",\"branch\":{branch},");
+            push_hyper(&mut out, *hyper);
+            out.push_str(",\"updates\":[");
+            for (i, (table, key, grad)) in updates.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "[{table},{key},");
+                push_f32_bits(&mut out, grad);
+                out.push(']');
+            }
+            out.push_str("]}");
+        }
+        PsRequest::ForkBranch { child, parent } => {
+            let _ = write!(out, "{{\"op\":\"fork\",\"child\":{child},\"parent\":{parent}}}");
+        }
+        PsRequest::FreeBranch { branch } => {
+            let _ = write!(out, "{{\"op\":\"free\",\"branch\":{branch}}}");
+        }
+        PsRequest::ServerStats => out.push_str("{\"op\":\"stats\"}"),
+        PsRequest::Shutdown => out.push_str("{\"op\":\"shutdown\"}"),
+    }
+    out
+}
+
+/// Decode one PS request frame.
+pub fn decode_ps_request(line: &str) -> Result<PsRequest> {
+    let v = Json::parse(line.trim())?;
+    let op = field(&v, "op")?
+        .as_str()
+        .ok_or_else(|| anyhow!("op not a string"))?;
+    match op {
+        "hello" => Ok(PsRequest::Hello),
+        "insert" => Ok(PsRequest::InsertRow {
+            branch: num_u32(field(&v, "branch")?, "branch")?,
+            table: num_u32(field(&v, "table")?, "table")?,
+            key: num_u64(field(&v, "key")?, "key")?,
+            data: f32_bits_array(field(&v, "data")?, "data")?,
+        }),
+        "read" => Ok(PsRequest::ReadRow {
+            branch: num_u32(field(&v, "branch")?, "branch")?,
+            table: num_u32(field(&v, "table")?, "table")?,
+            key: num_u64(field(&v, "key")?, "key")?,
+            with_accum: match field(&v, "accum")? {
+                Json::Bool(b) => *b,
+                _ => bail!("bad accum: not a bool"),
+            },
+        }),
+        "update" => Ok(PsRequest::ApplyUpdate {
+            branch: num_u32(field(&v, "branch")?, "branch")?,
+            table: num_u32(field(&v, "table")?, "table")?,
+            key: num_u64(field(&v, "key")?, "key")?,
+            grad: f32_bits_array(field(&v, "grad")?, "grad")?,
+            hyper: hyper_of(&v)?,
+            z_old: opt_f32_bits_array(field(&v, "z_old")?, "z_old")?,
+        }),
+        "batch" => {
+            let updates = field(&v, "updates")?
+                .as_array()
+                .ok_or_else(|| anyhow!("bad updates: not an array"))?
+                .iter()
+                .map(|u| {
+                    let u = u.as_array().ok_or_else(|| anyhow!("bad update triple"))?;
+                    if u.len() != 3 {
+                        bail!("bad update triple: len {}", u.len());
+                    }
+                    Ok((
+                        num_u32(&u[0], "table")?,
+                        num_u64(&u[1], "key")?,
+                        f32_bits_array(&u[2], "grad")?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(PsRequest::ApplyBatch {
+                branch: num_u32(field(&v, "branch")?, "branch")?,
+                hyper: hyper_of(&v)?,
+                updates,
+            })
+        }
+        "fork" => Ok(PsRequest::ForkBranch {
+            child: num_u32(field(&v, "child")?, "child")?,
+            parent: num_u32(field(&v, "parent")?, "parent")?,
+        }),
+        "free" => Ok(PsRequest::FreeBranch {
+            branch: num_u32(field(&v, "branch")?, "branch")?,
+        }),
+        "stats" => Ok(PsRequest::ServerStats),
+        "shutdown" => Ok(PsRequest::Shutdown),
+        other => bail!("unknown ps request op {other}"),
+    }
+}
+
+/// Encode one PS reply as a single JSON frame.
+pub fn encode_ps_reply(reply: &PsReply) -> String {
+    let mut out = String::new();
+    match reply {
+        PsReply::Hello {
+            shard_begin,
+            shard_end,
+            optimizer,
+        } => {
+            let _ = write!(
+                out,
+                "{{\"op\":\"hello\",\"begin\":{shard_begin},\"end\":{shard_end},\"optimizer\":"
+            );
+            push_json_str(&mut out, optimizer);
+            out.push('}');
+        }
+        PsReply::Ok => out.push_str("{\"op\":\"ok\"}"),
+        PsReply::Row { data, accum } => {
+            out.push_str("{\"op\":\"row\",\"data\":");
+            push_opt_f32_bits(&mut out, data.as_deref());
+            out.push_str(",\"accum\":");
+            push_opt_f32_bits(&mut out, accum.as_deref());
+            out.push('}');
+        }
+        PsReply::Stats(s) => {
+            let _ = write!(
+                out,
+                "{{\"op\":\"stats\",\"contended\":{},\"batch_calls\":{},\"batched_rows\":{},\
+                 \"reused\":{},\"allocated\":{},\"idle\":{},\"idle_len\":{},\
+                 \"forks\":{},\"peak\":{},\"branches\":[",
+                s.server.shard_lock_contentions,
+                s.server.batch_calls,
+                s.server.batched_rows,
+                s.pool.reused,
+                s.pool.allocated,
+                s.pool.idle,
+                s.pool.idle_len,
+                s.forks,
+                s.peak_branches,
+            );
+            for (i, (id, rows)) in s.branches.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "[{id},{rows}]");
+            }
+            out.push_str("]}");
+        }
+        PsReply::Err { message } => {
+            out.push_str("{\"op\":\"err\",\"msg\":");
+            push_json_str(&mut out, message);
+            out.push('}');
+        }
+    }
+    out
+}
+
+/// Decode one PS reply frame.
+pub fn decode_ps_reply(line: &str) -> Result<PsReply> {
+    let v = Json::parse(line.trim())?;
+    let op = field(&v, "op")?
+        .as_str()
+        .ok_or_else(|| anyhow!("op not a string"))?;
+    match op {
+        "hello" => Ok(PsReply::Hello {
+            shard_begin: num_usize(field(&v, "begin")?, "begin")?,
+            shard_end: num_usize(field(&v, "end")?, "end")?,
+            optimizer: field(&v, "optimizer")?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad optimizer"))?
+                .to_string(),
+        }),
+        "ok" => Ok(PsReply::Ok),
+        "row" => Ok(PsReply::Row {
+            data: opt_f32_bits_array(field(&v, "data")?, "data")?,
+            accum: opt_f32_bits_array(field(&v, "accum")?, "accum")?,
+        }),
+        "stats" => {
+            let branches = field(&v, "branches")?
+                .as_array()
+                .ok_or_else(|| anyhow!("bad branches"))?
+                .iter()
+                .map(|b| {
+                    let b = b.as_array().ok_or_else(|| anyhow!("bad branch pair"))?;
+                    if b.len() != 2 {
+                        bail!("bad branch pair: len {}", b.len());
+                    }
+                    Ok((num_u32(&b[0], "branch")?, num_usize(&b[1], "rows")?))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(PsReply::Stats(PsStats {
+                server: ServerStats {
+                    shard_lock_contentions: num_u64(field(&v, "contended")?, "contended")?,
+                    batch_calls: num_u64(field(&v, "batch_calls")?, "batch_calls")?,
+                    batched_rows: num_u64(field(&v, "batched_rows")?, "batched_rows")?,
+                },
+                pool: PoolStats {
+                    reused: num_u64(field(&v, "reused")?, "reused")?,
+                    allocated: num_u64(field(&v, "allocated")?, "allocated")?,
+                    idle: num_u64(field(&v, "idle")?, "idle")?,
+                    idle_len: num_u64(field(&v, "idle_len")?, "idle_len")?,
+                },
+                forks: num_u64(field(&v, "forks")?, "forks")?,
+                peak_branches: num_usize(field(&v, "peak")?, "peak")?,
+                branches,
+            }))
+        }
+        "err" => Ok(PsReply::Err {
+            message: field(&v, "msg")?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad msg"))?
+                .to_string(),
+        }),
+        other => bail!("unknown ps reply op {other}"),
     }
 }
 
@@ -189,6 +656,176 @@ mod tests {
         assert!(decode_tuner_msg("{\"op\":\"dance\",\"clock\":0}").is_err());
         assert!(decode_tuner_msg("{\"op\":\"fork\",\"clock\":0}").is_err());
         assert!(decode_system_msg("{\"op\":\"progress\"}").is_err());
+    }
+
+    #[test]
+    fn decode_rejects_non_integral_and_out_of_range_ids() {
+        // Regression: these used to be accepted via silent `as` casts.
+        assert!(decode_tuner_msg("{\"op\":\"free\",\"clock\":1.5,\"branch\":1}").is_err());
+        assert!(decode_tuner_msg("{\"op\":\"free\",\"clock\":-1,\"branch\":1}").is_err());
+        assert!(decode_tuner_msg("{\"op\":\"free\",\"clock\":0,\"branch\":2.5}").is_err());
+        assert!(decode_tuner_msg("{\"op\":\"free\",\"clock\":0,\"branch\":-3}").is_err());
+        // u32 overflow: 2^32 is a valid JSON integer but not a BranchId
+        assert!(decode_tuner_msg("{\"op\":\"free\",\"clock\":0,\"branch\":4294967296}").is_err());
+        // at or beyond 2^53 a u64 clock cannot round-trip through JSON
+        // (2^53 + 1 parses to the same f64 as 2^53, so 2^53 itself is
+        // rejected too — accepting it would readmit silent truncation)
+        assert!(
+            decode_tuner_msg("{\"op\":\"free\",\"clock\":9007199254740992,\"branch\":1}").is_err()
+        );
+        assert!(
+            decode_tuner_msg("{\"op\":\"free\",\"clock\":9007199254740993,\"branch\":1}").is_err()
+        );
+        assert!(decode_tuner_msg("{\"op\":\"free\",\"clock\":\"7\",\"branch\":1}").is_err());
+        assert!(decode_system_msg(
+            "{\"op\":\"progress\",\"clock\":0.5,\"progress\":1.0,\"time\":1.0}"
+        )
+        .is_err());
+        // the largest exactly-representable integer still decodes
+        let ok = decode_tuner_msg("{\"op\":\"free\",\"clock\":9007199254740991,\"branch\":1}");
+        assert_eq!(ok.unwrap().clock(), (1u64 << 53) - 1);
+    }
+
+    fn roundtrip_req(req: &PsRequest) {
+        let line = encode_ps_request(req);
+        let back = decode_ps_request(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(req, &back, "wire: {line}");
+    }
+
+    fn roundtrip_reply(reply: &PsReply) {
+        let line = encode_ps_reply(reply);
+        let back = decode_ps_reply(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(reply, &back, "wire: {line}");
+    }
+
+    #[test]
+    fn ps_request_frames_roundtrip() {
+        let hyper = Hyper { lr: 0.1, momentum: 0.9 };
+        roundtrip_req(&PsRequest::Hello);
+        // NaN payloads are covered by f32_bit_patterns_survive_bit_exact
+        // (NaN != NaN breaks the PartialEq comparison used here).
+        roundtrip_req(&PsRequest::InsertRow {
+            branch: 0,
+            table: 1,
+            key: 7,
+            data: vec![1.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, 1.0e-45],
+        });
+        roundtrip_req(&PsRequest::ReadRow {
+            branch: 3,
+            table: 0,
+            key: u64::MAX >> 12,
+            with_accum: true,
+        });
+        roundtrip_req(&PsRequest::ApplyUpdate {
+            branch: 1,
+            table: 0,
+            key: 5,
+            grad: vec![0.25, -1.5],
+            hyper,
+            z_old: Some(vec![2.0, 3.0]),
+        });
+        roundtrip_req(&PsRequest::ApplyUpdate {
+            branch: 1,
+            table: 0,
+            key: 5,
+            grad: vec![],
+            hyper,
+            z_old: None,
+        });
+        roundtrip_req(&PsRequest::ApplyBatch {
+            branch: 2,
+            hyper,
+            updates: vec![(0, 1, vec![1.0]), (1, 9, vec![-2.5, 0.125])],
+        });
+        roundtrip_req(&PsRequest::ForkBranch { child: 4, parent: 1 });
+        roundtrip_req(&PsRequest::FreeBranch { branch: 4 });
+        roundtrip_req(&PsRequest::ServerStats);
+        roundtrip_req(&PsRequest::Shutdown);
+    }
+
+    #[test]
+    fn ps_reply_frames_roundtrip() {
+        roundtrip_reply(&PsReply::Hello {
+            shard_begin: 2,
+            shard_end: 4,
+            optimizer: "adarevision".into(),
+        });
+        roundtrip_reply(&PsReply::Ok);
+        roundtrip_reply(&PsReply::Row {
+            data: Some(vec![1.0, f32::NEG_INFINITY, -0.0]),
+            accum: None,
+        });
+        roundtrip_reply(&PsReply::Row { data: None, accum: None });
+        roundtrip_reply(&PsReply::Stats(PsStats {
+            server: ServerStats {
+                shard_lock_contentions: 3,
+                batch_calls: 10,
+                batched_rows: 640,
+            },
+            pool: PoolStats {
+                reused: 1,
+                allocated: 2,
+                idle: 3,
+                idle_len: 48,
+            },
+            forks: 7,
+            peak_branches: 3,
+            branches: vec![(0, 100), (5, 40)],
+        }));
+        roundtrip_reply(&PsReply::Err {
+            message: "row (0,99) missing in branch 7\nwith \"quotes\"".into(),
+        });
+    }
+
+    #[test]
+    fn f32_bit_patterns_survive_bit_exact() {
+        // NaN payloads included: the bit-pattern encoding must return
+        // the identical u32 for every value.
+        let weird = [
+            f32::NAN,
+            f32::from_bits(0x7fc0_dead),
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -0.0f32,
+            f32::MIN_POSITIVE,
+            1.0e-45,
+            f32::MAX,
+        ];
+        let req = PsRequest::InsertRow {
+            branch: 0,
+            table: 0,
+            key: 0,
+            data: weird.to_vec(),
+        };
+        let back = decode_ps_request(&encode_ps_request(&req)).unwrap();
+        let PsRequest::InsertRow { data, .. } = back else {
+            panic!("wrong op")
+        };
+        for (a, b) in weird.iter().zip(&data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn ps_decode_rejects_garbage() {
+        assert!(decode_ps_request("not json").is_err());
+        assert!(decode_ps_request("{\"op\":\"dance\"}").is_err());
+        assert!(decode_ps_request("{\"op\":\"insert\",\"branch\":0}").is_err());
+        // bit patterns must be u32-range integers
+        assert!(
+            decode_ps_request(
+                "{\"op\":\"insert\",\"branch\":0,\"table\":0,\"key\":0,\"data\":[1.5]}"
+            )
+            .is_err()
+        );
+        assert!(
+            decode_ps_request(
+                "{\"op\":\"insert\",\"branch\":0,\"table\":0,\"key\":0,\"data\":[4294967296]}"
+            )
+            .is_err()
+        );
+        assert!(decode_ps_reply("{\"op\":\"row\"}").is_err());
+        assert!(decode_ps_reply("{\"op\":\"stats\"}").is_err());
     }
 
     #[test]

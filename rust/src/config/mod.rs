@@ -9,8 +9,11 @@ use anyhow::{bail, Result};
 use crate::apps::dnn::{DnnConfig, DnnSystem};
 use crate::apps::mf::{MfConfig, MfSystem};
 use crate::apps::sim::{SimProfile, SimSystem};
+use crate::comm::socket::{Framing, parse_server_list};
 use crate::comm::{BranchId, BranchType, Clock};
 use crate::optim::OptimizerKind;
+use crate::ps::PsHandle;
+use crate::ps::remote::RemoteParamServer;
 use crate::runtime::Runtime;
 use crate::searcher::SearcherKind;
 use crate::training::{Progress, SnapshotStats, TrainingSystem};
@@ -35,6 +38,12 @@ pub struct ExperimentConfig {
     pub retune: bool,
     /// Loss-threshold convergence (MF); accuracy plateau otherwise.
     pub loss_threshold: Option<f64>,
+    /// Parameter-store deployment: `None`/`"local"` for the in-process
+    /// server, or a shard-server list `remote://addr1,addr2,...` —
+    /// every address one `mltuner serve` process (see `ps/remote`).
+    pub ps: Option<String>,
+    /// Socket framing for the remote store: "line" | "length".
+    pub ps_framing: String,
     pub dnn: DnnSection,
     pub mf: MfSection,
 }
@@ -83,6 +92,8 @@ impl Default for ExperimentConfig {
             max_epochs: 200,
             retune: true,
             loss_threshold: None,
+            ps: None,
+            ps_framing: "line".into(),
             dnn: DnnSection::default(),
             mf: MfSection::default(),
         }
@@ -122,6 +133,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_f64("loss_threshold") {
             cfg.loss_threshold = Some(v);
+        }
+        if let Some(v) = doc.get_str("ps") {
+            cfg.ps = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_str("ps_framing") {
+            cfg.ps_framing = v.to_string();
         }
         if let Some(v) = doc.get_str("dnn.model") {
             cfg.dnn.model = v.to_string();
@@ -166,10 +183,41 @@ impl ExperimentConfig {
             .ok_or_else(|| anyhow::anyhow!("unknown searcher {}", self.searcher))
     }
 
+    /// Connect the remote parameter store when this config names one
+    /// (`ps = "remote://addr1,addr2"`); `None` means in-process.  The
+    /// servers must have been started with this config's optimizer —
+    /// the rule is applied server-side, so a silent mismatch would
+    /// train a different experiment than the one configured.
+    fn remote_store(&self) -> Result<Option<PsHandle>> {
+        let Some(url) = self.ps.as_deref() else {
+            return Ok(None);
+        };
+        if url == "local" {
+            return Ok(None);
+        }
+        let specs = parse_server_list(url)?;
+        let framing = Framing::parse(&self.ps_framing)?;
+        let remote = RemoteParamServer::connect(&specs, framing)?;
+        let expected = self.optimizer_kind()?;
+        if remote.optimizer_kind() != expected {
+            bail!(
+                "shard servers run optimizer {} but the config says {}; \
+                 restart `mltuner serve` with --optimizer {}",
+                remote.optimizer_kind().name(),
+                expected.name(),
+                expected.name()
+            );
+        }
+        Ok(Some(PsHandle::Remote(remote)))
+    }
+
     /// Build the training system described by this config.
     pub fn build_system(&self) -> Result<(AnySystem, TunableSpace)> {
         match self.app.as_str() {
             "sim" => {
+                if self.ps.is_some() {
+                    bail!("the sim app has no parameter server; drop the `ps` setting");
+                }
                 let name = self.profile.as_deref().unwrap_or("alexnet_cifar10");
                 let profile = SimProfile::by_name(name)
                     .ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
@@ -181,19 +229,19 @@ impl ExperimentConfig {
             "dnn" => {
                 let d = &self.dnn;
                 let runtime = Runtime::load(&d.artifacts_dir)?;
-                let sys = DnnSystem::new(
-                    DnnConfig {
-                        model: d.model.clone(),
-                        variant: d.variant.clone(),
-                        num_workers: self.workers,
-                        seed: self.seed,
-                        train_examples: d.train_examples,
-                        val_examples: d.val_examples,
-                        spread: d.spread,
-                    },
-                    runtime,
-                    self.optimizer_kind()?,
-                )?;
+                let cfg = DnnConfig {
+                    model: d.model.clone(),
+                    variant: d.variant.clone(),
+                    num_workers: self.workers,
+                    seed: self.seed,
+                    train_examples: d.train_examples,
+                    val_examples: d.val_examples,
+                    spread: d.spread,
+                };
+                let sys = match self.remote_store()? {
+                    Some(store) => DnnSystem::with_store(cfg, runtime, store)?,
+                    None => DnnSystem::new(cfg, runtime, self.optimizer_kind()?)?,
+                };
                 let space = sys.space().clone();
                 Ok((AnySystem::Dnn(Box::new(sys)), space))
             }
@@ -217,7 +265,10 @@ impl ExperimentConfig {
                 if let Some(n) = m.n_ratings {
                     cfg.n_ratings = n;
                 }
-                let sys = MfSystem::new(cfg);
+                let sys = match self.remote_store()? {
+                    Some(store) => MfSystem::with_store(cfg, store)?,
+                    None => MfSystem::new(cfg),
+                };
                 let space = sys.space().clone();
                 Ok((AnySystem::Mf(Box::new(sys)), space))
             }
@@ -367,5 +418,60 @@ mod tests {
     fn bad_app_rejected() {
         let cfg = ExperimentConfig::from_toml(r#"app = "nope""#).unwrap();
         assert!(cfg.build_system().is_err());
+    }
+
+    #[test]
+    fn ps_field_parses_and_sim_rejects_it() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            app = "sim"
+            ps = "remote://127.0.0.1:5001,127.0.0.1:5002"
+            ps_framing = "length"
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.ps.as_deref(), Some("remote://127.0.0.1:5001,127.0.0.1:5002"));
+        assert_eq!(cfg.ps_framing, "length");
+        let err = cfg.build_system().unwrap_err();
+        assert!(err.to_string().contains("no parameter server"), "{err}");
+        // explicit "local" is the in-process server
+        let cfg = ExperimentConfig::from_toml(r#"app = "mf""#).unwrap();
+        let mut cfg = cfg;
+        cfg.ps = Some("local".into());
+        cfg.mf.users = Some(10);
+        cfg.mf.items = Some(8);
+        cfg.mf.rank = Some(2);
+        cfg.mf.n_ratings = Some(50);
+        assert!(cfg.build_system().is_ok());
+    }
+
+    #[test]
+    fn build_system_connects_a_remote_mf_store() {
+        use crate::comm::socket::Framing;
+        use crate::ps::remote::{spawn_local_server, ShardRange};
+        let kind = OptimizerKind::AdaRevision;
+        let (a, ha) = spawn_local_server(ShardRange { begin: 0, end: 1 }, kind, Framing::Line)
+            .unwrap();
+        let (b, hb) = spawn_local_server(ShardRange { begin: 1, end: 2 }, kind, Framing::Line)
+            .unwrap();
+        let cfg = ExperimentConfig::from_toml(&format!(
+            "app = \"mf\"\noptimizer = \"adarevision\"\nps = \"remote://{a},{b}\"\n\
+             [mf]\nusers = 12\nitems = 10\nrank = 2\nn_ratings = 60\n"
+        ))
+        .unwrap();
+        let (sys, space) = cfg.build_system().unwrap();
+        assert_eq!(sys.system_name(), "mf");
+        assert_eq!(space.dim(), 1);
+        // root model rows crossed the wire during construction
+        let AnySystem::Mf(sys) = sys else { panic!("wrong system") };
+        use crate::ps::ParamStore;
+        assert_eq!(sys.store().branch_row_count(0).unwrap(), 22);
+        match sys.store() {
+            PsHandle::Remote(remote) => remote.shutdown_all().unwrap(),
+            PsHandle::Local(_) => panic!("expected a remote store"),
+        }
+        drop(sys);
+        ha.join().unwrap().unwrap();
+        hb.join().unwrap().unwrap();
     }
 }

@@ -3,6 +3,9 @@
 //! Subcommands:
 //! * `tune`     — run MLtuner-managed training from a TOML config (or
 //!                `--app`/`--profile` flags), print the report, dump CSV.
+//! * `serve`    — run one parameter-server shard process (distributed
+//!                deployments: the `tune` coordinator connects with
+//!                `--ps remote://...`).
 //! * `baseline` — run the Spearmint / Hyperband baseline tuners (§5.2).
 //! * `train`    — train a fixed hard-coded tunable setting (no tuner).
 //! * `info`     — show the artifact manifest and available profiles.
@@ -11,14 +14,22 @@
 //! ```text
 //! mltuner tune --app sim --profile inception_bn --seed 1 --csv run.csv
 //! mltuner tune --config configs/dnn_quickstart.toml
+//! mltuner serve --shards 0..2 --listen 127.0.0.1:5001 --optimizer adarevision
+//! mltuner serve --shards 2..4 --listen 127.0.0.1:5002 --optimizer adarevision
+//! mltuner tune --app mf --ps remote://127.0.0.1:5001,127.0.0.1:5002
 //! mltuner baseline --kind hyperband --profile alexnet_cifar10
 //! mltuner train --profile googlenet --lr 0.03 --momentum 0.9
 //! ```
 
+use std::io::Write as _;
+
 use anyhow::{bail, Result};
 
 use mltuner::baselines::{HyperbandDriver, SpearmintDriver};
+use mltuner::comm::socket::{Framing, PsListener, SocketSpec};
 use mltuner::config::ExperimentConfig;
+use mltuner::optim::OptimizerKind;
+use mltuner::ps::remote::{ShardRange, ShardServer};
 use mltuner::runtime::Runtime;
 use mltuner::tuner::MLtuner;
 use mltuner::util::cli::Args;
@@ -26,10 +37,13 @@ use mltuner::util::cli::Args;
 const USAGE: &str = "\
 mltuner — automatic machine learning tuning (paper reproduction)
 
-USAGE: mltuner <tune|baseline|train|info> [--flags]
+USAGE: mltuner <tune|serve|baseline|train|info> [--flags]
 
 tune:     --config <file.toml> | --app sim --profile <name>
           --seed N --searcher hyperopt|random|grid|spearmint --csv out.csv
+          --ps remote://host:port,host:port --ps-framing line|length
+serve:    --shards a..b --listen host:port|unix:/path
+          --optimizer sgd|adam|adarevision|... --framing line|length
 baseline: --kind spearmint|hyperband --profile <name> --seed N
           --budget <virtual seconds> --csv out.csv
 train:    --profile <name> --lr F --momentum F --seed N --max-epochs N
@@ -41,6 +55,7 @@ fn main() -> Result<()> {
     let cmd = args.positional.first().map(String::as_str).unwrap_or("");
     match cmd {
         "tune" => cmd_tune(&args),
+        "serve" => cmd_serve(&args),
         "baseline" => cmd_baseline(&args),
         "train" => cmd_train(&args),
         "info" => cmd_info(&args),
@@ -55,8 +70,31 @@ fn main() -> Result<()> {
     }
 }
 
+/// One shard-server process: serve a global shard range until a
+/// client sends Shutdown.  The resolved listen address (ephemeral
+/// ports included) is printed on the first stdout line so orchestration
+/// — and the multi-process CI harness — can parse it.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let shards = ShardRange::parse(args.get_or("shards", "0..1"))?;
+    let listen = SocketSpec::parse(args.get_or("listen", "127.0.0.1:0"))?;
+    let optimizer = {
+        let name = args.get_or("optimizer", "sgd");
+        OptimizerKind::parse(name).ok_or_else(|| anyhow::anyhow!("unknown optimizer {name}"))?
+    };
+    let framing = Framing::parse(args.get_or("framing", "line"))?;
+    let listener = PsListener::bind(&listen)?;
+    let local = listener.local_spec()?;
+    println!(
+        "mltuner serve: listening on {local} shards {shards} optimizer {} framing {}",
+        optimizer.name(),
+        framing.name()
+    );
+    std::io::stdout().flush()?;
+    ShardServer::new(shards, optimizer).serve(listener, framing)
+}
+
 fn cmd_tune(args: &Args) -> Result<()> {
-    let cfg = match args.get("config") {
+    let mut cfg = match args.get("config") {
         Some(path) => ExperimentConfig::from_toml(&std::fs::read_to_string(path)?)?,
         None => ExperimentConfig::from_toml(&format!(
             "app = \"{}\"\nprofile = \"{}\"\nseed = {}\nsearcher = \"{}\"\n",
@@ -66,6 +104,13 @@ fn cmd_tune(args: &Args) -> Result<()> {
             args.get_or("searcher", "hyperopt"),
         ))?,
     };
+    // deployment flags override the config file
+    if let Some(ps) = args.get("ps") {
+        cfg.ps = Some(ps.to_string());
+    }
+    if let Some(f) = args.get("ps-framing") {
+        cfg.ps_framing = f.to_string();
+    }
     let (system, space) = cfg.build_system()?;
     let tuner_cfg = cfg.tuner_config(space.clone())?;
     let mut tuner = MLtuner::new(system, tuner_cfg);

@@ -74,6 +74,7 @@
 
 pub mod cache;
 pub mod pool;
+pub mod remote;
 pub mod storage;
 pub mod thread_cache;
 
@@ -84,9 +85,10 @@ use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuar
 use anyhow::{anyhow, bail, Result};
 
 use crate::comm::BranchId;
-use crate::optim::{Hyper, Optimizer};
+use crate::optim::{Hyper, Optimizer, OptimizerKind};
 
 use pool::{MemoryPool, PoolStats};
+use remote::RemoteParamServer;
 use storage::{Entry, RowKey, Shard, TableId};
 
 /// Branch fork/free fan-out runs one thread per shard at this many
@@ -193,12 +195,21 @@ fn splitmix64(mut h: u64) -> u64 {
 }
 
 /// Deterministic shard router: mix the table into the key, then
-/// avalanche.  Pure function of `(table, key, n)` so every thread
-/// routes identically without touching shared state.
+/// avalanche.  Pure function of `(table, key, n)` so every thread —
+/// and every remote client — routes identically without touching
+/// shared state.  Public as [`route_shard`]: the distributed client
+/// routes `(table, key)` to a *global* shard id with the same
+/// function, then maps the shard id to the server owning it.
 #[inline]
 fn route(table: TableId, key: RowKey, n: usize) -> usize {
     let h = splitmix64(key ^ (table as u64).wrapping_mul(0xA24B_AED4_963E_E407));
     (h % n as u64) as usize
+}
+
+/// The shard router as a pure public function (see [`route`]).
+#[inline]
+pub fn route_shard(table: TableId, key: RowKey, num_shards: usize) -> usize {
+    route(table, key, num_shards)
 }
 
 /// Sharded, branch-versioned, **concurrent** parameter server.
@@ -227,6 +238,16 @@ impl ParamServer {
 
     pub fn optimizer(&self) -> &Optimizer {
         &self.optimizer
+    }
+
+    /// Register `branch` in the control plane with zero rows if it is
+    /// not live yet.  A shard server whose shard subset happens to hold
+    /// no rows of the root branch still needs the branch to *exist* so
+    /// replicated fork/free ops succeed there (see [`remote`]).
+    pub fn ensure_branch(&self, branch: BranchId) {
+        let mut ctl = lock_control(&self.control);
+        ctl.branch_rows.entry(branch).or_insert(0);
+        ctl.peak_branches = ctl.peak_branches.max(ctl.branch_rows.len());
     }
 
     #[inline]
@@ -580,6 +601,349 @@ impl ParamServer {
             .iter()
             .map(|lock| read_shard(lock, &self.counters).shard.branch_row_count(branch))
             .collect()
+    }
+}
+
+/// One snapshot of a store's branch/pool/concurrency accounting — the
+/// [`ParamStore`]-level view that feeds
+/// [`crate::training::SnapshotStats`].  For a remote store the fields
+/// are aggregated over all shard servers (counters and pool stats sum;
+/// fork count, peak and live branches are replicated identically on
+/// every server, so the maximum is taken).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub forks: u64,
+    pub peak_branches: usize,
+    pub live_branches: usize,
+    /// Buffers privately materialized by copy-on-write
+    /// (`pool.allocated + pool.reused`).
+    pub cow_buffer_copies: u64,
+    pub server: ServerStats,
+    pub pool: PoolStats,
+}
+
+/// The parameter-server interface the training systems drive —
+/// implemented by the in-process [`ParamServer`], by the socket-backed
+/// [`RemoteParamServer`], and by the [`PsHandle`] enum the apps hold.
+///
+/// Everything is `&self` and `Send + Sync` (data-parallel worker
+/// threads share the store), and every method returns `Result`: local
+/// stores never fail on transport, but remote calls can.
+pub trait ParamStore: Send + Sync {
+    /// Which optimizer rule the store applies server-side.
+    fn optimizer_kind(&self) -> OptimizerKind;
+
+    /// Install a fresh row (root-branch model initialization).
+    fn insert_row(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        data: Vec<f32>,
+    ) -> Result<()>;
+
+    /// Fork `child` from `parent` (replicated to every shard server
+    /// for a remote store).
+    fn fork_branch(&self, child: BranchId, parent: BranchId) -> Result<()>;
+
+    /// Free `branch`; last-owner buffers return to the owning pools.
+    fn free_branch(&self, branch: BranchId) -> Result<()>;
+
+    /// Read one row; `Ok(None)` when the row is absent.
+    fn read_row(&self, branch: BranchId, table: TableId, key: RowKey) -> Result<Option<Vec<f32>>>;
+
+    /// Row data plus the AdaRevision grad-accumulator snapshot.
+    fn read_row_with_accum(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+    ) -> Result<Option<(Vec<f32>, Option<Vec<f32>>)>>;
+
+    /// Copy one row into `buf` (cleared first); `Ok(false)` when absent.
+    fn read_row_into(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        buf: &mut Vec<f32>,
+    ) -> Result<bool> {
+        match self.read_row(branch, table, key)? {
+            None => Ok(false),
+            Some(row) => {
+                buf.clear();
+                buf.extend_from_slice(&row);
+                Ok(true)
+            }
+        }
+    }
+
+    /// Append one row's data to `out` (tensor reassembly); `Ok(false)`
+    /// when absent.  Local stores copy straight out of the shard read
+    /// lock with no intermediate allocation.
+    fn extend_row_into(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        out: &mut Vec<f32>,
+    ) -> Result<bool> {
+        match self.read_row(branch, table, key)? {
+            None => Ok(false),
+            Some(row) => {
+                out.extend_from_slice(&row);
+                Ok(true)
+            }
+        }
+    }
+
+    /// Apply one row update (AdaRevision carries `z_old`).
+    fn apply_update(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        grad: &[f32],
+        hyper: Hyper,
+        z_old: Option<&[f32]>,
+    ) -> Result<()>;
+
+    /// Apply a whole batch: routed once, grouped per shard (local) or
+    /// per shard server (remote), applied group-wise.
+    fn apply_batch(
+        &self,
+        branch: BranchId,
+        updates: &[(TableId, RowKey, &[f32])],
+        hyper: Hyper,
+    ) -> Result<()>;
+
+    /// Rows live under `branch` (summed over shard servers).
+    fn branch_row_count(&self, branch: BranchId) -> Result<usize>;
+
+    /// Sorted live branch ids.
+    fn live_branches(&self) -> Result<Vec<BranchId>>;
+
+    /// Branch/pool/concurrency accounting snapshot.
+    fn store_stats(&self) -> Result<StoreStats>;
+}
+
+impl ParamStore for ParamServer {
+    fn optimizer_kind(&self) -> OptimizerKind {
+        self.optimizer.kind
+    }
+
+    fn insert_row(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        data: Vec<f32>,
+    ) -> Result<()> {
+        ParamServer::insert_row(self, branch, table, key, data);
+        Ok(())
+    }
+
+    fn fork_branch(&self, child: BranchId, parent: BranchId) -> Result<()> {
+        ParamServer::fork_branch(self, child, parent)
+    }
+
+    fn free_branch(&self, branch: BranchId) -> Result<()> {
+        ParamServer::free_branch(self, branch)
+    }
+
+    fn read_row(&self, branch: BranchId, table: TableId, key: RowKey) -> Result<Option<Vec<f32>>> {
+        Ok(ParamServer::read_row(self, branch, table, key))
+    }
+
+    fn read_row_with_accum(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+    ) -> Result<Option<(Vec<f32>, Option<Vec<f32>>)>> {
+        Ok(ParamServer::read_row_with_accum(self, branch, table, key))
+    }
+
+    fn read_row_into(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        buf: &mut Vec<f32>,
+    ) -> Result<bool> {
+        Ok(ParamServer::read_row_into(self, branch, table, key, buf))
+    }
+
+    fn extend_row_into(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        out: &mut Vec<f32>,
+    ) -> Result<bool> {
+        Ok(self
+            .with_row(branch, table, key, |e| out.extend_from_slice(&e.data))
+            .is_some())
+    }
+
+    fn apply_update(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        grad: &[f32],
+        hyper: Hyper,
+        z_old: Option<&[f32]>,
+    ) -> Result<()> {
+        ParamServer::apply_update(self, branch, table, key, grad, hyper, z_old)
+    }
+
+    fn apply_batch(
+        &self,
+        branch: BranchId,
+        updates: &[(TableId, RowKey, &[f32])],
+        hyper: Hyper,
+    ) -> Result<()> {
+        ParamServer::apply_batch(self, branch, updates, hyper)
+    }
+
+    fn branch_row_count(&self, branch: BranchId) -> Result<usize> {
+        Ok(ParamServer::branch_row_count(self, branch))
+    }
+
+    fn live_branches(&self) -> Result<Vec<BranchId>> {
+        Ok(ParamServer::live_branches(self))
+    }
+
+    fn store_stats(&self) -> Result<StoreStats> {
+        let pool = self.pool_stats();
+        Ok(StoreStats {
+            forks: self.fork_count(),
+            peak_branches: self.peak_branches(),
+            live_branches: ParamServer::live_branches(self).len(),
+            cow_buffer_copies: pool.allocated + pool.reused,
+            server: self.server_stats(),
+            pool,
+        })
+    }
+}
+
+/// Enum dispatch over the two store backends (mirrors
+/// [`crate::config::AnySystem`]: keeps the apps monomorphic, no boxed
+/// trait objects on the read/update hot path).
+#[derive(Debug)]
+pub enum PsHandle {
+    Local(ParamServer),
+    Remote(RemoteParamServer),
+}
+
+impl PsHandle {
+    /// The in-process server, when this handle is local (tests and
+    /// benches introspect pool state through this).
+    pub fn as_local(&self) -> Option<&ParamServer> {
+        match self {
+            PsHandle::Local(ps) => Some(ps),
+            PsHandle::Remote(_) => None,
+        }
+    }
+}
+
+macro_rules! dispatch {
+    ($self:ident, $ps:ident => $e:expr) => {
+        match $self {
+            PsHandle::Local($ps) => $e,
+            PsHandle::Remote($ps) => $e,
+        }
+    };
+}
+
+impl ParamStore for PsHandle {
+    fn optimizer_kind(&self) -> OptimizerKind {
+        dispatch!(self, ps => ps.optimizer_kind())
+    }
+
+    fn insert_row(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        data: Vec<f32>,
+    ) -> Result<()> {
+        dispatch!(self, ps => ParamStore::insert_row(ps, branch, table, key, data))
+    }
+
+    fn fork_branch(&self, child: BranchId, parent: BranchId) -> Result<()> {
+        dispatch!(self, ps => ParamStore::fork_branch(ps, child, parent))
+    }
+
+    fn free_branch(&self, branch: BranchId) -> Result<()> {
+        dispatch!(self, ps => ParamStore::free_branch(ps, branch))
+    }
+
+    fn read_row(&self, branch: BranchId, table: TableId, key: RowKey) -> Result<Option<Vec<f32>>> {
+        dispatch!(self, ps => ParamStore::read_row(ps, branch, table, key))
+    }
+
+    fn read_row_with_accum(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+    ) -> Result<Option<(Vec<f32>, Option<Vec<f32>>)>> {
+        dispatch!(self, ps => ParamStore::read_row_with_accum(ps, branch, table, key))
+    }
+
+    fn read_row_into(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        buf: &mut Vec<f32>,
+    ) -> Result<bool> {
+        dispatch!(self, ps => ParamStore::read_row_into(ps, branch, table, key, buf))
+    }
+
+    fn extend_row_into(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        out: &mut Vec<f32>,
+    ) -> Result<bool> {
+        dispatch!(self, ps => ParamStore::extend_row_into(ps, branch, table, key, out))
+    }
+
+    fn apply_update(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        grad: &[f32],
+        hyper: Hyper,
+        z_old: Option<&[f32]>,
+    ) -> Result<()> {
+        dispatch!(self, ps => ParamStore::apply_update(ps, branch, table, key, grad, hyper, z_old))
+    }
+
+    fn apply_batch(
+        &self,
+        branch: BranchId,
+        updates: &[(TableId, RowKey, &[f32])],
+        hyper: Hyper,
+    ) -> Result<()> {
+        dispatch!(self, ps => ParamStore::apply_batch(ps, branch, updates, hyper))
+    }
+
+    fn branch_row_count(&self, branch: BranchId) -> Result<usize> {
+        dispatch!(self, ps => ParamStore::branch_row_count(ps, branch))
+    }
+
+    fn live_branches(&self) -> Result<Vec<BranchId>> {
+        dispatch!(self, ps => ParamStore::live_branches(ps))
+    }
+
+    fn store_stats(&self) -> Result<StoreStats> {
+        dispatch!(self, ps => ParamStore::store_stats(ps))
     }
 }
 

@@ -1,0 +1,869 @@
+//! Distributed parameter server over real sockets (§4.5, §4.6).
+//!
+//! The concurrent sharded engine of [`super`] becomes a multi-process
+//! system by splitting the *global* shard space `0..N` across shard
+//! servers:
+//!
+//! * [`ShardServer`] — one process serving a contiguous global shard
+//!   range `begin..end`.  Internally it is an unmodified
+//!   [`ParamServer`] with `end - begin` local shards: the engine, its
+//!   lock hierarchy, COW branch storage, and per-shard pool arenas are
+//!   reused as-is; only the request framing is new.  Branch ops arrive
+//!   replicated from the client, so every server holds the same branch
+//!   index over its own rows and performs its own last-owner
+//!   accounting — a freed row's buffers return to the pool of the one
+//!   server (and shard) that owns it.
+//! * [`RemoteParamServer`] — the client half, implementing the same
+//!   `&self` [`ParamStore`] interface as the local server.  Row ops
+//!   route with the *identical* [`route_shard`] mix over the global
+//!   shard count, then go to the server owning that shard; a batch is
+//!   routed once, grouped per shard server (exactly as the local
+//!   engine groups per shard), sent as one `ApplyBatch` per server,
+//!   and the replies are collected in server order.  `ForkBranch` /
+//!   `FreeBranch` broadcast to every server, which is what replicates
+//!   the branch index across processes.
+//!
+//! Because row payloads cross the wire as f32 *bit patterns* (see
+//! [`crate::comm::wire`]) and the optimizer rule runs server-side on
+//! the same engine, a training run against a set of shard servers is
+//! bit-identical to the same run against a single in-process server —
+//! the distributed CI leg asserts exactly that.
+//!
+//! Topology: one coordinator process (the tuner + training system)
+//! connects to S shard servers, each started as
+//! `mltuner serve --shards a..b --listen ADDR --optimizer K`.
+//! The handshake (`Hello`) reports each server's range; the client
+//! verifies the ranges tile `0..N` with no gaps or overlaps and that
+//! all servers were built with the same optimizer.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::BranchId;
+use crate::comm::socket::{Conn, Framing, PsListener, SocketSpec};
+use crate::comm::wire::{
+    decode_ps_reply, decode_ps_request, encode_ps_reply, encode_ps_request, PsReply, PsRequest,
+    PsStats,
+};
+use crate::optim::{Hyper, Optimizer, OptimizerKind};
+
+use super::storage::{RowKey, TableId};
+use super::{ParamServer, ParamStore, route_shard, ServerStats, StoreStats};
+
+/// A contiguous range `begin..end` of global shard ids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRange {
+    pub begin: usize,
+    pub end: usize,
+}
+
+impl ShardRange {
+    /// Parse the CLI form `a..b` (half-open, `b > a`).
+    pub fn parse(s: &str) -> Result<ShardRange> {
+        let (a, b) = s
+            .split_once("..")
+            .ok_or_else(|| anyhow!("bad shard range {s:?} (want a..b)"))?;
+        let begin: usize = a.trim().parse().with_context(|| format!("bad shard range {s:?}"))?;
+        let end: usize = b.trim().parse().with_context(|| format!("bad shard range {s:?}"))?;
+        if end <= begin {
+            bail!("bad shard range {s:?}: must be non-empty and ascending");
+        }
+        Ok(ShardRange { begin, end })
+    }
+
+    pub fn count(&self) -> usize {
+        self.end - self.begin
+    }
+}
+
+impl fmt::Display for ShardRange {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}..{}", self.begin, self.end)
+    }
+}
+
+/// One shard-server process: the concurrent engine behind a socket.
+pub struct ShardServer {
+    ps: ParamServer,
+    range: ShardRange,
+    optimizer: OptimizerKind,
+    shutdown: AtomicBool,
+}
+
+impl ShardServer {
+    pub fn new(range: ShardRange, optimizer: OptimizerKind) -> Self {
+        let ps = ParamServer::new(range.count(), Optimizer::new(optimizer));
+        // The root branch exists on every server even before (or
+        // without) any of its rows landing here: replicated fork ops
+        // must find their parent on servers whose shard subset holds
+        // zero rows of it.
+        ps.ensure_branch(0);
+        ShardServer {
+            ps,
+            range,
+            optimizer,
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// The engine (test/bench introspection).
+    pub fn ps(&self) -> &ParamServer {
+        &self.ps
+    }
+
+    pub fn range(&self) -> ShardRange {
+        self.range
+    }
+
+    /// Serve connections until a `Shutdown` request arrives.  Each
+    /// connection gets its own scoped handler thread, so several
+    /// clients (or a client's reconnect) can be in flight at once.
+    pub fn serve(&self, listener: PsListener, framing: Framing) -> Result<()> {
+        let local = listener.local_spec()?;
+        std::thread::scope(|scope| -> Result<()> {
+            loop {
+                if self.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                let conn = match listener.accept(framing) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        if self.shutdown.load(Ordering::SeqCst) {
+                            return Ok(());
+                        }
+                        return Err(e);
+                    }
+                };
+                if self.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                let local = local.clone();
+                scope.spawn(move || self.handle_conn(conn, &local, framing));
+            }
+        })
+    }
+
+    /// One connection's request loop.  A malformed frame is answered
+    /// with an error reply; transport errors end the connection.
+    fn handle_conn(&self, mut conn: Conn, local: &SocketSpec, framing: Framing) {
+        loop {
+            let frame = match conn.recv() {
+                Ok(Some(f)) => f,
+                Ok(None) | Err(_) => return,
+            };
+            let (reply, shutdown) = match decode_ps_request(&frame) {
+                Err(e) => (
+                    PsReply::Err {
+                        message: format!("bad request: {e}"),
+                    },
+                    false,
+                ),
+                Ok(req) => {
+                    let shutdown = req == PsRequest::Shutdown;
+                    (self.handle(&req), shutdown)
+                }
+            };
+            if conn.send(&encode_ps_reply(&reply)).is_err() {
+                return;
+            }
+            if shutdown {
+                self.shutdown.store(true, Ordering::SeqCst);
+                // poke our own listener so the blocking accept wakes
+                // up and observes the flag
+                let _ = local.connect(framing);
+                return;
+            }
+        }
+    }
+
+    /// Dispatch one request against the engine (transport-free, so
+    /// unit tests drive it directly).
+    pub fn handle(&self, req: &PsRequest) -> PsReply {
+        fn done(r: Result<()>) -> PsReply {
+            match r {
+                Ok(()) => PsReply::Ok,
+                Err(e) => PsReply::Err {
+                    message: e.to_string(),
+                },
+            }
+        }
+        match req {
+            PsRequest::Hello => PsReply::Hello {
+                shard_begin: self.range.begin,
+                shard_end: self.range.end,
+                optimizer: self.optimizer.name().to_string(),
+            },
+            PsRequest::InsertRow {
+                branch,
+                table,
+                key,
+                data,
+            } => {
+                self.ps.insert_row(*branch, *table, *key, data.clone());
+                PsReply::Ok
+            }
+            PsRequest::ReadRow {
+                branch,
+                table,
+                key,
+                with_accum: false,
+            } => PsReply::Row {
+                data: self.ps.read_row(*branch, *table, *key),
+                accum: None,
+            },
+            PsRequest::ReadRow {
+                branch,
+                table,
+                key,
+                with_accum: true,
+            } => match self.ps.read_row_with_accum(*branch, *table, *key) {
+                None => PsReply::Row {
+                    data: None,
+                    accum: None,
+                },
+                Some((data, accum)) => PsReply::Row {
+                    data: Some(data),
+                    accum,
+                },
+            },
+            PsRequest::ApplyUpdate {
+                branch,
+                table,
+                key,
+                grad,
+                hyper,
+                z_old,
+            } => done(self.ps.apply_update(*branch, *table, *key, grad, *hyper, z_old.as_deref())),
+            PsRequest::ApplyBatch {
+                branch,
+                hyper,
+                updates,
+            } => {
+                let refs: Vec<(TableId, RowKey, &[f32])> = updates
+                    .iter()
+                    .map(|(t, k, g)| (*t, *k, g.as_slice()))
+                    .collect();
+                done(self.ps.apply_batch(*branch, &refs, *hyper))
+            }
+            PsRequest::ForkBranch { child, parent } => done(self.ps.fork_branch(*child, *parent)),
+            PsRequest::FreeBranch { branch } => done(self.ps.free_branch(*branch)),
+            PsRequest::ServerStats => {
+                let branches = self
+                    .ps
+                    .live_branches()
+                    .into_iter()
+                    .map(|b| (b, self.ps.branch_row_count(b)))
+                    .collect();
+                PsReply::Stats(PsStats {
+                    server: self.ps.server_stats(),
+                    pool: self.ps.pool_stats(),
+                    forks: self.ps.fork_count(),
+                    peak_branches: self.ps.peak_branches(),
+                    branches,
+                })
+            }
+            PsRequest::Shutdown => PsReply::Ok,
+        }
+    }
+}
+
+/// One connected shard server, client side.
+struct RemoteServer {
+    spec: SocketSpec,
+    range: ShardRange,
+    conn: Mutex<Conn>,
+}
+
+/// Socket-backed [`ParamStore`]: same `&self` interface as the local
+/// engine, every row op one RPC to the owning shard server.
+pub struct RemoteParamServer {
+    servers: Vec<RemoteServer>,
+    /// Global shard id → index into `servers`.
+    shard_to_server: Vec<usize>,
+    num_shards: usize,
+    optimizer: OptimizerKind,
+    framing: Framing,
+}
+
+impl fmt::Debug for RemoteParamServer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RemoteParamServer")
+            .field("num_shards", &self.num_shards)
+            .field("servers", &self.servers.iter().map(|s| &s.spec).collect::<Vec<_>>())
+            .field("optimizer", &self.optimizer)
+            .finish()
+    }
+}
+
+impl RemoteParamServer {
+    /// Connect and handshake with every shard server, verifying that
+    /// the advertised ranges tile a contiguous global shard space
+    /// `0..N` and that all servers run the same optimizer.
+    pub fn connect(specs: &[SocketSpec], framing: Framing) -> Result<RemoteParamServer> {
+        if specs.is_empty() {
+            bail!("no shard servers given");
+        }
+        let mut servers = Vec::with_capacity(specs.len());
+        let mut optimizer: Option<OptimizerKind> = None;
+        for spec in specs {
+            let mut conn = spec.connect(framing)?;
+            conn.send(&encode_ps_request(&PsRequest::Hello))?;
+            let reply = decode_ps_reply(&conn.recv_expect()?)?;
+            let PsReply::Hello {
+                shard_begin,
+                shard_end,
+                optimizer: opt_name,
+            } = reply
+            else {
+                bail!("{spec}: unexpected handshake reply");
+            };
+            if shard_end <= shard_begin {
+                bail!("{spec}: empty shard range {shard_begin}..{shard_end}");
+            }
+            let kind = OptimizerKind::parse(&opt_name)
+                .ok_or_else(|| anyhow!("{spec}: unknown optimizer {opt_name:?}"))?;
+            match optimizer {
+                None => optimizer = Some(kind),
+                Some(k) if k != kind => {
+                    bail!("{spec}: optimizer {opt_name} != {} of first server", k.name())
+                }
+                Some(_) => {}
+            }
+            servers.push(RemoteServer {
+                spec: spec.clone(),
+                range: ShardRange {
+                    begin: shard_begin,
+                    end: shard_end,
+                },
+                conn: Mutex::new(conn),
+            });
+        }
+        // the ranges must partition 0..N
+        let mut order: Vec<usize> = (0..servers.len()).collect();
+        order.sort_by_key(|&i| servers[i].range.begin);
+        let mut expected = 0usize;
+        for &i in &order {
+            let r = servers[i].range;
+            if r.begin != expected {
+                bail!(
+                    "shard ranges do not tile the shard space: expected a server \
+                     starting at shard {expected}, got {} from {}",
+                    r,
+                    servers[i].spec
+                );
+            }
+            expected = r.end;
+        }
+        let num_shards = expected;
+        let mut shard_to_server = vec![0usize; num_shards];
+        for (si, server) in servers.iter().enumerate() {
+            for s in server.range.begin..server.range.end {
+                shard_to_server[s] = si;
+            }
+        }
+        Ok(RemoteParamServer {
+            servers,
+            shard_to_server,
+            num_shards,
+            optimizer: optimizer.expect("at least one server"),
+            framing,
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn framing(&self) -> Framing {
+        self.framing
+    }
+
+    #[inline]
+    fn server_for(&self, table: TableId, key: RowKey) -> usize {
+        self.shard_to_server[route_shard(table, key, self.num_shards)]
+    }
+
+    /// One RPC against server `si` (serialized per server connection).
+    fn request(&self, si: usize, req: &PsRequest) -> Result<PsReply> {
+        let server = &self.servers[si];
+        let mut conn = server.conn.lock().unwrap_or_else(|e| e.into_inner());
+        conn.send(&encode_ps_request(req))
+            .with_context(|| format!("sending to {}", server.spec))?;
+        let frame = conn
+            .recv_expect()
+            .with_context(|| format!("waiting for {}", server.spec))?;
+        decode_ps_reply(&frame)
+    }
+
+    /// RPC that must answer `Ok`; an `Err` reply becomes an error.
+    fn request_ok(&self, si: usize, req: &PsRequest) -> Result<()> {
+        match self.request(si, req)? {
+            PsReply::Ok => Ok(()),
+            PsReply::Err { message } => bail!("{}: {message}", self.servers[si].spec),
+            other => bail!("{}: unexpected reply {other:?}", self.servers[si].spec),
+        }
+    }
+
+    fn request_row(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        with_accum: bool,
+    ) -> Result<(Option<Vec<f32>>, Option<Vec<f32>>)> {
+        let si = self.server_for(table, key);
+        match self.request(
+            si,
+            &PsRequest::ReadRow {
+                branch,
+                table,
+                key,
+                with_accum,
+            },
+        )? {
+            PsReply::Row { data, accum } => Ok((data, accum)),
+            PsReply::Err { message } => bail!("{}: {message}", self.servers[si].spec),
+            other => bail!("{}: unexpected reply {other:?}", self.servers[si].spec),
+        }
+    }
+
+    /// Probe every shard server's stats, in server order.
+    pub fn probe_stats(&self) -> Result<Vec<PsStats>> {
+        (0..self.servers.len())
+            .map(|si| match self.request(si, &PsRequest::ServerStats)? {
+                PsReply::Stats(s) => Ok(s),
+                other => bail!("{}: unexpected reply {other:?}", self.servers[si].spec),
+            })
+            .collect()
+    }
+
+    /// Ask every shard server process to exit (used by tests and
+    /// orchestration teardown; the acknowledgement is awaited).
+    pub fn shutdown_all(&self) -> Result<()> {
+        for si in 0..self.servers.len() {
+            self.request_ok(si, &PsRequest::Shutdown)?;
+        }
+        Ok(())
+    }
+}
+
+impl ParamStore for RemoteParamServer {
+    fn optimizer_kind(&self) -> OptimizerKind {
+        self.optimizer
+    }
+
+    fn insert_row(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        data: Vec<f32>,
+    ) -> Result<()> {
+        let si = self.server_for(table, key);
+        self.request_ok(
+            si,
+            &PsRequest::InsertRow {
+                branch,
+                table,
+                key,
+                data,
+            },
+        )
+    }
+
+    /// Branch-index replication: every shard server forks its own rows
+    /// of `parent`.  Not atomic across servers — a mid-broadcast
+    /// failure leaves earlier servers forked (the caller sees the
+    /// error and aborts the branch, mirroring the local engine's
+    /// partial-application semantics for batches).
+    fn fork_branch(&self, child: BranchId, parent: BranchId) -> Result<()> {
+        for si in 0..self.servers.len() {
+            self.request_ok(si, &PsRequest::ForkBranch { child, parent })?;
+        }
+        Ok(())
+    }
+
+    fn free_branch(&self, branch: BranchId) -> Result<()> {
+        for si in 0..self.servers.len() {
+            self.request_ok(si, &PsRequest::FreeBranch { branch })?;
+        }
+        Ok(())
+    }
+
+    fn read_row(&self, branch: BranchId, table: TableId, key: RowKey) -> Result<Option<Vec<f32>>> {
+        Ok(self.request_row(branch, table, key, false)?.0)
+    }
+
+    fn read_row_with_accum(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+    ) -> Result<Option<(Vec<f32>, Option<Vec<f32>>)>> {
+        let (data, accum) = self.request_row(branch, table, key, true)?;
+        Ok(data.map(|d| (d, accum)))
+    }
+
+    fn apply_update(
+        &self,
+        branch: BranchId,
+        table: TableId,
+        key: RowKey,
+        grad: &[f32],
+        hyper: Hyper,
+        z_old: Option<&[f32]>,
+    ) -> Result<()> {
+        let si = self.server_for(table, key);
+        self.request_ok(
+            si,
+            &PsRequest::ApplyUpdate {
+                branch,
+                table,
+                key,
+                grad: grad.to_vec(),
+                hyper,
+                z_old: z_old.map(<[f32]>::to_vec),
+            },
+        )
+    }
+
+    /// Route once, group per shard *server* (the distributed analog of
+    /// the local engine's per-shard grouping), send one `ApplyBatch`
+    /// per server, and collect the acknowledgements in server order.
+    /// Same-key order inside a group is call order, so the result is
+    /// observationally identical to the local batched path.
+    fn apply_batch(
+        &self,
+        branch: BranchId,
+        updates: &[(TableId, RowKey, &[f32])],
+        hyper: Hyper,
+    ) -> Result<()> {
+        if updates.is_empty() {
+            return Ok(());
+        }
+        let mut groups: Vec<Vec<(TableId, RowKey, Vec<f32>)>> =
+            vec![Vec::new(); self.servers.len()];
+        for &(table, key, grad) in updates {
+            groups[self.server_for(table, key)].push((table, key, grad.to_vec()));
+        }
+        for (si, group) in groups.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            self.request_ok(
+                si,
+                &PsRequest::ApplyBatch {
+                    branch,
+                    hyper,
+                    updates: group,
+                },
+            )?;
+        }
+        Ok(())
+    }
+
+    fn branch_row_count(&self, branch: BranchId) -> Result<usize> {
+        let mut total = 0;
+        for stats in self.probe_stats()? {
+            total += stats
+                .branches
+                .iter()
+                .find(|(b, _)| *b == branch)
+                .map_or(0, |(_, rows)| *rows);
+        }
+        Ok(total)
+    }
+
+    fn live_branches(&self) -> Result<Vec<BranchId>> {
+        let mut all: Vec<BranchId> = self
+            .probe_stats()?
+            .into_iter()
+            .flat_map(|s| s.branches.into_iter().map(|(b, _)| b))
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        Ok(all)
+    }
+
+    /// Aggregate over all shard servers: counters and pool stats sum
+    /// (each buffer lives in exactly one server's pools); fork count,
+    /// peak and live branches are replicated on every server, so the
+    /// maximum is the global value.
+    fn store_stats(&self) -> Result<StoreStats> {
+        let probes = self.probe_stats()?;
+        let mut out = StoreStats::default();
+        let mut live: BTreeMap<BranchId, ()> = BTreeMap::new();
+        let mut server = ServerStats::default();
+        for s in &probes {
+            out.forks = out.forks.max(s.forks);
+            out.peak_branches = out.peak_branches.max(s.peak_branches);
+            for (b, _) in &s.branches {
+                live.insert(*b, ());
+            }
+            server.shard_lock_contentions += s.server.shard_lock_contentions;
+            server.batch_calls += s.server.batch_calls;
+            server.batched_rows += s.server.batched_rows;
+            out.pool.accumulate(s.pool);
+        }
+        out.live_branches = live.len();
+        out.cow_buffer_copies = out.pool.allocated + out.pool.reused;
+        out.server = server;
+        Ok(out)
+    }
+}
+
+/// Spawn an in-process [`ShardServer`] on an ephemeral loopback port —
+/// shared scaffolding for unit tests here and in `config`; the
+/// multi-process CI leg spawns real `mltuner serve` processes instead.
+#[doc(hidden)]
+pub fn spawn_local_server(
+    range: ShardRange,
+    optimizer: OptimizerKind,
+    framing: Framing,
+) -> Result<(SocketSpec, std::thread::JoinHandle<Result<()>>)> {
+    let listener = PsListener::bind(&SocketSpec::Tcp("127.0.0.1:0".into()))?;
+    let spec = listener.local_spec()?;
+    let server = Arc::new(ShardServer::new(range, optimizer));
+    let handle = std::thread::spawn(move || server.serve(listener, framing));
+    Ok((spec, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::pool::PoolStats;
+
+    fn range(begin: usize, end: usize) -> ShardRange {
+        ShardRange { begin, end }
+    }
+
+    /// Two shard servers + a connected client + a local reference
+    /// server with the same global shard count.
+    fn cluster(
+        optimizer: OptimizerKind,
+        framing: Framing,
+    ) -> (RemoteParamServer, ParamServer, Vec<std::thread::JoinHandle<Result<()>>>) {
+        let (spec_a, h_a) = spawn_local_server(range(0, 2), optimizer, framing).unwrap();
+        let (spec_b, h_b) = spawn_local_server(range(2, 4), optimizer, framing).unwrap();
+        // deliberately hand the specs over in reverse order: routing
+        // must follow the advertised ranges, not the argument order
+        let remote = RemoteParamServer::connect(&[spec_b, spec_a], framing).unwrap();
+        let local = ParamServer::new(4, Optimizer::new(optimizer));
+        (remote, local, vec![h_a, h_b])
+    }
+
+    fn teardown(remote: RemoteParamServer, handles: Vec<std::thread::JoinHandle<Result<()>>>) {
+        remote.shutdown_all().unwrap();
+        drop(remote); // close client conns so handler threads exit
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn shard_range_parses() {
+        assert_eq!(ShardRange::parse("0..4").unwrap(), range(0, 4));
+        assert_eq!(ShardRange::parse(" 2..3 ").unwrap(), range(2, 3));
+        assert_eq!(ShardRange::parse("2..3").unwrap().count(), 1);
+        assert_eq!(range(1, 5).to_string(), "1..5");
+        assert!(ShardRange::parse("3..3").is_err());
+        assert!(ShardRange::parse("5..2").is_err());
+        assert!(ShardRange::parse("x..2").is_err());
+        assert!(ShardRange::parse("4").is_err());
+    }
+
+    #[test]
+    fn remote_store_matches_local_engine_bit_exact() {
+        let (remote, local, handles) = cluster(OptimizerKind::Sgd, Framing::Line);
+        let hyper = Hyper { lr: 0.5, momentum: 0.9 };
+        let grad = [0.25f32, -1.5];
+
+        for store in [&remote as &dyn ParamStore, &local as &dyn ParamStore] {
+            for t in 0..2u32 {
+                for k in 0..16u64 {
+                    store.insert_row(0, t, k, vec![k as f32, t as f32]).unwrap();
+                }
+            }
+            store.fork_branch(1, 0).unwrap();
+            // row-at-a-time updates
+            for k in 0..4u64 {
+                store.apply_update(1, 0, k, &grad, hyper, None).unwrap();
+            }
+            // batched updates with duplicate keys (order preserved)
+            let updates: Vec<(TableId, RowKey, &[f32])> = [3u64, 7, 3, 15, 9, 3]
+                .iter()
+                .map(|&k| (1u32, k, &grad[..]))
+                .collect();
+            store.apply_batch(1, &updates, hyper).unwrap();
+        }
+
+        // every row of both branches bit-exact between the two stores
+        for b in [0u32, 1] {
+            for t in 0..2u32 {
+                for k in 0..16u64 {
+                    let r = remote.read_row(b, t, k).unwrap().unwrap();
+                    let l = ParamStore::read_row(&local, b, t, k).unwrap().unwrap();
+                    let rbits: Vec<u32> = r.iter().map(|v| v.to_bits()).collect();
+                    let lbits: Vec<u32> = l.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(rbits, lbits, "branch {b} row ({t},{k})");
+                }
+            }
+        }
+        assert_eq!(remote.read_row(0, 0, 99).unwrap(), None);
+        assert_eq!(remote.branch_row_count(1).unwrap(), 32);
+        assert_eq!(remote.live_branches().unwrap(), vec![0, 1]);
+
+        // branch/pool accounting aggregates to the same census
+        let rs = remote.store_stats().unwrap();
+        let ls = local.store_stats().unwrap();
+        assert_eq!(rs.forks, ls.forks);
+        assert_eq!(rs.live_branches, ls.live_branches);
+        assert_eq!(rs.peak_branches, ls.peak_branches);
+        assert_eq!(rs.cow_buffer_copies, ls.cow_buffer_copies);
+        assert_eq!(rs.pool.idle, ls.pool.idle);
+
+        // free: last-owner reclamation happens server-side
+        remote.free_branch(1).unwrap();
+        ParamStore::free_branch(&local, 1).unwrap();
+        let rs = remote.store_stats().unwrap();
+        let ls = local.store_stats().unwrap();
+        assert_eq!(rs.pool, ls.pool, "pool census after free");
+        assert_eq!(remote.live_branches().unwrap(), vec![0]);
+
+        teardown(remote, handles);
+    }
+
+    #[test]
+    fn adarevision_accumulator_crosses_the_wire() {
+        let (remote, local, handles) = cluster(OptimizerKind::AdaRevision, Framing::Length);
+        let hyper = Hyper { lr: 0.1, momentum: 0.0 };
+        for store in [&remote as &dyn ParamStore, &local as &dyn ParamStore] {
+            store.insert_row(0, 0, 0, vec![1.0, -1.0]).unwrap();
+            for _ in 0..3 {
+                let (_, z_old) = store.read_row_with_accum(0, 0, 0).unwrap().unwrap();
+                store
+                    .apply_update(0, 0, 0, &[1.0, -1.0], hyper, z_old.as_deref())
+                    .unwrap();
+            }
+        }
+        let r = remote.read_row(0, 0, 0).unwrap().unwrap();
+        let l = ParamStore::read_row(&local, 0, 0, 0).unwrap().unwrap();
+        assert_eq!(
+            r.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            l.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        teardown(remote, handles);
+    }
+
+    #[test]
+    fn errors_and_missing_rows_propagate() {
+        let (remote, _local, handles) = cluster(OptimizerKind::Sgd, Framing::Line);
+        remote.insert_row(0, 0, 0, vec![1.0]).unwrap();
+        // duplicate fork child
+        remote.fork_branch(1, 0).unwrap();
+        let err = remote.fork_branch(1, 0).unwrap_err();
+        assert!(err.to_string().contains("already exists"), "{err}");
+        // update of a missing row reports table/key
+        let err = remote
+            .apply_update(0, 0, 99, &[1.0], Hyper::default(), None)
+            .unwrap_err();
+        assert!(err.to_string().contains("99"), "{err}");
+        // batch with a missing row errors too
+        let grad = [1.0f32];
+        let updates: Vec<(TableId, RowKey, &[f32])> = vec![(0, 0, &grad[..]), (0, 99, &grad[..])];
+        assert!(remote.apply_batch(0, &updates, Hyper::default()).is_err());
+        teardown(remote, handles);
+    }
+
+    #[test]
+    fn fork_replicates_to_rowless_servers() {
+        // One row only: it lands on exactly one of the two servers,
+        // yet fork/free must succeed on both (ensure_branch(0) gives
+        // the rowless server a live root).
+        let (remote, _local, handles) = cluster(OptimizerKind::Sgd, Framing::Line);
+        remote.insert_row(0, 0, 0, vec![1.0]).unwrap();
+        remote.fork_branch(1, 0).unwrap();
+        assert_eq!(remote.branch_row_count(1).unwrap(), 1);
+        assert_eq!(remote.live_branches().unwrap(), vec![0, 1]);
+        remote.free_branch(1).unwrap();
+        assert_eq!(remote.live_branches().unwrap(), vec![0]);
+        teardown(remote, handles);
+    }
+
+    #[test]
+    fn connect_rejects_bad_topologies() {
+        // overlap: 0..2 + 1..3
+        let (a, ha) = spawn_local_server(range(0, 2), OptimizerKind::Sgd, Framing::Line).unwrap();
+        let (b, hb) = spawn_local_server(range(1, 3), OptimizerKind::Sgd, Framing::Line).unwrap();
+        assert!(RemoteParamServer::connect(&[a.clone(), b.clone()], Framing::Line).is_err());
+        // gap: 0..2 alone claims to be the whole space 0..2 — fine;
+        // but 2..4 alone leaves 0..2 uncovered
+        assert!(RemoteParamServer::connect(&[b.clone()], Framing::Line).is_err());
+        assert!(RemoteParamServer::connect(&[a.clone()], Framing::Line).is_ok());
+        // optimizer mismatch
+        let (c, hc) = spawn_local_server(range(2, 3), OptimizerKind::Adam, Framing::Line).unwrap();
+        assert!(RemoteParamServer::connect(&[a.clone(), c.clone()], Framing::Line).is_err());
+        for spec in [a, b, c] {
+            let remote = RemoteParamServer::connect(
+                &[SocketSpec::parse("127.0.0.1:1").unwrap()],
+                Framing::Line,
+            );
+            assert!(remote.is_err()); // nothing listens on port 1
+            let mut conn = spec.connect(Framing::Line).unwrap();
+            conn.send(&encode_ps_request(&PsRequest::Shutdown)).unwrap();
+            let _ = conn.recv();
+        }
+        for h in [ha, hb, hc] {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn malformed_frames_get_error_replies_not_disconnects() {
+        let (spec, handle) =
+            spawn_local_server(range(0, 1), OptimizerKind::Sgd, Framing::Line).unwrap();
+        let mut conn = spec.connect(Framing::Line).unwrap();
+        conn.send("this is not a request").unwrap();
+        let reply = decode_ps_reply(&conn.recv_expect().unwrap()).unwrap();
+        let PsReply::Err { message } = reply else {
+            panic!("wanted an error reply")
+        };
+        assert!(message.contains("bad request"), "{message}");
+        // the connection is still usable afterwards
+        conn.send(&encode_ps_request(&PsRequest::Hello)).unwrap();
+        let reply = decode_ps_reply(&conn.recv_expect().unwrap()).unwrap();
+        assert!(matches!(reply, PsReply::Hello { .. }));
+        conn.send(&encode_ps_request(&PsRequest::Shutdown)).unwrap();
+        let _ = conn.recv();
+        drop(conn);
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn stats_probe_reports_per_server_batching() {
+        let (remote, _local, handles) = cluster(OptimizerKind::Sgd, Framing::Line);
+        for k in 0..32u64 {
+            remote.insert_row(0, 0, k, vec![0.0]).unwrap();
+        }
+        let grad = [1.0f32];
+        let updates: Vec<(TableId, RowKey, &[f32])> =
+            (0..32u64).map(|k| (0u32, k, &grad[..])).collect();
+        remote.apply_batch(0, &updates, Hyper::default()).unwrap();
+        let probes = remote.probe_stats().unwrap();
+        assert_eq!(probes.len(), 2);
+        let batched: u64 = probes.iter().map(|p| p.server.batched_rows).sum();
+        assert_eq!(batched, 32, "every routed row lands in some server's batch");
+        assert!(probes.iter().all(|p| p.server.batch_calls == 1));
+        // PoolStats default sanity: nothing was materialized yet
+        assert_eq!(remote.store_stats().unwrap().pool, PoolStats::default());
+        teardown(remote, handles);
+    }
+}

@@ -1,0 +1,276 @@
+//! Multi-process distributed parameter server: real `mltuner serve`
+//! shard-server processes on loopback ephemeral ports, driven by the
+//! MF training system through `RemoteParamServer`.
+//!
+//! The parity test runs the *same deterministic tune-session message
+//! script* (fork trials / schedule clocks / eval branch / free losers
+//! — the exact message pattern MLtuner emits, §4.5) against the
+//! in-process server and against two spawned shard-server processes,
+//! and asserts the progress trace, the final branch state, and the
+//! pool census are **bit-exact**.  (A full `MLtuner::run` cannot be
+//! compared bit-for-bit even between two local runs — Algorithm 1
+//! decides trial times from wall-clock measurements — so the full-run
+//! test asserts convergence, not equality.)
+//!
+//! This is the CI `distributed` leg (see `.github/workflows/ci.yml`
+//! and `scripts/tier1.sh`).
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::process::{Child, Command, Stdio};
+
+use mltuner::apps::mf::{MfConfig, MfSystem};
+use mltuner::comm::socket::{Framing, SocketSpec};
+use mltuner::comm::{BranchType, TunerMsg};
+use mltuner::optim::OptimizerKind;
+use mltuner::ps::remote::RemoteParamServer;
+use mltuner::ps::{ParamStore, PsHandle};
+use mltuner::training::MessageDriver;
+use mltuner::tunable::TunableSetting;
+use mltuner::tuner::{ConvergenceCriterion, MLtuner, TunerConfig};
+
+/// One spawned `mltuner serve` process; killed on drop so a panicking
+/// test never leaks servers.
+struct ServerProc {
+    child: Child,
+    spec: SocketSpec,
+}
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn `mltuner serve --shards <range> --listen 127.0.0.1:0` and
+/// parse the kernel-chosen ephemeral address off its first stdout line.
+fn spawn_server(shards: &str, optimizer: OptimizerKind) -> ServerProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_mltuner"))
+        .args([
+            "serve",
+            "--shards",
+            shards,
+            "--listen",
+            "127.0.0.1:0",
+            "--optimizer",
+            optimizer.name(),
+        ])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn mltuner serve");
+    let stdout = child.stdout.take().expect("child stdout");
+    let mut line = String::new();
+    BufReader::new(stdout)
+        .read_line(&mut line)
+        .expect("read serve banner");
+    // "mltuner serve: listening on ADDR shards a..b optimizer K framing F"
+    let addr = line
+        .split_whitespace()
+        .nth(4)
+        .unwrap_or_else(|| panic!("unparseable serve banner: {line:?}"));
+    let spec = SocketSpec::parse(addr).expect("serve banner address");
+    ServerProc { child, spec }
+}
+
+/// Two shard-server processes covering global shards 0..4.
+fn spawn_cluster(optimizer: OptimizerKind) -> (ServerProc, ServerProc) {
+    (spawn_server("0..2", optimizer), spawn_server("2..4", optimizer))
+}
+
+fn mf_config() -> MfConfig {
+    MfConfig {
+        users: 24,
+        items: 18,
+        rank: 4,
+        n_ratings: 400,
+        num_workers: 3,
+        seed: 11,
+        optimizer: OptimizerKind::AdaRevision,
+    }
+}
+
+fn lr_setting(sys: &MfSystem, lr: f64) -> TunableSetting {
+    let u = vec![sys.space().specs[0].encode(lr)];
+    sys.space().decode(&u)
+}
+
+/// Drive one deterministic tuning-episode message script — two trial
+/// branches, an eval (Testing) fork, freeing the loser, training the
+/// winner — and return every progress value the system reported.
+fn scripted_session(sys: MfSystem) -> (Vec<f64>, MfSystem) {
+    let s_fast = lr_setting(&sys, 0.3);
+    let s_slow = lr_setting(&sys, 0.01);
+    let mut driver = MessageDriver::new(sys);
+    let mut trace = Vec::new();
+    let mut send = |driver: &mut MessageDriver<MfSystem>, msg: TunerMsg| {
+        if let Some(p) = driver.send(&msg).expect("scripted message failed") {
+            trace.push(p.value);
+        }
+    };
+    let fork = |branch_id, parent, tunable: &TunableSetting, branch_type, clock| {
+        TunerMsg::ForkBranch {
+            clock,
+            branch_id,
+            parent_branch_id: Some(parent),
+            tunable: tunable.clone(),
+            branch_type,
+        }
+    };
+    let sched = |clock, branch_id| TunerMsg::ScheduleBranch { clock, branch_id };
+
+    send(&mut driver, fork(1, 0, &s_fast, BranchType::Training, 0));
+    send(&mut driver, fork(2, 0, &s_slow, BranchType::Training, 0));
+    send(&mut driver, sched(0, 1));
+    send(&mut driver, sched(1, 2));
+    send(&mut driver, sched(2, 1));
+    send(&mut driver, sched(3, 2));
+    send(
+        &mut driver,
+        TunerMsg::FreeBranch {
+            clock: 4,
+            branch_id: 2,
+        },
+    );
+    send(&mut driver, fork(3, 1, &s_fast, BranchType::Testing, 4));
+    send(&mut driver, sched(4, 3)); // validation eval of the winner
+    send(
+        &mut driver,
+        TunerMsg::FreeBranch {
+            clock: 5,
+            branch_id: 3,
+        },
+    );
+    for clock in 5..10 {
+        send(&mut driver, sched(clock, 1));
+    }
+    (trace, driver.system)
+}
+
+fn bits(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn multi_process_session_is_bit_exact_with_local_run() {
+    let cfg = mf_config();
+    let (sa, sb) = spawn_cluster(cfg.optimizer);
+    let remote =
+        RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
+    let remote_sys = MfSystem::with_store(cfg.clone(), PsHandle::Remote(remote)).unwrap();
+    let local_sys = MfSystem::new(cfg.clone());
+
+    let (remote_trace, remote_sys) = scripted_session(remote_sys);
+    let (local_trace, local_sys) = scripted_session(local_sys);
+
+    // 1. progress trace bit-exact
+    assert_eq!(remote_trace.len(), local_trace.len());
+    for (i, (r, l)) in remote_trace.iter().zip(&local_trace).enumerate() {
+        assert_eq!(r.to_bits(), l.to_bits(), "clock {i}: {r} vs {l}");
+    }
+
+    // 2. final branch state bit-exact, root and winner alike
+    for branch in [0u32, 1] {
+        for (table, rows) in [(0u32, cfg.users), (1u32, cfg.items)] {
+            for key in 0..rows as u64 {
+                let r = remote_sys
+                    .store()
+                    .read_row(branch, table, key)
+                    .unwrap()
+                    .expect("row must exist");
+                let l = local_sys
+                    .store()
+                    .read_row(branch, table, key)
+                    .unwrap()
+                    .expect("row must exist");
+                assert_eq!(bits(&r), bits(&l), "branch {branch} row ({table},{key})");
+            }
+        }
+    }
+
+    // 3. branch bookkeeping and pool census identical across the
+    //    process boundary (aggregated over both shard servers)
+    let rs = remote_sys.store().store_stats().unwrap();
+    let ls = local_sys.store().store_stats().unwrap();
+    assert_eq!(rs.forks, ls.forks);
+    assert_eq!(rs.peak_branches, ls.peak_branches);
+    assert_eq!(rs.live_branches, ls.live_branches);
+    assert_eq!(rs.cow_buffer_copies, ls.cow_buffer_copies);
+    assert_eq!(rs.pool, ls.pool, "pool census diverged");
+    assert_eq!(
+        remote_sys.store().live_branches().unwrap(),
+        local_sys.store().live_branches().unwrap()
+    );
+
+    // shut the server processes down cleanly (kill-on-drop is the
+    // fallback for panicking tests)
+    if let PsHandle::Remote(remote) = remote_sys.store() {
+        remote.shutdown_all().unwrap();
+    }
+}
+
+#[test]
+fn full_tuner_converges_against_spawned_shard_servers() {
+    // End-to-end MLtuner over the wire: a real (wall-clock-adaptive)
+    // tuning session against two server processes.  Decisions depend
+    // on measured time, so this asserts convergence, not bit-equality.
+    // Sized small: every clock is a few hundred loopback RPCs.
+    let cfg = MfConfig {
+        users: 16,
+        items: 12,
+        rank: 2,
+        n_ratings: 150,
+        num_workers: 2,
+        seed: 7,
+        optimizer: OptimizerKind::AdaRevision,
+    };
+    let (sa, sb) = spawn_cluster(cfg.optimizer);
+    let remote =
+        RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
+    let sys = MfSystem::with_store(cfg, PsHandle::Remote(remote)).unwrap();
+    // lenient threshold: a couple of good-LR passes reach it, keeping
+    // the socket-bound session short enough for CI
+    let threshold = sys.loss_of(0) * 0.5;
+    let space = sys.space().clone();
+    let mut tcfg = TunerConfig::new(space);
+    tcfg.convergence = ConvergenceCriterion::LossThreshold { value: threshold };
+    tcfg.retune = false;
+    tcfg.seed = 3;
+    tcfg.max_epochs = 500;
+    let mut tuner = MLtuner::new(sys, tcfg);
+    let report = tuner.run().unwrap();
+    assert!(report.converged, "never reached threshold {threshold}");
+    assert!(report.final_loss <= threshold * 1.01);
+    assert!(report.snapshots.forks > 0, "tuning forked trial branches");
+}
+
+#[test]
+fn tune_cli_runs_against_spawned_shard_servers() {
+    // The composed deployment exactly as a user would run it:
+    // two `mltuner serve` processes + `mltuner tune --ps remote://...`.
+    let (sa, sb) = spawn_cluster(OptimizerKind::AdaRevision);
+    let config = "app = \"mf\"\noptimizer = \"adarevision\"\nworkers = 2\n\
+                  loss_threshold = 1e15\nretune = false\nmax_epochs = 40\n\
+                  [mf]\nusers = 16\nitems = 12\nrank = 2\nn_ratings = 120\n";
+    let path = std::env::temp_dir().join(format!("mltuner-dist-test-{}.toml", std::process::id()));
+    std::fs::File::create(&path)
+        .and_then(|mut f| f.write_all(config.as_bytes()))
+        .expect("write temp config");
+    let out = Command::new(env!("CARGO_BIN_EXE_mltuner"))
+        .args([
+            "tune",
+            "--config",
+            path.to_str().unwrap(),
+            "--ps",
+            &format!("remote://{},{}", sa.spec, sb.spec),
+        ])
+        .output()
+        .expect("run mltuner tune");
+    let _ = std::fs::remove_file(&path);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "tune failed: {stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("converged:       true"), "{stdout}");
+}

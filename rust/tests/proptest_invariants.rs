@@ -2,6 +2,11 @@
 //! `proptest` is not vendored offline; `prop!` runs a closure over many
 //! seeded random cases and reports the failing seed).
 
+use mltuner::comm::socket::{decode_length_frame, encode_length_frame, MAX_FRAME_LEN};
+use mltuner::comm::wire::{
+    decode_ps_reply, decode_ps_request, encode_ps_reply, encode_ps_request, PsReply, PsRequest,
+    PsStats,
+};
 use mltuner::comm::{BranchType, ProtocolChecker, TunerMsg};
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
 use mltuner::ps::ParamServer;
@@ -525,5 +530,185 @@ fn prop_optimizers_reduce_quadratic_loss_on_random_starts() {
                 "{kind:?}: {start} -> {end}"
             );
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// PS data-plane wire frames (distributed parameter server)
+// ---------------------------------------------------------------------------
+
+/// A random f32 from random bits — NaN payloads, infinities, denormals
+/// and negative zero included, since the bit-pattern encoding must
+/// carry all of them exactly.
+fn random_f32(rng: &mut Rng) -> f32 {
+    f32::from_bits(rng.next_u64() as u32)
+}
+
+fn random_f32_vec(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    (0..rng.gen_range(0, max_len + 1)).map(|_| random_f32(rng)).collect()
+}
+
+fn random_hyper(rng: &mut Rng) -> Hyper {
+    Hyper {
+        lr: random_f32(rng),
+        momentum: random_f32(rng),
+    }
+}
+
+fn random_ps_request(rng: &mut Rng) -> PsRequest {
+    match rng.gen_range(0, 9) {
+        0 => PsRequest::Hello,
+        1 => PsRequest::InsertRow {
+            branch: rng.next_u64() as u32,
+            table: rng.next_u64() as u32,
+            key: rng.next_u64() >> 12, // JSON-safe (< 2^53)
+            data: random_f32_vec(rng, 16),
+        },
+        2 => PsRequest::ReadRow {
+            branch: rng.next_u64() as u32,
+            table: rng.next_u64() as u32,
+            key: rng.next_u64() >> 12,
+            with_accum: rng.gen_range(0, 2) == 0,
+        },
+        3 => PsRequest::ApplyUpdate {
+            branch: rng.next_u64() as u32,
+            table: rng.next_u64() as u32,
+            key: rng.next_u64() >> 12,
+            grad: random_f32_vec(rng, 16),
+            hyper: random_hyper(rng),
+            z_old: if rng.gen_range(0, 2) == 0 {
+                None
+            } else {
+                Some(random_f32_vec(rng, 16))
+            },
+        },
+        4 => PsRequest::ApplyBatch {
+            branch: rng.next_u64() as u32,
+            hyper: random_hyper(rng),
+            updates: (0..rng.gen_range(0, 8))
+                .map(|_| {
+                    (
+                        rng.next_u64() as u32,
+                        rng.next_u64() >> 12,
+                        random_f32_vec(rng, 8),
+                    )
+                })
+                .collect(),
+        },
+        5 => PsRequest::ForkBranch {
+            child: rng.next_u64() as u32,
+            parent: rng.next_u64() as u32,
+        },
+        6 => PsRequest::FreeBranch {
+            branch: rng.next_u64() as u32,
+        },
+        7 => PsRequest::ServerStats,
+        _ => PsRequest::Shutdown,
+    }
+}
+
+fn random_ps_reply(rng: &mut Rng) -> PsReply {
+    match rng.gen_range(0, 5) {
+        0 => PsReply::Hello {
+            shard_begin: rng.gen_range(0, 64),
+            shard_end: rng.gen_range(64, 256),
+            optimizer: "adarevision".into(),
+        },
+        1 => PsReply::Ok,
+        2 => PsReply::Row {
+            data: if rng.gen_range(0, 4) == 0 {
+                None
+            } else {
+                Some(random_f32_vec(rng, 16))
+            },
+            accum: if rng.gen_range(0, 2) == 0 {
+                None
+            } else {
+                Some(random_f32_vec(rng, 16))
+            },
+        },
+        3 => PsReply::Stats(PsStats {
+            server: mltuner::ps::ServerStats {
+                shard_lock_contentions: rng.next_u64() >> 12,
+                batch_calls: rng.next_u64() >> 12,
+                batched_rows: rng.next_u64() >> 12,
+            },
+            pool: mltuner::ps::pool::PoolStats {
+                reused: rng.next_u64() >> 12,
+                allocated: rng.next_u64() >> 12,
+                idle: rng.next_u64() >> 12,
+                idle_len: rng.next_u64() >> 12,
+            },
+            forks: rng.next_u64() >> 12,
+            peak_branches: rng.gen_range(0, 1000),
+            branches: (0..rng.gen_range(0, 6))
+                .map(|_| (rng.next_u64() as u32, rng.gen_range(0, 10_000)))
+                .collect(),
+        }),
+        _ => PsReply::Err {
+            message: format!("fail {} \"quoted\"\nsecond line\t!", rng.next_u64()),
+        },
+    }
+}
+
+#[test]
+fn prop_ps_frames_roundtrip_bit_exact() {
+    // Every frame — floats as IEEE-754 bit patterns included — must
+    // decode to a structurally identical value (the distributed
+    // bit-exactness guarantee rests on this).
+    prop(300, |rng| {
+        let req = random_ps_request(rng);
+        let line = encode_ps_request(&req);
+        let back = decode_ps_request(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        // f32 NaNs break PartialEq, so compare through bit patterns:
+        // re-encoding the decoded value must give the identical frame.
+        assert_eq!(line, encode_ps_request(&back), "request roundtrip");
+        let reply = random_ps_reply(rng);
+        let line = encode_ps_reply(&reply);
+        let back = decode_ps_reply(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        assert_eq!(line, encode_ps_reply(&back), "reply roundtrip");
+    });
+}
+
+#[test]
+fn prop_ps_decode_never_panics_on_garbage() {
+    // Random bytes and structurally-corrupted frames must produce
+    // errors, not panics or bogus values.
+    prop(300, |rng| {
+        let len = rng.gen_range(0, 64);
+        let junk: String = (0..len)
+            .map(|_| char::from((rng.next_u64() % 94 + 32) as u8))
+            .collect();
+        let _ = decode_ps_request(&junk);
+        let _ = decode_ps_reply(&junk);
+        // a valid frame with one byte chopped off the end
+        let line = encode_ps_request(&random_ps_request(rng));
+        if line.len() > 1 {
+            let cut = rng.gen_range(1, line.len());
+            if let Ok(back) = decode_ps_request(&line[..cut]) {
+                // the rare prefix that still parses must re-encode to
+                // itself (e.g. cutting trailing data off an array is a
+                // JSON error, so Ok here means a genuinely whole frame)
+                assert_eq!(encode_ps_request(&back), line[..cut]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_length_framing_handles_truncation_and_splits() {
+    prop(200, |rng| {
+        let payload: Vec<u8> = (0..rng.gen_range(0, 256)).map(|_| rng.next_u64() as u8).collect();
+        let frame = encode_length_frame(&payload);
+        // full frame decodes exactly
+        let (got, used) = decode_length_frame(&frame).unwrap().unwrap();
+        assert_eq!(got, payload);
+        assert_eq!(used, frame.len());
+        // any strict prefix is "incomplete", never a wrong answer
+        let cut = rng.gen_range(0, frame.len());
+        assert!(decode_length_frame(&frame[..cut]).unwrap().is_none());
+        // oversized length headers are rejected
+        let bad = ((MAX_FRAME_LEN + 1 + rng.gen_range(0, 1 << 20)) as u32).to_be_bytes();
+        assert!(decode_length_frame(&bad).is_err());
     });
 }

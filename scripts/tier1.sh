@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verification (see ROADMAP.md): build + tests on the default
-# feature set, plus fmt/clippy when the components are installed.
+# feature set, plus the distributed multi-process suite and, when the
+# components are installed, fmt/clippy.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -13,12 +14,15 @@ cargo test -q
 # more cross-test thread pressure than the default scheduling gives.
 cargo test --release --test stress_concurrent -- --test-threads=8
 
+# Distributed suite: spawns real `mltuner serve` shard-server processes
+# on loopback ephemeral ports and checks bit-exact parity with the
+# single-process run (mirrors the CI `distributed` leg).
+cargo test --release --test integration_distributed
+
 if cargo fmt --version >/dev/null 2>&1; then
-    # Advisory until the one-shot `cargo fmt` sweep lands (ROADMAP):
-    # the pre-rustfmt tree is not fully clean, and reformatting it is
-    # its own mechanical PR, not a rider on feature work.
-    cargo fmt --check \
-        || echo "tier1: WARNING — tree is not rustfmt-clean (advisory)"
+    # Mandatory since the one-shot rustfmt sweep landed; the style is
+    # pinned by rustfmt.toml at the repo root.
+    cargo fmt --check
 else
     echo "tier1: rustfmt not installed, skipping format check"
 fi
