@@ -176,6 +176,22 @@ fn main() {
             ps.apply_batch(0, &updates, h).unwrap();
         });
     }
+    // batched vs looped reads: the read plane mirrors the write plane
+    // — one routing pass + one read-lock acquisition per shard vs one
+    // lock per row (the gather-phase hot path of both PS apps).
+    {
+        let ps = ps_with_model(343, 4096);
+        let keys: Vec<RowKey> = (0..64u64).collect();
+        bench("ps read_row  x64 rows (looped)", 300.0, 20_000, || {
+            for &k in &keys {
+                black_box(ps.read_row(0, 0, k).unwrap());
+            }
+        });
+        let batch_keys: Vec<(TableId, RowKey)> = keys.iter().map(|&k| (0, k)).collect();
+        bench("ps read_rows x64 rows (1 call)", 300.0, 20_000, || {
+            black_box(ps.read_rows(0, &batch_keys, false));
+        });
+    }
     // Multi-threaded shard throughput on the 2048x4096 acceptance
     // table: aggregate batched-update rows/sec at 1/2/4/8 worker
     // threads over disjoint row slices.  Acceptance: >=2x aggregate

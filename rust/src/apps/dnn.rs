@@ -12,8 +12,10 @@
 //! ## Thread model of one training clock
 //!
 //! 1. **Gather (parallel)** — one thread per worker: switch that
-//!    worker's cache to the branch, assemble the flat parameter
-//!    tensors (server read locks only), and draw the worker's
+//!    worker's cache to the branch, fetch every cache-miss row as one
+//!    batched `read_rows` call (one read-lock acquisition per shard
+//!    locally; one `ReadRows` RPC per shard server remotely),
+//!    assemble the flat parameter tensors, and draw the worker's
 //!    mini-batch from its private cursor.
 //! 2. **Dispatch (sequential)** — the PJRT gradient executions run one
 //!    after another: the runtime owns a single CPU device and an
@@ -96,6 +98,17 @@ struct WorkerJob {
 /// SSP cache (staleness from the branch's tunable).  Free function so
 /// the gather phase can run one worker per thread against the shared
 /// store (in-process server or remote shard servers alike).
+///
+/// Every row the cache cannot serve is fetched as **one** batched
+/// `read_rows` call per worker — one read-lock acquisition per shard
+/// on a local store, one `ReadRows` RPC per shard server on a remote
+/// one — instead of a `read_row` per row.  §Perf: at staleness 0 the
+/// cache can never satisfy a *next*-clock read (every clock
+/// refetches), so the cache bookkeeping is skipped entirely; on an
+/// in-process store that case additionally appends straight out of
+/// each shard's read lock (zero copies — batching only pays off
+/// across a wire, while the row-copy a batch returns would double the
+/// local gather's memory traffic).
 fn gather_worker_params(
     ps: &PsHandle,
     cache: &mut WorkerCache,
@@ -104,34 +117,69 @@ fn gather_worker_params(
     now: Clock,
     staleness: u32,
 ) -> Vec<Vec<f32>> {
-    let mut params = Vec::with_capacity(param_shapes.len());
-    for (t, shape) in param_shapes.iter().enumerate() {
+    let rows_of = |shape: &[usize]| {
         let len: usize = shape.iter().product();
-        let mut flat = Vec::with_capacity(len);
-        let nrows = (len + ROW_LEN - 1) / ROW_LEN;
-        for r in 0..nrows {
-            // §Perf: at staleness 0 the cache can never satisfy a
-            // *next*-clock read (every clock refetches), so skip the
-            // cache bookkeeping entirely and append straight out of
-            // the store (zero-copy from the shard's read lock for a
-            // local store) — halves the gather's memory traffic.
-            if staleness == 0 {
+        (len + ROW_LEN - 1) / ROW_LEN
+    };
+    if staleness == 0 && ps.as_local().is_some() {
+        let mut params = Vec::with_capacity(param_shapes.len());
+        for (t, shape) in param_shapes.iter().enumerate() {
+            let len: usize = shape.iter().product();
+            let mut flat = Vec::with_capacity(len);
+            for r in 0..rows_of(shape) {
                 let found = ps
                     .extend_row_into(branch, t as TableId, r as RowKey, &mut flat)
                     .expect("parameter store read failed");
                 assert!(found, "row must exist");
-                continue;
             }
-            if let Some(row) = cache.get(t as TableId, r as RowKey, now, staleness) {
+            debug_assert_eq!(flat.len(), len);
+            params.push(flat);
+        }
+        return params;
+    }
+    // the rows the cache cannot serve, in assembly order (probe does
+    // get's miss counting/eviction, so CacheStats stay exact)
+    let mut misses: Vec<(TableId, RowKey)> = Vec::new();
+    for (t, shape) in param_shapes.iter().enumerate() {
+        for r in 0..rows_of(shape) {
+            let (t, r) = (t as TableId, r as RowKey);
+            if staleness == 0 || !cache.probe(t, r, now, staleness) {
+                misses.push((t, r));
+            }
+        }
+    }
+    let fetched = if misses.is_empty() {
+        Vec::new()
+    } else {
+        ps.read_rows(branch, &misses, false)
+            .expect("parameter store read failed")
+    };
+    // assemble: cache hits in place, misses drained off the batch
+    // (`misses` is an in-order subsequence of the assembly order)
+    let mut miss_iter = misses.iter().copied().peekable();
+    let mut fetched_iter = fetched.into_iter();
+    let mut params = Vec::with_capacity(param_shapes.len());
+    for (t, shape) in param_shapes.iter().enumerate() {
+        let len: usize = shape.iter().product();
+        let mut flat = Vec::with_capacity(len);
+        for r in 0..rows_of(shape) {
+            let key = (t as TableId, r as RowKey);
+            if miss_iter.peek() == Some(&key) {
+                miss_iter.next();
+                let (row, _) = fetched_iter
+                    .next()
+                    .expect("one fetched row per miss")
+                    .expect("row must exist");
+                flat.extend_from_slice(&row);
+                if staleness > 0 {
+                    cache.put(key.0, key.1, row, now);
+                }
+            } else {
+                let row = cache
+                    .get(key.0, key.1, now, staleness)
+                    .expect("row predicted servable by probe");
                 flat.extend_from_slice(row);
-                continue;
             }
-            let row = ps
-                .read_row(branch, t as TableId, r as RowKey)
-                .expect("parameter store read failed")
-                .expect("row must exist");
-            flat.extend_from_slice(&row);
-            cache.put(t as TableId, r as RowKey, row, now);
         }
         debug_assert_eq!(flat.len(), len);
         params.push(flat);
@@ -515,6 +563,8 @@ impl TrainingSystem for DnnSystem {
             shard_lock_contentions: s.server.shard_lock_contentions,
             batch_calls: s.server.batch_calls,
             batched_rows: s.server.batched_rows,
+            reads_batched: s.server.reads_batched,
+            read_rpcs: s.read_rpcs,
         }
     }
 }

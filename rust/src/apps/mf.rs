@@ -13,12 +13,18 @@
 //! natural fit for the paper's key-value sharding.
 //!
 //! The clock is **data-parallel** (the paper's deployment shape): each
-//! of the `num_workers` worker threads accumulates partial gradients
-//! over its rating partition against the shared concurrent
-//! [`ParamServer`] (read locks only), the partials are merged in worker
-//! order, and the per-row updates are pushed back from all workers in
-//! parallel over disjoint row sets (one AdaRevision read+update per
-//! touched row).
+//! of the `num_workers` worker threads gathers the factor rows its
+//! rating partition touches as **one batched `read_rows` call** (one
+//! read-lock acquisition per shard locally; one `ReadRows` RPC per
+//! shard server remotely — O(servers × workers) data-plane RPCs per
+//! clock instead of O(rating-touched rows)), accumulates partial
+//! gradients against the local copies, the partials are merged in
+//! worker order, and the per-row updates are pushed back from all
+//! workers in parallel over disjoint row sets.  AdaRevision's `z_old`
+//! is the accumulator snapshot gathered *with* the row (§2.3.3: the
+//! update carries the z observed at read time); the row is untouched
+//! between gather and its own update, so the snapshot is identical to
+//! a fresh pre-update read and the push phase needs no reads at all.
 //!
 //! The system drives its store through the [`ParamStore`] interface of
 //! a [`PsHandle`], so the same clock code runs against the in-process
@@ -76,28 +82,23 @@ struct MfBranch {
     clocks_run: u64,
 }
 
-/// One worker thread's private gradient accumulators (dense over rows,
-/// lazily zeroed through the touched flags).
+/// One worker thread's private gradient accumulators plus the local
+/// factor-row copies its batched gather fetched (dense over rows,
+/// lazily zeroed/filled through the touched flags).
 #[derive(Debug)]
 struct WorkerScratch {
     grad_l: Vec<Vec<f32>>,
     grad_r: Vec<Vec<f32>>,
     touched_l: Vec<bool>,
     touched_r: Vec<bool>,
-}
-
-/// Read one factor row through the store, panicking on transport
-/// failure (worker threads have no error channel; a dead shard server
-/// fails the clock loudly rather than training on garbage).
-fn read_factor(
-    ps: &PsHandle,
-    branch: BranchId,
-    table: TableId,
-    key: RowKey,
-    buf: &mut Vec<f32>,
-) -> bool {
-    ps.read_row_into(branch, table, key, buf)
-        .expect("parameter store read failed")
+    /// Local copies of the factor rows this worker's partition touches
+    /// (valid where `touched_*` is set, refreshed every clock).
+    row_l: Vec<Vec<f32>>,
+    row_r: Vec<Vec<f32>>,
+    /// AdaRevision grad-accumulator snapshots gathered with the rows,
+    /// consumed as `z_old` by the push phase.
+    z_l: Vec<Option<Vec<f32>>>,
+    z_r: Vec<Option<Vec<f32>>>,
 }
 
 impl WorkerScratch {
@@ -107,12 +108,36 @@ impl WorkerScratch {
             grad_r: vec![vec![0.0; rank]; items],
             touched_l: vec![false; users],
             touched_r: vec![false; items],
+            row_l: vec![Vec::new(); users],
+            row_r: vec![Vec::new(); items],
+            z_l: vec![None; users],
+            z_r: vec![None; items],
         }
     }
 
     fn reset(&mut self) {
         self.touched_l.iter_mut().for_each(|t| *t = false);
         self.touched_r.iter_mut().for_each(|t| *t = false);
+        // a stale snapshot must never leak into the next clock's push
+        self.z_l.iter_mut().for_each(|z| *z = None);
+        self.z_r.iter_mut().for_each(|z| *z = None);
+    }
+
+    /// The `(table, key)` set this worker's partition touches, in
+    /// table-then-key order — the key list of its batched gather.
+    fn touched_keys(&self) -> Vec<(TableId, RowKey)> {
+        let mut keys = Vec::new();
+        for (u, touched) in self.touched_l.iter().enumerate() {
+            if *touched {
+                keys.push((T_USER, u as RowKey));
+            }
+        }
+        for (i, touched) in self.touched_r.iter().enumerate() {
+            if *touched {
+                keys.push((T_ITEM, i as RowKey));
+            }
+        }
+        keys
     }
 }
 
@@ -125,6 +150,11 @@ pub struct MfSystem {
     /// Per-worker scratch gradient accumulators; index 0 doubles as
     /// the merge target.
     scratch: Vec<WorkerScratch>,
+    /// Training loss of the pristine root, computed once at
+    /// construction — branch 0 is never scheduled or written (§4.5),
+    /// so Testing clocks normalize against this constant instead of
+    /// re-gathering the whole factor model every evaluation.
+    root_loss: f64,
 }
 
 impl MfSystem {
@@ -194,7 +224,7 @@ impl MfSystem {
             },
         );
         let workers = cfg.num_workers.max(1);
-        Ok(MfSystem {
+        let mut sys = MfSystem {
             scratch: (0..workers)
                 .map(|_| WorkerScratch::new(cfg.users, cfg.items, cfg.rank))
                 .collect(),
@@ -203,7 +233,10 @@ impl MfSystem {
             data,
             branches,
             space,
-        })
+            root_loss: 0.0,
+        };
+        sys.root_loss = sys.loss_of(0);
+        Ok(sys)
     }
 
     pub fn space(&self) -> &TunableSpace {
@@ -216,14 +249,45 @@ impl MfSystem {
     }
 
     /// Current training loss (sum of squared errors) of a branch.
+    /// Gathers every rating-touched factor row as one batched read
+    /// (one RPC per shard server when remote).
     pub fn loss_of(&self, branch: BranchId) -> f64 {
-        let mut lu: Vec<f32> = Vec::new();
-        let mut ri: Vec<f32> = Vec::new();
+        let mut seen_l = vec![false; self.cfg.users];
+        let mut seen_r = vec![false; self.cfg.items];
+        for &(u, i, _) in &self.data.ratings {
+            seen_l[u as usize] = true;
+            seen_r[i as usize] = true;
+        }
+        let mut keys: Vec<(TableId, RowKey)> = Vec::new();
+        for (u, seen) in seen_l.iter().enumerate() {
+            if *seen {
+                keys.push((T_USER, u as RowKey));
+            }
+        }
+        for (i, seen) in seen_r.iter().enumerate() {
+            if *seen {
+                keys.push((T_ITEM, i as RowKey));
+            }
+        }
+        let rows = self
+            .ps
+            .read_rows(branch, &keys, false)
+            .expect("parameter store read failed");
+        let mut row_l: Vec<Vec<f32>> = vec![Vec::new(); self.cfg.users];
+        let mut row_r: Vec<Vec<f32>> = vec![Vec::new(); self.cfg.items];
+        for (&(t, k), row) in keys.iter().zip(rows) {
+            let (data, _) = row.expect("factor row must exist");
+            if t == T_USER {
+                row_l[k as usize] = data;
+            } else {
+                row_r[k as usize] = data;
+            }
+        }
         let mut loss = 0f64;
         for &(u, i, r) in &self.data.ratings {
-            assert!(read_factor(&self.ps, branch, T_USER, u as RowKey, &mut lu));
-            assert!(read_factor(&self.ps, branch, T_ITEM, i as RowKey, &mut ri));
-            let pred: f32 = lu.iter().zip(&ri).map(|(a, b)| a * b).sum();
+            let lu = &row_l[u as usize];
+            let ri = &row_r[i as usize];
+            let pred: f32 = lu.iter().zip(ri).map(|(a, b)| a * b).sum();
             let e = (pred - r) as f64;
             loss += e * e;
         }
@@ -235,7 +299,7 @@ impl MfSystem {
     /// reached loss is the threshold.  Here: an analytically reasonable
     /// proxy — a fixed fraction of the initial loss.
     pub fn default_threshold(&self) -> f64 {
-        self.loss_of(0) * 0.05
+        self.root_loss * 0.05
     }
 }
 
@@ -283,10 +347,11 @@ impl TrainingSystem for MfSystem {
         let started = Instant::now();
         if b.branch_type == BranchType::Testing {
             // MF has no validation accuracy; a testing branch reports
-            // the (negated-for-accuracy-semantics) normalized fit.
+            // the (negated-for-accuracy-semantics) normalized fit
+            // against the cached pristine-root loss.
             let loss = self.loss_of(branch_id);
             return Ok(Progress {
-                value: 1.0 - (loss / self.loss_of(0)).min(1.0),
+                value: 1.0 - (loss / self.root_loss).min(1.0),
                 time: started.elapsed().as_secs_f64(),
             });
         }
@@ -297,11 +362,17 @@ impl TrainingSystem for MfSystem {
 
         // One clock = one whole pass, data-parallel.
         //
-        // Phase 1 (parallel): each worker thread accumulates partial
-        // per-row gradients over its rating partition, reading factor
-        // rows from the shared server (read locks only — no writes
-        // happen during this phase, so reads are stable), and computes
-        // its share of the pre-update loss.
+        // Phase 1 (parallel): each worker thread gathers the factor
+        // rows its rating partition touches as ONE batched `read_rows`
+        // call (read locks only — no writes happen during this phase,
+        // so the local copies equal live reads; remote stores issue
+        // one `ReadRows` RPC per shard server), then accumulates
+        // partial per-row gradients and its share of the pre-update
+        // loss against the local copies.  The AdaRevision accumulator
+        // snapshots ride along for the push phase.  A transport
+        // failure panics the worker (no error channel): a dead shard
+        // server fails the clock loudly rather than training on
+        // garbage.
         let workers = self.scratch.len();
         let rank = self.cfg.rank;
         let ps = &self.ps;
@@ -316,16 +387,11 @@ impl TrainingSystem for MfSystem {
             {
                 s.spawn(move || {
                     scratch.reset();
-                    let mut lu: Vec<f32> = Vec::new();
-                    let mut ri: Vec<f32> = Vec::new();
-                    let mut loss = 0f64;
-                    for &(u, i, r) in data.partition(w, workers) {
+                    let part = data.partition(w, workers);
+                    // mark the partition's touched rows, zeroing their
+                    // gradient accumulators on first touch
+                    for &(u, i, _) in part {
                         let (u, i) = (u as usize, i as usize);
-                        assert!(read_factor(ps, branch_id, T_USER, u as RowKey, &mut lu));
-                        assert!(read_factor(ps, branch_id, T_ITEM, i as RowKey, &mut ri));
-                        let pred: f32 = lu.iter().zip(&ri).map(|(a, b)| a * b).sum();
-                        let e = pred - r;
-                        loss += (e as f64) * (e as f64);
                         if !scratch.touched_l[u] {
                             scratch.grad_l[u].iter_mut().for_each(|g| *g = 0.0);
                             scratch.touched_l[u] = true;
@@ -334,6 +400,32 @@ impl TrainingSystem for MfSystem {
                             scratch.grad_r[i].iter_mut().for_each(|g| *g = 0.0);
                             scratch.touched_r[i] = true;
                         }
+                    }
+                    // the batched gather, z snapshots included
+                    let keys = scratch.touched_keys();
+                    let rows = ps
+                        .read_rows(branch_id, &keys, true)
+                        .expect("parameter store read failed");
+                    for (&(t, k), row) in keys.iter().zip(rows) {
+                        let (row_data, z) = row.expect("factor row must exist");
+                        let k = k as usize;
+                        if t == T_USER {
+                            scratch.row_l[k] = row_data;
+                            scratch.z_l[k] = z;
+                        } else {
+                            scratch.row_r[k] = row_data;
+                            scratch.z_r[k] = z;
+                        }
+                    }
+                    // loss + gradients from the local copies
+                    let mut loss = 0f64;
+                    for &(u, i, r) in part {
+                        let (u, i) = (u as usize, i as usize);
+                        let lu = &scratch.row_l[u];
+                        let ri = &scratch.row_r[i];
+                        let pred: f32 = lu.iter().zip(ri).map(|(a, b)| a * b).sum();
+                        let e = pred - r;
+                        loss += (e as f64) * (e as f64);
                         for k in 0..rank {
                             scratch.grad_l[u][k] += e * ri[k];
                             scratch.grad_r[i][k] += e * lu[k];
@@ -348,7 +440,10 @@ impl TrainingSystem for MfSystem {
         // Phase 2 (merge, worker order): fold workers 1.. into worker
         // 0's partials — the full-pass gradient, grouped exactly like
         // the sequential reference (each worker's partial is its own
-        // in-order sum).
+        // in-order sum).  The z snapshots migrate to worker 0 as well:
+        // overlapping workers read identical snapshots (no writes
+        // happen during the gather phase), so first-owner-wins is
+        // deterministic.
         {
             let (acc, rest) = self.scratch.split_at_mut(1);
             let acc = &mut acc[0];
@@ -364,6 +459,9 @@ impl TrainingSystem for MfSystem {
                     for k in 0..rank {
                         acc.grad_l[u][k] += part.grad_l[u][k];
                     }
+                    if acc.z_l[u].is_none() {
+                        acc.z_l[u] = part.z_l[u].take();
+                    }
                 }
                 for i in 0..self.cfg.items {
                     if !part.touched_r[i] {
@@ -376,14 +474,20 @@ impl TrainingSystem for MfSystem {
                     for k in 0..rank {
                         acc.grad_r[i][k] += part.grad_r[i][k];
                     }
+                    if acc.z_r[i].is_none() {
+                        acc.z_r[i] = part.z_r[i].take();
+                    }
                 }
             }
         }
 
         // Phase 3 (parallel): push the merged per-row updates through
         // the server from all workers, disjoint row sets per worker
-        // (row index mod workers).  AdaRevision gets the z snapshot
-        // read just before its row's update, as in the sequential path.
+        // (row index mod workers).  AdaRevision's `z_old` is the
+        // snapshot gathered with the row in phase 1 — the row is
+        // untouched between the gather and its own (single) update, so
+        // the snapshot equals a fresh pre-update read and this phase
+        // issues zero read RPCs.
         let acc = &self.scratch[0];
         let users = self.cfg.users;
         let items = self.cfg.items;
@@ -395,32 +499,26 @@ impl TrainingSystem for MfSystem {
                             if !acc.touched_l[u] {
                                 continue;
                             }
-                            let z_old = ps
-                                .read_row_with_accum(branch_id, T_USER, u as RowKey)?
-                                .and_then(|(_, z)| z);
                             ps.apply_update(
                                 branch_id,
                                 T_USER,
                                 u as RowKey,
                                 &acc.grad_l[u],
                                 hyper,
-                                z_old.as_deref(),
+                                acc.z_l[u].as_deref(),
                             )?;
                         }
                         for i in (w..items).step_by(workers) {
                             if !acc.touched_r[i] {
                                 continue;
                             }
-                            let z_old = ps
-                                .read_row_with_accum(branch_id, T_ITEM, i as RowKey)?
-                                .and_then(|(_, z)| z);
                             ps.apply_update(
                                 branch_id,
                                 T_ITEM,
                                 i as RowKey,
                                 &acc.grad_r[i],
                                 hyper,
-                                z_old.as_deref(),
+                                acc.z_r[i].as_deref(),
                             )?;
                         }
                         Ok(())
@@ -473,6 +571,8 @@ impl TrainingSystem for MfSystem {
             shard_lock_contentions: s.server.shard_lock_contentions,
             batch_calls: s.server.batch_calls,
             batched_rows: s.server.batched_rows,
+            reads_batched: s.server.reads_batched,
+            read_rpcs: s.read_rpcs,
         }
     }
 }

@@ -13,9 +13,17 @@
 //!
 //! **Data plane** — the parameter-server RPCs
 //! ([`wire::PsRequest`]/[`wire::PsReply`]) a training process issues
-//! against remote shard servers: row reads, routed batched updates,
-//! replicated branch fork/free, and the stats probe.  Row payloads are
-//! f32 bit patterns, so remote runs are bit-identical to local ones.
+//! against remote shard servers.  Both directions of the hot path are
+//! batched and routed once per call: updates group per shard server
+//! into one `ApplyBatch` frame, and the gather phases' reads group the
+//! same way into one `ReadRows` frame per server (±the AdaRevision
+//! accumulator snapshot per row), so a data-parallel clock costs
+//! O(shard servers × workers) RPCs instead of O(touched rows).
+//! Single-row reads/updates, replicated branch fork/free, and the
+//! stats probe ride the same frames; each client↔server link is a
+//! small per-worker connection pool (one lease per in-flight RPC).
+//! Row payloads are f32 bit patterns, so remote runs are bit-identical
+//! to local ones.
 //!
 //! Three carriers implement the byte stream:
 //!

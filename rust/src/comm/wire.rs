@@ -14,10 +14,13 @@
 //!   round-trippable decimal).
 //! * **Data plane** — the parameter-server RPCs
 //!   ([`PsRequest`]/[`PsReply`]) that a remote training process issues
-//!   against a shard server: row reads, batched updates, branch
-//!   fork/free replication, and the stats probe.  Row payloads are
-//!   `f32` values encoded as their IEEE-754 **bit patterns** (`u32`
-//!   integers), so every value — including NaN payloads and the
+//!   against a shard server: row reads (single `ReadRow` and the
+//!   batched `ReadRows`/`RowsData` pair the gather phases ride — one
+//!   frame carries a whole per-server key group, with the optional
+//!   AdaRevision accumulator snapshot per row), batched updates,
+//!   branch fork/free replication, and the stats probe.  Row payloads
+//!   are `f32` values encoded as their IEEE-754 **bit patterns**
+//!   (`u32` integers), so every value — including NaN payloads and the
 //!   infinities a diverging trial produces — survives the wire
 //!   bit-exact, which is what makes remote training runs bit-identical
 //!   to local ones.
@@ -32,8 +35,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::optim::Hyper;
 use crate::ps::pool::PoolStats;
-use crate::ps::ServerStats;
 use crate::ps::storage::{RowKey, TableId};
+use crate::ps::{RowData, ServerStats};
 use crate::tunable::TunableSetting;
 use crate::util::json::Json;
 
@@ -215,6 +218,14 @@ pub enum PsRequest {
         key: RowKey,
         with_accum: bool,
     },
+    /// Read this server's group of a routed batch of keys under the
+    /// engine's batched read path (one read-lock acquisition per local
+    /// shard).  The reply lists one row per key, in key order.
+    ReadRows {
+        branch: BranchId,
+        with_accum: bool,
+        keys: Vec<(TableId, RowKey)>,
+    },
     /// Apply one row update (the AdaRevision path, which carries the
     /// `z_old` snapshot read together with the row).
     ApplyUpdate {
@@ -267,6 +278,11 @@ pub enum PsReply {
         data: Option<Vec<f32>>,
         accum: Option<Vec<f32>>,
     },
+    /// One row per requested key, in key order (`None` = missing row);
+    /// each present row carries its data and, when the request asked
+    /// `with_accum`, the AdaRevision accumulator snapshot.  All floats
+    /// are bit patterns, like every other row payload.
+    RowsData { rows: Vec<Option<RowData>> },
     Stats(PsStats),
     Err { message: String },
 }
@@ -370,6 +386,23 @@ pub fn encode_ps_request(req: &PsRequest) -> String {
                 "{{\"op\":\"read\",\"branch\":{branch},\"table\":{table},\"key\":{key},\"accum\":{with_accum}}}"
             );
         }
+        PsRequest::ReadRows {
+            branch,
+            with_accum,
+            keys,
+        } => {
+            let _ = write!(
+                out,
+                "{{\"op\":\"read_rows\",\"branch\":{branch},\"accum\":{with_accum},\"keys\":["
+            );
+            for (i, (table, key)) in keys.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "[{table},{key}]");
+            }
+            out.push_str("]}");
+        }
         PsRequest::ApplyUpdate {
             branch,
             table,
@@ -442,6 +475,25 @@ pub fn decode_ps_request(line: &str) -> Result<PsRequest> {
                 _ => bail!("bad accum: not a bool"),
             },
         }),
+        "read_rows" => Ok(PsRequest::ReadRows {
+            branch: num_u32(field(&v, "branch")?, "branch")?,
+            with_accum: match field(&v, "accum")? {
+                Json::Bool(b) => *b,
+                _ => bail!("bad accum: not a bool"),
+            },
+            keys: field(&v, "keys")?
+                .as_array()
+                .ok_or_else(|| anyhow!("bad keys: not an array"))?
+                .iter()
+                .map(|k| {
+                    let k = k.as_array().ok_or_else(|| anyhow!("bad key pair"))?;
+                    if k.len() != 2 {
+                        bail!("bad key pair: len {}", k.len());
+                    }
+                    Ok((num_u32(&k[0], "table")?, num_u64(&k[1], "key")?))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        }),
         "update" => Ok(PsRequest::ApplyUpdate {
             branch: num_u32(field(&v, "branch")?, "branch")?,
             table: num_u32(field(&v, "table")?, "table")?,
@@ -510,15 +562,36 @@ pub fn encode_ps_reply(reply: &PsReply) -> String {
             push_opt_f32_bits(&mut out, accum.as_deref());
             out.push('}');
         }
+        PsReply::RowsData { rows } => {
+            out.push_str("{\"op\":\"rows\",\"rows\":[");
+            for (i, row) in rows.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                match row {
+                    None => out.push_str("null"),
+                    Some((data, accum)) => {
+                        out.push('[');
+                        push_f32_bits(&mut out, data);
+                        out.push(',');
+                        push_opt_f32_bits(&mut out, accum.as_deref());
+                        out.push(']');
+                    }
+                }
+            }
+            out.push_str("]}");
+        }
         PsReply::Stats(s) => {
             let _ = write!(
                 out,
                 "{{\"op\":\"stats\",\"contended\":{},\"batch_calls\":{},\"batched_rows\":{},\
+                 \"reads_batched\":{},\
                  \"reused\":{},\"allocated\":{},\"idle\":{},\"idle_len\":{},\
                  \"forks\":{},\"peak\":{},\"branches\":[",
                 s.server.shard_lock_contentions,
                 s.server.batch_calls,
                 s.server.batched_rows,
+                s.server.reads_batched,
                 s.pool.reused,
                 s.pool.allocated,
                 s.pool.idle,
@@ -563,6 +636,26 @@ pub fn decode_ps_reply(line: &str) -> Result<PsReply> {
             data: opt_f32_bits_array(field(&v, "data")?, "data")?,
             accum: opt_f32_bits_array(field(&v, "accum")?, "accum")?,
         }),
+        "rows" => Ok(PsReply::RowsData {
+            rows: field(&v, "rows")?
+                .as_array()
+                .ok_or_else(|| anyhow!("bad rows: not an array"))?
+                .iter()
+                .map(|r| match r {
+                    Json::Null => Ok(None),
+                    r => {
+                        let r = r.as_array().ok_or_else(|| anyhow!("bad row pair"))?;
+                        if r.len() != 2 {
+                            bail!("bad row pair: len {}", r.len());
+                        }
+                        Ok(Some((
+                            f32_bits_array(&r[0], "data")?,
+                            opt_f32_bits_array(&r[1], "accum")?,
+                        )))
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?,
+        }),
         "stats" => {
             let branches = field(&v, "branches")?
                 .as_array()
@@ -581,6 +674,7 @@ pub fn decode_ps_reply(line: &str) -> Result<PsReply> {
                     shard_lock_contentions: num_u64(field(&v, "contended")?, "contended")?,
                     batch_calls: num_u64(field(&v, "batch_calls")?, "batch_calls")?,
                     batched_rows: num_u64(field(&v, "batched_rows")?, "batched_rows")?,
+                    reads_batched: num_u64(field(&v, "reads_batched")?, "reads_batched")?,
                 },
                 pool: PoolStats {
                     reused: num_u64(field(&v, "reused")?, "reused")?,
@@ -716,6 +810,16 @@ mod tests {
             key: u64::MAX >> 12,
             with_accum: true,
         });
+        roundtrip_req(&PsRequest::ReadRows {
+            branch: 3,
+            with_accum: true,
+            keys: vec![(0, 7), (1, u64::MAX >> 12), (0, 0)],
+        });
+        roundtrip_req(&PsRequest::ReadRows {
+            branch: 0,
+            with_accum: false,
+            keys: vec![],
+        });
         roundtrip_req(&PsRequest::ApplyUpdate {
             branch: 1,
             table: 0,
@@ -756,11 +860,20 @@ mod tests {
             accum: None,
         });
         roundtrip_reply(&PsReply::Row { data: None, accum: None });
+        roundtrip_reply(&PsReply::RowsData {
+            rows: vec![
+                Some((vec![1.0, f32::NEG_INFINITY, -0.0], None)),
+                None,
+                Some((vec![], Some(vec![2.5, 1.0e-45]))),
+            ],
+        });
+        roundtrip_reply(&PsReply::RowsData { rows: vec![] });
         roundtrip_reply(&PsReply::Stats(PsStats {
             server: ServerStats {
                 shard_lock_contentions: 3,
                 batch_calls: 10,
                 batched_rows: 640,
+                reads_batched: 4096,
             },
             pool: PoolStats {
                 reused: 1,
@@ -826,6 +939,24 @@ mod tests {
         );
         assert!(decode_ps_reply("{\"op\":\"row\"}").is_err());
         assert!(decode_ps_reply("{\"op\":\"stats\"}").is_err());
+        // batched-read frames decode just as strictly
+        assert!(
+            decode_ps_request("{\"op\":\"read_rows\",\"branch\":0,\"accum\":true,\"keys\":[[0]]}")
+                .is_err()
+        );
+        assert!(
+            decode_ps_request("{\"op\":\"read_rows\",\"branch\":0,\"accum\":1,\"keys\":[]}")
+                .is_err()
+        );
+        assert!(
+            decode_ps_request(
+                "{\"op\":\"read_rows\",\"branch\":0,\"accum\":false,\"keys\":[[0,1.5]]}"
+            )
+            .is_err()
+        );
+        assert!(decode_ps_reply("{\"op\":\"rows\"}").is_err());
+        assert!(decode_ps_reply("{\"op\":\"rows\",\"rows\":[[[1.5],null]]}").is_err());
+        assert!(decode_ps_reply("{\"op\":\"rows\",\"rows\":[[]]}").is_err());
     }
 
     #[test]

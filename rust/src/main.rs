@@ -134,9 +134,12 @@ fn cmd_tune(args: &Args) -> Result<()> {
         report.snapshots.cow_buffer_copies
     );
     println!(
-        "server:          {} rows in {} update batches, {} shard-lock contentions",
+        "server:          {} rows in {} update batches, {} rows batch-read \
+         ({} read RPCs), {} shard-lock contentions",
         report.snapshots.batched_rows,
         report.snapshots.batch_calls,
+        report.snapshots.reads_batched,
+        report.snapshots.read_rpcs,
         report.snapshots.shard_lock_contentions
     );
     for (i, t) in report.tunings.iter().enumerate() {

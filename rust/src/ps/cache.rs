@@ -99,6 +99,33 @@ impl WorkerCache {
         }
     }
 
+    /// The miss-side bookkeeping of [`WorkerCache::get`], split out
+    /// for the batched gather: a servable row returns `true` with the
+    /// hit *not* counted (the assembly's later `get` counts it);
+    /// otherwise the miss is counted — a stale row evicted and counted
+    /// exactly as `get` would — and `false` says "fetch this row in
+    /// the batch".  Scanning with `probe` and reading hits with `get`
+    /// therefore keeps [`CacheStats`] identical to the row-at-a-time
+    /// gather's.
+    pub fn probe(&mut self, table: TableId, key: RowKey, now: Clock, staleness: u32) -> bool {
+        match self.rows.entry((table, key)) {
+            MapEntry::Occupied(e) => {
+                if now.saturating_sub(e.get().fetched_at) <= staleness as Clock {
+                    true
+                } else {
+                    e.remove();
+                    self.stats.stale_evictions += 1;
+                    self.stats.misses += 1;
+                    false
+                }
+            }
+            MapEntry::Vacant(_) => {
+                self.stats.misses += 1;
+                false
+            }
+        }
+    }
+
     /// Install a freshly-fetched row.
     pub fn put(&mut self, table: TableId, key: RowKey, data: Vec<f32>, now: Clock) {
         self.rows.insert((table, key), CachedRow {
@@ -159,6 +186,24 @@ mod tests {
                 assert_eq!(got.is_some(), age <= s as u64, "age={age} s={s}");
             }
         }
+    }
+
+    #[test]
+    fn probe_counts_misses_and_evicts_like_get_but_not_hits() {
+        let mut c = WorkerCache::new();
+        c.switch_branch(1);
+        c.put(0, 5, vec![1.0], 10);
+        assert!(c.probe(0, 5, 12, 2)); // servable: NOT counted as a hit
+        assert_eq!(c.stats(), CacheStats::default());
+        // a probed-servable row then hits through get, counted once
+        assert!(c.get(0, 5, 12, 2).is_some());
+        assert_eq!(c.stats().hits, 1);
+        assert!(!c.probe(0, 6, 12, 2)); // absent: counted as a miss
+        assert_eq!(c.stats().misses, 1);
+        assert!(!c.probe(0, 5, 13, 2)); // stale: evicted + counted
+        assert_eq!(c.stats().stale_evictions, 1);
+        assert_eq!(c.stats().misses, 2);
+        assert_eq!(c.len(), 0, "stale row must be evicted like get does");
     }
 
     #[test]

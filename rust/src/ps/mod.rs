@@ -64,6 +64,22 @@
 //! observationally identical to the equivalent `apply_update` sequence
 //! (`prop_apply_batch_equals_update_sequence` checks this).
 //!
+//! ## Batched reads
+//!
+//! The read plane mirrors the write plane.  Row-at-a-time readers
+//! (`read_row`, `with_row`) take one shard read lock per row; the hot
+//! path for data-parallel gather phases is [`ParamServer::read_rows`]:
+//! route every `(table, key)` once, group the keys per shard, and
+//! serve each shard's whole group under a **single** read-lock
+//! acquisition, visiting shards from a rotating offset exactly like
+//! `apply_batch` so concurrent gather workers don't convoy.  Reads
+//! never mutate, so `read_rows` is trivially observationally identical
+//! to the equivalent `read_row` sequence
+//! (`prop_read_rows_matches_row_reads` checks it anyway).  The
+//! `with_accum` variant additionally snapshots each row's AdaRevision
+//! grad accumulator (slot 1), so one batched call replaces the
+//! read+read_with_accum pair of the AdaRevision gather.
+//!
 //! ## Branch fan-out
 //!
 //! `fork_branch`/`free_branch` touch every shard.  For small branches
@@ -95,6 +111,11 @@ use storage::{Entry, RowKey, Shard, TableId};
 /// rows and above; below it the per-shard loop is sequential (an
 /// index-only fork is cheaper than thread spawns).
 pub const PARALLEL_BRANCH_OP_MIN_ROWS: usize = 8192;
+
+/// One row as returned by the batched read plane: the row data plus —
+/// when requested `with_accum` — the AdaRevision grad-accumulator
+/// snapshot (slot 1) to be handed back as `z_old` with the update.
+pub type RowData = (Vec<f32>, Option<Vec<f32>>);
 
 /// One shard's lock domain: its row index and its private buffer pool.
 /// Keeping the pool inside the shard lock makes copy-on-write
@@ -129,6 +150,10 @@ struct Counters {
     batch_calls: AtomicU64,
     /// Rows applied through `apply_batch`.
     batched_rows: AtomicU64,
+    /// `read_rows` invocations (drives the read-side shard rotation).
+    read_calls: AtomicU64,
+    /// Rows requested through `read_rows`.
+    reads_batched: AtomicU64,
 }
 
 /// Concurrency statistics snapshot (surfaced through
@@ -141,6 +166,8 @@ pub struct ServerStats {
     pub batch_calls: u64,
     /// Rows applied through the batched path.
     pub batched_rows: u64,
+    /// Rows requested through the batched read path (`read_rows`).
+    pub reads_batched: u64,
 }
 
 #[inline]
@@ -401,6 +428,7 @@ impl ParamServer {
             shard_lock_contentions: self.counters.contended.load(Ordering::Relaxed),
             batch_calls: self.counters.batch_calls.load(Ordering::Relaxed),
             batched_rows: self.counters.batched_rows.load(Ordering::Relaxed),
+            reads_batched: self.counters.reads_batched.load(Ordering::Relaxed),
         }
     }
 
@@ -449,6 +477,47 @@ impl ParamServer {
             buf.extend_from_slice(&e.data);
         })
         .is_some()
+    }
+
+    /// Read a whole batch of rows: route every key once, group the
+    /// keys per shard, and serve each shard's group under a single
+    /// read-lock acquisition, visiting shards from a rotating offset
+    /// (the read-plane mirror of [`ParamServer::apply_batch`]).
+    /// Results come back in key order; a missing row is `None`.  With
+    /// `with_accum` each row also carries its AdaRevision
+    /// grad-accumulator snapshot (slot 1).
+    pub fn read_rows(
+        &self,
+        branch: BranchId,
+        keys: &[(TableId, RowKey)],
+        with_accum: bool,
+    ) -> Vec<Option<RowData>> {
+        let n = self.shards.len();
+        let mut out: Vec<Option<RowData>> = vec![None; keys.len()];
+        if keys.is_empty() {
+            return out;
+        }
+        let rotation = self.counters.read_calls.fetch_add(1, Ordering::Relaxed) as usize % n;
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, &(table, key)) in keys.iter().enumerate() {
+            groups[route(table, key, n)].push(i);
+        }
+        for off in 0..n {
+            let sid = (rotation + off) % n;
+            if groups[sid].is_empty() {
+                continue;
+            }
+            let st = read_shard(&self.shards[sid], &self.counters);
+            for &i in &groups[sid] {
+                let (table, key) = keys[i];
+                out[i] = st.shard.get(branch, table, key).map(|e| {
+                    let accum = if with_accum { e.slots.get(1).cloned() } else { None };
+                    (e.data.clone(), accum)
+                });
+            }
+        }
+        self.counters.reads_batched.fetch_add(keys.len() as u64, Ordering::Relaxed);
+        out
     }
 
     /// AdaRevision's read: row data plus the current grad-accumulator
@@ -618,6 +687,11 @@ pub struct StoreStats {
     /// Buffers privately materialized by copy-on-write
     /// (`pool.allocated + pool.reused`).
     pub cow_buffer_copies: u64,
+    /// Data-plane `ReadRows` RPCs issued by this store's client side.
+    /// Always 0 for the in-process server (no wire); for a remote
+    /// store this is the dominant per-clock RPC count the batched read
+    /// plane bounds at O(shard servers × workers).
+    pub read_rpcs: u64,
     pub server: ServerStats,
     pub pool: PoolStats,
 }
@@ -659,6 +733,19 @@ pub trait ParamStore: Send + Sync {
         table: TableId,
         key: RowKey,
     ) -> Result<Option<(Vec<f32>, Option<Vec<f32>>)>>;
+
+    /// Read a whole batch of rows, results in key order (`None` for a
+    /// missing row); `with_accum` additionally snapshots each row's
+    /// AdaRevision grad accumulator.  The batched read plane: a local
+    /// store serves each shard's group under one lock acquisition, a
+    /// remote store issues one `ReadRows` RPC per shard server — the
+    /// data-parallel gather phases read through this.
+    fn read_rows(
+        &self,
+        branch: BranchId,
+        keys: &[(TableId, RowKey)],
+        with_accum: bool,
+    ) -> Result<Vec<Option<RowData>>>;
 
     /// Copy one row into `buf` (cleared first); `Ok(false)` when absent.
     fn read_row_into(
@@ -764,6 +851,15 @@ impl ParamStore for ParamServer {
         Ok(ParamServer::read_row_with_accum(self, branch, table, key))
     }
 
+    fn read_rows(
+        &self,
+        branch: BranchId,
+        keys: &[(TableId, RowKey)],
+        with_accum: bool,
+    ) -> Result<Vec<Option<RowData>>> {
+        Ok(ParamServer::read_rows(self, branch, keys, with_accum))
+    }
+
     fn read_row_into(
         &self,
         branch: BranchId,
@@ -822,6 +918,7 @@ impl ParamStore for ParamServer {
             peak_branches: self.peak_branches(),
             live_branches: ParamServer::live_branches(self).len(),
             cow_buffer_copies: pool.allocated + pool.reused,
+            read_rpcs: 0, // in-process: reads never cross a wire
             server: self.server_stats(),
             pool,
         })
@@ -891,6 +988,15 @@ impl ParamStore for PsHandle {
         key: RowKey,
     ) -> Result<Option<(Vec<f32>, Option<Vec<f32>>)>> {
         dispatch!(self, ps => ParamStore::read_row_with_accum(ps, branch, table, key))
+    }
+
+    fn read_rows(
+        &self,
+        branch: BranchId,
+        keys: &[(TableId, RowKey)],
+        with_accum: bool,
+    ) -> Result<Vec<Option<RowData>>> {
+        dispatch!(self, ps => ParamStore::read_rows(ps, branch, keys, with_accum))
     }
 
     fn read_row_into(
@@ -1166,6 +1272,36 @@ mod tests {
         assert_eq!(st.batched_rows, 20);
         // single-threaded: no shard lock was ever contended
         assert_eq!(st.shard_lock_contentions, 0);
+    }
+
+    #[test]
+    fn read_rows_matches_row_reads_including_accum_and_missing() {
+        let ps = ps(OptimizerKind::AdaRevision);
+        init_root(&ps, 16, 4);
+        let h = Hyper { lr: 0.1, momentum: 0.0 };
+        // build up non-trivial accumulator state first
+        for k in 0..16u64 {
+            let (_, z) = ps.read_row_with_accum(0, 0, k).unwrap();
+            ps.apply_update(0, 0, k, &[1.0; 4], h, z.as_deref()).unwrap();
+        }
+        let mut keys: Vec<(TableId, RowKey)> = (0..16u64).map(|k| (0u32, k)).collect();
+        keys.push((0, 99)); // missing row
+        keys.push((7, 0)); // missing table
+        let batched = ps.read_rows(0, &keys, true);
+        assert_eq!(batched.len(), keys.len());
+        for (&(t, k), got) in keys.iter().zip(&batched) {
+            assert_eq!(got, &ps.read_row_with_accum(0, t, k), "row ({t},{k})");
+        }
+        // without accum the snapshot is suppressed
+        let plain = ps.read_rows(0, &keys[..16], false);
+        for (&(t, k), got) in keys[..16].iter().zip(&plain) {
+            let (data, accum) = got.as_ref().unwrap();
+            assert_eq!(Some(data.clone()), ps.read_row(0, t, k));
+            assert_eq!(accum, &None);
+        }
+        let st = ps.server_stats();
+        assert_eq!(st.reads_batched, 18 + 16);
+        assert!(ps.read_rows(0, &[], false).is_empty());
     }
 
     #[test]

@@ -61,15 +61,30 @@ impl Searcher for BayesianOptSearcher {
             let cand: Vec<f64> =
                 (0..self.dim).map(|_| self.rng.gen_f64()).collect();
             let ei = gp.expected_improvement(&cand, best);
+            // a NaN EI (a GP poisoned by degenerate observations) must
+            // never win the argmax — `ei > best_ei` is false for NaN,
+            // so it is skipped rather than crowning a garbage point
             if ei > best_ei {
                 best_ei = ei;
                 best_x = Some(cand);
             }
         }
-        Proposal::Point(best_x.unwrap())
+        match best_x {
+            Some(x) => Proposal::Point(x),
+            // Regression: when EVERY candidate's EI is NaN the argmax
+            // stays empty — `best_x.unwrap()` here used to panic the
+            // tune.  Fall back to pure exploration instead.
+            None => Proposal::Point((0..self.dim).map(|_| self.rng.gen_f64()).collect()),
+        }
     }
 
     fn observe(&mut self, point: Vec<f64>, speed: f64) {
+        // A diverged trial can report a NaN or ±Inf speed; one such
+        // observation poisons the whole GP posterior (every kernel
+        // solve and EI turns NaN).  Record it as the worst legal
+        // score — the paper's treatment of diverged settings — so the
+        // searcher keeps working and the setting simply loses.
+        let speed = if speed.is_finite() { speed } else { 0.0 };
         self.observations.push((point, speed));
     }
 
@@ -91,6 +106,31 @@ mod tests {
         // The Spearmint pathology of §5.2, reproduced deliberately.
         let mut s = BayesianOptSearcher::new(4, 123);
         assert_eq!(s.propose(), Proposal::Point(vec![0.0; 4]));
+    }
+
+    #[test]
+    fn nan_observations_never_panic_the_proposer() {
+        // Regression: NaN speeds fed to `observe` poisoned the GP and
+        // `best_x.unwrap()` panicked in `propose`.  NaN/±Inf are now
+        // sanitized to 0.0 and a NaN-EI sweep falls back to a random
+        // point, so proposals keep flowing inside the unit cube.
+        let mut s = BayesianOptSearcher::new(2, 99);
+        for round in 0..20 {
+            match s.propose() {
+                Proposal::Exhausted => unreachable!("bayesian never exhausts"),
+                Proposal::Point(p) => {
+                    assert_eq!(p.len(), 2);
+                    assert!(p.iter().all(|&u| (0.0..=1.0).contains(&u)), "{p:?}");
+                    let bad = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY][round % 3];
+                    s.observe(p, bad);
+                }
+            }
+        }
+        assert_eq!(s.observations().len(), 20);
+        assert!(
+            s.observations().iter().all(|(_, sp)| *sp == 0.0),
+            "non-finite speeds must be recorded as the worst legal score"
+        );
     }
 
     #[test]

@@ -77,6 +77,23 @@ impl SearcherKind {
     }
 }
 
+/// Descending total order on convergence speeds that ranks NaN (and
+/// treats it like any other diverged score) **strictly worst**.  A
+/// diverged trial can surface a NaN speed; comparing it with
+/// `partial_cmp().unwrap()` panics the whole tune instead of letting
+/// the bad setting lose (that crash was live in `TpeSearcher::split`;
+/// see also the Bayesian EI argmax) — every speed ranking must go
+/// through a total order like this one.
+pub fn cmp_speed_desc(a: &f64, b: &f64) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater, // NaN sorts after everything
+        (false, true) => Ordering::Less,
+        (false, false) => b.partial_cmp(a).expect("both comparable"),
+    }
+}
+
 /// The paper's stopping condition: stop searching when the top five
 /// best **non-zero** convergence speeds differ by less than 10%.
 #[derive(Debug, Clone, Copy)]
@@ -96,15 +113,21 @@ impl Default for StoppingCondition {
 
 impl StoppingCondition {
     pub fn should_stop(&self, observations: &[(Vec<f64>, f64)]) -> bool {
+        // Only finite positive speeds count toward the top-5: a NaN
+        // speed is a diverged setting that must simply lose (the old
+        // `> 0.0` filter happened to drop NaN before the
+        // `partial_cmp().unwrap()` sort, but only by accident — the
+        // total order makes that immune to filter changes), and an
+        // infinite speed can't support a relative-spread comparison.
         let mut speeds: Vec<f64> = observations
             .iter()
             .map(|(_, s)| *s)
-            .filter(|s| *s > 0.0)
+            .filter(|s| s.is_finite() && *s > 0.0)
             .collect();
         if speeds.len() < self.top_n {
             return false;
         }
-        speeds.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        speeds.sort_by(cmp_speed_desc);
         let top = &speeds[..self.top_n];
         let best = top[0];
         let worst = top[self.top_n - 1];
@@ -136,6 +159,36 @@ mod tests {
         assert!(c.should_stop(&obs(&[1.0, 1.0, 1.0, 1.0, 0.91])));
         // worse tails beyond the top-5 don't matter
         assert!(c.should_stop(&obs(&[1.0, 0.99, 0.98, 0.97, 0.96, 0.1, 0.0])));
+    }
+
+    #[test]
+    fn stopping_survives_nan_and_inf_speeds() {
+        // NaN and ±Inf speeds must simply not count toward the top-5
+        // (and must never panic the ranking, whatever the filter in
+        // front of it does — the unwrap-sort crash was live in
+        // TpeSearcher::split, which now shares cmp_speed_desc).
+        let c = StoppingCondition::default();
+        assert!(!c.should_stop(&obs(&[f64::NAN; 8])));
+        assert!(!c.should_stop(&obs(&[
+            1.0,
+            1.0,
+            f64::NAN,
+            1.0,
+            1.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY
+        ])));
+        // five finite near-equal speeds still stop, NaNs mixed in
+        assert!(c.should_stop(&obs(&[f64::NAN, 1.0, 1.0, 1.0, 0.99, 1.0, f64::NAN])));
+    }
+
+    #[test]
+    fn speed_order_ranks_nan_strictly_worst() {
+        let mut speeds = vec![0.5, f64::NAN, 2.0, f64::NAN, 1.0, f64::INFINITY];
+        speeds.sort_by(cmp_speed_desc);
+        assert_eq!(speeds[0], f64::INFINITY);
+        assert_eq!(&speeds[1..4], &[2.0, 1.0, 0.5]);
+        assert!(speeds[4].is_nan() && speeds[5].is_nan());
     }
 
     #[test]

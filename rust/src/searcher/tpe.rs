@@ -9,7 +9,7 @@
 
 use crate::util::rng::Rng;
 
-use super::{Proposal, Searcher};
+use super::{cmp_speed_desc, Proposal, Searcher};
 
 const N_STARTUP_MIN: usize = 10;
 const N_CANDIDATES: usize = 24;
@@ -44,11 +44,12 @@ impl TpeSearcher {
     /// Split observed points into (good, bad) by the γ quantile of speed.
     fn split(&self) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
         let mut idx: Vec<usize> = (0..self.observations.len()).collect();
+        // NaN-strictly-worst total order: a diverged trial's NaN speed
+        // lands in the "bad" set instead of panicking the sort — this
+        // was the live `partial_cmp().unwrap()` crash site (nothing
+        // filtered NaN ahead of it, unlike should_stop's ranking).
         idx.sort_by(|&a, &b| {
-            self.observations[b]
-                .1
-                .partial_cmp(&self.observations[a].1)
-                .unwrap()
+            cmp_speed_desc(&self.observations[a].1, &self.observations[b].1)
         });
         let n_good = ((GAMMA * idx.len() as f64).ceil() as usize)
             .clamp(1, idx.len().saturating_sub(1).max(1));
@@ -117,6 +118,10 @@ impl Searcher for TpeSearcher {
     }
 
     fn observe(&mut self, point: Vec<f64>, speed: f64) {
+        // Non-finite speeds (diverged trials) are recorded as the
+        // worst legal score, mirroring BayesianOptSearcher: they must
+        // lose the quantile split, never poison it.
+        let speed = if speed.is_finite() { speed } else { 0.0 };
         self.observations.push((point, speed));
     }
 
@@ -153,6 +158,26 @@ mod tests {
             }
         }
         Ok(())
+    }
+
+    #[test]
+    fn nan_observations_never_panic_the_split() {
+        // Regression (sibling of the bayesian fix): a NaN speed fed
+        // straight to observe used to panic split()'s sort once the
+        // model kicked in.  It now lands in the "bad" set via the
+        // 0.0 sanitization and the NaN-worst total order.
+        let mut s = TpeSearcher::new(2, 7);
+        for round in 0..(s.n_startup + 8) {
+            match s.propose() {
+                Proposal::Exhausted => unreachable!("TPE never exhausts"),
+                Proposal::Point(p) => {
+                    assert!(p.iter().all(|&u| (0.0..=1.0).contains(&u)), "{p:?}");
+                    let speed = if round % 3 == 0 { f64::NAN } else { round as f64 };
+                    s.observe(p, speed);
+                }
+            }
+        }
+        assert!(s.observations().iter().all(|(_, sp)| sp.is_finite()));
     }
 
     #[test]

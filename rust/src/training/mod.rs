@@ -64,6 +64,14 @@ pub struct SnapshotStats {
     pub batch_calls: u64,
     /// Rows applied through the batched update path.
     pub batched_rows: u64,
+    /// Rows requested through the batched read path (`read_rows` —
+    /// the gather phases of the parameter-server apps).
+    pub reads_batched: u64,
+    /// Data-plane `ReadRows` RPCs the store's client issued: 0 for an
+    /// in-process store; for a remote store the batched read plane
+    /// bounds it at O(shard servers × workers) per training clock
+    /// (asserted by the distributed CI leg).
+    pub read_rpcs: u64,
 }
 
 /// The training-system side of the Table-1 message interface.

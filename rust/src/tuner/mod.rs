@@ -188,13 +188,22 @@ impl<S: TrainingSystem> MLtuner<S> {
     }
 
     fn schedule(&mut self, branch: BranchId) -> Result<Progress> {
-        let p = self
-            .driver
-            .send(&TunerMsg::ScheduleBranch {
-                clock: self.clock,
-                branch_id: branch,
-            })?
-            .expect("schedule returns progress");
+        // A ScheduleBranch must come back with a progress report; a
+        // driver (possibly fronting a remote training system) that
+        // answers without one is violating the §4.5 protocol — that is
+        // the peer's bug, surfaced as an error the caller can handle,
+        // not a coordinator panic.
+        let Some(p) = self.driver.send(&TunerMsg::ScheduleBranch {
+            clock: self.clock,
+            branch_id: branch,
+        })?
+        else {
+            bail!(
+                "protocol violation: ScheduleBranch(clock {}, branch {branch}) \
+                 returned no progress report",
+                self.clock
+            );
+        };
         self.clock += 1;
         self.now += p.time;
         Ok(p)
@@ -600,6 +609,7 @@ impl<S: TrainingSystem> MLtuner<S> {
 mod tests {
     use super::*;
     use crate::apps::sim::{SimProfile, SimSystem};
+    use std::collections::HashSet;
 
     fn tuner_for(profile: SimProfile, seed: u64) -> MLtuner<SimSystem> {
         let sys = SimSystem::new(profile, 8, seed);
@@ -623,6 +633,99 @@ mod tests {
         // chosen LR must be in a sane band (not 1e-5, not 1.0)
         let lr = setting.lr(&t.cfg.space);
         assert!(lr > 1e-4 && lr < 0.9, "lr={lr}");
+    }
+
+    /// Sim wrapper for the NaN regression tests: the FIRST trial
+    /// branch the tuner forks (and any fork of it) reports NaN
+    /// progress — the crash-divergence shape a real training system
+    /// produces when a setting overflows.
+    struct NanSpiking {
+        inner: SimSystem,
+        bad: HashSet<BranchId>,
+        ever_bad: HashSet<BranchId>,
+        spiked: bool,
+        nan_reports: u64,
+    }
+
+    impl NanSpiking {
+        fn new(inner: SimSystem) -> Self {
+            NanSpiking {
+                inner,
+                bad: HashSet::new(),
+                ever_bad: HashSet::new(),
+                spiked: false,
+                nan_reports: 0,
+            }
+        }
+    }
+
+    impl TrainingSystem for NanSpiking {
+        fn fork_branch(
+            &mut self,
+            clock: u64,
+            branch_id: BranchId,
+            parent: Option<BranchId>,
+            tunable: &TunableSetting,
+            branch_type: BranchType,
+        ) -> Result<()> {
+            self.inner.fork_branch(clock, branch_id, parent, tunable, branch_type)?;
+            let inherited = parent.is_some_and(|p| self.bad.contains(&p));
+            if inherited || (!self.spiked && branch_type == BranchType::Training) {
+                self.spiked = true;
+                self.bad.insert(branch_id);
+                self.ever_bad.insert(branch_id);
+            }
+            Ok(())
+        }
+
+        fn free_branch(&mut self, clock: u64, branch_id: BranchId) -> Result<()> {
+            self.bad.remove(&branch_id);
+            self.inner.free_branch(clock, branch_id)
+        }
+
+        fn schedule_branch(&mut self, clock: u64, branch_id: BranchId) -> Result<Progress> {
+            let p = self.inner.schedule_branch(clock, branch_id)?;
+            if self.bad.contains(&branch_id) {
+                self.nan_reports += 1;
+                return Ok(Progress {
+                    value: f64::NAN,
+                    time: p.time,
+                });
+            }
+            Ok(p)
+        }
+
+        fn clocks_per_epoch(&self, branch_id: BranchId) -> u64 {
+            self.inner.clocks_per_epoch(branch_id)
+        }
+
+        fn system_name(&self) -> &'static str {
+            "sim-nan-spike"
+        }
+    }
+
+    #[test]
+    fn nan_reporting_trial_loses_without_panicking() {
+        // Acceptance (per-PR): a tune session in which one trial
+        // yields NaN progress/speed completes without panicking and
+        // never selects that setting — the live crash sites were the
+        // TPE split sort and the Bayesian EI argmax.
+        let sys = SimSystem::new(SimProfile::alexnet_cifar10(), 8, 3);
+        let mut cfg = TunerConfig::new(sys.space.clone());
+        cfg.seed = 3;
+        let mut t = MLtuner::new(NanSpiking::new(sys), cfg);
+        let (best, trials) = t.tune_once(0, f64::INFINITY, 64, 0, true).unwrap();
+        let (branch, _setting, speed) = best.expect("good settings exist besides the NaN one");
+        assert!(speed > 0.0);
+        assert!(trials >= 2, "the NaN trial plus at least one real one");
+        assert!(
+            t.driver.system.nan_reports > 0,
+            "the NaN-reporting trial never ran — nothing was regression-tested"
+        );
+        assert!(
+            !t.driver.system.ever_bad.contains(&branch),
+            "tuning selected the diverged NaN branch"
+        );
     }
 
     #[test]

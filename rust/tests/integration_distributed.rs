@@ -12,6 +12,12 @@
 //! decides trial times from wall-clock measurements — so the full-run
 //! test asserts convergence, not equality.)
 //!
+//! `training_clock_issues_bounded_read_rpcs` additionally pins the
+//! batched read plane's cost model: one MF training clock may issue at
+//! most `shard servers × workers` data-plane read RPCs (each gather
+//! worker sends one `ReadRows` per server), where the row-at-a-time
+//! plane needed one RPC per rating-touched row.
+//!
 //! This is the CI `distributed` leg (see `.github/workflows/ci.yml`
 //! and `scripts/tier1.sh`).
 
@@ -204,6 +210,74 @@ fn multi_process_session_is_bit_exact_with_local_run() {
     // shut the server processes down cleanly (kill-on-drop is the
     // fallback for panicking tests)
     if let PsHandle::Remote(remote) = remote_sys.store() {
+        remote.shutdown_all().unwrap();
+    }
+}
+
+#[test]
+fn training_clock_issues_bounded_read_rpcs() {
+    // The batched read plane's acceptance bound (CI-enforced so it
+    // cannot silently regress): one scripted MF training clock against
+    // real shard-server processes must issue at most
+    // `shard servers × workers` data-plane read RPCs — each gather
+    // worker sends ONE `ReadRows` per server holding any of its keys,
+    // and the push phase reuses the gathered AdaRevision snapshots
+    // instead of re-reading.  The pre-batching code issued one
+    // `ReadRow` per rating-touched row (hundreds per clock here).
+    let cfg = mf_config();
+    let (sa, sb) = spawn_cluster(cfg.optimizer);
+    let remote =
+        RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
+    let servers = remote.num_servers() as u64;
+    let workers = cfg.num_workers as u64;
+    let touched_rows = (cfg.users + cfg.items) as u64;
+    let sys = MfSystem::with_store(cfg.clone(), PsHandle::Remote(remote)).unwrap();
+    let s_fast = lr_setting(&sys, 0.3);
+    let mut driver = MessageDriver::new(sys);
+    driver
+        .send(&TunerMsg::ForkBranch {
+            clock: 0,
+            branch_id: 1,
+            parent_branch_id: Some(0),
+            tunable: s_fast,
+            branch_type: BranchType::Training,
+        })
+        .unwrap();
+    driver
+        .send(&TunerMsg::ScheduleBranch {
+            clock: 0,
+            branch_id: 1,
+        })
+        .unwrap(); // warm-up clock
+    let before = driver.system.store().store_stats().unwrap();
+    driver
+        .send(&TunerMsg::ScheduleBranch {
+            clock: 1,
+            branch_id: 1,
+        })
+        .unwrap();
+    let after = driver.system.store().store_stats().unwrap();
+    let clock_rpcs = after.read_rpcs - before.read_rpcs;
+    assert!(clock_rpcs >= 1, "the clock read nothing over the wire?");
+    assert!(
+        clock_rpcs <= servers * workers,
+        "one MF clock issued {clock_rpcs} read RPCs, \
+         want <= servers x workers = {}",
+        servers * workers
+    );
+    assert!(
+        clock_rpcs < touched_rows,
+        "read plane regressed to O(touched rows): {clock_rpcs} RPCs \
+         for {touched_rows} touched rows"
+    );
+    // the gathers went through the batched server path, many rows per
+    // RPC (not one-row batches that would hide an unbatched plane)
+    let clock_rows = after.server.reads_batched - before.server.reads_batched;
+    assert!(
+        clock_rows > clock_rpcs,
+        "batched reads served {clock_rows} rows over {clock_rpcs} RPCs — no real batching"
+    );
+    if let PsHandle::Remote(remote) = driver.system.store() {
         remote.shutdown_all().unwrap();
     }
 }

@@ -476,6 +476,53 @@ fn prop_apply_batch_equals_update_sequence() {
 }
 
 #[test]
+fn prop_read_rows_matches_row_reads() {
+    // The batched read plane must be observationally identical to the
+    // equivalent row-at-a-time read sequence — data and AdaRevision
+    // accumulator snapshots alike, missing keys as None, for every
+    // shard count, optimizer, and key mix (duplicates included).
+    prop(60, |rng| {
+        let shards = rng.gen_range(1, 8);
+        let kind = [
+            OptimizerKind::Sgd,
+            OptimizerKind::Adam,
+            OptimizerKind::AdaRevision,
+        ][rng.gen_range(0, 3)];
+        let ps = ParamServer::new(shards, Optimizer::new(kind));
+        let rows = rng.gen_range(1, 24) as u64;
+        let len = rng.gen_range(1, 8);
+        for k in 0..rows {
+            ps.insert_row(0, 0, k, (0..len).map(|_| rng.gen_normal() as f32).collect());
+        }
+        // a few updates so slot state (velocity / moments / z) is live
+        for _ in 0..rng.gen_range(0, 20) {
+            let k = rng.gen_range(0, rows as usize) as u64;
+            let grad: Vec<f32> = (0..len).map(|_| rng.gen_normal() as f32).collect();
+            let (_, z) = ps.read_row_with_accum(0, 0, k).unwrap();
+            ps.apply_update(0, 0, k, &grad, Hyper { lr: 0.1, momentum: 0.5 }, z.as_deref())
+                .unwrap();
+        }
+        let with_accum = rng.gen_range(0, 2) == 0;
+        let keys: Vec<(u32, u64)> = (0..rng.gen_range(1, 40))
+            .map(|_| {
+                (
+                    rng.gen_range(0, 2) as u32, // table 1 never exists
+                    rng.gen_range(0, rows as usize + 4) as u64, // some missing
+                )
+            })
+            .collect();
+        let batched = ps.read_rows(0, &keys, with_accum);
+        assert_eq!(batched.len(), keys.len());
+        for (&(t, k), got) in keys.iter().zip(&batched) {
+            let want = ps
+                .read_row_with_accum(0, t, k)
+                .map(|(d, z)| (d, if with_accum { z } else { None }));
+            assert_eq!(got, &want, "key ({t},{k}) with_accum={with_accum}");
+        }
+    });
+}
+
+#[test]
 fn prop_ssp_spread_never_exceeds_bound() {
     prop(100, |rng| {
         let workers = rng.gen_range(1, 9);
@@ -556,7 +603,7 @@ fn random_hyper(rng: &mut Rng) -> Hyper {
 }
 
 fn random_ps_request(rng: &mut Rng) -> PsRequest {
-    match rng.gen_range(0, 9) {
+    match rng.gen_range(0, 10) {
         0 => PsRequest::Hello,
         1 => PsRequest::InsertRow {
             branch: rng.next_u64() as u32,
@@ -569,6 +616,13 @@ fn random_ps_request(rng: &mut Rng) -> PsRequest {
             table: rng.next_u64() as u32,
             key: rng.next_u64() >> 12,
             with_accum: rng.gen_range(0, 2) == 0,
+        },
+        9 => PsRequest::ReadRows {
+            branch: rng.next_u64() as u32,
+            with_accum: rng.gen_range(0, 2) == 0,
+            keys: (0..rng.gen_range(0, 12))
+                .map(|_| (rng.next_u64() as u32, rng.next_u64() >> 12))
+                .collect(),
         },
         3 => PsRequest::ApplyUpdate {
             branch: rng.next_u64() as u32,
@@ -608,7 +662,7 @@ fn random_ps_request(rng: &mut Rng) -> PsRequest {
 }
 
 fn random_ps_reply(rng: &mut Rng) -> PsReply {
-    match rng.gen_range(0, 5) {
+    match rng.gen_range(0, 6) {
         0 => PsReply::Hello {
             shard_begin: rng.gen_range(0, 64),
             shard_end: rng.gen_range(64, 256),
@@ -627,11 +681,30 @@ fn random_ps_reply(rng: &mut Rng) -> PsReply {
                 Some(random_f32_vec(rng, 16))
             },
         },
+        5 => PsReply::RowsData {
+            rows: (0..rng.gen_range(0, 8))
+                .map(|_| {
+                    if rng.gen_range(0, 4) == 0 {
+                        None
+                    } else {
+                        Some((
+                            random_f32_vec(rng, 8),
+                            if rng.gen_range(0, 2) == 0 {
+                                None
+                            } else {
+                                Some(random_f32_vec(rng, 8))
+                            },
+                        ))
+                    }
+                })
+                .collect(),
+        },
         3 => PsReply::Stats(PsStats {
             server: mltuner::ps::ServerStats {
                 shard_lock_contentions: rng.next_u64() >> 12,
                 batch_calls: rng.next_u64() >> 12,
                 batched_rows: rng.next_u64() >> 12,
+                reads_batched: rng.next_u64() >> 12,
             },
             pool: mltuner::ps::pool::PoolStats {
                 reused: rng.next_u64() >> 12,

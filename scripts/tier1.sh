@@ -15,8 +15,11 @@ cargo test -q
 cargo test --release --test stress_concurrent -- --test-threads=8
 
 # Distributed suite: spawns real `mltuner serve` shard-server processes
-# on loopback ephemeral ports and checks bit-exact parity with the
-# single-process run (mirrors the CI `distributed` leg).
+# on loopback ephemeral ports and checks (a) bit-exact parity with the
+# single-process run and (b) the batched-read-plane bound — one MF
+# training clock issues at most `shard servers x workers` data-plane
+# read RPCs (`training_clock_issues_bounded_read_rpcs`), so read
+# batching cannot silently regress (mirrors the CI `distributed` leg).
 cargo test --release --test integration_distributed
 
 if cargo fmt --version >/dev/null 2>&1; then
