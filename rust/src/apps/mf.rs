@@ -34,6 +34,7 @@
 //! crosses the wire as f32 bit patterns, both runs are bit-identical.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -42,6 +43,7 @@ use crate::util::rng::Rng;
 use crate::comm::{BranchId, BranchType, Clock};
 use crate::data::RatingsDataset;
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
+use crate::ps::checkpoint::{BranchCkpt, StoreCheckpoint};
 use crate::ps::storage::{RowKey, TableId};
 use crate::ps::{ParamServer, ParamStore, PsHandle};
 use crate::training::{Progress, SnapshotStats, TrainingSystem};
@@ -556,6 +558,65 @@ impl TrainingSystem for MfSystem {
 
     fn system_name(&self) -> &'static str {
         "mf"
+    }
+
+    /// Durable checkpoint: every live branch's factor rows (data +
+    /// AdaRevision accumulators + steps) dump through the store's
+    /// checkpoint plane — per-shard segment files locally, one
+    /// concurrent `CheckpointBranch` broadcast per branch remotely —
+    /// plus the per-branch metadata (tunable, type, clocks run) the
+    /// restore needs to rebuild `branches`.
+    fn checkpoint_session(&self, dir: &Path) -> Result<Option<StoreCheckpoint>> {
+        let mut ids: Vec<BranchId> = self.branches.keys().copied().collect();
+        ids.sort_unstable();
+        let mut branches = Vec::with_capacity(ids.len());
+        let mut segments = Vec::new();
+        for id in ids {
+            let b = &self.branches[&id];
+            segments.extend(self.ps.checkpoint_branch(id, dir)?);
+            branches.push(BranchCkpt {
+                id,
+                branch_type: b.branch_type,
+                clocks_run: b.clocks_run,
+                tunable: b.tunable.values.clone(),
+            });
+        }
+        Ok(Some(StoreCheckpoint {
+            optimizer: self.cfg.optimizer.name().to_string(),
+            branches,
+            segments,
+        }))
+    }
+
+    /// Restore into a freshly built system: refuse an optimizer
+    /// mismatch (slot layouts differ), then swap every checkpointed
+    /// branch's rows in through the store — bit-exact, branch 0
+    /// included — and rebuild the branch metadata.  Restored branches
+    /// are born fully materialized (COW sharing is per-process state),
+    /// which affects pool statistics only, never row values.
+    fn restore_session(&mut self, store: &StoreCheckpoint, dir: &Path) -> Result<bool> {
+        if store.optimizer != self.cfg.optimizer.name() {
+            bail!(
+                "checkpoint was written with optimizer {} but this config says {}",
+                store.optimizer,
+                self.cfg.optimizer.name()
+            );
+        }
+        for b in &store.branches {
+            self.ps.restore_branch(b.id, dir)?;
+            self.branches.insert(
+                b.id,
+                MfBranch {
+                    tunable: TunableSetting::new(b.tunable.clone()),
+                    branch_type: b.branch_type,
+                    clocks_run: b.clocks_run,
+                },
+            );
+        }
+        // branch 0 was restored too; the cached pristine-root loss is
+        // recomputed so Testing clocks normalize bit-identically
+        self.root_loss = self.loss_of(0);
+        Ok(true)
     }
 
     fn snapshot_stats(&self) -> SnapshotStats {

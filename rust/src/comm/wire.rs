@@ -18,7 +18,10 @@
 //!   batched `ReadRows`/`RowsData` pair the gather phases ride — one
 //!   frame carries a whole per-server key group, with the optional
 //!   AdaRevision accumulator snapshot per row), batched updates,
-//!   branch fork/free replication, and the stats probe.  Row payloads
+//!   branch fork/free replication, durable branch checkpoint/restore
+//!   (`CheckpointBranch`/`RestoreBranch` — each server dumps or
+//!   restores its own shard range, see [`crate::ps::checkpoint`]), and
+//!   the stats probe.  Row payloads
 //!   are `f32` values encoded as their IEEE-754 **bit patterns**
 //!   (`u32` integers), so every value — including NaN payloads and the
 //!   infinities a diverging trial produces — survives the wire
@@ -34,6 +37,7 @@ use std::fmt::Write as _;
 use anyhow::{anyhow, bail, Result};
 
 use crate::optim::Hyper;
+use crate::ps::checkpoint::{hex_u64, parse_hex_u64, SegmentMeta};
 use crate::ps::pool::PoolStats;
 use crate::ps::storage::{RowKey, TableId};
 use crate::ps::{RowData, ServerStats};
@@ -248,6 +252,24 @@ pub enum PsRequest {
     /// Free `branch` on this server's shards (last-owner buffers are
     /// reclaimed into the server-local pools).
     FreeBranch { branch: BranchId },
+    /// Dump `branch`'s rows on this server into per-shard segment
+    /// files under `dir` (a path reachable from the server process);
+    /// the reply carries the written [`SegmentMeta`]s so the
+    /// coordinator can assemble the checkpoint manifest.  Broadcast to
+    /// every shard server: each dumps exactly its own shard range,
+    /// concurrently with the others.
+    CheckpointBranch { branch: BranchId, dir: String },
+    /// Decode and fully verify `branch`'s segment files for this
+    /// server's shard range under `dir` **without installing
+    /// anything** — phase one of the coordinator's two-phase restore
+    /// (verify everywhere, then install everywhere), which keeps a
+    /// corrupted checkpoint from leaving a cross-server torn branch.
+    VerifyBranch { branch: BranchId, dir: String },
+    /// Restore `branch` on this server from the segment files of its
+    /// shard range under `dir`.  Fail-closed server-side: a corrupted,
+    /// truncated or missing segment is an `Err` reply with the
+    /// server's state unchanged.
+    RestoreBranch { branch: BranchId, dir: String },
     /// Probe the server's concurrency/pool/branch counters.
     ServerStats,
     /// Ask the server process to exit after acknowledging.
@@ -283,13 +305,21 @@ pub enum PsReply {
     /// `with_accum`, the AdaRevision accumulator snapshot.  All floats
     /// are bit patterns, like every other row payload.
     RowsData { rows: Vec<Option<RowData>> },
+    /// Segment metadata written by a [`PsRequest::CheckpointBranch`].
+    Segments { segments: Vec<SegmentMeta> },
+    /// Row count decoded by a [`PsRequest::VerifyBranch`] (nothing was
+    /// installed).
+    Verified { rows: u64 },
+    /// Row count installed by a [`PsRequest::RestoreBranch`].
+    Restored { rows: u64 },
     Stats(PsStats),
     Err { message: String },
 }
 
 /// Escape a string for a JSON string literal (the in-tree parser
-/// understands exactly these escapes).
-fn push_json_str(out: &mut String, s: &str) {
+/// understands exactly these escapes).  Shared with the session
+/// checkpoint codec (`crate::tuner::session`).
+pub(crate) fn push_json_str(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -446,6 +476,21 @@ pub fn encode_ps_request(req: &PsRequest) -> String {
         PsRequest::FreeBranch { branch } => {
             let _ = write!(out, "{{\"op\":\"free\",\"branch\":{branch}}}");
         }
+        PsRequest::CheckpointBranch { branch, dir } => {
+            let _ = write!(out, "{{\"op\":\"ckpt\",\"branch\":{branch},\"dir\":");
+            push_json_str(&mut out, dir);
+            out.push('}');
+        }
+        PsRequest::VerifyBranch { branch, dir } => {
+            let _ = write!(out, "{{\"op\":\"verify\",\"branch\":{branch},\"dir\":");
+            push_json_str(&mut out, dir);
+            out.push('}');
+        }
+        PsRequest::RestoreBranch { branch, dir } => {
+            let _ = write!(out, "{{\"op\":\"restore\",\"branch\":{branch},\"dir\":");
+            push_json_str(&mut out, dir);
+            out.push('}');
+        }
         PsRequest::ServerStats => out.push_str("{\"op\":\"stats\"}"),
         PsRequest::Shutdown => out.push_str("{\"op\":\"shutdown\"}"),
     }
@@ -532,6 +577,18 @@ pub fn decode_ps_request(line: &str) -> Result<PsRequest> {
         "free" => Ok(PsRequest::FreeBranch {
             branch: num_u32(field(&v, "branch")?, "branch")?,
         }),
+        "ckpt" | "verify" | "restore" => {
+            let branch = num_u32(field(&v, "branch")?, "branch")?;
+            let dir = field(&v, "dir")?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad dir: not a string"))?
+                .to_string();
+            Ok(match op {
+                "ckpt" => PsRequest::CheckpointBranch { branch, dir },
+                "verify" => PsRequest::VerifyBranch { branch, dir },
+                _ => PsRequest::RestoreBranch { branch, dir },
+            })
+        }
         "stats" => Ok(PsRequest::ServerStats),
         "shutdown" => Ok(PsRequest::Shutdown),
         other => bail!("unknown ps request op {other}"),
@@ -580,6 +637,30 @@ pub fn encode_ps_reply(reply: &PsReply) -> String {
                 }
             }
             out.push_str("]}");
+        }
+        PsReply::Segments { segments } => {
+            out.push_str("{\"op\":\"segments\",\"segments\":[");
+            for (i, s) in segments.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('[');
+                push_json_str(&mut out, &s.file);
+                let _ = write!(
+                    out,
+                    ",{},{},{},{},{},{},",
+                    s.branch, s.range_begin, s.range_end, s.local_shard, s.rows, s.bytes
+                );
+                push_json_str(&mut out, &hex_u64(s.checksum));
+                out.push(']');
+            }
+            out.push_str("]}");
+        }
+        PsReply::Verified { rows } => {
+            let _ = write!(out, "{{\"op\":\"verified\",\"rows\":{rows}}}");
+        }
+        PsReply::Restored { rows } => {
+            let _ = write!(out, "{{\"op\":\"restored\",\"rows\":{rows}}}");
         }
         PsReply::Stats(s) => {
             let _ = write!(
@@ -655,6 +736,40 @@ pub fn decode_ps_reply(line: &str) -> Result<PsReply> {
                     }
                 })
                 .collect::<Result<Vec<_>>>()?,
+        }),
+        "segments" => Ok(PsReply::Segments {
+            segments: field(&v, "segments")?
+                .as_array()
+                .ok_or_else(|| anyhow!("bad segments: not an array"))?
+                .iter()
+                .map(|s| {
+                    let s = s.as_array().ok_or_else(|| anyhow!("bad segment entry"))?;
+                    if s.len() != 8 {
+                        bail!("bad segment entry: len {}", s.len());
+                    }
+                    Ok(SegmentMeta {
+                        file: s[0]
+                            .as_str()
+                            .ok_or_else(|| anyhow!("bad segment file"))?
+                            .to_string(),
+                        branch: num_u32(&s[1], "segment branch")?,
+                        range_begin: num_usize(&s[2], "segment range begin")?,
+                        range_end: num_usize(&s[3], "segment range end")?,
+                        local_shard: num_usize(&s[4], "segment shard")?,
+                        rows: num_u64(&s[5], "segment rows")?,
+                        bytes: num_u64(&s[6], "segment bytes")?,
+                        checksum: parse_hex_u64(
+                            s[7].as_str().ok_or_else(|| anyhow!("bad segment checksum"))?,
+                        )?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        }),
+        "verified" => Ok(PsReply::Verified {
+            rows: num_u64(field(&v, "rows")?, "rows")?,
+        }),
+        "restored" => Ok(PsReply::Restored {
+            rows: num_u64(field(&v, "rows")?, "rows")?,
         }),
         "stats" => {
             let branches = field(&v, "branches")?
@@ -843,8 +958,60 @@ mod tests {
         });
         roundtrip_req(&PsRequest::ForkBranch { child: 4, parent: 1 });
         roundtrip_req(&PsRequest::FreeBranch { branch: 4 });
+        roundtrip_req(&PsRequest::CheckpointBranch {
+            branch: 3,
+            dir: "/tmp/with \"quotes\"\nand newlines".into(),
+        });
+        roundtrip_req(&PsRequest::VerifyBranch {
+            branch: 7,
+            dir: "/tmp/ck".into(),
+        });
+        roundtrip_req(&PsRequest::RestoreBranch {
+            branch: 0,
+            dir: "relative/dir".into(),
+        });
         roundtrip_req(&PsRequest::ServerStats);
         roundtrip_req(&PsRequest::Shutdown);
+    }
+
+    #[test]
+    fn checkpoint_frames_roundtrip() {
+        roundtrip_reply(&PsReply::Segments { segments: vec![] });
+        roundtrip_reply(&PsReply::Segments {
+            segments: vec![
+                SegmentMeta {
+                    file: "b1-r0-2-s0.seg".into(),
+                    branch: 1,
+                    range_begin: 0,
+                    range_end: 2,
+                    local_shard: 0,
+                    rows: 17,
+                    bytes: 4096,
+                    checksum: u64::MAX,
+                },
+                SegmentMeta {
+                    file: "b1-r0-2-s1.seg".into(),
+                    branch: 1,
+                    range_begin: 0,
+                    range_end: 2,
+                    local_shard: 1,
+                    rows: 0,
+                    bytes: 48,
+                    checksum: 0,
+                },
+            ],
+        });
+        roundtrip_reply(&PsReply::Verified { rows: 0 });
+        roundtrip_reply(&PsReply::Restored { rows: 1 << 20 });
+        // strict decoding: short entries and bad checksums are errors
+        let short = "{\"op\":\"segments\",\"segments\":[[\"f\",1,0,2,0,1,2]]}";
+        assert!(decode_ps_reply(short).is_err());
+        assert!(decode_ps_reply(
+            "{\"op\":\"segments\",\"segments\":[[\"f\",1,0,2,0,1,2,\"nothex\"]]}"
+        )
+        .is_err());
+        assert!(decode_ps_request("{\"op\":\"ckpt\",\"branch\":0}").is_err());
+        assert!(decode_ps_request("{\"op\":\"restore\",\"branch\":0,\"dir\":7}").is_err());
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! Parsed with the in-tree TOML-subset parser (`util::toml`); see the
 //! `configs/` directory for examples.
 
+use std::path::Path;
+
 use anyhow::{bail, Result};
 
 use crate::apps::dnn::{DnnConfig, DnnSystem};
@@ -13,11 +15,13 @@ use crate::comm::socket::{Framing, parse_server_list};
 use crate::comm::{BranchId, BranchType, Clock};
 use crate::optim::OptimizerKind;
 use crate::ps::PsHandle;
+use crate::ps::checkpoint::StoreCheckpoint;
 use crate::ps::remote::RemoteParamServer;
 use crate::runtime::Runtime;
 use crate::searcher::SearcherKind;
 use crate::training::{Progress, SnapshotStats, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
+use crate::tuner::session::CheckpointPolicy;
 use crate::tuner::{ConvergenceCriterion, TunerConfig};
 use crate::util::toml::TomlDoc;
 
@@ -44,6 +48,14 @@ pub struct ExperimentConfig {
     pub ps: Option<String>,
     /// Socket framing for the remote store: "line" | "length".
     pub ps_framing: String,
+    /// Durable session checkpoints: root directory for checkpoint
+    /// steps (`None` = checkpointing off).  CLI: `--checkpoint-dir`.
+    pub checkpoint_dir: Option<String>,
+    /// Clocks between checkpoints.  CLI: `--checkpoint-every`.
+    pub checkpoint_every: u64,
+    /// Resume from the latest checkpoint under `checkpoint_dir`
+    /// instead of starting fresh.  CLI: `--resume`.
+    pub resume: bool,
     pub dnn: DnnSection,
     pub mf: MfSection,
 }
@@ -94,6 +106,9 @@ impl Default for ExperimentConfig {
             loss_threshold: None,
             ps: None,
             ps_framing: "line".into(),
+            checkpoint_dir: None,
+            checkpoint_every: 50,
+            resume: false,
             dnn: DnnSection::default(),
             mf: MfSection::default(),
         }
@@ -139,6 +154,15 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_str("ps_framing") {
             cfg.ps_framing = v.to_string();
+        }
+        if let Some(v) = doc.get_str("checkpoint_dir") {
+            cfg.checkpoint_dir = Some(v.to_string());
+        }
+        if let Some(v) = doc.get_i64("checkpoint_every") {
+            cfg.checkpoint_every = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_bool("resume") {
+            cfg.resume = v;
         }
         if let Some(v) = doc.get_str("dnn.model") {
             cfg.dnn.model = v.to_string();
@@ -289,6 +313,13 @@ impl ExperimentConfig {
                 epochs: self.plateau_epochs,
             },
         };
+        if let Some(dir) = &self.checkpoint_dir {
+            cfg.checkpoint = Some(CheckpointPolicy {
+                dir: dir.into(),
+                every_clocks: self.checkpoint_every.max(1),
+            });
+        }
+        cfg.resume = self.resume;
         Ok(cfg)
     }
 }
@@ -362,6 +393,22 @@ impl TrainingSystem for AnySystem {
             AnySystem::Sim(s) => s.snapshot_stats(),
             AnySystem::Dnn(s) => s.snapshot_stats(),
             AnySystem::Mf(s) => s.snapshot_stats(),
+        }
+    }
+
+    fn checkpoint_session(&self, dir: &Path) -> Result<Option<StoreCheckpoint>> {
+        match self {
+            AnySystem::Sim(s) => s.checkpoint_session(dir),
+            AnySystem::Dnn(s) => s.checkpoint_session(dir),
+            AnySystem::Mf(s) => s.checkpoint_session(dir),
+        }
+    }
+
+    fn restore_session(&mut self, store: &StoreCheckpoint, dir: &Path) -> Result<bool> {
+        match self {
+            AnySystem::Sim(s) => s.restore_session(store, dir),
+            AnySystem::Dnn(s) => s.restore_session(store, dir),
+            AnySystem::Mf(s) => s.restore_session(store, dir),
         }
     }
 }

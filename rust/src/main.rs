@@ -42,6 +42,8 @@ USAGE: mltuner <tune|serve|baseline|train|info> [--flags]
 tune:     --config <file.toml> | --app sim --profile <name>
           --seed N --searcher hyperopt|random|grid|spearmint --csv out.csv
           --ps remote://host:port,host:port --ps-framing line|length
+          --checkpoint-dir DIR --checkpoint-every N --resume
+          (--crash-after-clocks N: fault injection for recovery tests)
 serve:    --shards a..b --listen host:port|unix:/path
           --optimizer sgd|adam|adarevision|... --framing line|length
 baseline: --kind spearmint|hyperband --profile <name> --seed N
@@ -111,8 +113,20 @@ fn cmd_tune(args: &Args) -> Result<()> {
     if let Some(f) = args.get("ps-framing") {
         cfg.ps_framing = f.to_string();
     }
+    if let Some(dir) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(dir.to_string());
+    }
+    if args.get("checkpoint-every").is_some() {
+        cfg.checkpoint_every = args.get_u64("checkpoint-every", cfg.checkpoint_every).max(1);
+    }
+    if args.get_bool("resume", false) {
+        cfg.resume = true;
+    }
     let (system, space) = cfg.build_system()?;
-    let tuner_cfg = cfg.tuner_config(space.clone())?;
+    let mut tuner_cfg = cfg.tuner_config(space.clone())?;
+    if let Some(n) = args.get("crash-after-clocks") {
+        tuner_cfg.crash_after_clocks = Some(n.parse()?);
+    }
     let mut tuner = MLtuner::new(system, tuner_cfg);
     let report = tuner.run()?;
     println!("=== MLtuner report ===");

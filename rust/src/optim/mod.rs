@@ -8,7 +8,7 @@
 //!
 //! Implemented algorithms: plain SGD with momentum [Sutskever et al.],
 //! Nesterov, AdaGrad [Duchi et al.], RMSProp [Tieleman & Hinton],
-//! AdaDelta [Zeiler], Adam [Kingma & Ba], and AdaRevision [McMahan &
+//! AdaDelta \[Zeiler\], Adam [Kingma & Ba], and AdaRevision [McMahan &
 //! Streeter] (delay-tolerant AdaGrad; per-parameter LR adjustment from
 //! a user-set initial LR — the MF app's optimizer, Fig. 7).
 //!

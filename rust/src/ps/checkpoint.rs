@@ -1,0 +1,641 @@
+//! Durable branch checkpoints: the crash-consistency half of the
+//! branch-snapshot substrate (§4.6 taken to disk).
+//!
+//! The in-memory copy-on-write snapshots of [`super::storage`] are
+//! what make MLtuner's trial-and-error loop cheap, but they die with
+//! the process: a crashed coordinator or shard server loses the whole
+//! tuning session.  This module extends the snapshot plane to disk so
+//! a long-lived tune survives process death:
+//!
+//! * **Segment files** — one file per engine shard, holding every row
+//!   of one branch that shard owns: parameter data **and** optimizer
+//!   slot state **and** the per-row step counter, because a branch
+//!   snapshot is only consistent if all training state travels
+//!   together (the same invariant the in-memory fork keeps).  Floats
+//!   are serialized as their IEEE-754 **bit patterns** — the
+//!   [`crate::comm::wire`] codec discipline — so a restored run is
+//!   bit-identical to the original, NaN payloads, infinities and `-0.0`
+//!   included.
+//! * **Checksums** — every segment carries a trailing FNV-1a 64 digest
+//!   over its entire contents, and decoding is strict: a truncated,
+//!   bit-flipped, or mislabeled segment is a typed error, never a
+//!   panic or a silent partial restore.  Restore decodes and verifies
+//!   *everything* in memory first and only then swaps the branch in
+//!   ([`ParamServer::replace_branch_rows`]), so a failed restore
+//!   leaves the engine untouched.
+//! * **Shard ranges** — segment files are named by the *global* shard
+//!   range they cover plus the engine-local shard index, so each shard
+//!   server of a distributed deployment dumps and restores exactly its
+//!   own range (`b<branch>-r<begin>-<end>-s<idx>.seg`); the
+//!   single-process engine is simply the range `0..num_shards`.  A
+//!   restore into a different topology fails closed instead of
+//!   silently dropping rows.
+//!
+//! The dump runs one thread per shard, each under that shard's *read*
+//! lock only (rows are cloned out and serialized outside the lock), so
+//! concurrent readers are unaffected and writers wait at most one
+//! shard-sized critical section — the `apply_batch` hot path of other
+//! branches is never blocked for the duration of the file writes.
+//!
+//! Layered on top, [`crate::tuner::session`] stores the tuner-session
+//! half (message journal, recorder, manifest) next to these segments;
+//! [`StoreCheckpoint`] and [`BranchCkpt`] are the metadata bridge
+//! between the two planes.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::{BranchId, BranchType};
+
+use super::storage::{Entry, RowKey, TableId};
+use super::ParamServer;
+
+/// Segment file magic: "MLTC" (MLtuner checkpoint).
+const MAGIC: &[u8; 4] = b"MLTC";
+/// Segment format version.
+const VERSION: u32 = 1;
+
+/// One parameter row as it travels through a checkpoint: data,
+/// optimizer slots and step counter — the full [`Entry`], decoupled
+/// from the engine's `Arc` sharing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowRecord {
+    pub table: TableId,
+    pub key: RowKey,
+    pub step: u64,
+    pub data: Vec<f32>,
+    pub slots: Vec<Vec<f32>>,
+}
+
+impl RowRecord {
+    fn into_entry(self) -> (TableId, RowKey, Entry) {
+        (
+            self.table,
+            self.key,
+            Entry {
+                data: self.data,
+                slots: self.slots,
+                step: self.step,
+            },
+        )
+    }
+}
+
+/// Metadata of one written segment file, recorded in the checkpoint
+/// manifest (and returned over the wire by a shard server's
+/// `CheckpointBranch` reply).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentMeta {
+    /// File name inside the checkpoint step directory.
+    pub file: String,
+    pub branch: BranchId,
+    /// Global shard range the writing engine covers.
+    pub range_begin: usize,
+    pub range_end: usize,
+    /// Engine-local shard index within the range.
+    pub local_shard: usize,
+    pub rows: u64,
+    pub bytes: u64,
+    /// FNV-1a 64 digest over the whole file.
+    pub checksum: u64,
+}
+
+/// Per-branch metadata serialized alongside the row segments: enough
+/// for a training system to rebuild its branch bookkeeping (tunable
+/// setting, branch type, clocks run) before restoring the rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BranchCkpt {
+    pub id: BranchId,
+    pub branch_type: BranchType,
+    pub clocks_run: u64,
+    /// The branch's tunable setting values (f64, bit-exact in the
+    /// manifest via bit-pattern encoding).
+    pub tunable: Vec<f64>,
+}
+
+/// The parameter-store half of a session checkpoint: which branches
+/// were live (with their metadata) and which segment files hold their
+/// rows.  `None` at the session level means the training system has no
+/// durable store and resume re-executes the message journal instead.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreCheckpoint {
+    /// Optimizer the store was built with; restore refuses a mismatch
+    /// (slot layouts differ between rules).
+    pub optimizer: String,
+    /// Live branches, sorted by id.
+    pub branches: Vec<BranchCkpt>,
+    pub segments: Vec<SegmentMeta>,
+}
+
+/// FNV-1a 64 over a byte slice — the checkpoint plane's digest (cheap,
+/// dependency-free, and plenty for corruption *detection*; this is not
+/// an authentication code).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A u64 as fixed-width lowercase hex (manifest/wire encoding for
+/// values that exceed JSON's 2^53 exact-integer range, e.g. checksums
+/// and f64 bit patterns).
+pub fn hex_u64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Parse [`hex_u64`] output (any-width hex accepted).
+pub fn parse_hex_u64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad hex u64 {s:?}: {e}"))
+}
+
+/// Deterministic segment file name for one branch / range / shard.
+pub fn segment_file_name(
+    branch: BranchId,
+    range_begin: usize,
+    range_end: usize,
+    local_shard: usize,
+) -> String {
+    format!("b{branch}-r{range_begin}-{range_end}-s{local_shard}.seg")
+}
+
+// ---------------------------------------------------------------------------
+// Binary codec (little-endian, bit-pattern floats, trailing checksum)
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vals: &[f32]) {
+    put_u32(out, vals.len() as u32);
+    for v in vals {
+        put_u32(out, v.to_bits());
+    }
+}
+
+/// Strict little-endian reader over a segment payload; every read
+/// checks bounds, so truncation surfaces as an error, never a panic.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow!("segment truncated reading {what}"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.u32(what)? as usize;
+        // bounds check BEFORE allocating: a corrupt length field must
+        // not drive a huge allocation
+        let len = n.checked_mul(4).ok_or_else(|| anyhow!("bad {what} length"))?;
+        let bytes = self.take(len, what)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    }
+}
+
+/// Encode one shard's rows of a branch as a self-verifying segment.
+/// Rows are sorted by (table, key) so segment bytes are deterministic
+/// for a given branch state.
+pub fn encode_segment(
+    branch: BranchId,
+    range_begin: usize,
+    range_end: usize,
+    local_shard: usize,
+    rows: &mut Vec<RowRecord>,
+) -> Vec<u8> {
+    rows.sort_unstable_by_key(|r| (r.table, r.key));
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u32(&mut out, branch);
+    put_u64(&mut out, range_begin as u64);
+    put_u64(&mut out, range_end as u64);
+    put_u64(&mut out, local_shard as u64);
+    put_u64(&mut out, rows.len() as u64);
+    for r in rows.iter() {
+        put_u32(&mut out, r.table);
+        put_u64(&mut out, r.key);
+        put_u64(&mut out, r.step);
+        put_f32s(&mut out, &r.data);
+        put_u32(&mut out, r.slots.len() as u32);
+        for slot in &r.slots {
+            put_f32s(&mut out, slot);
+        }
+    }
+    let digest = fnv1a(&out);
+    put_u64(&mut out, digest);
+    out
+}
+
+/// Decode and fully verify one segment.  Every field is checked
+/// against the caller's expectation (branch, range, shard) and the
+/// trailing checksum against the bytes; any mismatch, truncation or
+/// bit flip is a typed error.
+pub fn decode_segment(
+    bytes: &[u8],
+    branch: BranchId,
+    range_begin: usize,
+    range_end: usize,
+    local_shard: usize,
+) -> Result<Vec<RowRecord>> {
+    if bytes.len() < MAGIC.len() + 8 {
+        bail!("segment truncated: {} bytes", bytes.len());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+    let computed = fnv1a(body);
+    if stored != computed {
+        bail!(
+            "segment checksum mismatch: stored {}, computed {} — corrupted or truncated file",
+            hex_u64(stored),
+            hex_u64(computed)
+        );
+    }
+    let mut r = Reader { buf: body, pos: 0 };
+    if r.take(4, "magic")? != MAGIC {
+        bail!("not a checkpoint segment (bad magic)");
+    }
+    let version = r.u32("version")?;
+    if version != VERSION {
+        bail!("unsupported segment version {version} (want {VERSION})");
+    }
+    let got_branch = r.u32("branch")?;
+    let got_begin = r.u64("range begin")? as usize;
+    let got_end = r.u64("range end")? as usize;
+    let got_shard = r.u64("local shard")? as usize;
+    if got_branch != branch || got_begin != range_begin || got_end != range_end {
+        bail!(
+            "segment labeled branch {got_branch} range {got_begin}..{got_end}, \
+             expected branch {branch} range {range_begin}..{range_end}"
+        );
+    }
+    if got_shard != local_shard {
+        bail!("segment labeled local shard {got_shard}, expected {local_shard}");
+    }
+    let count = r.u64("row count")?;
+    let mut rows = Vec::new();
+    for _ in 0..count {
+        let table = r.u32("table")?;
+        let key = r.u64("key")?;
+        let step = r.u64("step")?;
+        let data = r.f32s("row data")?;
+        let nslots = r.u32("slot count")? as usize;
+        let mut slots = Vec::with_capacity(nslots.min(16));
+        for _ in 0..nslots {
+            slots.push(r.f32s("slot data")?);
+        }
+        rows.push(RowRecord {
+            table,
+            key,
+            step,
+            data,
+            slots,
+        });
+    }
+    if r.pos != r.buf.len() {
+        bail!("segment has {} trailing bytes after row {count}", r.buf.len() - r.pos);
+    }
+    Ok(rows)
+}
+
+// ---------------------------------------------------------------------------
+// Local-engine dump and restore
+// ---------------------------------------------------------------------------
+
+/// Best-effort fsync of a directory — on Linux a rename is only
+/// durable once the containing directory is synced, and the
+/// checkpoint commit protocol depends on rename ordering (the
+/// `LATEST` pointer must hit disk before the previous step is
+/// pruned).  Errors are ignored for filesystems that reject directory
+/// fsync; on those, crash consistency degrades to the filesystem's
+/// own ordering guarantees.
+pub(crate) fn fsync_dir(dir: &Path) {
+    if let Ok(f) = fs::File::open(dir) {
+        let _ = f.sync_all();
+    }
+}
+
+/// Write `payload` to `path` atomically and durably: a temp file in
+/// the same directory is written, fsynced, renamed into place, and
+/// the directory is fsynced — so readers never observe a half-written
+/// file and the rename is on disk before anything that depends on it.
+pub(crate) fn write_atomic(path: &Path, payload: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(payload)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    if let Some(parent) = path.parent() {
+        fsync_dir(parent);
+    }
+    Ok(())
+}
+
+/// Clone one shard's rows of `branch` out of the engine under the
+/// shard's read lock (held only for the clone, not for serialization
+/// or file IO).
+fn dump_shard(ps: &ParamServer, sid: usize, branch: BranchId) -> Vec<RowRecord> {
+    let st = super::read_shard(&ps.shards[sid], &ps.counters);
+    let mut rows = Vec::new();
+    st.shard.for_each_row(branch, |table, key, e| {
+        rows.push(RowRecord {
+            table,
+            key,
+            step: e.step,
+            data: e.data.clone(),
+            slots: e.slots.clone(),
+        });
+    });
+    rows
+}
+
+/// Dump `branch` from a local engine covering global shards
+/// `range_begin..range_end` into per-shard segment files under `dir`.
+/// One thread per shard: each clones its rows under the shard's read
+/// lock, then encodes and writes outside the lock.  Returns the
+/// segment metadata for the manifest.
+pub fn checkpoint_range(
+    ps: &ParamServer,
+    branch: BranchId,
+    range_begin: usize,
+    range_end: usize,
+    dir: &Path,
+) -> Result<Vec<SegmentMeta>> {
+    let n = ps.num_shards();
+    if range_end.saturating_sub(range_begin) != n {
+        bail!(
+            "engine has {n} shards but was asked to checkpoint range \
+             {range_begin}..{range_end}"
+        );
+    }
+    if !ps.branch_exists(branch) {
+        bail!("branch {branch} does not exist");
+    }
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let dump_one = |sid: usize| -> Result<SegmentMeta> {
+        let mut rows = dump_shard(ps, sid, branch);
+        let payload = encode_segment(branch, range_begin, range_end, sid, &mut rows);
+        let file = segment_file_name(branch, range_begin, range_end, sid);
+        write_atomic(&dir.join(&file), &payload)?;
+        Ok(SegmentMeta {
+            file,
+            branch,
+            range_begin,
+            range_end,
+            local_shard: sid,
+            rows: rows.len() as u64,
+            bytes: payload.len() as u64,
+            checksum: fnv1a(&payload),
+        })
+    };
+    if n > 1 {
+        let dump_one = &dump_one;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n)
+                .map(|sid| scope.spawn(move || dump_one(sid)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("checkpoint dump worker panicked"))
+                .collect()
+        })
+    } else {
+        (0..n).map(dump_one).collect()
+    }
+}
+
+/// Read and fully verify every segment of `branch` for the range
+/// `range_begin..range_end` under `dir`.  All-or-nothing: any missing
+/// file, truncation, checksum mismatch or label mismatch is an error
+/// and nothing is returned.
+pub fn load_range(
+    branch: BranchId,
+    range_begin: usize,
+    range_end: usize,
+    dir: &Path,
+) -> Result<Vec<RowRecord>> {
+    let shards = range_end
+        .checked_sub(range_begin)
+        .filter(|&c| c > 0)
+        .ok_or_else(|| anyhow!("bad shard range {range_begin}..{range_end}"))?;
+    let mut rows = Vec::new();
+    for sid in 0..shards {
+        let file = dir.join(segment_file_name(branch, range_begin, range_end, sid));
+        let bytes = fs::read(&file)
+            .with_context(|| format!("reading checkpoint segment {}", file.display()))?;
+        rows.extend(decode_segment(&bytes, branch, range_begin, range_end, sid)?);
+    }
+    Ok(rows)
+}
+
+/// Restore `branch` into a local engine from the segment files under
+/// `dir`.  Fail-closed: every segment is decoded and verified in
+/// memory first; only then is the branch swapped in wholesale, so a
+/// corrupted checkpoint leaves the engine state unchanged.  Returns
+/// the number of rows restored.
+pub fn restore_range(
+    ps: &ParamServer,
+    branch: BranchId,
+    range_begin: usize,
+    range_end: usize,
+    dir: &Path,
+) -> Result<usize> {
+    let n = ps.num_shards();
+    if range_end.saturating_sub(range_begin) != n {
+        bail!(
+            "engine has {n} shards but the restore names range {range_begin}..{range_end} \
+             — checkpoint topology must match the serving topology"
+        );
+    }
+    let rows = load_range(branch, range_begin, range_end, dir)?;
+    let entries: Vec<(TableId, RowKey, Entry)> =
+        rows.into_iter().map(RowRecord::into_entry).collect();
+    Ok(ps.replace_branch_rows(branch, entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Hyper, Optimizer, OptimizerKind};
+    use std::path::PathBuf;
+
+    struct TempDir(PathBuf);
+
+    impl TempDir {
+        fn new(tag: &str) -> Self {
+            let p = std::env::temp_dir().join(format!(
+                "mltuner-ckpt-unit-{tag}-{}",
+                std::process::id()
+            ));
+            let _ = fs::remove_dir_all(&p);
+            fs::create_dir_all(&p).unwrap();
+            TempDir(p)
+        }
+
+        fn path(&self) -> &Path {
+            &self.0
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn weird_rows() -> Vec<RowRecord> {
+        vec![
+            RowRecord {
+                table: 1,
+                key: 7,
+                step: 3,
+                data: vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1.0e-45],
+                slots: vec![vec![0.5, f32::from_bits(0x7fc0_dead)], vec![]],
+            },
+            RowRecord {
+                table: 0,
+                key: u64::MAX >> 12,
+                step: 0,
+                data: vec![],
+                slots: vec![],
+            },
+        ]
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn segment_roundtrip_is_bit_exact() {
+        let mut rows = weird_rows();
+        let payload = encode_segment(5, 2, 6, 1, &mut rows);
+        let back = decode_segment(&payload, 5, 2, 6, 1).unwrap();
+        assert_eq!(back.len(), rows.len());
+        // encode sorts by (table, key); rows is sorted in place
+        for (a, b) in rows.iter().zip(&back) {
+            assert_eq!((a.table, a.key, a.step), (b.table, b.key, b.step));
+            assert_eq!(bits(&a.data), bits(&b.data));
+            assert_eq!(a.slots.len(), b.slots.len());
+            for (sa, sb) in a.slots.iter().zip(&b.slots) {
+                assert_eq!(bits(sa), bits(sb));
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_corruption_and_mislabeling() {
+        let mut rows = weird_rows();
+        let payload = encode_segment(5, 2, 6, 1, &mut rows);
+        // every single-byte flip must be caught by the checksum
+        for pos in [0usize, 4, 12, payload.len() / 2, payload.len() - 1] {
+            let mut bad = payload.clone();
+            bad[pos] ^= 0x40;
+            assert!(decode_segment(&bad, 5, 2, 6, 1).is_err(), "flip at {pos}");
+        }
+        // every truncation point fails cleanly
+        for cut in [0usize, 3, 8, payload.len() / 2, payload.len() - 1] {
+            assert!(decode_segment(&payload[..cut], 5, 2, 6, 1).is_err(), "cut at {cut}");
+        }
+        // label mismatches fail even with a valid checksum
+        assert!(decode_segment(&payload, 4, 2, 6, 1).is_err(), "wrong branch");
+        assert!(decode_segment(&payload, 5, 0, 4, 1).is_err(), "wrong range");
+        assert!(decode_segment(&payload, 5, 2, 6, 0).is_err(), "wrong shard");
+    }
+
+    #[test]
+    fn local_checkpoint_restore_roundtrip() {
+        let tmp = TempDir::new("roundtrip");
+        let ps = ParamServer::new(3, Optimizer::new(OptimizerKind::Adam));
+        for k in 0..32u64 {
+            ps.insert_row(0, 0, k, vec![k as f32, -(k as f32)]);
+        }
+        ps.fork_branch(1, 0).unwrap();
+        let h = Hyper { lr: 0.1, momentum: 0.9 };
+        for k in 0..16u64 {
+            ps.apply_update(1, 0, k, &[1.0, -1.0], h, None).unwrap();
+        }
+        let metas = checkpoint_range(&ps, 1, 0, 3, tmp.path()).unwrap();
+        assert_eq!(metas.len(), 3);
+        assert_eq!(metas.iter().map(|m| m.rows).sum::<u64>(), 32);
+
+        // restore into a fresh engine with the same topology
+        let fresh = ParamServer::new(3, Optimizer::new(OptimizerKind::Adam));
+        fresh.ensure_branch(0);
+        let restored = restore_range(&fresh, 1, 0, 3, tmp.path()).unwrap();
+        assert_eq!(restored, 32);
+        assert_eq!(fresh.branch_row_count(1), 32);
+        for k in 0..32u64 {
+            let a = ps.read_row(1, 0, k).unwrap();
+            let b = fresh.read_row(1, 0, k).unwrap();
+            assert_eq!(bits(&a), bits(&b), "row {k}");
+            // optimizer slots travel too
+            let sa = ps.with_row(1, 0, k, |e| (e.slots.clone(), e.step)).unwrap();
+            let sb = fresh.with_row(1, 0, k, |e| (e.slots.clone(), e.step)).unwrap();
+            assert_eq!(sa.1, sb.1);
+            for (x, y) in sa.0.iter().zip(&sb.0) {
+                assert_eq!(bits(x), bits(y));
+            }
+        }
+    }
+
+    #[test]
+    fn restore_into_wrong_topology_fails_closed() {
+        let tmp = TempDir::new("topology");
+        let ps = ParamServer::new(4, Optimizer::new(OptimizerKind::Sgd));
+        ps.insert_row(0, 0, 0, vec![1.0]);
+        checkpoint_range(&ps, 0, 0, 4, tmp.path()).unwrap();
+        let other = ParamServer::new(3, Optimizer::new(OptimizerKind::Sgd));
+        other.ensure_branch(0);
+        let before = other.read_row(0, 0, 0);
+        let err = restore_range(&other, 0, 0, 4, tmp.path()).unwrap_err();
+        assert!(err.to_string().contains("topology"), "{err}");
+        assert_eq!(other.read_row(0, 0, 0), before, "state must be unchanged");
+    }
+
+    #[test]
+    fn hex_helpers_roundtrip() {
+        for v in [0u64, 1, u64::MAX, 0xdead_beef_0123_4567] {
+            assert_eq!(parse_hex_u64(&hex_u64(v)).unwrap(), v);
+        }
+        assert!(parse_hex_u64("not hex").is_err());
+    }
+}

@@ -87,14 +87,33 @@
 //! than spawning); at [`PARALLEL_BRANCH_OP_MIN_ROWS`] rows and above
 //! the fan-out runs one scoped thread per shard, each locking only its
 //! own shard.
+//!
+//! ## Checkpoint plane
+//!
+//! [`checkpoint`] extends the in-memory snapshots to disk: a branch's
+//! rows (data + optimizer slots + step) dump to per-shard segment
+//! files as f32 bit patterns with trailing checksums, and restore
+//! swaps the verified rows back in wholesale
+//! ([`ParamServer::replace_branch_rows`]) so a corrupted checkpoint
+//! never leaves partial state.  The [`ParamStore`] methods
+//! `checkpoint_branch`/`restore_branch` expose the plane uniformly:
+//! the local engine dumps its shards in parallel under read locks; the
+//! remote client broadcasts [`crate::comm::wire::PsRequest`]
+//! `CheckpointBranch`/`RestoreBranch` frames so every shard server
+//! dumps or restores its own range concurrently.  Restored branches
+//! are born fully materialized (the `Arc` sharing of the original
+//! process cannot be reconstructed from files), which affects only
+//! pool statistics, never row values.
 
 pub mod cache;
+pub mod checkpoint;
 pub mod pool;
 pub mod remote;
 pub mod storage;
 pub mod thread_cache;
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard, TryLockError};
 
@@ -103,6 +122,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::comm::BranchId;
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
 
+use checkpoint::SegmentMeta;
 use pool::{MemoryPool, PoolStats};
 use remote::RemoteParamServer;
 use storage::{Entry, RowKey, Shard, TableId};
@@ -233,7 +253,8 @@ fn route(table: TableId, key: RowKey, n: usize) -> usize {
     (h % n as u64) as usize
 }
 
-/// The shard router as a pure public function (see [`route`]).
+/// The shard router as a pure public function (see the private
+/// `route` above for the mixing rationale).
 #[inline]
 pub fn route_shard(table: TableId, key: RowKey, num_shards: usize) -> usize {
     route(table, key, num_shards)
@@ -389,6 +410,41 @@ impl ParamServer {
         };
         self.fan_out(rows, |shard, pool| shard.free(branch, pool));
         Ok(())
+    }
+
+    /// Install `rows` as the complete content of `branch`, replacing
+    /// whatever the branch previously held — the restore half of the
+    /// [`checkpoint`] plane.  Creates the branch if it does not exist.
+    /// Rows are routed with the normal shard router; the control plane
+    /// stays locked for the whole operation exactly like a fork/free,
+    /// so restores serialize against branch ops without touching the
+    /// update/read hot path of other branches.  Displaced sole-owner
+    /// buffers of the old branch content are reclaimed into the shard
+    /// pools.  Returns the installed row count.
+    pub fn replace_branch_rows(
+        &self,
+        branch: BranchId,
+        rows: Vec<(TableId, RowKey, Entry)>,
+    ) -> usize {
+        let mut ctl = lock_control(&self.control);
+        let n_shards = self.shards.len();
+        let n_rows = rows.len();
+        let mut groups: Vec<Vec<(TableId, RowKey, Entry)>> =
+            (0..n_shards).map(|_| Vec::new()).collect();
+        for (table, key, entry) in rows {
+            groups[route(table, key, n_shards)].push((table, key, entry));
+        }
+        for (sid, group) in groups.into_iter().enumerate() {
+            let mut st = write_shard(&self.shards[sid], &self.counters);
+            let ShardState { shard, pool } = &mut *st;
+            shard.free(branch, pool);
+            for (table, key, entry) in group {
+                shard.insert(branch, table, key, entry);
+            }
+        }
+        ctl.branch_rows.insert(branch, n_rows);
+        ctl.peak_branches = ctl.peak_branches.max(ctl.branch_rows.len());
+        n_rows
     }
 
     pub fn branch_exists(&self, branch: BranchId) -> bool {
@@ -804,6 +860,29 @@ pub trait ParamStore: Send + Sync {
         hyper: Hyper,
     ) -> Result<()>;
 
+    /// Durably checkpoint every row of `branch` — data, optimizer
+    /// slots and step counters — into per-shard-range segment files
+    /// under `dir` (see [`checkpoint`]).  The local engine dumps its
+    /// shards in parallel under read locks; a remote store broadcasts
+    /// one `CheckpointBranch` RPC per shard server so every server
+    /// dumps its own range concurrently.  Returns the segment metadata
+    /// for the checkpoint manifest.
+    fn checkpoint_branch(&self, branch: BranchId, dir: &Path) -> Result<Vec<SegmentMeta>>;
+
+    /// Restore `branch` from the segment files under `dir`, replacing
+    /// the branch's current content wholesale (the branch is created
+    /// if absent).  Fail-closed: segments are decoded and verified
+    /// before anything is installed — locally in one pass, remotely as
+    /// a two-phase broadcast (every server verifies its range, then
+    /// every server installs) — so a **corrupted** checkpoint is a
+    /// typed error with store state unchanged.  One caveat remains for
+    /// a remote store: if the install phase itself fails partway
+    /// (server death or file loss *between* the two phases), servers
+    /// can be left heterogeneous — callers must treat any restore
+    /// error as fatal to the session rather than continuing on the
+    /// store.  Returns the restored row count.
+    fn restore_branch(&self, branch: BranchId, dir: &Path) -> Result<usize>;
+
     /// Rows live under `branch` (summed over shard servers).
     fn branch_row_count(&self, branch: BranchId) -> Result<usize>;
 
@@ -901,6 +980,14 @@ impl ParamStore for ParamServer {
         hyper: Hyper,
     ) -> Result<()> {
         ParamServer::apply_batch(self, branch, updates, hyper)
+    }
+
+    fn checkpoint_branch(&self, branch: BranchId, dir: &Path) -> Result<Vec<SegmentMeta>> {
+        checkpoint::checkpoint_range(self, branch, 0, self.num_shards(), dir)
+    }
+
+    fn restore_branch(&self, branch: BranchId, dir: &Path) -> Result<usize> {
+        checkpoint::restore_range(self, branch, 0, self.num_shards(), dir)
     }
 
     fn branch_row_count(&self, branch: BranchId) -> Result<usize> {
@@ -1038,6 +1125,14 @@ impl ParamStore for PsHandle {
         hyper: Hyper,
     ) -> Result<()> {
         dispatch!(self, ps => ParamStore::apply_batch(ps, branch, updates, hyper))
+    }
+
+    fn checkpoint_branch(&self, branch: BranchId, dir: &Path) -> Result<Vec<SegmentMeta>> {
+        dispatch!(self, ps => ParamStore::checkpoint_branch(ps, branch, dir))
+    }
+
+    fn restore_branch(&self, branch: BranchId, dir: &Path) -> Result<usize> {
+        dispatch!(self, ps => ParamStore::restore_branch(ps, branch, dir))
     }
 
     fn branch_row_count(&self, branch: BranchId) -> Result<usize> {

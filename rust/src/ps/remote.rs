@@ -44,6 +44,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -57,6 +58,7 @@ use crate::comm::wire::{
 };
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
 
+use super::checkpoint::{self, SegmentMeta};
 use super::storage::{RowKey, TableId};
 use super::{ParamServer, ParamStore, route_shard, RowData, ServerStats, StoreStats};
 
@@ -264,6 +266,47 @@ impl ShardServer {
             }
             PsRequest::ForkBranch { child, parent } => done(self.ps.fork_branch(*child, *parent)),
             PsRequest::FreeBranch { branch } => done(self.ps.free_branch(*branch)),
+            PsRequest::CheckpointBranch { branch, dir } => {
+                let range = self.range;
+                match checkpoint::checkpoint_range(
+                    &self.ps,
+                    *branch,
+                    range.begin,
+                    range.end,
+                    Path::new(dir),
+                ) {
+                    Ok(segments) => PsReply::Segments { segments },
+                    Err(e) => PsReply::Err {
+                        message: format!("checkpoint failed: {e:#}"),
+                    },
+                }
+            }
+            PsRequest::VerifyBranch { branch, dir } => {
+                let range = self.range;
+                match checkpoint::load_range(*branch, range.begin, range.end, Path::new(dir)) {
+                    Ok(rows) => PsReply::Verified {
+                        rows: rows.len() as u64,
+                    },
+                    Err(e) => PsReply::Err {
+                        message: format!("verify failed: {e:#}"),
+                    },
+                }
+            }
+            PsRequest::RestoreBranch { branch, dir } => {
+                let range = self.range;
+                match checkpoint::restore_range(
+                    &self.ps,
+                    *branch,
+                    range.begin,
+                    range.end,
+                    Path::new(dir),
+                ) {
+                    Ok(rows) => PsReply::Restored { rows: rows as u64 },
+                    Err(e) => PsReply::Err {
+                        message: format!("restore failed: {e:#}"),
+                    },
+                }
+            }
             PsRequest::ServerStats => {
                 let branches = self
                     .ps
@@ -282,6 +325,14 @@ impl ShardServer {
             PsRequest::Shutdown => PsReply::Ok,
         }
     }
+}
+
+/// A checkpoint directory as its wire form (paths cross the data
+/// plane as UTF-8 strings).
+fn utf8_dir(dir: &Path) -> Result<String> {
+    dir.to_str()
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("checkpoint dir {} is not valid UTF-8", dir.display()))
 }
 
 /// Cap on idle pooled connections parked per shard server.  Leases
@@ -519,6 +570,21 @@ impl RemoteParamServer {
             .collect()
     }
 
+    /// Broadcast one request to every shard server concurrently (one
+    /// scoped thread per server, each leasing its own pooled
+    /// connection) and collect the replies in server order.
+    fn broadcast(&self, req: &PsRequest) -> Vec<Result<PsReply>> {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.servers.len())
+                .map(|si| scope.spawn(move || self.request(si, req)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("broadcast worker panicked"))
+                .collect()
+        })
+    }
+
     /// Ask every shard server process to exit (used by tests and
     /// orchestration teardown; the acknowledgement is awaited).
     pub fn shutdown_all(&self) -> Result<()> {
@@ -572,6 +638,62 @@ impl ParamStore for RemoteParamServer {
         Ok(())
     }
 
+    /// The durable-checkpoint broadcast: every shard server dumps its
+    /// own shard range into `dir` **concurrently** (one scoped thread
+    /// per server, each leasing its own pooled connection); the
+    /// returned segment metadata — sorted by range, then shard — is
+    /// what the coordinator records in the manifest.  The coordinator
+    /// itself writes no row data.
+    fn checkpoint_branch(&self, branch: BranchId, dir: &Path) -> Result<Vec<SegmentMeta>> {
+        let dir = utf8_dir(dir)?;
+        let req = PsRequest::CheckpointBranch { branch, dir };
+        let mut out = Vec::new();
+        for (si, reply) in self.broadcast(&req).into_iter().enumerate() {
+            match reply? {
+                PsReply::Segments { segments } => out.extend(segments),
+                PsReply::Err { message } => bail!("{}: {message}", self.servers[si].spec),
+                other => bail!("{}: unexpected reply {other:?}", self.servers[si].spec),
+            }
+        }
+        out.sort_by_key(|s| (s.range_begin, s.local_shard));
+        Ok(out)
+    }
+
+    /// Two-phase restore broadcast.  Phase 1 (`VerifyBranch`): every
+    /// shard server decodes and checksum-verifies the segment files of
+    /// its own range **without installing** — any corruption anywhere
+    /// aborts here with every server untouched, so a bad checkpoint
+    /// cannot leave a cross-server torn branch.  Phase 2
+    /// (`RestoreBranch`): only after every server verified does the
+    /// install broadcast go out, each server swapping its rows in
+    /// wholesale.  (A file mutated *between* the phases still fails
+    /// that server's own re-verification; the coordinator then aborts
+    /// the session rather than serving mixed state.)
+    fn restore_branch(&self, branch: BranchId, dir: &Path) -> Result<usize> {
+        let dir = utf8_dir(dir)?;
+        let verify = PsRequest::VerifyBranch {
+            branch,
+            dir: dir.clone(),
+        };
+        for (si, reply) in self.broadcast(&verify).into_iter().enumerate() {
+            match reply? {
+                PsReply::Verified { .. } => {}
+                PsReply::Err { message } => bail!("{}: {message}", self.servers[si].spec),
+                other => bail!("{}: unexpected reply {other:?}", self.servers[si].spec),
+            }
+        }
+        let install = PsRequest::RestoreBranch { branch, dir };
+        let mut total = 0usize;
+        for (si, reply) in self.broadcast(&install).into_iter().enumerate() {
+            match reply? {
+                PsReply::Restored { rows } => total += rows as usize,
+                PsReply::Err { message } => bail!("{}: {message}", self.servers[si].spec),
+                other => bail!("{}: unexpected reply {other:?}", self.servers[si].spec),
+            }
+        }
+        Ok(total)
+    }
+
     fn read_row(&self, branch: BranchId, table: TableId, key: RowKey) -> Result<Option<Vec<f32>>> {
         Ok(self.request_row(branch, table, key, false)?.0)
     }
@@ -587,7 +709,7 @@ impl ParamStore for RemoteParamServer {
     }
 
     /// The batched read plane: route every key once, group per shard
-    /// *server* (the read-side mirror of [`RemoteParamServer::apply_batch`]'s
+    /// *server* (the read-side mirror of [`ParamStore::apply_batch`]'s
     /// grouping), and issue **one** `ReadRows` RPC per server holding
     /// any of the keys — the per-clock RPC count of a gather phase is
     /// O(shard servers × workers) instead of O(touched rows).  Replies
@@ -1052,6 +1174,86 @@ mod tests {
             }
         });
         teardown(remote, handles);
+    }
+
+    #[test]
+    fn checkpoint_survives_server_death_and_fails_closed_on_corruption() {
+        let dir = std::env::temp_dir().join(format!(
+            "mltuner-remote-ckpt-{}-{}",
+            std::process::id(),
+            std::thread::current().name().unwrap_or("t").len()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // first cluster: train a bit, checkpoint branch 1, then die
+        let (remote, _local, handles) = cluster(OptimizerKind::AdaRevision, Framing::Line);
+        let hyper = Hyper { lr: 0.1, momentum: 0.0 };
+        for k in 0..24u64 {
+            remote.insert_row(0, 0, k, vec![k as f32, -1.0]).unwrap();
+        }
+        remote.fork_branch(1, 0).unwrap();
+        for k in 0..24u64 {
+            let (_, z) = remote.read_row_with_accum(1, 0, k).unwrap().unwrap();
+            remote.apply_update(1, 0, k, &[0.5, 0.5], hyper, z.as_deref()).unwrap();
+        }
+        let metas = remote.checkpoint_branch(1, &dir).unwrap();
+        assert_eq!(metas.len(), 4, "two servers x two local shards");
+        assert_eq!(metas.iter().map(|m| m.rows).sum::<u64>(), 24);
+        let want: Vec<Vec<u32>> = (0..24u64)
+            .map(|k| {
+                remote
+                    .read_row(1, 0, k)
+                    .unwrap()
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect()
+            })
+            .collect();
+        teardown(remote, handles); // the whole first cluster dies
+
+        // second cluster (fresh processes, same topology): restore
+        let (remote, _local, handles) = cluster(OptimizerKind::AdaRevision, Framing::Line);
+        for k in 0..24u64 {
+            remote.insert_row(0, 0, k, vec![k as f32, -1.0]).unwrap();
+        }
+        let rows = remote.restore_branch(1, &dir).unwrap();
+        assert_eq!(rows, 24);
+        for (k, want) in want.iter().enumerate() {
+            let got: Vec<u32> = remote
+                .read_row(1, 0, k as u64)
+                .unwrap()
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(&got, want, "row {k} after cross-process restore");
+        }
+
+        // corrupt one segment: the restore must fail closed with the
+        // restored state intact on every server
+        let victim = dir.join(&metas[1].file);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = remote.restore_branch(1, &dir).unwrap_err();
+        // phase 1 (verify) catches it, so NO server installed anything
+        assert!(err.to_string().contains("verify failed"), "{err}");
+        for (k, want) in want.iter().enumerate() {
+            let got: Vec<u32> = remote
+                .read_row(1, 0, k as u64)
+                .unwrap()
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(&got, want, "row {k} must be unchanged after failed restore");
+        }
+        assert_eq!(remote.live_branches().unwrap(), vec![0, 1]);
+        teardown(remote, handles);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -229,6 +229,17 @@ impl Shard {
         v
     }
 
+    /// Visit every row of `branch` (the checkpoint plane's dump path:
+    /// called under the shard's read lock, rows are cloned out by the
+    /// visitor and serialized outside the lock).
+    pub fn for_each_row(&self, branch: BranchId, mut f: impl FnMut(TableId, RowKey, &Entry)) {
+        if let Some(rows) = self.branches.get(&branch) {
+            for (&(table, key), arc) in rows {
+                f(table, key, arc);
+            }
+        }
+    }
+
     /// Iterate all (table, key) pairs of a branch (row enumeration for
     /// bulk reads).
     pub fn keys(&self, branch: BranchId) -> Vec<(TableId, RowKey)> {

@@ -23,9 +23,12 @@
 
 pub mod clock;
 
-use anyhow::Result;
+use std::path::Path;
+
+use anyhow::{bail, Result};
 
 use crate::comm::{BranchId, BranchType, Clock, ProtocolChecker, TunerMsg};
+use crate::ps::checkpoint::StoreCheckpoint;
 use crate::tunable::TunableSetting;
 
 /// One clock's progress report: `value` is the aggregated training loss
@@ -115,14 +118,66 @@ pub trait TrainingSystem {
     fn snapshot_stats(&self) -> SnapshotStats {
         SnapshotStats::default()
     }
+
+    /// Durably checkpoint this system's branch state — parameter rows,
+    /// optimizer slots, and per-branch metadata — into `dir` (the
+    /// checkpoint plane of [`crate::ps::checkpoint`]).  Returns `None`
+    /// when the system has no durable store; resume then re-executes
+    /// the session journal against a freshly built system instead
+    /// (exact for virtual-time systems like the simulator).
+    fn checkpoint_session(&self, _dir: &Path) -> Result<Option<StoreCheckpoint>> {
+        Ok(None)
+    }
+
+    /// Restore the branch state written by
+    /// [`TrainingSystem::checkpoint_session`] from `dir` into this
+    /// (freshly constructed) system.  Returns `Ok(false)` when the
+    /// system does not support durable restore — the caller then falls
+    /// back to journal re-execution.
+    fn restore_session(&mut self, _store: &StoreCheckpoint, _dir: &Path) -> Result<bool> {
+        Ok(false)
+    }
+}
+
+/// One recorded protocol exchange: a Table-1 message and (for
+/// `ScheduleBranch`) the progress report it returned.  The sequence of
+/// these — the **session journal** — is the event-sourced serialization
+/// of a tune session: replaying it through a [`MessageDriver`]
+/// deterministically rebuilds every piece of coordinator state
+/// (searcher, trial traces, recorder, clock), even mid-episode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalEntry {
+    pub msg: TunerMsg,
+    pub reply: Option<Progress>,
 }
 
 /// Message-level driver: validates the §4.5 protocol (clock order, one
 /// schedule per clock) before dispatching to the [`TrainingSystem`].
 /// MLtuner and the baselines drive systems exclusively through this.
+///
+/// The driver is also the session journal's capture and replay point:
+/// with recording enabled, every message/reply pair is appended to an
+/// in-memory journal (serialized to disk by checkpoints, see
+/// [`crate::tuner::session`]); with a journal loaded, messages are
+/// matched against the recorded sequence and answered from it — bit
+/// exactly — until the journal is exhausted, at which point the driver
+/// switches to live dispatch.  A resumed coordinator that emits a
+/// message differing from the journal is a determinism bug and fails
+/// closed with a typed error.
 pub struct MessageDriver<S: TrainingSystem> {
     pub system: S,
     checker: ProtocolChecker,
+    /// Recorded traffic (journal); during replay, `cursor` walks it.
+    journal: Vec<JournalEntry>,
+    /// Next journal index to match.  `cursor < journal.len()` means
+    /// the driver is replaying; once equal, it is live.
+    cursor: usize,
+    /// During replay, also re-execute each message against the system
+    /// (used when the system has no durable store and must be rebuilt
+    /// by deterministic re-execution).
+    forward_replay: bool,
+    /// Append live traffic to the journal (checkpointing enabled).
+    recording: bool,
 }
 
 impl<S: TrainingSystem> MessageDriver<S> {
@@ -130,12 +185,89 @@ impl<S: TrainingSystem> MessageDriver<S> {
         MessageDriver {
             system,
             checker: ProtocolChecker::default(),
+            journal: Vec::new(),
+            cursor: 0,
+            forward_replay: false,
+            recording: false,
         }
+    }
+
+    /// Start appending live traffic to the in-memory session journal.
+    pub fn enable_recording(&mut self) {
+        self.recording = true;
+    }
+
+    /// The recorded session journal so far (what a checkpoint
+    /// serializes).
+    pub fn journal(&self) -> &[JournalEntry] {
+        &self.journal
+    }
+
+    /// Load a session journal for replay.  Subsequent sends must match
+    /// the recorded sequence and are answered from it; with
+    /// `forward_to_system` the messages are additionally re-executed
+    /// against the training system (re-execution resume for systems
+    /// without a durable store).  Recording stays on so the journal
+    /// keeps growing past the replayed prefix.
+    pub fn load_journal(&mut self, entries: Vec<JournalEntry>, forward_to_system: bool) {
+        self.journal = entries;
+        self.cursor = 0;
+        self.forward_replay = forward_to_system;
+        self.recording = true;
+    }
+
+    /// Is the driver still answering from a loaded journal?
+    pub fn is_replaying(&self) -> bool {
+        self.cursor < self.journal.len()
     }
 
     /// Dispatch one tuner message; `ScheduleBranch` returns progress.
     pub fn send(&mut self, msg: &TunerMsg) -> Result<Option<Progress>> {
+        if self.cursor < self.journal.len() {
+            let entry = self.journal[self.cursor].clone();
+            if entry.msg != *msg {
+                bail!(
+                    "session journal divergence at entry {}: resumed coordinator sent \
+                     {msg:?}, journal holds {:?} — every control-flow input is \
+                     journaled (replies, decision times, searcher seeds), so this \
+                     indicates a nondeterministic coordinator change; the checkpoint \
+                     itself is intact",
+                    self.cursor,
+                    entry.msg
+                );
+            }
+            self.checker.check(msg)?;
+            if self.forward_replay {
+                let live = self.dispatch(msg)?;
+                if let (Some(live), Some(rec)) = (live, entry.reply) {
+                    if live.value.to_bits() != rec.value.to_bits() {
+                        bail!(
+                            "session replay diverged at entry {}: system reported progress \
+                             {}, journal holds {} — this training system is not \
+                             deterministic enough to resume by re-execution",
+                            self.cursor,
+                            live.value,
+                            rec.value
+                        );
+                    }
+                }
+            }
+            self.cursor += 1;
+            return Ok(entry.reply);
+        }
         self.checker.check(msg)?;
+        let reply = self.dispatch(msg)?;
+        if self.recording {
+            self.journal.push(JournalEntry {
+                msg: msg.clone(),
+                reply,
+            });
+            self.cursor = self.journal.len();
+        }
+        Ok(reply)
+    }
+
+    fn dispatch(&mut self, msg: &TunerMsg) -> Result<Option<Progress>> {
         match msg {
             TunerMsg::ForkBranch {
                 clock,
@@ -235,5 +367,59 @@ mod tests {
                 branch_id: 1
             })
             .is_err());
+    }
+
+    fn fork(clock: Clock) -> TunerMsg {
+        TunerMsg::ForkBranch {
+            clock,
+            branch_id: 1,
+            parent_branch_id: None,
+            tunable: TunableSetting::new(vec![]),
+            branch_type: BranchType::Training,
+        }
+    }
+
+    fn sched(clock: Clock) -> TunerMsg {
+        TunerMsg::ScheduleBranch {
+            clock,
+            branch_id: 1,
+        }
+    }
+
+    #[test]
+    fn driver_records_and_replays_a_journal() {
+        // record a short session against the deterministic Toy system
+        let mut d = MessageDriver::new(Toy::default());
+        d.enable_recording();
+        let script = [fork(0), sched(0), sched(1), sched(2)];
+        let mut replies = Vec::new();
+        for m in &script {
+            replies.push(d.send(m).unwrap());
+        }
+        assert_eq!(d.journal().len(), script.len());
+        let journal = d.journal().to_vec();
+
+        // replay it into a FRESH system (forward: Toy has no durable
+        // store, so resume is re-execution) — replies must be served
+        // bit-exactly from the journal
+        let mut d2 = MessageDriver::new(Toy::default());
+        d2.load_journal(journal.clone(), true);
+        assert!(d2.is_replaying());
+        for (m, want) in script.iter().zip(&replies) {
+            let got = d2.send(m).unwrap();
+            assert_eq!(got.map(|p| p.value.to_bits()), want.map(|p| p.value.to_bits()));
+        }
+        assert!(!d2.is_replaying(), "journal exhausted, driver is live");
+        // and the session continues live, with the journal still growing
+        let p = d2.send(&sched(3)).unwrap().unwrap();
+        assert!(p.value < replies[3].unwrap().value);
+        assert_eq!(d2.journal().len(), script.len() + 1);
+
+        // a resumed coordinator that emits a different message than
+        // the journal fails closed
+        let mut d3 = MessageDriver::new(Toy::default());
+        d3.load_journal(journal, false);
+        let err = d3.send(&sched(0)).unwrap_err();
+        assert!(err.to_string().contains("divergence"), "{err}");
     }
 }

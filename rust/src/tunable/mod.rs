@@ -49,12 +49,17 @@ impl TunableSpec {
     pub fn encode(&self, v: f64) -> f64 {
         match self {
             TunableSpec::Discrete { values, .. } => {
+                // Nearest-bucket search through a NaN-proof total
+                // order (the `cmp_speed_desc` discipline of the
+                // searcher ranking): a NaN distance — e.g. a NaN input
+                // value, which a diverged trial can produce — ranks
+                // strictly worst, so the search falls back to the
+                // first bucket instead of panicking the old
+                // `partial_cmp().unwrap()`.
                 let idx = values
                     .iter()
                     .enumerate()
-                    .min_by(|(_, a), (_, b)| {
-                        (*a - v).abs().partial_cmp(&(*b - v).abs()).unwrap()
-                    })
+                    .min_by(|(_, a), (_, b)| (*a - v).abs().total_cmp(&(*b - v).abs()))
                     .map(|(i, _)| i)
                     .unwrap_or(0);
                 (idx as f64 + 0.5) / values.len() as f64
@@ -280,6 +285,27 @@ mod tests {
         // off-grid values snap to nearest
         assert_eq!(s.decode(s.encode(2.9)), 3.0);
         assert_eq!(s.decode(s.encode(100.0)), 7.0);
+    }
+
+    #[test]
+    fn discrete_encode_survives_nan_input() {
+        // Regression: the nearest-bucket ranking used
+        // `partial_cmp().unwrap()` and panicked on a NaN value (the
+        // shape a diverged trial hands back).  NaN now simply loses:
+        // every distance is NaN, the search falls back to the first
+        // bucket, and the coordinate stays inside the unit cube.
+        let s = TunableSpec::Discrete {
+            name: "bs".into(),
+            values: vec![4.0, 16.0, 64.0],
+        };
+        let u = s.encode(f64::NAN);
+        assert!(u.is_finite() && (0.0..=1.0).contains(&u), "u={u}");
+        assert_eq!(s.decode(u), 4.0, "NaN falls back to the first bucket");
+        // infinities keep working (all-infinite distances tie)
+        assert!((0.0..=1.0).contains(&s.encode(f64::INFINITY)));
+        // and finite inputs still snap to the nearest member
+        assert_eq!(s.decode(s.encode(15.0)), 16.0);
+        assert_eq!(s.decode(s.encode(-3.0)), 4.0);
     }
 
     #[test]

@@ -20,6 +20,15 @@
 //!
 //! Outside Algorithm-1 exploration at most three branches are live:
 //! parent, current best, current trial (§4.6).
+//!
+//! With [`TunerConfig::checkpoint`] set, the session additionally
+//! journals every message it sends and periodically persists a durable
+//! checkpoint (journal + parameter-store segments, see [`session`]);
+//! [`TunerConfig::resume`] picks the latest checkpoint back up after a
+//! crash — mid-tuning-episode included — by restoring the store plane
+//! and replaying the journal.
+
+pub mod session;
 
 use std::time::Instant;
 
@@ -30,6 +39,8 @@ use crate::searcher::{Proposal, Searcher, SearcherKind, StoppingCondition};
 use crate::summarizer::{BranchLabel, ProgressPoint, ProgressSummarizer};
 use crate::training::{MessageDriver, Progress, SnapshotStats, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
+
+use session::{CheckpointDir, CheckpointPolicy, SessionHeader};
 
 /// When is the model converged?
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -62,6 +73,16 @@ pub struct TunerConfig {
     /// Clocks used to estimate a branch's per-clock time (§4.5: "first
     /// schedule that branch to run for some small number of clocks").
     pub measure_clocks: u64,
+    /// Durable checkpointing (off by default): where to write
+    /// checkpoint steps and how many clocks between them.
+    pub checkpoint: Option<CheckpointPolicy>,
+    /// Resume from the latest checkpoint under `checkpoint.dir`
+    /// instead of starting fresh (requires `checkpoint`).
+    pub resume: bool,
+    /// Fault injection for crash-recovery tests (`--crash-after-clocks`):
+    /// abort the run with a typed error once this many clocks have
+    /// executed live.  Never set in production runs.
+    pub crash_after_clocks: Option<u64>,
 }
 
 impl TunerConfig {
@@ -78,6 +99,9 @@ impl TunerConfig {
             max_trials_per_tuning: 64,
             max_trial_doublings: 24,
             measure_clocks: 3,
+            checkpoint: None,
+            resume: false,
+            crash_after_clocks: None,
         }
     }
 }
@@ -138,6 +162,18 @@ pub struct MLtuner<S: TrainingSystem> {
     tuning_time: f64,
     pub recorder: RunRecorder,
     tunings: Vec<TuningRecord>,
+    /// Clock of the last committed checkpoint (0 = none yet).
+    last_checkpoint_clock: u64,
+    /// Wall-clock searcher decision times (f64 bit patterns) in the
+    /// order Algorithm 1 consumed them — the one wall-clock input to
+    /// tuner control flow.  Journaled with the session so a resumed
+    /// coordinator replays the original values instead of
+    /// re-measuring, which is what makes journal replay deterministic
+    /// even for systems with very fast clocks (see [`session`]).
+    decision_log: Vec<u64>,
+    /// Next `decision_log` entry to consume; past the end, decisions
+    /// are measured live and appended.
+    decision_cursor: usize,
 }
 
 impl<S: TrainingSystem> MLtuner<S> {
@@ -152,6 +188,9 @@ impl<S: TrainingSystem> MLtuner<S> {
             tuning_time: 0.0,
             recorder: RunRecorder::new(),
             tunings: Vec::new(),
+            last_checkpoint_clock: 0,
+            decision_log: Vec::new(),
+            decision_cursor: 0,
         }
     }
 
@@ -206,7 +245,118 @@ impl<S: TrainingSystem> MLtuner<S> {
         };
         self.clock += 1;
         self.now += p.time;
+        if let Some(limit) = self.cfg.crash_after_clocks {
+            if !self.driver.is_replaying() && self.clock >= limit {
+                bail!("crash injection: clock limit {limit} reached");
+            }
+        }
+        self.maybe_checkpoint()?;
         Ok(p)
+    }
+
+    /// The searcher decision time Algorithm 1 should use: the
+    /// journaled value during resume replay (so the replayed control
+    /// flow — how many clocks each trial runs — matches the original
+    /// run exactly, whatever this machine's timing does), the measured
+    /// one live (appended to the log for the next checkpoint).
+    fn decision_time(&mut self, measured: f64) -> f64 {
+        if self.decision_cursor < self.decision_log.len() {
+            let v = f64::from_bits(self.decision_log[self.decision_cursor]);
+            self.decision_cursor += 1;
+            return v;
+        }
+        self.decision_log.push(measured.to_bits());
+        self.decision_cursor = self.decision_log.len();
+        measured
+    }
+
+    // ----- durable checkpoints (see [`session`]) -----
+
+    /// Arm journal recording and, on resume, load the latest
+    /// checkpoint: restore the store plane through the training system
+    /// and put the driver into journal replay.  Called once at the top
+    /// of [`MLtuner::run`].
+    fn init_checkpointing(&mut self) -> Result<()> {
+        let Some(policy) = self.cfg.checkpoint.clone() else {
+            if self.cfg.resume {
+                bail!("resume requires a checkpoint dir (set TunerConfig::checkpoint)");
+            }
+            return Ok(());
+        };
+        self.driver.enable_recording();
+        if !self.cfg.resume {
+            return Ok(());
+        }
+        let ckd = CheckpointDir::new(&policy.dir);
+        let Some(step) = ckd.latest()? else {
+            bail!("nothing to resume: no committed checkpoint under {}", policy.dir.display());
+        };
+        let loaded = session::load(&step)?;
+        let restored = match &loaded.store {
+            // durable store: rows come from the segment files; the
+            // journal replay skips the system entirely
+            Some(store) => {
+                if !self.driver.system.restore_session(store, &step)? {
+                    bail!(
+                        "checkpoint at {} carries a parameter-store snapshot but this \
+                         training system cannot restore one — is the config pointing at \
+                         the same app that wrote the checkpoint?",
+                        step.display()
+                    );
+                }
+                true
+            }
+            // no durable store (e.g. the simulator): rebuild the
+            // system by re-executing the journal against it
+            None => false,
+        };
+        self.driver.load_journal(loaded.entries, !restored);
+        self.decision_log = loaded.decisions;
+        self.decision_cursor = 0;
+        self.last_checkpoint_clock = loaded.header.clock;
+        Ok(())
+    }
+
+    /// Checkpoint when enough clocks have passed since the last one.
+    /// Skipped while the driver is replaying a loaded journal (those
+    /// clocks were already checkpointed by the original run).
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        let Some(policy) = &self.cfg.checkpoint else {
+            return Ok(());
+        };
+        if self.driver.is_replaying()
+            || self.clock - self.last_checkpoint_clock < policy.every_clocks.max(1)
+        {
+            return Ok(());
+        }
+        self.save_checkpoint()
+    }
+
+    /// Write and commit one checkpoint step: store segments (via the
+    /// training system), session journal, recorder, manifest, LATEST
+    /// pointer.
+    fn save_checkpoint(&mut self) -> Result<()> {
+        let policy = self.cfg.checkpoint.clone().expect("checkpointing enabled");
+        let ckd = CheckpointDir::new(&policy.dir);
+        let step = ckd.begin_step(self.clock)?;
+        let store = self.driver.system.checkpoint_session(&step)?;
+        let header = SessionHeader {
+            clock: self.clock,
+            next_branch: self.next_branch,
+            now: self.now,
+            tuning_time: self.tuning_time,
+        };
+        session::save(
+            &step,
+            &header,
+            self.driver.journal(),
+            &self.decision_log,
+            store.as_ref(),
+            &self.recorder,
+        )?;
+        ckd.commit_step(self.clock)?;
+        self.last_checkpoint_clock = self.clock;
+        Ok(())
     }
 
     /// Run a trial branch until its total run time reaches `target`
@@ -275,7 +425,7 @@ impl<S: TrainingSystem> MLtuner<S> {
                 match searcher.propose() {
                     Proposal::Exhausted => exhausted = true,
                     Proposal::Point(point) => {
-                        let decision = t0.elapsed().as_secs_f64();
+                        let decision = self.decision_time(t0.elapsed().as_secs_f64());
                         trial_time = trial_time.max(decision);
                         let setting = self.cfg.space.decode(&point);
                         let branch =
@@ -455,6 +605,7 @@ impl<S: TrainingSystem> MLtuner<S> {
     /// tuning, epoch-wise training with validation, re-tuning on
     /// plateau, stop at convergence.
     pub fn run(&mut self) -> Result<TunerReport> {
+        self.init_checkpointing()?;
         let mut episode = 0usize;
         // --- initial tuning (or hard-coded initial setting, Fig. 10) ---
         let (mut train_branch, mut setting, mut prev_trials) =

@@ -1,0 +1,755 @@
+//! Durable tune-session checkpoints: the coordinator half of the
+//! checkpoint plane (the parameter-store half is
+//! [`crate::ps::checkpoint`]).
+//!
+//! A tune session is **event-sourced**: the [`MessageDriver`] records
+//! every Table-1 message and every progress reply (the *session
+//! journal*), and replaying that journal through a fresh coordinator
+//! deterministically rebuilds every piece of tuner state — searcher
+//! observations, live trial traces, the best setting, the clock, and
+//! every recorder event — even when the checkpoint landed in the
+//! middle of a tuning episode.  Replay is exact because every input to
+//! coordinator control flow is journaled: progress values and times as
+//! f64 **bit patterns**, the searchers are seeded, and the one
+//! remaining wall-clock input — the searcher decision times that
+//! lower-bound Algorithm 1's trial time — is journaled too (the
+//! `decisions` line), so a resumed coordinator replays the original
+//! values instead of re-measuring them.
+//!
+//! What lands on disk per checkpoint step (`step-<clock>/`):
+//!
+//! * `session.mlt` — header (clock, branch counter, accumulated time as
+//!   bit patterns) + one journal line per message, with a trailing
+//!   FNV-1a 64 checksum line;
+//! * per-branch segment files (when the training system has a durable
+//!   store — written by [`TrainingSystem::checkpoint_session`], on
+//!   shard servers for a distributed store);
+//! * `recorder.csv` — the run recorder so far (inspection artifact,
+//!   not read back on resume);
+//! * `MANIFEST` — the commit record tying everything together: store
+//!   metadata (optimizer, branches, segment checksums) and the session
+//!   file's checksum, itself checksummed.
+//!
+//! Steps are crash-consistent: a step directory is fully written and
+//! fsynced before the `LATEST` pointer file is atomically renamed onto
+//! it, and only then is the previous step pruned — a kill at any point
+//! leaves either the old or the new checkpoint installed, never a torn
+//! one.  Resume ([`MLtuner::run`] with `TunerConfig::resume`) loads
+//! `LATEST`, restores the store plane, and replays the journal; how a
+//! restored system continues is decided by
+//! [`TrainingSystem::restore_session`] — parameter-server apps restore
+//! rows from segments and skip re-execution, the simulator re-executes
+//! the (cheap, virtual-time) journal instead.
+//!
+//! [`MessageDriver`]: crate::training::MessageDriver
+//! [`TrainingSystem::checkpoint_session`]: crate::training::TrainingSystem::checkpoint_session
+//! [`TrainingSystem::restore_session`]: crate::training::TrainingSystem::restore_session
+//! [`MLtuner::run`]: crate::tuner::MLtuner::run
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::wire::{decode_tuner_msg, encode_tuner_msg, push_json_str};
+use crate::comm::{BranchType, TunerMsg};
+use crate::metrics::RunRecorder;
+use crate::ps::checkpoint::{
+    fnv1a, hex_u64, parse_hex_u64, write_atomic, BranchCkpt, SegmentMeta, StoreCheckpoint,
+};
+use crate::training::{JournalEntry, Progress};
+use crate::util::json::Json;
+
+const SESSION_MAGIC: &str = "mltuner-session v1";
+const MANIFEST_MAGIC: &str = "mltuner-checkpoint v1";
+
+/// Checkpointing policy of a tune session (`TunerConfig::checkpoint`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointPolicy {
+    /// Root checkpoint directory (step subdirectories and the `LATEST`
+    /// pointer live here).
+    pub dir: PathBuf,
+    /// Checkpoint at the first safe point after this many clocks since
+    /// the previous checkpoint.
+    pub every_clocks: u64,
+}
+
+/// Summary state written into the session header.  Redundant with the
+/// journal (replay rebuilds all of it) — it anchors the fail-closed
+/// cross-checks at load time and makes checkpoints inspectable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionHeader {
+    /// Clocks executed (= `ScheduleBranch` entries in the journal).
+    pub clock: u64,
+    /// Next branch id the coordinator would allocate.
+    pub next_branch: u32,
+    /// Accumulated run time, seconds (bit-exact via bit patterns).
+    pub now: f64,
+    /// Accumulated tuning time, seconds.
+    pub tuning_time: f64,
+}
+
+/// Everything a checkpoint step holds, decoded and verified.
+#[derive(Debug, Clone)]
+pub struct SessionCheckpoint {
+    pub header: SessionHeader,
+    pub entries: Vec<JournalEntry>,
+    /// Searcher decision times (f64 bit patterns) in consumption
+    /// order — replayed instead of re-measured on resume.
+    pub decisions: Vec<u64>,
+    /// The parameter-store half; `None` for systems without a durable
+    /// store (resume re-executes the journal).
+    pub store: Option<StoreCheckpoint>,
+}
+
+// ---------------------------------------------------------------------------
+// Step directories and the LATEST pointer
+// ---------------------------------------------------------------------------
+
+/// A root checkpoint directory: numbered step subdirectories plus the
+/// atomically updated `LATEST` pointer.
+#[derive(Debug, Clone)]
+pub struct CheckpointDir {
+    root: PathBuf,
+}
+
+impl CheckpointDir {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        CheckpointDir { root: root.into() }
+    }
+
+    fn step_name(clock: u64) -> String {
+        format!("step-{clock:012}")
+    }
+
+    /// Create (or wipe a half-written) step directory for `clock` and
+    /// return its path.  Nothing points at it until
+    /// [`CheckpointDir::commit_step`].
+    pub fn begin_step(&self, clock: u64) -> Result<PathBuf> {
+        let dir = self.root.join(Self::step_name(clock));
+        if dir.exists() {
+            fs::remove_dir_all(&dir)
+                .with_context(|| format!("clearing stale step {}", dir.display()))?;
+        }
+        fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+        Ok(dir)
+    }
+
+    /// Atomically point `LATEST` at the step for `clock`, then prune
+    /// older steps (best-effort).  Until the rename lands, the
+    /// previous checkpoint stays the one a resume would load;
+    /// `write_atomic` fsyncs the root directory after the rename, so
+    /// the new pointer is on disk before any pruning unlinks can be.
+    pub fn commit_step(&self, clock: u64) -> Result<()> {
+        let name = Self::step_name(clock);
+        // make the step's own directory entries durable before the
+        // pointer that names them
+        crate::ps::checkpoint::fsync_dir(&self.root.join(&name));
+        write_atomic(&self.root.join("LATEST"), name.as_bytes())?;
+        if let Ok(dirents) = fs::read_dir(&self.root) {
+            for ent in dirents.flatten() {
+                let fname = ent.file_name();
+                let fname = fname.to_string_lossy();
+                if fname.starts_with("step-") && fname != name {
+                    let _ = fs::remove_dir_all(ent.path());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The committed checkpoint step, if any.
+    pub fn latest(&self) -> Result<Option<PathBuf>> {
+        let pointer = self.root.join("LATEST");
+        let name = match fs::read_to_string(&pointer) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).context(format!("reading {}", pointer.display())),
+            Ok(s) => s.trim().to_string(),
+        };
+        let dir = self.root.join(&name);
+        if !dir.is_dir() {
+            bail!(
+                "checkpoint pointer names {name} but {} is not a directory",
+                dir.display()
+            );
+        }
+        Ok(Some(dir))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Codec helpers
+// ---------------------------------------------------------------------------
+
+fn hex_f64(v: f64) -> String {
+    hex_u64(v.to_bits())
+}
+
+fn parse_hex_f64(s: &str) -> Result<f64> {
+    Ok(f64::from_bits(parse_hex_u64(s)?))
+}
+
+fn str_field<'a>(v: &'a Json, k: &str) -> Result<&'a str> {
+    v.get(k)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing string field {k}"))
+}
+
+fn u64_field(v: &Json, k: &str) -> Result<u64> {
+    let f = v
+        .get(k)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing numeric field {k}"))?;
+    if !f.is_finite() || f.fract() != 0.0 || f < 0.0 {
+        bail!("bad numeric field {k}: {f}");
+    }
+    Ok(f as u64)
+}
+
+fn branch_type_name(t: BranchType) -> &'static str {
+    match t {
+        BranchType::Training => "training",
+        BranchType::Testing => "testing",
+    }
+}
+
+fn parse_branch_type(s: &str) -> Result<BranchType> {
+    match s {
+        "training" => Ok(BranchType::Training),
+        "testing" => Ok(BranchType::Testing),
+        other => bail!("unknown branch type {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session file
+// ---------------------------------------------------------------------------
+
+fn encode_session(header: &SessionHeader, entries: &[JournalEntry], decisions: &[u64]) -> Vec<u8> {
+    let mut out = String::new();
+    out.push_str(SESSION_MAGIC);
+    out.push('\n');
+    out.push_str(&format!(
+        "{{\"clock\":{},\"next_branch\":{},\"now\":\"{}\",\"tuning_time\":\"{}\",\"entries\":{}}}\n",
+        header.clock,
+        header.next_branch,
+        hex_f64(header.now),
+        hex_f64(header.tuning_time),
+        entries.len()
+    ));
+    out.push_str("{\"decisions\":[");
+    for (i, d) in decisions.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('"');
+        out.push_str(&hex_u64(*d));
+        out.push('"');
+    }
+    out.push_str("]}\n");
+    for e in entries {
+        out.push_str("{\"m\":");
+        push_json_str(&mut out, &encode_tuner_msg(&e.msg));
+        match e.reply {
+            None => out.push_str(",\"r\":null}"),
+            Some(p) => {
+                out.push_str(",\"r\":[\"");
+                out.push_str(&hex_f64(p.value));
+                out.push_str("\",\"");
+                out.push_str(&hex_f64(p.time));
+                out.push_str("\"]}");
+            }
+        }
+        out.push('\n');
+    }
+    let digest = fnv1a(out.as_bytes());
+    out.push_str(&format!("checksum {}\n", hex_u64(digest)));
+    out.into_bytes()
+}
+
+type SessionBody = (SessionHeader, Vec<JournalEntry>, Vec<u64>);
+
+fn decode_session(bytes: &[u8]) -> Result<SessionBody> {
+    let text = std::str::from_utf8(bytes).context("session file is not UTF-8")?;
+    let body_end = text
+        .trim_end_matches('\n')
+        .rfind('\n')
+        .ok_or_else(|| anyhow!("session file truncated"))?;
+    let (body, tail) = text.split_at(body_end + 1);
+    let tail = tail.trim_end();
+    let stored = tail
+        .strip_prefix("checksum ")
+        .ok_or_else(|| anyhow!("session file missing checksum line"))?;
+    let stored = parse_hex_u64(stored)?;
+    let computed = fnv1a(body.as_bytes());
+    if stored != computed {
+        bail!(
+            "session file checksum mismatch: stored {}, computed {}",
+            hex_u64(stored),
+            hex_u64(computed)
+        );
+    }
+    let mut lines = body.lines();
+    let magic = lines.next().ok_or_else(|| anyhow!("empty session file"))?;
+    if magic != SESSION_MAGIC {
+        bail!("not a session file (magic {magic:?})");
+    }
+    let header_line = lines.next().ok_or_else(|| anyhow!("session file missing header"))?;
+    let h = Json::parse(header_line).context("session header")?;
+    let header = SessionHeader {
+        clock: u64_field(&h, "clock")?,
+        next_branch: u32::try_from(u64_field(&h, "next_branch")?)
+            .map_err(|_| anyhow!("next_branch out of range"))?,
+        now: parse_hex_f64(str_field(&h, "now")?)?,
+        tuning_time: parse_hex_f64(str_field(&h, "tuning_time")?)?,
+    };
+    let expected_entries = u64_field(&h, "entries")? as usize;
+    let decisions_line = lines.next().ok_or_else(|| anyhow!("session file missing decisions"))?;
+    let d = Json::parse(decisions_line).context("session decisions")?;
+    let decisions = d
+        .get("decisions")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("bad decisions line"))?
+        .iter()
+        .map(|x| parse_hex_u64(x.as_str().ok_or_else(|| anyhow!("bad decision bits"))?))
+        .collect::<Result<Vec<u64>>>()?;
+    let mut entries = Vec::with_capacity(expected_entries.min(1 << 20));
+    for line in lines {
+        let v = Json::parse(line).context("session journal line")?;
+        let msg = decode_tuner_msg(str_field(&v, "m")?)?;
+        let reply = match v.get("r").ok_or_else(|| anyhow!("journal line missing reply"))? {
+            Json::Null => None,
+            Json::Array(a) if a.len() == 2 => Some(Progress {
+                value: parse_hex_f64(
+                    a[0].as_str().ok_or_else(|| anyhow!("bad reply value"))?,
+                )?,
+                time: parse_hex_f64(a[1].as_str().ok_or_else(|| anyhow!("bad reply time"))?)?,
+            }),
+            other => bail!("bad journal reply {other:?}"),
+        };
+        entries.push(JournalEntry { msg, reply });
+    }
+    if entries.len() != expected_entries {
+        bail!(
+            "session journal truncated: header promises {expected_entries} entries, \
+             file holds {}",
+            entries.len()
+        );
+    }
+    let schedules = entries
+        .iter()
+        .filter(|e| matches!(e.msg, TunerMsg::ScheduleBranch { .. }))
+        .count() as u64;
+    if schedules != header.clock {
+        bail!(
+            "session journal inconsistent: header clock {} but {} schedules journaled",
+            header.clock,
+            schedules
+        );
+    }
+    Ok((header, entries, decisions))
+}
+
+// ---------------------------------------------------------------------------
+// Manifest
+// ---------------------------------------------------------------------------
+
+fn encode_manifest(
+    header: &SessionHeader,
+    store: Option<&StoreCheckpoint>,
+    session: u64,
+) -> String {
+    let mut body = String::new();
+    body.push_str(MANIFEST_MAGIC);
+    body.push('\n');
+    body.push_str(&format!(
+        "{{\"version\":1,\"clock\":{},\"session\":{{\"file\":\"session.mlt\",\"checksum\":\"{}\"}}",
+        header.clock,
+        hex_u64(session)
+    ));
+    match store {
+        None => body.push_str(",\"store\":null}"),
+        Some(s) => {
+            body.push_str(",\"store\":{\"optimizer\":");
+            push_json_str(&mut body, &s.optimizer);
+            body.push_str(",\"branches\":[");
+            for (i, b) in s.branches.iter().enumerate() {
+                if i > 0 {
+                    body.push(',');
+                }
+                body.push_str(&format!(
+                    "[{},\"{}\",{},[",
+                    b.id,
+                    branch_type_name(b.branch_type),
+                    b.clocks_run
+                ));
+                for (j, v) in b.tunable.iter().enumerate() {
+                    if j > 0 {
+                        body.push(',');
+                    }
+                    body.push('"');
+                    body.push_str(&hex_f64(*v));
+                    body.push('"');
+                }
+                body.push_str("]]");
+            }
+            body.push_str("],\"segments\":[");
+            for (i, m) in s.segments.iter().enumerate() {
+                if i > 0 {
+                    body.push(',');
+                }
+                body.push('[');
+                push_json_str(&mut body, &m.file);
+                body.push_str(&format!(
+                    ",{},{},{},{},{},{},\"{}\"]",
+                    m.branch,
+                    m.range_begin,
+                    m.range_end,
+                    m.local_shard,
+                    m.rows,
+                    m.bytes,
+                    hex_u64(m.checksum)
+                ));
+            }
+            body.push_str("]}}");
+        }
+    }
+    body.push('\n');
+    let digest = fnv1a(body.as_bytes());
+    body.push_str(&format!("checksum {}\n", hex_u64(digest)));
+    body
+}
+
+fn decode_manifest(text: &str) -> Result<(u64, u64, Option<StoreCheckpoint>)> {
+    let body_end = text
+        .trim_end_matches('\n')
+        .rfind('\n')
+        .ok_or_else(|| anyhow!("manifest truncated"))?;
+    let (body, tail) = text.split_at(body_end + 1);
+    let stored = tail
+        .trim_end()
+        .strip_prefix("checksum ")
+        .ok_or_else(|| anyhow!("manifest missing checksum line"))?;
+    if parse_hex_u64(stored)? != fnv1a(body.as_bytes()) {
+        bail!("manifest checksum mismatch — corrupted or truncated checkpoint");
+    }
+    let mut lines = body.lines();
+    let magic = lines.next().ok_or_else(|| anyhow!("empty manifest"))?;
+    if magic != MANIFEST_MAGIC {
+        bail!("not a checkpoint manifest (magic {magic:?})");
+    }
+    let v = Json::parse(lines.next().ok_or_else(|| anyhow!("manifest missing body"))?)?;
+    let clock = u64_field(&v, "clock")?;
+    let session = v.get("session").ok_or_else(|| anyhow!("manifest missing session"))?;
+    let session_checksum = parse_hex_u64(str_field(session, "checksum")?)?;
+    let store = match v.get("store").ok_or_else(|| anyhow!("manifest missing store"))? {
+        Json::Null => None,
+        s => {
+            let branches = s
+                .get("branches")
+                .and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("manifest missing branches"))?
+                .iter()
+                .map(|b| {
+                    let b = b.as_array().ok_or_else(|| anyhow!("bad branch entry"))?;
+                    if b.len() != 4 {
+                        bail!("bad branch entry: len {}", b.len());
+                    }
+                    let id = b[0]
+                        .as_f64()
+                        .filter(|f| f.fract() == 0.0 && *f >= 0.0 && *f <= u32::MAX as f64)
+                        .ok_or_else(|| anyhow!("bad branch id"))? as u32;
+                    let branch_type = parse_branch_type(
+                        b[1].as_str().ok_or_else(|| anyhow!("bad branch type"))?,
+                    )?;
+                    let clocks_run = b[2]
+                        .as_f64()
+                        .filter(|f| f.fract() == 0.0 && *f >= 0.0)
+                        .ok_or_else(|| anyhow!("bad clocks_run"))? as u64;
+                    let tunable = b[3]
+                        .as_array()
+                        .ok_or_else(|| anyhow!("bad tunable"))?
+                        .iter()
+                        .map(|t| {
+                            parse_hex_f64(t.as_str().ok_or_else(|| anyhow!("bad tunable bits"))?)
+                        })
+                        .collect::<Result<Vec<f64>>>()?;
+                    Ok(BranchCkpt {
+                        id,
+                        branch_type,
+                        clocks_run,
+                        tunable,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let segments = s
+                .get("segments")
+                .and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("manifest missing segments"))?
+                .iter()
+                .map(|m| {
+                    let m = m.as_array().ok_or_else(|| anyhow!("bad segment entry"))?;
+                    if m.len() != 8 {
+                        bail!("bad segment entry: len {}", m.len());
+                    }
+                    let int = |j: &Json, what: &str| -> Result<u64> {
+                        j.as_f64()
+                            .filter(|f| f.fract() == 0.0 && *f >= 0.0)
+                            .map(|f| f as u64)
+                            .ok_or_else(|| anyhow!("bad segment {what}"))
+                    };
+                    Ok(SegmentMeta {
+                        file: m[0]
+                            .as_str()
+                            .ok_or_else(|| anyhow!("bad segment file"))?
+                            .to_string(),
+                        branch: int(&m[1], "branch")? as u32,
+                        range_begin: int(&m[2], "range begin")? as usize,
+                        range_end: int(&m[3], "range end")? as usize,
+                        local_shard: int(&m[4], "shard")? as usize,
+                        rows: int(&m[5], "rows")?,
+                        bytes: int(&m[6], "bytes")?,
+                        checksum: parse_hex_u64(
+                            m[7].as_str().ok_or_else(|| anyhow!("bad segment checksum"))?,
+                        )?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let optimizer = str_field(s, "optimizer")?.to_string();
+            Some(StoreCheckpoint {
+                optimizer,
+                branches,
+                segments,
+            })
+        }
+    };
+    Ok((clock, session_checksum, store))
+}
+
+// ---------------------------------------------------------------------------
+// Save / load
+// ---------------------------------------------------------------------------
+
+/// Write one complete checkpoint step into `step_dir`: session file,
+/// recorder CSV and manifest.  Store segments (if any) must already
+/// have been written into the same directory by
+/// [`crate::training::TrainingSystem::checkpoint_session`].  The
+/// caller commits the step afterwards via
+/// [`CheckpointDir::commit_step`].
+pub fn save(
+    step_dir: &Path,
+    header: &SessionHeader,
+    entries: &[JournalEntry],
+    decisions: &[u64],
+    store: Option<&StoreCheckpoint>,
+    recorder: &RunRecorder,
+) -> Result<()> {
+    fs::create_dir_all(step_dir)
+        .with_context(|| format!("creating {}", step_dir.display()))?;
+    let session_bytes = encode_session(header, entries, decisions);
+    write_atomic(&step_dir.join("session.mlt"), &session_bytes)?;
+    let mut csv = Vec::new();
+    recorder.write_csv(&mut csv)?;
+    write_atomic(&step_dir.join("recorder.csv"), &csv)?;
+    let manifest = encode_manifest(header, store, fnv1a(&session_bytes));
+    write_atomic(&step_dir.join("MANIFEST"), manifest.as_bytes())?;
+    Ok(())
+}
+
+/// Load and fully verify one checkpoint step.  Fail-closed: manifest
+/// and session checksums, entry counts, and the schedule/clock
+/// cross-check must all hold, otherwise a typed error is returned and
+/// nothing is restored.
+pub fn load(step_dir: &Path) -> Result<SessionCheckpoint> {
+    let manifest_path = step_dir.join("MANIFEST");
+    let manifest = fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    let (clock, session_checksum, store) = decode_manifest(&manifest)?;
+    let session_path = step_dir.join("session.mlt");
+    let session_bytes = fs::read(&session_path)
+        .with_context(|| format!("reading {}", session_path.display()))?;
+    if fnv1a(&session_bytes) != session_checksum {
+        bail!("session file does not match its manifest checksum — corrupted checkpoint");
+    }
+    let (header, entries, decisions) = decode_session(&session_bytes)?;
+    if header.clock != clock {
+        bail!(
+            "manifest clock {clock} disagrees with session header clock {}",
+            header.clock
+        );
+    }
+    Ok(SessionCheckpoint {
+        header,
+        entries,
+        decisions,
+        store,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunable::TunableSetting;
+
+    fn entries() -> Vec<JournalEntry> {
+        vec![
+            JournalEntry {
+                msg: TunerMsg::ForkBranch {
+                    clock: 0,
+                    branch_id: 1,
+                    parent_branch_id: Some(0),
+                    tunable: TunableSetting::new(vec![1.25e-3, 0.9]),
+                    branch_type: BranchType::Training,
+                },
+                reply: None,
+            },
+            JournalEntry {
+                msg: TunerMsg::ScheduleBranch {
+                    clock: 0,
+                    branch_id: 1,
+                },
+                reply: Some(Progress {
+                    value: f64::NAN,
+                    time: 0.125,
+                }),
+            },
+            JournalEntry {
+                msg: TunerMsg::ScheduleBranch {
+                    clock: 1,
+                    branch_id: 1,
+                },
+                reply: Some(Progress {
+                    value: -0.0,
+                    time: f64::INFINITY,
+                }),
+            },
+        ]
+    }
+
+    fn header() -> SessionHeader {
+        SessionHeader {
+            clock: 2,
+            next_branch: 2,
+            now: 0.1 + 0.2, // deliberately non-representable sum
+            tuning_time: 0.0,
+        }
+    }
+
+    fn store() -> StoreCheckpoint {
+        StoreCheckpoint {
+            optimizer: "adarevision".into(),
+            branches: vec![BranchCkpt {
+                id: 1,
+                branch_type: BranchType::Training,
+                clocks_run: 2,
+                tunable: vec![f64::NAN, 0.9],
+            }],
+            segments: vec![SegmentMeta {
+                file: "b1-r0-4-s0.seg".into(),
+                branch: 1,
+                range_begin: 0,
+                range_end: 4,
+                local_shard: 0,
+                rows: 10,
+                bytes: 321,
+                checksum: u64::MAX,
+            }],
+        }
+    }
+
+    #[test]
+    fn session_roundtrips_bit_exact_including_nan_and_inf() {
+        let decisions = vec![f64::NAN.to_bits(), 1.5e-4f64.to_bits(), 0];
+        let bytes = encode_session(&header(), &entries(), &decisions);
+        let (h, e, d) = decode_session(&bytes).unwrap();
+        assert_eq!(h.clock, 2);
+        assert_eq!(h.now.to_bits(), (0.1f64 + 0.2).to_bits());
+        assert_eq!(d, decisions, "decision log must round-trip bit-exactly");
+        assert_eq!(e.len(), 3);
+        assert_eq!(e[0].msg, entries()[0].msg);
+        let p = e[1].reply.unwrap();
+        assert!(p.value.is_nan(), "NaN progress must survive");
+        assert_eq!(p.time.to_bits(), 0.125f64.to_bits());
+        let p = e[2].reply.unwrap();
+        assert_eq!(p.value.to_bits(), (-0.0f64).to_bits());
+        assert_eq!(p.time, f64::INFINITY);
+    }
+
+    #[test]
+    fn corrupted_session_fails_closed() {
+        let bytes = encode_session(&header(), &entries(), &[7, u64::MAX]);
+        // flip any byte → checksum mismatch (or header/entry error)
+        for pos in [0usize, 10, bytes.len() / 2, bytes.len() - 2] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x20;
+            assert!(decode_session(&bad).is_err(), "flip at {pos}");
+        }
+        // truncation at every line boundary
+        let text = String::from_utf8(bytes.clone()).unwrap();
+        for (pos, ch) in text.char_indices() {
+            if ch == '\n' && pos + 1 < text.len() {
+                assert!(decode_session(text[..pos + 1].as_bytes()).is_err(), "cut {pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_fails_closed() {
+        let m = encode_manifest(&header(), Some(&store()), 0x1234);
+        let (clock, session, st) = decode_manifest(&m).unwrap();
+        assert_eq!(clock, 2);
+        assert_eq!(session, 0x1234);
+        let st = st.unwrap();
+        assert_eq!(st.optimizer, "adarevision");
+        assert_eq!(st.branches.len(), 1);
+        assert!(st.branches[0].tunable[0].is_nan());
+        assert_eq!(st.branches[0].tunable[1], 0.9);
+        assert_eq!(st.segments, store().segments);
+
+        // store-less manifests work too (simulator sessions)
+        let m = encode_manifest(&header(), None, 7);
+        let (_, _, st) = decode_manifest(&m).unwrap();
+        assert!(st.is_none());
+
+        // any byte flip fails closed
+        let m = encode_manifest(&header(), Some(&store()), 0x1234);
+        for pos in [0usize, 24, m.len() / 2, m.len() - 2] {
+            let mut bad = m.clone().into_bytes();
+            bad[pos] ^= 0x01;
+            let bad = String::from_utf8_lossy(&bad).into_owned();
+            assert!(decode_manifest(&bad).is_err(), "flip at {pos}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_dir_commits_atomically_and_prunes() {
+        let root = std::env::temp_dir().join(format!("mltuner-ckptdir-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&root).unwrap();
+        let ckd = CheckpointDir::new(&root);
+        assert!(ckd.latest().unwrap().is_none());
+
+        let s1 = ckd.begin_step(5).unwrap();
+        save(&s1, &header(), &entries(), &[3], None, &RunRecorder::new()).unwrap();
+        ckd.commit_step(5).unwrap();
+        assert_eq!(ckd.latest().unwrap().unwrap(), s1);
+
+        // a second step replaces the first and prunes it
+        let s2 = ckd.begin_step(9).unwrap();
+        save(&s2, &header(), &entries(), &[3, 9], None, &RunRecorder::new()).unwrap();
+        ckd.commit_step(9).unwrap();
+        assert_eq!(ckd.latest().unwrap().unwrap(), s2);
+        assert!(!s1.exists(), "previous step must be pruned");
+
+        // an UNcommitted step never becomes LATEST
+        let _s3 = ckd.begin_step(11).unwrap();
+        assert_eq!(ckd.latest().unwrap().unwrap(), s2);
+
+        let loaded = load(&s2).unwrap();
+        assert_eq!(loaded.header.clock, 2);
+        assert_eq!(loaded.entries.len(), 3);
+        assert_eq!(loaded.decisions, vec![3, 9]);
+        assert!(loaded.store.is_none());
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,106 @@
+//! Shared scaffolding for the checkpoint/resume integration suites
+//! (`integration_checkpoint.rs` and `integration_distributed.rs`): the
+//! scripted mid-tuning MF message pattern, the driver loop that
+//! collects a bit-pattern progress trace, and the store fingerprint
+//! the kill-and-resume bit-exactness assertions compare.
+#![allow(dead_code)] // each test binary uses its own subset
+
+use mltuner::apps::mf::MfSystem;
+use mltuner::comm::{BranchType, TunerMsg};
+use mltuner::ps::ParamStore;
+use mltuner::training::MessageDriver;
+use mltuner::tunable::TunableSetting;
+
+/// Encode an LR value into this MF system's 1-D tunable space.
+pub fn lr_setting(sys: &MfSystem, lr: f64) -> TunableSetting {
+    let u = vec![sys.space().specs[0].encode(lr)];
+    sys.space().decode(&u)
+}
+
+/// The exact mid-tuning message pattern MLtuner emits: two live trial
+/// branches at the checkpoint cut, then the loser freed, an eval
+/// (Testing) fork/schedule/free of the winner, and `tail_clocks` more
+/// training clocks on it.  Returns (messages, checkpoint cut index,
+/// schedules before the cut).
+pub fn mf_ckpt_script(sys: &MfSystem, tail_clocks: u64) -> (Vec<TunerMsg>, usize, u64) {
+    let s_fast = lr_setting(sys, 0.3);
+    let s_slow = lr_setting(sys, 0.02);
+    let fork = |branch_id, parent, tunable: &TunableSetting, branch_type, clock| {
+        TunerMsg::ForkBranch {
+            clock,
+            branch_id,
+            parent_branch_id: Some(parent),
+            tunable: tunable.clone(),
+            branch_type,
+        }
+    };
+    let sched = |clock, branch_id| TunerMsg::ScheduleBranch { clock, branch_id };
+    let mut msgs = vec![
+        fork(1, 0, &s_fast, BranchType::Training, 0),
+        fork(2, 0, &s_slow, BranchType::Training, 0),
+        sched(0, 1),
+        sched(1, 2),
+        sched(2, 1),
+        sched(3, 2),
+        // -------- checkpoint cut: mid-episode, both trial branches live
+        TunerMsg::FreeBranch {
+            clock: 4,
+            branch_id: 2,
+        },
+        fork(3, 1, &s_fast, BranchType::Testing, 4),
+        sched(4, 3),
+        TunerMsg::FreeBranch {
+            clock: 5,
+            branch_id: 3,
+        },
+    ];
+    for i in 0..tail_clocks {
+        msgs.push(sched(5 + i, 1));
+    }
+    (msgs, 6, 4)
+}
+
+/// Drive `msgs` through the driver, collecting every progress value's
+/// bit pattern (the trace the bit-exactness assertions compare; times
+/// are wall-clock and deliberately excluded).
+pub fn run_mf_script(driver: &mut MessageDriver<MfSystem>, msgs: &[TunerMsg]) -> Vec<u64> {
+    let mut trace = Vec::new();
+    for m in msgs {
+        if let Some(p) = driver.send(m).expect("scripted message failed") {
+            trace.push(p.value.to_bits());
+        }
+    }
+    trace
+}
+
+/// (live branches, per-branch row census, every row's bit pattern).
+pub type StoreFp = (Vec<u32>, Vec<(u32, usize)>, Vec<(u32, u32, u64, Vec<u32>)>);
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Fingerprint every factor row of every live branch of an MF system's
+/// store (local or remote alike).
+pub fn store_fingerprint(sys: &MfSystem) -> StoreFp {
+    let live = sys.store().live_branches().unwrap();
+    let counts = live
+        .iter()
+        .map(|&b| (b, sys.store().branch_row_count(b).unwrap()))
+        .collect();
+    let cfg = &sys.cfg;
+    let mut rows = Vec::new();
+    for &b in &live {
+        for (table, n) in [(0u32, cfg.users), (1u32, cfg.items)] {
+            for k in 0..n as u64 {
+                let row = sys
+                    .store()
+                    .read_row(b, table, k)
+                    .unwrap()
+                    .expect("factor row must exist");
+                rows.push((b, table, k, bits(&row)));
+            }
+        }
+    }
+    (live, counts, rows)
+}

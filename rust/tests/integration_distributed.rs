@@ -18,20 +18,32 @@
 //! worker sends one `ReadRows` per server), where the row-at-a-time
 //! plane needed one RPC per rating-touched row.
 //!
+//! `kill_and_resume_is_bit_exact_with_uninterrupted_local_run` is the
+//! durable-checkpoint acceptance: a scripted session against two shard
+//! server processes is checkpointed mid-episode, every process is
+//! SIGKILLed, a fresh cluster restores from the on-disk segments, and
+//! the continued session's progress trace, final rows, and branch
+//! census are bit-exact with an uninterrupted **local** run.
+//!
 //! This is the CI `distributed` leg (see `.github/workflows/ci.yml`
 //! and `scripts/tier1.sh`).
+
+mod common;
 
 use std::io::{BufRead, BufReader, Write as _};
 use std::process::{Child, Command, Stdio};
 
+use common::{mf_ckpt_script, run_mf_script, store_fingerprint};
 use mltuner::apps::mf::{MfConfig, MfSystem};
 use mltuner::comm::socket::{Framing, SocketSpec};
 use mltuner::comm::{BranchType, TunerMsg};
+use mltuner::metrics::RunRecorder;
 use mltuner::optim::OptimizerKind;
 use mltuner::ps::remote::RemoteParamServer;
 use mltuner::ps::{ParamStore, PsHandle};
-use mltuner::training::MessageDriver;
+use mltuner::training::{MessageDriver, TrainingSystem};
 use mltuner::tunable::TunableSetting;
+use mltuner::tuner::session::{self, CheckpointDir, SessionHeader};
 use mltuner::tuner::{ConvergenceCriterion, MLtuner, TunerConfig};
 
 /// One spawned `mltuner serve` process; killed on drop so a panicking
@@ -280,6 +292,89 @@ fn training_clock_issues_bounded_read_rpcs() {
     if let PsHandle::Remote(remote) = driver.system.store() {
         remote.shutdown_all().unwrap();
     }
+}
+
+#[test]
+fn kill_and_resume_is_bit_exact_with_uninterrupted_local_run() {
+    let cfg = mf_config();
+
+    // uninterrupted single-process reference run
+    let local_sys = MfSystem::new(cfg.clone());
+    let (msgs, cut, cut_clock) = mf_ckpt_script(&local_sys, 3);
+    let mut d1 = MessageDriver::new(local_sys);
+    let trace1 = run_mf_script(&mut d1, &msgs);
+    let fp1 = store_fingerprint(&d1.system);
+
+    // distributed run against cluster A: record the journal, run to
+    // the mid-episode cut, checkpoint (each server process dumps its
+    // own shard range; the coordinator writes only the manifest)
+    let ckpt_root = std::env::temp_dir().join(format!("mltuner-dist-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+    std::fs::create_dir_all(&ckpt_root).unwrap();
+    let ckd = CheckpointDir::new(&ckpt_root);
+    let (sa, sb) = spawn_cluster(cfg.optimizer);
+    let remote =
+        RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
+    let sys_a = MfSystem::with_store(cfg.clone(), PsHandle::Remote(remote)).unwrap();
+    let mut d2 = MessageDriver::new(sys_a);
+    d2.enable_recording();
+    let trace2_prefix = run_mf_script(&mut d2, &msgs[..cut]);
+    let step = ckd.begin_step(cut_clock).unwrap();
+    let store = d2
+        .system
+        .checkpoint_session(&step)
+        .unwrap()
+        .expect("the MF system has a durable store");
+    assert!(
+        store.segments.iter().any(|s| s.range_begin == 2),
+        "the second server must have dumped its own range"
+    );
+    let header = SessionHeader {
+        clock: cut_clock,
+        next_branch: 4,
+        now: 0.0,
+        tuning_time: 0.0,
+    };
+    session::save(&step, &header, d2.journal(), &[], Some(&store), &RunRecorder::new()).unwrap();
+    ckd.commit_step(cut_clock).unwrap();
+
+    // the crash: SIGKILL both shard-server processes, drop all client
+    // state — everything in memory is gone, only the files survive
+    drop(d2);
+    drop(sa);
+    drop(sb);
+
+    // cluster B: brand-new server processes with the same shard
+    // topology; the session restores from the on-disk checkpoint
+    let step = ckd.latest().unwrap().expect("committed checkpoint");
+    let loaded = session::load(&step).unwrap();
+    assert_eq!(loaded.header.clock, cut_clock);
+    let (sa, sb) = spawn_cluster(cfg.optimizer);
+    let remote =
+        RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
+    let mut sys_b = MfSystem::with_store(cfg.clone(), PsHandle::Remote(remote)).unwrap();
+    assert!(sys_b
+        .restore_session(loaded.store.as_ref().unwrap(), &step)
+        .unwrap());
+    let mut d3 = MessageDriver::new(sys_b);
+    d3.load_journal(loaded.entries, false);
+    let trace3_prefix = run_mf_script(&mut d3, &msgs[..cut]);
+    assert_eq!(trace3_prefix, trace2_prefix, "replayed prefix must match the journal");
+    let trace3_suffix = run_mf_script(&mut d3, &msgs[cut..]);
+
+    // the resumed distributed session is bit-exact with the
+    // uninterrupted local run: progress trace, final rows, census
+    let trace3: Vec<u64> = trace3_prefix.iter().chain(&trace3_suffix).copied().collect();
+    assert_eq!(trace3, trace1, "progress trace must be bit-exact across kill+resume");
+    let fp3 = store_fingerprint(&d3.system);
+    assert_eq!(fp3.0, fp1.0, "live branches");
+    assert_eq!(fp3.1, fp1.1, "branch row census");
+    assert_eq!(fp3.2, fp1.2, "final rows must be bit-exact across kill+resume");
+
+    if let PsHandle::Remote(remote) = d3.system.store() {
+        remote.shutdown_all().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&ckpt_root);
 }
 
 #[test]

@@ -16,11 +16,25 @@ cargo test --release --test stress_concurrent -- --test-threads=8
 
 # Distributed suite: spawns real `mltuner serve` shard-server processes
 # on loopback ephemeral ports and checks (a) bit-exact parity with the
-# single-process run and (b) the batched-read-plane bound — one MF
+# single-process run, (b) the batched-read-plane bound — one MF
 # training clock issues at most `shard servers x workers` data-plane
 # read RPCs (`training_clock_issues_bounded_read_rpcs`), so read
-# batching cannot silently regress (mirrors the CI `distributed` leg).
+# batching cannot silently regress, and (c) the durable-checkpoint
+# acceptance: a mid-episode checkpoint survives SIGKILLing every shard
+# server and resumes bit-exact on a fresh cluster (mirrors the CI
+# `distributed` leg).
 cargo test --release --test integration_distributed
+
+# Checkpoint/restore plane: codec round-trips (NaN/Inf/-0 included),
+# fail-closed corruption handling, scripted + full-tuner kill-and-resume
+# (already part of `cargo test -q` above; re-run at release opt-level
+# alongside the other release legs so optimizations cannot change the
+# bit-exactness story).
+cargo test --release --test integration_checkpoint
+
+# Module docs are load-bearing (docs/ARCHITECTURE.md links into them):
+# rustdoc must stay warning-clean (mirrors the CI `docs` leg).
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 if cargo fmt --version >/dev/null 2>&1; then
     # Mandatory since the one-shot rustfmt sweep landed; the style is
