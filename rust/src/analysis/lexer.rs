@@ -1,0 +1,464 @@
+//! Rust token lexer for the house lint (offline substrate — `syn` /
+//! `proc_macro2` are not vendored).  Produces a flat token stream with
+//! 1-based line numbers, plus the `//` line comments (the carriers of
+//! `lint:allow` pragmas).  It handles the lexical shapes that break
+//! naive regex scanning: raw strings (`r#"…"#`), byte and raw-byte
+//! strings, byte chars (`b'\n'`), char literals vs lifetimes (`'a'` vs
+//! `'a`), nested block comments, and raw identifiers (`r#type`).
+//!
+//! The stream is deliberately lossy — whitespace and comments are not
+//! tokens — because the rule passes in [`crate::analysis::rules`]
+//! match on identifier/punct adjacency, never on spacing.  String and
+//! char literals survive as opaque [`TokKind::Str`]/[`TokKind::Char`]
+//! tokens, so `"partial_cmp"` inside a message can never trip a rule.
+
+/// Kind of a lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    Str,
+    Char,
+    Num,
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A `//` line comment (pragmas ride on these).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lexer output: the token stream plus all line comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src` into tokens.  The lexer never fails: unrecognized bytes
+/// are skipped, unterminated literals run to end of input.  Good
+/// enough for lint passes over code that rustc already accepted.
+pub fn lex(src: &str) -> Lexed {
+    Lexer {
+        bytes: src.as_bytes(),
+        pos: 0,
+        line: 1,
+        out: Lexed::default(),
+    }
+    .run()
+}
+
+/// Index of the token closing the delimiter opened at `open`
+/// (`(`, `[` or `{`), if balanced.  Only the matching delimiter kind
+/// is counted — valid Rust keeps each kind independently balanced.
+pub fn match_delim(toks: &[Tok], open: usize) -> Option<usize> {
+    let (oc, cc) = match toks.get(open)?.text.as_str() {
+        "(" => ("(", ")"),
+        "[" => ("[", "]"),
+        "{" => ("{", "}"),
+        _ => return None,
+    };
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        if t.kind != TokKind::Punct {
+            continue;
+        }
+        if t.text == oc {
+            depth += 1;
+        } else if t.text == cc {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+struct Lexer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    line: u32,
+    out: Lexed,
+}
+
+fn ident_start(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphabetic()
+}
+
+fn ident_continue(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+impl<'a> Lexer<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn peek_at(&self, off: usize) -> Option<u8> {
+        self.bytes.get(self.pos + off).copied()
+    }
+
+    /// Advance one byte, tracking line numbers.
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+        }
+        Some(b)
+    }
+
+    fn push(&mut self, kind: TokKind, start: usize, line: u32) {
+        let text = String::from_utf8_lossy(&self.bytes[start..self.pos]).into_owned();
+        self.out.toks.push(Tok { kind, text, line });
+    }
+
+    fn run(mut self) -> Lexed {
+        while let Some(b) = self.peek() {
+            match b {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'/' if self.peek_at(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek_at(1) == Some(b'*') => self.block_comment(),
+                b'\'' => self.quote(),
+                b'"' => {
+                    let (start, line) = (self.pos, self.line);
+                    self.string_body();
+                    self.push(TokKind::Str, start, line);
+                }
+                b'0'..=b'9' => self.number(),
+                _ if ident_start(b) => self.word(),
+                _ => self.punct(),
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self) {
+        let (start, line) = (self.pos, self.line);
+        while !matches!(self.peek(), None | Some(b'\n')) {
+            self.pos += 1;
+        }
+        let text = String::from_utf8_lossy(&self.bytes[start..self.pos]).into_owned();
+        self.out.comments.push(Comment { line, text });
+    }
+
+    fn block_comment(&mut self) {
+        self.pos += 2; // the `/*`
+        let mut depth = 1usize;
+        while depth > 0 {
+            match self.bump() {
+                None => break,
+                Some(b'/') if self.peek() == Some(b'*') => {
+                    self.bump();
+                    depth += 1;
+                }
+                Some(b'*') if self.peek() == Some(b'/') => {
+                    self.bump();
+                    depth -= 1;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Cursor on an opening `"`; consumes the quoted body including
+    /// escape sequences (`\"` does not terminate).
+    fn string_body(&mut self) {
+        self.bump(); // opening quote
+        while let Some(b) = self.bump() {
+            match b {
+                b'"' => break,
+                b'\\' => {
+                    self.bump(); // the escaped byte
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Cursor on a `'`: char literal or lifetime/label.
+    fn quote(&mut self) {
+        let (start, line) = (self.pos, self.line);
+        self.bump(); // the quote
+        match self.peek() {
+            Some(b'\\') => {
+                // escaped char literal: `'\n'`, `'\''`, `'\u{1F600}'`
+                self.bump(); // backslash
+                self.bump(); // escaped byte (or the x/u introducer)
+                while let Some(b) = self.bump() {
+                    if b == b'\'' {
+                        break;
+                    }
+                }
+                self.push(TokKind::Char, start, line);
+            }
+            Some(b) if ident_start(b) => {
+                // `'a'` is a char, `'a` / `'static` / `'outer:` are
+                // lifetimes or labels — disambiguated by the closing
+                // quote after the identifier run.
+                let mut j = self.pos;
+                while j < self.bytes.len() && ident_continue(self.bytes[j]) {
+                    j += 1;
+                }
+                if self.bytes.get(j) == Some(&b'\'') {
+                    self.pos = j + 1;
+                    self.push(TokKind::Char, start, line);
+                } else {
+                    self.pos = j;
+                    self.push(TokKind::Lifetime, start, line);
+                }
+            }
+            Some(_) => {
+                // unescaped char literal: `'('`, `'9'`, `'→'`
+                self.bump(); // first byte of the char
+                while let Some(b) = self.bump() {
+                    if b == b'\'' {
+                        break;
+                    }
+                }
+                self.push(TokKind::Char, start, line);
+            }
+            None => {}
+        }
+    }
+
+    fn number(&mut self) {
+        let (start, line) = (self.pos, self.line);
+        self.digits_run();
+        if self.peek() == Some(b'.') && matches!(self.peek_at(1), Some(b'0'..=b'9')) {
+            self.pos += 1;
+            self.digits_run();
+        }
+        // exponent sign: `1e-5`, `2.5E+3`
+        if matches!(self.bytes.get(self.pos.wrapping_sub(1)), Some(b'e' | b'E'))
+            && matches!(self.peek(), Some(b'+' | b'-'))
+        {
+            self.pos += 1;
+            self.digits_run();
+        }
+        self.push(TokKind::Num, start, line);
+    }
+
+    /// `[0-9a-zA-Z_]*` — digits, hex digits, suffixes, exponents.
+    fn digits_run(&mut self) {
+        while matches!(self.peek(), Some(b) if ident_continue(b)) {
+            self.pos += 1;
+        }
+    }
+
+    /// Cursor on an identifier-start byte: plain identifier, raw
+    /// identifier, or a string-literal prefix (`r"`, `r#"`, `b"`,
+    /// `b'`, `br"`, `br#"`).
+    fn word(&mut self) {
+        let (start, line) = (self.pos, self.line);
+        match (self.bytes[self.pos], self.peek_at(1)) {
+            (b'b', Some(b'\'')) => {
+                self.pos += 1; // the prefix; quote() lexes the literal
+                self.quote();
+                return;
+            }
+            (b'b', Some(b'"')) => {
+                self.pos += 1;
+                self.string_body();
+                self.push(TokKind::Str, start, line);
+                return;
+            }
+            (b'r', Some(b'"' | b'#')) => {
+                if self.raw_string(start, line, 1) {
+                    return; // else raw identifier `r#name`: fall through
+                }
+            }
+            (b'b', Some(b'r')) if matches!(self.peek_at(2), Some(b'"' | b'#')) => {
+                if self.raw_string(start, line, 2) {
+                    return;
+                }
+            }
+            _ => {}
+        }
+        let mut j = self.pos;
+        if self.bytes[j] == b'r' && self.bytes.get(j + 1) == Some(&b'#') {
+            j += 2; // raw identifier prefix
+        }
+        let tstart = j;
+        while j < self.bytes.len() && ident_continue(self.bytes[j]) {
+            j += 1;
+        }
+        self.pos = j;
+        // raw identifiers lex as their bare name so rules match on it
+        let text = String::from_utf8_lossy(&self.bytes[tstart..j]).into_owned();
+        self.out.toks.push(Tok {
+            kind: TokKind::Ident,
+            text,
+            line,
+        });
+    }
+
+    /// Try to lex a raw (byte) string whose `r`/`br` prefix starts at
+    /// the cursor; `skip` is the prefix length.  Returns false when
+    /// the shape is actually a raw identifier (`r#name`).
+    fn raw_string(&mut self, start: usize, line: u32, skip: usize) -> bool {
+        let mut k = self.pos + skip;
+        let mut hashes = 0usize;
+        while self.bytes.get(k) == Some(&b'#') {
+            hashes += 1;
+            k += 1;
+        }
+        if self.bytes.get(k) != Some(&b'"') {
+            return false;
+        }
+        self.pos = k + 1; // past the opening quote (no newlines skipped)
+        loop {
+            match self.bump() {
+                None => break,
+                Some(b'"') => {
+                    let mut h = 0usize;
+                    while h < hashes && self.peek() == Some(b'#') {
+                        self.bump();
+                        h += 1;
+                    }
+                    if h == hashes {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        self.push(TokKind::Str, start, line);
+        true
+    }
+
+    fn punct(&mut self) {
+        let line = self.line;
+        let b = self.bytes[self.pos];
+        self.pos += 1;
+        if b.is_ascii() {
+            self.out.toks.push(Tok {
+                kind: TokKind::Punct,
+                text: char::from(b).to_string(),
+                line,
+            });
+        }
+        // non-ASCII bytes outside strings/comments are skipped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).toks.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn raw_strings_are_opaque() {
+        let src = r##"let s = r#"a.partial_cmp(b).unwrap()"#; s.len()"##;
+        assert_eq!(idents(src), vec!["let", "s", "s", "len"]);
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let src = r##"let a = b"unwrap"; let c = br#"panic!"#;"##;
+        assert_eq!(idents(src), vec!["let", "a", "let", "c"]);
+        let strs = lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .count();
+        assert_eq!(strs, 2);
+    }
+
+    #[test]
+    fn byte_char_and_escaped_quote() {
+        let src = r"let nl = b'\n'; let q = '\''; let p = '(';";
+        assert_eq!(idents(src), vec!["let", "nl", "let", "q", "let", "p"]);
+        let chars = lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Char)
+            .count();
+        assert_eq!(chars, 3);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars_vs_labels() {
+        let src = "fn f<'a>(x: &'a str) { 'outer: loop { break 'outer; } let c = 'z'; }";
+        let lifetimes: Vec<String> = lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a", "'outer", "'outer"]);
+        let chars: Vec<String> = lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Char)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(chars, vec!["'z'"]);
+    }
+
+    #[test]
+    fn nested_block_comments_and_line_comments() {
+        let src = "a /* x /* y */ still comment */ b // trailing unwrap()\nc";
+        assert_eq!(idents(src), vec!["a", "b", "c"]);
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 1);
+        assert!(lx.comments[0].text.contains("trailing"));
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_bare_name() {
+        assert_eq!(idents("let r#type = 1;"), vec!["let", "type"]);
+    }
+
+    #[test]
+    fn line_numbers_track_every_literal_shape() {
+        let src = "a\n\"two\nlines\"\nb /* c\nd */ e\nr#\"raw\nraw\"# f";
+        let lx = lex(src);
+        let find = |name: &str| lx.toks.iter().find(|t| t.text == name).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("b"), 4);
+        assert_eq!(find("e"), 5);
+        assert_eq!(find("f"), 7);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges() {
+        let src = "for i in 0..10 { x += 1.5e-3; }";
+        let k = kinds(src);
+        assert!(k.contains(&(TokKind::Num, "0".to_string())));
+        assert!(k.contains(&(TokKind::Num, "10".to_string())));
+        assert!(k.contains(&(TokKind::Num, "1.5e-3".to_string())));
+    }
+
+    #[test]
+    fn match_delim_balances() {
+        let lx = lex("f(a, (b), [c{d}])");
+        assert_eq!(match_delim(&lx.toks, 1), Some(lx.toks.len() - 1));
+        assert_eq!(match_delim(&lx.toks, 0), None); // `f` is not a delim
+    }
+}

@@ -1,0 +1,427 @@
+//! House static analysis behind the `mltuner_lint` binary (offline
+//! substrate — `clippy` custom lints and `dylint` are not vendored).
+//!
+//! Four rule passes enforce the crate's recurring-bug-class
+//! disciplines over `src/` (see `docs/ARCHITECTURE.md`, "Enforced
+//! invariants"):
+//!
+//! * `float-ord` — no `partial_cmp` chained into `.unwrap()`/
+//!   `.expect(`, and no float comparator without `total_cmp`/
+//!   `cmp_speed_desc` (everywhere, tests included).
+//! * `wire-int-cast` — no bare `as` integer casts in `comm/`
+//!   (non-test); wire-derived values go through the strict decode
+//!   helpers or `try_from`.
+//! * `panic-path` — no `.unwrap()`/`.expect(`/`panic!` in non-test
+//!   code under `ps/`, `comm/`, `tuner/`, `searcher/`.
+//! * `lock-order` — in `ps/` (non-test), never acquire the
+//!   control-plane mutex while a shard `RwLock` guard is live.
+//!
+//! A finding is suppressed by a pragma on, or directly above, the
+//! offending line:
+//!
+//! ```text
+//! // lint:allow(panic-path): join propagates a worker panic
+//! ```
+//!
+//! Multiple rules may be listed (`lint:allow(float-ord, panic-path):
+//! …`).  The reason is mandatory; a malformed pragma is itself a
+//! diagnostic (rule id `pragma`) and suppresses nothing.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use lexer::{Comment, Tok, TokKind};
+
+/// Rule identifiers, as accepted by `--rules` and by
+/// `// lint:allow(rule): reason` pragmas.
+pub const RULES: [&str; 4] = [
+    rules::FLOAT_ORD,
+    rules::WIRE_INT_CAST,
+    rules::PANIC_PATH,
+    rules::LOCK_ORDER,
+];
+
+/// Rule id reported for malformed pragmas; always enabled and never
+/// suppressible.
+pub const PRAGMA_RULE: &str = "pragma";
+
+/// One lint finding, printed as `file:line [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Aggregate result of linting a tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files: usize,
+    pub diags: Vec<Diagnostic>,
+}
+
+/// Lint one file's source.  `rel` is the path relative to the `src`
+/// root (e.g. `ps/mod.rs`) — rule applicability keys off its first
+/// component.  Returns findings from every applicable rule, pragma
+/// suppression already applied, sorted by line.
+pub fn check_source(rel: &str, src: &str) -> Vec<Diagnostic> {
+    let lexed = lexer::lex(src);
+    let spans = test_spans(&lexed.toks);
+    let ctx = rules::Ctx {
+        file: rel,
+        toks: &lexed.toks,
+        test_spans: &spans,
+    };
+    let mut diags = rules::float_ord(&ctx);
+    if rel.starts_with("comm/") {
+        diags.extend(rules::wire_int_cast(&ctx));
+    }
+    let panic_roots = ["ps/", "comm/", "tuner/", "searcher/"];
+    if panic_roots.iter().any(|p| rel.starts_with(p)) {
+        diags.extend(rules::panic_path(&ctx));
+    }
+    if rel.starts_with("ps/") {
+        diags.extend(rules::lock_order(&ctx));
+    }
+    let (pragmas, mut pragma_diags) = collect_pragmas(rel, &lexed.comments);
+    diags.retain(|d| !suppressed(d, &pragmas, &lexed.toks));
+    diags.append(&mut pragma_diags);
+    diags.sort_by_key(|d| (d.line, d.rule));
+    diags
+}
+
+/// Walk `root` (normally `rust/src`), lint every `.rs` file, and
+/// return the aggregate report.  `enabled` filters which rule ids are
+/// reported; malformed-pragma diagnostics are always kept.
+pub fn run_dir(root: &Path, enabled: &[&str]) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut report = Report::default();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&path)?;
+        report.files += 1;
+        report.diags.extend(
+            check_source(&rel, &src)
+                .into_iter()
+                .filter(|d| d.rule == PRAGMA_RULE || enabled.contains(&d.rule)),
+        );
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map_or(false, |e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// A well-formed `// lint:allow(rule, …): reason` pragma.
+#[derive(Debug)]
+struct Pragma {
+    line: u32,
+    rules: Vec<&'static str>,
+}
+
+/// Parse pragmas out of the line comments.  Malformed pragmas
+/// (unknown rule, missing reason) become diagnostics instead of
+/// suppressions, so a typo can never silently disable a rule.
+fn collect_pragmas(file: &str, comments: &[Comment]) -> (Vec<Pragma>, Vec<Diagnostic>) {
+    let mut pragmas = Vec::new();
+    let mut diags = Vec::new();
+    for c in comments {
+        let Some(at) = c.text.find("lint:allow") else {
+            continue;
+        };
+        let bad = |msg: String| Diagnostic {
+            file: file.to_string(),
+            line: c.line,
+            rule: PRAGMA_RULE,
+            msg,
+        };
+        let rest = &c.text[at + "lint:allow".len()..];
+        let close = match (rest.starts_with('('), rest.find(')')) {
+            (true, Some(close)) => close,
+            _ => {
+                diags.push(bad(
+                    "malformed pragma: expected `lint:allow(rule, …): reason`".to_string(),
+                ));
+                continue;
+            }
+        };
+        let mut names = Vec::new();
+        let mut ok = true;
+        for part in rest[1..close].split(',') {
+            let name = part.trim();
+            match RULES.iter().find(|r| **r == name) {
+                Some(r) => names.push(*r),
+                None => {
+                    diags.push(bad(format!("unknown lint rule `{name}` in pragma")));
+                    ok = false;
+                }
+            }
+        }
+        let reason_ok = rest[close + 1..]
+            .trim_start()
+            .strip_prefix(':')
+            .map(str::trim)
+            .map_or(false, |r| !r.is_empty());
+        if !reason_ok {
+            diags.push(bad(
+                "pragma missing a reason: `lint:allow(rule): why this is safe`".to_string(),
+            ));
+            ok = false;
+        }
+        if ok {
+            pragmas.push(Pragma {
+                line: c.line,
+                rules: names,
+            });
+        }
+    }
+    (pragmas, diags)
+}
+
+/// A pragma covers its own line and the next line holding any token —
+/// i.e. it sits at the end of the offending line or on its own line
+/// directly above it.
+fn suppressed(d: &Diagnostic, pragmas: &[Pragma], toks: &[Tok]) -> bool {
+    pragmas.iter().any(|p| {
+        p.rules.contains(&d.rule)
+            && (d.line == p.line || Some(d.line) == next_code_line(toks, p.line))
+    })
+}
+
+fn next_code_line(toks: &[Tok], after: u32) -> Option<u32> {
+    toks.iter().map(|t| t.line).filter(|&l| l > after).min()
+}
+
+/// Token-index spans (inclusive) of items under `#[cfg(test)]` or
+/// `#[test]`: from the attribute's `#` through the `}` (or `;`)
+/// closing the annotated item.
+fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let is_p = |i: usize, ch: &str| {
+        matches!(toks.get(i), Some(t) if t.kind == TokKind::Punct && t.text == ch)
+    };
+    let is_i = |i: usize, name: &str| {
+        matches!(toks.get(i), Some(t) if t.kind == TokKind::Ident && t.text == name)
+    };
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if !is_p(i, "#") || !is_p(i + 1, "[") {
+            i += 1;
+            continue;
+        }
+        let is_test_attr = (is_i(i + 2, "test") && is_p(i + 3, "]"))
+            || (is_i(i + 2, "cfg")
+                && is_p(i + 3, "(")
+                && is_i(i + 4, "test")
+                && is_p(i + 5, ")")
+                && is_p(i + 6, "]"));
+        if !is_test_attr {
+            i += 1;
+            continue;
+        }
+        // skip this and any stacked attributes (`#[should_panic(…)]`)
+        let mut j = i;
+        while is_p(j, "#") && is_p(j + 1, "[") {
+            match lexer::match_delim(toks, j + 1) {
+                Some(c) => j = c + 1,
+                None => break,
+            }
+        }
+        // the annotated item runs to its body's closing brace, or to
+        // `;` for brace-less items (`#[cfg(test)] use …;`)
+        let mut end = None;
+        let mut k = j;
+        while k < toks.len() {
+            if is_p(k, ";") {
+                end = Some(k);
+                break;
+            }
+            if is_p(k, "{") {
+                end = lexer::match_delim(toks, k);
+                break;
+            }
+            k += 1;
+        }
+        match end {
+            Some(e) => {
+                spans.push((i, e));
+                i = e + 1;
+            }
+            None => i += 1,
+        }
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(rel: &str, src: &str) -> Vec<&'static str> {
+        check_source(rel, src).into_iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn chained_partial_cmp_unwrap_is_flagged_anywhere() {
+        let src = "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }";
+        assert_eq!(rules_hit("util/x.rs", src), vec![rules::FLOAT_ORD]);
+        // …and only once: the comparator check defers to the chained one
+    }
+
+    #[test]
+    fn comparator_without_total_order_is_flagged() {
+        let src = "fn f(xs: &[f64]) -> Option<&f64> {\n    \
+                   xs.iter().max_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))\n\
+                   }";
+        assert_eq!(rules_hit("util/x.rs", src), vec![rules::FLOAT_ORD]);
+    }
+
+    #[test]
+    fn total_cmp_comparators_pass() {
+        let src = "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.total_cmp(b)); }";
+        assert!(rules_hit("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_ord_applies_inside_tests_too() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+                   let mut v = vec![1.0f64];\n        \
+                   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n    }\n}";
+        assert_eq!(rules_hit("searcher/x.rs", src), vec![rules::FLOAT_ORD]);
+    }
+
+    #[test]
+    fn wire_casts_only_policed_under_comm() {
+        let src = "fn f(x: u64) -> usize { x as usize }";
+        assert_eq!(rules_hit("comm/x.rs", src), vec![rules::WIRE_INT_CAST]);
+        assert!(rules_hit("util/x.rs", src).is_empty());
+        // float casts stay legal on the wire (f32 bit patterns)
+        let fsrc = "fn f(x: u32) -> f64 { x as f64 }";
+        assert!(rules_hit("comm/x.rs", fsrc).is_empty());
+    }
+
+    #[test]
+    fn panic_path_skips_test_modules() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n\
+                   #[cfg(test)]\nmod tests {\n    fn g(x: Option<u32>) -> u32 { x.unwrap() }\n}";
+        assert_eq!(rules_hit("ps/x.rs", src), vec![rules::PANIC_PATH]);
+        assert!(rules_hit("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_order_inversion_is_flagged() {
+        let src = "fn f(s: &Server) -> usize {\n    \
+                   let st = read_shard(&s.shards[0], &s.counters);\n    \
+                   let ctl = lock_control(&s.control);\n    ctl.n + st.n\n}";
+        assert_eq!(rules_hit("ps/x.rs", src), vec![rules::LOCK_ORDER]);
+        // legal order passes
+        let ok = "fn f(s: &Server) -> usize {\n    \
+                  let ctl = lock_control(&s.control);\n    \
+                  let st = read_shard(&s.shards[0], &s.counters);\n    ctl.n + st.n\n}";
+        assert!(rules_hit("ps/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn temporary_shard_guard_dies_at_statement_end() {
+        let src = "fn f(s: &Server) -> usize {\n    \
+                   let n = read_shard(&s.shards[0], &s.counters).len();\n    \
+                   lock_control(&s.control).m + n\n}";
+        assert!(rules_hit("ps/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn let_bound_guard_dies_at_block_end() {
+        let src = "fn f(s: &Server) -> usize {\n    \
+                   let d = { let st = write_shard(&s.shards[0], &s.counters); st.evict() };\n    \
+                   lock_control(&s.control).m + d\n}";
+        assert!(rules_hit("ps/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_suppresses_on_own_and_next_line() {
+        let above = "fn f(x: Option<u32>) -> u32 {\n    \
+                     // lint:allow(panic-path): provably present\n    x.unwrap()\n}";
+        assert!(rules_hit("ps/x.rs", above).is_empty());
+        let trailing = "fn f(x: Option<u32>) -> u32 {\n    \
+                        x.unwrap() // lint:allow(panic-path): provably present\n}";
+        assert!(rules_hit("ps/x.rs", trailing).is_empty());
+    }
+
+    #[test]
+    fn pragma_lists_multiple_rules() {
+        let src = "fn f(a: f64, b: f64) -> std::cmp::Ordering {\n    \
+                   // lint:allow(float-ord, panic-path): operands proven non-NaN\n    \
+                   b.partial_cmp(&a).expect(\"non-NaN\")\n}";
+        assert!(rules_hit("searcher/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_without_reason_reports_and_does_not_suppress() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    \
+                   // lint:allow(panic-path)\n    x.unwrap()\n}";
+        let hit = rules_hit("ps/x.rs", src);
+        assert!(hit.contains(&PRAGMA_RULE));
+        assert!(hit.contains(&rules::PANIC_PATH));
+    }
+
+    #[test]
+    fn pragma_with_unknown_rule_reports() {
+        let src = "fn f() {}\n// lint:allow(made-up): whatever\n";
+        assert_eq!(rules_hit("ps/x.rs", src), vec![PRAGMA_RULE]);
+    }
+
+    #[test]
+    fn pragma_for_wrong_rule_does_not_suppress() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    \
+                   // lint:allow(float-ord): wrong rule\n    x.unwrap()\n}";
+        assert_eq!(rules_hit("ps/x.rs", src), vec![rules::PANIC_PATH]);
+    }
+
+    #[test]
+    fn test_spans_cover_stacked_attributes() {
+        let src = "#[test]\n#[should_panic(expected = \"boom\")]\n\
+                   fn t() { Option::<u32>::None.unwrap(); }";
+        assert!(rules_hit("ps/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_span() {
+        let src = "#[cfg(not(test))]\nfn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert_eq!(rules_hit("ps/x.rs", src), vec![rules::PANIC_PATH]);
+    }
+
+    #[test]
+    fn diagnostics_carry_file_line_and_render() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}";
+        let d = &check_source("tuner/x.rs", src)[0];
+        assert_eq!((d.file.as_str(), d.line), ("tuner/x.rs", 2));
+        assert!(d.to_string().starts_with("tuner/x.rs:2 [panic-path]"));
+    }
+}

@@ -1,0 +1,248 @@
+//! The four rule passes behind `mltuner_lint`.  Each pass is a linear
+//! scan over the token stream from [`crate::analysis::lexer`]; none of
+//! them re-read raw source text, so string and comment contents can
+//! never produce false positives.
+//!
+//! Rule applicability (which passes run for which `src/` subtree) and
+//! pragma suppression both live in [`crate::analysis`]; the passes
+//! here only detect.
+
+use super::lexer::{match_delim, Tok, TokKind};
+use super::Diagnostic;
+
+/// Rule id constants — shared with pragma parsing and `--rules`.
+pub const FLOAT_ORD: &str = "float-ord";
+pub const WIRE_INT_CAST: &str = "wire-int-cast";
+pub const PANIC_PATH: &str = "panic-path";
+pub const LOCK_ORDER: &str = "lock-order";
+
+/// Shared per-file context handed to each rule pass.
+pub struct Ctx<'a> {
+    pub file: &'a str,
+    pub toks: &'a [Tok],
+    /// Token-index ranges (inclusive) lexically under `#[cfg(test)]`
+    /// or `#[test]`.
+    pub test_spans: &'a [(usize, usize)],
+}
+
+impl<'a> Ctx<'a> {
+    fn in_test(&self, i: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= i && i <= b)
+    }
+
+    fn diag(&self, line: u32, rule: &'static str, msg: String) -> Diagnostic {
+        Diagnostic {
+            file: self.file.to_string(),
+            line,
+            rule,
+            msg,
+        }
+    }
+
+    fn is_ident(&self, i: usize, name: &str) -> bool {
+        matches!(self.toks.get(i), Some(t) if t.kind == TokKind::Ident && t.text == name)
+    }
+
+    fn is_punct(&self, i: usize, ch: &str) -> bool {
+        matches!(self.toks.get(i), Some(t) if t.kind == TokKind::Punct && t.text == ch)
+    }
+}
+
+/// Comparator-taking methods policed by [`float_ord`].
+const COMPARATOR_SINKS: [&str; 4] = ["sort_by", "sort_unstable_by", "max_by", "min_by"];
+
+/// **float-ord**: `partial_cmp` chained into `.unwrap()`/`.expect(`
+/// panics on NaN, and a `sort_by`/`max_by`-style comparator built on
+/// `partial_cmp` without `total_cmp`/`cmp_speed_desc` has no total
+/// order.  Applies everywhere, tests included — the PR 4/5 NaN panics
+/// started life as "can't happen here" test idioms.
+pub fn float_ord(ctx: &Ctx<'_>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut chained = Vec::new();
+    for i in 0..ctx.toks.len() {
+        if !ctx.is_ident(i, "partial_cmp") || !ctx.is_punct(i + 1, "(") {
+            continue;
+        }
+        let Some(close) = match_delim(ctx.toks, i + 1) else {
+            continue;
+        };
+        for sink in ["unwrap", "expect"] {
+            if ctx.is_punct(close + 1, ".")
+                && ctx.is_ident(close + 2, sink)
+                && ctx.is_punct(close + 3, "(")
+            {
+                out.push(ctx.diag(
+                    ctx.toks[i].line,
+                    FLOAT_ORD,
+                    format!(
+                        "`partial_cmp(..).{sink}(..)` panics on NaN; use `f64::total_cmp` \
+                         or `searcher::cmp_speed_desc`"
+                    ),
+                ));
+                chained.push(i);
+            }
+        }
+    }
+    for i in 0..ctx.toks.len() {
+        if !COMPARATOR_SINKS.iter().any(|s| ctx.is_ident(i, s)) || !ctx.is_punct(i + 1, "(") {
+            continue;
+        }
+        let Some(close) = match_delim(ctx.toks, i + 1) else {
+            continue;
+        };
+        let span = (i + 2)..close;
+        let has = |name: &str| span.clone().any(|j| ctx.is_ident(j, name));
+        // a chained violation inside the span already reported the site
+        if has("partial_cmp")
+            && !has("total_cmp")
+            && !has("cmp_speed_desc")
+            && !chained.iter().any(|c| span.contains(c))
+        {
+            out.push(ctx.diag(
+                ctx.toks[i].line,
+                FLOAT_ORD,
+                format!(
+                    "`{}` comparator uses `partial_cmp` without `total_cmp`/`cmp_speed_desc`; \
+                     NaN breaks the required total order",
+                    ctx.toks[i].text
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Integer types a bare `as` cast may silently truncate into.
+const INT_TYPES: [&str; 12] = [
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+
+/// **wire-int-cast**: bare `as <int>` casts in `comm/` silently
+/// truncate wire-derived values (the PR 3 bug class); decode through
+/// the strict helpers or `try_from`.  Non-test code only.
+pub fn wire_int_cast(ctx: &Ctx<'_>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for i in 0..ctx.toks.len() {
+        if !ctx.is_ident(i, "as") || ctx.in_test(i) {
+            continue;
+        }
+        let Some(t) = ctx.toks.get(i + 1) else {
+            continue;
+        };
+        if t.kind == TokKind::Ident && INT_TYPES.contains(&t.text.as_str()) {
+            out.push(ctx.diag(
+                ctx.toks[i].line,
+                WIRE_INT_CAST,
+                format!(
+                    "bare `as {}` integer cast in comm/; decode through the strict helpers \
+                     (`num_u64`/`num_usize`) or `{}::try_from`",
+                    t.text, t.text
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// **panic-path**: `.unwrap()` / `.expect(` / `panic!` in non-test
+/// coordinator and parameter-server code takes down every tenant of a
+/// long-lived PS; return an error or justify with a pragma.
+pub fn panic_path(ctx: &Ctx<'_>) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for i in 0..ctx.toks.len() {
+        if ctx.in_test(i) {
+            continue;
+        }
+        let msg = if (ctx.is_ident(i, "unwrap") || ctx.is_ident(i, "expect"))
+            && i > 0
+            && ctx.is_punct(i - 1, ".")
+            && ctx.is_punct(i + 1, "(")
+        {
+            Some(format!(
+                "`.{}()` on a non-test path; return an error or justify with \
+                 `// lint:allow(panic-path): reason`",
+                ctx.toks[i].text
+            ))
+        } else if ctx.is_ident(i, "panic") && ctx.is_punct(i + 1, "!") {
+            Some(
+                "`panic!` on a non-test path; return an error or justify with \
+                 `// lint:allow(panic-path): reason`"
+                    .to_string(),
+            )
+        } else {
+            None
+        };
+        if let Some(msg) = msg {
+            out.push(ctx.diag(ctx.toks[i].line, PANIC_PATH, msg));
+        }
+    }
+    out
+}
+
+/// **lock-order**: token-level guard-scope tracking for `ps/`.  A
+/// shard guard (`read_shard(..)`/`write_shard(..)`) bound directly by
+/// `let` (`let st = read_shard(..);`) lives to the end of its block;
+/// any other use is a temporary that dies at the end of its statement
+/// (`let n = read_shard(..).len();` included).  Calling
+/// `lock_control(..)` while any shard guard is live inverts the
+/// documented control→shard hierarchy and can deadlock against
+/// `replace_branch_rows`.
+pub fn lock_order(ctx: &Ctx<'_>) -> Vec<Diagnostic> {
+    struct Guard {
+        depth: usize,
+        let_bound: bool,
+        line: u32,
+    }
+    let mut out = Vec::new();
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0usize;
+    let mut stmt_has_let = false;
+    for i in 0..ctx.toks.len() {
+        if ctx.in_test(i) {
+            continue;
+        }
+        let t = &ctx.toks[i];
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "{") => {
+                depth += 1;
+                stmt_has_let = false;
+            }
+            (TokKind::Punct, "}") => {
+                guards.retain(|g| g.depth < depth);
+                depth = depth.saturating_sub(1);
+                stmt_has_let = false;
+            }
+            (TokKind::Punct, ";") => {
+                guards.retain(|g| g.let_bound || g.depth < depth);
+                stmt_has_let = false;
+            }
+            (TokKind::Ident, "let") => stmt_has_let = true,
+            (TokKind::Ident, "read_shard" | "write_shard") if ctx.is_punct(i + 1, "(") => {
+                // bound directly by `let` iff the call closes the
+                // statement: `let st = read_shard(..);`
+                let direct = match_delim(ctx.toks, i + 1)
+                    .map_or(false, |close| ctx.is_punct(close + 1, ";"));
+                guards.push(Guard {
+                    depth,
+                    let_bound: stmt_has_let && direct,
+                    line: t.line,
+                });
+            }
+            (TokKind::Ident, "lock_control") if ctx.is_punct(i + 1, "(") => {
+                if let Some(g) = guards.first() {
+                    out.push(ctx.diag(
+                        t.line,
+                        LOCK_ORDER,
+                        format!(
+                            "control-plane mutex acquired while the shard guard from line {} \
+                             is live; the documented hierarchy is control -> shard",
+                            g.line
+                        ),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}

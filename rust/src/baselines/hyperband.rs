@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::baselines::BaselineReport;
 use crate::comm::{BranchId, BranchType, TunerMsg};
 use crate::metrics::RunRecorder;
-use crate::searcher::{Proposal, RandomSearcher, Searcher};
+use crate::searcher::{cmp_speed_desc, Proposal, RandomSearcher, Searcher};
 use crate::training::{MessageDriver, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
 
@@ -28,6 +28,15 @@ struct Arm {
     setting: TunableSetting,
     acc: f64,
     dead: bool,
+}
+
+/// Rank live arm indices by accuracy, best first.  Divergence zeroes
+/// `acc` before ranking, but a Testing-clock accuracy can itself come
+/// back NaN without tripping the divergence check — `cmp_speed_desc`
+/// ranks NaN strictly worst, so such an arm lands in the culled half
+/// instead of panicking the bracket.
+fn rank_by_acc_desc(arms: &[Arm], live: &mut [usize]) {
+    live.sort_by(|&a, &b| cmp_speed_desc(&arms[a].acc, &arms[b].acc));
 }
 
 impl<S: TrainingSystem> HyperbandDriver<S> {
@@ -177,9 +186,7 @@ impl<S: TrainingSystem> HyperbandDriver<S> {
                     }
                     break;
                 }
-                live.sort_by(|&a, &b| {
-                    arms[b].acc.partial_cmp(&arms[a].acc).unwrap()
-                });
+                rank_by_acc_desc(&arms, &mut live);
                 for &i in &live[live.len() / 2..] {
                     self.driver.send(&TunerMsg::FreeBranch {
                         clock,
@@ -197,5 +204,38 @@ impl<S: TrainingSystem> HyperbandDriver<S> {
             best_accuracy: best_acc,
             total_time: now,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tunable::TunableSetting;
+
+    fn arm(branch: BranchId, acc: f64) -> Arm {
+        Arm {
+            branch,
+            setting: TunableSetting::new(vec![0.0]),
+            acc,
+            dead: false,
+        }
+    }
+
+    #[test]
+    fn nan_accuracy_ranks_last_instead_of_panicking() {
+        let arms = vec![arm(0, 0.5), arm(1, f64::NAN), arm(2, 0.9), arm(3, 0.7)];
+        let mut live: Vec<usize> = (0..arms.len()).collect();
+        rank_by_acc_desc(&arms, &mut live);
+        assert_eq!(live, vec![2, 3, 0, 1]);
+        // the culled half (tail) holds the NaN arm
+        assert!(arms[live[3]].acc.is_nan());
+    }
+
+    #[test]
+    fn all_nan_accuracies_still_give_a_total_order() {
+        let arms = vec![arm(0, f64::NAN), arm(1, f64::NAN)];
+        let mut live: Vec<usize> = vec![0, 1];
+        rank_by_acc_desc(&arms, &mut live);
+        assert_eq!(live.len(), 2);
     }
 }

@@ -1,0 +1,85 @@
+//! `mltuner_lint` — the house static-analysis pass (see
+//! `docs/ARCHITECTURE.md`, "Enforced invariants").
+//!
+//! ```text
+//! cargo run --release --bin mltuner_lint            # lint src/
+//! cargo run --release --bin mltuner_lint -- path --rules float-ord,lock-order
+//! ```
+//!
+//! Exits 0 when the tree is clean, 1 on violations, 2 on I/O or
+//! usage errors — CI and `scripts/tier1.sh` gate on the exit code.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use mltuner::analysis;
+use mltuner::util::cli::Args;
+
+const USAGE: &str = "\
+mltuner_lint — house static analysis for the mltuner crate
+
+USAGE:
+    mltuner_lint [src-root] [--rules <r1,r2,…>] [--help]
+
+Rules: float-ord, wire-int-cast, panic-path, lock-order (default: all).
+Suppress a finding with `// lint:allow(rule): reason` placed on, or
+directly above, the offending line.";
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    if args.get_bool("help", false) {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    let root = match args.positional.first() {
+        Some(p) => PathBuf::from(p),
+        None => default_src_root(),
+    };
+    let mut enabled: Vec<&'static str> = Vec::new();
+    match args.get("rules") {
+        None => enabled.extend(analysis::RULES),
+        Some(list) => {
+            for name in list.split(',') {
+                let name = name.trim();
+                match analysis::RULES.iter().find(|r| **r == name) {
+                    Some(r) => enabled.push(r),
+                    None => {
+                        eprintln!("mltuner_lint: unknown rule `{name}`\n\n{USAGE}");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+        }
+    }
+    let report = match analysis::run_dir(&root, &enabled) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("mltuner_lint: {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for d in &report.diags {
+        println!("{d}");
+    }
+    if report.diags.is_empty() {
+        println!(
+            "mltuner_lint: OK — {} files clean under {} ({})",
+            report.files,
+            root.display(),
+            enabled.join(", ")
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("mltuner_lint: {} violation(s)", report.diags.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// Under `cargo run` the manifest dir locates `src/` regardless of the
+/// invoking directory; fall back to a relative `src` otherwise.
+fn default_src_root() -> PathBuf {
+    match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => PathBuf::from(dir).join("src"),
+        Err(_) => PathBuf::from("src"),
+    }
+}

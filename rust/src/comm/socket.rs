@@ -141,11 +141,19 @@ impl Framing {
 }
 
 /// Encode one length-prefixed frame (4-byte big-endian header).
-pub fn encode_length_frame(payload: &[u8]) -> Vec<u8> {
+/// Errors when the payload exceeds [`MAX_FRAME_LEN`] — the old `as
+/// u32` header cast silently truncated oversized payloads into frames
+/// that decoded as garbage.
+pub fn encode_length_frame(payload: &[u8]) -> Result<Vec<u8>> {
+    if payload.len() > MAX_FRAME_LEN {
+        bail!("frame length {} exceeds maximum {MAX_FRAME_LEN}", payload.len());
+    }
+    let len = u32::try_from(payload.len())
+        .map_err(|_| anyhow!("frame length {} exceeds u32", payload.len()))?;
     let mut out = Vec::with_capacity(payload.len() + 4);
-    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(&len.to_be_bytes());
     out.extend_from_slice(payload);
-    out
+    Ok(out)
 }
 
 /// Decode one length-prefixed frame from the front of `buf`.
@@ -157,7 +165,9 @@ pub fn decode_length_frame(buf: &[u8]) -> Result<Option<(Vec<u8>, usize)>> {
     if buf.len() < 4 {
         return Ok(None);
     }
-    let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    let header = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    let len = usize::try_from(header)
+        .map_err(|_| anyhow!("frame length {header} exceeds usize"))?;
     if len > MAX_FRAME_LEN {
         bail!("frame length {len} exceeds maximum {MAX_FRAME_LEN}");
     }
@@ -214,8 +224,9 @@ impl Conn {
                 if payload.len() > MAX_FRAME_LEN {
                     bail!("frame length {} exceeds maximum {MAX_FRAME_LEN}", payload.len());
                 }
-                self.writer
-                    .write_all(&(payload.len() as u32).to_be_bytes())?;
+                let len = u32::try_from(payload.len())
+                    .map_err(|_| anyhow!("frame length {} exceeds u32", payload.len()))?;
+                self.writer.write_all(&len.to_be_bytes())?;
                 self.writer.write_all(payload.as_bytes())?;
             }
         }
@@ -245,7 +256,9 @@ impl Conn {
                     }
                     r => r?,
                 }
-                let len = u32::from_be_bytes(header) as usize;
+                let wire_len = u32::from_be_bytes(header);
+                let len = usize::try_from(wire_len)
+                    .map_err(|_| anyhow!("frame length {wire_len} exceeds usize"))?;
                 if len > MAX_FRAME_LEN {
                     bail!("frame length {len} exceeds maximum {MAX_FRAME_LEN}");
                 }
@@ -491,7 +504,7 @@ mod tests {
 
     #[test]
     fn length_frame_codec_rejects_truncation_and_garbage() {
-        let frame = encode_length_frame(b"abc");
+        let frame = encode_length_frame(b"abc").unwrap();
         assert_eq!(frame, vec![0, 0, 0, 3, b'a', b'b', b'c']);
         // whole frame decodes
         let (payload, used) = decode_length_frame(&frame).unwrap().unwrap();
@@ -504,8 +517,8 @@ mod tests {
         let garbage = [0xff, 0xff, 0xff, 0xff, 0, 0];
         assert!(decode_length_frame(&garbage).is_err());
         // concatenated frames decode one at a time
-        let mut two = encode_length_frame(b"x");
-        two.extend(encode_length_frame(b"yz"));
+        let mut two = encode_length_frame(b"x").unwrap();
+        two.extend(encode_length_frame(b"yz").unwrap());
         let (p1, used) = decode_length_frame(&two).unwrap().unwrap();
         assert_eq!(p1, b"x");
         let (p2, _) = decode_length_frame(&two[used..]).unwrap().unwrap();

@@ -110,6 +110,8 @@ fn num_u64(v: &Json, what: &str) -> Result<u64> {
     if !f.is_finite() || f.fract() != 0.0 || !(0.0..INT_BOUND).contains(&f) {
         bail!("bad {what}: {f} is not an unsigned integer");
     }
+    // lint:allow(wire-int-cast): this IS the strict helper — the cast
+    // is exact for every integral f64 in [0, 2^53) admitted above
     Ok(f as u64)
 }
 
@@ -328,8 +330,8 @@ pub(crate) fn push_json_str(out: &mut String, s: &str) {
             '\n' => out.push_str("\\n"),
             '\t' => out.push_str("\\t"),
             '\r' => out.push_str("\\r"),
-            c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
+            c if u32::from(c) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", u32::from(c));
             }
             c => out.push(c),
         }

@@ -21,6 +21,7 @@
 //! Start with [`tuner::MLtuner`] (the paper's contribution) and
 //! [`training::TrainingSystem`] (the interface of §4.5/Table 1).
 
+pub mod analysis;
 pub mod apps;
 pub mod baselines;
 pub mod comm;

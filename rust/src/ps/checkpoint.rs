@@ -276,6 +276,8 @@ pub fn decode_segment(
         bail!("segment truncated: {} bytes", bytes.len());
     }
     let (body, tail) = bytes.split_at(bytes.len() - 8);
+    // lint:allow(panic-path): split_at of a length-checked slice makes
+    // the tail exactly 8 bytes; the conversion cannot fail
     let stored = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
     let computed = fnv1a(body);
     if stored != computed {
@@ -434,6 +436,8 @@ pub fn checkpoint_range(
                 .collect();
             handles
                 .into_iter()
+                // lint:allow(panic-path): join only errs when the
+                // worker panicked; re-raising that panic is correct
                 .map(|h| h.join().expect("checkpoint dump worker panicked"))
                 .collect()
         })

@@ -113,6 +113,7 @@ pub mod storage;
 pub mod thread_cache;
 
 use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard, TryLockError};
@@ -190,39 +191,111 @@ pub struct ServerStats {
     pub reads_batched: u64,
 }
 
+/// Number of shard guards live on the current thread — the debug-build
+/// mirror of `mltuner_lint`'s static `lock-order` pass.  The hierarchy
+/// is `control plane → shard` (module docs above); [`lock_control`]
+/// asserts this census is zero so an inverted acquisition fails loudly
+/// in tests instead of deadlocking against a concurrent fork/free.
+#[cfg(debug_assertions)]
+thread_local! {
+    static LIVE_SHARD_GUARDS: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+#[cfg(debug_assertions)]
+fn note_shard_guard_acquired() {
+    LIVE_SHARD_GUARDS.with(|c| c.set(c.get() + 1));
+}
+
+#[cfg(debug_assertions)]
+fn note_shard_guard_released() {
+    LIVE_SHARD_GUARDS.with(|c| c.set(c.get() - 1));
+}
+
+/// Shard read guard that keeps the per-thread live-guard census for
+/// the debug-build lock-order assertion; dereferences to the shard
+/// state exactly like the raw `RwLockReadGuard` it wraps.  Release
+/// builds carry no `Drop` impl, so the wrapper costs nothing there.
+struct ShardReadGuard<'a>(RwLockReadGuard<'a, ShardState>);
+
+impl Deref for ShardReadGuard<'_> {
+    type Target = ShardState;
+    fn deref(&self) -> &ShardState {
+        &self.0
+    }
+}
+
+#[cfg(debug_assertions)]
+impl Drop for ShardReadGuard<'_> {
+    fn drop(&mut self) {
+        note_shard_guard_released();
+    }
+}
+
+/// Write-side counterpart of [`ShardReadGuard`].
+struct ShardWriteGuard<'a>(RwLockWriteGuard<'a, ShardState>);
+
+impl Deref for ShardWriteGuard<'_> {
+    type Target = ShardState;
+    fn deref(&self) -> &ShardState {
+        &self.0
+    }
+}
+
+impl DerefMut for ShardWriteGuard<'_> {
+    fn deref_mut(&mut self) -> &mut ShardState {
+        &mut self.0
+    }
+}
+
+#[cfg(debug_assertions)]
+impl Drop for ShardWriteGuard<'_> {
+    fn drop(&mut self) {
+        note_shard_guard_released();
+    }
+}
+
 #[inline]
 fn lock_control(m: &Mutex<ControlPlane>) -> MutexGuard<'_, ControlPlane> {
+    #[cfg(debug_assertions)]
+    LIVE_SHARD_GUARDS.with(|c| {
+        assert_eq!(
+            c.get(),
+            0,
+            "lock-order violation: control mutex requested while a shard \
+             guard is live (hierarchy is control -> shard; see module docs)"
+        );
+    });
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Read-lock a shard, counting contention without double-locking.
-fn read_shard<'a>(
-    lock: &'a RwLock<ShardState>,
-    counters: &Counters,
-) -> RwLockReadGuard<'a, ShardState> {
-    match lock.try_read() {
+fn read_shard<'a>(lock: &'a RwLock<ShardState>, counters: &Counters) -> ShardReadGuard<'a> {
+    let g = match lock.try_read() {
         Ok(g) => g,
         Err(TryLockError::WouldBlock) => {
             counters.contended.fetch_add(1, Ordering::Relaxed);
             lock.read().unwrap_or_else(|e| e.into_inner())
         }
         Err(TryLockError::Poisoned(e)) => e.into_inner(),
-    }
+    };
+    #[cfg(debug_assertions)]
+    note_shard_guard_acquired();
+    ShardReadGuard(g)
 }
 
 /// Write-lock a shard, counting contention without double-locking.
-fn write_shard<'a>(
-    lock: &'a RwLock<ShardState>,
-    counters: &Counters,
-) -> RwLockWriteGuard<'a, ShardState> {
-    match lock.try_write() {
+fn write_shard<'a>(lock: &'a RwLock<ShardState>, counters: &Counters) -> ShardWriteGuard<'a> {
+    let g = match lock.try_write() {
         Ok(g) => g,
         Err(TryLockError::WouldBlock) => {
             counters.contended.fetch_add(1, Ordering::Relaxed);
             lock.write().unwrap_or_else(|e| e.into_inner())
         }
         Err(TryLockError::Poisoned(e)) => e.into_inner(),
-    }
+    };
+    #[cfg(debug_assertions)]
+    note_shard_guard_acquired();
+    ShardWriteGuard(g)
 }
 
 /// splitmix64 finalizer: a full-avalanche mix so that `h % n` is
@@ -385,6 +458,8 @@ impl ParamServer {
                     .collect();
                 handles
                     .into_iter()
+                    // lint:allow(panic-path): join only errs when the
+                    // worker panicked; re-raising that panic is correct
                     .map(|h| h.join().expect("shard fan-out worker panicked"))
                     .sum()
             })
@@ -703,6 +778,9 @@ impl ParamServer {
         let mut out = Vec::new();
         for k in keys {
             self.with_row(branch, table, k, |e| out.extend_from_slice(&e.data))
+                // lint:allow(panic-path): documented caller contract —
+                // a free during a gather is a protocol violation that
+                // must fail loudly, not return truncated tensors
                 .expect("row vanished during gather");
         }
         out
@@ -1168,6 +1246,21 @@ mod tests {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<ParamServer>();
         assert_send_sync::<Optimizer>();
+    }
+
+    /// Debug builds enforce the `control -> shard` hierarchy at
+    /// runtime (the dynamic half of the `lock-order` lint): taking the
+    /// control mutex while a shard guard is live must fail loudly
+    /// instead of risking a deadlock against a concurrent fork/free.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "lock-order violation")]
+    fn control_lock_under_shard_guard_panics_in_debug() {
+        let ps = ps(OptimizerKind::Sgd);
+        ps.insert_row(0, 0, 0, vec![1.0]);
+        // with_row holds the shard read guard while the closure runs;
+        // branch_exists takes the control mutex inside it — inverted.
+        ps.with_row(0, 0, 0, |_| ps.branch_exists(0));
     }
 
     #[test]

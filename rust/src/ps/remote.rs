@@ -483,6 +483,9 @@ impl RemoteParamServer {
             servers,
             shard_to_server,
             num_shards,
+            // lint:allow(panic-path): connect() bails on an empty
+            // server list before this point, so the loop above has
+            // always populated the optimizer
             optimizer: optimizer.expect("at least one server"),
             framing,
             read_rpcs: AtomicU64::new(0),
@@ -580,6 +583,8 @@ impl RemoteParamServer {
                 .collect();
             handles
                 .into_iter()
+                // lint:allow(panic-path): join only errs when the
+                // worker panicked; re-raising that panic is correct
                 .map(|h| h.join().expect("broadcast worker panicked"))
                 .collect()
         })

@@ -126,7 +126,9 @@ impl Shard {
             let private = pool.alloc_entry_copy(&**arc);
             *arc = Arc::new(private);
         }
-        // sole owner now (this module never creates Weak refs)
+        // lint:allow(panic-path): sole ownership is established just
+        // above (strong_count==1 path or a fresh Arc), and this module
+        // never creates Weak refs — get_mut cannot fail
         Some(Arc::get_mut(arc).expect("row must be sole-owned after COW"))
     }
 

@@ -146,8 +146,25 @@ mod tests {
         let best = s
             .observations()
             .iter()
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
         assert!((best.0[0] - 0.7).abs() < 0.15, "best x = {:?}", best.0);
+    }
+
+    #[test]
+    fn argmax_over_observations_is_nan_safe() {
+        // Regression for the old `partial_cmp().unwrap()` EI argmax
+        // idiom: picking the best observation must not panic when a
+        // NaN score is present, and NaN must never win the argmax
+        // (`total_cmp` ranks NaN above every finite value, so scan
+        // finite-only when NaN may be present).
+        let obs: Vec<(Vec<f64>, f64)> =
+            vec![(vec![0.1], 0.4), (vec![0.2], f64::NAN), (vec![0.7], 0.9)];
+        let best = obs
+            .iter()
+            .filter(|(_, y)| !y.is_nan())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap();
+        assert_eq!(best.0, vec![0.7]);
     }
 }

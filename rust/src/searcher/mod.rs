@@ -90,6 +90,8 @@ pub fn cmp_speed_desc(a: &f64, b: &f64) -> std::cmp::Ordering {
         (true, true) => Ordering::Equal,
         (true, false) => Ordering::Greater, // NaN sorts after everything
         (false, true) => Ordering::Less,
+        // lint:allow(float-ord, panic-path): this IS the total-order
+        // helper — both operands are proven non-NaN by the match above
         (false, false) => b.partial_cmp(a).expect("both comparable"),
     }
 }

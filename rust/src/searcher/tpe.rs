@@ -114,6 +114,9 @@ impl Searcher for TpeSearcher {
                 best = Some((cand, score));
             }
         }
+        // lint:allow(panic-path): the candidate loop runs at least
+        // once and its first iteration always sets `best` (map_or
+        // returns true for None, NaN scores included)
         Proposal::Point(best.unwrap().0)
     }
 

@@ -336,7 +336,9 @@ impl<S: TrainingSystem> MLtuner<S> {
     /// training system), session journal, recorder, manifest, LATEST
     /// pointer.
     fn save_checkpoint(&mut self) -> Result<()> {
-        let policy = self.cfg.checkpoint.clone().expect("checkpointing enabled");
+        let Some(policy) = self.cfg.checkpoint.clone() else {
+            bail!("save_checkpoint called without a checkpoint policy configured");
+        };
         let ckd = CheckpointDir::new(&policy.dir);
         let step = ckd.begin_step(self.clock)?;
         let store = self.driver.system.checkpoint_session(&step)?;
@@ -479,6 +481,9 @@ impl<S: TrainingSystem> MLtuner<S> {
             }
             // remap best index into kept vector
             let best_converging = best_converging.map(|(i, sp)| {
+                // lint:allow(panic-path): the best index was pushed
+                // into `keep` in the labeling loop above, so the
+                // position lookup always succeeds
                 let new_i = keep.iter().position(|&k| k == i).unwrap();
                 (new_i, sp)
             });
@@ -498,6 +503,8 @@ impl<S: TrainingSystem> MLtuner<S> {
                         self.free(t.branch)?;
                     }
                 }
+                // lint:allow(panic-path): `best_i` indexes the drained
+                // vector, so the loop above always sets `best`
                 trials.push(best.unwrap());
                 break Some(trial_time);
             }
@@ -542,6 +549,8 @@ impl<S: TrainingSystem> MLtuner<S> {
         };
 
         // ---- keep searching with the decided trial time ----
+        // lint:allow(panic-path): Algorithm 1's decided path leaves
+        // exactly the best trial in `trials` (see the decided loop)
         let mut best = trials.pop().expect("best branch from Algorithm 1");
         let mut best_speed = self.summarizer.summarize(&best.trace).speed;
         while trials_forked < max_trials

@@ -66,7 +66,7 @@ pub fn bench<F: FnMut()>(name: &str, target_ms: f64, max_iters: usize, mut f: F)
         f();
         samples.push(t.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let stats = BenchStats {
         name: name.to_string(),
@@ -104,6 +104,17 @@ mod tests {
         });
         assert!(s.iters >= 5);
         assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn sample_sort_is_nan_safe() {
+        // The sample sort must be a total order: a NaN sample (never
+        // produced by Instant, but the ordering contract should not
+        // depend on that) sorts last instead of panicking.
+        let mut samples = vec![3.0f64, f64::NAN, 1.0, 2.0];
+        samples.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(&samples[..3], &[1.0, 2.0, 3.0]);
+        assert!(samples[3].is_nan());
     }
 
     #[test]

@@ -1,0 +1,10 @@
+// Lint fixture for `wire-int-cast`: bare integer casts that can
+// silently truncate wire-derived values.  Never compiled.
+
+fn decode_len(header: u64) -> usize {
+    header as usize
+}
+
+fn encode_len(n: usize) -> u32 {
+    n as u32
+}

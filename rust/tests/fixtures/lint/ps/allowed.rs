@@ -1,0 +1,18 @@
+// Lint fixture: every violation below carries a well-formed pragma;
+// the linter must report nothing at all.  Never compiled.
+
+fn total(a: f64, b: f64) -> std::cmp::Ordering {
+    // lint:allow(float-ord, panic-path): operands proven non-NaN by caller
+    a.partial_cmp(&b).expect("non-NaN")
+}
+
+fn join_worker(h: std::thread::JoinHandle<usize>) -> usize {
+    h.join().expect("worker panicked") // lint:allow(panic-path): re-raises the worker panic
+}
+
+fn checked_inversion(s: &Server) -> usize {
+    let st = read_shard(&s.shards[0], &s.counters);
+    // lint:allow(lock-order): fixture stands in for a proven-safe site
+    let ctl = lock_control(&s.control);
+    ctl.rows + st.rows
+}

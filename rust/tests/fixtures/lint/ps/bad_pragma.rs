@@ -1,0 +1,10 @@
+// Lint fixture: malformed pragmas are themselves findings and
+// suppress nothing.  Never compiled.
+
+fn choose(best: Option<u32>) -> u32 {
+    // lint:allow(panic-path)
+    best.unwrap()
+}
+
+// lint:allow(no-such-rule): the rule name is unknown
+fn noop() {}

@@ -1,0 +1,16 @@
+// Lint fixture: idiomatic code on a policed path -- the linter must
+// stay silent.  Never compiled.
+
+fn rank(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+fn legal(s: &Server) -> usize {
+    let ctl = lock_control(&s.control);
+    let st = read_shard(&s.shards[0], &s.counters);
+    ctl.rows + st.rows
+}
+
+fn fallible(x: Option<u32>) -> Result<u32, String> {
+    x.ok_or_else(|| "missing".to_string())
+}

@@ -1,0 +1,9 @@
+// Lint fixture for `lock-order`: taking the control mutex under a
+// live shard guard inverts the control -> shard hierarchy.  Never
+// compiled.
+
+fn inverted(s: &Server) -> usize {
+    let st = read_shard(&s.shards[0], &s.counters);
+    let ctl = lock_control(&s.control);
+    ctl.rows + st.rows
+}

@@ -1,0 +1,18 @@
+// Lint fixture for `panic-path`: non-test panic sites are flagged,
+// the test module below is exempt.  Never compiled.
+
+fn choose(best: Option<u32>) -> u32 {
+    best.unwrap()
+}
+
+fn give_up(msg: &str) -> ! {
+    panic!("tuner gave up: {msg}")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(Some(3).unwrap(), 3);
+    }
+}

@@ -1,0 +1,11 @@
+// Lint fixture for `float-ord`: both violation shapes.  Lexed by
+// tests/lint_selftest.rs and the binary meta-test -- never compiled.
+
+fn chained(xs: &mut Vec<f64>) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+fn comparator(xs: &[f64]) -> Option<&f64> {
+    xs.iter()
+        .max_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+}

@@ -1,0 +1,123 @@
+//! Self-tests for the `mltuner_lint` static-analysis pass.
+//!
+//! The fixture files under `tests/fixtures/lint/` exercise each rule
+//! end to end (lex → rule passes → pragma filter) through the library
+//! entry point [`mltuner::analysis::check_source`]; the binary-level
+//! test runs the real `mltuner_lint` executable over the fixture tree
+//! (expecting failure) and over the crate's own `src/` (expecting the
+//! clean pass CI and `scripts/tier1.sh` gate on).
+
+use std::path::Path;
+use std::process::Command;
+
+use mltuner::analysis::{self, check_source, rules, PRAGMA_RULE, RULES};
+
+const FLOAT_ORD_BAD: &str = include_str!("fixtures/lint/util/float_ord_bad.rs");
+const WIRE_CAST_BAD: &str = include_str!("fixtures/lint/comm/wire_cast_bad.rs");
+const PANIC_BAD: &str = include_str!("fixtures/lint/tuner/panic_bad.rs");
+const LOCK_ORDER_BAD: &str = include_str!("fixtures/lint/ps/lock_order_bad.rs");
+const ALLOWED: &str = include_str!("fixtures/lint/ps/allowed.rs");
+const BAD_PRAGMA: &str = include_str!("fixtures/lint/ps/bad_pragma.rs");
+const CLEAN: &str = include_str!("fixtures/lint/ps/clean.rs");
+
+/// `(rule, line)` pairs for a fixture linted under `rel`.
+fn hits(rel: &str, src: &str) -> Vec<(&'static str, u32)> {
+    check_source(rel, src).into_iter().map(|d| (d.rule, d.line)).collect()
+}
+
+#[test]
+fn float_ord_fixture_flags_both_shapes() {
+    assert_eq!(
+        hits("util/float_ord_bad.rs", FLOAT_ORD_BAD),
+        vec![(rules::FLOAT_ORD, 5), (rules::FLOAT_ORD, 10)]
+    );
+}
+
+#[test]
+fn wire_cast_fixture_flags_both_casts_under_comm_only() {
+    assert_eq!(
+        hits("comm/wire_cast_bad.rs", WIRE_CAST_BAD),
+        vec![(rules::WIRE_INT_CAST, 5), (rules::WIRE_INT_CAST, 9)]
+    );
+    // the rule keys off the comm/ prefix — identical code elsewhere
+    // is not the wire plane's concern
+    assert!(hits("util/wire_cast_bad.rs", WIRE_CAST_BAD).is_empty());
+}
+
+#[test]
+fn panic_fixture_flags_daemon_paths_but_not_its_test_module() {
+    assert_eq!(
+        hits("tuner/panic_bad.rs", PANIC_BAD),
+        vec![(rules::PANIC_PATH, 5), (rules::PANIC_PATH, 9)]
+    );
+}
+
+#[test]
+fn lock_order_fixture_flags_the_inverted_acquisition() {
+    assert_eq!(hits("ps/lock_order_bad.rs", LOCK_ORDER_BAD), vec![(rules::LOCK_ORDER, 7)]);
+}
+
+#[test]
+fn pragmas_suppress_every_annotated_violation() {
+    assert_eq!(hits("ps/allowed.rs", ALLOWED), vec![]);
+}
+
+#[test]
+fn malformed_pragmas_report_and_suppress_nothing() {
+    assert_eq!(
+        hits("ps/bad_pragma.rs", BAD_PRAGMA),
+        vec![(PRAGMA_RULE, 5), (rules::PANIC_PATH, 6), (PRAGMA_RULE, 9)]
+    );
+}
+
+#[test]
+fn clean_fixture_stays_silent() {
+    assert_eq!(hits("ps/clean.rs", CLEAN), vec![]);
+}
+
+/// The meta-test: the crate's own `src/` tree must lint clean with
+/// every rule enabled — the library-level mirror of the CI leg.
+#[test]
+fn crate_sources_lint_clean_via_library() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = analysis::run_dir(&root, &RULES).expect("walking src");
+    assert!(
+        report.files >= 40,
+        "suspiciously few files linted: {}",
+        report.files
+    );
+    let rendered: Vec<String> = report.diags.iter().map(|d| d.to_string()).collect();
+    assert!(
+        rendered.is_empty(),
+        "lint findings on src:\n{}",
+        rendered.join("\n")
+    );
+}
+
+/// Exit-code contract of the real binary: 1 on a tree with violations
+/// (every rule id appears in the output), 0 on the crate's `src/`.
+#[test]
+fn lint_binary_fails_on_fixtures_and_passes_on_src() {
+    let exe = env!("CARGO_BIN_EXE_mltuner_lint");
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+
+    let bad = Command::new(exe)
+        .arg(manifest.join("tests/fixtures/lint"))
+        .output()
+        .expect("spawning mltuner_lint");
+    assert_eq!(bad.status.code(), Some(1), "fixture tree must fail the lint");
+    let stdout = String::from_utf8_lossy(&bad.stdout);
+    for rule in RULES.iter().chain([&PRAGMA_RULE]) {
+        assert!(
+            stdout.contains(&format!("[{rule}]")),
+            "expected a `{rule}` finding in:\n{stdout}"
+        );
+    }
+
+    let ok = Command::new(exe)
+        .arg(manifest.join("src"))
+        .output()
+        .expect("spawning mltuner_lint");
+    let diags = String::from_utf8_lossy(&ok.stdout);
+    assert_eq!(ok.status.code(), Some(0), "src must lint clean:\n{diags}");
+}

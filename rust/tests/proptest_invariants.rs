@@ -772,7 +772,7 @@ fn prop_ps_decode_never_panics_on_garbage() {
 fn prop_length_framing_handles_truncation_and_splits() {
     prop(200, |rng| {
         let payload: Vec<u8> = (0..rng.gen_range(0, 256)).map(|_| rng.next_u64() as u8).collect();
-        let frame = encode_length_frame(&payload);
+        let frame = encode_length_frame(&payload).unwrap();
         // full frame decodes exactly
         let (got, used) = decode_length_frame(&frame).unwrap().unwrap();
         assert_eq!(got, payload);

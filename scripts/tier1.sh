@@ -9,6 +9,12 @@ cd "$(dirname "$0")/../rust"
 cargo build --release
 cargo test -q
 
+# House static analysis (mirrors the CI `lint` leg): float-ordering,
+# wire-integer-cast, panic-path and lock-hierarchy disciplines over
+# src/.  Violations without a `// lint:allow(rule): reason` pragma
+# exit nonzero.  See docs/ARCHITECTURE.md, "Enforced invariants".
+cargo run --release --bin mltuner_lint
+
 # Concurrency stress suite again at release opt-level, with the libtest
 # runner forced to run the stress tests in parallel with each other —
 # more cross-test thread pressure than the default scheduling gives.
@@ -53,5 +59,21 @@ fi
 # Benches must keep compiling at release opt-level (they are the perf
 # acceptance artifacts for the sharded-server work).
 cargo build --release --benches
+
+# Advisory ThreadSanitizer pass over the concurrency stress suite
+# (mirrors the CI `tsan` leg).  Needs nightly with rust-src for
+# -Zbuild-std; a TSan report is printed but never fails tier-1.
+if command -v rustup >/dev/null 2>&1 \
+    && rustup run nightly cargo --version >/dev/null 2>&1 \
+    && rustup component list --toolchain nightly 2>/dev/null \
+        | grep -q 'rust-src (installed)'; then
+    host=$(rustc -vV | sed -n 's/^host: //p')
+    RUSTFLAGS="-Zsanitizer=thread" \
+        cargo +nightly test -Zbuild-std --target "$host" \
+        --release --test stress_concurrent -- --test-threads=8 \
+        || echo "tier1: TSan reported issues (advisory leg, not gating)"
+else
+    echo "tier1: nightly toolchain with rust-src not installed, skipping TSan leg"
+fi
 
 echo "tier1: OK"
