@@ -192,6 +192,98 @@ fn main() {
             black_box(ps.read_rows(0, &batch_keys, false));
         });
     }
+    // Wire codecs on the 64x4096-row data-plane frames (one gather /
+    // update batch per worker): JSON decimal formatting + per-row
+    // Vec<String> work vs the binary codec's raw f32 bit patterns into
+    // a reused buffer (no per-row allocation, no float formatting).
+    {
+        use mltuner::comm::binwire;
+        use mltuner::comm::wire::{
+            decode_ps_reply, decode_ps_request, encode_ps_reply, encode_ps_request, PsReply,
+            PsRequest,
+        };
+        let grad = vec![0.012345f32; 4096];
+        let req = PsRequest::ApplyBatch {
+            branch: 1,
+            hyper: Hyper { lr: 0.01, momentum: 0.9 },
+            updates: (0..64u64).map(|k| (0, k, grad.clone())).collect(),
+        };
+        let reply = PsReply::RowsData {
+            rows: (0..64).map(|_| Some((grad.clone(), None))).collect(),
+        };
+        let json_req = encode_ps_request(&req);
+        let json_reply = encode_ps_reply(&reply);
+        let mut buf = Vec::new();
+        binwire::encode_request(&req, &mut buf).unwrap();
+        let bin_req = buf.clone();
+        binwire::encode_reply(&reply, &mut buf).unwrap();
+        let bin_reply = buf.clone();
+        println!(
+            "\n== wire codecs (64x4096-row frames: {} B json, {} B binary) ==",
+            json_req.len(),
+            bin_req.len()
+        );
+        bench("encode ApplyBatch 64x4096 (json)", 300.0, 2_000, || {
+            black_box(encode_ps_request(&req));
+        });
+        bench("encode ApplyBatch 64x4096 (binary, reused buf)", 300.0, 2_000, || {
+            binwire::encode_request(&req, &mut buf).unwrap();
+            black_box(&buf);
+        });
+        bench("decode ApplyBatch 64x4096 (json)", 300.0, 2_000, || {
+            black_box(decode_ps_request(&json_req).unwrap());
+        });
+        bench("decode ApplyBatch 64x4096 (binary)", 300.0, 2_000, || {
+            black_box(binwire::decode_request(&bin_req).unwrap());
+        });
+        bench("decode ReadRows reply 64x4096 (json)", 300.0, 2_000, || {
+            black_box(decode_ps_reply(&json_reply).unwrap());
+        });
+        bench("decode ReadRows reply 64x4096 (binary)", 300.0, 2_000, || {
+            black_box(binwire::decode_reply(&bin_reply).unwrap());
+        });
+    }
+    // Loopback RPC latency through the event-loop shard server at
+    // 1/8/64 pooled connections (one connection lease per in-flight
+    // read_row), JSON line framing vs the negotiated binary codec.
+    #[cfg(unix)]
+    {
+        use mltuner::comm::socket::Framing;
+        use mltuner::ps::remote::{spawn_local_server, RemoteParamServer, ShardRange};
+        use mltuner::ps::ParamStore as _;
+        println!("\n== loopback RPC latency (event-loop server, pooled connections) ==");
+        for framing in [Framing::Line, Framing::Binary] {
+            let (spec, handle, _server) =
+                spawn_local_server(ShardRange { begin: 0, end: 4 }, OptimizerKind::Sgd, framing)
+                    .unwrap();
+            let remote = RemoteParamServer::connect(&[spec], framing).unwrap();
+            remote.insert_row(0, 0, 0, vec![0.5; 256]).unwrap();
+            for conc in [1usize, 8, 64] {
+                let per = 2_000 / conc + 50;
+                let t0 = Instant::now();
+                std::thread::scope(|s| {
+                    for _ in 0..conc {
+                        let remote = &remote;
+                        s.spawn(move || {
+                            for _ in 0..per {
+                                black_box(remote.read_row(0, 0, 0).unwrap());
+                            }
+                        });
+                    }
+                });
+                let secs = t0.elapsed().as_secs_f64();
+                let total = (conc * per) as f64;
+                println!(
+                    "read_row 256 f32 ({}, {conc:>2} conns): {:>7.1} us/rpc, {:>8.0} rpc/s",
+                    framing.name(),
+                    secs / per as f64 * 1e6,
+                    total / secs.max(1e-12)
+                );
+            }
+            remote.shutdown_all().unwrap();
+            handle.join().unwrap().unwrap();
+        }
+    }
     // Multi-threaded shard throughput on the 2048x4096 acceptance
     // table: aggregate batched-update rows/sec at 1/2/4/8 worker
     // threads over disjoint row slices.  Acceptance: >=2x aggregate

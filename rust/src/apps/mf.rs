@@ -634,6 +634,10 @@ impl TrainingSystem for MfSystem {
             batched_rows: s.server.batched_rows,
             reads_batched: s.server.reads_batched,
             read_rpcs: s.read_rpcs,
+            bytes_tx: s.server.bytes_tx,
+            bytes_rx: s.server.bytes_rx,
+            frames_json: s.server.frames_json,
+            frames_bin: s.server.frames_bin,
         }
     }
 }

@@ -1,0 +1,874 @@
+//! Binary codec for the PS data plane (`--framing binary`).
+//!
+//! The JSON codec of [`super::wire`] spells every f32 as a decimal
+//! bit-pattern string — correct but slow at production row volumes:
+//! a 4096-float row costs ~40 KB of decimal text plus a parse per
+//! value.  This module encodes the same [`PsRequest`]/[`PsReply`]
+//! values as fixed **little-endian** frames instead:
+//!
+//! ```text
+//! frame body := opcode:u8 fields...
+//! u32/u64    := little-endian
+//! bool       := u8 (0 | 1, anything else is an error)
+//! string     := len:u32 utf-8-bytes
+//! f32s       := count:u32 raw-bit-pattern:u32 ×count
+//! opt(x)     := tag:u8 (0 | 1) x?
+//! ```
+//!
+//! Row payloads are the raw IEEE-754 bit patterns (`f32::to_bits`
+//! little-endian), so the bit-exactness invariant of the JSON plane
+//! carries over by construction — bits on the wire are bits either
+//! way, which is what the binary↔JSON equality proptest pins.
+//!
+//! Encoders append into a caller-owned reusable `Vec<u8>` and perform
+//! **zero per-row heap allocations and zero float→decimal
+//! formatting**: the hot `ReadRows`/`ApplyBatch` loops are
+//! `extend_from_slice` of 4-byte bit patterns straight out of the row
+//! buffers (the scatter/gather buffers the server copies shard rows
+//! into under the read lock).  Decoding is as strict as the JSON
+//! plane's `num_*` helpers: every length is checked against the
+//! remaining bytes, bools and option tags must be exactly 0/1, and
+//! trailing bytes after a complete value are an error — a truncated
+//! or padded frame can never decode to a different value.
+//!
+//! Request opcodes live in `0x01..=0x0d`, reply opcodes in
+//! `0x11..=0x19`.  Every opcode is below `0x20`, and a JSON frame
+//! body always starts with `{` (0x7b), so a receiver can dispatch a
+//! frame to the right codec from its first byte alone
+//! ([`is_binary_frame`]) — that is how a binary-framing server keeps
+//! answering plain-JSON peers during negotiation.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::optim::Hyper;
+use crate::ps::checkpoint::SegmentMeta;
+use crate::ps::pool::PoolStats;
+use crate::ps::RowData;
+use crate::ps::ServerStats;
+
+use super::wire::{PsReply, PsRequest, PsStats, WireCodec};
+
+// Request opcodes.
+const OP_HELLO: u8 = 0x01;
+const OP_INSERT: u8 = 0x02;
+const OP_READ: u8 = 0x03;
+const OP_READ_ROWS: u8 = 0x04;
+const OP_UPDATE: u8 = 0x05;
+const OP_BATCH: u8 = 0x06;
+const OP_FORK: u8 = 0x07;
+const OP_FREE: u8 = 0x08;
+const OP_CKPT: u8 = 0x09;
+const OP_VERIFY: u8 = 0x0a;
+const OP_RESTORE: u8 = 0x0b;
+const OP_STATS: u8 = 0x0c;
+const OP_SHUTDOWN: u8 = 0x0d;
+
+// Reply opcodes.
+const RE_HELLO: u8 = 0x11;
+const RE_OK: u8 = 0x12;
+const RE_ROW: u8 = 0x13;
+const RE_ROWS: u8 = 0x14;
+const RE_SEGMENTS: u8 = 0x15;
+const RE_VERIFIED: u8 = 0x16;
+const RE_RESTORED: u8 = 0x17;
+const RE_STATS: u8 = 0x18;
+const RE_ERR: u8 = 0x19;
+
+/// Does this frame body carry the binary codec?  Binary opcodes are
+/// all `< 0x20`; a JSON body starts with `{` (0x7b).  An empty body is
+/// neither and fails both decoders.
+pub fn is_binary_frame(body: &[u8]) -> bool {
+    body.first().is_some_and(|b| *b < 0x20)
+}
+
+// ---------------------------------------------------------------------------
+// Encoding primitives
+// ---------------------------------------------------------------------------
+
+fn len_u32(n: usize, what: &str) -> Result<u32> {
+    u32::try_from(n).map_err(|_| anyhow!("{what} length {n} out of u32 range"))
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(out: &mut Vec<u8>, v: usize, what: &str) -> Result<()> {
+    let n = u64::try_from(v).map_err(|_| anyhow!("{what} {v} out of u64 range"))?;
+    put_u64(out, n);
+    Ok(())
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(u8::from(v));
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str, what: &str) -> Result<()> {
+    put_u32(out, len_u32(s.len(), what)?);
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+/// The row-payload hot path: count + raw bit patterns, no per-value
+/// allocation or formatting of any kind.
+fn put_f32s(out: &mut Vec<u8>, data: &[f32], what: &str) -> Result<()> {
+    put_u32(out, len_u32(data.len(), what)?);
+    out.reserve(data.len().saturating_mul(4));
+    for v in data {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    Ok(())
+}
+
+fn put_opt_f32s(out: &mut Vec<u8>, data: Option<&[f32]>, what: &str) -> Result<()> {
+    match data {
+        None => out.push(0),
+        Some(d) => {
+            out.push(1);
+            put_f32s(out, d, what)?;
+        }
+    }
+    Ok(())
+}
+
+fn put_hyper(out: &mut Vec<u8>, hyper: Hyper) {
+    put_u32(out, hyper.lr.to_bits());
+    put_u32(out, hyper.momentum.to_bits());
+}
+
+fn put_codec(out: &mut Vec<u8>, codec: WireCodec) {
+    out.push(match codec {
+        WireCodec::Json => 0,
+        WireCodec::Binary => 1,
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Decoding primitives
+// ---------------------------------------------------------------------------
+
+/// Strict cursor over a frame body.  Every read checks the remaining
+/// length; [`Reader::finish`] rejects trailing bytes.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|e| *e <= self.buf.len())
+            .ok_or_else(|| anyhow!("truncated {what}: need {n} bytes at offset {}", self.pos))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        let mut le = [0u8; 4];
+        le.copy_from_slice(b);
+        Ok(u32::from_le_bytes(le))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        let mut le = [0u8; 8];
+        le.copy_from_slice(b);
+        Ok(u64::from_le_bytes(le))
+    }
+
+    fn usize(&mut self, what: &str) -> Result<usize> {
+        let n = self.u64(what)?;
+        usize::try_from(n).map_err(|_| anyhow!("bad {what}: {n} out of usize range"))
+    }
+
+    /// A `count` prefix that is about to drive a loop of ≥
+    /// `min_elem_bytes`-byte elements: bounded by the bytes actually
+    /// present so a forged count cannot drive a huge pre-allocation.
+    fn count(&mut self, min_elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.u32(what)?;
+        let n = usize::try_from(n).map_err(|_| anyhow!("bad {what}: out of usize range"))?;
+        let need = n.saturating_mul(min_elem_bytes.max(1));
+        if need > self.buf.len() - self.pos {
+            bail!("truncated {what}: count {n} exceeds remaining bytes");
+        }
+        Ok(n)
+    }
+
+    fn bool(&mut self, what: &str) -> Result<bool> {
+        match self.u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("bad {what}: {b} is not a bool"),
+        }
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.count(1, what)?;
+        let bytes = self.take(n, what)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|_| anyhow!("bad {what}: not utf-8"))?
+            .to_string())
+    }
+
+    fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.count(4, what)?;
+        let bytes = self.take(n.saturating_mul(4), what)?;
+        let mut out = Vec::with_capacity(n);
+        for chunk in bytes.chunks_exact(4) {
+            let mut le = [0u8; 4];
+            le.copy_from_slice(chunk);
+            out.push(f32::from_bits(u32::from_le_bytes(le)));
+        }
+        Ok(out)
+    }
+
+    fn opt_f32s(&mut self, what: &str) -> Result<Option<Vec<f32>>> {
+        match self.u8(what)? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f32s(what)?)),
+            b => bail!("bad {what}: {b} is not an option tag"),
+        }
+    }
+
+    fn hyper(&mut self) -> Result<Hyper> {
+        Ok(Hyper {
+            lr: f32::from_bits(self.u32("lr")?),
+            momentum: f32::from_bits(self.u32("momentum")?),
+        })
+    }
+
+    fn codec(&mut self) -> Result<WireCodec> {
+        match self.u8("codec")? {
+            0 => Ok(WireCodec::Json),
+            1 => Ok(WireCodec::Binary),
+            b => bail!("bad codec byte {b}"),
+        }
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("trailing bytes: {} past end of frame", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// Encode one PS request into `out` (cleared first; reuse the buffer
+/// across frames to amortize its allocation).
+pub fn encode_request(req: &PsRequest, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    match req {
+        PsRequest::Hello { codec } => {
+            out.push(OP_HELLO);
+            put_codec(out, *codec);
+        }
+        PsRequest::InsertRow {
+            branch,
+            table,
+            key,
+            data,
+        } => {
+            out.push(OP_INSERT);
+            put_u32(out, *branch);
+            put_u32(out, *table);
+            put_u64(out, *key);
+            put_f32s(out, data, "data")?;
+        }
+        PsRequest::ReadRow {
+            branch,
+            table,
+            key,
+            with_accum,
+        } => {
+            out.push(OP_READ);
+            put_u32(out, *branch);
+            put_u32(out, *table);
+            put_u64(out, *key);
+            put_bool(out, *with_accum);
+        }
+        PsRequest::ReadRows {
+            branch,
+            with_accum,
+            keys,
+        } => {
+            out.push(OP_READ_ROWS);
+            put_u32(out, *branch);
+            put_bool(out, *with_accum);
+            put_u32(out, len_u32(keys.len(), "keys")?);
+            for (table, key) in keys {
+                put_u32(out, *table);
+                put_u64(out, *key);
+            }
+        }
+        PsRequest::ApplyUpdate {
+            branch,
+            table,
+            key,
+            grad,
+            hyper,
+            z_old,
+        } => {
+            out.push(OP_UPDATE);
+            put_u32(out, *branch);
+            put_u32(out, *table);
+            put_u64(out, *key);
+            put_hyper(out, *hyper);
+            put_f32s(out, grad, "grad")?;
+            put_opt_f32s(out, z_old.as_deref(), "z_old")?;
+        }
+        PsRequest::ApplyBatch {
+            branch,
+            hyper,
+            updates,
+        } => {
+            out.push(OP_BATCH);
+            put_u32(out, *branch);
+            put_hyper(out, *hyper);
+            put_u32(out, len_u32(updates.len(), "updates")?);
+            for (table, key, grad) in updates {
+                put_u32(out, *table);
+                put_u64(out, *key);
+                put_f32s(out, grad, "grad")?;
+            }
+        }
+        PsRequest::ForkBranch { child, parent } => {
+            out.push(OP_FORK);
+            put_u32(out, *child);
+            put_u32(out, *parent);
+        }
+        PsRequest::FreeBranch { branch } => {
+            out.push(OP_FREE);
+            put_u32(out, *branch);
+        }
+        PsRequest::CheckpointBranch { branch, dir } => {
+            out.push(OP_CKPT);
+            put_u32(out, *branch);
+            put_str(out, dir, "dir")?;
+        }
+        PsRequest::VerifyBranch { branch, dir } => {
+            out.push(OP_VERIFY);
+            put_u32(out, *branch);
+            put_str(out, dir, "dir")?;
+        }
+        PsRequest::RestoreBranch { branch, dir } => {
+            out.push(OP_RESTORE);
+            put_u32(out, *branch);
+            put_str(out, dir, "dir")?;
+        }
+        PsRequest::ServerStats => out.push(OP_STATS),
+        PsRequest::Shutdown => out.push(OP_SHUTDOWN),
+    }
+    Ok(())
+}
+
+/// Decode one binary PS request frame (strict: bad opcodes,
+/// truncation, and trailing bytes are all errors, never panics).
+pub fn decode_request(buf: &[u8]) -> Result<PsRequest> {
+    let mut r = Reader::new(buf);
+    let op = r.u8("opcode")?;
+    let req = match op {
+        OP_HELLO => PsRequest::Hello { codec: r.codec()? },
+        OP_INSERT => PsRequest::InsertRow {
+            branch: r.u32("branch")?,
+            table: r.u32("table")?,
+            key: r.u64("key")?,
+            data: r.f32s("data")?,
+        },
+        OP_READ => PsRequest::ReadRow {
+            branch: r.u32("branch")?,
+            table: r.u32("table")?,
+            key: r.u64("key")?,
+            with_accum: r.bool("accum")?,
+        },
+        OP_READ_ROWS => {
+            let branch = r.u32("branch")?;
+            let with_accum = r.bool("accum")?;
+            let n = r.count(12, "keys")?;
+            let mut keys = Vec::with_capacity(n);
+            for _ in 0..n {
+                keys.push((r.u32("table")?, r.u64("key")?));
+            }
+            PsRequest::ReadRows {
+                branch,
+                with_accum,
+                keys,
+            }
+        }
+        OP_UPDATE => PsRequest::ApplyUpdate {
+            branch: r.u32("branch")?,
+            table: r.u32("table")?,
+            key: r.u64("key")?,
+            hyper: r.hyper()?,
+            grad: r.f32s("grad")?,
+            z_old: r.opt_f32s("z_old")?,
+        },
+        OP_BATCH => {
+            let branch = r.u32("branch")?;
+            let hyper = r.hyper()?;
+            let n = r.count(16, "updates")?;
+            let mut updates = Vec::with_capacity(n);
+            for _ in 0..n {
+                updates.push((r.u32("table")?, r.u64("key")?, r.f32s("grad")?));
+            }
+            PsRequest::ApplyBatch {
+                branch,
+                hyper,
+                updates,
+            }
+        }
+        OP_FORK => PsRequest::ForkBranch {
+            child: r.u32("child")?,
+            parent: r.u32("parent")?,
+        },
+        OP_FREE => PsRequest::FreeBranch { branch: r.u32("branch")? },
+        OP_CKPT => PsRequest::CheckpointBranch {
+            branch: r.u32("branch")?,
+            dir: r.str("dir")?,
+        },
+        OP_VERIFY => PsRequest::VerifyBranch {
+            branch: r.u32("branch")?,
+            dir: r.str("dir")?,
+        },
+        OP_RESTORE => PsRequest::RestoreBranch {
+            branch: r.u32("branch")?,
+            dir: r.str("dir")?,
+        },
+        OP_STATS => PsRequest::ServerStats,
+        OP_SHUTDOWN => PsRequest::Shutdown,
+        other => bail!("unknown binary request opcode {other:#04x}"),
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+// ---------------------------------------------------------------------------
+// Replies
+// ---------------------------------------------------------------------------
+
+/// Encode one PS reply into `out` (cleared first).  The
+/// `RowsData` arm is the server's hottest send path: one tag byte and
+/// the raw bit patterns per row, straight out of the gather buffers.
+pub fn encode_reply(reply: &PsReply, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    match reply {
+        PsReply::Hello {
+            shard_begin,
+            shard_end,
+            optimizer,
+            codec,
+        } => {
+            out.push(RE_HELLO);
+            put_usize(out, *shard_begin, "begin")?;
+            put_usize(out, *shard_end, "end")?;
+            put_str(out, optimizer, "optimizer")?;
+            put_codec(out, *codec);
+        }
+        PsReply::Ok => out.push(RE_OK),
+        PsReply::Row { data, accum } => {
+            out.push(RE_ROW);
+            put_opt_f32s(out, data.as_deref(), "data")?;
+            put_opt_f32s(out, accum.as_deref(), "accum")?;
+        }
+        PsReply::RowsData { rows } => {
+            out.push(RE_ROWS);
+            put_u32(out, len_u32(rows.len(), "rows")?);
+            for row in rows {
+                match row {
+                    None => out.push(0),
+                    Some((data, accum)) => {
+                        out.push(1);
+                        put_f32s(out, data, "data")?;
+                        put_opt_f32s(out, accum.as_deref(), "accum")?;
+                    }
+                }
+            }
+        }
+        PsReply::Segments { segments } => {
+            out.push(RE_SEGMENTS);
+            put_u32(out, len_u32(segments.len(), "segments")?);
+            for s in segments {
+                put_str(out, &s.file, "file")?;
+                put_u32(out, s.branch);
+                put_usize(out, s.range_begin, "range begin")?;
+                put_usize(out, s.range_end, "range end")?;
+                put_usize(out, s.local_shard, "shard")?;
+                put_u64(out, s.rows);
+                put_u64(out, s.bytes);
+                put_u64(out, s.checksum);
+            }
+        }
+        PsReply::Verified { rows } => {
+            out.push(RE_VERIFIED);
+            put_u64(out, *rows);
+        }
+        PsReply::Restored { rows } => {
+            out.push(RE_RESTORED);
+            put_u64(out, *rows);
+        }
+        PsReply::Stats(s) => {
+            out.push(RE_STATS);
+            put_u64(out, s.server.shard_lock_contentions);
+            put_u64(out, s.server.batch_calls);
+            put_u64(out, s.server.batched_rows);
+            put_u64(out, s.server.reads_batched);
+            put_u64(out, s.server.bytes_tx);
+            put_u64(out, s.server.bytes_rx);
+            put_u64(out, s.server.frames_json);
+            put_u64(out, s.server.frames_bin);
+            put_u64(out, s.pool.reused);
+            put_u64(out, s.pool.allocated);
+            put_u64(out, s.pool.idle);
+            put_u64(out, s.pool.idle_len);
+            put_u64(out, s.forks);
+            put_usize(out, s.peak_branches, "peak")?;
+            put_u32(out, len_u32(s.branches.len(), "branches")?);
+            for (id, rows) in &s.branches {
+                put_u32(out, *id);
+                put_usize(out, *rows, "rows")?;
+            }
+        }
+        PsReply::Err { message } => {
+            out.push(RE_ERR);
+            put_str(out, message, "msg")?;
+        }
+    }
+    Ok(())
+}
+
+/// Decode one binary PS reply frame (strict, like [`decode_request`]).
+pub fn decode_reply(buf: &[u8]) -> Result<PsReply> {
+    let mut r = Reader::new(buf);
+    let op = r.u8("opcode")?;
+    let reply = match op {
+        RE_HELLO => PsReply::Hello {
+            shard_begin: r.usize("begin")?,
+            shard_end: r.usize("end")?,
+            optimizer: r.str("optimizer")?,
+            codec: r.codec()?,
+        },
+        RE_OK => PsReply::Ok,
+        RE_ROW => PsReply::Row {
+            data: r.opt_f32s("data")?,
+            accum: r.opt_f32s("accum")?,
+        },
+        RE_ROWS => {
+            let n = r.count(1, "rows")?;
+            let mut rows: Vec<Option<RowData>> = Vec::with_capacity(n);
+            for _ in 0..n {
+                rows.push(match r.u8("row tag")? {
+                    0 => None,
+                    1 => Some((r.f32s("data")?, r.opt_f32s("accum")?)),
+                    b => bail!("bad row tag {b}"),
+                });
+            }
+            PsReply::RowsData { rows }
+        }
+        RE_SEGMENTS => {
+            let n = r.count(49, "segments")?;
+            let mut segments = Vec::with_capacity(n);
+            for _ in 0..n {
+                segments.push(SegmentMeta {
+                    file: r.str("file")?,
+                    branch: r.u32("segment branch")?,
+                    range_begin: r.usize("segment range begin")?,
+                    range_end: r.usize("segment range end")?,
+                    local_shard: r.usize("segment shard")?,
+                    rows: r.u64("segment rows")?,
+                    bytes: r.u64("segment bytes")?,
+                    checksum: r.u64("segment checksum")?,
+                });
+            }
+            PsReply::Segments { segments }
+        }
+        RE_VERIFIED => PsReply::Verified { rows: r.u64("rows")? },
+        RE_RESTORED => PsReply::Restored { rows: r.u64("rows")? },
+        RE_STATS => {
+            let server = ServerStats {
+                shard_lock_contentions: r.u64("contended")?,
+                batch_calls: r.u64("batch_calls")?,
+                batched_rows: r.u64("batched_rows")?,
+                reads_batched: r.u64("reads_batched")?,
+                bytes_tx: r.u64("bytes_tx")?,
+                bytes_rx: r.u64("bytes_rx")?,
+                frames_json: r.u64("frames_json")?,
+                frames_bin: r.u64("frames_bin")?,
+            };
+            let pool = PoolStats {
+                reused: r.u64("reused")?,
+                allocated: r.u64("allocated")?,
+                idle: r.u64("idle")?,
+                idle_len: r.u64("idle_len")?,
+            };
+            let forks = r.u64("forks")?;
+            let peak_branches = r.usize("peak")?;
+            let n = r.count(12, "branches")?;
+            let mut branches = Vec::with_capacity(n);
+            for _ in 0..n {
+                branches.push((r.u32("branch")?, r.usize("rows")?));
+            }
+            PsReply::Stats(PsStats {
+                server,
+                pool,
+                forks,
+                peak_branches,
+                branches,
+            })
+        }
+        RE_ERR => PsReply::Err { message: r.str("msg")? },
+        other => bail!("unknown binary reply opcode {other:#04x}"),
+    };
+    r.finish()?;
+    Ok(reply)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: &PsRequest) {
+        let mut buf = Vec::new();
+        encode_request(req, &mut buf).unwrap();
+        assert!(is_binary_frame(&buf));
+        let back = decode_request(&buf).unwrap_or_else(|e| panic!("{req:?}: {e}"));
+        assert_eq!(req, &back);
+    }
+
+    fn roundtrip_reply(reply: &PsReply) {
+        let mut buf = Vec::new();
+        encode_reply(reply, &mut buf).unwrap();
+        assert!(is_binary_frame(&buf));
+        let back = decode_reply(&buf).unwrap_or_else(|e| panic!("{reply:?}: {e}"));
+        assert_eq!(reply, &back);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        let hyper = Hyper { lr: 0.1, momentum: 0.9 };
+        roundtrip_req(&PsRequest::Hello { codec: WireCodec::Json });
+        roundtrip_req(&PsRequest::Hello { codec: WireCodec::Binary });
+        roundtrip_req(&PsRequest::InsertRow {
+            branch: 0,
+            table: 1,
+            key: 7,
+            data: vec![1.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, 1.0e-45],
+        });
+        roundtrip_req(&PsRequest::ReadRow {
+            branch: 3,
+            table: 0,
+            key: u64::MAX,
+            with_accum: true,
+        });
+        roundtrip_req(&PsRequest::ReadRows {
+            branch: 3,
+            with_accum: true,
+            keys: vec![(0, 7), (1, u64::MAX), (0, 0)],
+        });
+        roundtrip_req(&PsRequest::ReadRows {
+            branch: 0,
+            with_accum: false,
+            keys: vec![],
+        });
+        roundtrip_req(&PsRequest::ApplyUpdate {
+            branch: 1,
+            table: 0,
+            key: 5,
+            grad: vec![0.25, -1.5],
+            hyper,
+            z_old: Some(vec![2.0, 3.0]),
+        });
+        roundtrip_req(&PsRequest::ApplyUpdate {
+            branch: 1,
+            table: 0,
+            key: 5,
+            grad: vec![],
+            hyper,
+            z_old: None,
+        });
+        roundtrip_req(&PsRequest::ApplyBatch {
+            branch: 2,
+            hyper,
+            updates: vec![(0, 1, vec![1.0]), (1, 9, vec![-2.5, 0.125])],
+        });
+        roundtrip_req(&PsRequest::ForkBranch { child: 4, parent: 1 });
+        roundtrip_req(&PsRequest::FreeBranch { branch: 4 });
+        roundtrip_req(&PsRequest::CheckpointBranch {
+            branch: 3,
+            dir: "/tmp/with \"quotes\"\nand → unicode".into(),
+        });
+        roundtrip_req(&PsRequest::VerifyBranch {
+            branch: 7,
+            dir: "/tmp/ck".into(),
+        });
+        roundtrip_req(&PsRequest::RestoreBranch {
+            branch: 0,
+            dir: "relative/dir".into(),
+        });
+        roundtrip_req(&PsRequest::ServerStats);
+        roundtrip_req(&PsRequest::Shutdown);
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        roundtrip_reply(&PsReply::Hello {
+            shard_begin: 2,
+            shard_end: 4,
+            optimizer: "adarevision".into(),
+            codec: WireCodec::Binary,
+        });
+        roundtrip_reply(&PsReply::Ok);
+        roundtrip_reply(&PsReply::Row {
+            data: Some(vec![1.0, f32::NEG_INFINITY, -0.0]),
+            accum: None,
+        });
+        roundtrip_reply(&PsReply::Row { data: None, accum: None });
+        roundtrip_reply(&PsReply::RowsData {
+            rows: vec![
+                Some((vec![1.0, f32::NEG_INFINITY, -0.0], None)),
+                None,
+                Some((vec![], Some(vec![2.5, 1.0e-45]))),
+            ],
+        });
+        roundtrip_reply(&PsReply::RowsData { rows: vec![] });
+        roundtrip_reply(&PsReply::Segments {
+            segments: vec![SegmentMeta {
+                file: "b1-r0-2-s0.seg".into(),
+                branch: 1,
+                range_begin: 0,
+                range_end: 2,
+                local_shard: 0,
+                rows: 17,
+                bytes: 4096,
+                checksum: u64::MAX,
+            }],
+        });
+        roundtrip_reply(&PsReply::Verified { rows: 0 });
+        roundtrip_reply(&PsReply::Restored { rows: 1 << 40 });
+        roundtrip_reply(&PsReply::Stats(PsStats {
+            server: ServerStats {
+                shard_lock_contentions: 3,
+                batch_calls: 10,
+                batched_rows: 640,
+                reads_batched: 4096,
+                bytes_tx: u64::MAX,
+                bytes_rx: 1,
+                frames_json: 2,
+                frames_bin: 3,
+            },
+            pool: PoolStats {
+                reused: 1,
+                allocated: 2,
+                idle: 3,
+                idle_len: 48,
+            },
+            forks: 7,
+            peak_branches: 3,
+            branches: vec![(0, 100), (5, 40)],
+        }));
+        roundtrip_reply(&PsReply::Err {
+            message: "row (0,99) missing in branch 7\nwith \"quotes\"".into(),
+        });
+    }
+
+    #[test]
+    fn nan_bit_patterns_survive() {
+        let weird = [
+            f32::NAN,
+            f32::from_bits(0x7fc0_dead),
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -0.0f32,
+            f32::MIN_POSITIVE,
+            1.0e-45,
+            f32::MAX,
+        ];
+        let req = PsRequest::InsertRow {
+            branch: 0,
+            table: 0,
+            key: 0,
+            data: weird.to_vec(),
+        };
+        let mut buf = Vec::new();
+        encode_request(&req, &mut buf).unwrap();
+        let PsRequest::InsertRow { data, .. } = decode_request(&buf).unwrap() else {
+            panic!("wrong op")
+        };
+        for (a, b) in weird.iter().zip(&data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_is_strict() {
+        // empty frame
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_reply(&[]).is_err());
+        // unknown opcodes (incl. a JSON first byte fed to the binary
+        // decoder) fail cleanly
+        assert!(decode_request(&[0xff]).is_err());
+        assert!(decode_request(b"{\"op\":\"hello\"}").is_err());
+        assert!(decode_reply(&[0x0e]).is_err());
+        // every truncation of a valid frame is an error, never a panic
+        let req = PsRequest::ApplyUpdate {
+            branch: 1,
+            table: 0,
+            key: 5,
+            grad: vec![0.25, -1.5],
+            hyper: Hyper { lr: 0.1, momentum: 0.9 },
+            z_old: Some(vec![2.0]),
+        };
+        let mut buf = Vec::new();
+        encode_request(&req, &mut buf).unwrap();
+        for cut in 0..buf.len() {
+            assert!(decode_request(&buf[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing bytes are rejected too
+        buf.push(0);
+        assert!(decode_request(&buf).is_err());
+        // bad bool / option-tag / codec bytes
+        assert!(decode_request(&[OP_READ, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 2])
+            .is_err());
+        assert!(decode_request(&[OP_HELLO, 9]).is_err());
+        // a forged count larger than the remaining bytes fails before
+        // any allocation proportional to the count
+        let mut rows = vec![RE_ROWS];
+        rows.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_reply(&rows).is_err());
+    }
+
+    #[test]
+    fn frame_dispatch_is_unambiguous() {
+        // JSON bodies start with '{'; binary bodies with an opcode
+        // below 0x20 — is_binary_frame separates them from byte one.
+        assert!(!is_binary_frame(b"{\"op\":\"hello\"}"));
+        assert!(!is_binary_frame(b""));
+        let mut buf = Vec::new();
+        for req in [
+            PsRequest::Hello { codec: WireCodec::Binary },
+            PsRequest::ServerStats,
+            PsRequest::Shutdown,
+        ] {
+            encode_request(&req, &mut buf).unwrap();
+            assert!(is_binary_frame(&buf));
+        }
+    }
+}

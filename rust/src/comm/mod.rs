@@ -25,17 +25,29 @@
 //! Row payloads are f32 bit patterns, so remote runs are bit-identical
 //! to local ones.
 //!
+//! Two codecs encode a data-plane frame body: [`wire`] (one JSON
+//! object per frame — the control-plane, debug, and compatibility
+//! format) and [`binwire`] (fixed little-endian binary layout for the
+//! hot path — raw f32 bit patterns, no decimal formatting, no per-row
+//! allocation).  The codec is negotiated per connection at `Hello`:
+//! old JSON-only peers keep working unchanged, and a frame body's
+//! first byte (`{` vs. a binary opcode `< 0x20`) makes the two
+//! self-distinguishing on the wire.
+//!
 //! Three carriers implement the byte stream:
 //!
-//! * [`wire`] — the frame codec itself (one JSON object per frame),
-//!   shared by every carrier;
 //! * [`transport`] — the in-process broker (mpsc channels) used by the
 //!   simulated multi-worker deployments;
-//! * [`socket`] — real TCP / Unix-domain sockets with line or
-//!   length-prefix framing, carrying both planes between processes
-//!   (the `mltuner serve` / `mltuner tune --ps remote://...`
-//!   deployment, see [`crate::ps::remote`]).
+//! * [`socket`] — real TCP / Unix-domain sockets with line,
+//!   length-prefix, or binary framing, carrying both planes between
+//!   processes (the `mltuner serve` / `mltuner tune --ps remote://...`
+//!   deployment, see [`crate::ps::remote`]);
+//! * [`poll`] — the readiness-driven event loop (`epoll`/`poll(2)`)
+//!   that `mltuner serve` runs sockets under: one poll thread, a
+//!   bounded worker pool, no thread-per-connection.
 
+pub mod binwire;
+pub mod poll;
 pub mod socket;
 pub mod transport;
 pub mod wire;

@@ -1,0 +1,877 @@
+//! Readiness-driven server core: a dependency-light poller (epoll on
+//! Linux, `poll(2)` on other unix) plus the nonblocking event loop
+//! [`ServerCore`] that replaced the shard server's thread-per-
+//! connection model.
+//!
+//! # Thread model — which thread owns which buffer
+//!
+//! One **poll thread** (the caller of [`ServerCore::run`]) owns every
+//! per-connection state machine: the raw [`Stream`], its partial-read
+//! buffer `rbuf`, and its pending-write buffer `wbuf`.  All socket I/O
+//! happens on this thread, nonblocking, driven by readiness events; no
+//! other thread ever touches a socket or a connection buffer.
+//!
+//! A small **worker pool** (O(cores), not O(connections)) executes
+//! decoded requests: the poll thread extracts one complete frame body
+//! from `rbuf`, hands the owned bytes to a worker through an mpsc
+//! channel, and the worker calls [`FrameHandler::on_frame`] — for the
+//! shard server that is decode → `ShardServer::handle` against the
+//! `&self` engine → encode into a fresh reply buffer.  The finished
+//! reply travels back through a completion queue; a byte written to a
+//! self-wake pipe (a `UnixStream::pair`) makes the poller return so
+//! the poll thread can copy the reply into the connection's `wbuf` and
+//! flush as writability allows.  Buffer hand-off is by ownership
+//! transfer (`Vec<u8>` moves through the channels), so no frame bytes
+//! are ever shared between threads.
+//!
+//! Per-connection ordering: a connection with a request in flight
+//! queues further frames (`pending`) instead of dispatching them, so
+//! replies go back in request order even though different connections
+//! execute concurrently on the pool.
+//!
+//! Accept errors never terminate the listener: transient `accept()`
+//! failures (`EMFILE`, aborted handshakes, …) are counted, logged,
+//! and retried after a short backoff — a garbage or failed connection
+//! must not take the server down for the other clients (regression-
+//! tested in `ps::remote`).
+
+#[cfg(unix)]
+use std::collections::{HashMap, VecDeque};
+#[cfg(unix)]
+use std::io::{Read, Write};
+#[cfg(unix)]
+use std::os::unix::io::{AsRawFd, RawFd};
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::AtomicU64;
+#[cfg(unix)]
+use std::sync::atomic::Ordering;
+#[cfg(unix)]
+use std::sync::{mpsc, Mutex, MutexGuard};
+
+#[cfg(unix)]
+use anyhow::{anyhow, bail, Context, Result};
+
+#[cfg(unix)]
+use super::socket::{decode_length_frame, Framing, PsListener, Stream, MAX_FRAME_LEN};
+
+/// Transport-level counters owned by whoever runs a [`ServerCore`]
+/// (the shard server), readable concurrently while the loop runs —
+/// this is what feeds `bytes_tx`/`bytes_rx` in `ServerStats`.
+#[derive(Debug, Default)]
+pub struct CoreMetrics {
+    /// Wire bytes written (headers + payloads).
+    pub bytes_tx: AtomicU64,
+    /// Wire bytes read.
+    pub bytes_rx: AtomicU64,
+    /// Connections accepted over the core's lifetime.
+    pub conns_accepted: AtomicU64,
+    /// Peak simultaneously-open connections.
+    pub peak_conns: AtomicU64,
+    /// `accept()` errors survived (log-and-continue with backoff).
+    pub accept_errors: AtomicU64,
+    /// Size of the worker pool (set once at startup; the O(pool)
+    /// bound the thread-count acceptance test asserts).
+    pub workers: AtomicU64,
+}
+
+/// One executed request's outcome, produced by a worker thread.
+#[cfg(unix)]
+pub struct FrameResult {
+    /// Encoded reply frame body (framing header added by the poll
+    /// thread).
+    pub reply: Vec<u8>,
+    /// Flush the reply, then stop accepting and exit the event loop.
+    pub shutdown: bool,
+}
+
+/// What a [`ServerCore`] serves: one complete frame body in, one
+/// reply body out.  Called on worker-pool threads, concurrently
+/// across connections — implementations dispatch against `&self`.
+#[cfg(unix)]
+pub trait FrameHandler: Sync {
+    fn on_frame(&self, body: Vec<u8>) -> FrameResult;
+}
+
+#[cfg(unix)]
+fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    // a poisoned queue only means another worker panicked mid-push;
+    // the data is a plain VecDeque/Receiver and stays usable
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(unix)]
+fn as_u64(n: usize) -> u64 {
+    u64::try_from(n).unwrap_or(u64::MAX)
+}
+
+// ---------------------------------------------------------------------------
+// Poller: epoll (Linux) / poll(2) (other unix)
+// ---------------------------------------------------------------------------
+
+/// One readiness event: `token` is the caller's registration key.
+#[cfg(unix)]
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Hand-declared epoll FFI against the system libc — no crates.
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLOUT: u32 = 0x4;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLL_CLOEXEC: i32 = 0x80000;
+
+    /// `struct epoll_event`; packed on x86_64 (the kernel ABI),
+    /// naturally aligned elsewhere.
+    #[derive(Clone, Copy)]
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, evs: *mut EpollEvent, max: i32, timeout_ms: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    //! Hand-declared `poll(2)` FFI for the non-Linux unix fallback.
+    pub const POLLIN: i16 = 0x1;
+    pub const POLLOUT: i16 = 0x4;
+
+    #[derive(Clone, Copy)]
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: std::os::raw::c_ulong, timeout: i32) -> i32;
+    }
+}
+
+/// Level-triggered readiness poller over raw fds.
+///
+/// Linux: one `epoll` instance, `O(ready)` wakeups.  Other unix: a
+/// registration table swept through `poll(2)` per wait.  Both expose
+/// the same tiny API, which is all the event loop needs.
+#[cfg(target_os = "linux")]
+pub struct Poller {
+    epfd: RawFd,
+    /// Reused kernel-event buffer (one syscall writes into it).
+    ebuf: Vec<sys::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub fn new() -> Result<Poller> {
+        // SAFETY: plain syscall, no pointers.
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(anyhow!(std::io::Error::last_os_error()).context("epoll_create1"));
+        }
+        Ok(Poller {
+            epfd,
+            ebuf: vec![sys::EpollEvent { events: 0, data: 0 }; 256],
+        })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()> {
+        let mut ev = sys::EpollEvent {
+            events: interest_bits(readable, writable),
+            data: token,
+        };
+        let evp: *mut sys::EpollEvent = if op == sys::EPOLL_CTL_DEL {
+            std::ptr::null_mut()
+        } else {
+            &mut ev
+        };
+        // SAFETY: evp is null (DEL) or points at a live EpollEvent.
+        let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, evp) };
+        if rc < 0 {
+            return Err(anyhow!(std::io::Error::last_os_error()).context("epoll_ctl"));
+        }
+        Ok(())
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, read, write)
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, read, write)
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, false, false)
+    }
+
+    /// Block until at least one registered fd is ready (`timeout_ms <
+    /// 0` = forever); ready events are appended to `out` (cleared
+    /// first).
+    pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> Result<()> {
+        out.clear();
+        let max = i32::try_from(self.ebuf.len()).unwrap_or(i32::MAX);
+        // SAFETY: ebuf is a live buffer of `max` EpollEvents.
+        let n = unsafe { sys::epoll_wait(self.epfd, self.ebuf.as_mut_ptr(), max, timeout_ms) };
+        if n < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(anyhow!(err).context("epoll_wait"));
+        }
+        let n = usize::try_from(n).unwrap_or(0);
+        for ev in self.ebuf.iter().take(n) {
+            // copy out of the (possibly packed) struct before use
+            let bits = ev.events;
+            let token = ev.data;
+            // errors/hangups surface as both: the conn does I/O and
+            // observes the failure there
+            let trouble = sys::EPOLLERR | sys::EPOLLHUP;
+            out.push(Event {
+                token,
+                readable: (bits & (sys::EPOLLIN | trouble)) != 0,
+                writable: (bits & (sys::EPOLLOUT | trouble)) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn interest_bits(readable: bool, writable: bool) -> u32 {
+    let mut bits = 0;
+    if readable {
+        bits |= sys::EPOLLIN;
+    }
+    if writable {
+        bits |= sys::EPOLLOUT;
+    }
+    bits
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Poller {
+    fn drop(&mut self) {
+        // SAFETY: epfd came from epoll_create1 and is closed once.
+        unsafe { sys::close(self.epfd) };
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+pub struct Poller {
+    /// (fd, token, readable, writable) registration table.
+    regs: Vec<(RawFd, u64, bool, bool)>,
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+impl Poller {
+    pub fn new() -> Result<Poller> {
+        Ok(Poller { regs: Vec::new() })
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> Result<()> {
+        if self.regs.iter().any(|(f, ..)| *f == fd) {
+            bail!("fd {fd} already registered");
+        }
+        self.regs.push((fd, token, read, write));
+        Ok(())
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> Result<()> {
+        for r in &mut self.regs {
+            if r.0 == fd {
+                *r = (fd, token, read, write);
+                return Ok(());
+            }
+        }
+        bail!("fd {fd} not registered")
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> Result<()> {
+        self.regs.retain(|(f, ..)| *f != fd);
+        Ok(())
+    }
+
+    pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> Result<()> {
+        out.clear();
+        let mut fds: Vec<sys::PollFd> = self
+            .regs
+            .iter()
+            .map(|(fd, _, readable, writable)| {
+                let mut events = 0;
+                if *readable {
+                    events |= sys::POLLIN;
+                }
+                if *writable {
+                    events |= sys::POLLOUT;
+                }
+                sys::PollFd { fd: *fd, events, revents: 0 }
+            })
+            .collect();
+        let nfds = std::os::raw::c_ulong::try_from(fds.len())
+            .map_err(|_| anyhow!("too many fds ({})", fds.len()))?;
+        // SAFETY: fds is a live array of nfds PollFds.
+        let n = unsafe { sys::poll(fds.as_mut_ptr(), nfds, timeout_ms) };
+        if n < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(anyhow!(err).context("poll"));
+        }
+        for (pfd, (_, token, ..)) in fds.iter().zip(&self.regs) {
+            if pfd.revents != 0 {
+                // POLLERR/POLLHUP/POLLNVAL surface as both directions
+                let trouble = pfd.revents & !(sys::POLLIN | sys::POLLOUT) != 0;
+                out.push(Event {
+                    token: *token,
+                    readable: trouble || (pfd.revents & sys::POLLIN) != 0,
+                    writable: trouble || (pfd.revents & sys::POLLOUT) != 0,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ServerCore: the event loop
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+const TOKEN_LISTENER: u64 = 0;
+#[cfg(unix)]
+const TOKEN_WAKE: u64 = 1;
+#[cfg(unix)]
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Per-connection state machine, owned exclusively by the poll thread.
+#[cfg(unix)]
+struct ConnState {
+    stream: Stream,
+    /// Bytes read but not yet framed (partial frames accumulate here).
+    rbuf: Vec<u8>,
+    /// Framed reply bytes not yet written; `wpos` is the write cursor.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// A request from this connection is on the worker pool.
+    busy: bool,
+    /// Frames decoded while busy — dispatched one at a time to keep
+    /// per-connection request/reply ordering.
+    pending: VecDeque<Vec<u8>>,
+    /// Peer half-closed (EOF read); drain outstanding work then drop.
+    eof: bool,
+    /// Unrecoverable I/O or framing error; drop at the next sweep.
+    dead: bool,
+    /// Currently registered for writability (epoll interest cache).
+    want_write: bool,
+}
+
+#[cfg(unix)]
+impl ConnState {
+    fn new(stream: Stream) -> ConnState {
+        ConnState {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            busy: false,
+            pending: VecDeque::new(),
+            eof: false,
+            dead: false,
+            want_write: false,
+        }
+    }
+
+    fn flushed(&self) -> bool {
+        self.wpos == self.wbuf.len()
+    }
+
+    /// Drained and idle: safe to drop after peer EOF.
+    fn finished(&self) -> bool {
+        self.eof && self.flushed() && !self.busy && self.pending.is_empty()
+    }
+}
+
+/// Extract one complete frame body from the front of `rbuf`.
+/// `Ok(None)` = need more bytes; errors are unrecoverable framing
+/// garbage (close the connection).
+#[cfg(unix)]
+fn extract_frame(framing: Framing, rbuf: &[u8]) -> Result<Option<(Vec<u8>, usize)>> {
+    match framing {
+        Framing::Line => match rbuf.iter().position(|b| *b == b'\n') {
+            None if rbuf.len() > MAX_FRAME_LEN => bail!("line frame exceeds {MAX_FRAME_LEN}"),
+            None => Ok(None),
+            Some(i) => {
+                let mut end = i;
+                while end > 0 && rbuf[end - 1] == b'\r' {
+                    end -= 1;
+                }
+                Ok(Some((rbuf[..end].to_vec(), i + 1)))
+            }
+        },
+        Framing::Length | Framing::Binary => decode_length_frame(rbuf),
+    }
+}
+
+/// Append one framed reply to `wbuf`.
+#[cfg(unix)]
+fn frame_reply(framing: Framing, body: &[u8], wbuf: &mut Vec<u8>) -> Result<()> {
+    match framing {
+        Framing::Line => {
+            if body.contains(&b'\n') {
+                bail!("line framing cannot carry embedded newlines");
+            }
+            wbuf.extend_from_slice(body);
+            wbuf.push(b'\n');
+        }
+        Framing::Length | Framing::Binary => {
+            if body.len() > MAX_FRAME_LEN {
+                bail!("frame length {} exceeds maximum {MAX_FRAME_LEN}", body.len());
+            }
+            let len = u32::try_from(body.len())
+                .map_err(|_| anyhow!("frame length {} exceeds u32", body.len()))?;
+            wbuf.extend_from_slice(&len.to_be_bytes());
+            wbuf.extend_from_slice(body);
+        }
+    }
+    Ok(())
+}
+
+/// The readiness-driven replacement for thread-per-connection serving:
+/// one poll thread owns all sockets and buffers, `workers` threads
+/// execute requests.  See the module docs for the full thread model.
+#[cfg(unix)]
+pub struct ServerCore<'a, H: FrameHandler> {
+    pub listener: PsListener,
+    pub framing: Framing,
+    pub handler: &'a H,
+    pub metrics: &'a CoreMetrics,
+    /// Worker-pool size; clamped to at least 1.
+    pub workers: usize,
+}
+
+/// Default worker-pool size: the machine's parallelism, clamped to
+/// [2, 8] — request execution is lock-bound on the shard engine, so
+/// more threads than that only adds convoying.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8)
+}
+
+#[cfg(unix)]
+impl<H: FrameHandler> ServerCore<'_, H> {
+    /// Run the event loop until a handler asks for shutdown (its reply
+    /// is flushed first) or the poller fails fatally.  Accept errors
+    /// are survived; connection errors only drop that connection.
+    pub fn run(self) -> Result<()> {
+        let ServerCore {
+            listener,
+            framing,
+            handler,
+            metrics,
+            workers,
+        } = self;
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let mut poller = Poller::new()?;
+        poller.register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)?;
+        let (mut wake_rx, wake_tx) = UnixStream::pair().context("wake pipe")?;
+        wake_rx.set_nonblocking(true)?;
+        wake_tx.set_nonblocking(true)?;
+        poller.register(wake_rx.as_raw_fd(), TOKEN_WAKE, true, false)?;
+
+        let nworkers = workers.max(1);
+        metrics.workers.store(as_u64(nworkers), Ordering::Relaxed);
+        let (jobs_tx, jobs_rx) = mpsc::channel::<(u64, Vec<u8>)>();
+        let jobs_rx = Mutex::new(jobs_rx);
+        let completions: Mutex<VecDeque<(u64, FrameResult)>> = Mutex::new(VecDeque::new());
+
+        std::thread::scope(|scope| -> Result<()> {
+            for _ in 0..nworkers {
+                let jobs_rx = &jobs_rx;
+                let completions = &completions;
+                let mut wake = wake_tx.try_clone().context("cloning wake pipe")?;
+                scope.spawn(move || loop {
+                    // holding the lock only across recv: one idle
+                    // worker blocks here, the rest queue on the mutex
+                    let job = lock(jobs_rx).recv();
+                    let Ok((token, body)) = job else { break };
+                    let result = handler.on_frame(body);
+                    lock(completions).push_back((token, result));
+                    // a full pipe already guarantees a pending wakeup
+                    let _ = wake.write(&[1u8]);
+                });
+            }
+
+            let mut conns: HashMap<u64, ConnState> = HashMap::new();
+            let mut events: Vec<Event> = Vec::new();
+            let mut scratch = vec![0u8; 64 * 1024];
+            let mut next_token = FIRST_CONN_TOKEN;
+            let mut accepting = true;
+            // token of the connection owed the shutdown ack
+            let mut shutting: Option<u64> = None;
+            let mut accept_backoff_ms: u64 = 1;
+
+            loop {
+                poller.wait(&mut events, -1)?;
+                for ev in events.drain(..) {
+                    match ev.token {
+                        TOKEN_LISTENER if accepting => loop {
+                            match listener.accept_stream() {
+                                Ok(stream) => {
+                                    accept_backoff_ms = 1;
+                                    if stream.set_nonblocking(true).is_err() {
+                                        continue;
+                                    }
+                                    let token = next_token;
+                                    next_token += 1;
+                                    if poller
+                                        .register(stream.as_raw_fd(), token, true, false)
+                                        .is_err()
+                                    {
+                                        continue;
+                                    }
+                                    conns.insert(token, ConnState::new(stream));
+                                    metrics.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                                    let live = as_u64(conns.len());
+                                    metrics.peak_conns.fetch_max(live, Ordering::Relaxed);
+                                }
+                                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                                Err(e) => {
+                                    // transient accept failure (EMFILE,
+                                    // aborted handshake, …): log, back
+                                    // off briefly, keep listening — it
+                                    // must never take the server down
+                                    metrics.accept_errors.fetch_add(1, Ordering::Relaxed);
+                                    eprintln!("mltuner serve: accept error (retrying): {e}");
+                                    std::thread::sleep(std::time::Duration::from_millis(
+                                        accept_backoff_ms,
+                                    ));
+                                    accept_backoff_ms = (accept_backoff_ms * 2).min(100);
+                                    break;
+                                }
+                            }
+                        },
+                        TOKEN_LISTENER => {}
+                        TOKEN_WAKE => {
+                            // drain the wake pipe; completions are
+                            // swept below regardless
+                            while let Ok(n) = wake_rx.read(&mut scratch) {
+                                if n == 0 {
+                                    break;
+                                }
+                            }
+                        }
+                        token => {
+                            let Some(conn) = conns.get_mut(&token) else {
+                                continue;
+                            };
+                            if ev.readable {
+                                read_conn(conn, &mut scratch, metrics);
+                                extract_and_dispatch(conn, token, framing, &jobs_tx);
+                            }
+                            if ev.writable {
+                                flush_conn(conn, metrics);
+                            }
+                        }
+                    }
+                }
+
+                // completions: frame replies, kick pending work
+                loop {
+                    let Some((token, result)) = lock(&completions).pop_front() else {
+                        break;
+                    };
+                    if result.shutdown && shutting.is_none() {
+                        accepting = false;
+                        let _ = poller.deregister(listener.as_raw_fd());
+                        shutting = Some(token);
+                    }
+                    let Some(conn) = conns.get_mut(&token) else {
+                        continue; // connection died while we worked
+                    };
+                    if frame_reply(framing, &result.reply, &mut conn.wbuf).is_err() {
+                        conn.dead = true;
+                    } else {
+                        flush_conn(conn, metrics);
+                    }
+                    match conn.pending.pop_front() {
+                        Some(body) if !conn.dead => {
+                            let _ = jobs_tx.send((token, body));
+                        }
+                        _ => conn.busy = false,
+                    }
+                }
+
+                // reconcile epoll write interest with buffer state
+                for (token, conn) in &mut conns {
+                    let want = !conn.flushed() && !conn.dead;
+                    if want != conn.want_write {
+                        conn.want_write = want;
+                        if poller
+                            .modify(conn.stream.as_raw_fd(), *token, true, want)
+                            .is_err()
+                        {
+                            conn.dead = true;
+                        }
+                    }
+                }
+
+                // sweep dead and drained-after-EOF connections
+                let drop_tokens: Vec<u64> = conns
+                    .iter()
+                    .filter(|(_, c)| c.dead || c.finished())
+                    .map(|(t, _)| *t)
+                    .collect();
+                for token in drop_tokens {
+                    if let Some(conn) = conns.remove(&token) {
+                        let _ = poller.deregister(conn.stream.as_raw_fd());
+                    }
+                }
+
+                if let Some(token) = shutting {
+                    match conns.get(&token) {
+                        // ack flushed (or its connection vanished):
+                        // the server's work is done
+                        None => break,
+                        Some(conn) if conn.flushed() && !conn.busy => break,
+                        Some(_) => {}
+                    }
+                }
+            }
+            drop(jobs_tx); // workers see the hangup and exit
+            Ok(())
+        })
+    }
+}
+
+/// Nonblocking read into `rbuf` until `WouldBlock`/EOF/error.
+#[cfg(unix)]
+fn read_conn(conn: &mut ConnState, scratch: &mut [u8], metrics: &CoreMetrics) {
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                conn.eof = true;
+                break;
+            }
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&scratch[..n]);
+                metrics.bytes_rx.fetch_add(as_u64(n), Ordering::Relaxed);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Frame out everything `rbuf` holds; dispatch the first frame if the
+/// connection is idle, queue the rest.
+#[cfg(unix)]
+fn extract_and_dispatch(
+    conn: &mut ConnState,
+    token: u64,
+    framing: Framing,
+    jobs_tx: &mpsc::Sender<(u64, Vec<u8>)>,
+) {
+    if conn.dead {
+        return;
+    }
+    loop {
+        match extract_frame(framing, &conn.rbuf) {
+            Ok(None) => break,
+            Ok(Some((body, consumed))) => {
+                conn.rbuf.drain(..consumed);
+                if conn.busy {
+                    conn.pending.push_back(body);
+                } else {
+                    conn.busy = true;
+                    let _ = jobs_tx.send((token, body));
+                }
+            }
+            Err(_) => {
+                // unframeable garbage (oversized header): the stream
+                // can never resynchronize — drop this connection only
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Write as much of `wbuf` as the socket accepts right now.
+#[cfg(unix)]
+fn flush_conn(conn: &mut ConnState, metrics: &CoreMetrics) {
+    while conn.wpos < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => {
+                conn.wpos += n;
+                metrics.bytes_tx.fetch_add(as_u64(n), Ordering::Relaxed);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    if conn.flushed() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use crate::comm::socket::SocketSpec;
+
+    #[test]
+    fn poller_reports_readability() {
+        let mut poller = Poller::new().unwrap();
+        let (mut a, mut b) = UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        poller.register(b.as_raw_fd(), 7, true, false).unwrap();
+        let mut events = Vec::new();
+        // nothing readable yet: a zero timeout returns empty
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.iter().all(|e| e.token != 7 || !e.readable));
+        a.write_all(b"x").unwrap();
+        poller.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+        let mut buf = [0u8; 8];
+        let n = b.read(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"x");
+        poller.deregister(b.as_raw_fd()).unwrap();
+    }
+
+    /// Uppercases every frame; shuts down on the frame "stop".
+    struct Shout;
+    impl FrameHandler for Shout {
+        fn on_frame(&self, body: Vec<u8>) -> FrameResult {
+            let shutdown = body == b"stop";
+            FrameResult {
+                reply: body.to_ascii_uppercase(),
+                shutdown,
+            }
+        }
+    }
+
+    fn run_core(framing: Framing) -> (SocketSpec, std::thread::JoinHandle<()>) {
+        let listener = PsListener::bind(&SocketSpec::parse("127.0.0.1:0").unwrap()).unwrap();
+        let spec = listener.local_spec().unwrap();
+        let handle = std::thread::spawn(move || {
+            let metrics = CoreMetrics::default();
+            ServerCore {
+                listener,
+                framing,
+                handler: &Shout,
+                metrics: &metrics,
+                workers: 2,
+            }
+            .run()
+            .unwrap();
+            assert!(metrics.bytes_rx.load(Ordering::Relaxed) > 0);
+            assert!(metrics.bytes_tx.load(Ordering::Relaxed) > 0);
+        });
+        (spec, handle)
+    }
+
+    #[test]
+    fn event_loop_serves_concurrent_connections() {
+        for framing in [Framing::Line, Framing::Length, Framing::Binary] {
+            let (spec, handle) = run_core(framing);
+            let clients: Vec<_> = (0..8)
+                .map(|i| {
+                    let spec = spec.clone();
+                    std::thread::spawn(move || {
+                        let mut conn = spec.connect(framing).unwrap();
+                        for round in 0..5 {
+                            let msg = format!("c{i}r{round}");
+                            conn.send(&msg).unwrap();
+                            assert_eq!(conn.recv_expect().unwrap(), msg.to_uppercase());
+                        }
+                    })
+                })
+                .collect();
+            for c in clients {
+                c.join().unwrap();
+            }
+            let mut conn = spec.connect(framing).unwrap();
+            conn.send("stop").unwrap();
+            assert_eq!(conn.recv_expect().unwrap(), "STOP");
+            handle.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn garbage_connection_does_not_break_other_clients() {
+        let (spec, handle) = run_core(Framing::Binary);
+        // a client that sends an unframeable 4 GiB length header gets
+        // dropped without disturbing anyone else
+        let mut garbage = spec.connect(Framing::Binary).unwrap();
+        garbage.send_bytes(b"fine before the garbage").unwrap();
+        assert!(garbage.recv_bytes().unwrap().is_some());
+        {
+            // raw stream write: bypass Conn's header discipline
+            let mut raw = match &spec {
+                SocketSpec::Tcp(addr) => std::net::TcpStream::connect(addr).unwrap(),
+                SocketSpec::Unix(_) => unreachable!(),
+            };
+            raw.write_all(&[0xff, 0xff, 0xff, 0xff, 1, 2, 3]).unwrap();
+            // server drops us; reading eventually sees EOF/reset
+        }
+        let mut ok = spec.connect(Framing::Binary).unwrap();
+        ok.send("still works").unwrap();
+        assert_eq!(ok.recv_expect().unwrap(), "STILL WORKS");
+        ok.send("stop").unwrap();
+        assert_eq!(ok.recv_expect().unwrap(), "STOP");
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn pipelined_frames_reply_in_order() {
+        let (spec, handle) = run_core(Framing::Length);
+        let mut conn = spec.connect(Framing::Length).unwrap();
+        // fire a burst without reading: replies must come back in
+        // request order (per-conn pending queue)
+        for i in 0..20 {
+            conn.send(&format!("burst{i}")).unwrap();
+        }
+        for i in 0..20 {
+            assert_eq!(conn.recv_expect().unwrap(), format!("BURST{i}"));
+        }
+        conn.send("stop").unwrap();
+        assert_eq!(conn.recv_expect().unwrap(), "STOP");
+        handle.join().unwrap();
+    }
+}

@@ -13,6 +13,13 @@
 //!   framing the truncation/garbage tests exercise: a frame whose
 //!   header promises more bytes than [`MAX_FRAME_LEN`] is rejected
 //!   outright instead of allocating unboundedly.
+//! * [`Framing::Binary`] — the same 4-byte big-endian outer header as
+//!   `Length`, but the frame *body* may carry either a JSON text frame
+//!   or a [`super::binwire`] binary frame; the receiver dispatches on
+//!   the body's first byte (JSON starts with `{`, binary opcodes are
+//!   all below `0x20`).  This is what lets codec negotiation ride a
+//!   plain-JSON `Hello` over the same connection that then switches to
+//!   binary data-plane frames.
 //!
 //! Addresses are parsed by [`SocketSpec`]: `host:port`,
 //! `tcp://host:port`, or `unix:/path/to.sock`.  A client-side server
@@ -121,6 +128,11 @@ pub enum Framing {
     #[default]
     Line,
     Length,
+    /// Length-framed bodies that may be JSON *or* `binwire` binary
+    /// frames, dispatched per frame on the body's first byte.  The
+    /// data-plane codec itself is negotiated at `Hello`
+    /// (`wire::WireCodec`).
+    Binary,
 }
 
 impl Framing {
@@ -128,7 +140,8 @@ impl Framing {
         match s {
             "line" => Ok(Framing::Line),
             "length" => Ok(Framing::Length),
-            other => bail!("unknown framing {other:?} (want line|length)"),
+            "binary" => Ok(Framing::Binary),
+            other => bail!("unknown framing {other:?} (want line|length|binary)"),
         }
     }
 
@@ -136,6 +149,7 @@ impl Framing {
         match self {
             Framing::Line => "line",
             Framing::Length => "length",
+            Framing::Binary => "binary",
         }
     }
 }
@@ -219,19 +233,31 @@ impl Conn {
                 }
                 self.writer.write_all(payload.as_bytes())?;
                 self.writer.write_all(b"\n")?;
+                self.writer.flush()?;
+                Ok(())
             }
-            Framing::Length => {
+            Framing::Length | Framing::Binary => self.send_bytes(payload.as_bytes()),
+        }
+    }
+
+    /// Send one raw frame body (the binary data plane).  Only the
+    /// self-delimiting framings can carry arbitrary bytes; asking line
+    /// framing to is a protocol bug, not a truncation.
+    pub fn send_bytes(&mut self, payload: &[u8]) -> Result<()> {
+        match self.framing {
+            Framing::Line => bail!("line framing cannot carry binary frames"),
+            Framing::Length | Framing::Binary => {
                 if payload.len() > MAX_FRAME_LEN {
                     bail!("frame length {} exceeds maximum {MAX_FRAME_LEN}", payload.len());
                 }
                 let len = u32::try_from(payload.len())
                     .map_err(|_| anyhow!("frame length {} exceeds u32", payload.len()))?;
                 self.writer.write_all(&len.to_be_bytes())?;
-                self.writer.write_all(payload.as_bytes())?;
+                self.writer.write_all(payload)?;
+                self.writer.flush()?;
+                Ok(())
             }
         }
-        self.writer.flush()?;
-        Ok(())
     }
 
     /// Receive one frame; `Ok(None)` on clean EOF at a frame boundary.
@@ -248,7 +274,21 @@ impl Conn {
                 }
                 Ok(Some(line))
             }
-            Framing::Length => {
+            Framing::Length | Framing::Binary => match self.recv_bytes()? {
+                None => Ok(None),
+                Some(payload) => String::from_utf8(payload)
+                    .map(Some)
+                    .map_err(|_| anyhow!("frame is not utf-8")),
+            },
+        }
+    }
+
+    /// Receive one raw frame body; `Ok(None)` on clean EOF at a frame
+    /// boundary.  Line framing cannot delimit arbitrary bytes.
+    pub fn recv_bytes(&mut self) -> Result<Option<Vec<u8>>> {
+        match self.framing {
+            Framing::Line => bail!("line framing cannot carry binary frames"),
+            Framing::Length | Framing::Binary => {
                 let mut header = [0u8; 4];
                 match self.reader.read_exact(&mut header) {
                     Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
@@ -266,9 +306,7 @@ impl Conn {
                 self.reader
                     .read_exact(&mut payload)
                     .context("truncated frame")?;
-                String::from_utf8(payload)
-                    .map(Some)
-                    .map_err(|_| anyhow!("frame is not utf-8"))
+                Ok(Some(payload))
             }
         }
     }
@@ -300,6 +338,64 @@ impl Conn {
         match self.recv()? {
             None => Ok(None),
             Some(line) => Ok(Some(decode_system_msg(&line)?)),
+        }
+    }
+}
+
+/// One accepted byte stream in its raw, unbuffered form — what the
+/// readiness-driven server loop (`comm::poll`) drives nonblocking,
+/// with its own per-connection buffers instead of `BufReader`/
+/// `BufWriter`.
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    pub fn set_nonblocking(&self, nonblocking: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nonblocking),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(nonblocking),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(unix)]
+impl std::os::unix::io::AsRawFd for Stream {
+    fn as_raw_fd(&self) -> std::os::unix::io::RawFd {
+        match self {
+            Stream::Tcp(s) => s.as_raw_fd(),
+            Stream::Unix(s) => s.as_raw_fd(),
         }
     }
 }
@@ -357,6 +453,42 @@ impl PsListener {
             }
         }
     }
+
+    /// Accept the next connection as a raw [`Stream`] — the form the
+    /// event loop wants.  Returns `std::io::Error` unwrapped so a
+    /// nonblocking listener's `WouldBlock` stays matchable.
+    pub fn accept_stream(&self) -> std::io::Result<Stream> {
+        match self {
+            PsListener::Tcp(l) => {
+                let (stream, _) = l.accept()?;
+                stream.set_nodelay(true)?;
+                Ok(Stream::Tcp(stream))
+            }
+            #[cfg(unix)]
+            PsListener::Unix(l, _) => {
+                let (stream, _) = l.accept()?;
+                Ok(Stream::Unix(stream))
+            }
+        }
+    }
+
+    pub fn set_nonblocking(&self, nonblocking: bool) -> std::io::Result<()> {
+        match self {
+            PsListener::Tcp(l) => l.set_nonblocking(nonblocking),
+            #[cfg(unix)]
+            PsListener::Unix(l, _) => l.set_nonblocking(nonblocking),
+        }
+    }
+}
+
+#[cfg(unix)]
+impl std::os::unix::io::AsRawFd for PsListener {
+    fn as_raw_fd(&self) -> std::os::unix::io::RawFd {
+        match self {
+            PsListener::Tcp(l) => l.as_raw_fd(),
+            PsListener::Unix(l, _) => l.as_raw_fd(),
+        }
+    }
 }
 
 #[cfg(unix)]
@@ -406,6 +538,62 @@ mod tests {
     fn tcp_length_framing_roundtrip() {
         let (l, spec) = ephemeral_tcp();
         echo_roundtrip(l, spec, Framing::Length);
+    }
+
+    #[test]
+    fn tcp_binary_framing_roundtrip() {
+        // text frames ride binary framing unchanged (that is how the
+        // JSON Hello negotiates before any binary frame flows)
+        let (l, spec) = ephemeral_tcp();
+        echo_roundtrip(l, spec, Framing::Binary);
+    }
+
+    #[test]
+    fn binary_framing_carries_raw_bytes() {
+        let (listener, spec) = ephemeral_tcp();
+        let server = std::thread::spawn(move || {
+            let mut conn = listener.accept(Framing::Binary).unwrap();
+            while let Some(frame) = conn.recv_bytes().unwrap() {
+                let mut echoed = frame;
+                echoed.reverse();
+                conn.send_bytes(&echoed).unwrap();
+            }
+        });
+        let mut conn = spec.connect(Framing::Binary).unwrap();
+        // non-UTF-8, NULs, 0xff — anything length framing delimits
+        let payloads: [&[u8]; 3] = [&[0x01, 0xff, 0x00, 0x80], &[], &[0x7b, 0x00]];
+        for payload in payloads {
+            conn.send_bytes(payload).unwrap();
+            let mut want = payload.to_vec();
+            want.reverse();
+            assert_eq!(conn.recv_bytes().unwrap().unwrap(), want);
+        }
+        drop(conn);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn line_framing_rejects_byte_frames() {
+        let (listener, spec) = ephemeral_tcp();
+        let _server = std::thread::spawn(move || {
+            let _conn = listener.accept(Framing::Line);
+        });
+        let mut conn = spec.connect(Framing::Line).unwrap();
+        assert!(conn.send_bytes(&[1, 2, 3]).is_err());
+        assert!(conn.recv_bytes().is_err());
+    }
+
+    #[test]
+    fn framing_parses_all_three() {
+        for (s, f) in [
+            ("line", Framing::Line),
+            ("length", Framing::Length),
+            ("binary", Framing::Binary),
+        ] {
+            assert_eq!(Framing::parse(s).unwrap(), f);
+            assert_eq!(f.name(), s);
+        }
+        assert!(Framing::parse("msgpack").is_err());
     }
 
     #[cfg(unix)]

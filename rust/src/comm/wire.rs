@@ -46,6 +46,32 @@ use crate::util::json::Json;
 
 use super::{BranchId, BranchType, SystemMsg, TunerMsg};
 
+/// Payload codec for the PS data plane, negotiated at `Hello`.
+///
+/// The client advertises the codec it wants in [`PsRequest::Hello`];
+/// the server echoes the codec it will actually speak in
+/// [`PsReply::Hello`].  [`WireCodec::Json`] is the default and the
+/// only codec old peers know — its `Hello` frames carry no `codec`
+/// field at all, so negotiation is invisible to them.
+/// [`WireCodec::Binary`] selects the fixed little-endian frames of
+/// [`super::binwire`] for the data plane; JSON remains the
+/// control-plane and debug format either way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireCodec {
+    #[default]
+    Json,
+    Binary,
+}
+
+impl WireCodec {
+    pub fn name(self) -> &'static str {
+        match self {
+            WireCodec::Json => "json",
+            WireCodec::Binary => "binary",
+        }
+    }
+}
+
 /// Encode one tuner message as a single JSON line.
 pub fn encode_tuner_msg(msg: &TunerMsg) -> String {
     match msg {
@@ -207,8 +233,11 @@ pub fn decode_system_msg(line: &str) -> Result<SystemMsg> {
 #[derive(Debug, Clone, PartialEq)]
 pub enum PsRequest {
     /// Handshake: which global shards does this server own, and with
-    /// which optimizer was its engine built?
-    Hello,
+    /// which optimizer was its engine built?  `codec` advertises the
+    /// data-plane payload codec the client wants; servers that predate
+    /// the field simply never echo it back, which the client treats as
+    /// a JSON-only peer.
+    Hello { codec: WireCodec },
     /// Install a fresh row (root-branch model initialization).
     InsertRow {
         branch: BranchId,
@@ -296,6 +325,11 @@ pub enum PsReply {
         shard_begin: usize,
         shard_end: usize,
         optimizer: String,
+        /// The codec the server will speak on this connection.  A
+        /// server only acks [`WireCodec::Binary`] when it was started
+        /// with binary framing; anything else (including a pre-codec
+        /// server that omits the field entirely) means JSON.
+        codec: WireCodec,
     },
     Ok,
     Row {
@@ -382,6 +416,20 @@ fn push_hyper(out: &mut String, hyper: Hyper) {
     );
 }
 
+/// Decode the optional `codec` field of a `Hello` frame: absent means
+/// JSON (every pre-codec peer), unknown codec names are an error
+/// rather than a silent downgrade.
+fn codec_of(v: &Json) -> Result<WireCodec> {
+    match v.get("codec") {
+        None => Ok(WireCodec::Json),
+        Some(c) => match c.as_str() {
+            Some("json") => Ok(WireCodec::Json),
+            Some("binary") => Ok(WireCodec::Binary),
+            other => bail!("bad codec {other:?}"),
+        },
+    }
+}
+
 fn hyper_of(v: &Json) -> Result<Hyper> {
     Ok(Hyper {
         lr: num_f32_bits(field(v, "lr")?, "lr")?,
@@ -393,7 +441,10 @@ fn hyper_of(v: &Json) -> Result<Hyper> {
 pub fn encode_ps_request(req: &PsRequest) -> String {
     let mut out = String::new();
     match req {
-        PsRequest::Hello => out.push_str("{\"op\":\"hello\"}"),
+        PsRequest::Hello { codec } => match codec {
+            WireCodec::Json => out.push_str("{\"op\":\"hello\"}"),
+            WireCodec::Binary => out.push_str("{\"op\":\"hello\",\"codec\":\"binary\"}"),
+        },
         PsRequest::InsertRow {
             branch,
             table,
@@ -506,7 +557,7 @@ pub fn decode_ps_request(line: &str) -> Result<PsRequest> {
         .as_str()
         .ok_or_else(|| anyhow!("op not a string"))?;
     match op {
-        "hello" => Ok(PsRequest::Hello),
+        "hello" => Ok(PsRequest::Hello { codec: codec_of(&v)? }),
         "insert" => Ok(PsRequest::InsertRow {
             branch: num_u32(field(&v, "branch")?, "branch")?,
             table: num_u32(field(&v, "table")?, "table")?,
@@ -605,12 +656,16 @@ pub fn encode_ps_reply(reply: &PsReply) -> String {
             shard_begin,
             shard_end,
             optimizer,
+            codec,
         } => {
             let _ = write!(
                 out,
                 "{{\"op\":\"hello\",\"begin\":{shard_begin},\"end\":{shard_end},\"optimizer\":"
             );
             push_json_str(&mut out, optimizer);
+            if *codec == WireCodec::Binary {
+                out.push_str(",\"codec\":\"binary\"");
+            }
             out.push('}');
         }
         PsReply::Ok => out.push_str("{\"op\":\"ok\"}"),
@@ -669,12 +724,17 @@ pub fn encode_ps_reply(reply: &PsReply) -> String {
                 out,
                 "{{\"op\":\"stats\",\"contended\":{},\"batch_calls\":{},\"batched_rows\":{},\
                  \"reads_batched\":{},\
+                 \"bytes_tx\":{},\"bytes_rx\":{},\"frames_json\":{},\"frames_bin\":{},\
                  \"reused\":{},\"allocated\":{},\"idle\":{},\"idle_len\":{},\
                  \"forks\":{},\"peak\":{},\"branches\":[",
                 s.server.shard_lock_contentions,
                 s.server.batch_calls,
                 s.server.batched_rows,
                 s.server.reads_batched,
+                s.server.bytes_tx,
+                s.server.bytes_rx,
+                s.server.frames_json,
+                s.server.frames_bin,
                 s.pool.reused,
                 s.pool.allocated,
                 s.pool.idle,
@@ -713,6 +773,7 @@ pub fn decode_ps_reply(line: &str) -> Result<PsReply> {
                 .as_str()
                 .ok_or_else(|| anyhow!("bad optimizer"))?
                 .to_string(),
+            codec: codec_of(&v)?,
         }),
         "ok" => Ok(PsReply::Ok),
         "row" => Ok(PsReply::Row {
@@ -792,6 +853,10 @@ pub fn decode_ps_reply(line: &str) -> Result<PsReply> {
                     batch_calls: num_u64(field(&v, "batch_calls")?, "batch_calls")?,
                     batched_rows: num_u64(field(&v, "batched_rows")?, "batched_rows")?,
                     reads_batched: num_u64(field(&v, "reads_batched")?, "reads_batched")?,
+                    bytes_tx: num_u64(field(&v, "bytes_tx")?, "bytes_tx")?,
+                    bytes_rx: num_u64(field(&v, "bytes_rx")?, "bytes_rx")?,
+                    frames_json: num_u64(field(&v, "frames_json")?, "frames_json")?,
+                    frames_bin: num_u64(field(&v, "frames_bin")?, "frames_bin")?,
                 },
                 pool: PoolStats {
                     reused: num_u64(field(&v, "reused")?, "reused")?,
@@ -912,7 +977,8 @@ mod tests {
     #[test]
     fn ps_request_frames_roundtrip() {
         let hyper = Hyper { lr: 0.1, momentum: 0.9 };
-        roundtrip_req(&PsRequest::Hello);
+        roundtrip_req(&PsRequest::Hello { codec: WireCodec::Json });
+        roundtrip_req(&PsRequest::Hello { codec: WireCodec::Binary });
         // NaN payloads are covered by f32_bit_patterns_survive_bit_exact
         // (NaN != NaN breaks the PartialEq comparison used here).
         roundtrip_req(&PsRequest::InsertRow {
@@ -1022,6 +1088,13 @@ mod tests {
             shard_begin: 2,
             shard_end: 4,
             optimizer: "adarevision".into(),
+            codec: WireCodec::Json,
+        });
+        roundtrip_reply(&PsReply::Hello {
+            shard_begin: 0,
+            shard_end: 8,
+            optimizer: "sgd".into(),
+            codec: WireCodec::Binary,
         });
         roundtrip_reply(&PsReply::Ok);
         roundtrip_reply(&PsReply::Row {
@@ -1043,6 +1116,10 @@ mod tests {
                 batch_calls: 10,
                 batched_rows: 640,
                 reads_batched: 4096,
+                bytes_tx: 1 << 30,
+                bytes_rx: 12345,
+                frames_json: 17,
+                frames_bin: 9000,
             },
             pool: PoolStats {
                 reused: 1,
@@ -1057,6 +1134,29 @@ mod tests {
         roundtrip_reply(&PsReply::Err {
             message: "row (0,99) missing in branch 7\nwith \"quotes\"".into(),
         });
+    }
+
+    #[test]
+    fn hello_codec_negotiation_is_backward_compatible() {
+        // A pre-codec peer sends hello frames with no codec field at
+        // all; both sides must decode that as JSON, and a JSON hello
+        // must *encode* without the field so old peers can parse it.
+        assert_eq!(
+            decode_ps_request("{\"op\":\"hello\"}").unwrap(),
+            PsRequest::Hello { codec: WireCodec::Json }
+        );
+        assert_eq!(
+            encode_ps_request(&PsRequest::Hello { codec: WireCodec::Json }),
+            "{\"op\":\"hello\"}"
+        );
+        let old_reply = "{\"op\":\"hello\",\"begin\":0,\"end\":4,\"optimizer\":\"sgd\"}";
+        let PsReply::Hello { codec, .. } = decode_ps_reply(old_reply).unwrap() else {
+            panic!("wrong op")
+        };
+        assert_eq!(codec, WireCodec::Json);
+        // unknown codec names are a typed error, not a silent downgrade
+        assert!(decode_ps_request("{\"op\":\"hello\",\"codec\":\"msgpack\"}").is_err());
+        assert!(decode_ps_request("{\"op\":\"hello\",\"codec\":7}").is_err());
     }
 
     #[test]

@@ -46,7 +46,7 @@ pub struct ExperimentConfig {
     /// server, or a shard-server list `remote://addr1,addr2,...` —
     /// every address one `mltuner serve` process (see `ps/remote`).
     pub ps: Option<String>,
-    /// Socket framing for the remote store: "line" | "length".
+    /// Socket framing for the remote store: "line" | "length" | "binary".
     pub ps_framing: String,
     /// Durable session checkpoints: root directory for checkpoint
     /// steps (`None` = checkpointing off).  CLI: `--checkpoint-dir`.
@@ -497,9 +497,9 @@ mod tests {
         use crate::comm::socket::Framing;
         use crate::ps::remote::{spawn_local_server, ShardRange};
         let kind = OptimizerKind::AdaRevision;
-        let (a, ha) = spawn_local_server(ShardRange { begin: 0, end: 1 }, kind, Framing::Line)
+        let (a, ha, _) = spawn_local_server(ShardRange { begin: 0, end: 1 }, kind, Framing::Line)
             .unwrap();
-        let (b, hb) = spawn_local_server(ShardRange { begin: 1, end: 2 }, kind, Framing::Line)
+        let (b, hb, _) = spawn_local_server(ShardRange { begin: 1, end: 2 }, kind, Framing::Line)
             .unwrap();
         let cfg = ExperimentConfig::from_toml(&format!(
             "app = \"mf\"\noptimizer = \"adarevision\"\nps = \"remote://{a},{b}\"\n\

@@ -41,11 +41,11 @@ USAGE: mltuner <tune|serve|baseline|train|info> [--flags]
 
 tune:     --config <file.toml> | --app sim --profile <name>
           --seed N --searcher hyperopt|random|grid|spearmint --csv out.csv
-          --ps remote://host:port,host:port --ps-framing line|length
+          --ps remote://host:port,host:port --ps-framing line|length|binary
           --checkpoint-dir DIR --checkpoint-every N --resume
           (--crash-after-clocks N: fault injection for recovery tests)
 serve:    --shards a..b --listen host:port|unix:/path
-          --optimizer sgd|adam|adarevision|... --framing line|length
+          --optimizer sgd|adam|adarevision|... --framing line|length|binary
 baseline: --kind spearmint|hyperband --profile <name> --seed N
           --budget <virtual seconds> --csv out.csv
 train:    --profile <name> --lr F --momentum F --seed N --max-epochs N
@@ -92,7 +92,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         framing.name()
     );
     std::io::stdout().flush()?;
-    ShardServer::new(shards, optimizer).serve(listener, framing)
+    ShardServer::new(shards, optimizer, framing).serve(listener)
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
@@ -155,6 +155,13 @@ fn cmd_tune(args: &Args) -> Result<()> {
         report.snapshots.reads_batched,
         report.snapshots.read_rpcs,
         report.snapshots.shard_lock_contentions
+    );
+    println!(
+        "server wire:     {} B tx, {} B rx, {} json + {} binary frames",
+        report.snapshots.bytes_tx,
+        report.snapshots.bytes_rx,
+        report.snapshots.frames_json,
+        report.snapshots.frames_bin
     );
     for (i, t) in report.tunings.iter().enumerate() {
         println!(

@@ -189,6 +189,16 @@ pub struct ServerStats {
     pub batched_rows: u64,
     /// Rows requested through the batched read path (`read_rows`).
     pub reads_batched: u64,
+    /// Wire bytes written by the shard server (frame payloads +
+    /// headers).  Zero for the in-process engine, which has no wire.
+    pub bytes_tx: u64,
+    /// Wire bytes read by the shard server.
+    pub bytes_rx: u64,
+    /// Data-plane frames served in the JSON codec (the control-plane /
+    /// debug format).
+    pub frames_json: u64,
+    /// Data-plane frames served in the binary codec.
+    pub frames_bin: u64,
 }
 
 /// Number of shard guards live on the current thread — the debug-build
@@ -560,6 +570,13 @@ impl ParamServer {
             batch_calls: self.counters.batch_calls.load(Ordering::Relaxed),
             batched_rows: self.counters.batched_rows.load(Ordering::Relaxed),
             reads_batched: self.counters.reads_batched.load(Ordering::Relaxed),
+            // No wire: the in-process engine serves calls, not frames.
+            // `ShardServer` overlays its transport counters on top of
+            // this snapshot before answering a `ServerStats` probe.
+            bytes_tx: 0,
+            bytes_rx: 0,
+            frames_json: 0,
+            frames_bin: 0,
         }
     }
 

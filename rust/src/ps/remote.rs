@@ -8,11 +8,16 @@
 //!   range `begin..end`.  Internally it is an unmodified
 //!   [`ParamServer`] with `end - begin` local shards: the engine, its
 //!   lock hierarchy, COW branch storage, and per-shard pool arenas are
-//!   reused as-is; only the request framing is new.  Branch ops arrive
-//!   replicated from the client, so every server holds the same branch
-//!   index over its own rows and performs its own last-owner
-//!   accounting — a freed row's buffers return to the pool of the one
-//!   server (and shard) that owns it.
+//!   reused as-is; only the request framing is new.  Connections are
+//!   served by the readiness-driven event loop of [`crate::comm::poll`]
+//!   — one poll thread owning every socket plus a bounded worker pool
+//!   executing decoded requests against the `&self` engine — so the
+//!   server's thread count is O(worker pool), not O(connections), and
+//!   a failed `accept()` or a garbage connection never takes the
+//!   process down.  Branch ops arrive replicated from the client, so
+//!   every server holds the same branch index over its own rows and
+//!   performs its own last-owner accounting — a freed row's buffers
+//!   return to the pool of the one server (and shard) that owns it.
 //! * [`RemoteParamServer`] — the client half, implementing the same
 //!   `&self` [`ParamStore`] interface as the local server.  Row ops
 //!   route with the *identical* [`route_shard`] mix over the global
@@ -30,10 +35,20 @@
 //!   convoying on one mutex-serialized connection.
 //!
 //! Because row payloads cross the wire as f32 *bit patterns* (see
-//! [`crate::comm::wire`]) and the optimizer rule runs server-side on
-//! the same engine, a training run against a set of shard servers is
-//! bit-identical to the same run against a single in-process server —
-//! the distributed CI leg asserts exactly that.
+//! [`crate::comm::wire`] and [`crate::comm::binwire`]) and the
+//! optimizer rule runs server-side on the same engine, a training run
+//! against a set of shard servers is bit-identical to the same run
+//! against a single in-process server — the distributed CI leg asserts
+//! exactly that, under both the JSON and the binary codec.
+//!
+//! **Codec negotiation**: the `Hello` handshake always rides as JSON.
+//! A client built with `--framing binary` requests the binary codec in
+//! its `Hello`; a server grants it only when it too runs
+//! `--framing binary`, and the client refuses to proceed unless
+//! *every* server granted — a mixed-framing cluster is rejected at
+//! connect time with a typed error instead of desynchronizing later.
+//! JSON-only peers on either side keep working unchanged (the codec
+//! field is absent from their hellos, which means JSON).
 //!
 //! Topology: one coordinator process (the tuner + training system)
 //! connects to S shard servers, each started as
@@ -45,16 +60,18 @@
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::comm::binwire;
 use crate::comm::BranchId;
+use crate::comm::poll::CoreMetrics;
 use crate::comm::socket::{Conn, Framing, PsListener, SocketSpec};
 use crate::comm::wire::{
     decode_ps_reply, decode_ps_request, encode_ps_reply, encode_ps_request, PsReply, PsRequest,
-    PsStats,
+    PsStats, WireCodec,
 };
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
 
@@ -99,11 +116,20 @@ pub struct ShardServer {
     ps: ParamServer,
     range: ShardRange,
     optimizer: OptimizerKind,
-    shutdown: AtomicBool,
+    framing: Framing,
+    /// Transport counters, filled by the event loop and overlaid on
+    /// the engine's `ServerStats` when answering a stats probe.
+    metrics: CoreMetrics,
+    /// Data-plane frames executed per codec (the event loop counts
+    /// bytes; the codec split is only known after dispatch, here).
+    frames_json: AtomicU64,
+    frames_bin: AtomicU64,
+    #[cfg(not(unix))]
+    shutdown: std::sync::atomic::AtomicBool,
 }
 
 impl ShardServer {
-    pub fn new(range: ShardRange, optimizer: OptimizerKind) -> Self {
+    pub fn new(range: ShardRange, optimizer: OptimizerKind, framing: Framing) -> Self {
         let ps = ParamServer::new(range.count(), Optimizer::new(optimizer));
         // The root branch exists on every server even before (or
         // without) any of its rows landing here: replicated fork ops
@@ -114,7 +140,12 @@ impl ShardServer {
             ps,
             range,
             optimizer,
-            shutdown: AtomicBool::new(false),
+            framing,
+            metrics: CoreMetrics::default(),
+            frames_json: AtomicU64::new(0),
+            frames_bin: AtomicU64::new(0),
+            #[cfg(not(unix))]
+            shutdown: std::sync::atomic::AtomicBool::new(false),
         }
     }
 
@@ -127,65 +158,148 @@ impl ShardServer {
         self.range
     }
 
-    /// Serve connections until a `Shutdown` request arrives.  Each
-    /// connection gets its own scoped handler thread, so several
-    /// clients (or a client's reconnect) can be in flight at once.
-    pub fn serve(&self, listener: PsListener, framing: Framing) -> Result<()> {
+    pub fn framing(&self) -> Framing {
+        self.framing
+    }
+
+    /// Transport counters (test/bench introspection: the bounded-pool
+    /// acceptance test reads `peak_conns` and `workers` here).
+    pub fn metrics(&self) -> &CoreMetrics {
+        &self.metrics
+    }
+
+    /// Serve connections until a `Shutdown` request arrives: the
+    /// readiness-driven event loop of [`crate::comm::poll`] — one poll
+    /// thread owning all sockets, a bounded worker pool executing
+    /// requests.  Thread count is O(worker pool), not O(connections).
+    #[cfg(unix)]
+    pub fn serve(&self, listener: PsListener) -> Result<()> {
+        crate::comm::poll::ServerCore {
+            listener,
+            framing: self.framing,
+            handler: self,
+            metrics: &self.metrics,
+            workers: crate::comm::poll::default_workers(),
+        }
+        .run()
+    }
+
+    /// Blocking fallback for platforms without a poller: the old
+    /// thread-per-connection model, compiled only off unix.
+    #[cfg(not(unix))]
+    pub fn serve(&self, listener: PsListener) -> Result<()> {
         let local = listener.local_spec()?;
         std::thread::scope(|scope| -> Result<()> {
             loop {
                 if self.shutdown.load(Ordering::SeqCst) {
                     return Ok(());
                 }
-                let conn = match listener.accept(framing) {
+                let conn = match listener.accept(self.framing) {
                     Ok(c) => c,
                     Err(e) => {
                         if self.shutdown.load(Ordering::SeqCst) {
                             return Ok(());
                         }
-                        return Err(e);
+                        self.metrics.accept_errors.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("mltuner serve: accept error (retrying): {e}");
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        continue;
                     }
                 };
                 if self.shutdown.load(Ordering::SeqCst) {
                     return Ok(());
                 }
                 let local = local.clone();
-                scope.spawn(move || self.handle_conn(conn, &local, framing));
+                scope.spawn(move || self.handle_conn_blocking(conn, &local));
             }
         })
     }
 
-    /// One connection's request loop.  A malformed frame is answered
-    /// with an error reply; transport errors end the connection.
-    fn handle_conn(&self, mut conn: Conn, local: &SocketSpec, framing: Framing) {
+    /// One connection's blocking request loop (non-unix fallback).
+    #[cfg(not(unix))]
+    fn handle_conn_blocking(&self, mut conn: Conn, local: &SocketSpec) {
         loop {
-            let frame = match conn.recv() {
-                Ok(Some(f)) => f,
-                Ok(None) | Err(_) => return,
-            };
-            let (reply, shutdown) = match decode_ps_request(&frame) {
-                Err(e) => (
-                    PsReply::Err {
-                        message: format!("bad request: {e}"),
-                    },
-                    false,
-                ),
-                Ok(req) => {
-                    let shutdown = req == PsRequest::Shutdown;
-                    (self.handle(&req), shutdown)
+            let frame = if self.framing == Framing::Line {
+                match conn.recv() {
+                    Ok(Some(f)) => f.into_bytes(),
+                    Ok(None) | Err(_) => return,
+                }
+            } else {
+                match conn.recv_bytes() {
+                    Ok(Some(f)) => f,
+                    Ok(None) | Err(_) => return,
                 }
             };
-            if conn.send(&encode_ps_reply(&reply)).is_err() {
+            let (reply, shutdown) = self.execute_frame(&frame);
+            let sent = if self.framing == Framing::Line {
+                match String::from_utf8(reply) {
+                    Ok(text) => conn.send(&text).is_ok(),
+                    Err(_) => false,
+                }
+            } else {
+                conn.send_bytes(&reply).is_ok()
+            };
+            if !sent {
                 return;
             }
             if shutdown {
                 self.shutdown.store(true, Ordering::SeqCst);
                 // poke our own listener so the blocking accept wakes
                 // up and observes the flag
-                let _ = local.connect(framing);
+                let _ = local.connect(self.framing);
                 return;
             }
         }
+    }
+
+    /// Execute one frame body in whichever codec it arrived in —
+    /// binary opcodes and JSON objects are self-distinguishing by
+    /// their first byte — and encode the reply in the same codec.
+    /// Undecodable frames get an error reply, not a disconnect; a
+    /// frame that is neither binary nor UTF-8 is answered in JSON.
+    fn execute_frame(&self, body: &[u8]) -> (Vec<u8>, bool) {
+        let is_bin = binwire::is_binary_frame(body);
+        if is_bin {
+            self.frames_bin.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.frames_json.fetch_add(1, Ordering::Relaxed);
+        }
+        let decoded = if is_bin {
+            binwire::decode_request(body)
+        } else {
+            match std::str::from_utf8(body) {
+                Ok(text) => decode_ps_request(text),
+                Err(_) => Err(anyhow!("frame is neither a binary opcode nor UTF-8 JSON")),
+            }
+        };
+        let (reply, shutdown) = match decoded {
+            Ok(req) => {
+                let shutdown = req == PsRequest::Shutdown;
+                (self.handle(&req), shutdown)
+            }
+            Err(e) => (
+                PsReply::Err {
+                    message: format!("bad request: {e}"),
+                },
+                false,
+            ),
+        };
+        let encoded = if is_bin {
+            let mut out = Vec::new();
+            match binwire::encode_reply(&reply, &mut out) {
+                Ok(()) => out,
+                // unencodable reply (absurd length): fall back to the
+                // JSON form, which the client's first-byte dispatch
+                // still understands
+                Err(e) => encode_ps_reply(&PsReply::Err {
+                    message: format!("reply not binary-encodable: {e}"),
+                })
+                .into_bytes(),
+            }
+        } else {
+            encode_ps_reply(&reply).into_bytes()
+        };
+        (encoded, shutdown)
     }
 
     /// Dispatch one request against the engine (transport-free, so
@@ -200,10 +314,17 @@ impl ShardServer {
             }
         }
         match req {
-            PsRequest::Hello => PsReply::Hello {
+            PsRequest::Hello { codec } => PsReply::Hello {
                 shard_begin: self.range.begin,
                 shard_end: self.range.end,
                 optimizer: self.optimizer.name().to_string(),
+                // grant the binary codec only when this server itself
+                // runs binary framing; everyone else negotiates JSON
+                codec: if *codec == WireCodec::Binary && self.framing == Framing::Binary {
+                    WireCodec::Binary
+                } else {
+                    WireCodec::Json
+                },
             },
             PsRequest::InsertRow {
                 branch,
@@ -314,8 +435,15 @@ impl ShardServer {
                     .into_iter()
                     .map(|b| (b, self.ps.branch_row_count(b)))
                     .collect();
+                // overlay the transport counters the engine cannot
+                // know (it serves calls, not frames)
+                let mut server = self.ps.server_stats();
+                server.bytes_tx = self.metrics.bytes_tx.load(Ordering::Relaxed);
+                server.bytes_rx = self.metrics.bytes_rx.load(Ordering::Relaxed);
+                server.frames_json = self.frames_json.load(Ordering::Relaxed);
+                server.frames_bin = self.frames_bin.load(Ordering::Relaxed);
                 PsReply::Stats(PsStats {
-                    server: self.ps.server_stats(),
+                    server,
                     pool: self.ps.pool_stats(),
                     forks: self.ps.fork_count(),
                     peak_branches: self.ps.peak_branches(),
@@ -324,6 +452,16 @@ impl ShardServer {
             }
             PsRequest::Shutdown => PsReply::Ok,
         }
+    }
+}
+
+/// The event loop's view of the shard server: one frame body in, one
+/// reply body out, executed on the worker pool.
+#[cfg(unix)]
+impl crate::comm::poll::FrameHandler for ShardServer {
+    fn on_frame(&self, body: Vec<u8>) -> crate::comm::poll::FrameResult {
+        let (reply, shutdown) = self.execute_frame(&body);
+        crate::comm::poll::FrameResult { reply, shutdown }
     }
 }
 
@@ -397,10 +535,23 @@ pub struct RemoteParamServer {
     num_shards: usize,
     optimizer: OptimizerKind,
     framing: Framing,
+    /// Data-plane codec every server granted at `Hello` (binary iff
+    /// the whole cluster runs `--framing binary`).
+    codec: WireCodec,
     /// Data-plane `ReadRows` RPCs issued by this client (surfaced as
     /// `StoreStats::read_rpcs`; the distributed CI leg bounds it at
     /// shard servers × workers per MF training clock).
     read_rpcs: AtomicU64,
+}
+
+thread_local! {
+    /// Reused binary-encode buffer, one per client thread: the hot
+    /// path (`ApplyBatch`/`ReadRows` once per server per clock phase)
+    /// re-encodes into this allocation instead of a fresh `Vec` —
+    /// after warm-up, encoding a request performs zero heap
+    /// allocations and zero float→decimal formatting.
+    static BIN_ENC_BUF: std::cell::RefCell<Vec<u8>> =
+        const { std::cell::RefCell::new(Vec::new()) };
 }
 
 impl fmt::Debug for RemoteParamServer {
@@ -416,25 +567,42 @@ impl fmt::Debug for RemoteParamServer {
 impl RemoteParamServer {
     /// Connect and handshake with every shard server, verifying that
     /// the advertised ranges tile a contiguous global shard space
-    /// `0..N` and that all servers run the same optimizer.
+    /// `0..N` and that all servers run the same optimizer.  A binary
+    /// client additionally requires every server to grant the binary
+    /// codec — a mixed-framing cluster is rejected here, not later.
     pub fn connect(specs: &[SocketSpec], framing: Framing) -> Result<RemoteParamServer> {
         if specs.is_empty() {
             bail!("no shard servers given");
         }
+        let wanted = if framing == Framing::Binary {
+            WireCodec::Binary
+        } else {
+            WireCodec::Json
+        };
         let mut servers = Vec::with_capacity(specs.len());
         let mut optimizer: Option<OptimizerKind> = None;
         for spec in specs {
             let mut conn = spec.connect(framing)?;
-            conn.send(&encode_ps_request(&PsRequest::Hello))?;
+            // the handshake always rides as JSON, whatever the codec
+            conn.send(&encode_ps_request(&PsRequest::Hello { codec: wanted }))?;
             let reply = decode_ps_reply(&conn.recv_expect()?)?;
             let PsReply::Hello {
                 shard_begin,
                 shard_end,
                 optimizer: opt_name,
+                codec: granted,
             } = reply
             else {
                 bail!("{spec}: unexpected handshake reply");
             };
+            if granted != wanted {
+                bail!(
+                    "{spec}: server granted the {} codec but this client wants {} — \
+                     a cluster must run one --framing end to end",
+                    granted.name(),
+                    wanted.name()
+                );
+            }
             if shard_end <= shard_begin {
                 bail!("{spec}: empty shard range {shard_begin}..{shard_end}");
             }
@@ -488,6 +656,7 @@ impl RemoteParamServer {
             // always populated the optimizer
             optimizer: optimizer.expect("at least one server"),
             framing,
+            codec: wanted,
             read_rpcs: AtomicU64::new(0),
         })
     }
@@ -504,6 +673,11 @@ impl RemoteParamServer {
         self.framing
     }
 
+    /// The codec every server granted at `Hello`.
+    pub fn codec(&self) -> WireCodec {
+        self.codec
+    }
+
     #[inline]
     fn server_for(&self, table: TableId, key: RowKey) -> usize {
         self.shard_to_server[route_shard(table, key, self.num_shards)]
@@ -512,22 +686,52 @@ impl RemoteParamServer {
     /// One RPC against server `si`.  Each in-flight RPC leases its own
     /// pooled connection, so concurrent clock-phase threads hit a
     /// server in parallel; a connection that errored mid-RPC is
-    /// dropped, not repooled.
+    /// dropped, not repooled.  Under the binary codec the request is
+    /// encoded into a thread-reused buffer (no per-row allocation, no
+    /// decimal formatting) and the reply is dispatched on its first
+    /// byte, so JSON error replies stay intelligible.
     fn request(&self, si: usize, req: &PsRequest) -> Result<PsReply> {
         let server = &self.servers[si];
         let mut conn = server
             .pool
             .lease()
             .with_context(|| format!("connecting to {}", server.spec))?;
-        if let Err(e) = conn.send(&encode_ps_request(req)) {
+        let sent = match self.codec {
+            WireCodec::Json => conn.send(&encode_ps_request(req)),
+            WireCodec::Binary => BIN_ENC_BUF.with(|buf| {
+                let mut buf = buf.borrow_mut();
+                binwire::encode_request(req, &mut buf)?;
+                conn.send_bytes(&buf)
+            }),
+        };
+        if let Err(e) = sent {
             return Err(e.context(format!("sending to {}", server.spec)));
         }
-        match conn.recv_expect() {
-            Err(e) => Err(e.context(format!("waiting for {}", server.spec))),
-            Ok(frame) => {
-                server.pool.release(conn);
-                decode_ps_reply(&frame)
-            }
+        match self.codec {
+            WireCodec::Json => match conn.recv_expect() {
+                Err(e) => Err(e.context(format!("waiting for {}", server.spec))),
+                Ok(frame) => {
+                    server.pool.release(conn);
+                    decode_ps_reply(&frame)
+                }
+            },
+            WireCodec::Binary => match conn.recv_bytes() {
+                Err(e) => Err(e.context(format!("waiting for {}", server.spec))),
+                Ok(None) => bail!("{}: connection closed mid-request", server.spec),
+                Ok(Some(frame)) => {
+                    server.pool.release(conn);
+                    if binwire::is_binary_frame(&frame) {
+                        binwire::decode_reply(&frame)
+                    } else {
+                        // servers answer unencodable/undecodable
+                        // situations in JSON; first-byte dispatch
+                        // keeps that legible here
+                        let text = std::str::from_utf8(&frame)
+                            .with_context(|| format!("{}: unintelligible reply", server.spec))?;
+                        decode_ps_reply(text)
+                    }
+                }
+            },
         }
     }
 
@@ -867,6 +1071,10 @@ impl ParamStore for RemoteParamServer {
             server.batch_calls += s.server.batch_calls;
             server.batched_rows += s.server.batched_rows;
             server.reads_batched += s.server.reads_batched;
+            server.bytes_tx += s.server.bytes_tx;
+            server.bytes_rx += s.server.bytes_rx;
+            server.frames_json += s.server.frames_json;
+            server.frames_bin += s.server.frames_bin;
             out.pool.accumulate(s.pool);
         }
         out.live_branches = live.len();
@@ -877,6 +1085,16 @@ impl ParamStore for RemoteParamServer {
     }
 }
 
+/// What [`spawn_local_server`] hands back: the bound address, the
+/// serve-thread handle, and the server itself (so tests can inspect
+/// its live metrics).
+#[doc(hidden)]
+pub type LocalServerHandle = (
+    SocketSpec,
+    std::thread::JoinHandle<Result<()>>,
+    Arc<ShardServer>,
+);
+
 /// Spawn an in-process [`ShardServer`] on an ephemeral loopback port —
 /// shared scaffolding for unit tests here and in `config`; the
 /// multi-process CI leg spawns real `mltuner serve` processes instead.
@@ -885,12 +1103,13 @@ pub fn spawn_local_server(
     range: ShardRange,
     optimizer: OptimizerKind,
     framing: Framing,
-) -> Result<(SocketSpec, std::thread::JoinHandle<Result<()>>)> {
+) -> Result<LocalServerHandle> {
     let listener = PsListener::bind(&SocketSpec::Tcp("127.0.0.1:0".into()))?;
     let spec = listener.local_spec()?;
-    let server = Arc::new(ShardServer::new(range, optimizer));
-    let handle = std::thread::spawn(move || server.serve(listener, framing));
-    Ok((spec, handle))
+    let server = Arc::new(ShardServer::new(range, optimizer, framing));
+    let srv = Arc::clone(&server);
+    let handle = std::thread::spawn(move || srv.serve(listener));
+    Ok((spec, handle, server))
 }
 
 #[cfg(test)]
@@ -908,8 +1127,8 @@ mod tests {
         optimizer: OptimizerKind,
         framing: Framing,
     ) -> (RemoteParamServer, ParamServer, Vec<std::thread::JoinHandle<Result<()>>>) {
-        let (spec_a, h_a) = spawn_local_server(range(0, 2), optimizer, framing).unwrap();
-        let (spec_b, h_b) = spawn_local_server(range(2, 4), optimizer, framing).unwrap();
+        let (spec_a, h_a, _) = spawn_local_server(range(0, 2), optimizer, framing).unwrap();
+        let (spec_b, h_b, _) = spawn_local_server(range(2, 4), optimizer, framing).unwrap();
         // deliberately hand the specs over in reverse order: routing
         // must follow the advertised ranges, not the argument order
         let remote = RemoteParamServer::connect(&[spec_b, spec_a], framing).unwrap();
@@ -939,7 +1158,24 @@ mod tests {
 
     #[test]
     fn remote_store_matches_local_engine_bit_exact() {
-        let (remote, local, handles) = cluster(OptimizerKind::Sgd, Framing::Line);
+        parity_roundtrip(Framing::Line);
+    }
+
+    /// The same parity sweep with the negotiated binary codec on the
+    /// data plane: raw f32 bit patterns over fixed LE frames must be
+    /// indistinguishable from the JSON decimal round-trip.
+    #[test]
+    fn remote_binary_codec_matches_local_engine_bit_exact() {
+        parity_roundtrip(Framing::Binary);
+    }
+
+    fn parity_roundtrip(framing: Framing) {
+        let (remote, local, handles) = cluster(OptimizerKind::Sgd, framing);
+        if framing == Framing::Binary {
+            assert_eq!(remote.codec(), WireCodec::Binary, "binary cluster grants binary");
+        } else {
+            assert_eq!(remote.codec(), WireCodec::Json);
+        }
         let hyper = Hyper { lr: 0.5, momentum: 0.9 };
         let grad = [0.25f32, -1.5];
 
@@ -1058,15 +1294,18 @@ mod tests {
     #[test]
     fn connect_rejects_bad_topologies() {
         // overlap: 0..2 + 1..3
-        let (a, ha) = spawn_local_server(range(0, 2), OptimizerKind::Sgd, Framing::Line).unwrap();
-        let (b, hb) = spawn_local_server(range(1, 3), OptimizerKind::Sgd, Framing::Line).unwrap();
+        let (a, ha, _) =
+            spawn_local_server(range(0, 2), OptimizerKind::Sgd, Framing::Line).unwrap();
+        let (b, hb, _) =
+            spawn_local_server(range(1, 3), OptimizerKind::Sgd, Framing::Line).unwrap();
         assert!(RemoteParamServer::connect(&[a.clone(), b.clone()], Framing::Line).is_err());
         // gap: 0..2 alone claims to be the whole space 0..2 — fine;
         // but 2..4 alone leaves 0..2 uncovered
         assert!(RemoteParamServer::connect(&[b.clone()], Framing::Line).is_err());
         assert!(RemoteParamServer::connect(&[a.clone()], Framing::Line).is_ok());
         // optimizer mismatch
-        let (c, hc) = spawn_local_server(range(2, 3), OptimizerKind::Adam, Framing::Line).unwrap();
+        let (c, hc, _) =
+            spawn_local_server(range(2, 3), OptimizerKind::Adam, Framing::Line).unwrap();
         assert!(RemoteParamServer::connect(&[a.clone(), c.clone()], Framing::Line).is_err());
         for spec in [a, b, c] {
             let remote = RemoteParamServer::connect(
@@ -1083,9 +1322,130 @@ mod tests {
         }
     }
 
+    /// Negotiation edge: a binary client against a server that is not
+    /// running binary framing gets a clean typed error at connect —
+    /// never a silent downgrade or a desynchronized stream.  (Length
+    /// framing is byte-compatible with binary framing on the wire, so
+    /// the handshake itself works; the grant is what must refuse.)
+    #[test]
+    fn binary_client_rejected_by_json_only_server() {
+        let (spec, handle, _srv) =
+            spawn_local_server(range(0, 1), OptimizerKind::Sgd, Framing::Length).unwrap();
+        let err = RemoteParamServer::connect(&[spec.clone()], Framing::Binary).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("granted the json codec"), "{msg}");
+        assert!(msg.contains("one --framing"), "{msg}");
+        // the server is unharmed; shut it down over its own framing
+        let remote = RemoteParamServer::connect(&[spec], Framing::Length).unwrap();
+        remote.shutdown_all().unwrap();
+        drop(remote);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// A garbage connection — unframeable bytes, unknown binary
+    /// opcodes, truncated frames — must neither panic the server nor
+    /// disturb well-behaved clients (the accept/serve loop survives;
+    /// regression test for the old `return Err(e)` accept loop).
+    #[test]
+    fn garbage_connections_do_not_kill_the_server() {
+        let (spec, handle, server) =
+            spawn_local_server(range(0, 1), OptimizerKind::Sgd, Framing::Binary).unwrap();
+        // 1) raw unframeable garbage: a 4 GiB length header
+        if let SocketSpec::Tcp(addr) = &spec {
+            use std::io::Write as _;
+            let mut raw = std::net::TcpStream::connect(addr).unwrap();
+            raw.write_all(&[0xff; 64]).unwrap();
+            // the server drops this connection; give it a moment
+        }
+        let mut conn = spec.connect(Framing::Binary).unwrap();
+        // 2) well-framed unknown opcode: binary error reply, same conn
+        conn.send_bytes(&[0x1f]).unwrap();
+        let frame = conn.recv_bytes().unwrap().unwrap();
+        assert!(binwire::is_binary_frame(&frame));
+        let reply = binwire::decode_reply(&frame).unwrap();
+        assert!(matches!(reply, PsReply::Err { .. }), "{reply:?}");
+        // 3) well-framed truncated binary request: error reply too
+        let mut full = Vec::new();
+        binwire::encode_request(
+            &PsRequest::ReadRow {
+                branch: 0,
+                table: 0,
+                key: 1,
+                with_accum: false,
+            },
+            &mut full,
+        )
+        .unwrap();
+        conn.send_bytes(&full[..full.len() - 2]).unwrap();
+        let frame = conn.recv_bytes().unwrap().unwrap();
+        let reply = binwire::decode_reply(&frame).unwrap();
+        assert!(matches!(reply, PsReply::Err { .. }), "{reply:?}");
+        // 4) a frame that is neither binary nor UTF-8: JSON error
+        conn.send_bytes(&[0xc3, 0x28, 0xa0, 0xa1]).unwrap();
+        let frame = conn.recv_bytes().unwrap().unwrap();
+        assert!(!binwire::is_binary_frame(&frame));
+        let reply = decode_ps_reply(std::str::from_utf8(&frame).unwrap()).unwrap();
+        assert!(matches!(reply, PsReply::Err { .. }), "{reply:?}");
+        // ...and the server still serves real clients
+        let remote = RemoteParamServer::connect(&[spec], Framing::Binary).unwrap();
+        remote.insert_row(0, 0, 0, vec![2.5]).unwrap();
+        assert_eq!(remote.read_row(0, 0, 0).unwrap().unwrap(), vec![2.5]);
+        drop(conn);
+        remote.shutdown_all().unwrap();
+        drop(remote);
+        handle.join().unwrap().unwrap();
+        assert!(server.metrics().conns_accepted.load(Ordering::Relaxed) >= 3);
+    }
+
+    /// The thread-count acceptance test: ≥64 simultaneously-open
+    /// client connections are all served by the event loop's bounded
+    /// worker pool — the server never spawns per-connection threads.
+    #[cfg(unix)]
+    #[test]
+    fn event_loop_serves_64_connections_with_bounded_worker_pool() {
+        let (spec, handle, server) =
+            spawn_local_server(range(0, 1), OptimizerKind::Sgd, Framing::Binary).unwrap();
+        let mut conns: Vec<Conn> = (0..64)
+            .map(|_| spec.connect(Framing::Binary).unwrap())
+            .collect();
+        // every connection completes a handshake while all 64 are open
+        for conn in &mut conns {
+            let hello = PsRequest::Hello {
+                codec: WireCodec::Binary,
+            };
+            let mut buf = Vec::new();
+            binwire::encode_request(&hello, &mut buf).unwrap();
+            conn.send_bytes(&buf).unwrap();
+            let frame = conn.recv_bytes().unwrap().unwrap();
+            let reply = binwire::decode_reply(&frame).unwrap();
+            assert!(
+                matches!(
+                    reply,
+                    PsReply::Hello {
+                        codec: WireCodec::Binary,
+                        ..
+                    }
+                ),
+                "{reply:?}"
+            );
+        }
+        let peak = server.metrics().peak_conns.load(Ordering::Relaxed);
+        assert!(peak >= 64, "all 64 conns open at once, peak {peak}");
+        let workers = server.metrics().workers.load(Ordering::Relaxed);
+        assert!(
+            (1..=8).contains(&workers),
+            "worker pool must be O(cores), not O(conns): {workers}"
+        );
+        drop(conns);
+        let remote = RemoteParamServer::connect(&[spec], Framing::Binary).unwrap();
+        remote.shutdown_all().unwrap();
+        drop(remote);
+        handle.join().unwrap().unwrap();
+    }
+
     #[test]
     fn malformed_frames_get_error_replies_not_disconnects() {
-        let (spec, handle) =
+        let (spec, handle, _srv) =
             spawn_local_server(range(0, 1), OptimizerKind::Sgd, Framing::Line).unwrap();
         let mut conn = spec.connect(Framing::Line).unwrap();
         conn.send("this is not a request").unwrap();
@@ -1094,10 +1454,17 @@ mod tests {
             panic!("wanted an error reply")
         };
         assert!(message.contains("bad request"), "{message}");
-        // the connection is still usable afterwards
-        conn.send(&encode_ps_request(&PsRequest::Hello)).unwrap();
+        // the connection is still usable afterwards; a bare JSON
+        // hello (no codec field — an old peer) negotiates JSON
+        conn.send("{\"op\":\"hello\"}").unwrap();
         let reply = decode_ps_reply(&conn.recv_expect().unwrap()).unwrap();
-        assert!(matches!(reply, PsReply::Hello { .. }));
+        assert!(matches!(
+            reply,
+            PsReply::Hello {
+                codec: WireCodec::Json,
+                ..
+            }
+        ));
         conn.send(&encode_ps_request(&PsRequest::Shutdown)).unwrap();
         let _ = conn.recv();
         drop(conn);

@@ -75,6 +75,15 @@ pub struct SnapshotStats {
     /// bounds it at O(shard servers × workers) per training clock
     /// (asserted by the distributed CI leg).
     pub read_rpcs: u64,
+    /// Wire bytes written by the shard servers (0 in-process).
+    pub bytes_tx: u64,
+    /// Wire bytes read by the shard servers (0 in-process).
+    pub bytes_rx: u64,
+    /// Data-plane frames the shard servers served in the JSON codec.
+    pub frames_json: u64,
+    /// Data-plane frames the shard servers served in the binary codec
+    /// (nonzero only under `--ps-framing binary`).
+    pub frames_bin: u64,
 }
 
 /// The training-system side of the Table-1 message interface.

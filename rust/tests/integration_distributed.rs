@@ -62,7 +62,7 @@ impl Drop for ServerProc {
 
 /// Spawn `mltuner serve --shards <range> --listen 127.0.0.1:0` and
 /// parse the kernel-chosen ephemeral address off its first stdout line.
-fn spawn_server(shards: &str, optimizer: OptimizerKind) -> ServerProc {
+fn spawn_server(shards: &str, optimizer: OptimizerKind, framing: Framing) -> ServerProc {
     let mut child = Command::new(env!("CARGO_BIN_EXE_mltuner"))
         .args([
             "serve",
@@ -72,6 +72,8 @@ fn spawn_server(shards: &str, optimizer: OptimizerKind) -> ServerProc {
             "127.0.0.1:0",
             "--optimizer",
             optimizer.name(),
+            "--framing",
+            framing.name(),
         ])
         .stdout(Stdio::piped())
         .spawn()
@@ -91,8 +93,11 @@ fn spawn_server(shards: &str, optimizer: OptimizerKind) -> ServerProc {
 }
 
 /// Two shard-server processes covering global shards 0..4.
-fn spawn_cluster(optimizer: OptimizerKind) -> (ServerProc, ServerProc) {
-    (spawn_server("0..2", optimizer), spawn_server("2..4", optimizer))
+fn spawn_cluster(optimizer: OptimizerKind, framing: Framing) -> (ServerProc, ServerProc) {
+    (
+        spawn_server("0..2", optimizer, framing),
+        spawn_server("2..4", optimizer, framing),
+    )
 }
 
 fn mf_config() -> MfConfig {
@@ -168,12 +173,14 @@ fn bits(row: &[f32]) -> Vec<u32> {
     row.iter().map(|v| v.to_bits()).collect()
 }
 
-#[test]
-fn multi_process_session_is_bit_exact_with_local_run() {
+/// The multi-process bit-exactness acceptance, parameterized over the
+/// wire framing so the JSON (`line`) and negotiated-binary data planes
+/// are both CI-pinned against the same in-process reference.
+fn multi_process_parity_under(framing: Framing) {
     let cfg = mf_config();
-    let (sa, sb) = spawn_cluster(cfg.optimizer);
+    let (sa, sb) = spawn_cluster(cfg.optimizer, framing);
     let remote =
-        RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
+        RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], framing).unwrap();
     let remote_sys = MfSystem::with_store(cfg.clone(), PsHandle::Remote(remote)).unwrap();
     let local_sys = MfSystem::new(cfg.clone());
 
@@ -227,6 +234,16 @@ fn multi_process_session_is_bit_exact_with_local_run() {
 }
 
 #[test]
+fn multi_process_session_is_bit_exact_with_local_run() {
+    multi_process_parity_under(Framing::Line);
+}
+
+#[test]
+fn multi_process_session_is_bit_exact_under_binary_framing() {
+    multi_process_parity_under(Framing::Binary);
+}
+
+#[test]
 fn training_clock_issues_bounded_read_rpcs() {
     // The batched read plane's acceptance bound (CI-enforced so it
     // cannot silently regress): one scripted MF training clock against
@@ -237,7 +254,7 @@ fn training_clock_issues_bounded_read_rpcs() {
     // instead of re-reading.  The pre-batching code issued one
     // `ReadRow` per rating-touched row (hundreds per clock here).
     let cfg = mf_config();
-    let (sa, sb) = spawn_cluster(cfg.optimizer);
+    let (sa, sb) = spawn_cluster(cfg.optimizer, Framing::Line);
     let remote =
         RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
     let servers = remote.num_servers() as u64;
@@ -312,7 +329,7 @@ fn kill_and_resume_is_bit_exact_with_uninterrupted_local_run() {
     let _ = std::fs::remove_dir_all(&ckpt_root);
     std::fs::create_dir_all(&ckpt_root).unwrap();
     let ckd = CheckpointDir::new(&ckpt_root);
-    let (sa, sb) = spawn_cluster(cfg.optimizer);
+    let (sa, sb) = spawn_cluster(cfg.optimizer, Framing::Line);
     let remote =
         RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
     let sys_a = MfSystem::with_store(cfg.clone(), PsHandle::Remote(remote)).unwrap();
@@ -349,7 +366,7 @@ fn kill_and_resume_is_bit_exact_with_uninterrupted_local_run() {
     let step = ckd.latest().unwrap().expect("committed checkpoint");
     let loaded = session::load(&step).unwrap();
     assert_eq!(loaded.header.clock, cut_clock);
-    let (sa, sb) = spawn_cluster(cfg.optimizer);
+    let (sa, sb) = spawn_cluster(cfg.optimizer, Framing::Line);
     let remote =
         RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
     let mut sys_b = MfSystem::with_store(cfg.clone(), PsHandle::Remote(remote)).unwrap();
@@ -380,9 +397,10 @@ fn kill_and_resume_is_bit_exact_with_uninterrupted_local_run() {
 #[test]
 fn full_tuner_converges_against_spawned_shard_servers() {
     // End-to-end MLtuner over the wire: a real (wall-clock-adaptive)
-    // tuning session against two server processes.  Decisions depend
-    // on measured time, so this asserts convergence, not bit-equality.
-    // Sized small: every clock is a few hundred loopback RPCs.
+    // tuning session against two server processes, on the negotiated
+    // binary data plane.  Decisions depend on measured time, so this
+    // asserts convergence, not bit-equality.  Sized small: every clock
+    // is a few hundred loopback RPCs.
     let cfg = MfConfig {
         users: 16,
         items: 12,
@@ -392,9 +410,9 @@ fn full_tuner_converges_against_spawned_shard_servers() {
         seed: 7,
         optimizer: OptimizerKind::AdaRevision,
     };
-    let (sa, sb) = spawn_cluster(cfg.optimizer);
+    let (sa, sb) = spawn_cluster(cfg.optimizer, Framing::Binary);
     let remote =
-        RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
+        RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Binary).unwrap();
     let sys = MfSystem::with_store(cfg, PsHandle::Remote(remote)).unwrap();
     // lenient threshold: a couple of good-LR passes reach it, keeping
     // the socket-bound session short enough for CI
@@ -415,8 +433,9 @@ fn full_tuner_converges_against_spawned_shard_servers() {
 #[test]
 fn tune_cli_runs_against_spawned_shard_servers() {
     // The composed deployment exactly as a user would run it:
-    // two `mltuner serve` processes + `mltuner tune --ps remote://...`.
-    let (sa, sb) = spawn_cluster(OptimizerKind::AdaRevision);
+    // two `mltuner serve --framing binary` processes +
+    // `mltuner tune --ps remote://... --ps-framing binary`.
+    let (sa, sb) = spawn_cluster(OptimizerKind::AdaRevision, Framing::Binary);
     let config = "app = \"mf\"\noptimizer = \"adarevision\"\nworkers = 2\n\
                   loss_threshold = 1e15\nretune = false\nmax_epochs = 40\n\
                   [mf]\nusers = 16\nitems = 12\nrank = 2\nn_ratings = 120\n";
@@ -431,6 +450,8 @@ fn tune_cli_runs_against_spawned_shard_servers() {
             path.to_str().unwrap(),
             "--ps",
             &format!("remote://{},{}", sa.spec, sb.spec),
+            "--ps-framing",
+            "binary",
         ])
         .output()
         .expect("run mltuner tune");
@@ -442,4 +463,10 @@ fn tune_cli_runs_against_spawned_shard_servers() {
         String::from_utf8_lossy(&out.stderr)
     );
     assert!(stdout.contains("converged:       true"), "{stdout}");
+    // the report's wire line must show real binary data-plane traffic
+    let wire = stdout
+        .lines()
+        .find(|l| l.starts_with("server wire:"))
+        .unwrap_or_else(|| panic!("no server wire line in {stdout}"));
+    assert!(!wire.contains(" 0 binary frames"), "{wire}");
 }

@@ -2,10 +2,11 @@
 //! `proptest` is not vendored offline; `prop!` runs a closure over many
 //! seeded random cases and reports the failing seed).
 
+use mltuner::comm::binwire;
 use mltuner::comm::socket::{decode_length_frame, encode_length_frame, MAX_FRAME_LEN};
 use mltuner::comm::wire::{
     decode_ps_reply, decode_ps_request, encode_ps_reply, encode_ps_request, PsReply, PsRequest,
-    PsStats,
+    PsStats, WireCodec,
 };
 use mltuner::comm::{BranchType, ProtocolChecker, TunerMsg};
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
@@ -602,9 +603,42 @@ fn random_hyper(rng: &mut Rng) -> Hyper {
     }
 }
 
+fn random_codec(rng: &mut Rng) -> WireCodec {
+    if rng.gen_range(0, 2) == 0 {
+        WireCodec::Json
+    } else {
+        WireCodec::Binary
+    }
+}
+
+/// A checkpoint directory with every character class the string codecs
+/// must escape (quotes, backslashes, control bytes, non-ASCII).
+fn random_dir(rng: &mut Rng) -> String {
+    match rng.gen_range(0, 4) {
+        0 => String::new(),
+        1 => format!("ckpt/step-{}", rng.gen_range(0, 1000)),
+        2 => "we\\ird \"dir\"\nwith\tcontrol\u{1} bytes".into(),
+        _ => format!("caché-{}-日本", rng.gen_range(0, 100)),
+    }
+}
+
 fn random_ps_request(rng: &mut Rng) -> PsRequest {
-    match rng.gen_range(0, 10) {
-        0 => PsRequest::Hello,
+    match rng.gen_range(0, 13) {
+        0 => PsRequest::Hello {
+            codec: random_codec(rng),
+        },
+        10 => PsRequest::CheckpointBranch {
+            branch: rng.next_u64() as u32,
+            dir: random_dir(rng),
+        },
+        11 => PsRequest::VerifyBranch {
+            branch: rng.next_u64() as u32,
+            dir: random_dir(rng),
+        },
+        12 => PsRequest::RestoreBranch {
+            branch: rng.next_u64() as u32,
+            dir: random_dir(rng),
+        },
         1 => PsRequest::InsertRow {
             branch: rng.next_u64() as u32,
             table: rng.next_u64() as u32,
@@ -661,12 +695,35 @@ fn random_ps_request(rng: &mut Rng) -> PsRequest {
     }
 }
 
+fn random_segment_meta(rng: &mut Rng) -> mltuner::ps::checkpoint::SegmentMeta {
+    mltuner::ps::checkpoint::SegmentMeta {
+        file: random_dir(rng),
+        branch: rng.next_u64() as u32,
+        range_begin: rng.gen_range(0, 64),
+        range_end: rng.gen_range(64, 256),
+        local_shard: rng.gen_range(0, 64),
+        rows: rng.next_u64() >> 12,
+        bytes: rng.next_u64() >> 12,
+        checksum: rng.next_u64() >> 12,
+    }
+}
+
 fn random_ps_reply(rng: &mut Rng) -> PsReply {
-    match rng.gen_range(0, 6) {
+    match rng.gen_range(0, 9) {
         0 => PsReply::Hello {
             shard_begin: rng.gen_range(0, 64),
             shard_end: rng.gen_range(64, 256),
             optimizer: "adarevision".into(),
+            codec: random_codec(rng),
+        },
+        6 => PsReply::Segments {
+            segments: (0..rng.gen_range(0, 5)).map(|_| random_segment_meta(rng)).collect(),
+        },
+        7 => PsReply::Verified {
+            rows: rng.next_u64() >> 12,
+        },
+        8 => PsReply::Restored {
+            rows: rng.next_u64() >> 12,
         },
         1 => PsReply::Ok,
         2 => PsReply::Row {
@@ -705,6 +762,10 @@ fn random_ps_reply(rng: &mut Rng) -> PsReply {
                 batch_calls: rng.next_u64() >> 12,
                 batched_rows: rng.next_u64() >> 12,
                 reads_batched: rng.next_u64() >> 12,
+                bytes_tx: rng.next_u64() >> 12,
+                bytes_rx: rng.next_u64() >> 12,
+                frames_json: rng.next_u64() >> 12,
+                frames_bin: rng.next_u64() >> 12,
             },
             pool: mltuner::ps::pool::PoolStats {
                 reused: rng.next_u64() >> 12,
@@ -765,6 +826,50 @@ fn prop_ps_decode_never_panics_on_garbage() {
                 assert_eq!(encode_ps_request(&back), line[..cut]);
             }
         }
+    });
+}
+
+#[test]
+fn prop_binary_codec_decodes_to_the_same_value_as_json() {
+    // The negotiated binary codec must agree with the JSON codec on
+    // every frame — NaN payloads, infinities and −0.0 included.  f32
+    // NaNs break PartialEq, so equality is checked through the
+    // canonical JSON re-encoding, which is total over bit patterns.
+    prop(300, |rng| {
+        let mut buf = Vec::new();
+        let req = random_ps_request(rng);
+        binwire::encode_request(&req, &mut buf).unwrap_or_else(|e| panic!("{req:?}: {e}"));
+        assert!(binwire::is_binary_frame(&buf), "{req:?}");
+        let back = binwire::decode_request(&buf).unwrap_or_else(|e| panic!("{req:?}: {e}"));
+        assert_eq!(encode_ps_request(&back), encode_ps_request(&req), "request");
+        let reply = random_ps_reply(rng);
+        binwire::encode_reply(&reply, &mut buf).unwrap_or_else(|e| panic!("{reply:?}: {e}"));
+        assert!(binwire::is_binary_frame(&buf), "{reply:?}");
+        let back = binwire::decode_reply(&buf).unwrap_or_else(|e| panic!("{reply:?}: {e}"));
+        assert_eq!(encode_ps_reply(&back), encode_ps_reply(&reply), "reply");
+    });
+}
+
+#[test]
+fn prop_binary_decode_never_panics_on_truncation_or_garbage() {
+    // Binary frames are strict: every truncation and every trailing
+    // byte is a decode error (never a panic, never a wrong value), and
+    // arbitrary bytes must not crash the decoder.
+    prop(300, |rng| {
+        let mut buf = Vec::new();
+        binwire::encode_request(&random_ps_request(rng), &mut buf).unwrap();
+        let cut = rng.gen_range(0, buf.len());
+        assert!(
+            binwire::decode_request(&buf[..cut]).is_err(),
+            "truncated frame accepted at {cut}/{}",
+            buf.len()
+        );
+        buf.push(rng.next_u64() as u8);
+        assert!(binwire::decode_request(&buf).is_err(), "trailing byte accepted");
+        let junk: Vec<u8> =
+            (0..rng.gen_range(0, 64)).map(|_| rng.next_u64() as u8).collect();
+        let _ = binwire::decode_request(&junk);
+        let _ = binwire::decode_reply(&junk);
     });
 }
 

@@ -22,13 +22,16 @@ cargo test --release --test stress_concurrent -- --test-threads=8
 
 # Distributed suite: spawns real `mltuner serve` shard-server processes
 # on loopback ephemeral ports and checks (a) bit-exact parity with the
-# single-process run, (b) the batched-read-plane bound — one MF
-# training clock issues at most `shard servers x workers` data-plane
-# read RPCs (`training_clock_issues_bounded_read_rpcs`), so read
-# batching cannot silently regress, and (c) the durable-checkpoint
-# acceptance: a mid-episode checkpoint survives SIGKILLing every shard
-# server and resumes bit-exact on a fresh cluster (mirrors the CI
-# `distributed` leg).
+# single-process run under BOTH the JSON `line` framing and the
+# negotiated `binary` data-plane codec, (b) the batched-read-plane
+# bound — one MF training clock issues at most `shard servers x
+# workers` data-plane read RPCs
+# (`training_clock_issues_bounded_read_rpcs`), so read batching cannot
+# silently regress, (c) the durable-checkpoint acceptance: a
+# mid-episode checkpoint survives SIGKILLing every shard server and
+# resumes bit-exact on a fresh cluster, and (d) the full tuner and the
+# `mltuner tune --ps-framing binary` CLI over the binary wire (mirrors
+# the CI `distributed` leg).
 cargo test --release --test integration_distributed
 
 # Checkpoint/restore plane: codec round-trips (NaN/Inf/-0 included),
