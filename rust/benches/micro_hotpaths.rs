@@ -65,7 +65,7 @@ fn shard_update_throughput(threads: usize, passes: usize) -> (f64, u64) {
     let secs = t0.elapsed().as_secs_f64();
     (
         (threads * per_thread) as f64 / secs.max(1e-12),
-        ps.server_stats().shard_lock_contentions,
+        ps.snapshot().server.shard_lock_contentions,
     )
 }
 

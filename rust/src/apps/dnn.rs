@@ -41,7 +41,8 @@ use crate::ps::cache::WorkerCache;
 use crate::ps::storage::{RowKey, TableId};
 use crate::ps::{ParamServer, ParamStore, PsHandle};
 use crate::runtime::Runtime;
-use crate::training::{Progress, SnapshotStats, TrainingSystem};
+use crate::stats::{Snapshot, TrialEvent};
+use crate::training::{Progress, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
 
 /// Parameter rows are chunks of this many f32s (sharding granularity).
@@ -552,23 +553,17 @@ impl TrainingSystem for DnnSystem {
         "dnn"
     }
 
-    fn snapshot_stats(&self) -> SnapshotStats {
-        // aggregated across shard servers for a remote store
-        let s = self.ps.store_stats().unwrap_or_default();
-        SnapshotStats {
-            live_branches: self.branches.len(),
-            peak_branches: s.peak_branches,
-            forks: s.forks,
-            cow_buffer_copies: s.cow_buffer_copies,
-            shard_lock_contentions: s.server.shard_lock_contentions,
-            batch_calls: s.server.batch_calls,
-            batched_rows: s.server.batched_rows,
-            reads_batched: s.server.reads_batched,
-            read_rpcs: s.read_rpcs,
-            bytes_tx: s.server.bytes_tx,
-            bytes_rx: s.server.bytes_rx,
-            frames_json: s.server.frames_json,
-            frames_bin: s.server.frames_bin,
-        }
+    fn stats(&self) -> Snapshot {
+        // aggregated across shard servers for a remote store; an
+        // unreachable store reports zeros rather than failing the
+        // (infallible) stats path
+        let mut s = self.ps.stats().unwrap_or_default();
+        s.store.live_branches = self.branches.len();
+        s
+    }
+
+    fn publish_trial(&self, event: TrialEvent) {
+        // best-effort: a dropped event only costs dashboard freshness
+        let _ = self.ps.publish_progress(event);
     }
 }

@@ -46,7 +46,8 @@ use crate::optim::{Hyper, Optimizer, OptimizerKind};
 use crate::ps::checkpoint::{BranchCkpt, StoreCheckpoint};
 use crate::ps::storage::{RowKey, TableId};
 use crate::ps::{ParamServer, ParamStore, PsHandle};
-use crate::training::{Progress, SnapshotStats, TrainingSystem};
+use crate::stats::{Snapshot, TrialEvent};
+use crate::training::{Progress, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace, TunableSpec};
 
 const T_USER: TableId = 0;
@@ -619,26 +620,20 @@ impl TrainingSystem for MfSystem {
         Ok(true)
     }
 
-    fn snapshot_stats(&self) -> SnapshotStats {
+    fn stats(&self) -> Snapshot {
         // aggregated across shard servers for a remote store; an
         // unreachable store reports zeros rather than failing the
         // (infallible) stats path
-        let s = self.ps.store_stats().unwrap_or_default();
-        SnapshotStats {
-            live_branches: self.branches.len(),
-            peak_branches: s.peak_branches,
-            forks: s.forks,
-            cow_buffer_copies: s.cow_buffer_copies,
-            shard_lock_contentions: s.server.shard_lock_contentions,
-            batch_calls: s.server.batch_calls,
-            batched_rows: s.server.batched_rows,
-            reads_batched: s.server.reads_batched,
-            read_rpcs: s.read_rpcs,
-            bytes_tx: s.server.bytes_tx,
-            bytes_rx: s.server.bytes_rx,
-            frames_json: s.server.frames_json,
-            frames_bin: s.server.frames_bin,
-        }
+        let mut s = self.ps.stats().unwrap_or_default();
+        // the app's branch map is authoritative for liveness (the
+        // store also tracks the replicated root)
+        s.store.live_branches = self.branches.len();
+        s
+    }
+
+    fn publish_trial(&self, event: TrialEvent) {
+        // best-effort: a dropped event only costs dashboard freshness
+        let _ = self.ps.publish_progress(event);
     }
 }
 

@@ -39,7 +39,8 @@ use crate::util::rng::Rng;
 
 use crate::comm::{BranchId, BranchType, Clock};
 use crate::optim::OptimizerKind;
-use crate::training::{Progress, SnapshotStats, TrainingSystem};
+use crate::stats::Snapshot;
+use crate::training::{Progress, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
 
 /// Calibrated constants for one benchmark profile.
@@ -542,16 +543,15 @@ impl TrainingSystem for SimSystem {
         "sim"
     }
 
-    fn snapshot_stats(&self) -> SnapshotStats {
-        SnapshotStats {
-            live_branches: self.branches.len(),
-            peak_branches: self.peak_branches,
-            forks: self.forked,
-            // the simulator's branch state is a few scalars — no
-            // parameter buffers exist to copy, no shards to contend on
-            cow_buffer_copies: 0,
-            ..SnapshotStats::default()
-        }
+    fn stats(&self) -> Snapshot {
+        // the simulator's branch state is a few scalars — no parameter
+        // buffers exist to copy, no shards to contend on; only the
+        // branch census is meaningful
+        let mut s = Snapshot::default();
+        s.store.live_branches = self.branches.len();
+        s.store.peak_branches = self.peak_branches;
+        s.store.forks = self.forked;
+        s
     }
 }
 

@@ -31,8 +31,8 @@
 //! trailing bytes after a complete value are an error — a truncated
 //! or padded frame can never decode to a different value.
 //!
-//! Request opcodes live in `0x01..=0x0d`, reply opcodes in
-//! `0x11..=0x19`.  Every opcode is below `0x20`, and a JSON frame
+//! Request opcodes live in `0x01..=0x0f`, reply opcodes in
+//! `0x11..=0x1a`.  Every opcode is below `0x20`, and a JSON frame
 //! body always starts with `{` (0x7b), so a receiver can dispatch a
 //! frame to the right codec from its first byte alone
 //! ([`is_binary_frame`]) — that is how a binary-framing server keeps
@@ -44,9 +44,12 @@ use crate::optim::Hyper;
 use crate::ps::checkpoint::SegmentMeta;
 use crate::ps::pool::PoolStats;
 use crate::ps::RowData;
-use crate::ps::ServerStats;
+use crate::stats::{
+    ServerDelta, ServerPlane, ShardRows, StorePlane, TrialEvent, WirePlane, HIST_BUCKETS,
+    SCHEMA_VERSION,
+};
 
-use super::wire::{PsReply, PsRequest, PsStats, WireCodec};
+use super::wire::{PsReply, PsRequest, WireCodec};
 
 // Request opcodes.
 const OP_HELLO: u8 = 0x01;
@@ -62,6 +65,8 @@ const OP_VERIFY: u8 = 0x0a;
 const OP_RESTORE: u8 = 0x0b;
 const OP_STATS: u8 = 0x0c;
 const OP_SHUTDOWN: u8 = 0x0d;
+const OP_SUB_STATS: u8 = 0x0e;
+const OP_PUBLISH: u8 = 0x0f;
 
 // Reply opcodes.
 const RE_HELLO: u8 = 0x11;
@@ -73,6 +78,7 @@ const RE_VERIFIED: u8 = 0x16;
 const RE_RESTORED: u8 = 0x17;
 const RE_STATS: u8 = 0x18;
 const RE_ERR: u8 = 0x19;
+const RE_STATS_DELTA: u8 = 0x1a;
 
 /// Does this frame body carry the binary codec?  Binary opcodes are
 /// all `< 0x20`; a JSON body starts with `{` (0x7b).  An empty body is
@@ -261,6 +267,91 @@ impl<'a> Reader<'a> {
         }
     }
 
+    fn trial_event(&mut self) -> Result<TrialEvent> {
+        Ok(TrialEvent {
+            episode: self.u32("episode")?,
+            trial: self.u32("trial")?,
+            branch: self.u32("branch")?,
+            clock: self.u64("clock")?,
+            progress: f64::from_bits(self.u64("progress")?),
+            time: f64::from_bits(self.u64("time")?),
+        })
+    }
+
+    /// The versioned stats body (see `put_server_delta`).  The schema
+    /// version is checked first, so a frame from a newer peer fails
+    /// with a version mismatch instead of a misleading truncation
+    /// error further in.
+    fn server_delta(&mut self) -> Result<ServerDelta> {
+        let version = self.u32("stats schema version")?;
+        if version != SCHEMA_VERSION {
+            bail!(
+                "unsupported stats schema version {version} (this peer speaks {SCHEMA_VERSION})"
+            );
+        }
+        let server = ServerPlane {
+            shard_lock_contentions: self.u64("contended")?,
+            batch_calls: self.u64("batch_calls")?,
+            batched_rows: self.u64("batched_rows")?,
+            reads_batched: self.u64("reads_batched")?,
+            rows_applied: self.u64("rows_applied")?,
+            rows_read: self.u64("rows_read")?,
+        };
+        let store = StorePlane {
+            forks: self.u64("forks")?,
+            peak_branches: self.usize("peak")?,
+            live_branches: self.usize("live")?,
+            cow_buffer_copies: self.u64("cow")?,
+            read_rpcs: self.u64("read_rpcs")?,
+        };
+        let pool = PoolStats {
+            reused: self.u64("reused")?,
+            allocated: self.u64("allocated")?,
+            idle: self.u64("idle")?,
+            idle_len: self.u64("idle_len")?,
+        };
+        let wire = WirePlane {
+            bytes_tx: self.u64("bytes_tx")?,
+            bytes_rx: self.u64("bytes_rx")?,
+            frames_json: self.u64("frames_json")?,
+            frames_bin: self.u64("frames_bin")?,
+        };
+        let n = self.count(24, "shards")?;
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            shards.push(ShardRows {
+                shard: self.u64("shard")?,
+                rows_applied: self.u64("shard rows_applied")?,
+                rows_read: self.u64("shard rows_read")?,
+            });
+        }
+        let mut rpc_hist = [0u64; HIST_BUCKETS];
+        for slot in rpc_hist.iter_mut() {
+            *slot = self.u64("rpc_hist bucket")?;
+        }
+        let n = self.count(12, "branches")?;
+        let mut branches = Vec::with_capacity(n);
+        for _ in 0..n {
+            branches.push((self.u32("branch")?, self.usize("rows")?));
+        }
+        let n = self.count(32, "trials")?;
+        let mut trials = Vec::with_capacity(n);
+        for _ in 0..n {
+            trials.push(self.trial_event()?);
+        }
+        Ok(ServerDelta {
+            version,
+            server,
+            store,
+            pool,
+            wire,
+            shards,
+            rpc_hist,
+            branches,
+            trials,
+        })
+    }
+
     fn finish(self) -> Result<()> {
         if self.pos != self.buf.len() {
             bail!("trailing bytes: {} past end of frame", self.buf.len() - self.pos);
@@ -376,7 +467,72 @@ pub fn encode_request(req: &PsRequest, out: &mut Vec<u8>) -> Result<()> {
             put_str(out, dir, "dir")?;
         }
         PsRequest::ServerStats => out.push(OP_STATS),
+        PsRequest::SubscribeStats { interval_ms } => {
+            out.push(OP_SUB_STATS);
+            put_u64(out, *interval_ms);
+        }
+        PsRequest::PublishProgress { event } => {
+            out.push(OP_PUBLISH);
+            put_trial_event(out, event);
+        }
         PsRequest::Shutdown => out.push(OP_SHUTDOWN),
+    }
+    Ok(())
+}
+
+/// Fixed 32-byte trial-event record; `f64`s ride as raw bit patterns,
+/// same invariant as the row payloads.
+fn put_trial_event(out: &mut Vec<u8>, t: &TrialEvent) {
+    put_u32(out, t.episode);
+    put_u32(out, t.trial);
+    put_u32(out, t.branch);
+    put_u64(out, t.clock);
+    put_u64(out, t.progress.to_bits());
+    put_u64(out, t.time.to_bits());
+}
+
+/// The versioned [`ServerDelta`] body shared by [`RE_STATS`] and
+/// [`RE_STATS_DELTA`].  The histogram is a fixed [`HIST_BUCKETS`]-long
+/// run of `u64`s — no count prefix, the schema version pins the
+/// length.
+fn put_server_delta(out: &mut Vec<u8>, d: &ServerDelta) -> Result<()> {
+    put_u32(out, d.version);
+    put_u64(out, d.server.shard_lock_contentions);
+    put_u64(out, d.server.batch_calls);
+    put_u64(out, d.server.batched_rows);
+    put_u64(out, d.server.reads_batched);
+    put_u64(out, d.server.rows_applied);
+    put_u64(out, d.server.rows_read);
+    put_u64(out, d.store.forks);
+    put_usize(out, d.store.peak_branches, "peak")?;
+    put_usize(out, d.store.live_branches, "live")?;
+    put_u64(out, d.store.cow_buffer_copies);
+    put_u64(out, d.store.read_rpcs);
+    put_u64(out, d.pool.reused);
+    put_u64(out, d.pool.allocated);
+    put_u64(out, d.pool.idle);
+    put_u64(out, d.pool.idle_len);
+    put_u64(out, d.wire.bytes_tx);
+    put_u64(out, d.wire.bytes_rx);
+    put_u64(out, d.wire.frames_json);
+    put_u64(out, d.wire.frames_bin);
+    put_u32(out, len_u32(d.shards.len(), "shards")?);
+    for s in &d.shards {
+        put_u64(out, s.shard);
+        put_u64(out, s.rows_applied);
+        put_u64(out, s.rows_read);
+    }
+    for b in &d.rpc_hist {
+        put_u64(out, *b);
+    }
+    put_u32(out, len_u32(d.branches.len(), "branches")?);
+    for (id, rows) in &d.branches {
+        put_u32(out, *id);
+        put_usize(out, *rows, "rows")?;
+    }
+    put_u32(out, len_u32(d.trials.len(), "trials")?);
+    for t in &d.trials {
+        put_trial_event(out, t);
     }
     Ok(())
 }
@@ -454,6 +610,8 @@ pub fn decode_request(buf: &[u8]) -> Result<PsRequest> {
             dir: r.str("dir")?,
         },
         OP_STATS => PsRequest::ServerStats,
+        OP_SUB_STATS => PsRequest::SubscribeStats { interval_ms: r.u64("interval_ms")? },
+        OP_PUBLISH => PsRequest::PublishProgress { event: r.trial_event()? },
         OP_SHUTDOWN => PsRequest::Shutdown,
         other => bail!("unknown binary request opcode {other:#04x}"),
     };
@@ -525,27 +683,13 @@ pub fn encode_reply(reply: &PsReply, out: &mut Vec<u8>) -> Result<()> {
             out.push(RE_RESTORED);
             put_u64(out, *rows);
         }
-        PsReply::Stats(s) => {
+        PsReply::Stats(d) => {
             out.push(RE_STATS);
-            put_u64(out, s.server.shard_lock_contentions);
-            put_u64(out, s.server.batch_calls);
-            put_u64(out, s.server.batched_rows);
-            put_u64(out, s.server.reads_batched);
-            put_u64(out, s.server.bytes_tx);
-            put_u64(out, s.server.bytes_rx);
-            put_u64(out, s.server.frames_json);
-            put_u64(out, s.server.frames_bin);
-            put_u64(out, s.pool.reused);
-            put_u64(out, s.pool.allocated);
-            put_u64(out, s.pool.idle);
-            put_u64(out, s.pool.idle_len);
-            put_u64(out, s.forks);
-            put_usize(out, s.peak_branches, "peak")?;
-            put_u32(out, len_u32(s.branches.len(), "branches")?);
-            for (id, rows) in &s.branches {
-                put_u32(out, *id);
-                put_usize(out, *rows, "rows")?;
-            }
+            put_server_delta(out, d)?;
+        }
+        PsReply::StatsDelta(d) => {
+            out.push(RE_STATS_DELTA);
+            put_server_delta(out, d)?;
         }
         PsReply::Err { message } => {
             out.push(RE_ERR);
@@ -602,38 +746,8 @@ pub fn decode_reply(buf: &[u8]) -> Result<PsReply> {
         }
         RE_VERIFIED => PsReply::Verified { rows: r.u64("rows")? },
         RE_RESTORED => PsReply::Restored { rows: r.u64("rows")? },
-        RE_STATS => {
-            let server = ServerStats {
-                shard_lock_contentions: r.u64("contended")?,
-                batch_calls: r.u64("batch_calls")?,
-                batched_rows: r.u64("batched_rows")?,
-                reads_batched: r.u64("reads_batched")?,
-                bytes_tx: r.u64("bytes_tx")?,
-                bytes_rx: r.u64("bytes_rx")?,
-                frames_json: r.u64("frames_json")?,
-                frames_bin: r.u64("frames_bin")?,
-            };
-            let pool = PoolStats {
-                reused: r.u64("reused")?,
-                allocated: r.u64("allocated")?,
-                idle: r.u64("idle")?,
-                idle_len: r.u64("idle_len")?,
-            };
-            let forks = r.u64("forks")?;
-            let peak_branches = r.usize("peak")?;
-            let n = r.count(12, "branches")?;
-            let mut branches = Vec::with_capacity(n);
-            for _ in 0..n {
-                branches.push((r.u32("branch")?, r.usize("rows")?));
-            }
-            PsReply::Stats(PsStats {
-                server,
-                pool,
-                forks,
-                peak_branches,
-                branches,
-            })
-        }
+        RE_STATS => PsReply::Stats(r.server_delta()?),
+        RE_STATS_DELTA => PsReply::StatsDelta(r.server_delta()?),
         RE_ERR => PsReply::Err { message: r.str("msg")? },
         other => bail!("unknown binary reply opcode {other:#04x}"),
     };
@@ -724,7 +838,68 @@ mod tests {
             dir: "relative/dir".into(),
         });
         roundtrip_req(&PsRequest::ServerStats);
+        roundtrip_req(&PsRequest::SubscribeStats { interval_ms: 250 });
+        roundtrip_req(&PsRequest::PublishProgress {
+            event: TrialEvent {
+                episode: 1,
+                trial: 4,
+                branch: 9,
+                clock: 1 << 60,
+                progress: -1.25e-3,
+                time: 0.5,
+            },
+        });
         roundtrip_req(&PsRequest::Shutdown);
+    }
+
+    fn sample_delta() -> ServerDelta {
+        let mut rpc_hist = [0u64; HIST_BUCKETS];
+        rpc_hist[0] = 5;
+        rpc_hist[7] = 2;
+        ServerDelta {
+            server: ServerPlane {
+                shard_lock_contentions: 3,
+                batch_calls: 10,
+                batched_rows: 640,
+                reads_batched: 4096,
+                rows_applied: 1000,
+                rows_read: 5000,
+            },
+            store: StorePlane {
+                forks: 7,
+                peak_branches: 3,
+                live_branches: 2,
+                cow_buffer_copies: 3,
+                read_rpcs: 11,
+            },
+            pool: PoolStats {
+                reused: 1,
+                allocated: 2,
+                idle: 3,
+                idle_len: 48,
+            },
+            wire: WirePlane {
+                bytes_tx: u64::MAX,
+                bytes_rx: 1,
+                frames_json: 2,
+                frames_bin: 3,
+            },
+            shards: vec![
+                ShardRows { shard: 2, rows_applied: 600, rows_read: 3000 },
+                ShardRows { shard: 3, rows_applied: 400, rows_read: 2000 },
+            ],
+            rpc_hist,
+            branches: vec![(0, 100), (5, 40)],
+            trials: vec![TrialEvent {
+                episode: 0,
+                trial: 3,
+                branch: 5,
+                clock: 42,
+                progress: -1.25,
+                time: 0.5,
+            }],
+            ..ServerDelta::default()
+        }
     }
 
     #[test]
@@ -763,30 +938,32 @@ mod tests {
         });
         roundtrip_reply(&PsReply::Verified { rows: 0 });
         roundtrip_reply(&PsReply::Restored { rows: 1 << 40 });
-        roundtrip_reply(&PsReply::Stats(PsStats {
-            server: ServerStats {
-                shard_lock_contentions: 3,
-                batch_calls: 10,
-                batched_rows: 640,
-                reads_batched: 4096,
-                bytes_tx: u64::MAX,
-                bytes_rx: 1,
-                frames_json: 2,
-                frames_bin: 3,
-            },
-            pool: PoolStats {
-                reused: 1,
-                allocated: 2,
-                idle: 3,
-                idle_len: 48,
-            },
-            forks: 7,
-            peak_branches: 3,
-            branches: vec![(0, 100), (5, 40)],
-        }));
+        let delta = sample_delta();
+        roundtrip_reply(&PsReply::Stats(delta.clone()));
+        roundtrip_reply(&PsReply::StatsDelta(delta));
         roundtrip_reply(&PsReply::Err {
             message: "row (0,99) missing in branch 7\nwith \"quotes\"".into(),
         });
+    }
+
+    #[test]
+    fn stats_frames_are_versioned_and_truncation_safe() {
+        let mut buf = Vec::new();
+        encode_reply(&PsReply::StatsDelta(sample_delta()), &mut buf).unwrap();
+        // the schema version rides right after the opcode, little-endian
+        assert_eq!(buf[1..5], SCHEMA_VERSION.to_le_bytes());
+        // a frame stamped with a newer version is a typed error
+        let mut newer = buf.clone();
+        newer[1..5].copy_from_slice(&2u32.to_le_bytes());
+        let err = decode_reply(&newer).unwrap_err().to_string();
+        assert!(err.contains("schema version 2"), "{err}");
+        // every truncation of the stats frame errors instead of
+        // panicking or decoding short
+        for cut in 0..buf.len() {
+            assert!(decode_reply(&buf[..cut]).is_err(), "cut at {cut}");
+        }
+        buf.push(0);
+        assert!(decode_reply(&buf).is_err(), "trailing byte accepted");
     }
 
     #[test]

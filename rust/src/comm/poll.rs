@@ -54,10 +54,12 @@ use anyhow::{anyhow, bail, Context, Result};
 
 #[cfg(unix)]
 use super::socket::{decode_length_frame, Framing, PsListener, Stream, MAX_FRAME_LEN};
+use crate::stats::LatencyHist;
 
 /// Transport-level counters owned by whoever runs a [`ServerCore`]
 /// (the shard server), readable concurrently while the loop runs —
-/// this is what feeds `bytes_tx`/`bytes_rx` in `ServerStats`.
+/// this is what feeds the `wire` plane of the stats
+/// [`crate::stats::ServerDelta`].
 #[derive(Debug, Default)]
 pub struct CoreMetrics {
     /// Wire bytes written (headers + payloads).
@@ -73,6 +75,10 @@ pub struct CoreMetrics {
     /// Size of the worker pool (set once at startup; the O(pool)
     /// bound the thread-count acceptance test asserts).
     pub workers: AtomicU64,
+    /// Request service-time histogram (decode → handle → encode, as
+    /// timed around [`FrameHandler::on_frame`] on the worker pool).
+    /// Relaxed atomics — zero hot-path locking.
+    pub rpc_hist: LatencyHist,
 }
 
 /// One executed request's outcome, produced by a worker thread.
@@ -83,6 +89,10 @@ pub struct FrameResult {
     pub reply: Vec<u8>,
     /// Flush the reply, then stop accepting and exit the event loop.
     pub shutdown: bool,
+    /// `Some(interval_ms)`: after queuing the reply, mark this
+    /// connection subscribed to [`FrameHandler::on_tick`] pushes at
+    /// roughly that cadence (the poll thread clamps it).
+    pub subscribe: Option<u64>,
 }
 
 /// What a [`ServerCore`] serves: one complete frame body in, one
@@ -91,6 +101,17 @@ pub struct FrameResult {
 #[cfg(unix)]
 pub trait FrameHandler: Sync {
     fn on_frame(&self, body: Vec<u8>) -> FrameResult;
+
+    /// Called on the **poll thread** when the tick timer fires and at
+    /// least one connection is subscribed (see
+    /// [`FrameResult::subscribe`]).  The returned body is framed and
+    /// broadcast to every subscribed connection; the tick cadence is
+    /// the minimum subscribed interval, so this is the low-priority
+    /// push path — it runs between readiness sweeps and never touches
+    /// the worker pool or the data plane.
+    fn on_tick(&self) -> Option<Vec<u8>> {
+        None
+    }
 }
 
 #[cfg(unix)]
@@ -384,6 +405,9 @@ struct ConnState {
     dead: bool,
     /// Currently registered for writability (epoll interest cache).
     want_write: bool,
+    /// Stats-stream subscription interval in ms (see
+    /// [`FrameResult::subscribe`]); `None` = not subscribed.
+    subscribed: Option<u64>,
 }
 
 #[cfg(unix)]
@@ -399,6 +423,7 @@ impl ConnState {
             eof: false,
             dead: false,
             want_write: false,
+            subscribed: None,
         }
     }
 
@@ -517,7 +542,13 @@ impl<H: FrameHandler> ServerCore<'_, H> {
                     // worker blocks here, the rest queue on the mutex
                     let job = lock(jobs_rx).recv();
                     let Ok((token, body)) = job else { break };
+                    let t0 = std::time::Instant::now();
                     let result = handler.on_frame(body);
+                    // service time (decode → handle → encode) into the
+                    // coarse log2 histogram; relaxed, never blocks
+                    metrics
+                        .rpc_hist
+                        .record_micros(u64::try_from(t0.elapsed().as_micros()).unwrap_or(u64::MAX));
                     lock(completions).push_back((token, result));
                     // a full pipe already guarantees a pending wakeup
                     let _ = wake.write(&[1u8]);
@@ -532,9 +563,27 @@ impl<H: FrameHandler> ServerCore<'_, H> {
             // token of the connection owed the shutdown ack
             let mut shutting: Option<u64> = None;
             let mut accept_backoff_ms: u64 = 1;
+            // stats-push ticker state: the poll thread *is* the ticker,
+            // so pushes cost nothing when nobody is subscribed
+            let mut last_tick = std::time::Instant::now();
 
             loop {
-                poller.wait(&mut events, -1)?;
+                // cadence = minimum subscribed interval, clamped so a
+                // hostile subscriber can neither spin the loop nor park
+                // it for minutes
+                let tick_ms: Option<u64> = conns
+                    .values()
+                    .filter_map(|c| c.subscribed)
+                    .min()
+                    .map(|ms| ms.clamp(50, 10_000));
+                let timeout = match tick_ms {
+                    None => -1,
+                    Some(ms) => {
+                        let left = u128::from(ms).saturating_sub(last_tick.elapsed().as_millis());
+                        i32::try_from(left).unwrap_or(i32::MAX)
+                    }
+                };
+                poller.wait(&mut events, timeout)?;
                 for ev in events.drain(..) {
                     match ev.token {
                         TOKEN_LISTENER if accepting => loop {
@@ -611,6 +660,9 @@ impl<H: FrameHandler> ServerCore<'_, H> {
                     let Some(conn) = conns.get_mut(&token) else {
                         continue; // connection died while we worked
                     };
+                    if let Some(interval) = result.subscribe {
+                        conn.subscribed = Some(interval);
+                    }
                     if frame_reply(framing, &result.reply, &mut conn.wbuf).is_err() {
                         conn.dead = true;
                     } else {
@@ -621,6 +673,27 @@ impl<H: FrameHandler> ServerCore<'_, H> {
                             let _ = jobs_tx.send((token, body));
                         }
                         _ => conn.busy = false,
+                    }
+                }
+
+                // tick: broadcast one stats delta to every subscriber.
+                // Framed per-connection on this thread — the push path
+                // never touches the worker pool or the data plane.
+                if let Some(ms) = tick_ms {
+                    if last_tick.elapsed().as_millis() >= u128::from(ms) {
+                        last_tick = std::time::Instant::now();
+                        if let Some(body) = handler.on_tick() {
+                            for conn in conns.values_mut() {
+                                if conn.subscribed.is_none() || conn.dead {
+                                    continue;
+                                }
+                                if frame_reply(framing, &body, &mut conn.wbuf).is_err() {
+                                    conn.dead = true;
+                                } else {
+                                    flush_conn(conn, metrics);
+                                }
+                            }
+                        }
                     }
                 }
 
@@ -782,6 +855,7 @@ mod tests {
             FrameResult {
                 reply: body.to_ascii_uppercase(),
                 shutdown,
+                subscribe: None,
             }
         }
     }

@@ -27,6 +27,16 @@
 //!   infinities a diverging trial produces — survives the wire
 //!   bit-exact, which is what makes remote training runs bit-identical
 //!   to local ones.
+//! * **Observability plane** — the versioned stats frames of
+//!   [`crate::stats`]: the pull probe ([`PsRequest::ServerStats`] →
+//!   [`PsReply::Stats`]) and the push stream
+//!   ([`PsRequest::SubscribeStats`] → periodic [`PsReply::StatsDelta`]
+//!   frames) share one [`ServerDelta`] payload carrying a `"v"` schema
+//!   version, so an old peer fed a newer frame gets a typed decode
+//!   error instead of silently misreading fields.  Delta `f64`s
+//!   (trial progress/time) ride as hex strings of their IEEE-754 bit
+//!   patterns — `{v:e}` cannot emit NaN as valid JSON and plain JSON
+//!   numbers cap at 2^53.
 //!
 //! Numbers are decoded *strictly*: `clock`/`branch`/key/bit-pattern
 //! fields reject non-integral, negative, and out-of-range values
@@ -40,7 +50,11 @@ use crate::optim::Hyper;
 use crate::ps::checkpoint::{hex_u64, parse_hex_u64, SegmentMeta};
 use crate::ps::pool::PoolStats;
 use crate::ps::storage::{RowKey, TableId};
-use crate::ps::{RowData, ServerStats};
+use crate::ps::RowData;
+use crate::stats::{
+    ServerDelta, ServerPlane, ShardRows, StorePlane, TrialEvent, WirePlane, HIST_BUCKETS,
+    SCHEMA_VERSION,
+};
 use crate::tunable::TunableSetting;
 use crate::util::json::Json;
 
@@ -154,6 +168,17 @@ fn num_usize(v: &Json, what: &str) -> Result<usize> {
 /// Decode one `f32` from its wire form (IEEE-754 bit pattern).
 fn num_f32_bits(v: &Json, what: &str) -> Result<f32> {
     Ok(f32::from_bits(num_u32(v, what)?))
+}
+
+/// Decode one `f64` carried as the hex string of its IEEE-754 bit
+/// pattern (see [`hex_u64`]) — bit-exact for every value including
+/// NaN payloads, which neither `{v:e}` (invalid JSON for NaN) nor a
+/// plain JSON number (2^53 cap) could carry.
+fn f64_hex_bits(v: &Json, what: &str) -> Result<f64> {
+    let s = v
+        .as_str()
+        .ok_or_else(|| anyhow!("bad {what}: not a bit-pattern hex string"))?;
+    Ok(f64::from_bits(parse_hex_u64(s)?))
 }
 
 /// Decode a tuner message from its wire line.
@@ -301,21 +326,22 @@ pub enum PsRequest {
     /// truncated or missing segment is an `Err` reply with the
     /// server's state unchanged.
     RestoreBranch { branch: BranchId, dir: String },
-    /// Probe the server's concurrency/pool/branch counters.
+    /// Probe the server's full stats document once (pull side of the
+    /// observability plane; same [`ServerDelta`] payload the push
+    /// stream uses).
     ServerStats,
+    /// Subscribe this connection to periodic [`PsReply::StatsDelta`]
+    /// pushes, one every `interval_ms` milliseconds (the server clamps
+    /// the cadence).  Push frames are always JSON payloads, even on a
+    /// binary-codec connection — subscribers are dashboards, not the
+    /// data plane.
+    SubscribeStats { interval_ms: u64 },
+    /// Publish one trial-progress event into the server's stats
+    /// stream (best-effort side channel from the tuner; the server
+    /// keeps a bounded latest-per-trial map and folds it into deltas).
+    PublishProgress { event: TrialEvent },
     /// Ask the server process to exit after acknowledging.
     Shutdown,
-}
-
-/// Per-shard-server statistics returned by [`PsRequest::ServerStats`].
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
-pub struct PsStats {
-    pub server: ServerStats,
-    pub pool: PoolStats,
-    pub forks: u64,
-    pub peak_branches: usize,
-    /// Live branches with their server-local row counts, sorted by id.
-    pub branches: Vec<(BranchId, usize)>,
 }
 
 /// One reply from a shard server.
@@ -348,7 +374,16 @@ pub enum PsReply {
     Verified { rows: u64 },
     /// Row count installed by a [`PsRequest::RestoreBranch`].
     Restored { rows: u64 },
-    Stats(PsStats),
+    /// Full stats document answering a [`PsRequest::ServerStats`]
+    /// probe.
+    Stats(ServerDelta),
+    /// Unsolicited periodic push on a subscribed connection (see
+    /// [`PsRequest::SubscribeStats`]).  Same payload as [`Stats`],
+    /// different op so a client can tell its own probe reply from the
+    /// stream.
+    ///
+    /// [`Stats`]: PsReply::Stats
+    StatsDelta(ServerDelta),
     Err { message: String },
 }
 
@@ -545,6 +580,20 @@ pub fn encode_ps_request(req: &PsRequest) -> String {
             out.push('}');
         }
         PsRequest::ServerStats => out.push_str("{\"op\":\"stats\"}"),
+        PsRequest::SubscribeStats { interval_ms } => {
+            let _ = write!(out, "{{\"op\":\"sub_stats\",\"interval_ms\":{interval_ms}}}");
+        }
+        PsRequest::PublishProgress { event } => {
+            let _ = write!(
+                out,
+                "{{\"op\":\"publish\",\"episode\":{},\"trial\":{},\"branch\":{},\"clock\":{},\"progress\":",
+                event.episode, event.trial, event.branch, event.clock
+            );
+            push_json_str(&mut out, &hex_u64(event.progress.to_bits()));
+            out.push_str(",\"time\":");
+            push_json_str(&mut out, &hex_u64(event.time.to_bits()));
+            out.push('}');
+        }
         PsRequest::Shutdown => out.push_str("{\"op\":\"shutdown\"}"),
     }
     out
@@ -643,9 +692,202 @@ pub fn decode_ps_request(line: &str) -> Result<PsRequest> {
             })
         }
         "stats" => Ok(PsRequest::ServerStats),
+        "sub_stats" => Ok(PsRequest::SubscribeStats {
+            interval_ms: num_u64(field(&v, "interval_ms")?, "interval_ms")?,
+        }),
+        "publish" => Ok(PsRequest::PublishProgress {
+            event: TrialEvent {
+                episode: num_u32(field(&v, "episode")?, "episode")?,
+                trial: num_u32(field(&v, "trial")?, "trial")?,
+                branch: num_u32(field(&v, "branch")?, "branch")?,
+                clock: num_u64(field(&v, "clock")?, "clock")?,
+                progress: f64_hex_bits(field(&v, "progress")?, "progress")?,
+                time: f64_hex_bits(field(&v, "time")?, "time")?,
+            },
+        }),
         "shutdown" => Ok(PsRequest::Shutdown),
         other => bail!("unknown ps request op {other}"),
     }
+}
+
+/// Append one [`ServerDelta`] as the body of a stats frame.  Shared by
+/// the pull probe (`op:"stats"`) and the push stream
+/// (`op:"stats_delta"`) so the two can never drift apart.
+fn push_server_delta(out: &mut String, op: &str, d: &ServerDelta) {
+    let _ = write!(
+        out,
+        "{{\"op\":\"{op}\",\"v\":{},\
+         \"server\":{{\"contended\":{},\"batch_calls\":{},\"batched_rows\":{},\
+         \"reads_batched\":{},\"rows_applied\":{},\"rows_read\":{}}},\
+         \"store\":{{\"forks\":{},\"peak\":{},\"live\":{},\"cow\":{},\"read_rpcs\":{}}},\
+         \"pool\":{{\"reused\":{},\"allocated\":{},\"idle\":{},\"idle_len\":{}}},\
+         \"wire\":{{\"bytes_tx\":{},\"bytes_rx\":{},\"frames_json\":{},\"frames_bin\":{}}}",
+        d.version,
+        d.server.shard_lock_contentions,
+        d.server.batch_calls,
+        d.server.batched_rows,
+        d.server.reads_batched,
+        d.server.rows_applied,
+        d.server.rows_read,
+        d.store.forks,
+        d.store.peak_branches,
+        d.store.live_branches,
+        d.store.cow_buffer_copies,
+        d.store.read_rpcs,
+        d.pool.reused,
+        d.pool.allocated,
+        d.pool.idle,
+        d.pool.idle_len,
+        d.wire.bytes_tx,
+        d.wire.bytes_rx,
+        d.wire.frames_json,
+        d.wire.frames_bin,
+    );
+    out.push_str(",\"shards\":[");
+    for (i, s) in d.shards.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "[{},{},{}]", s.shard, s.rows_applied, s.rows_read);
+    }
+    out.push_str("],\"rpc_hist\":[");
+    for (i, b) in d.rpc_hist.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{b}");
+    }
+    out.push_str("],\"branches\":[");
+    for (i, (id, rows)) in d.branches.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "[{id},{rows}]");
+    }
+    out.push_str("],\"trials\":[");
+    for (i, t) in d.trials.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "[{},{},{},{},", t.episode, t.trial, t.branch, t.clock);
+        push_json_str(out, &hex_u64(t.progress.to_bits()));
+        out.push(',');
+        push_json_str(out, &hex_u64(t.time.to_bits()));
+        out.push(']');
+    }
+    out.push_str("]}");
+}
+
+/// Decode the body shared by `op:"stats"` and `op:"stats_delta"`
+/// frames.  The `"v"` schema version is checked first: a frame from a
+/// newer peer fails here with a version mismatch instead of a
+/// confusing missing-field error further down.
+fn server_delta_of(v: &Json) -> Result<ServerDelta> {
+    let version = num_u32(field(v, "v")?, "stats schema version")?;
+    if version != SCHEMA_VERSION {
+        bail!(
+            "unsupported stats schema version {version} (this peer speaks {SCHEMA_VERSION})"
+        );
+    }
+    let sv = field(v, "server")?;
+    let server = ServerPlane {
+        shard_lock_contentions: num_u64(field(sv, "contended")?, "contended")?,
+        batch_calls: num_u64(field(sv, "batch_calls")?, "batch_calls")?,
+        batched_rows: num_u64(field(sv, "batched_rows")?, "batched_rows")?,
+        reads_batched: num_u64(field(sv, "reads_batched")?, "reads_batched")?,
+        rows_applied: num_u64(field(sv, "rows_applied")?, "rows_applied")?,
+        rows_read: num_u64(field(sv, "rows_read")?, "rows_read")?,
+    };
+    let st = field(v, "store")?;
+    let store = StorePlane {
+        forks: num_u64(field(st, "forks")?, "forks")?,
+        peak_branches: num_usize(field(st, "peak")?, "peak")?,
+        live_branches: num_usize(field(st, "live")?, "live")?,
+        cow_buffer_copies: num_u64(field(st, "cow")?, "cow")?,
+        read_rpcs: num_u64(field(st, "read_rpcs")?, "read_rpcs")?,
+    };
+    let pv = field(v, "pool")?;
+    let pool = PoolStats {
+        reused: num_u64(field(pv, "reused")?, "reused")?,
+        allocated: num_u64(field(pv, "allocated")?, "allocated")?,
+        idle: num_u64(field(pv, "idle")?, "idle")?,
+        idle_len: num_u64(field(pv, "idle_len")?, "idle_len")?,
+    };
+    let wv = field(v, "wire")?;
+    let wire = WirePlane {
+        bytes_tx: num_u64(field(wv, "bytes_tx")?, "bytes_tx")?,
+        bytes_rx: num_u64(field(wv, "bytes_rx")?, "bytes_rx")?,
+        frames_json: num_u64(field(wv, "frames_json")?, "frames_json")?,
+        frames_bin: num_u64(field(wv, "frames_bin")?, "frames_bin")?,
+    };
+    let shards = field(v, "shards")?
+        .as_array()
+        .ok_or_else(|| anyhow!("bad shards: not an array"))?
+        .iter()
+        .map(|s| {
+            let s = s.as_array().ok_or_else(|| anyhow!("bad shard triple"))?;
+            if s.len() != 3 {
+                bail!("bad shard triple: len {}", s.len());
+            }
+            Ok(ShardRows {
+                shard: num_u64(&s[0], "shard")?,
+                rows_applied: num_u64(&s[1], "shard rows_applied")?,
+                rows_read: num_u64(&s[2], "shard rows_read")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let hist = field(v, "rpc_hist")?
+        .as_array()
+        .ok_or_else(|| anyhow!("bad rpc_hist: not an array"))?;
+    if hist.len() != HIST_BUCKETS {
+        bail!("bad rpc_hist: {} buckets (want {HIST_BUCKETS})", hist.len());
+    }
+    let mut rpc_hist = [0u64; HIST_BUCKETS];
+    for (slot, b) in rpc_hist.iter_mut().zip(hist.iter()) {
+        *slot = num_u64(b, "rpc_hist bucket")?;
+    }
+    let branches = field(v, "branches")?
+        .as_array()
+        .ok_or_else(|| anyhow!("bad branches"))?
+        .iter()
+        .map(|b| {
+            let b = b.as_array().ok_or_else(|| anyhow!("bad branch pair"))?;
+            if b.len() != 2 {
+                bail!("bad branch pair: len {}", b.len());
+            }
+            Ok((num_u32(&b[0], "branch")?, num_usize(&b[1], "rows")?))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let trials = field(v, "trials")?
+        .as_array()
+        .ok_or_else(|| anyhow!("bad trials"))?
+        .iter()
+        .map(|t| {
+            let t = t.as_array().ok_or_else(|| anyhow!("bad trial entry"))?;
+            if t.len() != 6 {
+                bail!("bad trial entry: len {}", t.len());
+            }
+            Ok(TrialEvent {
+                episode: num_u32(&t[0], "episode")?,
+                trial: num_u32(&t[1], "trial")?,
+                branch: num_u32(&t[2], "branch")?,
+                clock: num_u64(&t[3], "clock")?,
+                progress: f64_hex_bits(&t[4], "progress")?,
+                time: f64_hex_bits(&t[5], "time")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ServerDelta {
+        version,
+        server,
+        store,
+        pool,
+        wire,
+        shards,
+        rpc_hist,
+        branches,
+        trials,
+    })
 }
 
 /// Encode one PS reply as a single JSON frame.
@@ -719,37 +961,8 @@ pub fn encode_ps_reply(reply: &PsReply) -> String {
         PsReply::Restored { rows } => {
             let _ = write!(out, "{{\"op\":\"restored\",\"rows\":{rows}}}");
         }
-        PsReply::Stats(s) => {
-            let _ = write!(
-                out,
-                "{{\"op\":\"stats\",\"contended\":{},\"batch_calls\":{},\"batched_rows\":{},\
-                 \"reads_batched\":{},\
-                 \"bytes_tx\":{},\"bytes_rx\":{},\"frames_json\":{},\"frames_bin\":{},\
-                 \"reused\":{},\"allocated\":{},\"idle\":{},\"idle_len\":{},\
-                 \"forks\":{},\"peak\":{},\"branches\":[",
-                s.server.shard_lock_contentions,
-                s.server.batch_calls,
-                s.server.batched_rows,
-                s.server.reads_batched,
-                s.server.bytes_tx,
-                s.server.bytes_rx,
-                s.server.frames_json,
-                s.server.frames_bin,
-                s.pool.reused,
-                s.pool.allocated,
-                s.pool.idle,
-                s.pool.idle_len,
-                s.forks,
-                s.peak_branches,
-            );
-            for (i, (id, rows)) in s.branches.iter().enumerate() {
-                if i > 0 {
-                    out.push(',');
-                }
-                let _ = write!(out, "[{id},{rows}]");
-            }
-            out.push_str("]}");
-        }
+        PsReply::Stats(d) => push_server_delta(&mut out, "stats", d),
+        PsReply::StatsDelta(d) => push_server_delta(&mut out, "stats_delta", d),
         PsReply::Err { message } => {
             out.push_str("{\"op\":\"err\",\"msg\":");
             push_json_str(&mut out, message);
@@ -834,41 +1047,8 @@ pub fn decode_ps_reply(line: &str) -> Result<PsReply> {
         "restored" => Ok(PsReply::Restored {
             rows: num_u64(field(&v, "rows")?, "rows")?,
         }),
-        "stats" => {
-            let branches = field(&v, "branches")?
-                .as_array()
-                .ok_or_else(|| anyhow!("bad branches"))?
-                .iter()
-                .map(|b| {
-                    let b = b.as_array().ok_or_else(|| anyhow!("bad branch pair"))?;
-                    if b.len() != 2 {
-                        bail!("bad branch pair: len {}", b.len());
-                    }
-                    Ok((num_u32(&b[0], "branch")?, num_usize(&b[1], "rows")?))
-                })
-                .collect::<Result<Vec<_>>>()?;
-            Ok(PsReply::Stats(PsStats {
-                server: ServerStats {
-                    shard_lock_contentions: num_u64(field(&v, "contended")?, "contended")?,
-                    batch_calls: num_u64(field(&v, "batch_calls")?, "batch_calls")?,
-                    batched_rows: num_u64(field(&v, "batched_rows")?, "batched_rows")?,
-                    reads_batched: num_u64(field(&v, "reads_batched")?, "reads_batched")?,
-                    bytes_tx: num_u64(field(&v, "bytes_tx")?, "bytes_tx")?,
-                    bytes_rx: num_u64(field(&v, "bytes_rx")?, "bytes_rx")?,
-                    frames_json: num_u64(field(&v, "frames_json")?, "frames_json")?,
-                    frames_bin: num_u64(field(&v, "frames_bin")?, "frames_bin")?,
-                },
-                pool: PoolStats {
-                    reused: num_u64(field(&v, "reused")?, "reused")?,
-                    allocated: num_u64(field(&v, "allocated")?, "allocated")?,
-                    idle: num_u64(field(&v, "idle")?, "idle")?,
-                    idle_len: num_u64(field(&v, "idle_len")?, "idle_len")?,
-                },
-                forks: num_u64(field(&v, "forks")?, "forks")?,
-                peak_branches: num_usize(field(&v, "peak")?, "peak")?,
-                branches,
-            }))
-        }
+        "stats" => Ok(PsReply::Stats(server_delta_of(&v)?)),
+        "stats_delta" => Ok(PsReply::StatsDelta(server_delta_of(&v)?)),
         "err" => Ok(PsReply::Err {
             message: field(&v, "msg")?
                 .as_str()
@@ -1039,7 +1219,41 @@ mod tests {
             dir: "relative/dir".into(),
         });
         roundtrip_req(&PsRequest::ServerStats);
+        roundtrip_req(&PsRequest::SubscribeStats { interval_ms: 250 });
+        roundtrip_req(&PsRequest::PublishProgress {
+            event: TrialEvent {
+                episode: 1,
+                trial: 4,
+                branch: 9,
+                clock: 1 << 60,
+                progress: -1.25e-3,
+                time: 0.5,
+            },
+        });
         roundtrip_req(&PsRequest::Shutdown);
+    }
+
+    #[test]
+    fn publish_progress_f64s_survive_bit_exact() {
+        // NaN progress is exactly what a diverging trial reports; the
+        // hex bit-pattern encoding must round-trip it (PartialEq
+        // cannot, so compare bits directly).
+        let req = PsRequest::PublishProgress {
+            event: TrialEvent {
+                episode: 0,
+                trial: 0,
+                branch: 1,
+                clock: 3,
+                progress: f64::from_bits(0x7ff8_0000_dead_beef),
+                time: f64::NEG_INFINITY,
+            },
+        };
+        let back = decode_ps_request(&encode_ps_request(&req)).unwrap();
+        let PsRequest::PublishProgress { event } = back else {
+            panic!("wrong op")
+        };
+        assert_eq!(event.progress.to_bits(), 0x7ff8_0000_dead_beef);
+        assert_eq!(event.time.to_bits(), f64::NEG_INFINITY.to_bits());
     }
 
     #[test]
@@ -1110,16 +1324,33 @@ mod tests {
             ],
         });
         roundtrip_reply(&PsReply::RowsData { rows: vec![] });
-        roundtrip_reply(&PsReply::Stats(PsStats {
-            server: ServerStats {
+        let delta = sample_delta();
+        roundtrip_reply(&PsReply::Stats(delta.clone()));
+        roundtrip_reply(&PsReply::StatsDelta(delta));
+        roundtrip_reply(&PsReply::Err {
+            message: "row (0,99) missing in branch 7\nwith \"quotes\"".into(),
+        });
+    }
+
+    fn sample_delta() -> ServerDelta {
+        let mut rpc_hist = [0u64; HIST_BUCKETS];
+        rpc_hist[0] = 5;
+        rpc_hist[7] = 2;
+        ServerDelta {
+            server: ServerPlane {
                 shard_lock_contentions: 3,
                 batch_calls: 10,
                 batched_rows: 640,
                 reads_batched: 4096,
-                bytes_tx: 1 << 30,
-                bytes_rx: 12345,
-                frames_json: 17,
-                frames_bin: 9000,
+                rows_applied: 1000,
+                rows_read: 5000,
+            },
+            store: StorePlane {
+                forks: 7,
+                peak_branches: 3,
+                live_branches: 2,
+                cow_buffer_copies: 3,
+                read_rpcs: 11,
             },
             pool: PoolStats {
                 reused: 1,
@@ -1127,13 +1358,48 @@ mod tests {
                 idle: 3,
                 idle_len: 48,
             },
-            forks: 7,
-            peak_branches: 3,
+            wire: WirePlane {
+                bytes_tx: 1 << 30,
+                bytes_rx: 12345,
+                frames_json: 17,
+                frames_bin: 9000,
+            },
+            shards: vec![
+                ShardRows { shard: 2, rows_applied: 600, rows_read: 3000 },
+                ShardRows { shard: 3, rows_applied: 400, rows_read: 2000 },
+            ],
+            rpc_hist,
             branches: vec![(0, 100), (5, 40)],
-        }));
-        roundtrip_reply(&PsReply::Err {
-            message: "row (0,99) missing in branch 7\nwith \"quotes\"".into(),
-        });
+            trials: vec![TrialEvent {
+                episode: 0,
+                trial: 3,
+                branch: 5,
+                clock: 42,
+                progress: -1.25,
+                time: 0.5,
+            }],
+            ..ServerDelta::default()
+        }
+    }
+
+    #[test]
+    fn stats_frames_are_versioned() {
+        // Every stats frame carries the schema version up front...
+        let line = encode_ps_reply(&PsReply::StatsDelta(ServerDelta::default()));
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("v").and_then(|x| x.as_f64()), Some(1.0));
+        // ...and a frame from a hypothetical newer peer is a typed
+        // version error, not a field-by-field misdecode.
+        let newer = line.replacen("\"v\":1", "\"v\":2", 1);
+        let err = decode_ps_reply(&newer).unwrap_err().to_string();
+        assert!(err.contains("schema version 2"), "{err}");
+        // missing version is rejected too
+        let unversioned = line.replacen("\"v\":1,", "", 1);
+        assert!(decode_ps_reply(&unversioned).is_err());
+        // truncated histograms never decode into a short array
+        let line = encode_ps_reply(&PsReply::Stats(sample_delta()));
+        let chopped = line.replacen("\"rpc_hist\":[5,", "\"rpc_hist\":[", 1);
+        assert!(decode_ps_reply(&chopped).is_err());
     }
 
     #[test]

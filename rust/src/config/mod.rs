@@ -19,7 +19,8 @@ use crate::ps::checkpoint::StoreCheckpoint;
 use crate::ps::remote::RemoteParamServer;
 use crate::runtime::Runtime;
 use crate::searcher::SearcherKind;
-use crate::training::{Progress, SnapshotStats, TrainingSystem};
+use crate::stats::{Snapshot, TrialEvent};
+use crate::training::{Progress, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
 use crate::tuner::session::CheckpointPolicy;
 use crate::tuner::{ConvergenceCriterion, TunerConfig};
@@ -388,11 +389,19 @@ impl TrainingSystem for AnySystem {
         }
     }
 
-    fn snapshot_stats(&self) -> SnapshotStats {
+    fn stats(&self) -> Snapshot {
         match self {
-            AnySystem::Sim(s) => s.snapshot_stats(),
-            AnySystem::Dnn(s) => s.snapshot_stats(),
-            AnySystem::Mf(s) => s.snapshot_stats(),
+            AnySystem::Sim(s) => s.stats(),
+            AnySystem::Dnn(s) => s.stats(),
+            AnySystem::Mf(s) => s.stats(),
+        }
+    }
+
+    fn publish_trial(&self, event: TrialEvent) {
+        match self {
+            AnySystem::Sim(s) => s.publish_trial(event),
+            AnySystem::Dnn(s) => s.publish_trial(event),
+            AnySystem::Mf(s) => s.publish_trial(event),
         }
     }
 

@@ -33,7 +33,9 @@ pub mod optim;
 pub mod ps;
 pub mod runtime;
 pub mod searcher;
+pub mod stats;
 pub mod summarizer;
+pub mod top;
 pub mod training;
 pub mod tunable;
 pub mod tuner;
@@ -41,6 +43,7 @@ pub mod util;
 
 pub use comm::{BranchId, BranchType, Clock, SystemMsg, TunerMsg};
 pub use summarizer::{BranchLabel, ProgressSummarizer, Summary};
-pub use training::{Progress, SnapshotStats, TrainingSystem};
+pub use stats::{ServerDelta, Snapshot};
+pub use training::{Progress, TrainingSystem};
 pub use tunable::{TunableSetting, TunableSpace, TunableSpec};
 pub use tuner::{MLtuner, TunerConfig, TunerReport};

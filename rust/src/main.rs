@@ -6,9 +6,16 @@
 //! * `serve`    — run one parameter-server shard process (distributed
 //!                deployments: the `tune` coordinator connects with
 //!                `--ps remote://...`).
+//! * `top`      — live dashboard over a running cluster's streaming
+//!                stats channel (`--json --once` for scripted probes).
 //! * `baseline` — run the Spearmint / Hyperband baseline tuners (§5.2).
 //! * `train`    — train a fixed hard-coded tunable setting (no tuner).
 //! * `info`     — show the artifact manifest and available profiles.
+//!
+//! Every framing flag (`--framing`, `--ps-framing`) takes the same
+//! enum — `line | length | binary` — and rejects anything else with a
+//! typed error at parse time ([`Framing::parse`]); there is no
+//! fallback framing.
 //!
 //! Examples:
 //! ```text
@@ -17,6 +24,7 @@
 //! mltuner serve --shards 0..2 --listen 127.0.0.1:5001 --optimizer adarevision
 //! mltuner serve --shards 2..4 --listen 127.0.0.1:5002 --optimizer adarevision
 //! mltuner tune --app mf --ps remote://127.0.0.1:5001,127.0.0.1:5002
+//! mltuner top --ps remote://127.0.0.1:5001,127.0.0.1:5002
 //! mltuner baseline --kind hyperband --profile alexnet_cifar10
 //! mltuner train --profile googlenet --lr 0.03 --momentum 0.9
 //! ```
@@ -26,30 +34,37 @@ use std::io::Write as _;
 use anyhow::{bail, Result};
 
 use mltuner::baselines::{HyperbandDriver, SpearmintDriver};
-use mltuner::comm::socket::{Framing, PsListener, SocketSpec};
+use mltuner::comm::socket::{parse_server_list, Framing, PsListener, SocketSpec};
 use mltuner::config::ExperimentConfig;
 use mltuner::optim::OptimizerKind;
 use mltuner::ps::remote::{ShardRange, ShardServer};
 use mltuner::runtime::Runtime;
+use mltuner::top::TopConfig;
 use mltuner::tuner::MLtuner;
 use mltuner::util::cli::Args;
 
 const USAGE: &str = "\
 mltuner — automatic machine learning tuning (paper reproduction)
 
-USAGE: mltuner <tune|serve|baseline|train|info> [--flags]
+USAGE: mltuner <tune|serve|top|baseline|train|info> [--flags]
 
 tune:     --config <file.toml> | --app sim --profile <name>
           --seed N --searcher hyperopt|random|grid|spearmint --csv out.csv
           --ps remote://host:port,host:port --ps-framing line|length|binary
           --checkpoint-dir DIR --checkpoint-every N --resume
+          --stats-json out.json (final stats snapshot, machine-readable)
           (--crash-after-clocks N: fault injection for recovery tests)
 serve:    --shards a..b --listen host:port|unix:/path
           --optimizer sgd|adam|adarevision|... --framing line|length|binary
+top:      --ps remote://host:port,host:port --framing line|length|binary
+          --interval-ms N --json --once
 baseline: --kind spearmint|hyperband --profile <name> --seed N
           --budget <virtual seconds> --csv out.csv
 train:    --profile <name> --lr F --momentum F --seed N --max-epochs N
 info:     --artifacts-dir artifacts
+
+Framing flags share one enum (line | length | binary); unknown values
+are rejected, never defaulted.
 ";
 
 fn main() -> Result<()> {
@@ -58,6 +73,7 @@ fn main() -> Result<()> {
     match cmd {
         "tune" => cmd_tune(&args),
         "serve" => cmd_serve(&args),
+        "top" => cmd_top(&args),
         "baseline" => cmd_baseline(&args),
         "train" => cmd_train(&args),
         "info" => cmd_info(&args),
@@ -93,6 +109,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     std::io::stdout().flush()?;
     ShardServer::new(shards, optimizer, framing).serve(listener)
+}
+
+/// Live observability dashboard: subscribe to every shard server's
+/// streaming stats channel and render the merged cluster view
+/// (`--json` for newline-delimited delta frames, `--once` for
+/// scripted probes — the distributed CI leg drives exactly that).
+fn cmd_top(args: &Args) -> Result<()> {
+    let ps = args
+        .get("ps")
+        .ok_or_else(|| anyhow::anyhow!("top needs --ps remote://host:port,..."))?;
+    let cfg = TopConfig {
+        servers: parse_server_list(ps)?,
+        framing: Framing::parse(args.get_or("framing", "line"))?,
+        interval_ms: args.get_u64("interval-ms", 1000),
+        json: args.get_bool("json", false),
+        once: args.get_bool("once", false),
+        max_ticks: None,
+    };
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    mltuner::top::run(&cfg, &mut out)
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
@@ -143,25 +180,25 @@ fn cmd_tune(args: &Args) -> Result<()> {
     println!("tunings:         {}", report.tunings.len());
     println!(
         "branching:       {} forks, peak {} live, {} COW buffer copies",
-        report.snapshots.forks,
-        report.snapshots.peak_branches,
-        report.snapshots.cow_buffer_copies
+        report.stats.store.forks,
+        report.stats.store.peak_branches,
+        report.stats.store.cow_buffer_copies
     );
     println!(
         "server:          {} rows in {} update batches, {} rows batch-read \
          ({} read RPCs), {} shard-lock contentions",
-        report.snapshots.batched_rows,
-        report.snapshots.batch_calls,
-        report.snapshots.reads_batched,
-        report.snapshots.read_rpcs,
-        report.snapshots.shard_lock_contentions
+        report.stats.server.batched_rows,
+        report.stats.server.batch_calls,
+        report.stats.server.reads_batched,
+        report.stats.store.read_rpcs,
+        report.stats.server.shard_lock_contentions
     );
     println!(
         "server wire:     {} B tx, {} B rx, {} json + {} binary frames",
-        report.snapshots.bytes_tx,
-        report.snapshots.bytes_rx,
-        report.snapshots.frames_json,
-        report.snapshots.frames_bin
+        report.stats.wire.bytes_tx,
+        report.stats.wire.bytes_rx,
+        report.stats.wire.frames_json,
+        report.stats.wire.frames_bin
     );
     for (i, t) in report.tunings.iter().enumerate() {
         println!(
@@ -179,6 +216,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
     if let Some(path) = args.get("csv") {
         let f = std::fs::File::create(path)?;
         report.recorder.write_csv(f)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("stats-json") {
+        std::fs::write(path, report.stats.to_json())?;
         println!("wrote {path}");
     }
     Ok(())

@@ -122,6 +122,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::comm::BranchId;
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
+use crate::stats::{ServerPlane, ShardRows, Snapshot, StorePlane, TrialEvent};
 
 use checkpoint::SegmentMeta;
 use pool::{MemoryPool, PoolStats};
@@ -177,28 +178,17 @@ struct Counters {
     reads_batched: AtomicU64,
 }
 
-/// Concurrency statistics snapshot (surfaced through
-/// [`crate::training::SnapshotStats`] and `mltuner tune`).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct ServerStats {
-    /// Shard-lock acquisitions that had to wait behind another thread.
-    pub shard_lock_contentions: u64,
-    /// Number of `apply_batch` calls served.
-    pub batch_calls: u64,
-    /// Rows applied through the batched path.
-    pub batched_rows: u64,
-    /// Rows requested through the batched read path (`read_rows`).
-    pub reads_batched: u64,
-    /// Wire bytes written by the shard server (frame payloads +
-    /// headers).  Zero for the in-process engine, which has no wire.
-    pub bytes_tx: u64,
-    /// Wire bytes read by the shard server.
-    pub bytes_rx: u64,
-    /// Data-plane frames served in the JSON codec (the control-plane /
-    /// debug format).
-    pub frames_json: u64,
-    /// Data-plane frames served in the binary codec.
-    pub frames_bin: u64,
+/// Per-shard row-throughput counters (relaxed atomics, one slot per
+/// shard so hot-path increments never share a cache line with the
+/// control plane).  These feed the [`ShardRows`] drill-down of the
+/// observability plane.
+#[derive(Debug, Default)]
+struct ShardCounters {
+    /// Update rows routed to this shard (single + batched; a missing
+    /// row still counts — the request hit the shard either way).
+    rows_applied: AtomicU64,
+    /// Read rows routed to this shard (same convention).
+    rows_read: AtomicU64,
 }
 
 /// Number of shard guards live on the current thread — the debug-build
@@ -350,6 +340,7 @@ pub struct ParamServer {
     control: Mutex<ControlPlane>,
     optimizer: Optimizer,
     counters: Counters,
+    shard_counters: Vec<ShardCounters>,
 }
 
 impl ParamServer {
@@ -360,6 +351,7 @@ impl ParamServer {
             control: Mutex::new(ControlPlane::default()),
             optimizer,
             counters: Counters::default(),
+            shard_counters: (0..num_shards).map(|_| ShardCounters::default()).collect(),
         }
     }
 
@@ -563,21 +555,56 @@ impl ParamServer {
         s.allocated + s.reused
     }
 
-    /// Concurrency counters: lock contention and batching statistics.
-    pub fn server_stats(&self) -> ServerStats {
-        ServerStats {
-            shard_lock_contentions: self.counters.contended.load(Ordering::Relaxed),
-            batch_calls: self.counters.batch_calls.load(Ordering::Relaxed),
-            batched_rows: self.counters.batched_rows.load(Ordering::Relaxed),
-            reads_batched: self.counters.reads_batched.load(Ordering::Relaxed),
-            // No wire: the in-process engine serves calls, not frames.
-            // `ShardServer` overlays its transport counters on top of
-            // this snapshot before answering a `ServerStats` probe.
-            bytes_tx: 0,
-            bytes_rx: 0,
-            frames_json: 0,
-            frames_bin: 0,
+    /// Unified stats probe (the engine's side of
+    /// [`crate::stats::Snapshot`]).  Counters are relaxed-atomic loads
+    /// racing with writers, so a snapshot can be *stale* mid-clock but
+    /// each counter individually never moves backwards — the
+    /// monotonic-merge invariant the observability plane relies on.
+    /// The wire plane is zeroed: the in-process engine serves calls,
+    /// not frames; `ShardServer` overlays its transport counters
+    /// before answering a probe.
+    pub fn snapshot(&self) -> Snapshot {
+        let pool = self.pool_stats();
+        let mut rows_applied = 0u64;
+        let mut rows_read = 0u64;
+        for c in &self.shard_counters {
+            rows_applied += c.rows_applied.load(Ordering::Relaxed);
+            rows_read += c.rows_read.load(Ordering::Relaxed);
         }
+        Snapshot {
+            server: ServerPlane {
+                shard_lock_contentions: self.counters.contended.load(Ordering::Relaxed),
+                batch_calls: self.counters.batch_calls.load(Ordering::Relaxed),
+                batched_rows: self.counters.batched_rows.load(Ordering::Relaxed),
+                reads_batched: self.counters.reads_batched.load(Ordering::Relaxed),
+                rows_applied,
+                rows_read,
+            },
+            store: StorePlane {
+                forks: self.fork_count(),
+                peak_branches: self.peak_branches(),
+                live_branches: ParamServer::live_branches(self).len(),
+                cow_buffer_copies: pool.allocated + pool.reused,
+                read_rpcs: 0, // in-process: reads never cross a wire
+            },
+            pool,
+            ..Snapshot::default()
+        }
+    }
+
+    /// Per-shard cumulative row throughput, local shard-index order.
+    /// `ShardServer` re-addresses these to global shard ids before
+    /// putting them on the wire.
+    pub fn shard_rows(&self) -> Vec<ShardRows> {
+        self.shard_counters
+            .iter()
+            .enumerate()
+            .map(|(i, c)| ShardRows {
+                shard: i as u64,
+                rows_applied: c.rows_applied.load(Ordering::Relaxed),
+                rows_read: c.rows_read.load(Ordering::Relaxed),
+            })
+            .collect()
     }
 
     /// Is this row's buffer still shared with another branch?
@@ -601,6 +628,7 @@ impl ParamServer {
         f: impl FnOnce(&Entry) -> R,
     ) -> Option<R> {
         let sid = self.sid(table, key);
+        self.shard_counters[sid].rows_read.fetch_add(1, Ordering::Relaxed);
         let st = read_shard(&self.shards[sid], &self.counters);
         st.shard.get(branch, table, key).map(f)
     }
@@ -655,6 +683,9 @@ impl ParamServer {
             if groups[sid].is_empty() {
                 continue;
             }
+            self.shard_counters[sid]
+                .rows_read
+                .fetch_add(groups[sid].len() as u64, Ordering::Relaxed);
             let st = read_shard(&self.shards[sid], &self.counters);
             for &i in &groups[sid] {
                 let (table, key) = keys[i];
@@ -698,6 +729,7 @@ impl ParamServer {
     ) -> Result<()> {
         let sid = self.sid(table, key);
         let opt = self.optimizer;
+        self.shard_counters[sid].rows_applied.fetch_add(1, Ordering::Relaxed);
         let mut st = write_shard(&self.shards[sid], &self.counters);
         let ShardState { shard, pool } = &mut *st;
         match shard.get_mut(branch, table, key, pool) {
@@ -744,6 +776,9 @@ impl ParamServer {
             if groups[sid].is_empty() {
                 continue;
             }
+            self.shard_counters[sid]
+                .rows_applied
+                .fetch_add(groups[sid].len() as u64, Ordering::Relaxed);
             let mut st = write_shard(&self.shards[sid], &self.counters);
             let ShardState { shard, pool } = &mut *st;
             for &i in &groups[sid] {
@@ -822,29 +857,6 @@ impl ParamServer {
             .map(|lock| read_shard(lock, &self.counters).shard.branch_row_count(branch))
             .collect()
     }
-}
-
-/// One snapshot of a store's branch/pool/concurrency accounting — the
-/// [`ParamStore`]-level view that feeds
-/// [`crate::training::SnapshotStats`].  For a remote store the fields
-/// are aggregated over all shard servers (counters and pool stats sum;
-/// fork count, peak and live branches are replicated identically on
-/// every server, so the maximum is taken).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct StoreStats {
-    pub forks: u64,
-    pub peak_branches: usize,
-    pub live_branches: usize,
-    /// Buffers privately materialized by copy-on-write
-    /// (`pool.allocated + pool.reused`).
-    pub cow_buffer_copies: u64,
-    /// Data-plane `ReadRows` RPCs issued by this store's client side.
-    /// Always 0 for the in-process server (no wire); for a remote
-    /// store this is the dominant per-clock RPC count the batched read
-    /// plane bounds at O(shard servers × workers).
-    pub read_rpcs: u64,
-    pub server: ServerStats,
-    pub pool: PoolStats,
 }
 
 /// The parameter-server interface the training systems drive —
@@ -984,8 +996,23 @@ pub trait ParamStore: Send + Sync {
     /// Sorted live branch ids.
     fn live_branches(&self) -> Result<Vec<BranchId>>;
 
-    /// Branch/pool/concurrency accounting snapshot.
-    fn store_stats(&self) -> Result<StoreStats>;
+    /// The unified, versioned stats document
+    /// ([`crate::stats::Snapshot`]): hot-path counters, branch census,
+    /// pool census and wire counters in one probe.  For a remote store
+    /// the planes are merged over all shard servers (counters and pool
+    /// stats sum; fork count and peak are replicated identically on
+    /// every server, so the maximum is taken) and `store.read_rpcs` is
+    /// overlaid from the client side.
+    fn stats(&self) -> Result<Snapshot>;
+
+    /// Publish a tuner trial-progress event into the observability
+    /// stream, so `mltuner top` subscribers see per-trial progress
+    /// next to the server counters.  Local stores have no stream —
+    /// the default is a no-op; the remote store broadcasts the event
+    /// to every shard server.
+    fn publish_progress(&self, _event: TrialEvent) -> Result<()> {
+        Ok(())
+    }
 }
 
 impl ParamStore for ParamServer {
@@ -1093,17 +1120,8 @@ impl ParamStore for ParamServer {
         Ok(ParamServer::live_branches(self))
     }
 
-    fn store_stats(&self) -> Result<StoreStats> {
-        let pool = self.pool_stats();
-        Ok(StoreStats {
-            forks: self.fork_count(),
-            peak_branches: self.peak_branches(),
-            live_branches: ParamServer::live_branches(self).len(),
-            cow_buffer_copies: pool.allocated + pool.reused,
-            read_rpcs: 0, // in-process: reads never cross a wire
-            server: self.server_stats(),
-            pool,
-        })
+    fn stats(&self) -> Result<Snapshot> {
+        Ok(self.snapshot())
     }
 }
 
@@ -1238,8 +1256,12 @@ impl ParamStore for PsHandle {
         dispatch!(self, ps => ParamStore::live_branches(ps))
     }
 
-    fn store_stats(&self) -> Result<StoreStats> {
-        dispatch!(self, ps => ParamStore::store_stats(ps))
+    fn stats(&self) -> Result<Snapshot> {
+        dispatch!(self, ps => ParamStore::stats(ps))
+    }
+
+    fn publish_progress(&self, event: TrialEvent) -> Result<()> {
+        dispatch!(self, ps => ParamStore::publish_progress(ps, event))
     }
 }
 
@@ -1472,11 +1494,17 @@ mod tests {
             (0..16u64).map(|k| (0, k, &grad[..])).collect();
         ps.apply_batch(0, &updates, Hyper::default()).unwrap();
         ps.apply_batch(0, &updates[..4], Hyper::default()).unwrap();
-        let st = ps.server_stats();
+        let st = ps.snapshot().server;
         assert_eq!(st.batch_calls, 2);
         assert_eq!(st.batched_rows, 20);
+        assert_eq!(st.rows_applied, 20);
         // single-threaded: no shard lock was ever contended
         assert_eq!(st.shard_lock_contentions, 0);
+        // the per-shard drill-down covers every shard and sums to the
+        // plane total
+        let per_shard = ps.shard_rows();
+        assert_eq!(per_shard.len(), ps.num_shards());
+        assert_eq!(per_shard.iter().map(|s| s.rows_applied).sum::<u64>(), 20);
     }
 
     #[test]
@@ -1504,8 +1532,13 @@ mod tests {
             assert_eq!(Some(data.clone()), ps.read_row(0, t, k));
             assert_eq!(accum, &None);
         }
-        let st = ps.server_stats();
+        let st = ps.snapshot().server;
         assert_eq!(st.reads_batched, 18 + 16);
+        // every single-row and batched read above routed to a shard:
+        // 16 accum reads + 18 batched + 18 compare reads + 16 batched
+        // + 16 plain reads
+        assert_eq!(st.rows_read, 16 + 18 + 18 + 16 + 16);
+        assert_eq!(ps.shard_rows().iter().map(|s| s.rows_read).sum::<u64>(), st.rows_read);
         assert!(ps.read_rows(0, &[], false).is_empty());
     }
 

@@ -71,13 +71,14 @@ use crate::comm::poll::CoreMetrics;
 use crate::comm::socket::{Conn, Framing, PsListener, SocketSpec};
 use crate::comm::wire::{
     decode_ps_reply, decode_ps_request, encode_ps_reply, encode_ps_request, PsReply, PsRequest,
-    PsStats, WireCodec,
+    WireCodec,
 };
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
+use crate::stats::{merge_cluster, ClusterView, ServerDelta, Snapshot, TrialEvent};
 
 use super::checkpoint::{self, SegmentMeta};
 use super::storage::{RowKey, TableId};
-use super::{ParamServer, ParamStore, route_shard, RowData, ServerStats, StoreStats};
+use super::{ParamServer, ParamStore, route_shard, RowData};
 
 /// A contiguous range `begin..end` of global shard ids.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -111,6 +112,12 @@ impl fmt::Display for ShardRange {
     }
 }
 
+/// Cap on tuner trial-progress events a shard server retains for the
+/// observability stream.  The map is keyed `(episode, trial)` with
+/// latest-event-wins, so the cap only evicts when the tuner has moved
+/// on to newer trials — exactly the ones a dashboard no longer shows.
+const MAX_TRACKED_TRIALS: usize = 64;
+
 /// One shard-server process: the concurrent engine behind a socket.
 pub struct ShardServer {
     ps: ParamServer,
@@ -118,12 +125,18 @@ pub struct ShardServer {
     optimizer: OptimizerKind,
     framing: Framing,
     /// Transport counters, filled by the event loop and overlaid on
-    /// the engine's `ServerStats` when answering a stats probe.
+    /// the engine's [`crate::stats::Snapshot`] wire plane when
+    /// answering a stats probe or pushing a delta.
     metrics: CoreMetrics,
     /// Data-plane frames executed per codec (the event loop counts
     /// bytes; the codec split is only known after dispatch, here).
     frames_json: AtomicU64,
     frames_bin: AtomicU64,
+    /// Latest tuner trial-progress events, keyed `(episode, trial)`,
+    /// bounded at [`MAX_TRACKED_TRIALS`].  Replicated onto every
+    /// server by the coordinator's `PublishProgress` broadcast so any
+    /// single subscriber sees trial progress next to shard counters.
+    trials: Mutex<BTreeMap<(u32, u32), TrialEvent>>,
     #[cfg(not(unix))]
     shutdown: std::sync::atomic::AtomicBool,
 }
@@ -144,6 +157,7 @@ impl ShardServer {
             metrics: CoreMetrics::default(),
             frames_json: AtomicU64::new(0),
             frames_bin: AtomicU64::new(0),
+            trials: Mutex::new(BTreeMap::new()),
             #[cfg(not(unix))]
             shutdown: std::sync::atomic::AtomicBool::new(false),
         }
@@ -166,6 +180,63 @@ impl ShardServer {
     /// acceptance test reads `peak_conns` and `workers` here).
     pub fn metrics(&self) -> &CoreMetrics {
         &self.metrics
+    }
+
+    /// One cumulative [`ServerDelta`]: the engine's snapshot overlaid
+    /// with transport counters the engine cannot know (it serves
+    /// calls, not frames), per-shard row throughput re-addressed from
+    /// local shard indices to **global** shard ids, the event loop's
+    /// RPC service-time histogram, the branch census, and the latest
+    /// tuner trial events.  Every counter is a relaxed-atomic load of
+    /// a cumulative total — never a diff — which is what makes the
+    /// client's monotonic merge (latest frame wins) correct.
+    pub fn delta(&self) -> ServerDelta {
+        let snap = self.ps.snapshot();
+        let mut shards = self.ps.shard_rows();
+        for s in &mut shards {
+            s.shard += self.range.begin as u64;
+        }
+        let branches = self
+            .ps
+            .live_branches()
+            .into_iter()
+            .map(|b| (b, self.ps.branch_row_count(b)))
+            .collect();
+        let trials = self
+            .trials
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .values()
+            .copied()
+            .collect();
+        let mut wire = snap.wire;
+        wire.bytes_tx = self.metrics.bytes_tx.load(Ordering::Relaxed);
+        wire.bytes_rx = self.metrics.bytes_rx.load(Ordering::Relaxed);
+        wire.frames_json = self.frames_json.load(Ordering::Relaxed);
+        wire.frames_bin = self.frames_bin.load(Ordering::Relaxed);
+        ServerDelta {
+            server: snap.server,
+            store: snap.store,
+            pool: snap.pool,
+            wire,
+            shards,
+            rpc_hist: self.metrics.rpc_hist.snapshot(),
+            branches,
+            trials,
+            ..ServerDelta::default()
+        }
+    }
+
+    /// Retain one trial-progress event for the stats stream
+    /// (latest-wins per `(episode, trial)`, oldest key evicted at the
+    /// cap).
+    fn record_trial(&self, event: TrialEvent) {
+        let mut trials = self.trials.lock().unwrap_or_else(|e| e.into_inner());
+        let key = (event.episode, event.trial);
+        if trials.len() >= MAX_TRACKED_TRIALS && !trials.contains_key(&key) {
+            trials.pop_first();
+        }
+        trials.insert(key, event);
     }
 
     /// Serve connections until a `Shutdown` request arrives: the
@@ -230,7 +301,7 @@ impl ShardServer {
                     Ok(None) | Err(_) => return,
                 }
             };
-            let (reply, shutdown) = self.execute_frame(&frame);
+            let (reply, shutdown, subscribe) = self.execute_frame(&frame);
             let sent = if self.framing == Framing::Line {
                 match String::from_utf8(reply) {
                     Ok(text) => conn.send(&text).is_ok(),
@@ -240,6 +311,24 @@ impl ShardServer {
                 conn.send_bytes(&reply).is_ok()
             };
             if !sent {
+                return;
+            }
+            if let Some(interval_ms) = subscribe {
+                // no poller to tick here: dedicate this connection's
+                // thread to the push stream until the peer hangs up
+                let interval = interval_ms.clamp(50, 10_000);
+                while !self.shutdown.load(Ordering::SeqCst) {
+                    std::thread::sleep(std::time::Duration::from_millis(interval));
+                    let body = encode_ps_reply(&PsReply::StatsDelta(self.delta()));
+                    let sent = if self.framing == Framing::Line {
+                        conn.send(&body).is_ok()
+                    } else {
+                        conn.send_bytes(body.as_bytes()).is_ok()
+                    };
+                    if !sent {
+                        return;
+                    }
+                }
                 return;
             }
             if shutdown {
@@ -257,7 +346,10 @@ impl ShardServer {
     /// their first byte — and encode the reply in the same codec.
     /// Undecodable frames get an error reply, not a disconnect; a
     /// frame that is neither binary nor UTF-8 is answered in JSON.
-    fn execute_frame(&self, body: &[u8]) -> (Vec<u8>, bool) {
+    /// The third element is the stats-subscription interval when the
+    /// frame was a `SubscribeStats` (the transport layer owns the
+    /// push cadence, so the request only acknowledges here).
+    fn execute_frame(&self, body: &[u8]) -> (Vec<u8>, bool, Option<u64>) {
         let is_bin = binwire::is_binary_frame(body);
         if is_bin {
             self.frames_bin.fetch_add(1, Ordering::Relaxed);
@@ -272,16 +364,21 @@ impl ShardServer {
                 Err(_) => Err(anyhow!("frame is neither a binary opcode nor UTF-8 JSON")),
             }
         };
-        let (reply, shutdown) = match decoded {
+        let (reply, shutdown, subscribe) = match decoded {
             Ok(req) => {
                 let shutdown = req == PsRequest::Shutdown;
-                (self.handle(&req), shutdown)
+                let subscribe = match req {
+                    PsRequest::SubscribeStats { interval_ms } => Some(interval_ms),
+                    _ => None,
+                };
+                (self.handle(&req), shutdown, subscribe)
             }
             Err(e) => (
                 PsReply::Err {
                     message: format!("bad request: {e}"),
                 },
                 false,
+                None,
             ),
         };
         let encoded = if is_bin {
@@ -299,7 +396,7 @@ impl ShardServer {
         } else {
             encode_ps_reply(&reply).into_bytes()
         };
-        (encoded, shutdown)
+        (encoded, shutdown, subscribe)
     }
 
     /// Dispatch one request against the engine (transport-free, so
@@ -428,27 +525,11 @@ impl ShardServer {
                     },
                 }
             }
-            PsRequest::ServerStats => {
-                let branches = self
-                    .ps
-                    .live_branches()
-                    .into_iter()
-                    .map(|b| (b, self.ps.branch_row_count(b)))
-                    .collect();
-                // overlay the transport counters the engine cannot
-                // know (it serves calls, not frames)
-                let mut server = self.ps.server_stats();
-                server.bytes_tx = self.metrics.bytes_tx.load(Ordering::Relaxed);
-                server.bytes_rx = self.metrics.bytes_rx.load(Ordering::Relaxed);
-                server.frames_json = self.frames_json.load(Ordering::Relaxed);
-                server.frames_bin = self.frames_bin.load(Ordering::Relaxed);
-                PsReply::Stats(PsStats {
-                    server,
-                    pool: self.ps.pool_stats(),
-                    forks: self.ps.fork_count(),
-                    peak_branches: self.ps.peak_branches(),
-                    branches,
-                })
+            PsRequest::ServerStats => PsReply::Stats(self.delta()),
+            PsRequest::SubscribeStats { .. } => PsReply::Ok,
+            PsRequest::PublishProgress { event } => {
+                self.record_trial(*event);
+                PsReply::Ok
             }
             PsRequest::Shutdown => PsReply::Ok,
         }
@@ -456,12 +537,26 @@ impl ShardServer {
 }
 
 /// The event loop's view of the shard server: one frame body in, one
-/// reply body out, executed on the worker pool.
+/// reply body out, executed on the worker pool; the tick hook pushes
+/// stats deltas to subscribers from the poll thread.
 #[cfg(unix)]
 impl crate::comm::poll::FrameHandler for ShardServer {
     fn on_frame(&self, body: Vec<u8>) -> crate::comm::poll::FrameResult {
-        let (reply, shutdown) = self.execute_frame(&body);
-        crate::comm::poll::FrameResult { reply, shutdown }
+        let (reply, shutdown, subscribe) = self.execute_frame(&body);
+        crate::comm::poll::FrameResult {
+            reply,
+            shutdown,
+            subscribe,
+        }
+    }
+
+    /// The push stream always rides the JSON codec, whatever the
+    /// connection's framing: subscribers dispatch on the frame's
+    /// first byte exactly like data-plane replies, and a JSON body is
+    /// legal under every framing (line framing rejects embedded
+    /// newlines, which compact JSON never contains).
+    fn on_tick(&self) -> Option<Vec<u8>> {
+        Some(encode_ps_reply(&PsReply::StatsDelta(self.delta())).into_bytes())
     }
 }
 
@@ -539,7 +634,8 @@ pub struct RemoteParamServer {
     /// the whole cluster runs `--framing binary`).
     codec: WireCodec,
     /// Data-plane `ReadRows` RPCs issued by this client (surfaced as
-    /// `StoreStats::read_rpcs`; the distributed CI leg bounds it at
+    /// `store.read_rpcs` in the stats snapshot; the distributed CI
+    /// leg bounds it at
     /// shard servers × workers per MF training clock).
     read_rpcs: AtomicU64,
 }
@@ -767,11 +863,13 @@ impl RemoteParamServer {
         }
     }
 
-    /// Probe every shard server's stats, in server order.
-    pub fn probe_stats(&self) -> Result<Vec<PsStats>> {
+    /// Probe every shard server's cumulative [`ServerDelta`], in
+    /// server order (the pull side of the observability plane; the
+    /// push side streams the same payload via `SubscribeStats`).
+    pub fn probe_stats(&self) -> Result<Vec<ServerDelta>> {
         (0..self.servers.len())
             .map(|si| match self.request(si, &PsRequest::ServerStats)? {
-                PsReply::Stats(s) => Ok(s),
+                PsReply::Stats(d) => Ok(d),
                 other => bail!("{}: unexpected reply {other:?}", self.servers[si].spec),
             })
             .collect()
@@ -1052,36 +1150,83 @@ impl ParamStore for RemoteParamServer {
         Ok(all)
     }
 
-    /// Aggregate over all shard servers: counters and pool stats sum
-    /// (each buffer lives in exactly one server's pools); fork count,
-    /// peak and live branches are replicated on every server, so the
-    /// maximum is the global value.
-    fn store_stats(&self) -> Result<StoreStats> {
-        let probes = self.probe_stats()?;
-        let mut out = StoreStats::default();
-        let mut live: BTreeMap<BranchId, ()> = BTreeMap::new();
-        let mut server = ServerStats::default();
-        for s in &probes {
-            out.forks = out.forks.max(s.forks);
-            out.peak_branches = out.peak_branches.max(s.peak_branches);
-            for (b, _) in &s.branches {
-                live.insert(*b, ());
+    /// Aggregate over all shard servers via the same
+    /// [`merge_cluster`] the streaming collector uses: counters, pool
+    /// and wire planes sum (each buffer lives in exactly one server's
+    /// pools); fork count, peak and live branches are replicated on
+    /// every server, so the maximum is the global value.
+    /// `store.read_rpcs` is a client-side counter, overlaid here.
+    fn stats(&self) -> Result<Snapshot> {
+        let deltas = self.probe_stats()?;
+        let mut snap = merge_cluster(&deltas).snapshot;
+        snap.store.read_rpcs = self.read_rpcs.load(Ordering::Relaxed);
+        Ok(snap)
+    }
+
+    /// Replicate one tuner trial-progress event onto every shard
+    /// server, so any single `mltuner top` subscriber sees trial
+    /// progress next to that server's counters.
+    fn publish_progress(&self, event: TrialEvent) -> Result<()> {
+        let req = PsRequest::PublishProgress { event };
+        for (si, reply) in self.broadcast(&req).into_iter().enumerate() {
+            match reply? {
+                PsReply::Ok => {}
+                PsReply::Err { message } => bail!("{}: {message}", self.servers[si].spec),
+                other => bail!("{}: unexpected reply {other:?}", self.servers[si].spec),
             }
-            server.shard_lock_contentions += s.server.shard_lock_contentions;
-            server.batch_calls += s.server.batch_calls;
-            server.batched_rows += s.server.batched_rows;
-            server.reads_batched += s.server.reads_batched;
-            server.bytes_tx += s.server.bytes_tx;
-            server.bytes_rx += s.server.bytes_rx;
-            server.frames_json += s.server.frames_json;
-            server.frames_bin += s.server.frames_bin;
-            out.pool.accumulate(s.pool);
         }
-        out.live_branches = live.len();
-        out.cow_buffer_copies = out.pool.allocated + out.pool.reused;
-        out.read_rpcs = self.read_rpcs.load(Ordering::Relaxed);
-        out.server = server;
-        Ok(out)
+        Ok(())
+    }
+}
+
+/// Client-side merge point for the streaming stats channel: one slot
+/// per shard server, each holding that server's **latest** cumulative
+/// [`ServerDelta`].  Because deltas carry cumulative totals — never
+/// diffs — merging is latest-frame-wins per server plus
+/// [`merge_cluster`] across servers, and frames may be dropped or
+/// reordered per server without corrupting the view.
+///
+/// `ingest` enforces the monotonic-merge invariant: within one
+/// server's stream no counter may ever decrease.  A violating frame
+/// is rejected wholesale — the previous good frame stays — and the
+/// error is surfaced to the caller instead of silently rewinding the
+/// dashboard.
+pub struct StatsCollector {
+    per_server: Mutex<Vec<Option<ServerDelta>>>,
+}
+
+impl StatsCollector {
+    pub fn new(servers: usize) -> Self {
+        StatsCollector {
+            per_server: Mutex::new(vec![None; servers]),
+        }
+    }
+
+    /// Install `delta` as server `server`'s latest frame, after
+    /// checking it never moves a counter backwards relative to the
+    /// frame it replaces.
+    pub fn ingest(&self, server: usize, delta: ServerDelta) -> Result<()> {
+        let mut slots = self.per_server.lock().unwrap_or_else(|e| e.into_inner());
+        let slot = slots
+            .get_mut(server)
+            .ok_or_else(|| anyhow!("stats delta from unknown server index {server}"))?;
+        if let Some(prev) = slot {
+            delta.check_monotonic(prev)?;
+        }
+        *slot = Some(delta);
+        Ok(())
+    }
+
+    /// How many servers have reported at least one frame.
+    pub fn servers_reporting(&self) -> usize {
+        let slots = self.per_server.lock().unwrap_or_else(|e| e.into_inner());
+        slots.iter().flatten().count()
+    }
+
+    /// Merge the latest per-server frames into one cluster view.
+    pub fn view(&self) -> ClusterView {
+        let slots = self.per_server.lock().unwrap_or_else(|e| e.into_inner());
+        merge_cluster(slots.iter().flatten())
     }
 }
 
@@ -1116,6 +1261,7 @@ pub fn spawn_local_server(
 mod tests {
     use super::*;
     use crate::ps::pool::PoolStats;
+    use crate::stats::ShardRows;
 
     fn range(begin: usize, end: usize) -> ShardRange {
         ShardRange { begin, end }
@@ -1215,19 +1361,19 @@ mod tests {
         assert_eq!(remote.live_branches().unwrap(), vec![0, 1]);
 
         // branch/pool accounting aggregates to the same census
-        let rs = remote.store_stats().unwrap();
-        let ls = local.store_stats().unwrap();
-        assert_eq!(rs.forks, ls.forks);
-        assert_eq!(rs.live_branches, ls.live_branches);
-        assert_eq!(rs.peak_branches, ls.peak_branches);
-        assert_eq!(rs.cow_buffer_copies, ls.cow_buffer_copies);
+        let rs = ParamStore::stats(&remote).unwrap();
+        let ls = ParamStore::stats(&local).unwrap();
+        assert_eq!(rs.store.forks, ls.store.forks);
+        assert_eq!(rs.store.live_branches, ls.store.live_branches);
+        assert_eq!(rs.store.peak_branches, ls.store.peak_branches);
+        assert_eq!(rs.store.cow_buffer_copies, ls.store.cow_buffer_copies);
         assert_eq!(rs.pool.idle, ls.pool.idle);
 
         // free: last-owner reclamation happens server-side
         remote.free_branch(1).unwrap();
         ParamStore::free_branch(&local, 1).unwrap();
-        let rs = remote.store_stats().unwrap();
-        let ls = local.store_stats().unwrap();
+        let rs = ParamStore::stats(&remote).unwrap();
+        let ls = ParamStore::stats(&local).unwrap();
         assert_eq!(rs.pool, ls.pool, "pool census after free");
         assert_eq!(remote.live_branches().unwrap(), vec![0]);
 
@@ -1495,9 +1641,9 @@ mod tests {
             }
         }
         keys.push((0, 99)); // missing row rides along as None
-        let before = remote.store_stats().unwrap().read_rpcs;
+        let before = ParamStore::stats(&remote).unwrap().store.read_rpcs;
         let rows = remote.read_rows(0, &keys, true).unwrap();
-        let after = remote.store_stats().unwrap().read_rpcs;
+        let after = ParamStore::stats(&remote).unwrap().store.read_rpcs;
         // one ReadRows RPC per shard server, however many keys
         assert_eq!(after - before, 2);
         assert_eq!(rows.len(), keys.len());
@@ -1643,8 +1789,101 @@ mod tests {
         let batched: u64 = probes.iter().map(|p| p.server.batched_rows).sum();
         assert_eq!(batched, 32, "every routed row lands in some server's batch");
         assert!(probes.iter().all(|p| p.server.batch_calls == 1));
+        // per-shard rows re-addressed to *global* shard ids: the two
+        // servers' shard lists must tile 0..4 with no overlap
+        let mut shard_ids: Vec<u64> = probes
+            .iter()
+            .flat_map(|p| p.shards.iter().map(|s| s.shard))
+            .collect();
+        shard_ids.sort_unstable();
+        assert_eq!(shard_ids, vec![0, 1, 2, 3]);
+        let applied: u64 = probes
+            .iter()
+            .flat_map(|p| p.shards.iter().map(|s| s.rows_applied))
+            .sum();
+        assert_eq!(applied, 32, "per-shard throughput sums to the batch");
         // PoolStats default sanity: nothing was materialized yet
-        assert_eq!(remote.store_stats().unwrap().pool, PoolStats::default());
+        assert_eq!(ParamStore::stats(&remote).unwrap().pool, PoolStats::default());
         teardown(remote, handles);
+    }
+
+    /// The push side of the observability plane: a subscriber gets an
+    /// ack, then periodic `StatsDelta` frames it never asked for
+    /// again, each monotonic relative to the previous one and carrying
+    /// globally-addressed shard throughput.
+    #[cfg(unix)]
+    #[test]
+    fn subscribers_receive_pushed_deltas() {
+        let (spec, handle, _srv) =
+            spawn_local_server(range(0, 2), OptimizerKind::Sgd, Framing::Line).unwrap();
+        let remote = RemoteParamServer::connect(&[spec.clone()], Framing::Line).unwrap();
+        for k in 0..8u64 {
+            remote.insert_row(0, 0, k, vec![1.0]).unwrap();
+        }
+        let mut conn = spec.connect(Framing::Line).unwrap();
+        conn.send(&encode_ps_request(&PsRequest::SubscribeStats { interval_ms: 50 }))
+            .unwrap();
+        let ack = decode_ps_reply(&conn.recv_expect().unwrap()).unwrap();
+        assert!(matches!(ack, PsReply::Ok), "{ack:?}");
+        let collector = StatsCollector::new(1);
+        for _ in 0..2 {
+            let frame = conn.recv_expect().unwrap();
+            let PsReply::StatsDelta(d) = decode_ps_reply(&frame).unwrap() else {
+                panic!("wanted a pushed StatsDelta");
+            };
+            assert_eq!(d.version, crate::stats::SCHEMA_VERSION);
+            assert_eq!(d.shards.len(), 2);
+            collector.ingest(0, d).unwrap();
+        }
+        assert_eq!(collector.servers_reporting(), 1);
+        let view = collector.view();
+        assert_eq!(view.servers, 1);
+        assert!(view.snapshot.wire.bytes_rx > 0, "{:?}", view.snapshot.wire);
+        drop(conn);
+        remote.shutdown_all().unwrap();
+        drop(remote);
+        handle.join().unwrap().unwrap();
+    }
+
+    /// Monotonic-merge regression: a frame that rewinds any counter is
+    /// rejected wholesale (the previous good frame survives), and
+    /// concurrent per-server writers never trip each other's checks.
+    #[test]
+    fn stats_collector_rejects_backwards_counters() {
+        let collector = StatsCollector::new(2);
+        let mut d = ServerDelta::default();
+        d.server.rows_applied = 10;
+        collector.ingest(0, d.clone()).unwrap();
+        let mut rewound = d.clone();
+        rewound.server.rows_applied = 5;
+        let err = collector.ingest(0, rewound).unwrap_err();
+        assert!(err.to_string().contains("went backwards"), "{err}");
+        // the rejected frame must not have replaced the good one
+        assert_eq!(collector.view().snapshot.server.rows_applied, 10);
+        // out-of-range server index is an error, not a panic
+        assert!(collector.ingest(7, d).is_err());
+
+        // racing writers: each server's stream advances independently
+        std::thread::scope(|s| {
+            for server in 0..2usize {
+                let collector = &collector;
+                s.spawn(move || {
+                    for i in 0..100u64 {
+                        let mut d = ServerDelta::default();
+                        d.server.rows_applied = 10 + i;
+                        d.shards = vec![ShardRows {
+                            shard: server as u64,
+                            rows_applied: 10 + i,
+                            rows_read: i,
+                        }];
+                        collector.ingest(server, d).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(collector.servers_reporting(), 2);
+        let view = collector.view();
+        assert_eq!(view.snapshot.server.rows_applied, 2 * 109);
+        assert_eq!(view.shards.len(), 2);
     }
 }

@@ -1,0 +1,510 @@
+//! Unified, versioned statistics API — the observability plane's schema.
+//!
+//! One PR-8 redesign collapsed the three overlapping stats structs that
+//! had accreted (`ps::ServerStats`, `ps::StoreStats`,
+//! `training::SnapshotStats`) into the single [`Snapshot`] defined
+//! here: a schema-versioned document with nested planes —
+//! [`ServerPlane`] (engine hot-path counters), [`StorePlane`] (branch
+//! census), [`crate::ps::pool::PoolStats`] (buffer pool), [`WirePlane`]
+//! (transport).  Every probe in the stack returns it:
+//!
+//! * `ParamStore::stats` — one method, local engine and remote cluster
+//!   alike (the remote impl merges per-server [`ServerDelta`]s);
+//! * `TrainingSystem::stats` — apps overlay their branch view on the
+//!   store probe;
+//! * the wire — both the pull probe (`PsRequest::ServerStats`) and the
+//!   push stream (`PsReply::StatsDelta`) carry a [`ServerDelta`], whose
+//!   leading `version` field lets old peers reject frames from a newer
+//!   schema with a typed error instead of misdecoding them.
+//!
+//! [`ServerDelta`] counters are **cumulative totals, not diffs**: a
+//! subscriber that drops frames loses resolution, never correctness,
+//! and merging is idempotent (take the latest frame per server).  That
+//! choice gives the monotonic-merge invariant checked by
+//! [`ServerDelta::check_monotonic`]: a later frame from the same server
+//! may never report a smaller value for any cumulative counter.  Gauges
+//! (`pool.idle`, live branch census) are exempt — they legitimately
+//! shrink.
+//!
+//! [`LatencyHist`] is the coarse RPC-latency histogram recorded by the
+//! `comm/poll.rs` worker pool: fixed log2 microsecond buckets, relaxed
+//! atomics, zero hot-path locking.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::comm::{BranchId, Clock};
+use crate::ps::pool::PoolStats;
+
+/// Version stamped on every stats document and wire frame.  Bump it
+/// whenever a field is added, removed or reinterpreted; decoders reject
+/// unknown versions with a typed error.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Number of log2 latency buckets: bucket `i` counts requests whose
+/// service time fell in `[2^i, 2^(i+1))` microseconds (bucket 0 also
+/// absorbs sub-microsecond requests; the last bucket is unbounded
+/// above, covering everything from ~32ms up).
+pub const HIST_BUCKETS: usize = 16;
+
+/// Lock-free log2-bucketed latency histogram (microsecond scale).
+///
+/// Recording is one relaxed `fetch_add` — safe to call from every
+/// worker thread on the request hot path.  Snapshots are relaxed loads
+/// and therefore approximate under concurrent writers, which is fine:
+/// the observability plane is monotonic per bucket, not transactional.
+#[derive(Debug, Default)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+/// Bucket index for a service time in microseconds.
+pub fn bucket_of(micros: u64) -> usize {
+    let log2 = 63u32.saturating_sub((micros | 1).leading_zeros());
+    usize::try_from(log2).unwrap_or(HIST_BUCKETS - 1).min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive lower bound of bucket `i` in microseconds (for display).
+pub fn bucket_floor_micros(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << i.min(63)
+    }
+}
+
+impl LatencyHist {
+    /// Count one request that took `micros` microseconds.
+    pub fn record_micros(&self, micros: u64) {
+        self.buckets[bucket_of(micros)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Relaxed snapshot of all bucket counts.
+    pub fn snapshot(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+/// Engine hot-path counters (sums across shards; cumulative).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServerPlane {
+    /// Times a shard lock was found contended on first try.
+    pub shard_lock_contentions: u64,
+    /// `apply_batch` invocations.
+    pub batch_calls: u64,
+    /// Rows applied through `apply_batch`.
+    pub batched_rows: u64,
+    /// Rows read through `read_rows`.
+    pub reads_batched: u64,
+    /// Total rows applied (batched + single-row updates).
+    pub rows_applied: u64,
+    /// Total rows read (batched + single-row reads).
+    pub rows_read: u64,
+}
+
+/// Branch-census plane (forks/peaks are per-process cumulative).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StorePlane {
+    /// Branches forked since start.
+    pub forks: u64,
+    /// High-water mark of simultaneously live branches.
+    pub peak_branches: usize,
+    /// Branches live right now (gauge — may shrink).
+    pub live_branches: usize,
+    /// Buffers materialized for copy-on-write (`pool.allocated +
+    /// pool.reused`).
+    pub cow_buffer_copies: u64,
+    /// Client-side read RPC count (0 in server-side documents; the
+    /// remote store overlays its own counter).
+    pub read_rpcs: u64,
+}
+
+/// Transport counters (zero for the in-process engine; `ShardServer`
+/// overlays its socket-core metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WirePlane {
+    pub bytes_tx: u64,
+    pub bytes_rx: u64,
+    pub frames_json: u64,
+    pub frames_bin: u64,
+}
+
+/// The one stats document every probe in the stack returns.
+///
+/// `Default` stamps the current [`SCHEMA_VERSION`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Snapshot {
+    /// Schema version ([`SCHEMA_VERSION`] for documents built by this
+    /// build).
+    pub version: u32,
+    pub server: ServerPlane,
+    pub store: StorePlane,
+    pub pool: PoolStats,
+    pub wire: WirePlane,
+}
+
+impl Default for Snapshot {
+    fn default() -> Self {
+        Snapshot {
+            version: SCHEMA_VERSION,
+            server: ServerPlane::default(),
+            store: StorePlane::default(),
+            pool: PoolStats::default(),
+            wire: WirePlane::default(),
+        }
+    }
+}
+
+impl Snapshot {
+    /// Exact machine-readable rendering (`mltuner tune --stats-json`).
+    /// Every field is an integer, so the document is lossless without
+    /// any bit-pattern encoding.
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"v\":{},",
+                "\"server\":{{\"shard_lock_contentions\":{},\"batch_calls\":{},",
+                "\"batched_rows\":{},\"reads_batched\":{},\"rows_applied\":{},",
+                "\"rows_read\":{}}},",
+                "\"store\":{{\"forks\":{},\"peak_branches\":{},\"live_branches\":{},",
+                "\"cow_buffer_copies\":{},\"read_rpcs\":{}}},",
+                "\"pool\":{{\"reused\":{},\"allocated\":{},\"idle\":{},\"idle_len\":{}}},",
+                "\"wire\":{{\"bytes_tx\":{},\"bytes_rx\":{},\"frames_json\":{},",
+                "\"frames_bin\":{}}}}}"
+            ),
+            self.version,
+            self.server.shard_lock_contentions,
+            self.server.batch_calls,
+            self.server.batched_rows,
+            self.server.reads_batched,
+            self.server.rows_applied,
+            self.server.rows_read,
+            self.store.forks,
+            self.store.peak_branches,
+            self.store.live_branches,
+            self.store.cow_buffer_copies,
+            self.store.read_rpcs,
+            self.pool.reused,
+            self.pool.allocated,
+            self.pool.idle,
+            self.pool.idle_len,
+            self.wire.bytes_tx,
+            self.wire.bytes_rx,
+            self.wire.frames_json,
+            self.wire.frames_bin,
+        )
+    }
+}
+
+/// Per-shard row-throughput counters (cumulative).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardRows {
+    /// Global shard id.
+    pub shard: u64,
+    pub rows_applied: u64,
+    pub rows_read: u64,
+}
+
+/// One tuner trial's latest progress, published into the stream so
+/// `mltuner top` can show per-trial state next to the server counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TrialEvent {
+    /// Tuning episode (0 = initial tuning).
+    pub episode: u32,
+    /// Trial index within the episode.
+    pub trial: u32,
+    /// Branch the trial trains on.
+    pub branch: BranchId,
+    /// Training clock of the sample.
+    pub clock: Clock,
+    /// Latest progress value (loss or accuracy; NaN survives the wire
+    /// as a bit pattern).
+    pub progress: f64,
+    /// Trial-local training time at the sample.
+    pub time: f64,
+}
+
+/// One shard server's full stats document: the payload of both the
+/// pull probe reply (`PsReply::Stats`) and the pushed stream frame
+/// (`PsReply::StatsDelta`).  Counters are cumulative totals (see the
+/// module docs for why), so "delta" refers to the frame cadence, not
+/// the arithmetic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerDelta {
+    /// Schema version; decoders reject anything newer than they know.
+    pub version: u32,
+    pub server: ServerPlane,
+    pub store: StorePlane,
+    pub pool: PoolStats,
+    pub wire: WirePlane,
+    /// Per-shard throughput, one entry per shard this server owns.
+    pub shards: Vec<ShardRows>,
+    /// RPC service-time histogram (log2 µs buckets).
+    pub rpc_hist: [u64; HIST_BUCKETS],
+    /// Live branches and their local row counts.
+    pub branches: Vec<(BranchId, usize)>,
+    /// Latest published trial progress, newest episode/trial last.
+    pub trials: Vec<TrialEvent>,
+}
+
+impl Default for ServerDelta {
+    fn default() -> Self {
+        ServerDelta {
+            version: SCHEMA_VERSION,
+            server: ServerPlane::default(),
+            store: StorePlane::default(),
+            pool: PoolStats::default(),
+            wire: WirePlane::default(),
+            shards: Vec::new(),
+            rpc_hist: [0; HIST_BUCKETS],
+            branches: Vec::new(),
+            trials: Vec::new(),
+        }
+    }
+}
+
+macro_rules! check_mono {
+    ($prev:expr, $next:expr, $($field:ident . $sub:ident),+ $(,)?) => {
+        $(
+            if $next.$field.$sub < $prev.$field.$sub {
+                bail!(
+                    concat!(
+                        "stats delta went backwards: ",
+                        stringify!($field), ".", stringify!($sub),
+                        " {} -> {} (same server must never decrease a counter)"
+                    ),
+                    $prev.$field.$sub,
+                    $next.$field.$sub,
+                );
+            }
+        )+
+    };
+}
+
+impl ServerDelta {
+    /// Monotonic-merge invariant: `self` (the newer frame) may never
+    /// report a smaller value than `prev` for any cumulative counter.
+    ///
+    /// Counters are read with relaxed atomics while writers race, so a
+    /// probe can be mid-clock *stale* but never *regressing*: each
+    /// counter is its own monotonic atomic and a later probe strictly
+    /// happens-after an earlier one on the same server.  Gauges
+    /// (`pool.idle`, `pool.idle_len`, live branches, trials) are
+    /// exempt.
+    pub fn check_monotonic(&self, prev: &ServerDelta) -> Result<()> {
+        check_mono!(
+            prev,
+            self,
+            server.shard_lock_contentions,
+            server.batch_calls,
+            server.batched_rows,
+            server.reads_batched,
+            server.rows_applied,
+            server.rows_read,
+            store.forks,
+            store.peak_branches,
+            store.cow_buffer_copies,
+            store.read_rpcs,
+            pool.reused,
+            pool.allocated,
+            wire.bytes_tx,
+            wire.bytes_rx,
+            wire.frames_json,
+            wire.frames_bin,
+        );
+        for (i, b) in self.rpc_hist.iter().enumerate() {
+            if *b < prev.rpc_hist[i] {
+                bail!("stats delta went backwards: rpc_hist[{i}] {} -> {}", prev.rpc_hist[i], b);
+            }
+        }
+        for p in &prev.shards {
+            match self.shards.iter().find(|s| s.shard == p.shard) {
+                None => bail!("stats delta dropped shard {} (shard set is fixed)", p.shard),
+                Some(s) if s.rows_applied < p.rows_applied || s.rows_read < p.rows_read => {
+                    bail!(
+                        "stats delta went backwards: shard {} rows ({}, {}) -> ({}, {})",
+                        p.shard,
+                        p.rows_applied,
+                        p.rows_read,
+                        s.rows_applied,
+                        s.rows_read,
+                    );
+                }
+                Some(_) => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Cluster-wide merge of the latest delta from each server: the view
+/// `mltuner top` renders and the basis of the remote store's
+/// [`Snapshot`] probe.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClusterView {
+    pub snapshot: Snapshot,
+    /// Union of per-shard throughput across servers, shard-id order.
+    pub shards: Vec<ShardRows>,
+    /// Branch census: per-branch row counts summed across servers.
+    pub branches: Vec<(BranchId, usize)>,
+    /// Summed RPC latency histogram.
+    pub rpc_hist: [u64; HIST_BUCKETS],
+    /// Per-trial progress, deduplicated by (episode, trial).
+    pub trials: Vec<TrialEvent>,
+    /// Servers that contributed a delta.
+    pub servers: usize,
+}
+
+/// Merge per-server documents into one cluster view.
+///
+/// Throughput/wire/pool counters **sum** across servers; `forks` and
+/// `peak_branches` take the **max** (branch ops broadcast, so every
+/// server replicates them); branches **union** with row counts summed
+/// (each server holds its own rows of a branch).
+pub fn merge_cluster<'a>(deltas: impl IntoIterator<Item = &'a ServerDelta>) -> ClusterView {
+    let mut out = ClusterView::default();
+    let mut branches: BTreeMap<BranchId, usize> = BTreeMap::new();
+    let mut shards: BTreeMap<u64, ShardRows> = BTreeMap::new();
+    let mut trials: BTreeMap<(u32, u32), TrialEvent> = BTreeMap::new();
+    for d in deltas {
+        out.servers += 1;
+        let snap = &mut out.snapshot;
+        snap.version = snap.version.max(d.version);
+        snap.server.shard_lock_contentions += d.server.shard_lock_contentions;
+        snap.server.batch_calls += d.server.batch_calls;
+        snap.server.batched_rows += d.server.batched_rows;
+        snap.server.reads_batched += d.server.reads_batched;
+        snap.server.rows_applied += d.server.rows_applied;
+        snap.server.rows_read += d.server.rows_read;
+        snap.store.forks = snap.store.forks.max(d.store.forks);
+        snap.store.peak_branches = snap.store.peak_branches.max(d.store.peak_branches);
+        snap.store.read_rpcs += d.store.read_rpcs;
+        snap.pool.accumulate(d.pool);
+        snap.wire.bytes_tx += d.wire.bytes_tx;
+        snap.wire.bytes_rx += d.wire.bytes_rx;
+        snap.wire.frames_json += d.wire.frames_json;
+        snap.wire.frames_bin += d.wire.frames_bin;
+        for (i, b) in d.rpc_hist.iter().enumerate() {
+            out.rpc_hist[i] += b;
+        }
+        for s in &d.shards {
+            let e = shards.entry(s.shard).or_insert(ShardRows { shard: s.shard, ..Default::default() });
+            e.rows_applied += s.rows_applied;
+            e.rows_read += s.rows_read;
+        }
+        for (id, rows) in &d.branches {
+            *branches.entry(*id).or_default() += rows;
+        }
+        for t in &d.trials {
+            trials.insert((t.episode, t.trial), *t);
+        }
+    }
+    out.snapshot.store.live_branches = branches.len();
+    out.snapshot.store.cow_buffer_copies = out.snapshot.pool.allocated + out.snapshot.pool.reused;
+    out.shards = shards.into_values().collect();
+    out.branches = branches.into_iter().collect();
+    out.trials = trials.into_values().collect();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_indexing_is_log2_with_clamp() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_floor_micros(0), 0);
+        assert_eq!(bucket_floor_micros(1), 2);
+        assert_eq!(bucket_floor_micros(10), 1024);
+    }
+
+    #[test]
+    fn hist_records_and_snapshots() {
+        let h = LatencyHist::default();
+        h.record_micros(0);
+        h.record_micros(1);
+        h.record_micros(5);
+        h.record_micros(1 << 20);
+        let s = h.snapshot();
+        assert_eq!(s[0], 2);
+        assert_eq!(s[2], 1);
+        assert_eq!(s[HIST_BUCKETS - 1], 1);
+        assert_eq!(s.iter().sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn default_documents_carry_the_schema_version() {
+        assert_eq!(Snapshot::default().version, SCHEMA_VERSION);
+        assert_eq!(ServerDelta::default().version, SCHEMA_VERSION);
+    }
+
+    #[test]
+    fn monotonic_check_accepts_growth_and_rejects_regression() {
+        let mut a = ServerDelta::default();
+        a.server.batched_rows = 10;
+        a.shards = vec![ShardRows { shard: 3, rows_applied: 5, rows_read: 1 }];
+        let mut b = a.clone();
+        b.server.batched_rows = 12;
+        b.shards[0].rows_applied = 9;
+        b.pool.idle = 4; // gauge: free to move either way
+        assert!(b.check_monotonic(&a).is_ok());
+        assert!(b.check_monotonic(&b).is_ok(), "equality is monotonic");
+        let err = a.check_monotonic(&b).unwrap_err().to_string();
+        assert!(err.contains("went backwards"), "{err}");
+        let mut c = b.clone();
+        c.shards.clear();
+        let err = c.check_monotonic(&b).unwrap_err().to_string();
+        assert!(err.contains("dropped shard"), "{err}");
+    }
+
+    #[test]
+    fn cluster_merge_sums_maxes_and_unions() {
+        let mut a = ServerDelta::default();
+        a.server.rows_applied = 10;
+        a.store.forks = 4;
+        a.store.peak_branches = 3;
+        a.pool.allocated = 2;
+        a.pool.reused = 1;
+        a.shards = vec![ShardRows { shard: 0, rows_applied: 10, rows_read: 0 }];
+        a.branches = vec![(0, 7), (2, 1)];
+        a.rpc_hist[1] = 5;
+        let mut b = ServerDelta::default();
+        b.server.rows_applied = 20;
+        b.store.forks = 4;
+        b.store.peak_branches = 2;
+        b.pool.allocated = 3;
+        b.shards = vec![ShardRows { shard: 1, rows_applied: 20, rows_read: 2 }];
+        b.branches = vec![(0, 5)];
+        b.rpc_hist[1] = 7;
+        let v = merge_cluster([&a, &b]);
+        assert_eq!(v.servers, 2);
+        assert_eq!(v.snapshot.server.rows_applied, 30);
+        assert_eq!(v.snapshot.store.forks, 4, "forks replicate: max, not sum");
+        assert_eq!(v.snapshot.store.peak_branches, 3);
+        assert_eq!(v.snapshot.store.live_branches, 2);
+        assert_eq!(v.snapshot.store.cow_buffer_copies, 6);
+        assert_eq!(v.branches, vec![(0, 12), (2, 1)]);
+        assert_eq!(v.shards.len(), 2);
+        assert_eq!(v.rpc_hist[1], 12);
+    }
+
+    #[test]
+    fn snapshot_json_is_versioned_and_parseable() {
+        let mut s = Snapshot::default();
+        s.server.rows_applied = 42;
+        let doc = crate::util::json::Json::parse(&s.to_json()).unwrap();
+        assert_eq!(doc.get("v").and_then(|v| v.as_f64()), Some(1.0));
+        let server = doc.get("server").unwrap();
+        assert_eq!(server.get("rows_applied").and_then(|v| v.as_f64()), Some(42.0));
+    }
+}

@@ -1,0 +1,420 @@
+//! `mltuner top` — a live terminal dashboard over the observability
+//! plane (the UX half of the streaming stats channel; see
+//! [`crate::stats`] for the data model).
+//!
+//! The client connects to every shard server of a running cluster,
+//! subscribes to the push stream with one `SubscribeStats` control
+//! frame per server, and then only *reads*: servers push cumulative
+//! [`crate::stats::ServerDelta`] frames from their event loop's
+//! low-priority ticker, so a dashboard attached to a busy cluster
+//! costs the data plane nothing beyond the frames themselves.  Frames
+//! land in a [`StatsCollector`], whose monotonic merge turns the
+//! latest per-server documents into one [`ClusterView`] per tick.
+//!
+//! Output modes:
+//! * default — an ANSI dashboard redrawn per tick: cluster totals,
+//!   per-shard-server drill-down, the RPC service-time histogram,
+//!   live branches and per-trial tuner progress.  Dependency-free:
+//!   plain escape codes, no terminal library.
+//! * `--json` — one newline-delimited delta frame per tick per
+//!   server, exactly as received (each carries the schema version
+//!   `"v"`), for scripts and the distributed CI leg.
+//! * `--once` — exit after one frame from every server (composes
+//!   with `--json` for machine probes; the ANSI mode skips the
+//!   screen-clear so the single render plays well in a pipeline).
+
+use std::io::Write;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::comm::socket::{Conn, Framing, SocketSpec};
+use crate::comm::wire::{decode_ps_reply, encode_ps_request, PsReply, PsRequest};
+use crate::ps::remote::StatsCollector;
+use crate::stats::{bucket_floor_micros, ClusterView, HIST_BUCKETS};
+
+/// Everything `mltuner top` needs (parsed from the CLI in `main`).
+#[derive(Debug, Clone)]
+pub struct TopConfig {
+    /// One address per shard server (`remote://a,b` minus the scheme).
+    pub servers: Vec<SocketSpec>,
+    /// Socket framing the cluster runs.  The subscription and the
+    /// push stream ride JSON under every framing, so `binary` here
+    /// just means length-prefixed frames on the wire.
+    pub framing: Framing,
+    /// Requested push cadence (the server clamps it to 50..=10000).
+    pub interval_ms: u64,
+    /// Emit raw newline-delimited delta frames instead of the
+    /// dashboard.
+    pub json: bool,
+    /// Exit after one frame per server.
+    pub once: bool,
+    /// Stop after this many ticks (`None` = until interrupted or a
+    /// server hangs up).  Tests and scripted probes bound runs here.
+    pub max_ticks: Option<u64>,
+}
+
+impl Default for TopConfig {
+    fn default() -> Self {
+        TopConfig {
+            servers: Vec::new(),
+            framing: Framing::Line,
+            interval_ms: 1000,
+            json: false,
+            once: false,
+            max_ticks: None,
+        }
+    }
+}
+
+/// Subscribe to every server and stream the dashboard (or NDJSON)
+/// into `out` until `--once`/`max_ticks` says stop or a server hangs
+/// up.  Errors name the server they came from.
+pub fn run(cfg: &TopConfig, out: &mut dyn Write) -> Result<()> {
+    if cfg.servers.is_empty() {
+        bail!("no shard servers given (want --ps remote://host:port,...)");
+    }
+    let mut conns: Vec<Conn> = Vec::with_capacity(cfg.servers.len());
+    for spec in &cfg.servers {
+        let mut conn = spec
+            .connect(cfg.framing)
+            .map_err(|e| anyhow!("{spec}: connect failed: {e}"))?;
+        conn.send(&encode_ps_request(&PsRequest::SubscribeStats {
+            interval_ms: cfg.interval_ms,
+        }))?;
+        match decode_ps_reply(&conn.recv_expect()?)? {
+            PsReply::Ok => {}
+            PsReply::Err { message } => bail!("{spec}: subscribe rejected: {message}"),
+            other => bail!("{spec}: unexpected subscribe reply {other:?}"),
+        }
+        conns.push(conn);
+    }
+
+    let collector = StatsCollector::new(conns.len());
+    let mut rates = RateTracker::default();
+    let mut ticks = 0u64;
+    loop {
+        // Round-robin one frame per server per tick.  All servers
+        // push at the same requested cadence, so the blocking reads
+        // stay in lockstep with the stream instead of falling behind.
+        for (si, conn) in conns.iter_mut().enumerate() {
+            let spec = &cfg.servers[si];
+            let frame = conn
+                .recv()
+                .map_err(|e| anyhow!("{spec}: stats stream broke: {e}"))?
+                .ok_or_else(|| anyhow!("{spec}: server closed the stats stream"))?;
+            let reply = decode_ps_reply(&frame)
+                .map_err(|e| anyhow!("{spec}: bad frame on the stats stream: {e}"))?;
+            let PsReply::StatsDelta(delta) = reply else {
+                bail!("{spec}: unexpected frame on the stats stream: {reply:?}");
+            };
+            collector
+                .ingest(si, delta)
+                .map_err(|e| anyhow!("{spec}: {e}"))?;
+            if cfg.json {
+                writeln!(out, "{frame}")?;
+            }
+        }
+        ticks += 1;
+        if !cfg.json {
+            let view = collector.view();
+            let rate = rates.update(&view);
+            render(out, cfg, &view, rate, ticks)?;
+        }
+        out.flush()?;
+        if cfg.once || cfg.max_ticks.is_some_and(|max| ticks >= max) {
+            return Ok(());
+        }
+    }
+}
+
+/// Instantaneous row throughput between two renders.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Rates {
+    pub applied_per_s: f64,
+    pub read_per_s: f64,
+}
+
+/// Turns successive cumulative views into rows-per-second figures.
+#[derive(Default)]
+struct RateTracker {
+    prev: Option<(std::time::Instant, u64, u64)>,
+}
+
+impl RateTracker {
+    fn update(&mut self, view: &ClusterView) -> Rates {
+        let now = std::time::Instant::now();
+        let applied = view.snapshot.server.rows_applied;
+        let read = view.snapshot.server.rows_read;
+        let rate = match self.prev {
+            Some((t0, a0, r0)) => {
+                let dt = now.duration_since(t0).as_secs_f64();
+                if dt > 0.0 {
+                    Rates {
+                        applied_per_s: applied.saturating_sub(a0) as f64 / dt,
+                        read_per_s: read.saturating_sub(r0) as f64 / dt,
+                    }
+                } else {
+                    Rates::default()
+                }
+            }
+            None => Rates::default(),
+        };
+        self.prev = Some((now, applied, read));
+        rate
+    }
+}
+
+/// `1234567` → `"1.2M"` — counters get big fast at dashboard widths.
+fn fmt_count(n: u64) -> String {
+    match n {
+        0..=9_999 => n.to_string(),
+        10_000..=9_999_999 => format!("{:.1}k", n as f64 / 1e3),
+        10_000_000..=9_999_999_999 => format!("{:.1}M", n as f64 / 1e6),
+        _ => format!("{:.1}G", n as f64 / 1e9),
+    }
+}
+
+/// Bytes with a binary-ish unit, same spirit as [`fmt_count`].
+fn fmt_bytes(n: u64) -> String {
+    match n {
+        0..=9_999 => format!("{n}B"),
+        10_000..=9_999_999 => format!("{:.1}KiB", n as f64 / 1024.0),
+        _ => format!("{:.1}MiB", n as f64 / (1024.0 * 1024.0)),
+    }
+}
+
+/// One dashboard render of `view` into `out`.  Pure with respect to
+/// the wire (everything it shows is in the arguments), so tests drive
+/// it with hand-built views.
+pub fn render(
+    out: &mut dyn Write,
+    cfg: &TopConfig,
+    view: &ClusterView,
+    rate: Rates,
+    tick: u64,
+) -> Result<()> {
+    if !cfg.once {
+        // clear + home; plain ANSI, no terminal library
+        write!(out, "\x1b[2J\x1b[H")?;
+    }
+    let s = &view.snapshot;
+    writeln!(
+        out,
+        "mltuner top — {}/{} servers reporting, stats schema v{}, tick {tick}",
+        view.servers,
+        cfg.servers.len(),
+        s.version
+    )?;
+    writeln!(
+        out,
+        "cluster:  {} rows applied ({}/s), {} rows read ({}/s)",
+        fmt_count(s.server.rows_applied),
+        fmt_count(rate.applied_per_s as u64),
+        fmt_count(s.server.rows_read),
+        fmt_count(rate.read_per_s as u64),
+    )?;
+    writeln!(
+        out,
+        "server:   {} rows in {} update batches, {} rows batch-read, {} lock contentions",
+        fmt_count(s.server.batched_rows),
+        fmt_count(s.server.batch_calls),
+        fmt_count(s.server.reads_batched),
+        fmt_count(s.server.shard_lock_contentions),
+    )?;
+    writeln!(
+        out,
+        "wire:     {} tx, {} rx, {} json + {} binary frames",
+        fmt_bytes(s.wire.bytes_tx),
+        fmt_bytes(s.wire.bytes_rx),
+        fmt_count(s.wire.frames_json),
+        fmt_count(s.wire.frames_bin),
+    )?;
+    writeln!(
+        out,
+        "store:    {} forks, {} live branches (peak {}), {} COW copies",
+        s.store.forks, s.store.live_branches, s.store.peak_branches, s.store.cow_buffer_copies,
+    )?;
+    writeln!(
+        out,
+        "pool:     {} reused, {} allocated, {} idle buffers",
+        fmt_count(s.pool.reused),
+        fmt_count(s.pool.allocated),
+        fmt_count(s.pool.idle),
+    )?;
+
+    render_hist(out, &view.rpc_hist)?;
+
+    if !view.branches.is_empty() {
+        write!(out, "branches: ")?;
+        for (i, (b, rows)) in view.branches.iter().enumerate() {
+            if i > 0 {
+                write!(out, "  ")?;
+            }
+            write!(out, "#{b}:{}", fmt_count(*rows as u64))?;
+        }
+        writeln!(out)?;
+    }
+
+    if !view.trials.is_empty() {
+        writeln!(out, "trials:")?;
+        for t in &view.trials {
+            writeln!(
+                out,
+                "  ep{} trial{} branch #{} clock {}: progress {:.4} at {:.1}s",
+                t.episode, t.trial, t.branch, t.clock, t.progress, t.time,
+            )?;
+        }
+    }
+
+    if !view.shards.is_empty() {
+        writeln!(out, "shards:")?;
+        for sh in &view.shards {
+            writeln!(
+                out,
+                "  shard {:>3}: {:>8} applied, {:>8} read",
+                sh.shard,
+                fmt_count(sh.rows_applied),
+                fmt_count(sh.rows_read),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// RPC service-time histogram as scaled hash bars, empty tail elided.
+fn render_hist(out: &mut dyn Write, hist: &[u64; HIST_BUCKETS]) -> Result<()> {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return Ok(());
+    }
+    let last = hist.iter().rposition(|&n| n > 0).unwrap_or(0);
+    let max = hist.iter().copied().max().unwrap_or(1).max(1);
+    writeln!(out, "rpc service time ({} samples):", fmt_count(total))?;
+    for (i, &n) in hist.iter().enumerate().take(last + 1) {
+        let width = ((n * 24) / max) as usize;
+        writeln!(
+            out,
+            "  ≥{:>8}µs {:>7} {}",
+            bucket_floor_micros(i),
+            fmt_count(n),
+            "#".repeat(width),
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::BranchId;
+    use crate::optim::OptimizerKind;
+    use crate::ps::remote::{spawn_local_server, RemoteParamServer, ShardRange};
+    use crate::ps::ParamStore;
+    use crate::stats::{ShardRows, TrialEvent};
+
+    fn demo_view() -> ClusterView {
+        let mut view = ClusterView::default();
+        view.servers = 2;
+        view.snapshot.server.rows_applied = 123_456;
+        view.snapshot.server.rows_read = 42;
+        view.snapshot.wire.bytes_tx = 20_480;
+        view.snapshot.store.forks = 3;
+        view.snapshot.store.live_branches = 2;
+        view.shards = vec![
+            ShardRows {
+                shard: 0,
+                rows_applied: 100_000,
+                rows_read: 40,
+            },
+            ShardRows {
+                shard: 1,
+                rows_applied: 23_456,
+                rows_read: 2,
+            },
+        ];
+        view.branches = vec![(0 as BranchId, 64), (5 as BranchId, 64)];
+        view.rpc_hist[3] = 90;
+        view.rpc_hist[7] = 10;
+        view.trials = vec![TrialEvent {
+            episode: 1,
+            trial: 2,
+            branch: 5,
+            clock: 77,
+            progress: 0.5,
+            time: 12.0,
+        }];
+        view
+    }
+
+    #[test]
+    fn dashboard_renders_every_section() {
+        let cfg = TopConfig {
+            servers: vec![
+                SocketSpec::Tcp("127.0.0.1:1".into()),
+                SocketSpec::Tcp("127.0.0.1:2".into()),
+            ],
+            once: true, // no ANSI clear: keep the assertion readable
+            ..TopConfig::default()
+        };
+        let mut buf = Vec::new();
+        render(&mut buf, &cfg, &demo_view(), Rates::default(), 1).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("2/2 servers reporting"), "{text}");
+        assert!(text.contains("stats schema v1"), "{text}");
+        assert!(text.contains("123.5k rows applied"), "{text}");
+        assert!(text.contains("rpc service time (100 samples)"), "{text}");
+        assert!(text.contains("branches: #0:64  #5:64"), "{text}");
+        assert!(text.contains("ep1 trial2 branch #5 clock 77"), "{text}");
+        assert!(text.contains("shard   0"), "{text}");
+        assert!(!text.contains('\x1b'), "--once must not clear the screen");
+    }
+
+    #[test]
+    fn count_and_byte_formatting() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(9_999), "9999");
+        assert_eq!(fmt_count(123_456), "123.5k");
+        assert_eq!(fmt_count(12_000_000), "12.0M");
+        assert_eq!(fmt_bytes(100), "100B");
+        assert_eq!(fmt_bytes(20_480), "20.0KiB");
+    }
+
+    /// End-to-end over real sockets: subscribe to a one-server
+    /// "cluster", collect two ticks of NDJSON, check every frame is
+    /// schema-versioned and the stream shuts down cleanly.
+    #[cfg(unix)]
+    #[test]
+    fn once_json_emits_versioned_frames() {
+        let (spec, handle, _srv) = spawn_local_server(
+            ShardRange { begin: 0, end: 2 },
+            OptimizerKind::Sgd,
+            Framing::Line,
+        )
+        .unwrap();
+        let remote = RemoteParamServer::connect(&[spec.clone()], Framing::Line).unwrap();
+        for k in 0..6u64 {
+            remote.insert_row(0, 0, k, vec![1.0, 2.0]).unwrap();
+        }
+        let cfg = TopConfig {
+            servers: vec![spec],
+            framing: Framing::Line,
+            interval_ms: 50,
+            json: true,
+            once: false,
+            max_ticks: Some(2),
+        };
+        let mut buf = Vec::new();
+        run(&cfg, &mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "one frame per tick: {text}");
+        for line in &lines {
+            assert!(line.contains("\"op\":\"stats_delta\""), "{line}");
+            assert!(line.contains("\"v\":1"), "{line}");
+            assert!(line.contains("\"shards\":"), "{line}");
+        }
+        remote.shutdown_all().unwrap();
+        drop(remote);
+        handle.join().unwrap().unwrap();
+    }
+}

@@ -18,8 +18,9 @@
 //! clock the parameter-server-backed systems fan the work out across
 //! `num_workers` threads against the concurrent sharded
 //! [`crate::ps::ParamServer`] (data-parallel clocks, the paper's
-//! deployment shape).  [`SnapshotStats`] reports how the server
-//! absorbed that load.
+//! deployment shape).  [`crate::stats::Snapshot`] — probed through
+//! [`TrainingSystem::stats`] — reports how the server absorbed that
+//! load.
 
 pub mod clock;
 
@@ -29,6 +30,7 @@ use anyhow::{bail, Result};
 
 use crate::comm::{BranchId, BranchType, Clock, ProtocolChecker, TunerMsg};
 use crate::ps::checkpoint::StoreCheckpoint;
+use crate::stats::{Snapshot, TrialEvent};
 use crate::tunable::TunableSetting;
 
 /// One clock's progress report: `value` is the aggregated training loss
@@ -39,51 +41,6 @@ use crate::tunable::TunableSetting;
 pub struct Progress {
     pub value: f64,
     pub time: f64,
-}
-
-/// Snapshot-efficiency introspection (§4.6): how much branching cost a
-/// training system actually paid.  For parameter-server-backed systems
-/// `cow_buffer_copies` counts the buffers privately materialized by
-/// copy-on-write — with lazy snapshots it is proportional to the rows
-/// *written* under trial branches, not to forks × model size.  The
-/// concurrency counters (`shard_lock_contentions`, `batch_calls`,
-/// `batched_rows`) report how the sharded engine absorbed the
-/// data-parallel update traffic of the worker threads.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct SnapshotStats {
-    /// Branches currently live (root included).
-    pub live_branches: usize,
-    /// Peak number of simultaneously-live branches.
-    pub peak_branches: usize,
-    /// Branch forks served since construction.
-    pub forks: u64,
-    /// Buffers privately materialized by copy-on-write (0 for systems
-    /// without parameter-server storage, e.g. the simulator).
-    pub cow_buffer_copies: u64,
-    /// Shard-lock acquisitions that had to wait behind another thread
-    /// (0 for systems without a sharded server, e.g. the simulator).
-    pub shard_lock_contentions: u64,
-    /// Batched-update calls served by the parameter server.
-    pub batch_calls: u64,
-    /// Rows applied through the batched update path.
-    pub batched_rows: u64,
-    /// Rows requested through the batched read path (`read_rows` —
-    /// the gather phases of the parameter-server apps).
-    pub reads_batched: u64,
-    /// Data-plane `ReadRows` RPCs the store's client issued: 0 for an
-    /// in-process store; for a remote store the batched read plane
-    /// bounds it at O(shard servers × workers) per training clock
-    /// (asserted by the distributed CI leg).
-    pub read_rpcs: u64,
-    /// Wire bytes written by the shard servers (0 in-process).
-    pub bytes_tx: u64,
-    /// Wire bytes read by the shard servers (0 in-process).
-    pub bytes_rx: u64,
-    /// Data-plane frames the shard servers served in the JSON codec.
-    pub frames_json: u64,
-    /// Data-plane frames the shard servers served in the binary codec
-    /// (nonzero only under `--ps-framing binary`).
-    pub frames_bin: u64,
 }
 
 /// The training-system side of the Table-1 message interface.
@@ -122,11 +79,22 @@ pub trait TrainingSystem {
         "training-system"
     }
 
-    /// Snapshot-efficiency counters (§4.6).  Systems without branch
-    /// bookkeeping may keep the zeroed default.
-    fn snapshot_stats(&self) -> SnapshotStats {
-        SnapshotStats::default()
+    /// The unified stats probe ([`crate::stats::Snapshot`], §4.6
+    /// snapshot efficiency included): branch census, copy-on-write
+    /// cost, hot-path counters, wire counters.  Parameter-server apps
+    /// forward the store's probe and overlay their own branch view;
+    /// systems without branch bookkeeping may keep the zeroed default.
+    fn stats(&self) -> Snapshot {
+        Snapshot::default()
     }
+
+    /// Publish one trial's latest progress into the observability
+    /// stream (surfaced by shard servers to `mltuner top`
+    /// subscribers).  Best-effort and side-channel: events must NOT go
+    /// through the journaled message interface, or replay would
+    /// diverge.  Systems without a remote store keep the no-op
+    /// default.
+    fn publish_trial(&self, _event: TrialEvent) {}
 
     /// Durably checkpoint this system's branch state — parameter rows,
     /// optimizer slots, and per-branch metadata — into `dir` (the

@@ -37,7 +37,8 @@ use crate::comm::{BranchId, BranchType, TunerMsg};
 use crate::metrics::RunRecorder;
 use crate::searcher::{Proposal, Searcher, SearcherKind, StoppingCondition};
 use crate::summarizer::{BranchLabel, ProgressPoint, ProgressSummarizer};
-use crate::training::{MessageDriver, Progress, SnapshotStats, TrainingSystem};
+use crate::stats::{Snapshot, TrialEvent};
+use crate::training::{MessageDriver, Progress, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
 
 use session::{CheckpointDir, CheckpointPolicy, SessionHeader};
@@ -132,13 +133,14 @@ pub struct TunerReport {
     pub clocks: u64,
     pub converged: bool,
     pub final_setting: TunableSetting,
-    /// Branch-snapshot efficiency and server-concurrency counters from
-    /// the training system (§4.6): fork count, peak live branches,
-    /// copy-on-write traffic, and — for sharded-server systems — how
-    /// the engine absorbed the data-parallel update load (batched rows
-    /// per batch call, shard-lock contention).  `mltuner tune` prints
-    /// them after the branching line.
-    pub snapshots: SnapshotStats,
+    /// Final [`crate::stats::Snapshot`] probed from the training
+    /// system: branch-snapshot efficiency (§4.6 — fork count, peak
+    /// live branches, copy-on-write traffic) in the `store` plane,
+    /// and — for sharded-server systems — how the engine absorbed the
+    /// data-parallel update load (batched rows per batch call,
+    /// shard-lock contention) in the `server` plane.  `mltuner tune`
+    /// prints them after the branching line.
+    pub stats: Snapshot,
 }
 
 /// A live trial branch during a tuning episode.
@@ -148,6 +150,10 @@ struct Trial {
     setting: TunableSetting,
     trace: Vec<ProgressPoint>,
     run_time: f64,
+    /// Tuning episode this trial belongs to, for observability only.
+    episode: u32,
+    /// Ordinal of this trial within its episode, for observability only.
+    id: u32,
 }
 
 /// The MLtuner coordinator, wrapping a training system.
@@ -378,6 +384,17 @@ impl<S: TrainingSystem> MLtuner<S> {
                 t: trial.run_time,
                 x: p.value,
             });
+            // Side-channel observability: publish directly on the
+            // system, NOT through `driver.send` — journaled messages
+            // would corrupt checkpoint replay.  Best-effort by design.
+            self.driver.system.publish_trial(TrialEvent {
+                episode: trial.episode,
+                trial: trial.id,
+                branch: trial.branch,
+                clock: self.clock,
+                progress: p.value,
+                time: trial.run_time,
+            });
             ran += 1;
             if !p.value.is_finite() {
                 break; // diverged — no point burning more clocks
@@ -438,6 +455,8 @@ impl<S: TrainingSystem> MLtuner<S> {
                             setting,
                             trace: Vec::new(),
                             run_time: 0.0,
+                            episode: episode as u32,
+                            id: trials_forked as u32,
                         });
                         trials_forked += 1;
                     }
@@ -568,6 +587,8 @@ impl<S: TrainingSystem> MLtuner<S> {
                 setting,
                 trace: Vec::new(),
                 run_time: 0.0,
+                episode: episode as u32,
+                id: trials_forked as u32,
             };
             trials_forked += 1;
             self.run_trial_until(&mut trial, trial_time.min(trial_time_cap))?;
@@ -760,7 +781,7 @@ impl<S: TrainingSystem> MLtuner<S> {
             clocks: self.clock,
             converged,
             final_setting: setting,
-            snapshots: self.driver.system.snapshot_stats(),
+            stats: self.driver.system.stats(),
         })
     }
 }
@@ -982,13 +1003,13 @@ mod tests {
         assert!(t.driver.system.live_branches() <= 2);
         // the report carries the same accounting
         assert_eq!(
-            report.snapshots.live_branches,
+            report.stats.store.live_branches,
             t.driver.system.live_branches()
         );
         assert_eq!(
-            report.snapshots.peak_branches,
+            report.stats.store.peak_branches,
             t.driver.system.peak_branches
         );
-        assert!(report.snapshots.forks > 0);
+        assert!(report.stats.store.forks > 0);
     }
 }

@@ -36,6 +36,7 @@ use std::process::{Child, Command, Stdio};
 use common::{mf_ckpt_script, run_mf_script, store_fingerprint};
 use mltuner::apps::mf::{MfConfig, MfSystem};
 use mltuner::comm::socket::{Framing, SocketSpec};
+use mltuner::comm::wire::{decode_ps_reply, PsReply};
 use mltuner::comm::{BranchType, TunerMsg};
 use mltuner::metrics::RunRecorder;
 use mltuner::optim::OptimizerKind;
@@ -214,12 +215,12 @@ fn multi_process_parity_under(framing: Framing) {
 
     // 3. branch bookkeeping and pool census identical across the
     //    process boundary (aggregated over both shard servers)
-    let rs = remote_sys.store().store_stats().unwrap();
-    let ls = local_sys.store().store_stats().unwrap();
-    assert_eq!(rs.forks, ls.forks);
-    assert_eq!(rs.peak_branches, ls.peak_branches);
-    assert_eq!(rs.live_branches, ls.live_branches);
-    assert_eq!(rs.cow_buffer_copies, ls.cow_buffer_copies);
+    let rs = remote_sys.store().stats().unwrap();
+    let ls = local_sys.store().stats().unwrap();
+    assert_eq!(rs.store.forks, ls.store.forks);
+    assert_eq!(rs.store.peak_branches, ls.store.peak_branches);
+    assert_eq!(rs.store.live_branches, ls.store.live_branches);
+    assert_eq!(rs.store.cow_buffer_copies, ls.store.cow_buffer_copies);
     assert_eq!(rs.pool, ls.pool, "pool census diverged");
     assert_eq!(
         remote_sys.store().live_branches().unwrap(),
@@ -278,15 +279,15 @@ fn training_clock_issues_bounded_read_rpcs() {
             branch_id: 1,
         })
         .unwrap(); // warm-up clock
-    let before = driver.system.store().store_stats().unwrap();
+    let before = driver.system.store().stats().unwrap();
     driver
         .send(&TunerMsg::ScheduleBranch {
             clock: 1,
             branch_id: 1,
         })
         .unwrap();
-    let after = driver.system.store().store_stats().unwrap();
-    let clock_rpcs = after.read_rpcs - before.read_rpcs;
+    let after = driver.system.store().stats().unwrap();
+    let clock_rpcs = after.store.read_rpcs - before.store.read_rpcs;
     assert!(clock_rpcs >= 1, "the clock read nothing over the wire?");
     assert!(
         clock_rpcs <= servers * workers,
@@ -427,7 +428,67 @@ fn full_tuner_converges_against_spawned_shard_servers() {
     let report = tuner.run().unwrap();
     assert!(report.converged, "never reached threshold {threshold}");
     assert!(report.final_loss <= threshold * 1.01);
-    assert!(report.snapshots.forks > 0, "tuning forked trial branches");
+    assert!(report.stats.store.forks > 0, "tuning forked trial branches");
+}
+
+#[test]
+fn top_cli_emits_versioned_delta_frames_with_shard_throughput() {
+    // The observability-plane smoke exactly as a user would run it:
+    // two `mltuner serve` processes take real training traffic, then
+    // `mltuner top --json --once` against the live cluster must print
+    // one well-formed schema-versioned `stats_delta` frame per server,
+    // with nonzero per-shard apply throughput behind each.
+    let cfg = mf_config();
+    let (sa, sb) = spawn_cluster(cfg.optimizer, Framing::Line);
+    let remote =
+        RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
+    let sys = MfSystem::with_store(cfg, PsHandle::Remote(remote)).unwrap();
+    let (_trace, sys) = scripted_session(sys);
+
+    let out = Command::new(env!("CARGO_BIN_EXE_mltuner"))
+        .args([
+            "top",
+            "--ps",
+            &format!("remote://{},{}", sa.spec, sb.spec),
+            "--json",
+            "--once",
+            "--interval-ms",
+            "100",
+        ])
+        .output()
+        .expect("run mltuner top");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "top failed: {stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let frames: Vec<&str> = stdout.lines().filter(|l| !l.is_empty()).collect();
+    assert!(frames.len() >= 2, "want one NDJSON frame per server, got: {stdout}");
+    let mut shards_seen = 0usize;
+    for line in &frames {
+        // every NDJSON line is a frame the real wire decoder accepts
+        let reply = decode_ps_reply(line).unwrap_or_else(|e| panic!("bad frame {line}: {e}"));
+        let PsReply::StatsDelta(d) = reply else {
+            panic!("expected a stats_delta frame, got {line}");
+        };
+        assert_eq!(d.version, mltuner::stats::SCHEMA_VERSION, "{line}");
+        assert!(!d.shards.is_empty(), "frame reports no shards: {line}");
+        for s in &d.shards {
+            assert!(
+                s.rows_applied > 0,
+                "shard {} shows zero apply throughput: {line}",
+                s.shard
+            );
+            shards_seen += 1;
+        }
+    }
+    // both servers reported their full shard ranges (0..2 and 2..4)
+    assert_eq!(shards_seen, 4, "{stdout}");
+
+    if let PsHandle::Remote(remote) = sys.store() {
+        remote.shutdown_all().unwrap();
+    }
 }
 
 #[test]

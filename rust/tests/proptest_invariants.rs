@@ -6,11 +6,16 @@ use mltuner::comm::binwire;
 use mltuner::comm::socket::{decode_length_frame, encode_length_frame, MAX_FRAME_LEN};
 use mltuner::comm::wire::{
     decode_ps_reply, decode_ps_request, encode_ps_reply, encode_ps_request, PsReply, PsRequest,
-    PsStats, WireCodec,
+    WireCodec,
 };
 use mltuner::comm::{BranchType, ProtocolChecker, TunerMsg};
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
+use mltuner::ps::remote::StatsCollector;
 use mltuner::ps::ParamServer;
+use mltuner::stats::{
+    merge_cluster, ServerDelta, ServerPlane, ShardRows, StorePlane, TrialEvent, WirePlane,
+    HIST_BUCKETS,
+};
 use mltuner::summarizer::{BranchLabel, ProgressPoint, ProgressSummarizer};
 use mltuner::training::clock::SspClock;
 use mltuner::tunable::{TunableSetting, TunableSpace, TunableSpec};
@@ -472,7 +477,7 @@ fn prop_apply_batch_equals_update_sequence() {
             batched.pool_stats().allocated,
             looped.pool_stats().allocated
         );
-        assert_eq!(batched.server_stats().batched_rows, n_up as u64);
+        assert_eq!(batched.snapshot().server.batched_rows, n_up as u64);
     });
 }
 
@@ -623,7 +628,7 @@ fn random_dir(rng: &mut Rng) -> String {
 }
 
 fn random_ps_request(rng: &mut Rng) -> PsRequest {
-    match rng.gen_range(0, 13) {
+    match rng.gen_range(0, 15) {
         0 => PsRequest::Hello {
             codec: random_codec(rng),
         },
@@ -691,7 +696,75 @@ fn random_ps_request(rng: &mut Rng) -> PsRequest {
             branch: rng.next_u64() as u32,
         },
         7 => PsRequest::ServerStats,
+        13 => PsRequest::SubscribeStats {
+            interval_ms: rng.next_u64() >> 12,
+        },
+        14 => PsRequest::PublishProgress {
+            event: random_trial_event(rng),
+        },
         _ => PsRequest::Shutdown,
+    }
+}
+
+/// Trial progress with fully random f64 bit patterns — NaNs,
+/// infinities and −0.0 must all survive the wire bit-exact.
+fn random_trial_event(rng: &mut Rng) -> TrialEvent {
+    TrialEvent {
+        episode: rng.next_u64() as u32,
+        trial: rng.next_u64() as u32,
+        branch: rng.next_u64() as u32,
+        clock: rng.next_u64() >> 12,
+        progress: f64::from_bits(rng.next_u64()),
+        time: f64::from_bits(rng.next_u64()),
+    }
+}
+
+fn random_server_delta(rng: &mut Rng) -> ServerDelta {
+    let mut rpc_hist = [0u64; HIST_BUCKETS];
+    for b in rpc_hist.iter_mut() {
+        *b = rng.next_u64() >> 12;
+    }
+    ServerDelta {
+        server: ServerPlane {
+            shard_lock_contentions: rng.next_u64() >> 12,
+            batch_calls: rng.next_u64() >> 12,
+            batched_rows: rng.next_u64() >> 12,
+            reads_batched: rng.next_u64() >> 12,
+            rows_applied: rng.next_u64() >> 12,
+            rows_read: rng.next_u64() >> 12,
+        },
+        store: StorePlane {
+            forks: rng.next_u64() >> 12,
+            peak_branches: rng.gen_range(0, 1000),
+            live_branches: rng.gen_range(0, 100),
+            cow_buffer_copies: rng.next_u64() >> 12,
+            read_rpcs: rng.next_u64() >> 12,
+        },
+        pool: mltuner::ps::pool::PoolStats {
+            reused: rng.next_u64() >> 12,
+            allocated: rng.next_u64() >> 12,
+            idle: rng.next_u64() >> 12,
+            idle_len: rng.next_u64() >> 12,
+        },
+        wire: WirePlane {
+            bytes_tx: rng.next_u64() >> 12,
+            bytes_rx: rng.next_u64() >> 12,
+            frames_json: rng.next_u64() >> 12,
+            frames_bin: rng.next_u64() >> 12,
+        },
+        shards: (0..rng.gen_range(0, 5))
+            .map(|_| ShardRows {
+                shard: rng.next_u64() >> 12,
+                rows_applied: rng.next_u64() >> 12,
+                rows_read: rng.next_u64() >> 12,
+            })
+            .collect(),
+        rpc_hist,
+        branches: (0..rng.gen_range(0, 6))
+            .map(|_| (rng.next_u64() as u32, rng.gen_range(0, 10_000)))
+            .collect(),
+        trials: (0..rng.gen_range(0, 4)).map(|_| random_trial_event(rng)).collect(),
+        ..ServerDelta::default()
     }
 }
 
@@ -709,7 +782,7 @@ fn random_segment_meta(rng: &mut Rng) -> mltuner::ps::checkpoint::SegmentMeta {
 }
 
 fn random_ps_reply(rng: &mut Rng) -> PsReply {
-    match rng.gen_range(0, 9) {
+    match rng.gen_range(0, 10) {
         0 => PsReply::Hello {
             shard_begin: rng.gen_range(0, 64),
             shard_end: rng.gen_range(64, 256),
@@ -756,29 +829,8 @@ fn random_ps_reply(rng: &mut Rng) -> PsReply {
                 })
                 .collect(),
         },
-        3 => PsReply::Stats(PsStats {
-            server: mltuner::ps::ServerStats {
-                shard_lock_contentions: rng.next_u64() >> 12,
-                batch_calls: rng.next_u64() >> 12,
-                batched_rows: rng.next_u64() >> 12,
-                reads_batched: rng.next_u64() >> 12,
-                bytes_tx: rng.next_u64() >> 12,
-                bytes_rx: rng.next_u64() >> 12,
-                frames_json: rng.next_u64() >> 12,
-                frames_bin: rng.next_u64() >> 12,
-            },
-            pool: mltuner::ps::pool::PoolStats {
-                reused: rng.next_u64() >> 12,
-                allocated: rng.next_u64() >> 12,
-                idle: rng.next_u64() >> 12,
-                idle_len: rng.next_u64() >> 12,
-            },
-            forks: rng.next_u64() >> 12,
-            peak_branches: rng.gen_range(0, 1000),
-            branches: (0..rng.gen_range(0, 6))
-                .map(|_| (rng.next_u64() as u32, rng.gen_range(0, 10_000)))
-                .collect(),
-        }),
+        3 => PsReply::Stats(random_server_delta(rng)),
+        9 => PsReply::StatsDelta(random_server_delta(rng)),
         _ => PsReply::Err {
             message: format!("fail {} \"quoted\"\nsecond line\t!", rng.next_u64()),
         },
@@ -888,5 +940,160 @@ fn prop_length_framing_handles_truncation_and_splits() {
         // oversized length headers are rejected
         let bad = ((MAX_FRAME_LEN + 1 + rng.gen_range(0, 1 << 20)) as u32).to_be_bytes();
         assert!(decode_length_frame(&bad).is_err());
+    });
+}
+
+/// A trial event with finite floats — [`ClusterView`] equality goes
+/// through `PartialEq`, which NaN would poison.
+fn tame_trial_event(rng: &mut Rng) -> TrialEvent {
+    TrialEvent {
+        episode: (rng.next_u64() % 4) as u32,
+        trial: (rng.next_u64() % 8) as u32,
+        branch: rng.next_u64() as u32,
+        clock: rng.next_u64() >> 40,
+        progress: rng.gen_f64(),
+        time: rng.gen_f64() * 100.0,
+    }
+}
+
+/// First frame a server would push: small cumulative counters, a fixed
+/// per-server shard set (servers own disjoint global shard ids).
+fn base_delta(rng: &mut Rng, server: usize) -> ServerDelta {
+    let mut d = random_server_delta(rng);
+    // any starting counters are valid cumulative totals (and stay far
+    // from overflow: everything is already >>12); pin the shard set to
+    // this server so the fixed-shard-set invariant holds across frames
+    d.shards = (0..2)
+        .map(|i| ShardRows {
+            shard: (server * 2 + i) as u64,
+            rows_applied: rng.next_u64() >> 40,
+            rows_read: rng.next_u64() >> 40,
+        })
+        .collect();
+    d.trials = (0..rng.gen_range(0, 3)).map(|_| tame_trial_event(rng)).collect();
+    d
+}
+
+/// Advance a cumulative delta the way a live server would: every
+/// counter `check_monotonic` guards grows (or holds), gauges float
+/// freely, the shard set stays fixed.
+fn grow_delta(rng: &mut Rng, d: &mut ServerDelta) {
+    d.server.shard_lock_contentions += rng.next_u64() >> 40;
+    d.server.batch_calls += rng.next_u64() >> 40;
+    d.server.batched_rows += rng.next_u64() >> 40;
+    d.server.reads_batched += rng.next_u64() >> 40;
+    d.server.rows_applied += rng.next_u64() >> 40;
+    d.server.rows_read += rng.next_u64() >> 40;
+    d.store.forks += rng.next_u64() >> 40;
+    d.store.peak_branches += (rng.next_u64() >> 58) as usize;
+    d.store.cow_buffer_copies += rng.next_u64() >> 40;
+    d.store.read_rpcs += rng.next_u64() >> 40;
+    d.pool.reused += rng.next_u64() >> 40;
+    d.pool.allocated += rng.next_u64() >> 40;
+    d.wire.bytes_tx += rng.next_u64() >> 40;
+    d.wire.bytes_rx += rng.next_u64() >> 40;
+    d.wire.frames_json += rng.next_u64() >> 40;
+    d.wire.frames_bin += rng.next_u64() >> 40;
+    for b in d.rpc_hist.iter_mut() {
+        *b += rng.next_u64() >> 58;
+    }
+    for s in d.shards.iter_mut() {
+        s.rows_applied += rng.next_u64() >> 40;
+        s.rows_read += rng.next_u64() >> 40;
+    }
+    // gauges are exempt from monotonicity and may move anywhere
+    d.pool.idle = rng.next_u64() >> 40;
+    d.pool.idle_len = rng.next_u64() >> 40;
+    d.store.live_branches = rng.gen_range(0, 10);
+    d.branches = (0..rng.gen_range(0, 4))
+        .map(|_| ((rng.next_u64() % 8) as u32, rng.gen_range(0, 100)))
+        .collect();
+    d.trials = (0..rng.gen_range(0, 3)).map(|_| tame_trial_event(rng)).collect();
+}
+
+#[test]
+fn prop_stats_delta_interleavings_merge_to_final_totals() {
+    // The streaming invariant `mltuner top` rests on: because frames
+    // carry cumulative totals, merging ANY interleaving of per-server
+    // delta streams through the collector equals merging just each
+    // server's final frame — the same totals an end-of-run pull probe
+    // would report.  Every frame also rides a randomly chosen wire
+    // codec (JSON or negotiated binary) on the way in, so the equality
+    // holds across framings, not just in-process.
+    prop(150, |rng| {
+        let servers = rng.gen_range(1, 4);
+        let seqs: Vec<Vec<ServerDelta>> = (0..servers)
+            .map(|s| {
+                let mut d = base_delta(rng, s);
+                let mut seq = vec![d.clone()];
+                for _ in 0..rng.gen_range(1, 5) {
+                    grow_delta(rng, &mut d);
+                    seq.push(d.clone());
+                }
+                seq
+            })
+            .collect();
+        let finals: Vec<ServerDelta> =
+            seqs.iter().map(|seq| seq[seq.len() - 1].clone()).collect();
+        let collector = StatsCollector::new(servers);
+        // drain the streams in a random interleaving
+        let mut next = vec![0usize; servers];
+        loop {
+            let pending: Vec<usize> =
+                (0..servers).filter(|&s| next[s] < seqs[s].len()).collect();
+            let Some(&s) = pending.get(rng.gen_range(0, pending.len().max(1))) else {
+                break;
+            };
+            let frame = seqs[s][next[s]].clone();
+            next[s] += 1;
+            // each frame crosses a randomly chosen codec first
+            let reply = PsReply::StatsDelta(frame);
+            let back = if rng.gen_range(0, 2) == 0 {
+                decode_ps_reply(&encode_ps_reply(&reply)).unwrap()
+            } else {
+                let mut buf = Vec::new();
+                binwire::encode_reply(&reply, &mut buf).unwrap();
+                binwire::decode_reply(&buf).unwrap()
+            };
+            let PsReply::StatsDelta(delta) = back else {
+                panic!("codec changed the frame kind: {back:?}");
+            };
+            collector.ingest(s, delta).unwrap();
+        }
+        assert_eq!(collector.servers_reporting(), servers);
+        assert_eq!(collector.view(), merge_cluster(&finals), "interleaved != final-frame merge");
+    });
+}
+
+#[test]
+fn prop_stats_delta_decode_never_panics_on_truncation() {
+    // A dying server can cut a pushed stats frame anywhere; the
+    // decoders must reject the stub (or, for JSON, accept only a
+    // genuinely whole frame), never panic or invent counters.
+    prop(200, |rng| {
+        let reply = PsReply::StatsDelta(random_server_delta(rng));
+        let line = encode_ps_reply(&reply);
+        if line.len() > 1 {
+            let cut = rng.gen_range(1, line.len());
+            if let Ok(back) = decode_ps_reply(&line[..cut]) {
+                assert_eq!(encode_ps_reply(&back), line[..cut]);
+            }
+        }
+        let mut buf = Vec::new();
+        binwire::encode_reply(&reply, &mut buf).unwrap();
+        let cut = rng.gen_range(0, buf.len());
+        assert!(
+            binwire::decode_reply(&buf[..cut]).is_err(),
+            "truncated StatsDelta accepted at {cut}/{}",
+            buf.len()
+        );
+        buf.push(rng.next_u64() as u8);
+        assert!(binwire::decode_reply(&buf).is_err(), "trailing byte accepted");
+        // a flipped byte must at worst produce an error
+        let mut garbled = Vec::new();
+        binwire::encode_reply(&reply, &mut garbled).unwrap();
+        let pos = rng.gen_range(0, garbled.len());
+        garbled[pos] ^= (rng.next_u64() as u8) | 1;
+        let _ = binwire::decode_reply(&garbled);
     });
 }

@@ -151,7 +151,7 @@ fn data_parallel_batched_updates_match_sequential() {
         seq.pool_stats().allocated,
         "COW materialization traffic diverged"
     );
-    let stats = par.server_stats();
+    let stats = par.snapshot().server;
     assert_eq!(stats.batched_rows, (ROWS * passes) as u64);
     assert_eq!(stats.batch_calls, (threads * passes) as u64);
 }

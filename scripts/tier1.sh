@@ -29,9 +29,12 @@ cargo test --release --test stress_concurrent -- --test-threads=8
 # (`training_clock_issues_bounded_read_rpcs`), so read batching cannot
 # silently regress, (c) the durable-checkpoint acceptance: a
 # mid-episode checkpoint survives SIGKILLing every shard server and
-# resumes bit-exact on a fresh cluster, and (d) the full tuner and the
-# `mltuner tune --ps-framing binary` CLI over the binary wire (mirrors
-# the CI `distributed` leg).
+# resumes bit-exact on a fresh cluster, (d) the full tuner and the
+# `mltuner tune --ps-framing binary` CLI over the binary wire, and
+# (e) the observability smoke: `mltuner top --json --once` against a
+# live two-server cluster prints one well-formed schema-versioned
+# stats frame per server with nonzero per-shard apply throughput
+# (mirrors the CI `distributed` leg).
 cargo test --release --test integration_distributed
 
 # Checkpoint/restore plane: codec round-trips (NaN/Inf/-0 included),
