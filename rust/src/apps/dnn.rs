@@ -258,6 +258,8 @@ impl DnnSystem {
         // A long-lived shard-server set may still hold branches from a
         // previous tune session; free them so this session's forks
         // start from a clean index (root rows are overwritten below).
+        // The remote store's census is session-scoped, so this sweep
+        // never frees a co-tenant's branches on a shared cluster.
         for b in ps.live_branches()? {
             if b != 0 {
                 ps.free_branch(b)?;

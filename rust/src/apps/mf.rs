@@ -201,7 +201,10 @@ impl MfSystem {
         // A long-lived shard-server set may still hold branches from a
         // previous tune session; free them so this session's forks
         // start from a clean index (the root's rows are overwritten by
-        // the inserts below, with displaced buffers reclaimed).
+        // the inserts below, with displaced buffers reclaimed).  The
+        // remote store's census is scoped to this client's session
+        // namespace, so attaching to a shared cluster never frees a
+        // co-tenant's branches.
         for b in ps.live_branches()? {
             if b != 0 {
                 ps.free_branch(b)?;

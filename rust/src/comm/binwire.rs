@@ -31,12 +31,20 @@
 //! trailing bytes after a complete value are an error — a truncated
 //! or padded frame can never decode to a different value.
 //!
-//! Request opcodes live in `0x01..=0x0f`, reply opcodes in
-//! `0x11..=0x1a`.  Every opcode is below `0x20`, and a JSON frame
-//! body always starts with `{` (0x7b), so a receiver can dispatch a
-//! frame to the right codec from its first byte alone
+//! Request opcodes live in `0x01..=0x10` plus `0x1b`
+//! (`ListBranches`), reply opcodes in `0x11..=0x1b` — requests and
+//! replies are **separate decode spaces**, so a value may repeat
+//! across the two directions.  Every opcode is below `0x20`, and a
+//! JSON frame body always starts with `{` (0x7b), so a receiver can
+//! dispatch a frame to the right codec from its first byte alone
 //! ([`is_binary_frame`]) — that is how a binary-framing server keeps
 //! answering plain-JSON peers during negotiation.
+//!
+//! Branch-scoped frames carry their session id as an unconditional
+//! `u32` right after the opcode (binary peers are never
+//! version-skewed: the codec is negotiated per connection, so there
+//! is no legacy layout to stay byte-compatible with — unlike the JSON
+//! plane, which omits the `session` key for session 0).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -45,11 +53,11 @@ use crate::ps::checkpoint::SegmentMeta;
 use crate::ps::pool::PoolStats;
 use crate::ps::RowData;
 use crate::stats::{
-    ServerDelta, ServerPlane, ShardRows, StorePlane, TrialEvent, WirePlane, HIST_BUCKETS,
-    SCHEMA_VERSION,
+    ServerDelta, ServerPlane, SessionStats, ShardRows, StorePlane, TrialEvent, WirePlane,
+    HIST_BUCKETS, SCHEMA_VERSION,
 };
 
-use super::wire::{PsReply, PsRequest, WireCodec};
+use super::wire::{PsReply, PsRequest, SessionHello, WireCodec};
 
 // Request opcodes.
 const OP_HELLO: u8 = 0x01;
@@ -67,6 +75,11 @@ const OP_STATS: u8 = 0x0c;
 const OP_SHUTDOWN: u8 = 0x0d;
 const OP_SUB_STATS: u8 = 0x0e;
 const OP_PUBLISH: u8 = 0x0f;
+const OP_END_SESSION: u8 = 0x10;
+// 0x11..=0x1a shadow the reply range below; requests and replies are
+// separate decode spaces, but keeping the values disjoint where we
+// can makes hexdumps less confusing — only 0x1b doubles up.
+const OP_LIST_BRANCHES: u8 = 0x1b;
 
 // Reply opcodes.
 const RE_HELLO: u8 = 0x11;
@@ -79,6 +92,7 @@ const RE_RESTORED: u8 = 0x17;
 const RE_STATS: u8 = 0x18;
 const RE_ERR: u8 = 0x19;
 const RE_STATS_DELTA: u8 = 0x1a;
+const RE_BRANCH_LIST: u8 = 0x1b;
 
 /// Does this frame body carry the binary codec?  Binary opcodes are
 /// all `< 0x20`; a JSON body starts with `{` (0x7b).  An empty body is
@@ -269,6 +283,7 @@ impl<'a> Reader<'a> {
 
     fn trial_event(&mut self) -> Result<TrialEvent> {
         Ok(TrialEvent {
+            session: self.u32("session")?,
             episode: self.u32("episode")?,
             trial: self.u32("trial")?,
             branch: self.u32("branch")?,
@@ -334,10 +349,21 @@ impl<'a> Reader<'a> {
         for _ in 0..n {
             branches.push((self.u32("branch")?, self.usize("rows")?));
         }
-        let n = self.count(32, "trials")?;
+        let n = self.count(40, "trials")?;
         let mut trials = Vec::with_capacity(n);
         for _ in 0..n {
             trials.push(self.trial_event()?);
+        }
+        let n = self.count(36, "sessions")?;
+        let mut sessions = Vec::with_capacity(n);
+        for _ in 0..n {
+            sessions.push(SessionStats {
+                session: self.u32("session")?,
+                rows_applied: self.u64("session rows_applied")?,
+                rows_read: self.u64("session rows_read")?,
+                deferrals: self.u64("session deferrals")?,
+                live_branches: self.usize("session live")?,
+            });
         }
         Ok(ServerDelta {
             version,
@@ -349,6 +375,7 @@ impl<'a> Reader<'a> {
             rpc_hist,
             branches,
             trials,
+            sessions,
         })
     }
 
@@ -369,40 +396,54 @@ impl<'a> Reader<'a> {
 pub fn encode_request(req: &PsRequest, out: &mut Vec<u8>) -> Result<()> {
     out.clear();
     match req {
-        PsRequest::Hello { codec } => {
+        PsRequest::Hello { codec, session } => {
             out.push(OP_HELLO);
             put_codec(out, *codec);
+            match session {
+                None => out.push(0),
+                Some(s) => {
+                    out.push(1);
+                    put_str(out, &s.name, "session name")?;
+                    put_u64(out, s.lease_ms);
+                }
+            }
         }
         PsRequest::InsertRow {
+            session,
             branch,
             table,
             key,
             data,
         } => {
             out.push(OP_INSERT);
+            put_u32(out, *session);
             put_u32(out, *branch);
             put_u32(out, *table);
             put_u64(out, *key);
             put_f32s(out, data, "data")?;
         }
         PsRequest::ReadRow {
+            session,
             branch,
             table,
             key,
             with_accum,
         } => {
             out.push(OP_READ);
+            put_u32(out, *session);
             put_u32(out, *branch);
             put_u32(out, *table);
             put_u64(out, *key);
             put_bool(out, *with_accum);
         }
         PsRequest::ReadRows {
+            session,
             branch,
             with_accum,
             keys,
         } => {
             out.push(OP_READ_ROWS);
+            put_u32(out, *session);
             put_u32(out, *branch);
             put_bool(out, *with_accum);
             put_u32(out, len_u32(keys.len(), "keys")?);
@@ -412,6 +453,7 @@ pub fn encode_request(req: &PsRequest, out: &mut Vec<u8>) -> Result<()> {
             }
         }
         PsRequest::ApplyUpdate {
+            session,
             branch,
             table,
             key,
@@ -420,6 +462,7 @@ pub fn encode_request(req: &PsRequest, out: &mut Vec<u8>) -> Result<()> {
             z_old,
         } => {
             out.push(OP_UPDATE);
+            put_u32(out, *session);
             put_u32(out, *branch);
             put_u32(out, *table);
             put_u64(out, *key);
@@ -428,11 +471,13 @@ pub fn encode_request(req: &PsRequest, out: &mut Vec<u8>) -> Result<()> {
             put_opt_f32s(out, z_old.as_deref(), "z_old")?;
         }
         PsRequest::ApplyBatch {
+            session,
             branch,
             hyper,
             updates,
         } => {
             out.push(OP_BATCH);
+            put_u32(out, *session);
             put_u32(out, *branch);
             put_hyper(out, *hyper);
             put_u32(out, len_u32(updates.len(), "updates")?);
@@ -442,27 +487,48 @@ pub fn encode_request(req: &PsRequest, out: &mut Vec<u8>) -> Result<()> {
                 put_f32s(out, grad, "grad")?;
             }
         }
-        PsRequest::ForkBranch { child, parent } => {
+        PsRequest::ForkBranch {
+            session,
+            child,
+            parent,
+        } => {
             out.push(OP_FORK);
+            put_u32(out, *session);
             put_u32(out, *child);
             put_u32(out, *parent);
         }
-        PsRequest::FreeBranch { branch } => {
+        PsRequest::FreeBranch { session, branch } => {
             out.push(OP_FREE);
+            put_u32(out, *session);
             put_u32(out, *branch);
         }
-        PsRequest::CheckpointBranch { branch, dir } => {
+        PsRequest::CheckpointBranch {
+            session,
+            branch,
+            dir,
+        } => {
             out.push(OP_CKPT);
+            put_u32(out, *session);
             put_u32(out, *branch);
             put_str(out, dir, "dir")?;
         }
-        PsRequest::VerifyBranch { branch, dir } => {
+        PsRequest::VerifyBranch {
+            session,
+            branch,
+            dir,
+        } => {
             out.push(OP_VERIFY);
+            put_u32(out, *session);
             put_u32(out, *branch);
             put_str(out, dir, "dir")?;
         }
-        PsRequest::RestoreBranch { branch, dir } => {
+        PsRequest::RestoreBranch {
+            session,
+            branch,
+            dir,
+        } => {
             out.push(OP_RESTORE);
+            put_u32(out, *session);
             put_u32(out, *branch);
             put_str(out, dir, "dir")?;
         }
@@ -472,17 +538,29 @@ pub fn encode_request(req: &PsRequest, out: &mut Vec<u8>) -> Result<()> {
             put_u64(out, *interval_ms);
         }
         PsRequest::PublishProgress { event } => {
+            // the event's own `session` field doubles as the frame's
+            // session stamp, exactly like the JSON plane
             out.push(OP_PUBLISH);
             put_trial_event(out, event);
+        }
+        PsRequest::ListBranches { session } => {
+            out.push(OP_LIST_BRANCHES);
+            put_u32(out, *session);
+        }
+        PsRequest::EndSession { session } => {
+            out.push(OP_END_SESSION);
+            put_u32(out, *session);
         }
         PsRequest::Shutdown => out.push(OP_SHUTDOWN),
     }
     Ok(())
 }
 
-/// Fixed 32-byte trial-event record; `f64`s ride as raw bit patterns,
-/// same invariant as the row payloads.
+/// Fixed 40-byte trial-event record (session:u32 episode:u32
+/// trial:u32 branch:u32 clock:u64 progress:u64 time:u64); `f64`s ride
+/// as raw bit patterns, same invariant as the row payloads.
 fn put_trial_event(out: &mut Vec<u8>, t: &TrialEvent) {
+    put_u32(out, t.session);
     put_u32(out, t.episode);
     put_u32(out, t.trial);
     put_u32(out, t.branch);
@@ -534,6 +612,14 @@ fn put_server_delta(out: &mut Vec<u8>, d: &ServerDelta) -> Result<()> {
     for t in &d.trials {
         put_trial_event(out, t);
     }
+    put_u32(out, len_u32(d.sessions.len(), "sessions")?);
+    for s in &d.sessions {
+        put_u32(out, s.session);
+        put_u64(out, s.rows_applied);
+        put_u64(out, s.rows_read);
+        put_u64(out, s.deferrals);
+        put_usize(out, s.live_branches, "session live")?;
+    }
     Ok(())
 }
 
@@ -543,20 +629,34 @@ pub fn decode_request(buf: &[u8]) -> Result<PsRequest> {
     let mut r = Reader::new(buf);
     let op = r.u8("opcode")?;
     let req = match op {
-        OP_HELLO => PsRequest::Hello { codec: r.codec()? },
+        OP_HELLO => {
+            let codec = r.codec()?;
+            let session = match r.u8("session tag")? {
+                0 => None,
+                1 => Some(SessionHello {
+                    name: r.str("session name")?,
+                    lease_ms: r.u64("lease_ms")?,
+                }),
+                b => bail!("bad session tag {b}"),
+            };
+            PsRequest::Hello { codec, session }
+        }
         OP_INSERT => PsRequest::InsertRow {
+            session: r.u32("session")?,
             branch: r.u32("branch")?,
             table: r.u32("table")?,
             key: r.u64("key")?,
             data: r.f32s("data")?,
         },
         OP_READ => PsRequest::ReadRow {
+            session: r.u32("session")?,
             branch: r.u32("branch")?,
             table: r.u32("table")?,
             key: r.u64("key")?,
             with_accum: r.bool("accum")?,
         },
         OP_READ_ROWS => {
+            let session = r.u32("session")?;
             let branch = r.u32("branch")?;
             let with_accum = r.bool("accum")?;
             let n = r.count(12, "keys")?;
@@ -565,12 +665,14 @@ pub fn decode_request(buf: &[u8]) -> Result<PsRequest> {
                 keys.push((r.u32("table")?, r.u64("key")?));
             }
             PsRequest::ReadRows {
+                session,
                 branch,
                 with_accum,
                 keys,
             }
         }
         OP_UPDATE => PsRequest::ApplyUpdate {
+            session: r.u32("session")?,
             branch: r.u32("branch")?,
             table: r.u32("table")?,
             key: r.u64("key")?,
@@ -579,6 +681,7 @@ pub fn decode_request(buf: &[u8]) -> Result<PsRequest> {
             z_old: r.opt_f32s("z_old")?,
         },
         OP_BATCH => {
+            let session = r.u32("session")?;
             let branch = r.u32("branch")?;
             let hyper = r.hyper()?;
             let n = r.count(16, "updates")?;
@@ -587,31 +690,41 @@ pub fn decode_request(buf: &[u8]) -> Result<PsRequest> {
                 updates.push((r.u32("table")?, r.u64("key")?, r.f32s("grad")?));
             }
             PsRequest::ApplyBatch {
+                session,
                 branch,
                 hyper,
                 updates,
             }
         }
         OP_FORK => PsRequest::ForkBranch {
+            session: r.u32("session")?,
             child: r.u32("child")?,
             parent: r.u32("parent")?,
         },
-        OP_FREE => PsRequest::FreeBranch { branch: r.u32("branch")? },
+        OP_FREE => PsRequest::FreeBranch {
+            session: r.u32("session")?,
+            branch: r.u32("branch")?,
+        },
         OP_CKPT => PsRequest::CheckpointBranch {
+            session: r.u32("session")?,
             branch: r.u32("branch")?,
             dir: r.str("dir")?,
         },
         OP_VERIFY => PsRequest::VerifyBranch {
+            session: r.u32("session")?,
             branch: r.u32("branch")?,
             dir: r.str("dir")?,
         },
         OP_RESTORE => PsRequest::RestoreBranch {
+            session: r.u32("session")?,
             branch: r.u32("branch")?,
             dir: r.str("dir")?,
         },
         OP_STATS => PsRequest::ServerStats,
         OP_SUB_STATS => PsRequest::SubscribeStats { interval_ms: r.u64("interval_ms")? },
         OP_PUBLISH => PsRequest::PublishProgress { event: r.trial_event()? },
+        OP_LIST_BRANCHES => PsRequest::ListBranches { session: r.u32("session")? },
+        OP_END_SESSION => PsRequest::EndSession { session: r.u32("session")? },
         OP_SHUTDOWN => PsRequest::Shutdown,
         other => bail!("unknown binary request opcode {other:#04x}"),
     };
@@ -634,12 +747,14 @@ pub fn encode_reply(reply: &PsReply, out: &mut Vec<u8>) -> Result<()> {
             shard_end,
             optimizer,
             codec,
+            session,
         } => {
             out.push(RE_HELLO);
             put_usize(out, *shard_begin, "begin")?;
             put_usize(out, *shard_end, "end")?;
             put_str(out, optimizer, "optimizer")?;
             put_codec(out, *codec);
+            put_u32(out, *session);
         }
         PsReply::Ok => out.push(RE_OK),
         PsReply::Row { data, accum } => {
@@ -691,6 +806,14 @@ pub fn encode_reply(reply: &PsReply, out: &mut Vec<u8>) -> Result<()> {
             out.push(RE_STATS_DELTA);
             put_server_delta(out, d)?;
         }
+        PsReply::BranchList { branches } => {
+            out.push(RE_BRANCH_LIST);
+            put_u32(out, len_u32(branches.len(), "branches")?);
+            for (id, rows) in branches {
+                put_u32(out, *id);
+                put_usize(out, *rows, "rows")?;
+            }
+        }
         PsReply::Err { message } => {
             out.push(RE_ERR);
             put_str(out, message, "msg")?;
@@ -709,6 +832,7 @@ pub fn decode_reply(buf: &[u8]) -> Result<PsReply> {
             shard_end: r.usize("end")?,
             optimizer: r.str("optimizer")?,
             codec: r.codec()?,
+            session: r.u32("session")?,
         },
         RE_OK => PsReply::Ok,
         RE_ROW => PsReply::Row {
@@ -748,6 +872,14 @@ pub fn decode_reply(buf: &[u8]) -> Result<PsReply> {
         RE_RESTORED => PsReply::Restored { rows: r.u64("rows")? },
         RE_STATS => PsReply::Stats(r.server_delta()?),
         RE_STATS_DELTA => PsReply::StatsDelta(r.server_delta()?),
+        RE_BRANCH_LIST => {
+            let n = r.count(12, "branches")?;
+            let mut branches = Vec::with_capacity(n);
+            for _ in 0..n {
+                branches.push((r.u32("branch")?, r.usize("rows")?));
+            }
+            PsReply::BranchList { branches }
+        }
         RE_ERR => PsReply::Err { message: r.str("msg")? },
         other => bail!("unknown binary reply opcode {other:#04x}"),
     };
@@ -778,31 +910,56 @@ mod tests {
     #[test]
     fn requests_roundtrip() {
         let hyper = Hyper { lr: 0.1, momentum: 0.9 };
-        roundtrip_req(&PsRequest::Hello { codec: WireCodec::Json });
-        roundtrip_req(&PsRequest::Hello { codec: WireCodec::Binary });
+        roundtrip_req(&PsRequest::Hello {
+            codec: WireCodec::Json,
+            session: None,
+        });
+        roundtrip_req(&PsRequest::Hello {
+            codec: WireCodec::Binary,
+            session: None,
+        });
+        roundtrip_req(&PsRequest::Hello {
+            codec: WireCodec::Binary,
+            session: Some(SessionHello {
+                name: "mf-sweep \"a\"".into(),
+                lease_ms: 30_000,
+            }),
+        });
+        roundtrip_req(&PsRequest::Hello {
+            codec: WireCodec::Json,
+            session: Some(SessionHello {
+                name: String::new(),
+                lease_ms: 0,
+            }),
+        });
         roundtrip_req(&PsRequest::InsertRow {
+            session: 0,
             branch: 0,
             table: 1,
             key: 7,
             data: vec![1.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, 1.0e-45],
         });
         roundtrip_req(&PsRequest::ReadRow {
+            session: 7,
             branch: 3,
             table: 0,
             key: u64::MAX,
             with_accum: true,
         });
         roundtrip_req(&PsRequest::ReadRows {
+            session: u32::MAX,
             branch: 3,
             with_accum: true,
             keys: vec![(0, 7), (1, u64::MAX), (0, 0)],
         });
         roundtrip_req(&PsRequest::ReadRows {
+            session: 0,
             branch: 0,
             with_accum: false,
             keys: vec![],
         });
         roundtrip_req(&PsRequest::ApplyUpdate {
+            session: 1,
             branch: 1,
             table: 0,
             key: 5,
@@ -811,6 +968,7 @@ mod tests {
             z_old: Some(vec![2.0, 3.0]),
         });
         roundtrip_req(&PsRequest::ApplyUpdate {
+            session: 0,
             branch: 1,
             table: 0,
             key: 5,
@@ -819,21 +977,32 @@ mod tests {
             z_old: None,
         });
         roundtrip_req(&PsRequest::ApplyBatch {
+            session: 3,
             branch: 2,
             hyper,
             updates: vec![(0, 1, vec![1.0]), (1, 9, vec![-2.5, 0.125])],
         });
-        roundtrip_req(&PsRequest::ForkBranch { child: 4, parent: 1 });
-        roundtrip_req(&PsRequest::FreeBranch { branch: 4 });
+        roundtrip_req(&PsRequest::ForkBranch {
+            session: 2,
+            child: 4,
+            parent: 1,
+        });
+        roundtrip_req(&PsRequest::FreeBranch {
+            session: 2,
+            branch: 4,
+        });
         roundtrip_req(&PsRequest::CheckpointBranch {
+            session: 0,
             branch: 3,
             dir: "/tmp/with \"quotes\"\nand → unicode".into(),
         });
         roundtrip_req(&PsRequest::VerifyBranch {
+            session: 9,
             branch: 7,
             dir: "/tmp/ck".into(),
         });
         roundtrip_req(&PsRequest::RestoreBranch {
+            session: 0,
             branch: 0,
             dir: "relative/dir".into(),
         });
@@ -841,6 +1010,7 @@ mod tests {
         roundtrip_req(&PsRequest::SubscribeStats { interval_ms: 250 });
         roundtrip_req(&PsRequest::PublishProgress {
             event: TrialEvent {
+                session: 6,
                 episode: 1,
                 trial: 4,
                 branch: 9,
@@ -849,6 +1019,9 @@ mod tests {
                 time: 0.5,
             },
         });
+        roundtrip_req(&PsRequest::ListBranches { session: 0 });
+        roundtrip_req(&PsRequest::ListBranches { session: 12 });
+        roundtrip_req(&PsRequest::EndSession { session: 12 });
         roundtrip_req(&PsRequest::Shutdown);
     }
 
@@ -891,12 +1064,20 @@ mod tests {
             rpc_hist,
             branches: vec![(0, 100), (5, 40)],
             trials: vec![TrialEvent {
+                session: 2,
                 episode: 0,
                 trial: 3,
                 branch: 5,
                 clock: 42,
                 progress: -1.25,
                 time: 0.5,
+            }],
+            sessions: vec![SessionStats {
+                session: 2,
+                rows_applied: 600,
+                rows_read: 3000,
+                deferrals: 4,
+                live_branches: 1,
             }],
             ..ServerDelta::default()
         }
@@ -909,8 +1090,20 @@ mod tests {
             shard_end: 4,
             optimizer: "adarevision".into(),
             codec: WireCodec::Binary,
+            session: 0,
+        });
+        roundtrip_reply(&PsReply::Hello {
+            shard_begin: 0,
+            shard_end: 2,
+            optimizer: "sgd".into(),
+            codec: WireCodec::Json,
+            session: 3,
         });
         roundtrip_reply(&PsReply::Ok);
+        roundtrip_reply(&PsReply::BranchList { branches: vec![] });
+        roundtrip_reply(&PsReply::BranchList {
+            branches: vec![(0, 22), (5, 0)],
+        });
         roundtrip_reply(&PsReply::Row {
             data: Some(vec![1.0, f32::NEG_INFINITY, -0.0]),
             accum: None,
@@ -954,9 +1147,9 @@ mod tests {
         assert_eq!(buf[1..5], SCHEMA_VERSION.to_le_bytes());
         // a frame stamped with a newer version is a typed error
         let mut newer = buf.clone();
-        newer[1..5].copy_from_slice(&2u32.to_le_bytes());
+        newer[1..5].copy_from_slice(&3u32.to_le_bytes());
         let err = decode_reply(&newer).unwrap_err().to_string();
-        assert!(err.contains("schema version 2"), "{err}");
+        assert!(err.contains("schema version 3"), "{err}");
         // every truncation of the stats frame errors instead of
         // panicking or decoding short
         for cut in 0..buf.len() {
@@ -979,6 +1172,7 @@ mod tests {
             f32::MAX,
         ];
         let req = PsRequest::InsertRow {
+            session: 0,
             branch: 0,
             table: 0,
             key: 0,
@@ -1006,6 +1200,7 @@ mod tests {
         assert!(decode_reply(&[0x0e]).is_err());
         // every truncation of a valid frame is an error, never a panic
         let req = PsRequest::ApplyUpdate {
+            session: 1,
             branch: 1,
             table: 0,
             key: 5,
@@ -1021,10 +1216,15 @@ mod tests {
         // trailing bytes are rejected too
         buf.push(0);
         assert!(decode_request(&buf).is_err());
-        // bad bool / option-tag / codec bytes
-        assert!(decode_request(&[OP_READ, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 2])
-            .is_err());
+        // bad bool / option-tag / codec / session-tag bytes (ReadRow
+        // body: session:u32 branch:u32 table:u32 key:u64 accum:u8)
+        assert!(decode_request(&[
+            OP_READ, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 2
+        ])
+        .is_err());
         assert!(decode_request(&[OP_HELLO, 9]).is_err());
+        // codec ok, session tag is neither 0 nor 1
+        assert!(decode_request(&[OP_HELLO, 0, 9]).is_err());
         // a forged count larger than the remaining bytes fails before
         // any allocation proportional to the count
         let mut rows = vec![RE_ROWS];
@@ -1040,7 +1240,10 @@ mod tests {
         assert!(!is_binary_frame(b""));
         let mut buf = Vec::new();
         for req in [
-            PsRequest::Hello { codec: WireCodec::Binary },
+            PsRequest::Hello {
+                codec: WireCodec::Binary,
+                session: None,
+            },
             PsRequest::ServerStats,
             PsRequest::Shutdown,
         ] {

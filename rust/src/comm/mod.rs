@@ -60,6 +60,12 @@ pub type Clock = u64;
 /// Unique branch identifier.
 pub type BranchId = u32;
 
+/// Tuning-session identifier, assigned by a shard server at `Hello`.
+/// Session 0 is the default namespace every unregistered client lives
+/// in — branch ids pass through unscoped, so a lone session behaves
+/// bit-identically to the pre-session protocol.
+pub type SessionId = u32;
+
 /// Branch type carried by [`TunerMsg::ForkBranch`]: `Testing` branches
 /// evaluate the model on validation data and report the validation
 /// accuracy as their progress (§4.5 "Evaluating the model").

@@ -29,6 +29,17 @@
 //! replies go back in request order even though different connections
 //! execute concurrently on the pool.
 //!
+//! **Session fairness** (optional): when a [`SessionThrottle`] is
+//! installed, every completed frame reports the tuning session it
+//! belonged to and its row cost ([`FrameResult::session`] /
+//! [`FrameResult::cost_rows`]) and the poll thread debits a post-paid
+//! per-session token bucket.  A session over its configured rows/sec
+//! share has its connections' further frames *deferred* — parked in
+//! the same per-connection `pending` queues, never dropped — and
+//! re-dispatched as the bucket refills; the poll timeout is bounded
+//! while anything is deferred so refills are observed even with no
+//! new traffic.  Without a throttle the dispatch path is untouched.
+//!
 //! Accept errors never terminate the listener: transient `accept()`
 //! failures (`EMFILE`, aborted handshakes, …) are counted, logged,
 //! and retried after a short backoff — a garbage or failed connection
@@ -54,6 +65,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 #[cfg(unix)]
 use super::socket::{decode_length_frame, Framing, PsListener, Stream, MAX_FRAME_LEN};
+#[cfg(unix)]
+use super::SessionId;
 use crate::stats::LatencyHist;
 
 /// Transport-level counters owned by whoever runs a [`ServerCore`]
@@ -83,6 +96,7 @@ pub struct CoreMetrics {
 
 /// One executed request's outcome, produced by a worker thread.
 #[cfg(unix)]
+#[derive(Default)]
 pub struct FrameResult {
     /// Encoded reply frame body (framing header added by the poll
     /// thread).
@@ -93,6 +107,14 @@ pub struct FrameResult {
     /// connection subscribed to [`FrameHandler::on_tick`] pushes at
     /// roughly that cadence (the poll thread clamps it).
     pub subscribe: Option<u64>,
+    /// Tuning session this frame belonged to, when known.  The poll
+    /// thread records it on the connection and, if a
+    /// [`SessionThrottle`] is installed, debits that session's
+    /// fairness bucket by [`FrameResult::cost_rows`] (post-paid).
+    pub session: Option<SessionId>,
+    /// Parameter rows this frame touched — the fairness currency.
+    /// Ignored when `session` is `None` or no throttle is installed.
+    pub cost_rows: u64,
 }
 
 /// What a [`ServerCore`] serves: one complete frame body in, one
@@ -124,6 +146,161 @@ fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
 #[cfg(unix)]
 fn as_u64(n: usize) -> u64 {
     u64::try_from(n).unwrap_or(u64::MAX)
+}
+
+// ---------------------------------------------------------------------------
+// SessionThrottle: per-session data-plane fairness
+// ---------------------------------------------------------------------------
+
+/// Post-paid per-session token bucket enforcing a rows/sec share on
+/// the data plane.
+///
+/// The poll thread charges each completed frame's row cost to the
+/// session it belonged to; a session whose accumulated debt exceeds
+/// one second's share is *throttled* — its connections' queued frames
+/// are deferred (held in the per-connection `pending` queues, never
+/// dropped) until refill pays the debt back down.  Every method takes
+/// the caller's clock (`now_ms`, any monotonic millisecond base), so
+/// the arithmetic is deterministic under test.
+///
+/// Shared between the poll thread (charging/deferring) and the stats
+/// plane (reading deferral counters for the per-session census), so
+/// state sits behind a mutex — taken per completed frame, not per
+/// row, and only when fairness is enabled at all.
+#[cfg(unix)]
+pub struct SessionThrottle {
+    /// Configured per-session share, rows per second (min 1).
+    rows_per_sec: u64,
+    /// Debt a session may carry before deferral kicks in: one
+    /// second's share, so short bursts pass without jitter.
+    burst_rows: u64,
+    state: Mutex<ThrottleState>,
+}
+
+#[cfg(unix)]
+#[derive(Default)]
+struct ThrottleState {
+    buckets: HashMap<SessionId, Bucket>,
+    /// Deferral events per session over the throttle's lifetime
+    /// (monotonic; feeds `stats::SessionStats::deferrals`).
+    deferrals: HashMap<SessionId, u64>,
+}
+
+#[cfg(unix)]
+struct Bucket {
+    /// Unpaid row debt.
+    debt_rows: u64,
+    /// Clock of the last refill that credited anything — partial
+    /// milliseconds of credit carry over by *not* advancing this.
+    last_ms: u64,
+}
+
+#[cfg(unix)]
+impl SessionThrottle {
+    pub fn new(rows_per_sec: u64) -> SessionThrottle {
+        let rows_per_sec = rows_per_sec.max(1);
+        SessionThrottle {
+            rows_per_sec,
+            burst_rows: rows_per_sec,
+            state: Mutex::new(ThrottleState::default()),
+        }
+    }
+
+    /// The configured per-session share in rows/sec.
+    pub fn rows_per_sec(&self) -> u64 {
+        self.rows_per_sec
+    }
+
+    fn refill(&self, b: &mut Bucket, now_ms: u64) {
+        let elapsed = now_ms.saturating_sub(b.last_ms);
+        let credit = elapsed.saturating_mul(self.rows_per_sec) / 1000;
+        if credit > 0 {
+            b.debt_rows = b.debt_rows.saturating_sub(credit);
+            b.last_ms = now_ms;
+        }
+    }
+
+    /// Debit `rows` against `session`'s bucket.  Post-paid: the frame
+    /// already executed; the debt throttles *future* dispatch.
+    pub fn charge(&self, session: SessionId, rows: u64, now_ms: u64) {
+        let mut st = lock(&self.state);
+        let b = st.buckets.entry(session).or_insert(Bucket {
+            debt_rows: 0,
+            last_ms: now_ms,
+        });
+        self.refill(b, now_ms);
+        b.debt_rows = b.debt_rows.saturating_add(rows);
+    }
+
+    /// Whether `session` is over its share (debt beyond the burst
+    /// allowance) after refilling at `now_ms`.
+    pub fn throttled(&self, session: SessionId, now_ms: u64) -> bool {
+        let mut st = lock(&self.state);
+        let Some(b) = st.buckets.get_mut(&session) else {
+            return false;
+        };
+        self.refill(b, now_ms);
+        b.debt_rows > self.burst_rows
+    }
+
+    /// Count one deferral event against `session` — the poll thread
+    /// calls this whenever dispatch is held back by the throttle.
+    pub fn note_deferral(&self, session: SessionId) {
+        let mut st = lock(&self.state);
+        *st.deferrals.entry(session).or_insert(0) += 1;
+    }
+
+    /// Milliseconds until the most-ready throttled session drops back
+    /// under its burst allowance; `None` when nothing is throttled.
+    /// The poll thread bounds its wait by this while frames sit
+    /// deferred.
+    pub fn ready_in_ms(&self, now_ms: u64) -> Option<u64> {
+        let mut st = lock(&self.state);
+        let mut soonest: Option<u64> = None;
+        for b in st.buckets.values_mut() {
+            self.refill(b, now_ms);
+            let excess = b.debt_rows.saturating_sub(self.burst_rows);
+            if excess == 0 {
+                continue;
+            }
+            // ceil(excess / rows-per-ms), saturating — an absurd debt
+            // just means "wait the maximum bound"
+            let num = excess.saturating_mul(1000).saturating_add(self.rows_per_sec - 1);
+            let ms = (num / self.rows_per_sec).max(1);
+            soonest = Some(soonest.map_or(ms, |s| s.min(ms)));
+        }
+        soonest
+    }
+
+    /// Lifetime deferral counts per session, sorted by session id —
+    /// the source for `stats::SessionStats::deferrals`.
+    pub fn deferrals(&self) -> Vec<(SessionId, u64)> {
+        let st = lock(&self.state);
+        let mut out: Vec<(SessionId, u64)> = st.deferrals.iter().map(|(s, n)| (*s, *n)).collect();
+        out.sort_unstable_by_key(|(s, _)| *s);
+        out
+    }
+}
+
+/// `true` iff fairness is enabled, the connection's session is known,
+/// and that session is over budget right now.
+#[cfg(unix)]
+fn is_throttled(
+    throttle: Option<&SessionThrottle>,
+    session: Option<SessionId>,
+    now_ms: u64,
+) -> bool {
+    match (throttle, session) {
+        (Some(t), Some(s)) => t.throttled(s, now_ms),
+        _ => false,
+    }
+}
+
+#[cfg(unix)]
+fn note_deferral(throttle: Option<&SessionThrottle>, session: Option<SessionId>) {
+    if let (Some(t), Some(s)) = (throttle, session) {
+        t.note_deferral(s);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -408,6 +585,10 @@ struct ConnState {
     /// Stats-stream subscription interval in ms (see
     /// [`FrameResult::subscribe`]); `None` = not subscribed.
     subscribed: Option<u64>,
+    /// Tuning session this connection's traffic is attributed to,
+    /// learned from the first completed frame that reported one (see
+    /// [`FrameResult::session`]); the fairness plane throttles by it.
+    session: Option<SessionId>,
 }
 
 #[cfg(unix)]
@@ -424,6 +605,7 @@ impl ConnState {
             dead: false,
             want_write: false,
             subscribed: None,
+            session: None,
         }
     }
 
@@ -493,6 +675,10 @@ pub struct ServerCore<'a, H: FrameHandler> {
     pub metrics: &'a CoreMetrics,
     /// Worker-pool size; clamped to at least 1.
     pub workers: usize,
+    /// Optional per-session fairness plane.  `None` (the default
+    /// deployment) leaves the dispatch path byte-identical to the
+    /// pre-fairness behavior.
+    pub throttle: Option<&'a SessionThrottle>,
 }
 
 /// Default worker-pool size: the machine's parallelism, clamped to
@@ -517,6 +703,7 @@ impl<H: FrameHandler> ServerCore<'_, H> {
             handler,
             metrics,
             workers,
+            throttle,
         } = self;
         listener.set_nonblocking(true).context("listener nonblocking")?;
         let mut poller = Poller::new()?;
@@ -566,6 +753,10 @@ impl<H: FrameHandler> ServerCore<'_, H> {
             // stats-push ticker state: the poll thread *is* the ticker,
             // so pushes cost nothing when nobody is subscribed
             let mut last_tick = std::time::Instant::now();
+            // fairness clock: monotonic ms since loop start, injected
+            // into the throttle so its arithmetic stays clock-agnostic
+            let clock0 = std::time::Instant::now();
+            let now_ms = || u64::try_from(clock0.elapsed().as_millis()).unwrap_or(u64::MAX);
 
             loop {
                 // cadence = minimum subscribed interval, clamped so a
@@ -576,10 +767,24 @@ impl<H: FrameHandler> ServerCore<'_, H> {
                     .filter_map(|c| c.subscribed)
                     .min()
                     .map(|ms| ms.clamp(50, 10_000));
-                let timeout = match tick_ms {
-                    None => -1,
-                    Some(ms) => {
-                        let left = u128::from(ms).saturating_sub(last_tick.elapsed().as_millis());
+                let tick_left: Option<u128> = tick_ms
+                    .map(|ms| u128::from(ms).saturating_sub(last_tick.elapsed().as_millis()));
+                // while frames sit deferred, bound the wait so bucket
+                // refills are observed even with no traffic or ticks
+                let throttle_left: Option<u128> = throttle.and_then(|t| {
+                    let deferred = conns
+                        .values()
+                        .any(|c| !c.busy && !c.dead && !c.pending.is_empty());
+                    if deferred {
+                        Some(u128::from(t.ready_in_ms(now_ms()).unwrap_or(1).clamp(1, 100)))
+                    } else {
+                        None
+                    }
+                });
+                let timeout = match (tick_left, throttle_left) {
+                    (None, None) => -1,
+                    (a, b) => {
+                        let left = a.unwrap_or(u128::MAX).min(b.unwrap_or(u128::MAX));
                         i32::try_from(left).unwrap_or(i32::MAX)
                     }
                 };
@@ -638,7 +843,14 @@ impl<H: FrameHandler> ServerCore<'_, H> {
                             };
                             if ev.readable {
                                 read_conn(conn, &mut scratch, metrics);
-                                extract_and_dispatch(conn, token, framing, &jobs_tx);
+                                extract_and_dispatch(
+                                    conn,
+                                    token,
+                                    framing,
+                                    &jobs_tx,
+                                    throttle,
+                                    now_ms(),
+                                );
                             }
                             if ev.writable {
                                 flush_conn(conn, metrics);
@@ -668,11 +880,46 @@ impl<H: FrameHandler> ServerCore<'_, H> {
                     } else {
                         flush_conn(conn, metrics);
                     }
-                    match conn.pending.pop_front() {
-                        Some(body) if !conn.dead => {
-                            let _ = jobs_tx.send((token, body));
+                    // post-paid fairness: attribute the finished frame
+                    // to its session and debit the bucket
+                    if let Some(s) = result.session {
+                        conn.session = Some(s);
+                        if let Some(t) = throttle {
+                            t.charge(s, result.cost_rows, now_ms());
                         }
-                        _ => conn.busy = false,
+                    }
+                    if is_throttled(throttle, conn.session, now_ms()) {
+                        // over budget: park queued frames (deferred,
+                        // never dropped) until the bucket refills
+                        if !conn.pending.is_empty() {
+                            note_deferral(throttle, conn.session);
+                        }
+                        conn.busy = false;
+                    } else {
+                        match conn.pending.pop_front() {
+                            Some(body) if !conn.dead => {
+                                let _ = jobs_tx.send((token, body));
+                            }
+                            _ => conn.busy = false,
+                        }
+                    }
+                }
+
+                // throttle re-dispatch: deferred frames re-enter the
+                // normal per-connection queue as buckets refill
+                if throttle.is_some() {
+                    let now = now_ms();
+                    for (token, conn) in &mut conns {
+                        if conn.busy || conn.dead || conn.pending.is_empty() {
+                            continue;
+                        }
+                        if is_throttled(throttle, conn.session, now) {
+                            continue;
+                        }
+                        if let Some(body) = conn.pending.pop_front() {
+                            conn.busy = true;
+                            let _ = jobs_tx.send((*token, body));
+                        }
                     }
                 }
 
@@ -763,13 +1010,16 @@ fn read_conn(conn: &mut ConnState, scratch: &mut [u8], metrics: &CoreMetrics) {
 }
 
 /// Frame out everything `rbuf` holds; dispatch the first frame if the
-/// connection is idle, queue the rest.
+/// connection is idle and its session under budget, queue the rest.
+/// A frame held back *only* by the throttle counts as a deferral.
 #[cfg(unix)]
 fn extract_and_dispatch(
     conn: &mut ConnState,
     token: u64,
     framing: Framing,
     jobs_tx: &mpsc::Sender<(u64, Vec<u8>)>,
+    throttle: Option<&SessionThrottle>,
+    now_ms: u64,
 ) {
     if conn.dead {
         return;
@@ -780,6 +1030,9 @@ fn extract_and_dispatch(
             Ok(Some((body, consumed))) => {
                 conn.rbuf.drain(..consumed);
                 if conn.busy {
+                    conn.pending.push_back(body);
+                } else if is_throttled(throttle, conn.session, now_ms) {
+                    note_deferral(throttle, conn.session);
                     conn.pending.push_back(body);
                 } else {
                     conn.busy = true;
@@ -855,7 +1108,7 @@ mod tests {
             FrameResult {
                 reply: body.to_ascii_uppercase(),
                 shutdown,
-                subscribe: None,
+                ..FrameResult::default()
             }
         }
     }
@@ -871,6 +1124,7 @@ mod tests {
                 handler: &Shout,
                 metrics: &metrics,
                 workers: 2,
+                throttle: None,
             }
             .run()
             .unwrap();
@@ -930,6 +1184,83 @@ mod tests {
         ok.send("stop").unwrap();
         assert_eq!(ok.recv_expect().unwrap(), "STOP");
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn session_throttle_math_is_deterministic() {
+        let t = SessionThrottle::new(1_000); // 1k rows/sec, burst 1k
+        // under the burst allowance: never throttled
+        t.charge(1, 500, 0);
+        assert!(!t.throttled(1, 0));
+        // push past burst: throttled until refill pays the debt down
+        t.charge(1, 600, 0); // debt 1100 > burst 1000
+        assert!(t.throttled(1, 0));
+        assert_eq!(t.ready_in_ms(0), Some(100));
+        // 99 ms of credit leaves debt 1001: still over…
+        assert!(t.throttled(1, 99));
+        // …one more millisecond clears it exactly
+        assert!(!t.throttled(1, 100));
+        assert_eq!(t.ready_in_ms(100), None);
+        // sessions are independent
+        t.charge(2, 10_000, 100);
+        assert!(t.throttled(2, 100));
+        assert!(!t.throttled(1, 100));
+        // deferral counters are monotonic and per-session
+        t.note_deferral(2);
+        t.note_deferral(2);
+        assert_eq!(t.deferrals(), vec![(2, 2)]);
+    }
+
+    /// Echoes frames, attributing each to session 1 at a fixed row
+    /// cost, so the throttle path is exercised end to end.
+    struct Metered;
+    impl FrameHandler for Metered {
+        fn on_frame(&self, body: Vec<u8>) -> FrameResult {
+            FrameResult {
+                shutdown: body == b"stop",
+                reply: body,
+                session: Some(1),
+                cost_rows: 60_000,
+                ..FrameResult::default()
+            }
+        }
+    }
+
+    #[test]
+    fn throttled_session_frames_are_deferred_not_dropped() {
+        let throttle = SessionThrottle::new(200_000); // burst: 200k rows
+        let listener = PsListener::bind(&SocketSpec::parse("127.0.0.1:0").unwrap()).unwrap();
+        let spec = listener.local_spec().unwrap();
+        let metrics = CoreMetrics::default();
+        std::thread::scope(|scope| {
+            let throttle = &throttle;
+            let metrics = &metrics;
+            scope.spawn(move || {
+                ServerCore {
+                    listener,
+                    framing: Framing::Length,
+                    handler: &Metered,
+                    metrics,
+                    workers: 2,
+                    throttle: Some(throttle),
+                }
+                .run()
+                .unwrap();
+            });
+            let mut conn = spec.connect(Framing::Length).unwrap();
+            // 8 frames × 60k rows ≫ the 200k burst: the tail must be
+            // deferred, yet every reply still arrives, in order
+            for i in 0..8 {
+                conn.send(&format!("f{i}")).unwrap();
+            }
+            for i in 0..8 {
+                assert_eq!(conn.recv_expect().unwrap(), format!("f{i}"));
+            }
+            conn.send("stop").unwrap();
+            assert_eq!(conn.recv_expect().unwrap(), "stop");
+        });
+        let deferred: u64 = throttle.deferrals().iter().map(|(_, n)| *n).sum();
+        assert!(deferred > 0, "expected the over-budget tail to defer");
     }
 
     #[test]

@@ -52,13 +52,13 @@ use crate::ps::pool::PoolStats;
 use crate::ps::storage::{RowKey, TableId};
 use crate::ps::RowData;
 use crate::stats::{
-    ServerDelta, ServerPlane, ShardRows, StorePlane, TrialEvent, WirePlane, HIST_BUCKETS,
-    SCHEMA_VERSION,
+    ServerDelta, ServerPlane, SessionStats, ShardRows, StorePlane, TrialEvent, WirePlane,
+    HIST_BUCKETS, SCHEMA_VERSION,
 };
 use crate::tunable::TunableSetting;
 use crate::util::json::Json;
 
-use super::{BranchId, BranchType, SystemMsg, TunerMsg};
+use super::{BranchId, BranchType, SessionId, SystemMsg, TunerMsg};
 
 /// Payload codec for the PS data plane, negotiated at `Hello`.
 ///
@@ -249,22 +249,47 @@ pub fn decode_system_msg(line: &str) -> Result<SystemMsg> {
 // Data plane: parameter-server RPC frames
 // ---------------------------------------------------------------------------
 
+/// Named-session attach carried by [`PsRequest::Hello`]: registers
+/// the name on first sight (admission-checked) or re-attaches to the
+/// existing session of that name, refreshing its lease either way.
+/// `None` in the `Hello` means the default session-0 namespace — and a
+/// byte-identical legacy encoding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionHello {
+    /// User-chosen session name (`tune --session-name`).
+    pub name: String,
+    /// Lease duration in milliseconds: the server garbage-collects
+    /// the session's branches if no stamped frame arrives for this
+    /// long (crashed-client cleanup).  0 asks for the server default.
+    pub lease_ms: u64,
+}
+
 /// One request from a remote training process to a shard server.
 ///
 /// `ForkBranch`/`FreeBranch` are broadcast by the client to **every**
 /// shard server (branch index replication), exactly like the control
 /// plane broadcasts branch ops to every worker; row ops are routed to
 /// the one server owning the row's global shard.
+///
+/// Every branch-scoped frame carries a `session` id (0 = the default
+/// namespace; the JSON key is omitted when 0, so legacy frames are
+/// byte-identical and pre-session peers interoperate unchanged).
 #[derive(Debug, Clone, PartialEq)]
 pub enum PsRequest {
     /// Handshake: which global shards does this server own, and with
     /// which optimizer was its engine built?  `codec` advertises the
     /// data-plane payload codec the client wants; servers that predate
     /// the field simply never echo it back, which the client treats as
-    /// a JSON-only peer.
-    Hello { codec: WireCodec },
+    /// a JSON-only peer.  `session` optionally registers/attaches a
+    /// named session (see [`SessionHello`]); the granted id comes back
+    /// in [`PsReply::Hello`].
+    Hello {
+        codec: WireCodec,
+        session: Option<SessionHello>,
+    },
     /// Install a fresh row (root-branch model initialization).
     InsertRow {
+        session: SessionId,
         branch: BranchId,
         table: TableId,
         key: RowKey,
@@ -273,6 +298,7 @@ pub enum PsRequest {
     /// Read one row; `with_accum` additionally returns the
     /// AdaRevision grad-accumulator snapshot (slot 1).
     ReadRow {
+        session: SessionId,
         branch: BranchId,
         table: TableId,
         key: RowKey,
@@ -282,6 +308,7 @@ pub enum PsRequest {
     /// engine's batched read path (one read-lock acquisition per local
     /// shard).  The reply lists one row per key, in key order.
     ReadRows {
+        session: SessionId,
         branch: BranchId,
         with_accum: bool,
         keys: Vec<(TableId, RowKey)>,
@@ -289,6 +316,7 @@ pub enum PsRequest {
     /// Apply one row update (the AdaRevision path, which carries the
     /// `z_old` snapshot read together with the row).
     ApplyUpdate {
+        session: SessionId,
         branch: BranchId,
         table: TableId,
         key: RowKey,
@@ -299,33 +327,53 @@ pub enum PsRequest {
     /// Apply this server's group of a routed batch under the engine's
     /// batched path (one lock acquisition per local shard).
     ApplyBatch {
+        session: SessionId,
         branch: BranchId,
         hyper: Hyper,
         updates: Vec<(TableId, RowKey, Vec<f32>)>,
     },
     /// Fork `child` from `parent` on this server's shards.
-    ForkBranch { child: BranchId, parent: BranchId },
+    ForkBranch {
+        session: SessionId,
+        child: BranchId,
+        parent: BranchId,
+    },
     /// Free `branch` on this server's shards (last-owner buffers are
     /// reclaimed into the server-local pools).
-    FreeBranch { branch: BranchId },
+    FreeBranch {
+        session: SessionId,
+        branch: BranchId,
+    },
     /// Dump `branch`'s rows on this server into per-shard segment
     /// files under `dir` (a path reachable from the server process);
     /// the reply carries the written [`SegmentMeta`]s so the
     /// coordinator can assemble the checkpoint manifest.  Broadcast to
     /// every shard server: each dumps exactly its own shard range,
     /// concurrently with the others.
-    CheckpointBranch { branch: BranchId, dir: String },
+    CheckpointBranch {
+        session: SessionId,
+        branch: BranchId,
+        dir: String,
+    },
     /// Decode and fully verify `branch`'s segment files for this
     /// server's shard range under `dir` **without installing
     /// anything** — phase one of the coordinator's two-phase restore
     /// (verify everywhere, then install everywhere), which keeps a
     /// corrupted checkpoint from leaving a cross-server torn branch.
-    VerifyBranch { branch: BranchId, dir: String },
+    VerifyBranch {
+        session: SessionId,
+        branch: BranchId,
+        dir: String,
+    },
     /// Restore `branch` on this server from the segment files of its
     /// shard range under `dir`.  Fail-closed server-side: a corrupted,
     /// truncated or missing segment is an `Err` reply with the
     /// server's state unchanged.
-    RestoreBranch { branch: BranchId, dir: String },
+    RestoreBranch {
+        session: SessionId,
+        branch: BranchId,
+        dir: String,
+    },
     /// Probe the server's full stats document once (pull side of the
     /// observability plane; same [`ServerDelta`] payload the push
     /// stream uses).
@@ -338,10 +386,68 @@ pub enum PsRequest {
     SubscribeStats { interval_ms: u64 },
     /// Publish one trial-progress event into the server's stats
     /// stream (best-effort side channel from the tuner; the server
-    /// keeps a bounded latest-per-trial map and folds it into deltas).
+    /// keeps a bounded latest-per-trial map **per session** and folds
+    /// it into deltas).  The event's `session` field doubles as the
+    /// frame's session stamp.
     PublishProgress { event: TrialEvent },
+    /// List the branches live in `session`'s namespace, with this
+    /// server's local row counts — the session-scoped census behind
+    /// the remote store's `live_branches`/`branch_row_count` (and the
+    /// reason attaching to a shared cluster can no longer free a
+    /// co-tenant's branches).
+    ListBranches { session: SessionId },
+    /// Tear the session down: free every branch in its namespace and
+    /// drop the registration.  Graceful counterpart of lease-expiry
+    /// GC.  `EndSession { session: 0 }` is rejected — the default
+    /// namespace has no lifecycle.
+    EndSession { session: SessionId },
     /// Ask the server process to exit after acknowledging.
     Shutdown,
+}
+
+impl PsRequest {
+    /// The session a frame is scoped to, when it carries one.
+    /// `Hello` answers `None` — the connection holds no granted id
+    /// yet — and the control frames (`ServerStats`, `SubscribeStats`,
+    /// `Shutdown`) are unscoped.  `PublishProgress` is stamped
+    /// through its event.
+    pub fn session(&self) -> Option<SessionId> {
+        match self {
+            PsRequest::InsertRow { session, .. }
+            | PsRequest::ReadRow { session, .. }
+            | PsRequest::ReadRows { session, .. }
+            | PsRequest::ApplyUpdate { session, .. }
+            | PsRequest::ApplyBatch { session, .. }
+            | PsRequest::ForkBranch { session, .. }
+            | PsRequest::FreeBranch { session, .. }
+            | PsRequest::CheckpointBranch { session, .. }
+            | PsRequest::VerifyBranch { session, .. }
+            | PsRequest::RestoreBranch { session, .. }
+            | PsRequest::ListBranches { session }
+            | PsRequest::EndSession { session } => Some(*session),
+            PsRequest::PublishProgress { event } => Some(event.session),
+            PsRequest::Hello { .. }
+            | PsRequest::ServerStats
+            | PsRequest::SubscribeStats { .. }
+            | PsRequest::Shutdown => None,
+        }
+    }
+
+    /// Parameter rows this request touches — the currency of the
+    /// data-plane fairness plane.  Row ops cost their row count;
+    /// branch and control ops cost nothing.
+    pub fn cost_rows(&self) -> u64 {
+        match self {
+            PsRequest::InsertRow { .. }
+            | PsRequest::ReadRow { .. }
+            | PsRequest::ApplyUpdate { .. } => 1,
+            PsRequest::ReadRows { keys, .. } => u64::try_from(keys.len()).unwrap_or(u64::MAX),
+            PsRequest::ApplyBatch { updates, .. } => {
+                u64::try_from(updates.len()).unwrap_or(u64::MAX)
+            }
+            _ => 0,
+        }
+    }
 }
 
 /// One reply from a shard server.
@@ -356,6 +462,10 @@ pub enum PsReply {
         /// with binary framing; anything else (including a pre-codec
         /// server that omits the field entirely) means JSON.
         codec: WireCodec,
+        /// Session id granted for the `Hello`'s [`SessionHello`]
+        /// attach; 0 (key omitted on the wire) when none was
+        /// requested, so pre-session peers parse the reply unchanged.
+        session: SessionId,
     },
     Ok,
     Row {
@@ -374,6 +484,10 @@ pub enum PsReply {
     Verified { rows: u64 },
     /// Row count installed by a [`PsRequest::RestoreBranch`].
     Restored { rows: u64 },
+    /// The session-scoped branch census answering a
+    /// [`PsRequest::ListBranches`]: user-visible branch ids and this
+    /// server's local row counts, branch-id order.
+    BranchList { branches: Vec<(BranchId, usize)> },
     /// Full stats document answering a [`PsRequest::ServerStats`]
     /// probe.
     Stats(ServerDelta),
@@ -472,47 +586,76 @@ fn hyper_of(v: &Json) -> Result<Hyper> {
     })
 }
 
+/// Append the session stamp.  The key is **omitted for session 0** so
+/// default-namespace frames stay byte-identical to the pre-session
+/// wire format (and old peers keep decoding them).
+fn push_session(out: &mut String, session: SessionId) {
+    if session != 0 {
+        let _ = write!(out, ",\"session\":{session}");
+    }
+}
+
+/// Decode the optional `session` stamp: absent means 0, the default
+/// namespace every pre-session peer lives in.
+fn session_of(v: &Json) -> Result<SessionId> {
+    match v.get("session") {
+        None => Ok(0),
+        Some(s) => num_u32(s, "session"),
+    }
+}
+
 /// Encode one PS request as a single JSON frame.
 pub fn encode_ps_request(req: &PsRequest) -> String {
     let mut out = String::new();
     match req {
-        PsRequest::Hello { codec } => match codec {
-            WireCodec::Json => out.push_str("{\"op\":\"hello\"}"),
-            WireCodec::Binary => out.push_str("{\"op\":\"hello\",\"codec\":\"binary\"}"),
-        },
+        PsRequest::Hello { codec, session } => {
+            out.push_str("{\"op\":\"hello\"");
+            if *codec == WireCodec::Binary {
+                out.push_str(",\"codec\":\"binary\"");
+            }
+            if let Some(s) = session {
+                out.push_str(",\"session_name\":");
+                push_json_str(&mut out, &s.name);
+                let _ = write!(out, ",\"lease_ms\":{}", s.lease_ms);
+            }
+            out.push('}');
+        }
         PsRequest::InsertRow {
+            session,
             branch,
             table,
             key,
             data,
         } => {
-            let _ = write!(
-                out,
-                "{{\"op\":\"insert\",\"branch\":{branch},\"table\":{table},\"key\":{key},\"data\":"
-            );
+            out.push_str("{\"op\":\"insert\"");
+            push_session(&mut out, *session);
+            let _ = write!(out, ",\"branch\":{branch},\"table\":{table},\"key\":{key},\"data\":");
             push_f32_bits(&mut out, data);
             out.push('}');
         }
         PsRequest::ReadRow {
+            session,
             branch,
             table,
             key,
             with_accum,
         } => {
+            out.push_str("{\"op\":\"read\"");
+            push_session(&mut out, *session);
             let _ = write!(
                 out,
-                "{{\"op\":\"read\",\"branch\":{branch},\"table\":{table},\"key\":{key},\"accum\":{with_accum}}}"
+                ",\"branch\":{branch},\"table\":{table},\"key\":{key},\"accum\":{with_accum}}}"
             );
         }
         PsRequest::ReadRows {
+            session,
             branch,
             with_accum,
             keys,
         } => {
-            let _ = write!(
-                out,
-                "{{\"op\":\"read_rows\",\"branch\":{branch},\"accum\":{with_accum},\"keys\":["
-            );
+            out.push_str("{\"op\":\"read_rows\"");
+            push_session(&mut out, *session);
+            let _ = write!(out, ",\"branch\":{branch},\"accum\":{with_accum},\"keys\":[");
             for (i, (table, key)) in keys.iter().enumerate() {
                 if i > 0 {
                     out.push(',');
@@ -522,6 +665,7 @@ pub fn encode_ps_request(req: &PsRequest) -> String {
             out.push_str("]}");
         }
         PsRequest::ApplyUpdate {
+            session,
             branch,
             table,
             key,
@@ -529,10 +673,9 @@ pub fn encode_ps_request(req: &PsRequest) -> String {
             hyper,
             z_old,
         } => {
-            let _ = write!(
-                out,
-                "{{\"op\":\"update\",\"branch\":{branch},\"table\":{table},\"key\":{key},"
-            );
+            out.push_str("{\"op\":\"update\"");
+            push_session(&mut out, *session);
+            let _ = write!(out, ",\"branch\":{branch},\"table\":{table},\"key\":{key},");
             push_hyper(&mut out, *hyper);
             out.push_str(",\"grad\":");
             push_f32_bits(&mut out, grad);
@@ -541,11 +684,14 @@ pub fn encode_ps_request(req: &PsRequest) -> String {
             out.push('}');
         }
         PsRequest::ApplyBatch {
+            session,
             branch,
             hyper,
             updates,
         } => {
-            let _ = write!(out, "{{\"op\":\"batch\",\"branch\":{branch},");
+            out.push_str("{\"op\":\"batch\"");
+            push_session(&mut out, *session);
+            let _ = write!(out, ",\"branch\":{branch},");
             push_hyper(&mut out, *hyper);
             out.push_str(",\"updates\":[");
             for (i, (table, key, grad)) in updates.iter().enumerate() {
@@ -558,24 +704,50 @@ pub fn encode_ps_request(req: &PsRequest) -> String {
             }
             out.push_str("]}");
         }
-        PsRequest::ForkBranch { child, parent } => {
-            let _ = write!(out, "{{\"op\":\"fork\",\"child\":{child},\"parent\":{parent}}}");
+        PsRequest::ForkBranch {
+            session,
+            child,
+            parent,
+        } => {
+            out.push_str("{\"op\":\"fork\"");
+            push_session(&mut out, *session);
+            let _ = write!(out, ",\"child\":{child},\"parent\":{parent}}}");
         }
-        PsRequest::FreeBranch { branch } => {
-            let _ = write!(out, "{{\"op\":\"free\",\"branch\":{branch}}}");
+        PsRequest::FreeBranch { session, branch } => {
+            out.push_str("{\"op\":\"free\"");
+            push_session(&mut out, *session);
+            let _ = write!(out, ",\"branch\":{branch}}}");
         }
-        PsRequest::CheckpointBranch { branch, dir } => {
-            let _ = write!(out, "{{\"op\":\"ckpt\",\"branch\":{branch},\"dir\":");
+        PsRequest::CheckpointBranch {
+            session,
+            branch,
+            dir,
+        } => {
+            out.push_str("{\"op\":\"ckpt\"");
+            push_session(&mut out, *session);
+            let _ = write!(out, ",\"branch\":{branch},\"dir\":");
             push_json_str(&mut out, dir);
             out.push('}');
         }
-        PsRequest::VerifyBranch { branch, dir } => {
-            let _ = write!(out, "{{\"op\":\"verify\",\"branch\":{branch},\"dir\":");
+        PsRequest::VerifyBranch {
+            session,
+            branch,
+            dir,
+        } => {
+            out.push_str("{\"op\":\"verify\"");
+            push_session(&mut out, *session);
+            let _ = write!(out, ",\"branch\":{branch},\"dir\":");
             push_json_str(&mut out, dir);
             out.push('}');
         }
-        PsRequest::RestoreBranch { branch, dir } => {
-            let _ = write!(out, "{{\"op\":\"restore\",\"branch\":{branch},\"dir\":");
+        PsRequest::RestoreBranch {
+            session,
+            branch,
+            dir,
+        } => {
+            out.push_str("{\"op\":\"restore\"");
+            push_session(&mut out, *session);
+            let _ = write!(out, ",\"branch\":{branch},\"dir\":");
             push_json_str(&mut out, dir);
             out.push('}');
         }
@@ -584,14 +756,26 @@ pub fn encode_ps_request(req: &PsRequest) -> String {
             let _ = write!(out, "{{\"op\":\"sub_stats\",\"interval_ms\":{interval_ms}}}");
         }
         PsRequest::PublishProgress { event } => {
+            out.push_str("{\"op\":\"publish\"");
+            push_session(&mut out, event.session);
             let _ = write!(
                 out,
-                "{{\"op\":\"publish\",\"episode\":{},\"trial\":{},\"branch\":{},\"clock\":{},\"progress\":",
+                ",\"episode\":{},\"trial\":{},\"branch\":{},\"clock\":{},\"progress\":",
                 event.episode, event.trial, event.branch, event.clock
             );
             push_json_str(&mut out, &hex_u64(event.progress.to_bits()));
             out.push_str(",\"time\":");
             push_json_str(&mut out, &hex_u64(event.time.to_bits()));
+            out.push('}');
+        }
+        PsRequest::ListBranches { session } => {
+            out.push_str("{\"op\":\"list_branches\"");
+            push_session(&mut out, *session);
+            out.push('}');
+        }
+        PsRequest::EndSession { session } => {
+            out.push_str("{\"op\":\"end_session\"");
+            push_session(&mut out, *session);
             out.push('}');
         }
         PsRequest::Shutdown => out.push_str("{\"op\":\"shutdown\"}"),
@@ -606,14 +790,28 @@ pub fn decode_ps_request(line: &str) -> Result<PsRequest> {
         .as_str()
         .ok_or_else(|| anyhow!("op not a string"))?;
     match op {
-        "hello" => Ok(PsRequest::Hello { codec: codec_of(&v)? }),
+        "hello" => {
+            let session = match v.get("session_name") {
+                None => None,
+                Some(n) => Some(SessionHello {
+                    name: n
+                        .as_str()
+                        .ok_or_else(|| anyhow!("bad session_name: not a string"))?
+                        .to_string(),
+                    lease_ms: num_u64(field(&v, "lease_ms")?, "lease_ms")?,
+                }),
+            };
+            Ok(PsRequest::Hello { codec: codec_of(&v)?, session })
+        }
         "insert" => Ok(PsRequest::InsertRow {
+            session: session_of(&v)?,
             branch: num_u32(field(&v, "branch")?, "branch")?,
             table: num_u32(field(&v, "table")?, "table")?,
             key: num_u64(field(&v, "key")?, "key")?,
             data: f32_bits_array(field(&v, "data")?, "data")?,
         }),
         "read" => Ok(PsRequest::ReadRow {
+            session: session_of(&v)?,
             branch: num_u32(field(&v, "branch")?, "branch")?,
             table: num_u32(field(&v, "table")?, "table")?,
             key: num_u64(field(&v, "key")?, "key")?,
@@ -623,6 +821,7 @@ pub fn decode_ps_request(line: &str) -> Result<PsRequest> {
             },
         }),
         "read_rows" => Ok(PsRequest::ReadRows {
+            session: session_of(&v)?,
             branch: num_u32(field(&v, "branch")?, "branch")?,
             with_accum: match field(&v, "accum")? {
                 Json::Bool(b) => *b,
@@ -642,6 +841,7 @@ pub fn decode_ps_request(line: &str) -> Result<PsRequest> {
                 .collect::<Result<Vec<_>>>()?,
         }),
         "update" => Ok(PsRequest::ApplyUpdate {
+            session: session_of(&v)?,
             branch: num_u32(field(&v, "branch")?, "branch")?,
             table: num_u32(field(&v, "table")?, "table")?,
             key: num_u64(field(&v, "key")?, "key")?,
@@ -667,28 +867,32 @@ pub fn decode_ps_request(line: &str) -> Result<PsRequest> {
                 })
                 .collect::<Result<Vec<_>>>()?;
             Ok(PsRequest::ApplyBatch {
+                session: session_of(&v)?,
                 branch: num_u32(field(&v, "branch")?, "branch")?,
                 hyper: hyper_of(&v)?,
                 updates,
             })
         }
         "fork" => Ok(PsRequest::ForkBranch {
+            session: session_of(&v)?,
             child: num_u32(field(&v, "child")?, "child")?,
             parent: num_u32(field(&v, "parent")?, "parent")?,
         }),
         "free" => Ok(PsRequest::FreeBranch {
+            session: session_of(&v)?,
             branch: num_u32(field(&v, "branch")?, "branch")?,
         }),
         "ckpt" | "verify" | "restore" => {
+            let session = session_of(&v)?;
             let branch = num_u32(field(&v, "branch")?, "branch")?;
             let dir = field(&v, "dir")?
                 .as_str()
                 .ok_or_else(|| anyhow!("bad dir: not a string"))?
                 .to_string();
             Ok(match op {
-                "ckpt" => PsRequest::CheckpointBranch { branch, dir },
-                "verify" => PsRequest::VerifyBranch { branch, dir },
-                _ => PsRequest::RestoreBranch { branch, dir },
+                "ckpt" => PsRequest::CheckpointBranch { session, branch, dir },
+                "verify" => PsRequest::VerifyBranch { session, branch, dir },
+                _ => PsRequest::RestoreBranch { session, branch, dir },
             })
         }
         "stats" => Ok(PsRequest::ServerStats),
@@ -697,6 +901,7 @@ pub fn decode_ps_request(line: &str) -> Result<PsRequest> {
         }),
         "publish" => Ok(PsRequest::PublishProgress {
             event: TrialEvent {
+                session: session_of(&v)?,
                 episode: num_u32(field(&v, "episode")?, "episode")?,
                 trial: num_u32(field(&v, "trial")?, "trial")?,
                 branch: num_u32(field(&v, "branch")?, "branch")?,
@@ -705,6 +910,8 @@ pub fn decode_ps_request(line: &str) -> Result<PsRequest> {
                 time: f64_hex_bits(field(&v, "time")?, "time")?,
             },
         }),
+        "list_branches" => Ok(PsRequest::ListBranches { session: session_of(&v)? }),
+        "end_session" => Ok(PsRequest::EndSession { session: session_of(&v)? }),
         "shutdown" => Ok(PsRequest::Shutdown),
         other => bail!("unknown ps request op {other}"),
     }
@@ -769,11 +976,26 @@ fn push_server_delta(out: &mut String, op: &str, d: &ServerDelta) {
         if i > 0 {
             out.push(',');
         }
-        let _ = write!(out, "[{},{},{},{},", t.episode, t.trial, t.branch, t.clock);
+        let _ = write!(
+            out,
+            "[{},{},{},{},{},",
+            t.session, t.episode, t.trial, t.branch, t.clock
+        );
         push_json_str(out, &hex_u64(t.progress.to_bits()));
         out.push(',');
         push_json_str(out, &hex_u64(t.time.to_bits()));
         out.push(']');
+    }
+    out.push_str("],\"sessions\":[");
+    for (i, s) in d.sessions.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "[{},{},{},{},{}]",
+            s.session, s.rows_applied, s.rows_read, s.deferrals, s.live_branches
+        );
     }
     out.push_str("]}");
 }
@@ -864,16 +1086,35 @@ fn server_delta_of(v: &Json) -> Result<ServerDelta> {
         .iter()
         .map(|t| {
             let t = t.as_array().ok_or_else(|| anyhow!("bad trial entry"))?;
-            if t.len() != 6 {
+            if t.len() != 7 {
                 bail!("bad trial entry: len {}", t.len());
             }
             Ok(TrialEvent {
-                episode: num_u32(&t[0], "episode")?,
-                trial: num_u32(&t[1], "trial")?,
-                branch: num_u32(&t[2], "branch")?,
-                clock: num_u64(&t[3], "clock")?,
-                progress: f64_hex_bits(&t[4], "progress")?,
-                time: f64_hex_bits(&t[5], "time")?,
+                session: num_u32(&t[0], "session")?,
+                episode: num_u32(&t[1], "episode")?,
+                trial: num_u32(&t[2], "trial")?,
+                branch: num_u32(&t[3], "branch")?,
+                clock: num_u64(&t[4], "clock")?,
+                progress: f64_hex_bits(&t[5], "progress")?,
+                time: f64_hex_bits(&t[6], "time")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let sessions = field(v, "sessions")?
+        .as_array()
+        .ok_or_else(|| anyhow!("bad sessions"))?
+        .iter()
+        .map(|s| {
+            let s = s.as_array().ok_or_else(|| anyhow!("bad session entry"))?;
+            if s.len() != 5 {
+                bail!("bad session entry: len {}", s.len());
+            }
+            Ok(SessionStats {
+                session: num_u32(&s[0], "session")?,
+                rows_applied: num_u64(&s[1], "session rows_applied")?,
+                rows_read: num_u64(&s[2], "session rows_read")?,
+                deferrals: num_u64(&s[3], "session deferrals")?,
+                live_branches: num_usize(&s[4], "session live_branches")?,
             })
         })
         .collect::<Result<Vec<_>>>()?;
@@ -887,6 +1128,7 @@ fn server_delta_of(v: &Json) -> Result<ServerDelta> {
         rpc_hist,
         branches,
         trials,
+        sessions,
     })
 }
 
@@ -899,6 +1141,7 @@ pub fn encode_ps_reply(reply: &PsReply) -> String {
             shard_end,
             optimizer,
             codec,
+            session,
         } => {
             let _ = write!(
                 out,
@@ -908,6 +1151,7 @@ pub fn encode_ps_reply(reply: &PsReply) -> String {
             if *codec == WireCodec::Binary {
                 out.push_str(",\"codec\":\"binary\"");
             }
+            push_session(&mut out, *session);
             out.push('}');
         }
         PsReply::Ok => out.push_str("{\"op\":\"ok\"}"),
@@ -961,6 +1205,16 @@ pub fn encode_ps_reply(reply: &PsReply) -> String {
         PsReply::Restored { rows } => {
             let _ = write!(out, "{{\"op\":\"restored\",\"rows\":{rows}}}");
         }
+        PsReply::BranchList { branches } => {
+            out.push_str("{\"op\":\"branch_list\",\"branches\":[");
+            for (i, (id, rows)) in branches.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "[{id},{rows}]");
+            }
+            out.push_str("]}");
+        }
         PsReply::Stats(d) => push_server_delta(&mut out, "stats", d),
         PsReply::StatsDelta(d) => push_server_delta(&mut out, "stats_delta", d),
         PsReply::Err { message } => {
@@ -987,6 +1241,7 @@ pub fn decode_ps_reply(line: &str) -> Result<PsReply> {
                 .ok_or_else(|| anyhow!("bad optimizer"))?
                 .to_string(),
             codec: codec_of(&v)?,
+            session: session_of(&v)?,
         }),
         "ok" => Ok(PsReply::Ok),
         "row" => Ok(PsReply::Row {
@@ -1046,6 +1301,20 @@ pub fn decode_ps_reply(line: &str) -> Result<PsReply> {
         }),
         "restored" => Ok(PsReply::Restored {
             rows: num_u64(field(&v, "rows")?, "rows")?,
+        }),
+        "branch_list" => Ok(PsReply::BranchList {
+            branches: field(&v, "branches")?
+                .as_array()
+                .ok_or_else(|| anyhow!("bad branches"))?
+                .iter()
+                .map(|b| {
+                    let b = b.as_array().ok_or_else(|| anyhow!("bad branch pair"))?;
+                    if b.len() != 2 {
+                        bail!("bad branch pair: len {}", b.len());
+                    }
+                    Ok((num_u32(&b[0], "branch")?, num_usize(&b[1], "rows")?))
+                })
+                .collect::<Result<Vec<_>>>()?,
         }),
         "stats" => Ok(PsReply::Stats(server_delta_of(&v)?)),
         "stats_delta" => Ok(PsReply::StatsDelta(server_delta_of(&v)?)),
@@ -1157,33 +1426,53 @@ mod tests {
     #[test]
     fn ps_request_frames_roundtrip() {
         let hyper = Hyper { lr: 0.1, momentum: 0.9 };
-        roundtrip_req(&PsRequest::Hello { codec: WireCodec::Json });
-        roundtrip_req(&PsRequest::Hello { codec: WireCodec::Binary });
+        roundtrip_req(&PsRequest::Hello { codec: WireCodec::Json, session: None });
+        roundtrip_req(&PsRequest::Hello { codec: WireCodec::Binary, session: None });
+        roundtrip_req(&PsRequest::Hello {
+            codec: WireCodec::Json,
+            session: Some(SessionHello { name: "tune \"a\"".into(), lease_ms: 0 }),
+        });
+        roundtrip_req(&PsRequest::Hello {
+            codec: WireCodec::Binary,
+            session: Some(SessionHello { name: "b".into(), lease_ms: 30_000 }),
+        });
         // NaN payloads are covered by f32_bit_patterns_survive_bit_exact
         // (NaN != NaN breaks the PartialEq comparison used here).
         roundtrip_req(&PsRequest::InsertRow {
+            session: 0,
             branch: 0,
             table: 1,
             key: 7,
             data: vec![1.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, 1.0e-45],
         });
+        roundtrip_req(&PsRequest::InsertRow {
+            session: u32::MAX,
+            branch: 0,
+            table: 1,
+            key: 7,
+            data: vec![],
+        });
         roundtrip_req(&PsRequest::ReadRow {
+            session: 2,
             branch: 3,
             table: 0,
             key: u64::MAX >> 12,
             with_accum: true,
         });
         roundtrip_req(&PsRequest::ReadRows {
+            session: 0,
             branch: 3,
             with_accum: true,
             keys: vec![(0, 7), (1, u64::MAX >> 12), (0, 0)],
         });
         roundtrip_req(&PsRequest::ReadRows {
+            session: 9,
             branch: 0,
             with_accum: false,
             keys: vec![],
         });
         roundtrip_req(&PsRequest::ApplyUpdate {
+            session: 0,
             branch: 1,
             table: 0,
             key: 5,
@@ -1192,6 +1481,7 @@ mod tests {
             z_old: Some(vec![2.0, 3.0]),
         });
         roundtrip_req(&PsRequest::ApplyUpdate {
+            session: 1,
             branch: 1,
             table: 0,
             key: 5,
@@ -1200,21 +1490,26 @@ mod tests {
             z_old: None,
         });
         roundtrip_req(&PsRequest::ApplyBatch {
+            session: 3,
             branch: 2,
             hyper,
             updates: vec![(0, 1, vec![1.0]), (1, 9, vec![-2.5, 0.125])],
         });
-        roundtrip_req(&PsRequest::ForkBranch { child: 4, parent: 1 });
-        roundtrip_req(&PsRequest::FreeBranch { branch: 4 });
+        roundtrip_req(&PsRequest::ForkBranch { session: 0, child: 4, parent: 1 });
+        roundtrip_req(&PsRequest::ForkBranch { session: 5, child: 4, parent: 1 });
+        roundtrip_req(&PsRequest::FreeBranch { session: 5, branch: 4 });
         roundtrip_req(&PsRequest::CheckpointBranch {
+            session: 1,
             branch: 3,
             dir: "/tmp/with \"quotes\"\nand newlines".into(),
         });
         roundtrip_req(&PsRequest::VerifyBranch {
+            session: 0,
             branch: 7,
             dir: "/tmp/ck".into(),
         });
         roundtrip_req(&PsRequest::RestoreBranch {
+            session: 2,
             branch: 0,
             dir: "relative/dir".into(),
         });
@@ -1222,6 +1517,7 @@ mod tests {
         roundtrip_req(&PsRequest::SubscribeStats { interval_ms: 250 });
         roundtrip_req(&PsRequest::PublishProgress {
             event: TrialEvent {
+                session: 6,
                 episode: 1,
                 trial: 4,
                 branch: 9,
@@ -1230,7 +1526,40 @@ mod tests {
                 time: 0.5,
             },
         });
+        roundtrip_req(&PsRequest::ListBranches { session: 0 });
+        roundtrip_req(&PsRequest::ListBranches { session: 12 });
+        roundtrip_req(&PsRequest::EndSession { session: 12 });
         roundtrip_req(&PsRequest::Shutdown);
+    }
+
+    #[test]
+    fn session_stamp_is_backward_compatible() {
+        // Session-0 frames must encode WITHOUT a session key — byte
+        // identical to the pre-session wire format...
+        let line = encode_ps_request(&PsRequest::ReadRow {
+            session: 0,
+            branch: 3,
+            table: 0,
+            key: 9,
+            with_accum: false,
+        });
+        assert!(!line.contains("session"), "{line}");
+        // ...and a pre-session peer's frame (no key) decodes as
+        // session 0.
+        let old = "{\"op\":\"free\",\"branch\":4}";
+        assert_eq!(
+            decode_ps_request(old).unwrap(),
+            PsRequest::FreeBranch { session: 0, branch: 4 }
+        );
+        // stamped frames put the session right after the op
+        let line = encode_ps_request(&PsRequest::FreeBranch { session: 7, branch: 4 });
+        assert_eq!(line, "{\"op\":\"free\",\"session\":7,\"branch\":4}");
+        // strict decode: non-integers rejected like every id field
+        assert!(decode_ps_request("{\"op\":\"free\",\"session\":1.5,\"branch\":4}").is_err());
+        assert!(decode_ps_request("{\"op\":\"free\",\"session\":-1,\"branch\":4}").is_err());
+        // hello attach: name must be a string, lease must be present
+        assert!(decode_ps_request("{\"op\":\"hello\",\"session_name\":7}").is_err());
+        assert!(decode_ps_request("{\"op\":\"hello\",\"session_name\":\"x\"}").is_err());
     }
 
     #[test]
@@ -1240,6 +1569,7 @@ mod tests {
         // cannot, so compare bits directly).
         let req = PsRequest::PublishProgress {
             event: TrialEvent {
+                session: 0,
                 episode: 0,
                 trial: 0,
                 branch: 1,
@@ -1303,14 +1633,18 @@ mod tests {
             shard_end: 4,
             optimizer: "adarevision".into(),
             codec: WireCodec::Json,
+            session: 0,
         });
         roundtrip_reply(&PsReply::Hello {
             shard_begin: 0,
             shard_end: 8,
             optimizer: "sgd".into(),
             codec: WireCodec::Binary,
+            session: 3,
         });
         roundtrip_reply(&PsReply::Ok);
+        roundtrip_reply(&PsReply::BranchList { branches: vec![] });
+        roundtrip_reply(&PsReply::BranchList { branches: vec![(0, 22), (5, 0)] });
         roundtrip_reply(&PsReply::Row {
             data: Some(vec![1.0, f32::NEG_INFINITY, -0.0]),
             accum: None,
@@ -1371,12 +1705,20 @@ mod tests {
             rpc_hist,
             branches: vec![(0, 100), (5, 40)],
             trials: vec![TrialEvent {
+                session: 2,
                 episode: 0,
                 trial: 3,
                 branch: 5,
                 clock: 42,
                 progress: -1.25,
                 time: 0.5,
+            }],
+            sessions: vec![SessionStats {
+                session: 2,
+                rows_applied: 600,
+                rows_read: 3000,
+                deferrals: 4,
+                live_branches: 1,
             }],
             ..ServerDelta::default()
         }
@@ -1387,14 +1729,14 @@ mod tests {
         // Every stats frame carries the schema version up front...
         let line = encode_ps_reply(&PsReply::StatsDelta(ServerDelta::default()));
         let v = Json::parse(&line).unwrap();
-        assert_eq!(v.get("v").and_then(|x| x.as_f64()), Some(1.0));
+        assert_eq!(v.get("v").and_then(|x| x.as_f64()), Some(2.0));
         // ...and a frame from a hypothetical newer peer is a typed
         // version error, not a field-by-field misdecode.
-        let newer = line.replacen("\"v\":1", "\"v\":2", 1);
+        let newer = line.replacen("\"v\":2", "\"v\":3", 1);
         let err = decode_ps_reply(&newer).unwrap_err().to_string();
-        assert!(err.contains("schema version 2"), "{err}");
+        assert!(err.contains("schema version 3"), "{err}");
         // missing version is rejected too
-        let unversioned = line.replacen("\"v\":1,", "", 1);
+        let unversioned = line.replacen("\"v\":2,", "", 1);
         assert!(decode_ps_reply(&unversioned).is_err());
         // truncated histograms never decode into a short array
         let line = encode_ps_reply(&PsReply::Stats(sample_delta()));
@@ -1409,10 +1751,10 @@ mod tests {
         // must *encode* without the field so old peers can parse it.
         assert_eq!(
             decode_ps_request("{\"op\":\"hello\"}").unwrap(),
-            PsRequest::Hello { codec: WireCodec::Json }
+            PsRequest::Hello { codec: WireCodec::Json, session: None }
         );
         assert_eq!(
-            encode_ps_request(&PsRequest::Hello { codec: WireCodec::Json }),
+            encode_ps_request(&PsRequest::Hello { codec: WireCodec::Json, session: None }),
             "{\"op\":\"hello\"}"
         );
         let old_reply = "{\"op\":\"hello\",\"begin\":0,\"end\":4,\"optimizer\":\"sgd\"}";
@@ -1440,6 +1782,7 @@ mod tests {
             f32::MAX,
         ];
         let req = PsRequest::InsertRow {
+            session: 0,
             branch: 0,
             table: 0,
             key: 0,

@@ -49,6 +49,12 @@ pub struct ExperimentConfig {
     pub ps: Option<String>,
     /// Socket framing for the remote store: "line" | "length" | "binary".
     pub ps_framing: String,
+    /// Named tuning session to register on the remote store: scopes
+    /// this run's branches to their own namespace so several tunes
+    /// can share one shard-server cluster.  `None` uses the shared
+    /// default namespace (the single-tenant behavior).
+    /// CLI: `--session-name`.
+    pub session_name: Option<String>,
     /// Durable session checkpoints: root directory for checkpoint
     /// steps (`None` = checkpointing off).  CLI: `--checkpoint-dir`.
     pub checkpoint_dir: Option<String>,
@@ -107,6 +113,7 @@ impl Default for ExperimentConfig {
             loss_threshold: None,
             ps: None,
             ps_framing: "line".into(),
+            session_name: None,
             checkpoint_dir: None,
             checkpoint_every: 50,
             resume: false,
@@ -155,6 +162,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_str("ps_framing") {
             cfg.ps_framing = v.to_string();
+        }
+        if let Some(v) = doc.get_str("session_name") {
+            cfg.session_name = Some(v.to_string());
         }
         if let Some(v) = doc.get_str("checkpoint_dir") {
             cfg.checkpoint_dir = Some(v.to_string());
@@ -222,7 +232,8 @@ impl ExperimentConfig {
         }
         let specs = parse_server_list(url)?;
         let framing = Framing::parse(&self.ps_framing)?;
-        let remote = RemoteParamServer::connect(&specs, framing)?;
+        let remote =
+            RemoteParamServer::connect_session(&specs, framing, self.session_name.as_deref())?;
         let expected = self.optimizer_kind()?;
         if remote.optimizer_kind() != expected {
             bail!(
@@ -527,6 +538,52 @@ mod tests {
             PsHandle::Local(_) => panic!("expected a remote store"),
         }
         drop(sys);
+        ha.join().unwrap().unwrap();
+        hb.join().unwrap().unwrap();
+    }
+
+    /// Regression: two tunes attach to ONE shared cluster under
+    /// different `session_name`s; the second attach's `with_store`
+    /// stale-branch sweep used to free *all* live branches — now each
+    /// session's census (and therefore its sweep) sees only its own
+    /// namespace, so session one's in-flight trial branch survives.
+    #[test]
+    fn with_store_cleanup_is_session_scoped() {
+        use crate::comm::socket::Framing;
+        use crate::ps::remote::{spawn_local_server, ShardRange};
+        use crate::ps::ParamStore;
+        let kind = OptimizerKind::AdaRevision;
+        let (a, ha, _) = spawn_local_server(ShardRange { begin: 0, end: 1 }, kind, Framing::Line)
+            .unwrap();
+        let (b, hb, _) = spawn_local_server(ShardRange { begin: 1, end: 2 }, kind, Framing::Line)
+            .unwrap();
+        let toml = |session: &str| {
+            format!(
+                "app = \"mf\"\noptimizer = \"adarevision\"\nps = \"remote://{a},{b}\"\n\
+                 session_name = \"{session}\"\n\
+                 [mf]\nusers = 12\nitems = 10\nrank = 2\nn_ratings = 60\n"
+            )
+        };
+        let cfg_one = ExperimentConfig::from_toml(&toml("one")).unwrap();
+        assert_eq!(cfg_one.session_name.as_deref(), Some("one"));
+        let (sys_one, _) = cfg_one.build_system().unwrap();
+        let AnySystem::Mf(sys_one) = sys_one else { panic!("wrong system") };
+        // a tune in flight: session one holds a forked trial branch
+        sys_one.store().fork_branch(1, 0).unwrap();
+        assert_eq!(sys_one.store().branch_row_count(1).unwrap(), 22);
+        let cfg_two = ExperimentConfig::from_toml(&toml("two")).unwrap();
+        let (sys_two, _) = cfg_two.build_system().unwrap();
+        let AnySystem::Mf(sys_two) = sys_two else { panic!("wrong system") };
+        // session one's branch survived session two's attach sweep...
+        assert_eq!(sys_one.store().branch_row_count(1).unwrap(), 22);
+        // ...and session two sees only its own (branchless) namespace
+        assert_eq!(sys_two.store().live_branches().unwrap(), vec![0]);
+        match sys_one.store() {
+            PsHandle::Remote(remote) => remote.shutdown_all().unwrap(),
+            PsHandle::Local(_) => panic!("expected a remote store"),
+        }
+        drop(sys_one);
+        drop(sys_two);
         ha.join().unwrap().unwrap();
         hb.join().unwrap().unwrap();
     }

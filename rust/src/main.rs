@@ -37,7 +37,7 @@ use mltuner::baselines::{HyperbandDriver, SpearmintDriver};
 use mltuner::comm::socket::{parse_server_list, Framing, PsListener, SocketSpec};
 use mltuner::config::ExperimentConfig;
 use mltuner::optim::OptimizerKind;
-use mltuner::ps::remote::{ShardRange, ShardServer};
+use mltuner::ps::remote::{ServeOpts, ShardRange, ShardServer};
 use mltuner::runtime::Runtime;
 use mltuner::top::TopConfig;
 use mltuner::tuner::MLtuner;
@@ -51,11 +51,14 @@ USAGE: mltuner <tune|serve|top|baseline|train|info> [--flags]
 tune:     --config <file.toml> | --app sim --profile <name>
           --seed N --searcher hyperopt|random|grid|spearmint --csv out.csv
           --ps remote://host:port,host:port --ps-framing line|length|binary
+          --session-name NAME (own branch namespace on a shared cluster)
           --checkpoint-dir DIR --checkpoint-every N --resume
           --stats-json out.json (final stats snapshot, machine-readable)
           (--crash-after-clocks N: fault injection for recovery tests)
 serve:    --shards a..b --listen host:port|unix:/path
           --optimizer sgd|adam|adarevision|... --framing line|length|binary
+          --max-sessions N --max-branches-per-session N
+          --session-lease-ms N --session-rows-per-sec N (fairness share)
 top:      --ps remote://host:port,host:port --framing line|length|binary
           --interval-ms N --json --once
 baseline: --kind spearmint|hyperband --profile <name> --seed N
@@ -100,6 +103,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         OptimizerKind::parse(name).ok_or_else(|| anyhow::anyhow!("unknown optimizer {name}"))?
     };
     let framing = Framing::parse(args.get_or("framing", "line"))?;
+    // multi-tenancy knobs: session admission, lease, fairness share
+    let defaults = ServeOpts::default();
+    let max_sessions = args.get_u64("max-sessions", defaults.max_sessions as u64);
+    let max_branches =
+        args.get_u64("max-branches-per-session", defaults.max_branches_per_session as u64);
+    let opts = ServeOpts {
+        max_sessions: max_sessions as usize,
+        max_branches_per_session: max_branches as usize,
+        default_lease_ms: args.get_u64("session-lease-ms", defaults.default_lease_ms),
+        session_rows_per_sec: args
+            .get("session-rows-per-sec")
+            .map(|v| v.parse::<u64>())
+            .transpose()?,
+    };
     let listener = PsListener::bind(&listen)?;
     let local = listener.local_spec()?;
     println!(
@@ -108,7 +125,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         framing.name()
     );
     std::io::stdout().flush()?;
-    ShardServer::new(shards, optimizer, framing).serve(listener)
+    ShardServer::with_opts(shards, optimizer, framing, opts).serve(listener)
 }
 
 /// Live observability dashboard: subscribe to every shard server's
@@ -149,6 +166,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
     }
     if let Some(f) = args.get("ps-framing") {
         cfg.ps_framing = f.to_string();
+    }
+    if let Some(name) = args.get("session-name") {
+        cfg.session_name = Some(name.to_string());
     }
     if let Some(dir) = args.get("checkpoint-dir") {
         cfg.checkpoint_dir = Some(dir.to_string());

@@ -109,6 +109,7 @@ pub mod cache;
 pub mod checkpoint;
 pub mod pool;
 pub mod remote;
+pub mod session;
 pub mod storage;
 pub mod thread_cache;
 
@@ -120,13 +121,14 @@ use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuar
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::comm::BranchId;
+use crate::comm::{BranchId, SessionId};
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
 use crate::stats::{ServerPlane, ShardRows, Snapshot, StorePlane, TrialEvent};
 
 use checkpoint::SegmentMeta;
 use pool::{MemoryPool, PoolStats};
 use remote::RemoteParamServer;
+use session::{SessionLimits, SessionRegistry, SESSION_BRANCH_BASE};
 use storage::{Entry, RowKey, Shard, TableId};
 
 /// Branch fork/free fan-out runs one thread per shard at this many
@@ -154,12 +156,19 @@ struct ShardState {
 /// against each other without touching the update hot path.
 #[derive(Debug, Default)]
 struct ControlPlane {
-    /// rows per branch (all shards), for accounting.
+    /// rows per branch (all shards), for accounting.  Keys are
+    /// **global** branch ids: the default namespace's ids pass through
+    /// unchanged, named sessions' ids are mapped up from
+    /// [`SESSION_BRANCH_BASE`] by the registry below.
     branch_rows: HashMap<BranchId, usize>,
     /// Branch forks served since construction.
     forks: u64,
     /// Peak number of simultaneously-live branches (§4.6 memory check).
     peak_branches: usize,
+    /// Named-session namespaces (see [`session`]); shares this mutex
+    /// so a branch op and its namespace bookkeeping are one critical
+    /// section, and the lock hierarchy stays `control → shard`.
+    sessions: SessionRegistry,
 }
 
 /// Lock-free concurrency counters (relaxed atomics).
@@ -421,6 +430,13 @@ impl ParamServer {
     /// serialized against each other but never against updates/reads.
     pub fn fork_branch(&self, child: BranchId, parent: BranchId) -> Result<()> {
         let mut ctl = lock_control(&self.control);
+        self.fork_locked(&mut ctl, child, parent)
+    }
+
+    /// The fork body, for callers already holding the control mutex
+    /// (the session-scoped fork shares one critical section with its
+    /// namespace bookkeeping).
+    fn fork_locked(&self, ctl: &mut ControlPlane, child: BranchId, parent: BranchId) -> Result<()> {
         if ctl.branch_rows.contains_key(&child) {
             bail!("branch {child} already exists");
         }
@@ -482,6 +498,12 @@ impl ParamServer {
     /// like [`ParamServer::fork_branch`].
     pub fn free_branch(&self, branch: BranchId) -> Result<()> {
         let mut ctl = lock_control(&self.control);
+        self.free_locked(&mut ctl, branch)
+    }
+
+    /// The free body, for callers already holding the control mutex
+    /// (session teardown frees a whole namespace under one guard).
+    fn free_locked(&self, ctl: &mut ControlPlane, branch: BranchId) -> Result<()> {
         let Some(rows) = ctl.branch_rows.remove(&branch) else {
             bail!("branch {branch} does not exist");
         };
@@ -856,6 +878,211 @@ impl ParamServer {
             .iter()
             .map(|lock| read_shard(lock, &self.counters).shard.branch_row_count(branch))
             .collect()
+    }
+
+    // -- Session namespaces (multi-tenancy, see [`session`]) ---------------
+    //
+    // Session 0 is the default namespace: branch ids pass through
+    // untouched without taking the control mutex, so a lone legacy
+    // client pays nothing and behaves bit-exactly.  Named sessions map
+    // user branch ids to global ids under the control mutex; every
+    // time-dependent method takes `now_ms` from the caller so lease
+    // expiry stays deterministic under test.
+
+    /// Configure admission limits (served from `--max-sessions` /
+    /// `--max-branches-per-session`).
+    pub fn set_session_limits(&self, limits: SessionLimits) {
+        lock_control(&self.control).sessions.set_limits(limits);
+    }
+
+    pub fn session_limits(&self) -> SessionLimits {
+        lock_control(&self.control).sessions.limits()
+    }
+
+    /// Register or re-attach the session named `name` (lease refresh
+    /// either way), garbage-collecting expired co-tenants first so
+    /// their admission slots are reusable.  Returns the granted id and
+    /// effective lease.  A freshly created namespace is born with its
+    /// root branch (user id 0) live and empty.
+    pub fn register_session(
+        &self,
+        name: &str,
+        lease_ms: u64,
+        now_ms: u64,
+    ) -> Result<(SessionId, u64)> {
+        let mut ctl = lock_control(&self.control);
+        self.sweep_locked(&mut ctl, now_ms);
+        let grant = ctl.sessions.register(name, lease_ms, now_ms)?;
+        if grant.created {
+            ctl.branch_rows.entry(grant.root_global).or_insert(0);
+            ctl.peak_branches = ctl.peak_branches.max(ctl.branch_rows.len());
+        }
+        Ok((grant.id, grant.lease_ms))
+    }
+
+    /// Free every branch of every session whose lease lapsed (crashed
+    /// clients never send `EndSession`).  Returns the number of
+    /// sessions collected.
+    pub fn sweep_expired_sessions(&self, now_ms: u64) -> usize {
+        let mut ctl = lock_control(&self.control);
+        self.sweep_locked(&mut ctl, now_ms)
+    }
+
+    fn sweep_locked(&self, ctl: &mut ControlPlane, now_ms: u64) -> usize {
+        let expired = ctl.sessions.expired(now_ms);
+        let mut swept = 0;
+        for id in expired {
+            if let Ok(globals) = ctl.sessions.remove_session(id) {
+                for g in globals {
+                    if ctl.branch_rows.contains_key(&g) {
+                        let _ = self.free_locked(ctl, g);
+                    }
+                }
+                swept += 1;
+            }
+        }
+        swept
+    }
+
+    /// Refresh a session's lease (any stamped frame is a heartbeat).
+    /// Session 0 has no lease; unknown ids are ignored — the frame
+    /// that carried them fails at [`ParamServer::resolve_branch`].
+    pub fn touch_session(&self, session: SessionId, now_ms: u64) {
+        if session == 0 {
+            return;
+        }
+        lock_control(&self.control).sessions.touch(session, now_ms);
+    }
+
+    /// Map a session-scoped branch id to the engine's global id.
+    /// Session 0 is the identity and takes no lock.
+    pub fn resolve_branch(&self, session: SessionId, branch: BranchId) -> Result<BranchId> {
+        if session == 0 {
+            return Ok(branch);
+        }
+        lock_control(&self.control).sessions.resolve(session, branch)
+    }
+
+    /// Resolve `branch`, allocating a namespace mapping when the
+    /// session does not hold it yet (the restore-into-fresh-branch
+    /// path; admission-checked).
+    pub fn resolve_or_create_branch(
+        &self,
+        session: SessionId,
+        branch: BranchId,
+    ) -> Result<BranchId> {
+        if session == 0 {
+            return Ok(branch);
+        }
+        let mut ctl = lock_control(&self.control);
+        ctl.sessions.resolve_or_allocate(session, branch)
+    }
+
+    /// Session-scoped [`ParamServer::ensure_branch`].
+    pub fn ensure_branch_in(&self, session: SessionId, branch: BranchId) -> Result<()> {
+        if session == 0 {
+            self.ensure_branch(branch);
+            return Ok(());
+        }
+        let mut ctl = lock_control(&self.control);
+        let g = ctl.sessions.resolve_or_allocate(session, branch)?;
+        ctl.branch_rows.entry(g).or_insert(0);
+        ctl.peak_branches = ctl.peak_branches.max(ctl.branch_rows.len());
+        Ok(())
+    }
+
+    /// Session-scoped fork: namespace bookkeeping and the fork itself
+    /// are one critical section, so a failed fork never leaves a
+    /// dangling mapping.
+    pub fn fork_branch_in(
+        &self,
+        session: SessionId,
+        child: BranchId,
+        parent: BranchId,
+    ) -> Result<()> {
+        if session == 0 {
+            return self.fork_branch(child, parent);
+        }
+        let mut ctl = lock_control(&self.control);
+        let parent_g = ctl.sessions.resolve(session, parent)?;
+        let child_g = ctl.sessions.allocate_branch(session, child)?;
+        match self.fork_locked(&mut ctl, child_g, parent_g) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                ctl.sessions.remove_branch(session, child);
+                Err(e)
+            }
+        }
+    }
+
+    /// Session-scoped free: frees the global branch and drops the
+    /// namespace mapping.
+    pub fn free_branch_in(&self, session: SessionId, branch: BranchId) -> Result<()> {
+        if session == 0 {
+            return self.free_branch(branch);
+        }
+        let mut ctl = lock_control(&self.control);
+        let g = ctl.sessions.resolve(session, branch)?;
+        self.free_locked(&mut ctl, g)?;
+        ctl.sessions.remove_branch(session, branch);
+        Ok(())
+    }
+
+    /// Graceful session teardown: free exactly this namespace's
+    /// branches and drop the registration.  Returns the number of
+    /// branches freed.  Session 0 has no lifecycle and is rejected.
+    pub fn end_session(&self, session: SessionId) -> Result<usize> {
+        if session == 0 {
+            bail!("session 0 is the default namespace and cannot be ended");
+        }
+        let mut ctl = lock_control(&self.control);
+        let globals = ctl.sessions.remove_session(session)?;
+        let mut freed = 0;
+        for g in globals {
+            if ctl.branch_rows.contains_key(&g) {
+                self.free_locked(&mut ctl, g)?;
+                freed += 1;
+            }
+        }
+        Ok(freed)
+    }
+
+    /// One session's live branches under their **user-visible** ids,
+    /// with this server's local row counts (the `ListBranches`
+    /// census).  Session 0 lists only default-namespace branches —
+    /// ids below [`SESSION_BRANCH_BASE`] — so a legacy census never
+    /// sees a named co-tenant's branches.
+    pub fn session_branches(&self, session: SessionId) -> Result<Vec<(BranchId, usize)>> {
+        let ctl = lock_control(&self.control);
+        if session == 0 {
+            let mut v: Vec<(BranchId, usize)> = ctl
+                .branch_rows
+                .iter()
+                .filter(|(id, _)| **id < SESSION_BRANCH_BASE)
+                .map(|(id, rows)| (*id, *rows))
+                .collect();
+            v.sort_unstable();
+            return Ok(v);
+        }
+        let pairs = ctl.sessions.branches(session)?;
+        Ok(pairs
+            .into_iter()
+            .map(|(user, global)| (user, ctl.branch_rows.get(&global).copied().unwrap_or(0)))
+            .collect())
+    }
+
+    /// `(session, live branches)` for the stats census: session 0's
+    /// default namespace first, then every named session ascending.
+    pub fn session_live_branches(&self) -> Vec<(SessionId, usize)> {
+        let ctl = lock_control(&self.control);
+        let default_live = ctl
+            .branch_rows
+            .keys()
+            .filter(|id| **id < SESSION_BRANCH_BASE)
+            .count();
+        let mut v = vec![(0, default_live)];
+        v.extend(ctl.sessions.census());
+        v
     }
 }
 
@@ -1577,5 +1804,88 @@ mod tests {
         let counts = ps.shard_row_counts(0);
         let max = *counts.iter().max().unwrap();
         assert!((max as f64) <= 2.0 * 256.0, "counts {counts:?}");
+    }
+
+    #[test]
+    fn sessions_namespace_branches_and_tear_down_cleanly() {
+        let ps = ps(OptimizerKind::Sgd);
+        init_root(&ps, 8, 4); // default-namespace (session 0) model
+        let (a, _) = ps.register_session("tenant-a", 0, 0).unwrap();
+        let (b, _) = ps.register_session("tenant-b", 0, 0).unwrap();
+        assert_ne!(a, b);
+        // each tenant's root is its own empty branch; fill tenant A's
+        let ga = ps.resolve_branch(a, 0).unwrap();
+        let gb = ps.resolve_branch(b, 0).unwrap();
+        assert_ne!(ga, gb);
+        assert!(ga >= SESSION_BRANCH_BASE && gb >= SESSION_BRANCH_BASE);
+        for k in 0..4u64 {
+            ps.insert_row(ga, 0, k, vec![1.0]);
+        }
+        // both tenants fork "branch 1" — distinct global branches
+        ps.fork_branch_in(a, 1, 0).unwrap();
+        ps.fork_branch_in(b, 1, 0).unwrap();
+        assert_ne!(
+            ps.resolve_branch(a, 1).unwrap(),
+            ps.resolve_branch(b, 1).unwrap()
+        );
+        // session-0 census sees only default-namespace branches
+        assert_eq!(
+            ps.session_branches(0).unwrap(),
+            vec![(0, 8)],
+            "legacy census must not see tenant branches"
+        );
+        assert_eq!(ps.session_branches(a).unwrap(), vec![(0, 4), (1, 4)]);
+        // tearing tenant A down frees exactly its namespace
+        let live_before = ParamServer::live_branches(&ps).len();
+        assert_eq!(ps.end_session(a).unwrap(), 2);
+        assert_eq!(ParamServer::live_branches(&ps).len(), live_before - 2);
+        assert!(ps.resolve_branch(a, 0).is_err(), "session gone");
+        assert_eq!(ps.session_branches(b).unwrap().len(), 2, "B untouched");
+        assert_eq!(ps.read_row(0, 0, 3).unwrap(), &[3.0, 3.0, 3.0, 3.0]);
+        assert!(ps.end_session(0).is_err(), "default namespace has no end");
+    }
+
+    #[test]
+    fn lease_expiry_garbage_collects_crashed_sessions() {
+        let ps = ps(OptimizerKind::Sgd);
+        init_root(&ps, 4, 2);
+        let (a, lease) = ps.register_session("crasher", 1_000, 0).unwrap();
+        assert_eq!(lease, 1_000);
+        ps.fork_branch_in(a, 1, 0).unwrap();
+        // heartbeats hold the lease open
+        ps.touch_session(a, 900);
+        assert_eq!(ps.sweep_expired_sessions(1_800), 0);
+        // silence past the lease: the sweep frees the namespace
+        assert_eq!(ps.sweep_expired_sessions(2_000), 1);
+        assert!(ps.resolve_branch(a, 1).is_err());
+        assert_eq!(ps.session_live_branches(), vec![(0, 1)]);
+        // the default namespace survived untouched
+        assert_eq!(ps.branch_row_count(0), 4);
+    }
+
+    #[test]
+    fn session_admission_limits_are_enforced() {
+        let ps = ps(OptimizerKind::Sgd);
+        ps.set_session_limits(SessionLimits {
+            max_sessions: 1,
+            max_branches_per_session: 2,
+            default_lease_ms: 1_000,
+        });
+        let (a, _) = ps.register_session("only", 0, 0).unwrap();
+        assert!(ps.register_session("second", 0, 0).is_err());
+        init_root(&ps, 2, 2);
+        let ga = ps.resolve_branch(a, 0).unwrap();
+        ps.insert_row(ga, 0, 0, vec![1.0, 2.0]);
+        ps.fork_branch_in(a, 1, 0).unwrap();
+        let err = ps.fork_branch_in(a, 2, 0).unwrap_err().to_string();
+        assert!(err.contains("admission"), "{err}");
+        // freeing makes room again, and a failed fork leaves no
+        // mapping behind (forking from a missing parent)
+        ps.free_branch_in(a, 1).unwrap();
+        assert!(ps.fork_branch_in(a, 2, 7).is_err(), "missing parent");
+        assert!(ps.fork_branch_in(a, 2, 0).is_ok(), "no stale mapping");
+        // an expired co-tenant's admission slot is reclaimed by the
+        // register-time sweep
+        assert!(ps.register_session("second", 0, 5_000).is_ok());
     }
 }

@@ -50,6 +50,24 @@
 //! JSON-only peers on either side keep working unchanged (the codec
 //! field is absent from their hellos, which means JSON).
 //!
+//! **Multi-tenancy**: a `Hello` carrying a [`SessionHello`] registers
+//! (or re-attaches) a named session on each server, subject to the
+//! server's admission limits ([`ServeOpts`]).  Every branch-scoped
+//! frame the client sends afterwards is stamped with the granted
+//! per-server session id, and the server resolves the client's branch
+//! ids inside that session's namespace — two tenants can both "fork
+//! branch 1" on one cluster without colliding.  Leases are renewed by
+//! any stamped traffic; a SIGKILLed client's namespace is garbage-
+//! collected (branches freed) once its lease expires.  Teardown is
+//! graceful via `EndSession` (sent best-effort on client drop).  The
+//! session-scoped `ListBranches` census is what backs the remote
+//! store's `live_branches`/`branch_row_count`, so attaching to a
+//! shared cluster can only ever see — and free — its own branches.
+//! Durable checkpoints of a *named* session are keyed by the
+//! session's server-side branch ids, so they restore into the same
+//! live session; cross-run portable checkpoints belong to the default
+//! namespace (session 0), whose ids are stable.
+//!
 //! Topology: one coordinator process (the tuner + training system)
 //! connects to S shard servers, each started as
 //! `mltuner serve --shards a..b --listen ADDR --optimizer K`.
@@ -60,23 +78,24 @@
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::comm::binwire;
-use crate::comm::BranchId;
 use crate::comm::poll::CoreMetrics;
 use crate::comm::socket::{Conn, Framing, PsListener, SocketSpec};
 use crate::comm::wire::{
     decode_ps_reply, decode_ps_request, encode_ps_reply, encode_ps_request, PsReply, PsRequest,
-    WireCodec,
+    SessionHello, WireCodec,
 };
+use crate::comm::{BranchId, SessionId};
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
-use crate::stats::{merge_cluster, ClusterView, ServerDelta, Snapshot, TrialEvent};
+use crate::stats::{merge_cluster, ClusterView, ServerDelta, SessionStats, Snapshot, TrialEvent};
 
 use super::checkpoint::{self, SegmentMeta};
+use super::session::SessionLimits;
 use super::storage::{RowKey, TableId};
 use super::{ParamServer, ParamStore, route_shard, RowData};
 
@@ -112,11 +131,52 @@ impl fmt::Display for ShardRange {
     }
 }
 
-/// Cap on tuner trial-progress events a shard server retains for the
-/// observability stream.  The map is keyed `(episode, trial)` with
-/// latest-event-wins, so the cap only evicts when the tuner has moved
-/// on to newer trials — exactly the ones a dashboard no longer shows.
+/// Cap on tuner trial-progress events a shard server retains **per
+/// session** for the observability stream.  The map is keyed
+/// `(session, episode, trial)` with latest-event-wins, so the cap
+/// only evicts a session's own oldest trials — one tenant's churn
+/// can never evict another tenant's dashboard rows.
 const MAX_TRACKED_TRIALS: usize = 64;
+
+/// Multi-tenancy knobs for a shard server: session admission limits,
+/// the default lease, and the optional per-session data-plane share.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOpts {
+    /// Admission cap on concurrently registered named sessions.
+    pub max_sessions: usize,
+    /// Admission cap on live branches per session namespace.
+    pub max_branches_per_session: usize,
+    /// Lease granted to sessions that do not request one, ms.
+    pub default_lease_ms: u64,
+    /// `Some(share)` installs the per-session token bucket at `share`
+    /// rows/sec on the event loop; `None` (the default) leaves the
+    /// dispatch path untouched.
+    pub session_rows_per_sec: Option<u64>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        let limits = SessionLimits::default();
+        ServeOpts {
+            max_sessions: limits.max_sessions,
+            max_branches_per_session: limits.max_branches_per_session,
+            default_lease_ms: limits.default_lease_ms,
+            session_rows_per_sec: None,
+        }
+    }
+}
+
+/// One executed frame: the encoded reply plus everything the
+/// transport layer needs to know about it (shutdown/subscribe
+/// control effects, and the session + row cost feeding the fairness
+/// plane's post-paid token bucket).
+struct FrameOutcome {
+    reply: Vec<u8>,
+    shutdown: bool,
+    subscribe: Option<u64>,
+    session: Option<SessionId>,
+    cost_rows: u64,
+}
 
 /// One shard-server process: the concurrent engine behind a socket.
 pub struct ShardServer {
@@ -132,23 +192,50 @@ pub struct ShardServer {
     /// bytes; the codec split is only known after dispatch, here).
     frames_json: AtomicU64,
     frames_bin: AtomicU64,
-    /// Latest tuner trial-progress events, keyed `(episode, trial)`,
-    /// bounded at [`MAX_TRACKED_TRIALS`].  Replicated onto every
-    /// server by the coordinator's `PublishProgress` broadcast so any
-    /// single subscriber sees trial progress next to shard counters.
-    trials: Mutex<BTreeMap<(u32, u32), TrialEvent>>,
+    /// Latest tuner trial-progress events, keyed
+    /// `(session, episode, trial)`, bounded at [`MAX_TRACKED_TRIALS`]
+    /// per session.  Replicated onto every server by the
+    /// coordinator's `PublishProgress` broadcast so any single
+    /// subscriber sees trial progress next to shard counters.
+    trials: Mutex<BTreeMap<(SessionId, u32, u32), TrialEvent>>,
+    /// Cumulative per-session row traffic `(rows_applied, rows_read)`
+    /// — the counters behind [`SessionStats`].  Entries are never
+    /// removed, so a torn-down session's history stays monotonic
+    /// across stats frames.
+    session_traffic: Mutex<BTreeMap<SessionId, (u64, u64)>>,
+    /// Fairness plane handed to the event loop when a per-session
+    /// rows/sec share is configured.
+    #[cfg(unix)]
+    throttle: Option<crate::comm::poll::SessionThrottle>,
+    /// Monotonic lease-clock anchor; sessions age relative to it.
+    epoch: std::time::Instant,
     #[cfg(not(unix))]
     shutdown: std::sync::atomic::AtomicBool,
 }
 
 impl ShardServer {
     pub fn new(range: ShardRange, optimizer: OptimizerKind, framing: Framing) -> Self {
+        Self::with_opts(range, optimizer, framing, ServeOpts::default())
+    }
+
+    /// [`ShardServer::new`] with explicit multi-tenancy options.
+    pub fn with_opts(
+        range: ShardRange,
+        optimizer: OptimizerKind,
+        framing: Framing,
+        opts: ServeOpts,
+    ) -> Self {
         let ps = ParamServer::new(range.count(), Optimizer::new(optimizer));
         // The root branch exists on every server even before (or
         // without) any of its rows landing here: replicated fork ops
         // must find their parent on servers whose shard subset holds
         // zero rows of it.
         ps.ensure_branch(0);
+        ps.set_session_limits(SessionLimits {
+            max_sessions: opts.max_sessions,
+            max_branches_per_session: opts.max_branches_per_session,
+            default_lease_ms: opts.default_lease_ms,
+        });
         ShardServer {
             ps,
             range,
@@ -158,9 +245,19 @@ impl ShardServer {
             frames_json: AtomicU64::new(0),
             frames_bin: AtomicU64::new(0),
             trials: Mutex::new(BTreeMap::new()),
+            session_traffic: Mutex::new(BTreeMap::new()),
+            #[cfg(unix)]
+            throttle: opts.session_rows_per_sec.map(crate::comm::poll::SessionThrottle::new),
+            epoch: std::time::Instant::now(),
             #[cfg(not(unix))]
             shutdown: std::sync::atomic::AtomicBool::new(false),
         }
+    }
+
+    /// Milliseconds since this server started — the lease clock every
+    /// session-registry call is stamped with.
+    fn now_ms(&self) -> u64 {
+        u64::try_from(self.epoch.elapsed().as_millis()).unwrap_or(u64::MAX)
     }
 
     /// The engine (test/bench introspection).
@@ -191,6 +288,11 @@ impl ShardServer {
     /// a cumulative total — never a diff — which is what makes the
     /// client's monotonic merge (latest frame wins) correct.
     pub fn delta(&self) -> ServerDelta {
+        // Opportunistic lease GC: every stats probe/tick reclaims
+        // namespaces whose client stopped heartbeating (a no-op while
+        // no named sessions exist, so default-namespace runs see no
+        // behavioral change).
+        self.ps.sweep_expired_sessions(self.now_ms());
         let snap = self.ps.snapshot();
         let mut shards = self.ps.shard_rows();
         for s in &mut shards {
@@ -223,20 +325,74 @@ impl ShardServer {
             rpc_hist: self.metrics.rpc_hist.snapshot(),
             branches,
             trials,
+            sessions: self.session_census(),
             ..ServerDelta::default()
         }
     }
 
+    /// Per-session census for the stats stream: live branch counts
+    /// from the registry, cumulative row traffic from the dispatch
+    /// path, and throttle deferrals from the fairness plane.
+    fn session_census(&self) -> Vec<SessionStats> {
+        fn entry(map: &mut BTreeMap<SessionId, SessionStats>, s: SessionId) -> &mut SessionStats {
+            map.entry(s).or_insert_with(|| SessionStats {
+                session: s,
+                ..SessionStats::default()
+            })
+        }
+        let mut map = BTreeMap::new();
+        for (s, live) in self.ps.session_live_branches() {
+            entry(&mut map, s).live_branches = live;
+        }
+        {
+            let traffic = self.session_traffic.lock().unwrap_or_else(|e| e.into_inner());
+            for (&s, &(applied, read)) in traffic.iter() {
+                let e = entry(&mut map, s);
+                e.rows_applied = applied;
+                e.rows_read = read;
+            }
+        }
+        #[cfg(unix)]
+        if let Some(t) = &self.throttle {
+            for (s, deferrals) in t.deferrals() {
+                entry(&mut map, s).deferrals = deferrals;
+            }
+        }
+        map.into_values().collect()
+    }
+
     /// Retain one trial-progress event for the stats stream
-    /// (latest-wins per `(episode, trial)`, oldest key evicted at the
-    /// cap).
+    /// (latest-wins per `(session, episode, trial)`, the session's
+    /// oldest key evicted at the per-session cap).
     fn record_trial(&self, event: TrialEvent) {
         let mut trials = self.trials.lock().unwrap_or_else(|e| e.into_inner());
-        let key = (event.episode, event.trial);
-        if trials.len() >= MAX_TRACKED_TRIALS && !trials.contains_key(&key) {
-            trials.pop_first();
+        let key = (event.session, event.episode, event.trial);
+        if !trials.contains_key(&key) {
+            let s = event.session;
+            let in_session = trials.range((s, 0, 0)..=(s, u32::MAX, u32::MAX)).count();
+            if in_session >= MAX_TRACKED_TRIALS {
+                let oldest = trials
+                    .range((s, 0, 0)..=(s, u32::MAX, u32::MAX))
+                    .next()
+                    .map(|(k, _)| *k);
+                if let Some(k) = oldest {
+                    trials.remove(&k);
+                }
+            }
         }
         trials.insert(key, event);
+    }
+
+    /// Accumulate one request's row traffic onto its session's
+    /// cumulative counters (no-op for zero-cost control frames).
+    fn record_traffic(&self, session: SessionId, applied: u64, read: u64) {
+        if applied == 0 && read == 0 {
+            return;
+        }
+        let mut traffic = self.session_traffic.lock().unwrap_or_else(|e| e.into_inner());
+        let e = traffic.entry(session).or_insert((0, 0));
+        e.0 = e.0.saturating_add(applied);
+        e.1 = e.1.saturating_add(read);
     }
 
     /// Serve connections until a `Shutdown` request arrives: the
@@ -251,6 +407,7 @@ impl ShardServer {
             handler: self,
             metrics: &self.metrics,
             workers: crate::comm::poll::default_workers(),
+            throttle: self.throttle.as_ref(),
         }
         .run()
     }
@@ -301,7 +458,8 @@ impl ShardServer {
                     Ok(None) | Err(_) => return,
                 }
             };
-            let (reply, shutdown, subscribe) = self.execute_frame(&frame);
+            let outcome = self.execute_frame(&frame);
+            let (reply, shutdown, subscribe) = (outcome.reply, outcome.shutdown, outcome.subscribe);
             let sent = if self.framing == Framing::Line {
                 match String::from_utf8(reply) {
                     Ok(text) => conn.send(&text).is_ok(),
@@ -346,10 +504,11 @@ impl ShardServer {
     /// their first byte — and encode the reply in the same codec.
     /// Undecodable frames get an error reply, not a disconnect; a
     /// frame that is neither binary nor UTF-8 is answered in JSON.
-    /// The third element is the stats-subscription interval when the
+    /// `subscribe` carries the stats-subscription interval when the
     /// frame was a `SubscribeStats` (the transport layer owns the
-    /// push cadence, so the request only acknowledges here).
-    fn execute_frame(&self, body: &[u8]) -> (Vec<u8>, bool, Option<u64>) {
+    /// push cadence, so the request only acknowledges here);
+    /// `session` and `cost_rows` feed the fairness plane.
+    fn execute_frame(&self, body: &[u8]) -> FrameOutcome {
         let is_bin = binwire::is_binary_frame(body);
         if is_bin {
             self.frames_bin.fetch_add(1, Ordering::Relaxed);
@@ -364,14 +523,16 @@ impl ShardServer {
                 Err(_) => Err(anyhow!("frame is neither a binary opcode nor UTF-8 JSON")),
             }
         };
-        let (reply, shutdown, subscribe) = match decoded {
+        let (reply, shutdown, subscribe, session, cost_rows) = match decoded {
             Ok(req) => {
                 let shutdown = req == PsRequest::Shutdown;
                 let subscribe = match req {
                     PsRequest::SubscribeStats { interval_ms } => Some(interval_ms),
                     _ => None,
                 };
-                (self.handle(&req), shutdown, subscribe)
+                let session = req.session();
+                let cost_rows = req.cost_rows();
+                (self.handle(&req), shutdown, subscribe, session, cost_rows)
             }
             Err(e) => (
                 PsReply::Err {
@@ -379,6 +540,8 @@ impl ShardServer {
                 },
                 false,
                 None,
+                None,
+                0,
             ),
         };
         let encoded = if is_bin {
@@ -396,142 +559,235 @@ impl ShardServer {
         } else {
             encode_ps_reply(&reply).into_bytes()
         };
-        (encoded, shutdown, subscribe)
+        FrameOutcome {
+            reply: encoded,
+            shutdown,
+            subscribe,
+            session,
+            cost_rows,
+        }
     }
 
     /// Dispatch one request against the engine (transport-free, so
-    /// unit tests drive it directly).
+    /// unit tests drive it directly).  Session-stamped frames renew
+    /// the session's lease and feed the per-session traffic counters
+    /// before dispatch; a session-resolution failure (unknown id,
+    /// admission limit, foreign branch) becomes an `Err` reply, never
+    /// a disconnect.
     pub fn handle(&self, req: &PsRequest) -> PsReply {
-        fn done(r: Result<()>) -> PsReply {
-            match r {
-                Ok(()) => PsReply::Ok,
-                Err(e) => PsReply::Err {
-                    message: e.to_string(),
-                },
+        if let Some(s) = req.session() {
+            self.ps.touch_session(s, self.now_ms());
+            let cost = req.cost_rows();
+            match req {
+                PsRequest::ReadRow { .. } | PsRequest::ReadRows { .. } => {
+                    self.record_traffic(s, 0, cost)
+                }
+                _ => self.record_traffic(s, cost, 0),
             }
         }
-        match req {
-            PsRequest::Hello { codec } => PsReply::Hello {
-                shard_begin: self.range.begin,
-                shard_end: self.range.end,
-                optimizer: self.optimizer.name().to_string(),
-                // grant the binary codec only when this server itself
-                // runs binary framing; everyone else negotiates JSON
-                codec: if *codec == WireCodec::Binary && self.framing == Framing::Binary {
-                    WireCodec::Binary
-                } else {
-                    WireCodec::Json
-                },
+        match self.handle_inner(req) {
+            Ok(reply) => reply,
+            Err(e) => PsReply::Err {
+                message: e.to_string(),
             },
+        }
+    }
+
+    /// [`ShardServer::handle`] minus error packaging: `?` bails on
+    /// session/branch resolution so every arm reads straight-line.
+    fn handle_inner(&self, req: &PsRequest) -> Result<PsReply> {
+        match req {
+            PsRequest::Hello { codec, session } => {
+                let sid = match session {
+                    None => 0,
+                    Some(h) => {
+                        let (sid, _lease) =
+                            self.ps.register_session(&h.name, h.lease_ms, self.now_ms())?;
+                        sid
+                    }
+                };
+                Ok(PsReply::Hello {
+                    shard_begin: self.range.begin,
+                    shard_end: self.range.end,
+                    optimizer: self.optimizer.name().to_string(),
+                    // grant the binary codec only when this server
+                    // itself runs binary framing; everyone else
+                    // negotiates JSON
+                    codec: if *codec == WireCodec::Binary && self.framing == Framing::Binary {
+                        WireCodec::Binary
+                    } else {
+                        WireCodec::Json
+                    },
+                    session: sid,
+                })
+            }
             PsRequest::InsertRow {
+                session,
                 branch,
                 table,
                 key,
                 data,
             } => {
-                self.ps.insert_row(*branch, *table, *key, data.clone());
-                PsReply::Ok
+                let g = self.ps.resolve_branch(*session, *branch)?;
+                self.ps.insert_row(g, *table, *key, data.clone());
+                Ok(PsReply::Ok)
             }
             PsRequest::ReadRow {
+                session,
                 branch,
                 table,
                 key,
                 with_accum: false,
-            } => PsReply::Row {
-                data: self.ps.read_row(*branch, *table, *key),
-                accum: None,
-            },
+            } => {
+                let g = self.ps.resolve_branch(*session, *branch)?;
+                Ok(PsReply::Row {
+                    data: self.ps.read_row(g, *table, *key),
+                    accum: None,
+                })
+            }
             PsRequest::ReadRow {
+                session,
                 branch,
                 table,
                 key,
                 with_accum: true,
-            } => match self.ps.read_row_with_accum(*branch, *table, *key) {
-                None => PsReply::Row {
-                    data: None,
-                    accum: None,
-                },
-                Some((data, accum)) => PsReply::Row {
-                    data: Some(data),
-                    accum,
-                },
-            },
+            } => {
+                let g = self.ps.resolve_branch(*session, *branch)?;
+                Ok(match self.ps.read_row_with_accum(g, *table, *key) {
+                    None => PsReply::Row {
+                        data: None,
+                        accum: None,
+                    },
+                    Some((data, accum)) => PsReply::Row {
+                        data: Some(data),
+                        accum,
+                    },
+                })
+            }
             PsRequest::ReadRows {
+                session,
                 branch,
                 with_accum,
                 keys,
-            } => PsReply::RowsData {
-                rows: self.ps.read_rows(*branch, keys, *with_accum),
-            },
+            } => {
+                let g = self.ps.resolve_branch(*session, *branch)?;
+                Ok(PsReply::RowsData {
+                    rows: self.ps.read_rows(g, keys, *with_accum),
+                })
+            }
             PsRequest::ApplyUpdate {
+                session,
                 branch,
                 table,
                 key,
                 grad,
                 hyper,
                 z_old,
-            } => done(self.ps.apply_update(*branch, *table, *key, grad, *hyper, z_old.as_deref())),
+            } => {
+                let g = self.ps.resolve_branch(*session, *branch)?;
+                self.ps.apply_update(g, *table, *key, grad, *hyper, z_old.as_deref())?;
+                Ok(PsReply::Ok)
+            }
             PsRequest::ApplyBatch {
+                session,
                 branch,
                 hyper,
                 updates,
             } => {
+                let g = self.ps.resolve_branch(*session, *branch)?;
                 let refs: Vec<(TableId, RowKey, &[f32])> = updates
                     .iter()
                     .map(|(t, k, g)| (*t, *k, g.as_slice()))
                     .collect();
-                done(self.ps.apply_batch(*branch, &refs, *hyper))
+                self.ps.apply_batch(g, &refs, *hyper)?;
+                Ok(PsReply::Ok)
             }
-            PsRequest::ForkBranch { child, parent } => done(self.ps.fork_branch(*child, *parent)),
-            PsRequest::FreeBranch { branch } => done(self.ps.free_branch(*branch)),
-            PsRequest::CheckpointBranch { branch, dir } => {
+            PsRequest::ForkBranch {
+                session,
+                child,
+                parent,
+            } => {
+                self.ps.fork_branch_in(*session, *child, *parent)?;
+                Ok(PsReply::Ok)
+            }
+            PsRequest::FreeBranch { session, branch } => {
+                self.ps.free_branch_in(*session, *branch)?;
+                Ok(PsReply::Ok)
+            }
+            PsRequest::CheckpointBranch {
+                session,
+                branch,
+                dir,
+            } => {
+                let g = self.ps.resolve_branch(*session, *branch)?;
                 let range = self.range;
-                match checkpoint::checkpoint_range(
-                    &self.ps,
-                    *branch,
-                    range.begin,
-                    range.end,
-                    Path::new(dir),
-                ) {
-                    Ok(segments) => PsReply::Segments { segments },
-                    Err(e) => PsReply::Err {
-                        message: format!("checkpoint failed: {e:#}"),
+                Ok(
+                    match checkpoint::checkpoint_range(
+                        &self.ps,
+                        g,
+                        range.begin,
+                        range.end,
+                        Path::new(dir),
+                    ) {
+                        Ok(segments) => PsReply::Segments { segments },
+                        Err(e) => PsReply::Err {
+                            message: format!("checkpoint failed: {e:#}"),
+                        },
                     },
-                }
+                )
             }
-            PsRequest::VerifyBranch { branch, dir } => {
+            PsRequest::VerifyBranch {
+                session,
+                branch,
+                dir,
+            } => {
+                let g = self.ps.resolve_branch(*session, *branch)?;
                 let range = self.range;
-                match checkpoint::load_range(*branch, range.begin, range.end, Path::new(dir)) {
+                Ok(match checkpoint::load_range(g, range.begin, range.end, Path::new(dir)) {
                     Ok(rows) => PsReply::Verified {
                         rows: rows.len() as u64,
                     },
                     Err(e) => PsReply::Err {
                         message: format!("verify failed: {e:#}"),
                     },
-                }
+                })
             }
-            PsRequest::RestoreBranch { branch, dir } => {
+            PsRequest::RestoreBranch {
+                session,
+                branch,
+                dir,
+            } => {
+                let g = self.ps.resolve_or_create_branch(*session, *branch)?;
                 let range = self.range;
-                match checkpoint::restore_range(
-                    &self.ps,
-                    *branch,
-                    range.begin,
-                    range.end,
-                    Path::new(dir),
-                ) {
-                    Ok(rows) => PsReply::Restored { rows: rows as u64 },
-                    Err(e) => PsReply::Err {
-                        message: format!("restore failed: {e:#}"),
+                Ok(
+                    match checkpoint::restore_range(
+                        &self.ps,
+                        g,
+                        range.begin,
+                        range.end,
+                        Path::new(dir),
+                    ) {
+                        Ok(rows) => PsReply::Restored { rows: rows as u64 },
+                        Err(e) => PsReply::Err {
+                            message: format!("restore failed: {e:#}"),
+                        },
                     },
-                }
+                )
             }
-            PsRequest::ServerStats => PsReply::Stats(self.delta()),
-            PsRequest::SubscribeStats { .. } => PsReply::Ok,
+            PsRequest::ServerStats => Ok(PsReply::Stats(self.delta())),
+            PsRequest::SubscribeStats { .. } => Ok(PsReply::Ok),
             PsRequest::PublishProgress { event } => {
                 self.record_trial(*event);
-                PsReply::Ok
+                Ok(PsReply::Ok)
             }
-            PsRequest::Shutdown => PsReply::Ok,
+            PsRequest::ListBranches { session } => Ok(PsReply::BranchList {
+                branches: self.ps.session_branches(*session)?,
+            }),
+            PsRequest::EndSession { session } => {
+                self.ps.end_session(*session)?;
+                Ok(PsReply::Ok)
+            }
+            PsRequest::Shutdown => Ok(PsReply::Ok),
         }
     }
 }
@@ -542,11 +798,13 @@ impl ShardServer {
 #[cfg(unix)]
 impl crate::comm::poll::FrameHandler for ShardServer {
     fn on_frame(&self, body: Vec<u8>) -> crate::comm::poll::FrameResult {
-        let (reply, shutdown, subscribe) = self.execute_frame(&body);
+        let outcome = self.execute_frame(&body);
         crate::comm::poll::FrameResult {
-            reply,
-            shutdown,
-            subscribe,
+            reply: outcome.reply,
+            shutdown: outcome.shutdown,
+            subscribe: outcome.subscribe,
+            session: outcome.session,
+            cost_rows: outcome.cost_rows,
         }
     }
 
@@ -619,6 +877,12 @@ struct RemoteServer {
     spec: SocketSpec,
     range: ShardRange,
     pool: ConnPool,
+    /// Session id this server granted at `Hello` (0 = the default
+    /// namespace).  Ids are **per-server** — two servers may grant
+    /// the same name different ids — so every request is stamped with
+    /// its own server's grant.  Zeroed by an explicit `end_session`
+    /// so the drop-time best-effort teardown does not double-end.
+    session: AtomicU32,
 }
 
 /// Socket-backed [`ParamStore`]: same `&self` interface as the local
@@ -667,6 +931,20 @@ impl RemoteParamServer {
     /// client additionally requires every server to grant the binary
     /// codec — a mixed-framing cluster is rejected here, not later.
     pub fn connect(specs: &[SocketSpec], framing: Framing) -> Result<RemoteParamServer> {
+        Self::connect_session(specs, framing, None)
+    }
+
+    /// [`RemoteParamServer::connect`] attaching to a named session on
+    /// every server: the `Hello` carries a [`SessionHello`] and all
+    /// subsequent traffic is stamped with each server's granted id,
+    /// scoping this client's branches to its own namespace.  `None`
+    /// is the default session-0 namespace — byte-identical to the
+    /// legacy handshake.
+    pub fn connect_session(
+        specs: &[SocketSpec],
+        framing: Framing,
+        session_name: Option<&str>,
+    ) -> Result<RemoteParamServer> {
         if specs.is_empty() {
             bail!("no shard servers given");
         }
@@ -680,13 +958,26 @@ impl RemoteParamServer {
         for spec in specs {
             let mut conn = spec.connect(framing)?;
             // the handshake always rides as JSON, whatever the codec
-            conn.send(&encode_ps_request(&PsRequest::Hello { codec: wanted }))?;
+            let hello = PsRequest::Hello {
+                codec: wanted,
+                session: session_name.map(|name| SessionHello {
+                    name: name.to_string(),
+                    lease_ms: 0, // the server default
+                }),
+            };
+            conn.send(&encode_ps_request(&hello))?;
             let reply = decode_ps_reply(&conn.recv_expect()?)?;
+            if let PsReply::Err { message } = &reply {
+                // admission refusals (session table full, name clash
+                // semantics) surface here, before any data flows
+                bail!("{spec}: handshake rejected: {message}");
+            }
             let PsReply::Hello {
                 shard_begin,
                 shard_end,
                 optimizer: opt_name,
                 codec: granted,
+                session,
             } = reply
             else {
                 bail!("{spec}: unexpected handshake reply");
@@ -711,6 +1002,9 @@ impl RemoteParamServer {
                 }
                 Some(_) => {}
             }
+            if session_name.is_some() && session == 0 {
+                bail!("{spec}: server ignored the session attach (pre-session peer)");
+            }
             servers.push(RemoteServer {
                 spec: spec.clone(),
                 range: ShardRange {
@@ -718,6 +1012,7 @@ impl RemoteParamServer {
                     end: shard_end,
                 },
                 pool: ConnPool::new(spec.clone(), framing, conn),
+                session: AtomicU32::new(session),
             });
         }
         // the ranges must partition 0..N
@@ -777,6 +1072,14 @@ impl RemoteParamServer {
     #[inline]
     fn server_for(&self, table: TableId, key: RowKey) -> usize {
         self.shard_to_server[route_shard(table, key, self.num_shards)]
+    }
+
+    /// The session id server `si` granted this client (0 = default
+    /// namespace).  Session ids are per-server, so a request is
+    /// always built *after* routing decides which server it goes to.
+    #[inline]
+    fn session_of(&self, si: usize) -> SessionId {
+        self.servers[si].session.load(Ordering::Relaxed)
     }
 
     /// One RPC against server `si`.  Each in-flight RPC leases its own
@@ -851,6 +1154,7 @@ impl RemoteParamServer {
         match self.request(
             si,
             &PsRequest::ReadRow {
+                session: self.session_of(si),
                 branch,
                 table,
                 key,
@@ -875,13 +1179,32 @@ impl RemoteParamServer {
             .collect()
     }
 
-    /// Broadcast one request to every shard server concurrently (one
-    /// scoped thread per server, each leasing its own pooled
-    /// connection) and collect the replies in server order.
-    fn broadcast(&self, req: &PsRequest) -> Vec<Result<PsReply>> {
+    /// Server `si`'s branches in this client's session namespace,
+    /// with that server's local row counts.
+    fn list_branches(&self, si: usize) -> Result<Vec<(BranchId, usize)>> {
+        let req = PsRequest::ListBranches {
+            session: self.session_of(si),
+        };
+        match self.request(si, &req)? {
+            PsReply::BranchList { branches } => Ok(branches),
+            PsReply::Err { message } => bail!("{}: {message}", self.servers[si].spec),
+            other => bail!("{}: unexpected reply {other:?}", self.servers[si].spec),
+        }
+    }
+
+    /// Broadcast to every shard server concurrently (one scoped
+    /// thread per server, each leasing its own pooled connection) and
+    /// collect the replies in server order.  The request is built
+    /// per-server by `make(si)` because session ids differ across
+    /// servers — one shared frame cannot be stamped correctly.
+    fn broadcast_with<F>(&self, make: F) -> Vec<Result<PsReply>>
+    where
+        F: Fn(usize) -> PsRequest + Sync,
+    {
         std::thread::scope(|scope| {
+            let make = &make;
             let handles: Vec<_> = (0..self.servers.len())
-                .map(|si| scope.spawn(move || self.request(si, req)))
+                .map(|si| scope.spawn(move || self.request(si, &make(si))))
                 .collect();
             handles
                 .into_iter()
@@ -899,6 +1222,37 @@ impl RemoteParamServer {
             self.request_ok(si, &PsRequest::Shutdown)?;
         }
         Ok(())
+    }
+
+    /// Gracefully end this client's named session on every server:
+    /// frees exactly the namespace's branches and drops the
+    /// registration (the graceful counterpart of lease-expiry GC).
+    /// No-op for default-namespace clients.
+    pub fn end_session(&self) -> Result<()> {
+        for si in 0..self.servers.len() {
+            let session = self.session_of(si);
+            if session == 0 {
+                continue;
+            }
+            self.request_ok(si, &PsRequest::EndSession { session })?;
+            self.servers[si].session.store(0, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+}
+
+/// Best-effort teardown for named sessions: a client going away ends
+/// its session (errors ignored — the server's lease-expiry GC is the
+/// backstop for crashed clients).  A complete no-op for
+/// default-namespace clients, so legacy drops stay free of traffic.
+impl Drop for RemoteParamServer {
+    fn drop(&mut self) {
+        for si in 0..self.servers.len() {
+            let session = self.session_of(si);
+            if session != 0 {
+                let _ = self.request_ok(si, &PsRequest::EndSession { session });
+            }
+        }
     }
 }
 
@@ -918,6 +1272,7 @@ impl ParamStore for RemoteParamServer {
         self.request_ok(
             si,
             &PsRequest::InsertRow {
+                session: self.session_of(si),
                 branch,
                 table,
                 key,
@@ -933,14 +1288,27 @@ impl ParamStore for RemoteParamServer {
     /// partial-application semantics for batches).
     fn fork_branch(&self, child: BranchId, parent: BranchId) -> Result<()> {
         for si in 0..self.servers.len() {
-            self.request_ok(si, &PsRequest::ForkBranch { child, parent })?;
+            self.request_ok(
+                si,
+                &PsRequest::ForkBranch {
+                    session: self.session_of(si),
+                    child,
+                    parent,
+                },
+            )?;
         }
         Ok(())
     }
 
     fn free_branch(&self, branch: BranchId) -> Result<()> {
         for si in 0..self.servers.len() {
-            self.request_ok(si, &PsRequest::FreeBranch { branch })?;
+            self.request_ok(
+                si,
+                &PsRequest::FreeBranch {
+                    session: self.session_of(si),
+                    branch,
+                },
+            )?;
         }
         Ok(())
     }
@@ -953,9 +1321,13 @@ impl ParamStore for RemoteParamServer {
     /// itself writes no row data.
     fn checkpoint_branch(&self, branch: BranchId, dir: &Path) -> Result<Vec<SegmentMeta>> {
         let dir = utf8_dir(dir)?;
-        let req = PsRequest::CheckpointBranch { branch, dir };
+        let replies = self.broadcast_with(|si| PsRequest::CheckpointBranch {
+            session: self.session_of(si),
+            branch,
+            dir: dir.clone(),
+        });
         let mut out = Vec::new();
-        for (si, reply) in self.broadcast(&req).into_iter().enumerate() {
+        for (si, reply) in replies.into_iter().enumerate() {
             match reply? {
                 PsReply::Segments { segments } => out.extend(segments),
                 PsReply::Err { message } => bail!("{}: {message}", self.servers[si].spec),
@@ -978,20 +1350,25 @@ impl ParamStore for RemoteParamServer {
     /// the session rather than serving mixed state.)
     fn restore_branch(&self, branch: BranchId, dir: &Path) -> Result<usize> {
         let dir = utf8_dir(dir)?;
-        let verify = PsRequest::VerifyBranch {
+        let verified = self.broadcast_with(|si| PsRequest::VerifyBranch {
+            session: self.session_of(si),
             branch,
             dir: dir.clone(),
-        };
-        for (si, reply) in self.broadcast(&verify).into_iter().enumerate() {
+        });
+        for (si, reply) in verified.into_iter().enumerate() {
             match reply? {
                 PsReply::Verified { .. } => {}
                 PsReply::Err { message } => bail!("{}: {message}", self.servers[si].spec),
                 other => bail!("{}: unexpected reply {other:?}", self.servers[si].spec),
             }
         }
-        let install = PsRequest::RestoreBranch { branch, dir };
+        let installed = self.broadcast_with(|si| PsRequest::RestoreBranch {
+            session: self.session_of(si),
+            branch,
+            dir: dir.clone(),
+        });
         let mut total = 0usize;
-        for (si, reply) in self.broadcast(&install).into_iter().enumerate() {
+        for (si, reply) in installed.into_iter().enumerate() {
             match reply? {
                 PsReply::Restored { rows } => total += rows as usize,
                 PsReply::Err { message } => bail!("{}: {message}", self.servers[si].spec),
@@ -1044,6 +1421,7 @@ impl ParamStore for RemoteParamServer {
             match self.request(
                 si,
                 &PsRequest::ReadRows {
+                    session: self.session_of(si),
                     branch,
                     with_accum,
                     keys: group_keys,
@@ -1082,6 +1460,7 @@ impl ParamStore for RemoteParamServer {
         self.request_ok(
             si,
             &PsRequest::ApplyUpdate {
+                session: self.session_of(si),
                 branch,
                 table,
                 key,
@@ -1118,6 +1497,7 @@ impl ParamStore for RemoteParamServer {
             self.request_ok(
                 si,
                 &PsRequest::ApplyBatch {
+                    session: self.session_of(si),
                     branch,
                     hyper,
                     updates: group,
@@ -1127,11 +1507,15 @@ impl ParamStore for RemoteParamServer {
         Ok(())
     }
 
+    /// Session-scoped branch census via `ListBranches` — **not** the
+    /// global stats census, which would leak co-tenant branches into
+    /// this client's view (and, through `with_store`'s stale-branch
+    /// cleanup, let one attaching session free another's branches).
     fn branch_row_count(&self, branch: BranchId) -> Result<usize> {
         let mut total = 0;
-        for stats in self.probe_stats()? {
-            total += stats
-                .branches
+        for si in 0..self.servers.len() {
+            total += self
+                .list_branches(si)?
                 .iter()
                 .find(|(b, _)| *b == branch)
                 .map_or(0, |(_, rows)| *rows);
@@ -1139,12 +1523,15 @@ impl ParamStore for RemoteParamServer {
         Ok(total)
     }
 
+    /// Branch ids live in **this client's session namespace**, in
+    /// this session's (user-visible) numbering.  See
+    /// [`RemoteParamServer::branch_row_count`] for why this is not
+    /// the global census.
     fn live_branches(&self) -> Result<Vec<BranchId>> {
-        let mut all: Vec<BranchId> = self
-            .probe_stats()?
-            .into_iter()
-            .flat_map(|s| s.branches.into_iter().map(|(b, _)| b))
-            .collect();
+        let mut all = Vec::new();
+        for si in 0..self.servers.len() {
+            all.extend(self.list_branches(si)?.into_iter().map(|(b, _)| b));
+        }
         all.sort_unstable();
         all.dedup();
         Ok(all)
@@ -1167,8 +1554,15 @@ impl ParamStore for RemoteParamServer {
     /// server, so any single `mltuner top` subscriber sees trial
     /// progress next to that server's counters.
     fn publish_progress(&self, event: TrialEvent) -> Result<()> {
-        let req = PsRequest::PublishProgress { event };
-        for (si, reply) in self.broadcast(&req).into_iter().enumerate() {
+        // stamp the event with each server's own session grant: the
+        // event's session field doubles as the frame's session stamp,
+        // and a client cannot publish into another tenant's rows
+        let replies = self.broadcast_with(|si| {
+            let mut e = event;
+            e.session = self.session_of(si);
+            PsRequest::PublishProgress { event: e }
+        });
+        for (si, reply) in replies.into_iter().enumerate() {
             match reply? {
                 PsReply::Ok => {}
                 PsReply::Err { message } => bail!("{}: {message}", self.servers[si].spec),
@@ -1249,9 +1643,20 @@ pub fn spawn_local_server(
     optimizer: OptimizerKind,
     framing: Framing,
 ) -> Result<LocalServerHandle> {
+    spawn_local_server_with(range, optimizer, framing, ServeOpts::default())
+}
+
+/// [`spawn_local_server`] with explicit multi-tenancy options.
+#[doc(hidden)]
+pub fn spawn_local_server_with(
+    range: ShardRange,
+    optimizer: OptimizerKind,
+    framing: Framing,
+    opts: ServeOpts,
+) -> Result<LocalServerHandle> {
     let listener = PsListener::bind(&SocketSpec::Tcp("127.0.0.1:0".into()))?;
     let spec = listener.local_spec()?;
-    let server = Arc::new(ShardServer::new(range, optimizer, framing));
+    let server = Arc::new(ShardServer::with_opts(range, optimizer, framing, opts));
     let srv = Arc::clone(&server);
     let handle = std::thread::spawn(move || srv.serve(listener));
     Ok((spec, handle, server))
@@ -1514,6 +1919,7 @@ mod tests {
         let mut full = Vec::new();
         binwire::encode_request(
             &PsRequest::ReadRow {
+                session: 0,
                 branch: 0,
                 table: 0,
                 key: 1,
@@ -1558,6 +1964,7 @@ mod tests {
         for conn in &mut conns {
             let hello = PsRequest::Hello {
                 codec: WireCodec::Binary,
+                session: None,
             };
             let mut buf = Vec::new();
             binwire::encode_request(&hello, &mut buf).unwrap();
@@ -1885,5 +2292,86 @@ mod tests {
         let view = collector.view();
         assert_eq!(view.snapshot.server.rows_applied, 2 * 109);
         assert_eq!(view.shards.len(), 2);
+    }
+
+    /// Satellite regression: the latest-per-`(episode, trial)` map is
+    /// bounded **per session** — one tenant publishing hundreds of
+    /// trials evicts only its own oldest entries, never a
+    /// co-tenant's (the cap used to be global).
+    #[test]
+    fn trial_map_is_bounded_per_session() {
+        let server = ShardServer::new(range(0, 1), OptimizerKind::Sgd, Framing::Line);
+        let event = |session: SessionId, trial: u32| TrialEvent {
+            session,
+            trial,
+            ..TrialEvent::default()
+        };
+        for trial in 0..3 {
+            server.record_trial(event(7, trial));
+        }
+        let noisy = MAX_TRACKED_TRIALS as u32 + 10;
+        for trial in 0..noisy {
+            server.record_trial(event(1, trial));
+        }
+        let trials = server.delta().trials;
+        let count_of = |s: SessionId| trials.iter().filter(|t| t.session == s).count();
+        assert_eq!(count_of(1), MAX_TRACKED_TRIALS, "noisy session capped");
+        assert_eq!(count_of(7), 3, "quiet session untouched by the noisy one");
+        // latest-wins inside the cap: newest survive, oldest evicted
+        assert!(trials.iter().any(|t| t.session == 1 && t.trial == noisy - 1));
+        assert!(!trials.iter().any(|t| t.session == 1 && t.trial == 0));
+    }
+
+    /// Two named sessions on one cluster get fully disjoint branch
+    /// namespaces — same user-visible branch ids, different rows —
+    /// and one session's stale-branch cleanup or teardown cannot
+    /// touch the other's branches (the `with_store` regression).
+    #[test]
+    fn sessions_scope_branch_namespaces_end_to_end() {
+        let (spec_a, h_a, _) =
+            spawn_local_server(range(0, 2), OptimizerKind::Sgd, Framing::Line).unwrap();
+        let (spec_b, h_b, _) =
+            spawn_local_server(range(2, 4), OptimizerKind::Sgd, Framing::Line).unwrap();
+        let specs = [spec_a, spec_b];
+        let alice =
+            RemoteParamServer::connect_session(&specs, Framing::Line, Some("alice")).unwrap();
+        let bob = RemoteParamServer::connect_session(&specs, Framing::Line, Some("bob")).unwrap();
+
+        // same user branch ids, disjoint state (even user branch 0:
+        // each namespace is born with its own root)
+        for k in 0..8u64 {
+            alice.insert_row(0, 0, k, vec![1.0]).unwrap();
+            bob.insert_row(0, 0, k, vec![2.0]).unwrap();
+        }
+        alice.fork_branch(1, 0).unwrap();
+        bob.fork_branch(1, 0).unwrap();
+        assert_eq!(alice.read_row(1, 0, 3).unwrap().unwrap(), vec![1.0]);
+        assert_eq!(bob.read_row(1, 0, 3).unwrap().unwrap(), vec![2.0]);
+
+        // each branch census is scoped to its own namespace
+        assert_eq!(alice.live_branches().unwrap(), vec![0, 1]);
+        assert_eq!(bob.live_branches().unwrap(), vec![0, 1]);
+        assert_eq!(alice.branch_row_count(1).unwrap(), 8);
+
+        // the attach-time stale-branch sweep (`free every live branch
+        // != 0`) now frees bob's leftovers only — alice's branch 1
+        // survives bob's cleanup
+        for b in bob.live_branches().unwrap() {
+            if b != 0 {
+                bob.free_branch(b).unwrap();
+            }
+        }
+        assert_eq!(bob.live_branches().unwrap(), vec![0]);
+        assert_eq!(alice.read_row(1, 0, 3).unwrap().unwrap(), vec![1.0]);
+
+        // graceful teardown frees exactly alice's namespace
+        alice.end_session().unwrap();
+        assert_eq!(bob.read_row(0, 0, 3).unwrap().unwrap(), vec![2.0]);
+
+        bob.shutdown_all().unwrap();
+        drop(alice);
+        drop(bob);
+        h_a.join().unwrap().unwrap();
+        h_b.join().unwrap().unwrap();
     }
 }

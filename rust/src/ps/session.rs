@@ -1,0 +1,420 @@
+//! Session namespaces for the multi-tenant parameter server.
+//!
+//! A **session** is one `mltuner tune` run's private branch namespace
+//! on a shared, long-lived server.  The registry maps each session's
+//! user-visible branch ids to **global** branch ids drawn from
+//! [`SESSION_BRANCH_BASE`] upward, far above anything a client names
+//! directly, so two tenants forking "branch 3" land on different
+//! global branches and the engine below stays completely
+//! session-oblivious.  Session 0 is the default namespace: it has no
+//! registry entry, no lease, and identity branch mapping — a lone
+//! pre-session client is a session-0 client and behaves bit-exactly
+//! as before.
+//!
+//! The registry is plain data with **no interior locking and no
+//! clock**: it lives inside [`super::ParamServer`]'s control-plane
+//! mutex (lock hierarchy unchanged), and every time-dependent method
+//! takes `now_ms` from the caller, so lease expiry is deterministic
+//! under test.
+//!
+//! Lifecycle: `register` admits or re-attaches by name (bounded by
+//! [`SessionLimits::max_sessions`]); any stamped frame refreshes the
+//! lease via `touch`; `remove_session` is the graceful teardown; and
+//! `expired` names the sessions whose lease lapsed so the server can
+//! garbage-collect a crashed client's branches.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::comm::{BranchId, SessionId};
+
+/// First global branch id handed to a named session.  User-visible
+/// branch ids are small (the tuner counts up from 0), so everything at
+/// or above this base belongs to some session namespace — which is
+/// also how the default namespace's census filters co-tenant branches
+/// out of `ListBranches { session: 0 }`.
+pub const SESSION_BRANCH_BASE: BranchId = 0x8000_0000;
+
+/// Lease granted when a `Hello` asks for `lease_ms: 0`.
+pub const DEFAULT_LEASE_MS: u64 = 30_000;
+
+/// Admission limits enforced at registration and branch allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionLimits {
+    /// Live named sessions allowed at once (`--max-sessions`).
+    pub max_sessions: usize,
+    /// Branches one session may hold at once
+    /// (`--max-branches-per-session`).
+    pub max_branches_per_session: usize,
+    /// Lease used when the client asks for the server default.
+    pub default_lease_ms: u64,
+}
+
+impl Default for SessionLimits {
+    fn default() -> Self {
+        SessionLimits {
+            max_sessions: 64,
+            max_branches_per_session: 64,
+            default_lease_ms: DEFAULT_LEASE_MS,
+        }
+    }
+}
+
+/// What a successful `register` granted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionGrant {
+    pub id: SessionId,
+    /// Effective lease (the requested one, or the server default).
+    pub lease_ms: u64,
+    /// False when the name was already registered (re-attach).
+    pub created: bool,
+    /// Global id of the session's root branch (user branch 0), mapped
+    /// eagerly so a fresh namespace is born with its root.
+    pub root_global: BranchId,
+}
+
+#[derive(Debug)]
+struct SessionEntry {
+    name: String,
+    lease_ms: u64,
+    last_seen_ms: u64,
+    /// user branch id → global branch id.
+    branches: HashMap<BranchId, BranchId>,
+}
+
+/// Name → id → branch-namespace bookkeeping for named sessions.
+#[derive(Debug)]
+pub struct SessionRegistry {
+    limits: SessionLimits,
+    by_name: HashMap<String, SessionId>,
+    entries: HashMap<SessionId, SessionEntry>,
+    /// Next session id; ids start at 1 (0 is the default namespace).
+    next_id: SessionId,
+    /// Next global branch id, counting up from the base.
+    next_global: BranchId,
+}
+
+impl Default for SessionRegistry {
+    fn default() -> Self {
+        SessionRegistry {
+            limits: SessionLimits::default(),
+            by_name: HashMap::new(),
+            entries: HashMap::new(),
+            next_id: 1,
+            next_global: SESSION_BRANCH_BASE,
+        }
+    }
+}
+
+impl SessionRegistry {
+    pub fn set_limits(&mut self, limits: SessionLimits) {
+        self.limits = limits;
+    }
+
+    pub fn limits(&self) -> SessionLimits {
+        self.limits
+    }
+
+    /// Live named sessions.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn name_of(&self, session: SessionId) -> Option<&str> {
+        self.entries.get(&session).map(|e| e.name.as_str())
+    }
+
+    fn alloc_global(&mut self) -> BranchId {
+        let g = self.next_global;
+        self.next_global = self.next_global.wrapping_add(1);
+        if self.next_global < SESSION_BRANCH_BASE {
+            // 2^31 allocations later: stay above the base rather than
+            // wrap into user-visible ids (collision with a still-live
+            // ancient global id is accepted at that scale).
+            self.next_global = SESSION_BRANCH_BASE;
+        }
+        g
+    }
+
+    /// Admit a new session named `name`, or re-attach to the live one
+    /// of that name (refreshing its lease).  `lease_ms: 0` asks for
+    /// the server default.
+    pub fn register(&mut self, name: &str, lease_ms: u64, now_ms: u64) -> Result<SessionGrant> {
+        if name.is_empty() {
+            bail!("session name must not be empty");
+        }
+        if let Some(&id) = self.by_name.get(name) {
+            if let Some(e) = self.entries.get_mut(&id) {
+                e.last_seen_ms = now_ms;
+                if lease_ms != 0 {
+                    e.lease_ms = lease_ms;
+                }
+                let root_global = e.branches.get(&0).copied().unwrap_or(SESSION_BRANCH_BASE);
+                return Ok(SessionGrant {
+                    id,
+                    lease_ms: e.lease_ms,
+                    created: false,
+                    root_global,
+                });
+            }
+        }
+        if self.entries.len() >= self.limits.max_sessions {
+            bail!(
+                "session admission denied: {} sessions live (max {})",
+                self.entries.len(),
+                self.limits.max_sessions
+            );
+        }
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1).max(1);
+        let lease = if lease_ms == 0 {
+            self.limits.default_lease_ms
+        } else {
+            lease_ms
+        };
+        let root_global = self.alloc_global();
+        let mut branches = HashMap::new();
+        branches.insert(0, root_global);
+        self.entries.insert(
+            id,
+            SessionEntry {
+                name: name.to_string(),
+                lease_ms: lease,
+                last_seen_ms: now_ms,
+                branches,
+            },
+        );
+        self.by_name.insert(name.to_string(), id);
+        Ok(SessionGrant {
+            id,
+            lease_ms: lease,
+            created: true,
+            root_global,
+        })
+    }
+
+    /// Refresh a session's lease; unknown ids are ignored (the frame
+    /// that carried them will fail at `resolve` instead).
+    pub fn touch(&mut self, session: SessionId, now_ms: u64) {
+        if let Some(e) = self.entries.get_mut(&session) {
+            e.last_seen_ms = now_ms;
+        }
+    }
+
+    /// Map a session-scoped branch id to its global id.
+    pub fn resolve(&self, session: SessionId, branch: BranchId) -> Result<BranchId> {
+        let e = self
+            .entries
+            .get(&session)
+            .ok_or_else(|| anyhow!("unknown session {session}"))?;
+        e.branches
+            .get(&branch)
+            .copied()
+            .ok_or_else(|| anyhow!("branch {branch} not in session {session}"))
+    }
+
+    /// Allocate a fresh global id for `branch` in `session`
+    /// (admission-checked; the branch must not exist yet).
+    pub fn allocate_branch(&mut self, session: SessionId, branch: BranchId) -> Result<BranchId> {
+        {
+            let e = self
+                .entries
+                .get(&session)
+                .ok_or_else(|| anyhow!("unknown session {session}"))?;
+            if e.branches.contains_key(&branch) {
+                bail!("branch {branch} already exists in session {session}");
+            }
+            if e.branches.len() >= self.limits.max_branches_per_session {
+                bail!(
+                    "branch admission denied: session {session} holds {} branches (max {})",
+                    e.branches.len(),
+                    self.limits.max_branches_per_session
+                );
+            }
+        }
+        let g = self.alloc_global();
+        if let Some(e) = self.entries.get_mut(&session) {
+            e.branches.insert(branch, g);
+        }
+        Ok(g)
+    }
+
+    /// Resolve `branch`, allocating a mapping if the session does not
+    /// hold it yet (restore-into-fresh-branch path).
+    pub fn resolve_or_allocate(&mut self, session: SessionId, branch: BranchId) -> Result<BranchId> {
+        match self.entries.get(&session) {
+            None => bail!("unknown session {session}"),
+            Some(e) => {
+                if let Some(&g) = e.branches.get(&branch) {
+                    return Ok(g);
+                }
+            }
+        }
+        self.allocate_branch(session, branch)
+    }
+
+    /// Drop one branch mapping (after the global branch was freed).
+    pub fn remove_branch(&mut self, session: SessionId, branch: BranchId) {
+        if let Some(e) = self.entries.get_mut(&session) {
+            e.branches.remove(&branch);
+        }
+    }
+
+    /// Tear a session down, returning the sorted global branch ids its
+    /// namespace held (for the caller to free under the same lock).
+    pub fn remove_session(&mut self, session: SessionId) -> Result<Vec<BranchId>> {
+        let Some(e) = self.entries.remove(&session) else {
+            bail!("unknown session {session}");
+        };
+        self.by_name.remove(&e.name);
+        let mut globals: Vec<BranchId> = e.branches.into_values().collect();
+        globals.sort_unstable();
+        Ok(globals)
+    }
+
+    /// Sessions whose lease lapsed as of `now_ms`, ascending id order.
+    pub fn expired(&self, now_ms: u64) -> Vec<SessionId> {
+        let mut v: Vec<SessionId> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| now_ms.saturating_sub(e.last_seen_ms) > e.lease_ms)
+            .map(|(id, _)| *id)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// `(session, live branches)` for every named session, ascending.
+    pub fn census(&self) -> Vec<(SessionId, usize)> {
+        let mut v: Vec<(SessionId, usize)> = self
+            .entries
+            .iter()
+            .map(|(id, e)| (*id, e.branches.len()))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// `(user branch id, global branch id)` pairs of one session,
+    /// ascending by user id.
+    pub fn branches(&self, session: SessionId) -> Result<Vec<(BranchId, BranchId)>> {
+        let e = self
+            .entries
+            .get(&session)
+            .ok_or_else(|| anyhow!("unknown session {session}"))?;
+        let mut v: Vec<(BranchId, BranchId)> =
+            e.branches.iter().map(|(u, g)| (*u, *g)).collect();
+        v.sort_unstable();
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_attach_and_lease_refresh() {
+        let mut r = SessionRegistry::default();
+        let a = r.register("mf-a", 0, 100).unwrap();
+        assert!(a.created);
+        assert_eq!(a.id, 1);
+        assert_eq!(a.lease_ms, DEFAULT_LEASE_MS);
+        assert!(a.root_global >= SESSION_BRANCH_BASE);
+        // same name re-attaches with the same id and refreshed lease
+        let b = r.register("mf-a", 5_000, 200).unwrap();
+        assert!(!b.created);
+        assert_eq!(b.id, a.id);
+        assert_eq!(b.lease_ms, 5_000);
+        assert_eq!(b.root_global, a.root_global);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.name_of(a.id), Some("mf-a"));
+        // a different name is a different namespace with its own root
+        let c = r.register("mf-b", 0, 200).unwrap();
+        assert_ne!(c.id, a.id);
+        assert_ne!(c.root_global, a.root_global);
+        assert!(r.register("", 0, 0).is_err());
+    }
+
+    #[test]
+    fn admission_limits_sessions_and_branches() {
+        let mut r = SessionRegistry::default();
+        r.set_limits(SessionLimits {
+            max_sessions: 2,
+            max_branches_per_session: 3,
+            default_lease_ms: 1_000,
+        });
+        let a = r.register("a", 0, 0).unwrap();
+        r.register("b", 0, 0).unwrap();
+        let err = r.register("c", 0, 0).unwrap_err().to_string();
+        assert!(err.contains("admission"), "{err}");
+        // re-attach is not a new admission
+        assert!(r.register("a", 0, 1).is_ok());
+        // root counts against the branch budget: 2 more fit, not 3
+        r.allocate_branch(a.id, 1).unwrap();
+        r.allocate_branch(a.id, 2).unwrap();
+        let err = r.allocate_branch(a.id, 3).unwrap_err().to_string();
+        assert!(err.contains("admission"), "{err}");
+        // freeing a branch frees its admission slot
+        r.remove_branch(a.id, 1);
+        assert!(r.allocate_branch(a.id, 3).is_ok());
+        // duplicate allocation is an error, not a silent remap
+        assert!(r.allocate_branch(a.id, 2).is_err());
+    }
+
+    #[test]
+    fn namespaces_do_not_collide() {
+        let mut r = SessionRegistry::default();
+        let a = r.register("a", 0, 0).unwrap();
+        let b = r.register("b", 0, 0).unwrap();
+        let a3 = r.allocate_branch(a.id, 3).unwrap();
+        let b3 = r.allocate_branch(b.id, 3).unwrap();
+        assert_ne!(a3, b3, "same user id, distinct global branches");
+        assert_eq!(r.resolve(a.id, 3).unwrap(), a3);
+        assert_eq!(r.resolve(b.id, 3).unwrap(), b3);
+        assert!(r.resolve(a.id, 4).is_err());
+        assert!(r.resolve(99, 0).is_err());
+        assert_eq!(
+            r.branches(a.id).unwrap(),
+            vec![(0, a.root_global), (3, a3)]
+        );
+        assert_eq!(r.census(), vec![(a.id, 2), (b.id, 2)]);
+    }
+
+    #[test]
+    fn lease_expiry_is_deterministic() {
+        let mut r = SessionRegistry::default();
+        let a = r.register("a", 1_000, 0).unwrap();
+        let b = r.register("b", 5_000, 0).unwrap();
+        assert!(r.expired(1_000).is_empty(), "lease boundary is inclusive");
+        assert_eq!(r.expired(1_001), vec![a.id]);
+        // touching resets the clock
+        r.touch(a.id, 1_000);
+        assert!(r.expired(2_000).is_empty());
+        assert_eq!(r.expired(6_000), vec![a.id, b.id]);
+        // teardown returns the namespace's global branches, sorted
+        let globals = r.remove_session(a.id).unwrap();
+        assert_eq!(globals, vec![a.root_global]);
+        assert!(r.remove_session(a.id).is_err());
+        assert_eq!(r.len(), 1);
+        // the freed name is reusable, under a fresh id
+        let a2 = r.register("a", 0, 6_000).unwrap();
+        assert!(a2.created);
+        assert_ne!(a2.id, a.id);
+    }
+
+    #[test]
+    fn resolve_or_allocate_covers_restore_path() {
+        let mut r = SessionRegistry::default();
+        let a = r.register("a", 0, 0).unwrap();
+        assert_eq!(r.resolve_or_allocate(a.id, 0).unwrap(), a.root_global);
+        let g7 = r.resolve_or_allocate(a.id, 7).unwrap();
+        assert_eq!(r.resolve_or_allocate(a.id, 7).unwrap(), g7);
+        assert!(r.resolve_or_allocate(99, 0).is_err());
+    }
+}

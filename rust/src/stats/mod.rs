@@ -35,13 +35,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
-use crate::comm::{BranchId, Clock};
+use crate::comm::{BranchId, Clock, SessionId};
 use crate::ps::pool::PoolStats;
 
 /// Version stamped on every stats document and wire frame.  Bump it
 /// whenever a field is added, removed or reinterpreted; decoders reject
-/// unknown versions with a typed error.
-pub const SCHEMA_VERSION: u32 = 1;
+/// unknown versions with a typed error.  v2 added the per-session
+/// census ([`SessionStats`]) and the `session` field on
+/// [`TrialEvent`].
+pub const SCHEMA_VERSION: u32 = 2;
 
 /// Number of log2 latency buckets: bucket `i` counts requests whose
 /// service time fell in `[2^i, 2^(i+1))` microseconds (bucket 0 also
@@ -211,6 +213,10 @@ pub struct ShardRows {
 /// `mltuner top` can show per-trial state next to the server counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TrialEvent {
+    /// Session the trial belongs to (0 = the default namespace).  The
+    /// server stamps this from the publishing frame's session, so a
+    /// client cannot spoof another tenant's drill-down.
+    pub session: SessionId,
     /// Tuning episode (0 = initial tuning).
     pub episode: u32,
     /// Trial index within the episode.
@@ -224,6 +230,27 @@ pub struct TrialEvent {
     pub progress: f64,
     /// Trial-local training time at the sample.
     pub time: f64,
+}
+
+/// Per-session census entry: one line of the multi-tenant drill-down.
+/// Row counters and `deferrals` are cumulative (monotonic per server
+/// while the session lives); `live_branches` is a gauge.  Sessions may
+/// appear (registration) and disappear (teardown / lease GC) between
+/// frames, so the monotonic check only compares sessions present in
+/// both.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Server-assigned session id (0 = the default namespace).
+    pub session: SessionId,
+    /// Rows applied on behalf of this session.
+    pub rows_applied: u64,
+    /// Rows read on behalf of this session.
+    pub rows_read: u64,
+    /// Times a frame from this session was deferred by the fairness
+    /// token bucket (re-queued, never dropped).
+    pub deferrals: u64,
+    /// Branches live in this session's namespace right now (gauge).
+    pub live_branches: usize,
 }
 
 /// One shard server's full stats document: the payload of both the
@@ -247,6 +274,9 @@ pub struct ServerDelta {
     pub branches: Vec<(BranchId, usize)>,
     /// Latest published trial progress, newest episode/trial last.
     pub trials: Vec<TrialEvent>,
+    /// Per-session census, session-id order (empty when only the
+    /// default session has ever touched this server).
+    pub sessions: Vec<SessionStats>,
 }
 
 impl Default for ServerDelta {
@@ -261,6 +291,7 @@ impl Default for ServerDelta {
             rpc_hist: [0; HIST_BUCKETS],
             branches: Vec::new(),
             trials: Vec::new(),
+            sessions: Vec::new(),
         }
     }
 }
@@ -335,6 +366,27 @@ impl ServerDelta {
                 Some(_) => {}
             }
         }
+        // Sessions may be registered or torn down between frames, so
+        // only sessions present in BOTH frames are held monotonic.
+        for p in &prev.sessions {
+            if let Some(s) = self.sessions.iter().find(|s| s.session == p.session) {
+                if s.rows_applied < p.rows_applied
+                    || s.rows_read < p.rows_read
+                    || s.deferrals < p.deferrals
+                {
+                    bail!(
+                        "stats delta went backwards: session {} ({}, {}, {}) -> ({}, {}, {})",
+                        p.session,
+                        p.rows_applied,
+                        p.rows_read,
+                        p.deferrals,
+                        s.rows_applied,
+                        s.rows_read,
+                        s.deferrals,
+                    );
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -351,8 +403,11 @@ pub struct ClusterView {
     pub branches: Vec<(BranchId, usize)>,
     /// Summed RPC latency histogram.
     pub rpc_hist: [u64; HIST_BUCKETS],
-    /// Per-trial progress, deduplicated by (episode, trial).
+    /// Per-trial progress, deduplicated by (session, episode, trial).
     pub trials: Vec<TrialEvent>,
+    /// Per-session census: row/deferral counters summed across
+    /// servers, live branches maxed (branch ops replicate).
+    pub sessions: Vec<SessionStats>,
     /// Servers that contributed a delta.
     pub servers: usize,
 }
@@ -367,7 +422,8 @@ pub fn merge_cluster<'a>(deltas: impl IntoIterator<Item = &'a ServerDelta>) -> C
     let mut out = ClusterView::default();
     let mut branches: BTreeMap<BranchId, usize> = BTreeMap::new();
     let mut shards: BTreeMap<u64, ShardRows> = BTreeMap::new();
-    let mut trials: BTreeMap<(u32, u32), TrialEvent> = BTreeMap::new();
+    let mut trials: BTreeMap<(SessionId, u32, u32), TrialEvent> = BTreeMap::new();
+    let mut sessions: BTreeMap<SessionId, SessionStats> = BTreeMap::new();
     for d in deltas {
         out.servers += 1;
         let snap = &mut out.snapshot;
@@ -398,7 +454,18 @@ pub fn merge_cluster<'a>(deltas: impl IntoIterator<Item = &'a ServerDelta>) -> C
             *branches.entry(*id).or_default() += rows;
         }
         for t in &d.trials {
-            trials.insert((t.episode, t.trial), *t);
+            trials.insert((t.session, t.episode, t.trial), *t);
+        }
+        for s in &d.sessions {
+            let e = sessions
+                .entry(s.session)
+                .or_insert(SessionStats { session: s.session, ..Default::default() });
+            e.rows_applied += s.rows_applied;
+            e.rows_read += s.rows_read;
+            e.deferrals += s.deferrals;
+            // branch ops replicate to every server, so the per-server
+            // live count is the session's count — max, not sum
+            e.live_branches = e.live_branches.max(s.live_branches);
         }
     }
     out.snapshot.store.live_branches = branches.len();
@@ -406,6 +473,7 @@ pub fn merge_cluster<'a>(deltas: impl IntoIterator<Item = &'a ServerDelta>) -> C
     out.shards = shards.into_values().collect();
     out.branches = branches.into_iter().collect();
     out.trials = trials.into_values().collect();
+    out.sessions = sessions.into_values().collect();
     out
 }
 
@@ -499,11 +567,57 @@ mod tests {
     }
 
     #[test]
+    fn session_census_merges_and_stays_monotonic() {
+        let mut a = ServerDelta::default();
+        a.sessions = vec![
+            SessionStats {
+                session: 0,
+                rows_applied: 5,
+                rows_read: 2,
+                deferrals: 0,
+                live_branches: 1,
+            },
+            SessionStats {
+                session: 7,
+                rows_applied: 9,
+                rows_read: 1,
+                deferrals: 3,
+                live_branches: 4,
+            },
+        ];
+        let mut b = ServerDelta::default();
+        b.sessions = vec![SessionStats {
+            session: 7,
+            rows_applied: 11,
+            rows_read: 1,
+            deferrals: 0,
+            live_branches: 4,
+        }];
+        let v = merge_cluster([&a, &b]);
+        assert_eq!(v.sessions.len(), 2);
+        assert_eq!(v.sessions[1].session, 7);
+        assert_eq!(v.sessions[1].rows_applied, 20, "row counters sum across servers");
+        assert_eq!(v.sessions[1].deferrals, 3);
+        assert_eq!(v.sessions[1].live_branches, 4, "live branches replicate: max");
+
+        // same-server monotonicity: growth ok, shrink rejected,
+        // appearing/disappearing sessions tolerated
+        let mut next = a.clone();
+        next.sessions[1].rows_applied = 12;
+        next.sessions.remove(0); // session 0 torn down
+        assert!(next.check_monotonic(&a).is_ok());
+        let mut bad = a.clone();
+        bad.sessions[1].deferrals = 1;
+        let err = bad.check_monotonic(&a).unwrap_err().to_string();
+        assert!(err.contains("session 7"), "{err}");
+    }
+
+    #[test]
     fn snapshot_json_is_versioned_and_parseable() {
         let mut s = Snapshot::default();
         s.server.rows_applied = 42;
         let doc = crate::util::json::Json::parse(&s.to_json()).unwrap();
-        assert_eq!(doc.get("v").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(doc.get("v").and_then(|v| v.as_f64()), Some(2.0));
         let server = doc.get("server").unwrap();
         assert_eq!(server.get("rows_applied").and_then(|v| v.as_f64()), Some(42.0));
     }

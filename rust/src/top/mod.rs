@@ -14,8 +14,10 @@
 //! Output modes:
 //! * default — an ANSI dashboard redrawn per tick: cluster totals,
 //!   per-shard-server drill-down, the RPC service-time histogram,
-//!   live branches and per-trial tuner progress.  Dependency-free:
-//!   plain escape codes, no terminal library.
+//!   live branches, per-trial tuner progress and the per-session
+//!   tenant census (rows moved, fairness deferrals, live branches —
+//!   the operator's view of who is using a shared cluster).
+//!   Dependency-free: plain escape codes, no terminal library.
 //! * `--json` — one newline-delimited delta frame per tick per
 //!   server, exactly as received (each carries the schema version
 //!   `"v"`), for scripts and the distributed CI leg.
@@ -260,8 +262,8 @@ pub fn render(
         for t in &view.trials {
             writeln!(
                 out,
-                "  ep{} trial{} branch #{} clock {}: progress {:.4} at {:.1}s",
-                t.episode, t.trial, t.branch, t.clock, t.progress, t.time,
+                "  s{} ep{} trial{} branch #{} clock {}: progress {:.4} at {:.1}s",
+                t.session, t.episode, t.trial, t.branch, t.clock, t.progress, t.time,
             )?;
         }
     }
@@ -275,6 +277,24 @@ pub fn render(
                 sh.shard,
                 fmt_count(sh.rows_applied),
                 fmt_count(sh.rows_read),
+            )?;
+        }
+    }
+
+    // Tenant census: one line per session that has moved rows or
+    // holds branches.  Session 0 is the default namespace, so a
+    // single-tenant cluster shows at most that one line.
+    if !view.sessions.is_empty() {
+        writeln!(out, "sessions:")?;
+        for ss in &view.sessions {
+            writeln!(
+                out,
+                "  session {:>3}: {:>8} applied, {:>8} read, {} deferred, {} branches",
+                ss.session,
+                fmt_count(ss.rows_applied),
+                fmt_count(ss.rows_read),
+                fmt_count(ss.deferrals),
+                ss.live_branches,
             )?;
         }
     }
@@ -310,7 +330,7 @@ mod tests {
     use crate::optim::OptimizerKind;
     use crate::ps::remote::{spawn_local_server, RemoteParamServer, ShardRange};
     use crate::ps::ParamStore;
-    use crate::stats::{ShardRows, TrialEvent};
+    use crate::stats::{SessionStats, ShardRows, TrialEvent};
 
     fn demo_view() -> ClusterView {
         let mut view = ClusterView::default();
@@ -336,12 +356,20 @@ mod tests {
         view.rpc_hist[3] = 90;
         view.rpc_hist[7] = 10;
         view.trials = vec![TrialEvent {
+            session: 3,
             episode: 1,
             trial: 2,
             branch: 5,
             clock: 77,
             progress: 0.5,
             time: 12.0,
+        }];
+        view.sessions = vec![SessionStats {
+            session: 3,
+            rows_applied: 123_400,
+            rows_read: 42,
+            deferrals: 7,
+            live_branches: 2,
         }];
         view
     }
@@ -360,12 +388,14 @@ mod tests {
         render(&mut buf, &cfg, &demo_view(), Rates::default(), 1).unwrap();
         let text = String::from_utf8(buf).unwrap();
         assert!(text.contains("2/2 servers reporting"), "{text}");
-        assert!(text.contains("stats schema v1"), "{text}");
+        assert!(text.contains("stats schema v2"), "{text}");
         assert!(text.contains("123.5k rows applied"), "{text}");
         assert!(text.contains("rpc service time (100 samples)"), "{text}");
         assert!(text.contains("branches: #0:64  #5:64"), "{text}");
-        assert!(text.contains("ep1 trial2 branch #5 clock 77"), "{text}");
+        assert!(text.contains("s3 ep1 trial2 branch #5 clock 77"), "{text}");
         assert!(text.contains("shard   0"), "{text}");
+        assert!(text.contains("session   3:"), "{text}");
+        assert!(text.contains("7 deferred, 2 branches"), "{text}");
         assert!(!text.contains('\x1b'), "--once must not clear the screen");
     }
 
@@ -410,7 +440,7 @@ mod tests {
         assert_eq!(lines.len(), 2, "one frame per tick: {text}");
         for line in &lines {
             assert!(line.contains("\"op\":\"stats_delta\""), "{line}");
-            assert!(line.contains("\"v\":1"), "{line}");
+            assert!(line.contains("\"v\":2"), "{line}");
             assert!(line.contains("\"shards\":"), "{line}");
         }
         remote.shutdown_all().unwrap();

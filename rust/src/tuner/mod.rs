@@ -388,6 +388,9 @@ impl<S: TrainingSystem> MLtuner<S> {
             // system, NOT through `driver.send` — journaled messages
             // would corrupt checkpoint replay.  Best-effort by design.
             self.driver.system.publish_trial(TrialEvent {
+                // the remote store re-stamps this with each server's
+                // granted session id; 0 is the local/default case
+                session: 0,
                 episode: trial.episode,
                 trial: trial.id,
                 branch: trial.branch,

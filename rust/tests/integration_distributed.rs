@@ -25,6 +25,17 @@
 //! the continued session's progress trace, final rows, and branch
 //! census are bit-exact with an uninterrupted **local** run.
 //!
+//! The multi-tenant leg:
+//! `two_concurrent_sessions_are_isolated_and_bit_exact` runs two
+//! scripted tunes concurrently on the SAME two server processes, each
+//! under its own `--session-name` namespace, and holds each bit-exact
+//! with the solo in-process reference;
+//! `sigkilled_session_client_is_garbage_collected_after_lease_expiry`
+//! SIGKILLs a real tune client and asserts lease-expiry GC frees its
+//! namespace; `saturating_bulk_writer_cannot_starve_a_cotenant` pins
+//! the `--session-rows-per-sec` fairness share through the
+//! per-session stats census.
+//!
 //! This is the CI `distributed` leg (see `.github/workflows/ci.yml`
 //! and `scripts/tier1.sh`).
 
@@ -39,7 +50,7 @@ use mltuner::comm::socket::{Framing, SocketSpec};
 use mltuner::comm::wire::{decode_ps_reply, PsReply};
 use mltuner::comm::{BranchType, TunerMsg};
 use mltuner::metrics::RunRecorder;
-use mltuner::optim::OptimizerKind;
+use mltuner::optim::{Hyper, OptimizerKind};
 use mltuner::ps::remote::RemoteParamServer;
 use mltuner::ps::{ParamStore, PsHandle};
 use mltuner::training::{MessageDriver, TrainingSystem};
@@ -64,6 +75,17 @@ impl Drop for ServerProc {
 /// Spawn `mltuner serve --shards <range> --listen 127.0.0.1:0` and
 /// parse the kernel-chosen ephemeral address off its first stdout line.
 fn spawn_server(shards: &str, optimizer: OptimizerKind, framing: Framing) -> ServerProc {
+    spawn_server_with(shards, optimizer, framing, &[])
+}
+
+/// [`spawn_server`] with extra `mltuner serve` flags (session lease,
+/// fairness share, admission limits).
+fn spawn_server_with(
+    shards: &str,
+    optimizer: OptimizerKind,
+    framing: Framing,
+    extra: &[&str],
+) -> ServerProc {
     let mut child = Command::new(env!("CARGO_BIN_EXE_mltuner"))
         .args([
             "serve",
@@ -76,6 +98,7 @@ fn spawn_server(shards: &str, optimizer: OptimizerKind, framing: Framing) -> Ser
             "--framing",
             framing.name(),
         ])
+        .args(extra)
         .stdout(Stdio::piped())
         .spawn()
         .expect("spawn mltuner serve");
@@ -98,6 +121,18 @@ fn spawn_cluster(optimizer: OptimizerKind, framing: Framing) -> (ServerProc, Ser
     (
         spawn_server("0..2", optimizer, framing),
         spawn_server("2..4", optimizer, framing),
+    )
+}
+
+/// [`spawn_cluster`] with extra `mltuner serve` flags on both servers.
+fn spawn_cluster_with(
+    optimizer: OptimizerKind,
+    framing: Framing,
+    extra: &[&str],
+) -> (ServerProc, ServerProc) {
+    (
+        spawn_server_with("0..2", optimizer, framing, extra),
+        spawn_server_with("2..4", optimizer, framing, extra),
     )
 }
 
@@ -242,6 +277,195 @@ fn multi_process_session_is_bit_exact_with_local_run() {
 #[test]
 fn multi_process_session_is_bit_exact_under_binary_framing() {
     multi_process_parity_under(Framing::Binary);
+}
+
+#[test]
+fn two_concurrent_sessions_are_isolated_and_bit_exact() {
+    // Multi-tenant acceptance: two scripted tune sessions run
+    // CONCURRENTLY against the same two shard-server processes, each
+    // under its own named session namespace, and each must stay
+    // bit-exact with the solo in-process reference — co-tenants share
+    // a cluster without perturbing each other's floats, branch ids,
+    // or branch census.
+    let cfg = mf_config();
+    let (sa, sb) = spawn_cluster(cfg.optimizer, Framing::Line);
+    let specs = [sa.spec.clone(), sb.spec.clone()];
+    let alice = RemoteParamServer::connect_session(&specs, Framing::Line, Some("alice")).unwrap();
+    let bob = RemoteParamServer::connect_session(&specs, Framing::Line, Some("bob")).unwrap();
+    let sys_a = MfSystem::with_store(cfg.clone(), PsHandle::Remote(alice)).unwrap();
+    let sys_b = MfSystem::with_store(cfg.clone(), PsHandle::Remote(bob)).unwrap();
+
+    let ((trace_a, sys_a), (trace_b, sys_b)) = std::thread::scope(|s| {
+        let ha = s.spawn(move || scripted_session(sys_a));
+        let hb = s.spawn(move || scripted_session(sys_b));
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+
+    let (local_trace, local_sys) = scripted_session(MfSystem::new(cfg));
+    let want: Vec<u64> = local_trace.iter().map(|v| v.to_bits()).collect();
+    let local_fp = store_fingerprint(&local_sys);
+    for (name, trace, sys) in [("alice", trace_a, &sys_a), ("bob", trace_b, &sys_b)] {
+        let got: Vec<u64> = trace.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "{name}: progress trace diverged from the solo run");
+        assert_eq!(
+            store_fingerprint(sys),
+            local_fp,
+            "{name}: final store diverged from the solo run"
+        );
+    }
+
+    // graceful teardown of one tenant, cluster shutdown via the other
+    if let PsHandle::Remote(remote) = sys_b.store() {
+        remote.end_session().unwrap();
+    }
+    if let PsHandle::Remote(remote) = sys_a.store() {
+        remote.shutdown_all().unwrap();
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn sigkilled_session_client_is_garbage_collected_after_lease_expiry() {
+    use std::time::{Duration, Instant};
+
+    // Crashed-tenant GC: a real `mltuner tune --session-name` process
+    // is SIGKILLed mid-run, so no EndSession is ever sent; once its
+    // lease expires the servers free the dead session's branch
+    // namespace on their own (the census shows zero live session
+    // branches).
+    let (sa, sb) = spawn_cluster_with(
+        OptimizerKind::AdaRevision,
+        Framing::Line,
+        &["--session-lease-ms", "500"],
+    );
+    let config = "app = \"mf\"\noptimizer = \"adarevision\"\nworkers = 2\n\
+                  loss_threshold = 1e-12\nretune = false\nmax_epochs = 1000000\n\
+                  [mf]\nusers = 16\nitems = 12\nrank = 2\nn_ratings = 120\n";
+    let path = std::env::temp_dir().join(format!("mltuner-gc-test-{}.toml", std::process::id()));
+    std::fs::File::create(&path)
+        .and_then(|mut f| f.write_all(config.as_bytes()))
+        .expect("write temp config");
+    let mut child = Command::new(env!("CARGO_BIN_EXE_mltuner"))
+        .args([
+            "tune",
+            "--config",
+            path.to_str().unwrap(),
+            "--ps",
+            &format!("remote://{},{}", sa.spec, sb.spec),
+            "--session-name",
+            "crashy",
+        ])
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn mltuner tune");
+
+    // Live branches across NAMED sessions only: the census always
+    // lists session 0 first, and a serve process pre-registers the
+    // default namespace's root branch, so session 0's gauge is
+    // nonzero on an idle cluster.
+    let probe =
+        RemoteParamServer::connect(&[sa.spec.clone(), sb.spec.clone()], Framing::Line).unwrap();
+    let session_live = |probe: &RemoteParamServer| -> usize {
+        probe
+            .probe_stats()
+            .unwrap()
+            .iter()
+            .flat_map(|d| d.sessions.iter())
+            .filter(|s| s.session != 0)
+            .map(|s| s.live_branches)
+            .sum()
+    };
+    // wait for the tenant to attach (registering a session creates
+    // its namespace root, so the census goes nonzero immediately)
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while session_live(&probe) == 0 {
+        assert!(Instant::now() < deadline, "tune client never attached a session");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    child.kill().expect("SIGKILL tune client");
+    child.wait().expect("reap tune client");
+    let _ = std::fs::remove_file(&path);
+
+    // past the 500ms lease, every ServerStats probe sweeps expired
+    // sessions before reporting
+    std::thread::sleep(Duration::from_millis(1500));
+    let live = session_live(&probe);
+    assert_eq!(live, 0, "dead tenant's branches survived lease expiry");
+    probe.shutdown_all().unwrap();
+}
+
+#[cfg(unix)]
+#[test]
+fn saturating_bulk_writer_cannot_starve_a_cotenant() {
+    use std::time::{Duration, Instant};
+
+    // Data-plane fairness: with a configured per-session rows/sec
+    // share, a bulk writer saturating one shard server is deferred
+    // back to its share while a co-tenant hammering the SAME server
+    // still gets its own share.  Asserted through the per-session
+    // census counters the servers export, not client-side guesses.
+    const SHARE: u64 = 2000; // rows/sec per session per server
+    let (sa, sb) = spawn_cluster_with(
+        OptimizerKind::Sgd,
+        Framing::Binary,
+        &["--session-rows-per-sec", "2000"],
+    );
+    let specs = [sa.spec.clone(), sb.spec.clone()];
+    let bulk = RemoteParamServer::connect_session(&specs, Framing::Binary, Some("bulk")).unwrap();
+    let tenant =
+        RemoteParamServer::connect_session(&specs, Framing::Binary, Some("tenant")).unwrap();
+    // both tenants target the same key, so all traffic lands on one
+    // shard server and genuinely contends for dispatch
+    bulk.insert_row(0, 0, 0, vec![0.0; 8]).unwrap();
+    tenant.insert_row(0, 0, 0, vec![0.0; 8]).unwrap();
+
+    let window = Duration::from_millis(2000);
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let end = Instant::now() + window;
+            let h = Hyper { lr: 0.01, momentum: 0.0 };
+            while Instant::now() < end {
+                bulk.apply_update(0, 0, 0, &[1.0; 8], h, None).unwrap();
+            }
+        });
+        s.spawn(|| {
+            let end = Instant::now() + window;
+            while Instant::now() < end {
+                tenant.read_row(0, 0, 0).unwrap();
+            }
+        });
+    });
+
+    // the bulk session only writes and the co-tenant only reads
+    // (plus one insert each), so the census identifies them by
+    // traffic direction
+    let mut bulk_applied = 0u64;
+    let mut bulk_deferred = 0u64;
+    let mut tenant_read = 0u64;
+    for d in bulk.probe_stats().unwrap() {
+        for ss in &d.sessions {
+            if ss.rows_applied > ss.rows_read {
+                bulk_applied += ss.rows_applied;
+                bulk_deferred += ss.deferrals;
+            } else {
+                tenant_read += ss.rows_read;
+            }
+        }
+    }
+    assert!(bulk_deferred > 0, "saturating writer was never deferred");
+    assert!(
+        bulk_applied <= SHARE * 8,
+        "bulk writer ran at wire speed, not its share: {bulk_applied} rows"
+    );
+    assert!(
+        tenant_read >= SHARE,
+        "co-tenant starved below its configured share: {tenant_read} rows read"
+    );
+
+    bulk.end_session().unwrap();
+    tenant.end_session().unwrap();
+    bulk.shutdown_all().unwrap();
 }
 
 #[test]

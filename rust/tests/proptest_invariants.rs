@@ -6,15 +6,15 @@ use mltuner::comm::binwire;
 use mltuner::comm::socket::{decode_length_frame, encode_length_frame, MAX_FRAME_LEN};
 use mltuner::comm::wire::{
     decode_ps_reply, decode_ps_request, encode_ps_reply, encode_ps_request, PsReply, PsRequest,
-    WireCodec,
+    SessionHello, WireCodec,
 };
-use mltuner::comm::{BranchType, ProtocolChecker, TunerMsg};
+use mltuner::comm::{BranchType, ProtocolChecker, SessionId, TunerMsg};
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
 use mltuner::ps::remote::StatsCollector;
 use mltuner::ps::ParamServer;
 use mltuner::stats::{
-    merge_cluster, ServerDelta, ServerPlane, ShardRows, StorePlane, TrialEvent, WirePlane,
-    HIST_BUCKETS,
+    merge_cluster, ServerDelta, ServerPlane, SessionStats, ShardRows, StorePlane, TrialEvent,
+    WirePlane, HIST_BUCKETS,
 };
 use mltuner::summarizer::{BranchLabel, ProgressPoint, ProgressSummarizer};
 use mltuner::training::clock::SspClock;
@@ -627,36 +627,67 @@ fn random_dir(rng: &mut Rng) -> String {
     }
 }
 
+/// Session ids over the interesting range: 0 (the default namespace,
+/// which the codecs may encode by omission), small granted ids, and
+/// the whole u32 space.
+fn random_session(rng: &mut Rng) -> SessionId {
+    match rng.gen_range(0, 3) {
+        0 => 0,
+        1 => rng.gen_range(1, 64) as u32,
+        _ => rng.next_u64() as u32,
+    }
+}
+
+/// Optional session attach riding `Hello` — names need the same
+/// escaping coverage as checkpoint directories.
+fn random_session_hello(rng: &mut Rng) -> Option<SessionHello> {
+    if rng.gen_range(0, 2) == 0 {
+        None
+    } else {
+        Some(SessionHello {
+            name: random_dir(rng),
+            lease_ms: rng.next_u64() >> 12,
+        })
+    }
+}
+
 fn random_ps_request(rng: &mut Rng) -> PsRequest {
-    match rng.gen_range(0, 15) {
+    match rng.gen_range(0, 17) {
         0 => PsRequest::Hello {
             codec: random_codec(rng),
+            session: random_session_hello(rng),
         },
         10 => PsRequest::CheckpointBranch {
+            session: random_session(rng),
             branch: rng.next_u64() as u32,
             dir: random_dir(rng),
         },
         11 => PsRequest::VerifyBranch {
+            session: random_session(rng),
             branch: rng.next_u64() as u32,
             dir: random_dir(rng),
         },
         12 => PsRequest::RestoreBranch {
+            session: random_session(rng),
             branch: rng.next_u64() as u32,
             dir: random_dir(rng),
         },
         1 => PsRequest::InsertRow {
+            session: random_session(rng),
             branch: rng.next_u64() as u32,
             table: rng.next_u64() as u32,
             key: rng.next_u64() >> 12, // JSON-safe (< 2^53)
             data: random_f32_vec(rng, 16),
         },
         2 => PsRequest::ReadRow {
+            session: random_session(rng),
             branch: rng.next_u64() as u32,
             table: rng.next_u64() as u32,
             key: rng.next_u64() >> 12,
             with_accum: rng.gen_range(0, 2) == 0,
         },
         9 => PsRequest::ReadRows {
+            session: random_session(rng),
             branch: rng.next_u64() as u32,
             with_accum: rng.gen_range(0, 2) == 0,
             keys: (0..rng.gen_range(0, 12))
@@ -664,6 +695,7 @@ fn random_ps_request(rng: &mut Rng) -> PsRequest {
                 .collect(),
         },
         3 => PsRequest::ApplyUpdate {
+            session: random_session(rng),
             branch: rng.next_u64() as u32,
             table: rng.next_u64() as u32,
             key: rng.next_u64() >> 12,
@@ -676,6 +708,7 @@ fn random_ps_request(rng: &mut Rng) -> PsRequest {
             },
         },
         4 => PsRequest::ApplyBatch {
+            session: random_session(rng),
             branch: rng.next_u64() as u32,
             hyper: random_hyper(rng),
             updates: (0..rng.gen_range(0, 8))
@@ -689,10 +722,12 @@ fn random_ps_request(rng: &mut Rng) -> PsRequest {
                 .collect(),
         },
         5 => PsRequest::ForkBranch {
+            session: random_session(rng),
             child: rng.next_u64() as u32,
             parent: rng.next_u64() as u32,
         },
         6 => PsRequest::FreeBranch {
+            session: random_session(rng),
             branch: rng.next_u64() as u32,
         },
         7 => PsRequest::ServerStats,
@@ -702,6 +737,12 @@ fn random_ps_request(rng: &mut Rng) -> PsRequest {
         14 => PsRequest::PublishProgress {
             event: random_trial_event(rng),
         },
+        15 => PsRequest::ListBranches {
+            session: random_session(rng),
+        },
+        16 => PsRequest::EndSession {
+            session: random_session(rng),
+        },
         _ => PsRequest::Shutdown,
     }
 }
@@ -710,6 +751,7 @@ fn random_ps_request(rng: &mut Rng) -> PsRequest {
 /// infinities and −0.0 must all survive the wire bit-exact.
 fn random_trial_event(rng: &mut Rng) -> TrialEvent {
     TrialEvent {
+        session: random_session(rng),
         episode: rng.next_u64() as u32,
         trial: rng.next_u64() as u32,
         branch: rng.next_u64() as u32,
@@ -764,6 +806,22 @@ fn random_server_delta(rng: &mut Rng) -> ServerDelta {
             .map(|_| (rng.next_u64() as u32, rng.gen_range(0, 10_000)))
             .collect(),
         trials: (0..rng.gen_range(0, 4)).map(|_| random_trial_event(rng)).collect(),
+        sessions: {
+            // census order is ascending by session id, ids unique
+            let mut id = 0u32;
+            (0..rng.gen_range(0, 4))
+                .map(|_| {
+                    id += 1 + (rng.next_u64() % 1000) as u32;
+                    SessionStats {
+                        session: id,
+                        rows_applied: rng.next_u64() >> 12,
+                        rows_read: rng.next_u64() >> 12,
+                        deferrals: rng.next_u64() >> 12,
+                        live_branches: rng.gen_range(0, 64),
+                    }
+                })
+                .collect()
+        },
         ..ServerDelta::default()
     }
 }
@@ -782,12 +840,18 @@ fn random_segment_meta(rng: &mut Rng) -> mltuner::ps::checkpoint::SegmentMeta {
 }
 
 fn random_ps_reply(rng: &mut Rng) -> PsReply {
-    match rng.gen_range(0, 10) {
+    match rng.gen_range(0, 11) {
         0 => PsReply::Hello {
             shard_begin: rng.gen_range(0, 64),
             shard_end: rng.gen_range(64, 256),
             optimizer: "adarevision".into(),
             codec: random_codec(rng),
+            session: random_session(rng),
+        },
+        10 => PsReply::BranchList {
+            branches: (0..rng.gen_range(0, 8))
+                .map(|_| (rng.next_u64() as u32, rng.gen_range(0, 10_000)))
+                .collect(),
         },
         6 => PsReply::Segments {
             segments: (0..rng.gen_range(0, 5)).map(|_| random_segment_meta(rng)).collect(),
@@ -947,6 +1011,7 @@ fn prop_length_framing_handles_truncation_and_splits() {
 /// through `PartialEq`, which NaN would poison.
 fn tame_trial_event(rng: &mut Rng) -> TrialEvent {
     TrialEvent {
+        session: (rng.next_u64() % 3) as u32,
         episode: (rng.next_u64() % 4) as u32,
         trial: (rng.next_u64() % 8) as u32,
         branch: rng.next_u64() as u32,
@@ -1000,6 +1065,17 @@ fn grow_delta(rng: &mut Rng, d: &mut ServerDelta) {
     for s in d.shards.iter_mut() {
         s.rows_applied += rng.next_u64() >> 40;
         s.rows_read += rng.next_u64() >> 40;
+    }
+    // session counters are monotonic per session; the set itself may
+    // shrink (lease GC / EndSession) and live_branches is a gauge
+    for ss in d.sessions.iter_mut() {
+        ss.rows_applied += rng.next_u64() >> 40;
+        ss.rows_read += rng.next_u64() >> 40;
+        ss.deferrals += rng.next_u64() >> 40;
+        ss.live_branches = rng.gen_range(0, 8);
+    }
+    if rng.gen_range(0, 4) == 0 {
+        d.sessions.pop();
     }
     // gauges are exempt from monotonicity and may move anywhere
     d.pool.idle = rng.next_u64() >> 40;

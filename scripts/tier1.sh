@@ -33,7 +33,13 @@ cargo test --release --test stress_concurrent -- --test-threads=8
 # `mltuner tune --ps-framing binary` CLI over the binary wire, and
 # (e) the observability smoke: `mltuner top --json --once` against a
 # live two-server cluster prints one well-formed schema-versioned
-# stats frame per server with nonzero per-shard apply throughput
+# stats frame per server with nonzero per-shard apply throughput, and
+# (f) the multi-tenant leg: two concurrent `--session-name` tunes on
+# one shared cluster each bit-exact with the solo reference
+# (`two_concurrent_sessions_are_isolated_and_bit_exact`), a SIGKILLed
+# tune client garbage-collected after its lease expires, and the
+# `--session-rows-per-sec` fairness share holding a co-tenant's
+# throughput against a saturating bulk writer
 # (mirrors the CI `distributed` leg).
 cargo test --release --test integration_distributed
 
