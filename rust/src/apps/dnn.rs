@@ -35,7 +35,7 @@ use anyhow::{bail, Result};
 use crate::util::rng::Rng;
 
 use crate::comm::{BranchId, BranchType, Clock};
-use crate::data::{BatchCursor, ImageDataset};
+use crate::data::{BatchCursor, DriftSchedule, ImageDataset};
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
 use crate::ps::cache::WorkerCache;
 use crate::ps::storage::{RowKey, TableId};
@@ -47,6 +47,11 @@ use crate::tunable::{TunableSetting, TunableSpace};
 
 /// Parameter rows are chunks of this many f32s (sharding granularity).
 pub const ROW_LEN: usize = 4096;
+
+/// Covariate-shift magnitude at full drift, in units of the unit-norm
+/// cluster centers: a 0.75 translation moves every class meaningfully
+/// off its trained decision region without making the task unlearnable.
+const DRIFT_SHIFT_MAG: f32 = 0.75;
 
 #[derive(Debug, Clone)]
 struct DnnBranch {
@@ -188,20 +193,36 @@ fn gather_worker_params(
     params
 }
 
-/// Draw one worker's mini-batch from its private cursor.
+/// Draw one worker's mini-batch from its private cursor, applying the
+/// drift schedule's covariate/label shift for this clock.  The shift
+/// is a pure function of (drift, shift direction, example key, clock)
+/// — never of which worker drew the example — so drifted batches stay
+/// bit-reproducible across shard layouts.
 fn assemble_batch(
     train: &ImageDataset,
     cursor: &mut BatchCursor,
     bs: usize,
+    drift: DriftSchedule,
+    shift: &[f32],
+    clock: Clock,
 ) -> (Vec<f32>, Vec<i32>) {
     let dim = train.dim;
     let mut idx = Vec::with_capacity(bs);
     cursor.next_batch(bs, &mut idx);
     let mut x = vec![0f32; bs * dim];
     let mut y = Vec::with_capacity(bs);
+    let factor = drift.factor(clock) as f32;
     for (bi, &i) in idx.iter().enumerate() {
-        train.fill_example(i, &mut x[bi * dim..(bi + 1) * dim]);
-        y.push(train.y[i]);
+        let xs = &mut x[bi * dim..(bi + 1) * dim];
+        train.fill_example(i, xs);
+        let mut label = train.y[i];
+        if factor > 0.0 {
+            for (v, s) in xs.iter_mut().zip(shift) {
+                *v += factor * DRIFT_SHIFT_MAG * s;
+            }
+            label = drift.drifted_label(clock, i as u64, label, train.classes);
+        }
+        y.push(label);
     }
     (x, y)
 }
@@ -219,6 +240,10 @@ pub struct DnnSystem {
     space: TunableSpace,
     /// Branch scheduled last clock (cache-clear detection).
     last_scheduled: Option<BranchId>,
+    /// Non-stationary input schedule (covariate + label shift).
+    drift: DriftSchedule,
+    /// Precomputed unit-norm covariate-shift direction (drift-seeded).
+    shift_dir: Vec<f32>,
 }
 
 impl DnnSystem {
@@ -312,7 +337,19 @@ impl DnnSystem {
             param_shapes: mm.param_shapes,
             space,
             last_scheduled: None,
+            drift: DriftSchedule::none(),
+            shift_dir: Vec::new(),
         })
+    }
+
+    /// Install a non-stationary input schedule.  The covariate-shift
+    /// direction is drawn once from the schedule's seed so repeated
+    /// builds (and `--resume` replays) shift along the same vector.
+    pub fn with_drift(mut self, drift: DriftSchedule) -> Self {
+        let dim = self.train.dim;
+        self.shift_dir = drift.shift_direction(dim);
+        self.drift = drift;
+        self
     }
 
     pub fn space(&self) -> &TunableSpace {
@@ -348,6 +385,8 @@ impl DnnSystem {
             let ps = &self.ps;
             let train = &self.train;
             let shapes = &self.param_shapes[..];
+            let drift = self.drift;
+            let shift = &self.shift_dir[..];
             std::thread::scope(|s| {
                 let handles: Vec<_> = self
                     .caches
@@ -364,7 +403,7 @@ impl DnnSystem {
                                 local_clock,
                                 staleness,
                             );
-                            let (x, y) = assemble_batch(train, cursor, bs);
+                            let (x, y) = assemble_batch(train, cursor, bs, drift, shift, clock);
                             WorkerJob { params, x, y }
                         })
                     })
@@ -435,7 +474,6 @@ impl DnnSystem {
         b.cursors = cursors;
         push_result?;
         b.clocks_run += 1;
-        let _ = clock;
         Ok(Progress {
             // per-worker mean loss summed over workers (paper: sum)
             value: loss_sum / bs as f64,
@@ -443,7 +481,7 @@ impl DnnSystem {
         })
     }
 
-    fn run_testing_clock(&mut self, branch: BranchId) -> Result<Progress> {
+    fn run_testing_clock(&mut self, clock: Clock, branch: BranchId) -> Result<Progress> {
         let started = Instant::now();
         // Evaluate on worker 0's assembled (fresh) parameters.
         self.caches[0].switch_branch(branch);
@@ -465,11 +503,29 @@ impl DnnSystem {
         let mut x = vec![0f32; eb * dim];
         let mut y = vec![0i32; eb];
         let full_batches = self.val.len() / eb;
+        // Evaluate against the *drifted* distribution: validation
+        // examples shift with the same schedule as training, keyed by
+        // their post-split index offset so train/val streams stay
+        // independent draws of the same label-flip process.
+        let factor = self.drift.factor(clock) as f32;
+        let val_key_base = self.train.len() as u64;
         for bi in 0..full_batches.max(1) {
             for j in 0..eb {
                 let i = (bi * eb + j) % self.val.len();
-                self.val.fill_example(i, &mut x[j * dim..(j + 1) * dim]);
+                let xs = &mut x[j * dim..(j + 1) * dim];
+                self.val.fill_example(i, xs);
                 y[j] = self.val.y[i];
+                if factor > 0.0 {
+                    for (v, s) in xs.iter_mut().zip(&self.shift_dir) {
+                        *v += factor * DRIFT_SHIFT_MAG * s;
+                    }
+                    y[j] = self.drift.drifted_label(
+                        clock,
+                        val_key_base + i as u64,
+                        y[j],
+                        self.val.classes,
+                    );
+                }
             }
             let (c, _l) = self.runtime.run_eval(&model, &variant, &params, &x, &y)?;
             correct += c as f64;
@@ -527,7 +583,7 @@ impl TrainingSystem for DnnSystem {
         self.last_scheduled = Some(branch_id);
         match ty {
             BranchType::Training => self.run_training_clock(clock, branch_id),
-            BranchType::Testing => self.run_testing_clock(branch_id),
+            BranchType::Testing => self.run_testing_clock(clock, branch_id),
         }
     }
 

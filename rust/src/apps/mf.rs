@@ -41,7 +41,7 @@ use anyhow::{bail, Result};
 use crate::util::rng::Rng;
 
 use crate::comm::{BranchId, BranchType, Clock};
-use crate::data::RatingsDataset;
+use crate::data::{DriftSchedule, RatingsDataset};
 use crate::optim::{Hyper, Optimizer, OptimizerKind};
 use crate::ps::checkpoint::{BranchCkpt, StoreCheckpoint};
 use crate::ps::storage::{RowKey, TableId};
@@ -158,6 +158,11 @@ pub struct MfSystem {
     /// so Testing clocks normalize against this constant instead of
     /// re-gathering the whole factor model every evaluation.
     root_loss: f64,
+    /// Non-stationary rating schedule: preferences rotate per clock.
+    drift: DriftSchedule,
+    /// Clock of the most recent `schedule_branch` — the drift epoch
+    /// `loss_of` evaluates at (0 until training starts).
+    drift_clock: Clock,
 }
 
 impl MfSystem {
@@ -240,9 +245,20 @@ impl MfSystem {
             branches,
             space,
             root_loss: 0.0,
+            drift: DriftSchedule::none(),
+            drift_clock: 0,
         };
-        sys.root_loss = sys.loss_of(0);
+        sys.root_loss = sys.loss_of_at(0, 0);
         Ok(sys)
+    }
+
+    /// Install a non-stationary rating schedule.  Drifted ratings are
+    /// a pure function of (schedule, user, item, clock) — never of the
+    /// worker count or rating partition — so drifted runs stay
+    /// bit-identical across shard layouts.
+    pub fn with_drift(mut self, drift: DriftSchedule) -> Self {
+        self.drift = drift;
+        self
     }
 
     pub fn space(&self) -> &TunableSpace {
@@ -254,10 +270,16 @@ impl MfSystem {
         &self.ps
     }
 
-    /// Current training loss (sum of squared errors) of a branch.
-    /// Gathers every rating-touched factor row as one batched read
-    /// (one RPC per shard server when remote).
+    /// Current training loss (sum of squared errors) of a branch
+    /// against the drift epoch of the last scheduled clock.
     pub fn loss_of(&self, branch: BranchId) -> f64 {
+        self.loss_of_at(branch, self.drift_clock)
+    }
+
+    /// Training loss of a branch against the ratings as drifted at
+    /// `clock`.  Gathers every rating-touched factor row as one
+    /// batched read (one RPC per shard server when remote).
+    pub fn loss_of_at(&self, branch: BranchId, clock: Clock) -> f64 {
         let mut seen_l = vec![false; self.cfg.users];
         let mut seen_r = vec![false; self.cfg.items];
         for &(u, i, _) in &self.data.ratings {
@@ -291,6 +313,7 @@ impl MfSystem {
         }
         let mut loss = 0f64;
         for &(u, i, r) in &self.data.ratings {
+            let r = self.drift.drifted_rating(clock, u, i, r);
             let lu = &row_l[u as usize];
             let ri = &row_r[i as usize];
             let pred: f32 = lu.iter().zip(ri).map(|(a, b)| a * b).sum();
@@ -345,17 +368,19 @@ impl TrainingSystem for MfSystem {
         self.ps.free_branch(branch_id)
     }
 
-    fn schedule_branch(&mut self, _clock: Clock, branch_id: BranchId) -> Result<Progress> {
+    fn schedule_branch(&mut self, clock: Clock, branch_id: BranchId) -> Result<Progress> {
         let b = match self.branches.get(&branch_id) {
             None => bail!("branch {branch_id} missing"),
             Some(b) => b.clone(),
         };
+        self.drift_clock = clock;
         let started = Instant::now();
         if b.branch_type == BranchType::Testing {
             // MF has no validation accuracy; a testing branch reports
             // the (negated-for-accuracy-semantics) normalized fit
-            // against the cached pristine-root loss.
-            let loss = self.loss_of(branch_id);
+            // against the cached pristine-root loss.  Under drift the
+            // fit is measured against the *current* ratings.
+            let loss = self.loss_of_at(branch_id, clock);
             return Ok(Progress {
                 value: 1.0 - (loss / self.root_loss).min(1.0),
                 time: started.elapsed().as_secs_f64(),
@@ -383,6 +408,7 @@ impl TrainingSystem for MfSystem {
         let rank = self.cfg.rank;
         let ps = &self.ps;
         let data = &self.data;
+        let drift = self.drift;
         let mut partial_losses = vec![0f64; workers];
         std::thread::scope(|s| {
             for ((w, scratch), loss_slot) in self
@@ -423,9 +449,11 @@ impl TrainingSystem for MfSystem {
                             scratch.z_r[k] = z;
                         }
                     }
-                    // loss + gradients from the local copies
+                    // loss + gradients from the local copies, against
+                    // the ratings as drifted at this clock
                     let mut loss = 0f64;
                     for &(u, i, r) in part {
+                        let r = drift.drifted_rating(clock, u, i, r);
                         let (u, i) = (u as usize, i as usize);
                         let lu = &scratch.row_l[u];
                         let ri = &scratch.row_r[i];
@@ -618,8 +646,9 @@ impl TrainingSystem for MfSystem {
             );
         }
         // branch 0 was restored too; the cached pristine-root loss is
-        // recomputed so Testing clocks normalize bit-identically
-        self.root_loss = self.loss_of(0);
+        // recomputed (at drift epoch 0, as at construction) so Testing
+        // clocks normalize bit-identically
+        self.root_loss = self.loss_of_at(0, 0);
         Ok(true)
     }
 
@@ -732,6 +761,59 @@ mod tests {
         let tuned = mk(0.3);
         let tiny = mk(1e-4);
         assert!(tuned < tiny * 0.8, "tuned {tuned} vs tiny {tiny}");
+    }
+
+    #[test]
+    fn rating_drift_is_deterministic_and_kicks_the_loss() {
+        let run = |drift: DriftSchedule| {
+            let mut sys = MfSystem::new(MfConfig {
+                users: 40,
+                items: 30,
+                rank: 4,
+                n_ratings: 1000,
+                ..Default::default()
+            })
+            .with_drift(drift);
+            let s = lr_setting(&sys, 0.3);
+            sys.fork_branch(0, 1, None, &s, BranchType::Training).unwrap();
+            (0..30)
+                .map(|c| sys.schedule_branch(c, 1).unwrap().value.to_bits())
+                .collect::<Vec<u64>>()
+        };
+        let plain = run(DriftSchedule::none());
+        let a = run(DriftSchedule::step(15, 5));
+        let b = run(DriftSchedule::step(15, 5));
+        assert_eq!(a, b, "drifted runs are bit-reproducible per seed");
+        assert_eq!(a[..15], plain[..15], "identity before drift_at");
+        assert_ne!(a[15..], plain[15..], "drift must change the tail");
+        let pre = f64::from_bits(a[14]);
+        let post = f64::from_bits(a[15]);
+        assert!(post > pre, "drift must degrade the fit: {pre} -> {post}");
+        assert!(a.iter().all(|&v| f64::from_bits(v).is_finite()));
+    }
+
+    #[test]
+    fn testing_branch_scores_against_current_drift() {
+        let mut sys = MfSystem::new(MfConfig {
+            users: 40,
+            items: 30,
+            rank: 4,
+            n_ratings: 1000,
+            ..Default::default()
+        })
+        .with_drift(DriftSchedule::step(20, 9));
+        let s = lr_setting(&sys, 0.3);
+        sys.fork_branch(0, 1, None, &s, BranchType::Training).unwrap();
+        for c in 0..15 {
+            sys.schedule_branch(c, 1).unwrap();
+        }
+        sys.fork_branch(15, 2, Some(1), &s, BranchType::Testing).unwrap();
+        let before = sys.schedule_branch(15, 2).unwrap().value;
+        let after = sys.schedule_branch(25, 2).unwrap().value;
+        assert!(
+            after < before,
+            "fit must degrade once ratings rotate: {before} -> {after}"
+        );
     }
 
     #[test]

@@ -38,10 +38,31 @@ use anyhow::{bail, Result};
 use crate::util::rng::Rng;
 
 use crate::comm::{BranchId, BranchType, Clock};
+use crate::data::DriftSchedule;
 use crate::optim::OptimizerKind;
 use crate::stats::Snapshot;
 use crate::training::{Progress, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
+
+/// How far the optimal learning rate shifts under a fully-applied
+/// drift: the new optimum is `DRIFT_LR_SHIFT ×` the old one, so a
+/// setting tuned pre-drift trains at `u/DRIFT_LR_SHIFT` — a visibly
+/// collapsed progress slope that only re-tuning recovers.
+const DRIFT_LR_SHIFT: f64 = 20.0;
+/// Fraction of the initial bias re-injected by a fully-applied drift
+/// (the "preference rotation" invalidating part of what was learned).
+const DRIFT_KICK: f64 = 0.5;
+
+/// A deterministic virtual-time load spike: training clocks in
+/// `[at, at + clocks)` take `slowdown ×` their normal wall time.  Only
+/// the *reported* time stretches — the SGD dynamics per clock are
+/// unchanged (a slow cluster does the same math, slower).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadSpike {
+    pub at: u64,
+    pub clocks: u64,
+    pub slowdown: f64,
+}
 
 /// Calibrated constants for one benchmark profile.
 #[derive(Debug, Clone)]
@@ -250,6 +271,11 @@ struct SimBranch {
     ball: f64,
     /// Divergence bookkeeping (loss value once diverged).
     diverged_loss: Option<f64>,
+    /// Drift factor already applied to this branch's bias (so a step
+    /// kicks each lineage exactly once and a ramp kicks incrementally;
+    /// copied on fork, which is what keeps trial branches forked
+    /// post-drift from being re-kicked).
+    drift_progress: f64,
     rng: Rng,
 }
 
@@ -277,6 +303,10 @@ pub struct SimSystem {
     forked: u64,
     /// Peak number of simultaneously-live branches (§4.6 memory check).
     pub peak_branches: usize,
+    /// Non-stationarity schedule (default: stationary).
+    pub drift: DriftSchedule,
+    /// Optional deterministic load spike (default: none).
+    pub load_spike: Option<LoadSpike>,
 }
 
 impl SimSystem {
@@ -301,6 +331,7 @@ impl SimSystem {
                 bias: profile.init_loss - profile.min_loss,
                 ball: 0.0,
                 diverged_loss: None,
+                drift_progress: 0.0,
                 rng: Rng::seed_from_u64(seed),
             },
         );
@@ -313,11 +344,30 @@ impl SimSystem {
             seed,
             forked: 0,
             peak_branches: 1,
+            drift: DriftSchedule::none(),
+            load_spike: None,
         }
     }
 
     pub fn with_optimizer(mut self, kind: OptimizerKind) -> Self {
         self.optimizer = kind;
+        self
+    }
+
+    /// Attach a drift schedule: at `drift.factor(clock) = f`, the
+    /// optimal learning rate has shifted by `1 + (DRIFT_LR_SHIFT-1)·f`
+    /// (a pre-drift-tuned setting trains at a collapsed rate) and
+    /// `f · DRIFT_KICK` of the initial bias has been re-injected into
+    /// every trained lineage (part of what was learned is invalid).
+    /// Purely clock-keyed: the tuner's message stream is untouched.
+    pub fn with_drift(mut self, drift: DriftSchedule) -> Self {
+        self.drift = drift;
+        self
+    }
+
+    /// Attach a deterministic load spike (see [`LoadSpike`]).
+    pub fn with_load_spike(mut self, spike: LoadSpike) -> Self {
+        self.load_spike = Some(spike);
         self
     }
 
@@ -404,6 +454,7 @@ impl TrainingSystem for SimSystem {
                 bias: parent_branch.bias,
                 ball: parent_branch.ball,
                 diverged_loss: parent_branch.diverged_loss,
+                drift_progress: parent_branch.drift_progress,
                 rng,
             },
         );
@@ -421,9 +472,12 @@ impl TrainingSystem for SimSystem {
         Ok(())
     }
 
-    fn schedule_branch(&mut self, _clock: Clock, branch_id: BranchId) -> Result<Progress> {
+    fn schedule_branch(&mut self, clock: Clock, branch_id: BranchId) -> Result<Progress> {
         let p = self.profile.clone();
         let num_workers = self.num_workers as f64;
+        // Non-stationarity is keyed purely off the clock the message
+        // carries, so journal replay re-derives the exact same drift.
+        let drift_f = self.drift.factor(clock);
         let u;
         let dt;
         let ball_eq;
@@ -449,13 +503,34 @@ impl TrainingSystem for SimSystem {
                     time: p.eval_time,
                 });
             }
-            u = self.u_of(&b.tunable);
+            // Drift shifts the optimum LR up by DRIFT_LR_SHIFT: the
+            // same setting's normalized step u collapses accordingly.
+            u = self.u_of(&b.tunable) / (1.0 + (DRIFT_LR_SHIFT - 1.0) * drift_f);
             dt = self.clock_dt(&b.tunable);
             ball_eq = self.floor_of(&b.tunable, u) - p.min_loss;
         }
+        // Wall time per clock, load spike included (dynamics below use
+        // the unstretched dt — a slow cluster does the same math).
+        let wall_dt = match self.load_spike {
+            Some(sp) if clock >= sp.at && clock < sp.at.saturating_add(sp.clocks) => {
+                dt * sp.slowdown.max(1.0)
+            }
+            _ => dt,
+        };
         let b = self.branches.get_mut(&branch_id).unwrap();
         let bs = b.tunable.batch_size(&self.space).max(1) as f64;
         let s = b.tunable.staleness(&self.space) as f64;
+
+        // Preference rotation: the not-yet-applied part of the drift
+        // re-injects bias (each lineage is kicked exactly once per unit
+        // of drift factor — `drift_progress` is branch state, copied on
+        // fork).
+        let kick = drift_f - b.drift_progress;
+        if kick > 0.0 {
+            let init_bias = p.init_loss - p.min_loss;
+            b.bias = (b.bias + kick * DRIFT_KICK * init_bias).min(init_bias);
+            b.drift_progress = drift_f;
+        }
 
         if b.diverged() || u > p.div_u {
             // Divergence: geometric blow-up, then numeric overflow.
@@ -474,7 +549,7 @@ impl TrainingSystem for SimSystem {
             b.diverged_loss = Some(next);
             return Ok(Progress {
                 value: next * num_workers,
-                time: dt,
+                time: wall_dt,
             });
         }
 
@@ -515,7 +590,7 @@ impl TrainingSystem for SimSystem {
         // aggregated across workers (sum of per-worker losses)
         Ok(Progress {
             value: reported * num_workers,
-            time: dt,
+            time: wall_dt,
         })
     }
 
@@ -690,6 +765,93 @@ mod tests {
         };
         assert_eq!(mk(5), mk(5));
         assert_ne!(mk(5), mk(6));
+    }
+
+    #[test]
+    fn step_drift_kicks_loss_and_only_a_rescaled_lr_recovers() {
+        use crate::data::DriftSchedule;
+        let mut sys = SimSystem::new(SimProfile::mf_netflix(), 1, 2)
+            .with_drift(DriftSchedule::step(50, 9));
+        let tuned = setting(&sys, 0.1, 0.0, 1.0, 0.0);
+        sys.fork_branch(0, 1, None, &tuned, Training).unwrap();
+        for c in 0..50 {
+            sys.schedule_branch(c, 1).unwrap();
+        }
+        let pre_drift = sys.branch_loss(1).unwrap();
+        sys.schedule_branch(50, 1).unwrap();
+        let post_kick = sys.branch_loss(1).unwrap();
+        assert!(
+            post_kick > pre_drift * 2.0,
+            "drift must re-inject bias: {pre_drift} -> {post_kick}"
+        );
+        // fork the shifted-optimum setting (20x the old lr — it would
+        // have diverged pre-drift: u = 20 > div_u = 8) from the same
+        // lineage and race it against the stale setting
+        let rescaled = setting(&sys, 2.0, 0.0, 1.0, 0.0);
+        sys.fork_branch(51, 2, Some(1), &rescaled, Training).unwrap();
+        for c in 51..200 {
+            sys.schedule_branch(c, 1).unwrap();
+            sys.schedule_branch(c, 2).unwrap();
+        }
+        let stale = sys.branch_loss(1).unwrap();
+        let retuned = sys.branch_loss(2).unwrap();
+        assert!(retuned.is_finite(), "post-drift the 20x lr must not diverge");
+        assert!(
+            retuned < stale * 0.5,
+            "rescaled lr must recover much faster: stale={stale} retuned={retuned}"
+        );
+    }
+
+    #[test]
+    fn drifted_run_is_bit_deterministic_and_identity_before_at() {
+        use crate::data::DriftSchedule;
+        let mk = |drift: Option<DriftSchedule>| {
+            let mut sys = SimSystem::new(SimProfile::mf_netflix(), 1, 7);
+            if let Some(d) = drift {
+                sys = sys.with_drift(d);
+            }
+            let s = setting(&sys, 0.1, 0.0, 1.0, 0.0);
+            sys.fork_branch(0, 1, None, &s, Training).unwrap();
+            (0..80)
+                .map(|c| sys.schedule_branch(c, 1).unwrap().value.to_bits())
+                .collect::<Vec<u64>>()
+        };
+        let a = mk(Some(DriftSchedule::step(40, 3)));
+        let b = mk(Some(DriftSchedule::step(40, 3)));
+        let plain = mk(None);
+        assert_eq!(a, b, "drifted runs are bit-reproducible per seed");
+        assert_eq!(a[..40], plain[..40], "identity before drift_at");
+        assert_ne!(a[40..], plain[40..], "drift must change the tail");
+    }
+
+    #[test]
+    fn load_spike_stretches_time_but_not_the_loss_sequence() {
+        let mk = |spike: Option<LoadSpike>| {
+            let mut sys = SimSystem::new(SimProfile::alexnet_cifar10(), 8, 4);
+            if let Some(sp) = spike {
+                sys = sys.with_load_spike(sp);
+            }
+            let s = setting(&sys, 0.01, 0.0, 256.0, 0.0);
+            sys.fork_branch(0, 1, None, &s, Training).unwrap();
+            (0..30)
+                .map(|c| {
+                    let p = sys.schedule_branch(c, 1).unwrap();
+                    (p.value.to_bits(), p.time)
+                })
+                .collect::<Vec<_>>()
+        };
+        let spike = LoadSpike {
+            at: 10,
+            clocks: 10,
+            slowdown: 3.0,
+        };
+        let spiked = mk(Some(spike));
+        let plain = mk(None);
+        for (i, (s, p)) in spiked.iter().zip(&plain).enumerate() {
+            assert_eq!(s.0, p.0, "losses must match bit-exactly at clock {i}");
+            let expect = if (10..20).contains(&i) { p.1 * 3.0 } else { p.1 };
+            assert!((s.1 - expect).abs() < 1e-12, "time at clock {i}");
+        }
     }
 
     #[test]

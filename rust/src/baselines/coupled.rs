@@ -1,0 +1,206 @@
+//! Coupled lr+momentum adaptive baseline (arXiv 1908.07607).
+//!
+//! The scenario suite's adversary for slope-triggered MLtuner: one
+//! training branch, never re-tuned by search — instead a
+//! [`CoupledRule`] folds each epoch's mean training loss into a
+//! coupled (learning-rate, momentum) adjustment that is applied to the
+//! *running* branch in place via `update_tunable` (the Fig. 8
+//! manual-decay plumbing).  Hill-climbing like this reacts to
+//! non-stationary data only through multiplicative creep — the
+//! contrast to a re-tune episode, which re-searches the space outright.
+//!
+//! Runs inside the same harness as every other baseline (same training
+//! system, same branch machinery) to control for other performance
+//! factors, and is deterministic end to end: the rule is a pure fold
+//! and the driver draws no randomness of its own.
+
+use anyhow::{bail, Result};
+
+use crate::baselines::BaselineReport;
+use crate::comm::{BranchType, TunerMsg};
+use crate::metrics::RunRecorder;
+use crate::optim::coupled::CoupledRule;
+use crate::training::{MessageDriver, TrainingSystem};
+use crate::tunable::{TunableSetting, TunableSpace};
+
+/// Upper bound on the clocks trained between rule updates.  The source
+/// rule adapts per mini-batch — far finer than an epoch — so systems
+/// whose epochs span millions of clocks (MF on Netflix: ~12.5M) would
+/// otherwise fold their first observation long after any drift.  One
+/// epoch stays one round wherever epochs are shorter than this.
+const ROUND_CLOCKS_CAP: u64 = 256;
+
+pub struct CoupledAdaptiveDriver<S: TrainingSystem> {
+    driver: MessageDriver<S>,
+    space: TunableSpace,
+    rule: CoupledRule,
+    /// Mid-space template the adapted (lr, momentum) dims are written
+    /// over — other dims (batch size, staleness) stay fixed.
+    template: TunableSetting,
+}
+
+/// Write the rule's (lr, momentum) over the template setting, clamped
+/// into the space through an encode/decode roundtrip.  Spaces without
+/// a momentum dim (the MF app) just keep adapting lr alone.
+fn setting_for(
+    space: &TunableSpace,
+    template: &TunableSetting,
+    lr: f64,
+    momentum: f64,
+) -> TunableSetting {
+    let mut values = template.values.clone();
+    if let Some(i) = space.index_of("lr") {
+        values[i] = space.specs[i].decode(space.specs[i].encode(lr));
+    }
+    if let Some(i) = space.index_of("momentum") {
+        values[i] = space.specs[i].decode(space.specs[i].encode(momentum));
+    }
+    TunableSetting::new(values)
+}
+
+impl<S: TrainingSystem> CoupledAdaptiveDriver<S> {
+    pub fn new(system: S, space: TunableSpace, initial_lr: f64) -> Self {
+        let template = space.decode(&vec![0.5; space.dim()]);
+        CoupledAdaptiveDriver {
+            driver: MessageDriver::new(system),
+            rule: CoupledRule::new(initial_lr),
+            template,
+            space,
+        }
+    }
+
+    pub fn run(&mut self, time_budget: f64) -> Result<BaselineReport> {
+        let mut recorder = RunRecorder::new();
+        let mut clock = 0u64;
+        let mut now = 0.0f64;
+        let mut next_branch = 1u32;
+        let mut best_acc = 0.0f64;
+
+        let mut setting =
+            setting_for(&self.space, &self.template, self.rule.lr(), self.rule.momentum());
+        let branch = next_branch;
+        next_branch += 1;
+        self.driver.send(&TunerMsg::ForkBranch {
+            clock,
+            branch_id: branch,
+            parent_branch_id: Some(0),
+            tunable: setting.clone(),
+            branch_type: BranchType::Training,
+        })?;
+
+        let mut epoch = 0u64;
+        while now < time_budget {
+            let clocks = self
+                .driver
+                .system
+                .clocks_per_epoch(branch)
+                .max(1)
+                .min(ROUND_CLOCKS_CAP);
+            let mut loss_acc = 0.0f64;
+            let mut loss_n = 0u64;
+            let mut diverged = false;
+            for _ in 0..clocks {
+                let Some(p) = self.driver.send(&TunerMsg::ScheduleBranch {
+                    clock,
+                    branch_id: branch,
+                })?
+                else {
+                    bail!("protocol violation: ScheduleBranch returned no progress report");
+                };
+                clock += 1;
+                now += p.time;
+                recorder.record_loss(now, clock, p.value);
+                if p.value.is_finite() {
+                    loss_acc += p.value;
+                    loss_n += 1;
+                } else {
+                    diverged = true;
+                    break;
+                }
+                if now >= time_budget {
+                    break;
+                }
+            }
+            epoch += 1;
+
+            // Fold the epoch's mean loss into the rule and apply the
+            // adapted setting to the SAME branch — the rule tunes in
+            // place, it never forks or searches.
+            let mean = if diverged || loss_n == 0 {
+                f64::NAN
+            } else {
+                loss_acc / loss_n as f64
+            };
+            self.rule.observe(mean);
+            setting =
+                setting_for(&self.space, &self.template, self.rule.lr(), self.rule.momentum());
+            self.driver.system.update_tunable(branch, &setting)?;
+
+            // Accuracy probe via a Testing fork (§4.5 protocol).
+            let tb = next_branch;
+            next_branch += 1;
+            self.driver.send(&TunerMsg::ForkBranch {
+                clock,
+                branch_id: tb,
+                parent_branch_id: Some(branch),
+                tunable: setting.clone(),
+                branch_type: BranchType::Testing,
+            })?;
+            let Some(acc) = self.driver.send(&TunerMsg::ScheduleBranch {
+                clock,
+                branch_id: tb,
+            })?
+            else {
+                bail!("protocol violation: Testing ScheduleBranch returned no progress report");
+            };
+            clock += 1;
+            now += acc.time;
+            self.driver.send(&TunerMsg::FreeBranch { clock, branch_id: tb })?;
+            recorder.record_accuracy(now, epoch, acc.value);
+            if acc.value.is_finite() && acc.value > best_acc {
+                best_acc = acc.value;
+            }
+        }
+        self.driver.send(&TunerMsg::FreeBranch { clock, branch_id: branch })?;
+        let configs = vec![(setting, best_acc)];
+        Ok(BaselineReport {
+            recorder,
+            configs,
+            best_accuracy: best_acc,
+            total_time: now,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::sim::{SimProfile, SimSystem};
+
+    #[test]
+    fn adapts_a_too_small_lr_up_to_convergence() {
+        let sys = SimSystem::new(SimProfile::alexnet_cifar10(), 8, 3);
+        let space = sys.space.clone();
+        // 10x under the profile's optimal lr: pure SGD at this step is
+        // slow; the rule must grow its way to a competitive setting
+        let mut d = CoupledAdaptiveDriver::new(sys, space, 0.005);
+        let report = d.run(800.0).unwrap();
+        assert!(
+            report.best_accuracy > 0.5,
+            "coupled rule failed to adapt: acc {}",
+            report.best_accuracy
+        );
+    }
+
+    #[test]
+    fn baseline_run_is_bit_deterministic() {
+        let run = || {
+            let sys = SimSystem::new(SimProfile::alexnet_cifar10(), 8, 5);
+            let space = sys.space.clone();
+            let mut d = CoupledAdaptiveDriver::new(sys, space, 0.005);
+            let r = d.run(300.0).unwrap();
+            (r.best_accuracy.to_bits(), r.total_time.to_bits())
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -10,10 +10,15 @@
 //! * [`hyperband::HyperbandDriver`] — the Infinite-horizon Hyperband
 //!   algorithm: doubling budgets, random sampling, successive halving
 //!   on validation accuracy.
+//! * [`coupled::CoupledAdaptiveDriver`] — the coupled lr+momentum
+//!   adaptive rule (arXiv 1908.07607): one branch, per-epoch in-place
+//!   adjustment, the scenario suite's non-stationary adversary.
 
+pub mod coupled;
 pub mod hyperband;
 pub mod spearmint;
 
+pub use coupled::CoupledAdaptiveDriver;
 pub use hyperband::HyperbandDriver;
 pub use spearmint::SpearmintDriver;
 

@@ -12,6 +12,7 @@ use crate::apps::dnn::{DnnConfig, DnnSystem};
 use crate::apps::mf::{MfConfig, MfSystem};
 use crate::apps::sim::{SimProfile, SimSystem};
 use crate::comm::socket::{Framing, parse_server_list};
+use crate::data::DriftSchedule;
 use crate::comm::{BranchId, BranchType, Clock};
 use crate::optim::OptimizerKind;
 use crate::ps::PsHandle;
@@ -63,6 +64,22 @@ pub struct ExperimentConfig {
     /// Resume from the latest checkpoint under `checkpoint_dir`
     /// instead of starting fresh.  CLI: `--resume`.
     pub resume: bool,
+    /// Data drift injected by the training system: "none" | "step" |
+    /// "ramp" (non-stationary workload harness).  CLI: `--drift`.
+    pub drift: String,
+    /// Clock at which the drift begins.  CLI: `--drift-at`.
+    pub drift_at: u64,
+    /// Clocks over which a "ramp" drift reaches full shift.
+    pub drift_ramp: u64,
+    /// Seed for the drift transform (independent of `seed`).
+    pub drift_seed: u64,
+    /// Slope watchdog: fire a re-tune episode when training progress
+    /// degrades mid-run (only effective while `retune` is on).
+    pub watchdog: bool,
+    /// Degraded means slope below this fraction of the trailing best.
+    pub watchdog_fraction: f64,
+    /// Consecutive degraded windows before the watchdog fires.
+    pub watchdog_windows: u32,
     pub dnn: DnnSection,
     pub mf: MfSection,
 }
@@ -117,6 +134,13 @@ impl Default for ExperimentConfig {
             checkpoint_dir: None,
             checkpoint_every: 50,
             resume: false,
+            drift: "none".into(),
+            drift_at: 0,
+            drift_ramp: 64,
+            drift_seed: 0,
+            watchdog: true,
+            watchdog_fraction: 0.25,
+            watchdog_windows: 3,
             dnn: DnnSection::default(),
             mf: MfSection::default(),
         }
@@ -174,6 +198,27 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_bool("resume") {
             cfg.resume = v;
+        }
+        if let Some(v) = doc.get_str("drift") {
+            cfg.drift = v.to_string();
+        }
+        if let Some(v) = doc.get_i64("drift_at") {
+            cfg.drift_at = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_i64("drift_ramp") {
+            cfg.drift_ramp = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_i64("drift_seed") {
+            cfg.drift_seed = v as u64;
+        }
+        if let Some(v) = doc.get_bool("watchdog") {
+            cfg.watchdog = v;
+        }
+        if let Some(v) = doc.get_f64("watchdog_fraction") {
+            cfg.watchdog_fraction = v;
+        }
+        if let Some(v) = doc.get_i64("watchdog_windows") {
+            cfg.watchdog_windows = v.max(1) as u32;
         }
         if let Some(v) = doc.get_str("dnn.model") {
             cfg.dnn.model = v.to_string();
@@ -247,8 +292,15 @@ impl ExperimentConfig {
         Ok(Some(PsHandle::Remote(remote)))
     }
 
+    /// The drift schedule described by this config (`DriftKind::None`
+    /// unless the config opts in).
+    pub fn drift_schedule(&self) -> Result<DriftSchedule> {
+        DriftSchedule::parse(&self.drift, self.drift_at, self.drift_ramp, self.drift_seed)
+    }
+
     /// Build the training system described by this config.
     pub fn build_system(&self) -> Result<(AnySystem, TunableSpace)> {
+        let drift = self.drift_schedule()?;
         match self.app.as_str() {
             "sim" => {
                 if self.ps.is_some() {
@@ -258,7 +310,8 @@ impl ExperimentConfig {
                 let profile = SimProfile::by_name(name)
                     .ok_or_else(|| anyhow::anyhow!("unknown profile {name}"))?;
                 let sys = SimSystem::new(profile, self.workers as u32, self.seed)
-                    .with_optimizer(self.optimizer_kind()?);
+                    .with_optimizer(self.optimizer_kind()?)
+                    .with_drift(drift);
                 let space = sys.space.clone();
                 Ok((AnySystem::Sim(sys), space))
             }
@@ -278,6 +331,7 @@ impl ExperimentConfig {
                     Some(store) => DnnSystem::with_store(cfg, runtime, store)?,
                     None => DnnSystem::new(cfg, runtime, self.optimizer_kind()?)?,
                 };
+                let sys = sys.with_drift(drift);
                 let space = sys.space().clone();
                 Ok((AnySystem::Dnn(Box::new(sys)), space))
             }
@@ -305,6 +359,7 @@ impl ExperimentConfig {
                     Some(store) => MfSystem::with_store(cfg, store)?,
                     None => MfSystem::new(cfg),
                 };
+                let sys = sys.with_drift(drift);
                 let space = sys.space().clone();
                 Ok((AnySystem::Mf(Box::new(sys)), space))
             }
@@ -332,6 +387,9 @@ impl ExperimentConfig {
             });
         }
         cfg.resume = self.resume;
+        cfg.watchdog.enabled = self.watchdog;
+        cfg.watchdog.fraction = self.watchdog_fraction;
+        cfg.watchdog.windows = self.watchdog_windows.max(1);
         Ok(cfg)
     }
 }
@@ -479,6 +537,41 @@ mod tests {
             tc.convergence,
             ConvergenceCriterion::LossThreshold { value: 100.0 }
         );
+    }
+
+    #[test]
+    fn drift_and_watchdog_keys_parse_and_plumb_through() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            app = "sim"
+            profile = "alexnet_cifar10"
+            drift = "step"
+            drift_at = 40
+            drift_seed = 9
+            watchdog = false
+            watchdog_fraction = 0.4
+            watchdog_windows = 5
+        "#,
+        )
+        .unwrap();
+        let sched = cfg.drift_schedule().unwrap();
+        assert!(sched.is_active());
+        assert_eq!(sched.at, 40);
+        assert_eq!(sched.seed, 9);
+        let (sys, space) = cfg.build_system().unwrap();
+        assert_eq!(sys.system_name(), "sim");
+        let tc = cfg.tuner_config(space).unwrap();
+        assert!(!tc.watchdog.enabled);
+        assert_eq!(tc.watchdog.fraction, 0.4);
+        assert_eq!(tc.watchdog.windows, 5);
+        // defaults: no drift, watchdog armed
+        let plain = ExperimentConfig::from_toml(r#"app = "sim""#).unwrap();
+        assert!(!plain.drift_schedule().unwrap().is_active());
+        assert!(plain.watchdog);
+        // bad drift kind rejected
+        let mut bad = plain;
+        bad.drift = "tsunami".into();
+        assert!(bad.drift_schedule().is_err());
     }
 
     #[test]

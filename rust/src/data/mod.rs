@@ -6,11 +6,167 @@
 //!   tuned classifier climbs steadily, hard enough that tuning matters.
 //! * [`RatingsDataset`] — low-rank synthetic ratings standing in for
 //!   Netflix: `X ≈ L·R + noise`, sampled sparsely.
+//! * [`DriftSchedule`] — deterministic non-stationarity: a clock
+//!   schedule (`none | step | ramp`) plus pure per-example transforms
+//!   (rating rotation, covariate shift, label shift) that the apps
+//!   apply at consumption time.  Every transform is a pure function of
+//!   `(drift_seed, example key, clock)` — never of worker count or
+//!   shard layout — so drifted runs stay bit-reproducible.
 //!
 //! Everything is deterministic per seed (Fig. 9 varies seeds on
 //! purpose; everything else must be reproducible).
 
+use anyhow::{bail, Result};
+
 use crate::util::rng::Rng;
+
+/// Shape of the non-stationarity on the clock axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriftKind {
+    /// Stationary workload (the default): every transform is identity.
+    None,
+    /// The distribution jumps at `drift_at` and stays shifted.
+    Step,
+    /// The distribution interpolates linearly from the original to the
+    /// shifted one over `ramp_clocks` clocks starting at `drift_at`.
+    Ramp,
+}
+
+/// A deterministic drift schedule plus its seeded per-example
+/// transforms.  Apps hold one and consult [`DriftSchedule::factor`]
+/// with the clock of the message they are executing; the transforms
+/// below blend between the original datum and a seeded target by that
+/// factor.  The schedule never touches the tuner's message stream —
+/// drift is system-internal state keyed off the `clock` argument every
+/// `ScheduleBranch` already carries, which is what keeps journal
+/// replay (`--resume`) bit-exact under an active schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DriftSchedule {
+    pub kind: DriftKind,
+    /// First clock at which the drift is in effect.
+    pub at: u64,
+    /// Ramp length in clocks (ignored for `none`/`step`).
+    pub ramp_clocks: u64,
+    /// Seed of the shifted distribution (independent of the data seed).
+    pub seed: u64,
+}
+
+const DRIFT_KEY_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+impl DriftSchedule {
+    /// The stationary schedule: `factor` is 0 everywhere and every
+    /// transform is the identity.
+    pub fn none() -> Self {
+        DriftSchedule {
+            kind: DriftKind::None,
+            at: 0,
+            ramp_clocks: 64,
+            seed: 0,
+        }
+    }
+
+    /// Parse the config surface (`drift = "none|step|ramp"`,
+    /// `drift_at`, `drift_ramp`, `drift_seed`).  Unknown kinds are a
+    /// typed error, never a silent default.
+    pub fn parse(kind: &str, at: u64, ramp_clocks: u64, seed: u64) -> Result<Self> {
+        let kind = match kind {
+            "none" => DriftKind::None,
+            "step" => DriftKind::Step,
+            "ramp" => DriftKind::Ramp,
+            other => bail!("unknown drift kind {other} (expected none|step|ramp)"),
+        };
+        Ok(DriftSchedule {
+            kind,
+            at,
+            ramp_clocks: ramp_clocks.max(1),
+            seed,
+        })
+    }
+
+    pub fn step(at: u64, seed: u64) -> Self {
+        DriftSchedule {
+            kind: DriftKind::Step,
+            at,
+            ramp_clocks: 64,
+            seed,
+        }
+    }
+
+    pub fn ramp(at: u64, ramp_clocks: u64, seed: u64) -> Self {
+        DriftSchedule {
+            kind: DriftKind::Ramp,
+            at,
+            ramp_clocks: ramp_clocks.max(1),
+            seed,
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.kind != DriftKind::None
+    }
+
+    /// Drift progress in `[0, 1]` at `clock`: 0 before `at`, 1 once
+    /// fully shifted; a ramp interpolates linearly in between.
+    pub fn factor(&self, clock: u64) -> f64 {
+        match self.kind {
+            DriftKind::None => 0.0,
+            DriftKind::Step | DriftKind::Ramp if clock < self.at => 0.0,
+            DriftKind::Step => 1.0,
+            DriftKind::Ramp => {
+                let progressed = (clock - self.at).saturating_add(1);
+                (progressed as f64 / self.ramp_clocks.max(1) as f64).min(1.0)
+            }
+        }
+    }
+
+    /// A deterministic uniform in `[0, 1)` keyed by `(seed, key)` —
+    /// the per-example randomness source of every transform.  Pure in
+    /// its inputs: shard layout and worker count can never change it.
+    fn unit(&self, key: u64) -> f64 {
+        let mixed = self.seed ^ key.wrapping_mul(DRIFT_KEY_MIX).wrapping_add(0x5851_F42D);
+        Rng::seed_from_u64(mixed).gen_f64()
+    }
+
+    /// MF rating drift: each (user, item) pair's rating rotates toward
+    /// a seeded target preference in `[-2, 2]`, blended by the drift
+    /// factor.  Finite in, finite out (the blend of two finite bounded
+    /// values); non-finite ratings pass through untouched.
+    pub fn drifted_rating(&self, clock: u64, user: u32, item: u32, rating: f32) -> f32 {
+        let f = self.factor(clock);
+        if f <= 0.0 || !rating.is_finite() {
+            return rating;
+        }
+        let key = ((user as u64) << 32) | item as u64;
+        let target = -2.0 + 4.0 * self.unit(key);
+        ((1.0 - f) * rating as f64 + f * target) as f32
+    }
+
+    /// Covariate-shift direction for `dim`-dimensional features: a
+    /// seeded unit-norm vector, constant over the run (the *amount* of
+    /// shift applied is `factor(clock)` times an app-chosen magnitude).
+    pub fn shift_direction(&self, dim: usize) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(self.seed ^ 0xC0FF_EE00_D15E_A5E5);
+        let mut dir: Vec<f64> = (0..dim).map(|_| rng.gen_normal()).collect();
+        let norm = dir.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-9);
+        dir.iter_mut().for_each(|v| *v /= norm);
+        dir.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Label shift: a seeded subset of examples (growing with the
+    /// drift factor, up to 25%) rotates to the next class.  The result
+    /// is always a valid class index for `classes >= 1`.
+    pub fn drifted_label(&self, clock: u64, key: u64, label: i32, classes: usize) -> i32 {
+        let f = self.factor(clock);
+        if f <= 0.0 || classes <= 1 {
+            return label;
+        }
+        if self.unit(key ^ 0xA5A5_A5A5_A5A5_A5A5) < f * 0.25 {
+            (label.rem_euclid(classes as i32) + 1) % classes as i32
+        } else {
+            label
+        }
+    }
+}
 
 /// Labeled feature vectors (the classifier workload).
 #[derive(Debug, Clone)]
@@ -269,6 +425,83 @@ mod tests {
             seen.insert(i);
         }
         assert_eq!(seen.len(), 10, "one epoch visits every example");
+    }
+
+    #[test]
+    fn drift_factor_shapes() {
+        let none = DriftSchedule::none();
+        let step = DriftSchedule::step(10, 7);
+        let ramp = DriftSchedule::ramp(10, 5, 7);
+        for c in 0..40 {
+            assert_eq!(none.factor(c), 0.0);
+        }
+        assert_eq!(step.factor(9), 0.0);
+        assert_eq!(step.factor(10), 1.0);
+        assert_eq!(step.factor(1_000_000), 1.0);
+        assert_eq!(ramp.factor(9), 0.0);
+        let mut prev = 0.0;
+        for c in 10..20 {
+            let f = ramp.factor(c);
+            assert!((0.0..=1.0).contains(&f));
+            assert!(f >= prev, "ramp must be monotone");
+            prev = f;
+        }
+        assert_eq!(ramp.factor(14), 1.0, "ramp saturates after ramp_clocks");
+        assert!(!none.is_active() && step.is_active() && ramp.is_active());
+    }
+
+    #[test]
+    fn drift_parse_rejects_unknown_kind() {
+        assert!(DriftSchedule::parse("step", 5, 1, 0).is_ok());
+        assert!(DriftSchedule::parse("ramp", 5, 0, 0).is_ok());
+        assert!(DriftSchedule::parse("sine", 5, 1, 0).is_err());
+    }
+
+    #[test]
+    fn drifted_rating_deterministic_finite_and_identity_before_at() {
+        let d = DriftSchedule::step(100, 42);
+        // identity before the drift point
+        assert_eq!(d.drifted_rating(99, 3, 4, 1.25), 1.25);
+        // deterministic and finite after it
+        let a = d.drifted_rating(100, 3, 4, 1.25);
+        let b = d.drifted_rating(100, 3, 4, 1.25);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert!(a.is_finite());
+        assert_ne!(a, 1.25, "a fully-stepped rating moves to its target");
+        // different pairs get different targets
+        let c = d.drifted_rating(100, 5, 6, 1.25);
+        assert_ne!(a.to_bits(), c.to_bits());
+    }
+
+    #[test]
+    fn shift_direction_is_unit_norm_and_seeded() {
+        let a = DriftSchedule::step(0, 1).shift_direction(16);
+        let b = DriftSchedule::step(0, 1).shift_direction(16);
+        let c = DriftSchedule::step(0, 2).shift_direction(16);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let norm: f64 = a.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn drifted_labels_stay_in_range() {
+        let d = DriftSchedule::step(0, 9);
+        let classes = 4usize;
+        let mut moved = 0;
+        for key in 0..400u64 {
+            let label = (key % classes as u64) as i32;
+            let out = d.drifted_label(0, key, label, classes);
+            assert!((0..classes as i32).contains(&out));
+            if out != label {
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "a step drift must move some labels");
+        assert!(moved < 400, "label shift is partial, not total");
+        // single-class datasets are untouched
+        assert_eq!(d.drifted_label(0, 7, 0, 1), 0);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::metrics::coefficient_of_variation;
 use crate::optim::OptimizerKind;
 use crate::training::TrainingSystem;
 use crate::tunable::{TunableSpace, TunableSpec};
-use crate::tuner::{ConvergenceCriterion, MLtuner, TunerConfig, TunerReport};
+use crate::tuner::{ConvergenceCriterion, MLtuner, RetuneTrigger, TunerConfig, TunerReport};
 
 /// Convenience: full MLtuner run on a simulated profile.
 pub fn mltuner_run(
@@ -193,7 +193,7 @@ pub fn fig4(seed: u64) -> Result<Vec<Fig4Run>> {
                 tuning_spans: report
                     .tunings
                     .iter()
-                    .map(|t| (t.started, t.ended, t.initial))
+                    .map(|t| (t.started, t.ended, t.trigger == RetuneTrigger::Initial))
                     .collect(),
                 final_accuracy: report.final_accuracy,
                 total_time: report.total_time,
@@ -579,7 +579,7 @@ pub fn fig11(seeds: &[u64]) -> Result<Vec<Fig11Row>> {
             acc += r.final_accuracy;
             total += r.total_time;
             tuning += r.tuning_time;
-            if let Some(t0) = r.tunings.iter().find(|t| t.initial) {
+            if let Some(t0) = r.tunings.iter().find(|t| t.trigger == RetuneTrigger::Initial) {
                 initial += t0.ended - t0.started;
                 trials += t0.trials;
             }

@@ -42,8 +42,9 @@ pub mod tuner;
 pub mod util;
 
 pub use comm::{BranchId, BranchType, Clock, SystemMsg, TunerMsg};
-pub use summarizer::{BranchLabel, ProgressSummarizer, Summary};
+pub use data::DriftSchedule;
+pub use summarizer::{BranchLabel, ProgressSummarizer, SlopeWatchdog, Summary};
 pub use stats::{ServerDelta, Snapshot};
 pub use training::{Progress, TrainingSystem};
 pub use tunable::{TunableSetting, TunableSpace, TunableSpec};
-pub use tuner::{MLtuner, TunerConfig, TunerReport};
+pub use tuner::{MLtuner, RetuneTrigger, TunerConfig, TunerReport, WatchdogConfig};

@@ -33,7 +33,7 @@ use std::io::Write as _;
 
 use anyhow::{bail, Result};
 
-use mltuner::baselines::{HyperbandDriver, SpearmintDriver};
+use mltuner::baselines::{CoupledAdaptiveDriver, HyperbandDriver, SpearmintDriver};
 use mltuner::comm::socket::{parse_server_list, Framing, PsListener, SocketSpec};
 use mltuner::config::ExperimentConfig;
 use mltuner::optim::OptimizerKind;
@@ -54,6 +54,10 @@ tune:     --config <file.toml> | --app sim --profile <name>
           --session-name NAME (own branch namespace on a shared cluster)
           --checkpoint-dir DIR --checkpoint-every N --resume
           --stats-json out.json (final stats snapshot, machine-readable)
+          --drift none|step|ramp --drift-at CLOCK --drift-ramp CLOCKS
+          --drift-seed N (non-stationary workload injection)
+          --watchdog true|false --watchdog-fraction F --watchdog-windows N
+          (slope watchdog: re-tune on mid-run progress degradation)
           (--crash-after-clocks N: fault injection for recovery tests)
 serve:    --shards a..b --listen host:port|unix:/path
           --optimizer sgd|adam|adarevision|... --framing line|length|binary
@@ -61,8 +65,10 @@ serve:    --shards a..b --listen host:port|unix:/path
           --session-lease-ms N --session-rows-per-sec N (fairness share)
 top:      --ps remote://host:port,host:port --framing line|length|binary
           --interval-ms N --json --once
-baseline: --kind spearmint|hyperband --profile <name> --seed N
+baseline: --kind spearmint|hyperband|coupled --profile <name> --seed N
           --budget <virtual seconds> --csv out.csv
+          --lr F (coupled: initial learning rate of the adaptive rule)
+          --drift none|step|ramp --drift-at CLOCK --drift-seed N
 train:    --profile <name> --lr F --momentum F --seed N --max-epochs N
 info:     --artifacts-dir artifacts
 
@@ -179,6 +185,17 @@ fn cmd_tune(args: &Args) -> Result<()> {
     if args.get_bool("resume", false) {
         cfg.resume = true;
     }
+    apply_drift_flags(args, &mut cfg);
+    if args.get("watchdog").is_some() {
+        cfg.watchdog = args.get_bool("watchdog", cfg.watchdog);
+    }
+    if args.get("watchdog-fraction").is_some() {
+        cfg.watchdog_fraction = args.get_f64("watchdog-fraction", cfg.watchdog_fraction);
+    }
+    if args.get("watchdog-windows").is_some() {
+        cfg.watchdog_windows = args.get_u64("watchdog-windows", u64::from(cfg.watchdog_windows))
+            as u32;
+    }
     let (system, space) = cfg.build_system()?;
     let mut tuner_cfg = cfg.tuner_config(space.clone())?;
     if let Some(n) = args.get("crash-after-clocks") {
@@ -224,7 +241,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
         println!(
             "  [{}] {} trials={} trial_time={:.1}s chosen={}",
             i,
-            if t.initial { "initial" } else { "re-tune" },
+            t.trigger.name(),
             t.trials,
             t.trial_time,
             t.chosen
@@ -245,18 +262,40 @@ fn cmd_tune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared `--drift*` flag overrides (tune and baseline both take them
+/// so scenario scripts can pit the two under identical drift).
+fn apply_drift_flags(args: &Args, cfg: &mut ExperimentConfig) {
+    if let Some(kind) = args.get("drift") {
+        cfg.drift = kind.to_string();
+    }
+    if args.get("drift-at").is_some() {
+        cfg.drift_at = args.get_u64("drift-at", cfg.drift_at);
+    }
+    if args.get("drift-ramp").is_some() {
+        cfg.drift_ramp = args.get_u64("drift-ramp", cfg.drift_ramp).max(1);
+    }
+    if args.get("drift-seed").is_some() {
+        cfg.drift_seed = args.get_u64("drift-seed", cfg.drift_seed);
+    }
+}
+
 fn cmd_baseline(args: &Args) -> Result<()> {
     let kind = args.get_or("kind", "hyperband");
     let seed = args.get_u64("seed", 0);
     let budget = args.get_f64("budget", 432_000.0);
-    let cfg = ExperimentConfig::from_toml(&format!(
+    let mut cfg = ExperimentConfig::from_toml(&format!(
         "app = \"sim\"\nprofile = \"{}\"\nseed = {seed}\n",
         args.get_or("profile", "alexnet_cifar10"),
     ))?;
+    apply_drift_flags(args, &mut cfg);
     let (system, space) = cfg.build_system()?;
     let report = match kind {
         "spearmint" => SpearmintDriver::new(system, space, seed).run(budget)?,
         "hyperband" => HyperbandDriver::new(system, space, seed).run(budget)?,
+        "coupled" => {
+            let lr0 = args.get_f64("lr", 0.01);
+            CoupledAdaptiveDriver::new(system, space, lr0).run(budget)?
+        }
         other => bail!("unknown baseline {other}"),
     };
     println!("=== {kind} report ===");

@@ -1,0 +1,169 @@
+//! Coupled learning-rate + momentum adaptation (arXiv 1908.07607).
+//!
+//! The adversary baseline for the non-stationary scenario suite: a
+//! client-side rule that adjusts learning rate and momentum *together*
+//! from the observed training loss, in the spirit of "Automatic and
+//! Simultaneous Adjustment of Learning Rate and Momentum for SGD".
+//! The one adapted quantity is the **effective step**
+//! `lr / (1 - momentum)` — the asymptotic per-gradient displacement of
+//! heavy-ball SGD — grown multiplicatively while the loss improves and
+//! cut when it regresses or diverges.  The split back into `(lr,
+//! momentum)` is the coupling: momentum absorbs growth first (up to
+//! 0.95), the learning rate only scales beyond that, so the rule walks
+//! the same lr–momentum ridge the paper identifies.
+//!
+//! The rule is a pure, deterministic fold over the loss sequence — no
+//! clocks, no RNG — so baseline runs are bit-reproducible, and every
+//! float comparison goes through `total_cmp` (NaN losses take the
+//! divergence path, they never poison the state).
+
+use std::cmp::Ordering;
+
+/// Multiplicative growth while the loss improves.
+const GROW: f64 = 1.2;
+/// Multiplicative cut on a loss regression.
+const SHRINK: f64 = 0.5;
+/// Hard backoff on a non-finite loss.
+const DIVERGE_CUT: f64 = 0.1;
+/// Momentum ceiling — beyond it the learning rate scales instead.
+const MOMENTUM_CAP: f64 = 0.95;
+
+/// The coupled lr+momentum rule.  Feed it one loss per epoch via
+/// [`CoupledRule::observe`]; read the adapted setting back through
+/// [`CoupledRule::lr`] / [`CoupledRule::momentum`].
+#[derive(Debug, Clone, Copy)]
+pub struct CoupledRule {
+    /// The user's initial learning rate — the pivot of the coupling.
+    base_lr: f64,
+    /// Effective step `lr / (1 - momentum)`, the adapted quantity.
+    step: f64,
+    /// Previous finite observation (`INFINITY` before the first one
+    /// and after a divergence, so the next epoch counts as improving).
+    last_loss: f64,
+    min_step: f64,
+    max_step: f64,
+}
+
+impl CoupledRule {
+    pub fn new(lr0: f64) -> Self {
+        let base = lr0.max(1e-12);
+        CoupledRule {
+            base_lr: base,
+            step: base,
+            last_loss: f64::INFINITY,
+            min_step: 1e-10,
+            max_step: 1e3,
+        }
+    }
+
+    /// The effective step `lr / (1 - momentum)` currently in force.
+    pub fn effective_step(&self) -> f64 {
+        self.step
+    }
+
+    /// Momentum component: zero while the step is within the base
+    /// learning rate, then rising toward the cap as the step grows.
+    pub fn momentum(&self) -> f64 {
+        if self.step.total_cmp(&self.base_lr) != Ordering::Greater {
+            return 0.0;
+        }
+        (1.0 - self.base_lr / self.step).min(MOMENTUM_CAP)
+    }
+
+    /// Learning-rate component, defined so that
+    /// `lr / (1 - momentum) == effective_step` always holds.
+    pub fn lr(&self) -> f64 {
+        self.step * (1.0 - self.momentum())
+    }
+
+    /// Fold one end-of-epoch training loss into the rule.
+    pub fn observe(&mut self, loss: f64) {
+        if !loss.is_finite() {
+            // divergence: hard backoff and forget the reference loss —
+            // whatever the next finite loss is counts as improvement
+            self.step = (self.step * DIVERGE_CUT).max(self.min_step);
+            self.last_loss = f64::INFINITY;
+            return;
+        }
+        let improved = loss.total_cmp(&self.last_loss) == Ordering::Less;
+        let factor = if improved { GROW } else { SHRINK };
+        self.step = (self.step * factor).clamp(self.min_step, self.max_step);
+        self.last_loss = loss;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn improving_stream_grows_the_effective_step() {
+        let mut r = CoupledRule::new(0.01);
+        let start = r.effective_step();
+        for i in 0..20 {
+            r.observe(100.0 - i as f64);
+        }
+        assert!(r.effective_step() > start * 10.0);
+        // momentum absorbed the growth first; lr stays pinned at base
+        // until the momentum cap
+        assert!(r.momentum() > 0.5);
+        assert!((r.lr() / (1.0 - r.momentum()) - r.effective_step()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regression_cuts_and_divergence_backs_off_hard() {
+        let mut r = CoupledRule::new(0.01);
+        for i in 0..30 {
+            r.observe(100.0 - i as f64);
+        }
+        let grown = r.effective_step();
+        r.observe(1e6); // regression
+        assert!(r.effective_step() < grown);
+        let before_nan = r.effective_step();
+        r.observe(f64::NAN);
+        assert!(r.effective_step() < before_nan * 0.2);
+        assert!(r.lr().is_finite() && r.momentum().is_finite());
+        // the first finite loss after divergence counts as improving
+        let floored = r.effective_step();
+        r.observe(5e5);
+        assert!(r.effective_step() > floored);
+    }
+
+    #[test]
+    fn momentum_and_lr_stay_in_their_bands() {
+        let mut r = CoupledRule::new(0.05);
+        for i in 0..200 {
+            // alternate long improvement runs with occasional spikes
+            let loss = if i % 17 == 0 { 1e9 } else { 1e4 / (i + 1) as f64 };
+            r.observe(loss);
+            assert!(r.lr() > 0.0, "lr must stay positive");
+            assert!((0.0..=MOMENTUM_CAP).contains(&r.momentum()));
+            assert!(r.effective_step() <= 1e3 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn rule_is_a_pure_fold() {
+        let feed = |losses: &[f64]| {
+            let mut r = CoupledRule::new(0.01);
+            for &l in losses {
+                r.observe(l);
+            }
+            (r.lr().to_bits(), r.momentum().to_bits())
+        };
+        let seq: Vec<f64> = (0..50).map(|i| 1000.0 / (i + 1) as f64).collect();
+        assert_eq!(feed(&seq), feed(&seq), "bit-reproducible per input");
+    }
+
+    #[test]
+    fn cap_shifts_growth_from_momentum_to_lr() {
+        let mut r = CoupledRule::new(0.01);
+        for i in 0..60 {
+            r.observe(1e6 - i as f64);
+        }
+        // deep in growth: momentum pinned at the cap, lr carrying the
+        // rest of the effective step
+        assert!((r.momentum() - MOMENTUM_CAP).abs() < 1e-9);
+        assert!(r.lr() > 0.01);
+    }
+}

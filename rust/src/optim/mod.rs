@@ -23,6 +23,8 @@
 //! protected by the owning shard's lock — and snapshotted/forked with
 //! the branch like any other training state.
 
+pub mod coupled;
+
 use crate::ps::storage::Entry;
 
 /// Runtime hyperparameters applied server-side (the tunables).

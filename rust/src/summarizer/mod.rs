@@ -16,6 +16,17 @@
 //! numerically-overflowed values; otherwise **unstable** (needs a longer
 //! trial).  Defaults `K = 10` (white-noise false-positive < 0.1%) and
 //! `ε = 1/K` are the paper's and need no user tuning.
+//!
+//! [`SlopeWatchdog`] reuses the same downsample/slope machinery for the
+//! always-on re-tune trigger: it watches the *training* loss stream
+//! (log-domain, so the healthy exponential descent has a constant
+//! slope), tracks the trailing best slope, and reports degradation once
+//! the slope stays below a configured fraction of that best for K
+//! consecutive observations.  NaN/Inf windows, sub-minimum windows and
+//! flat-zero slopes never fire (see the unit tests); all comparisons go
+//! through `total_cmp` so a NaN can never invert a ranking.
+
+use std::cmp::Ordering;
 
 /// One progress observation: (timestamp seconds, progress value).
 /// For SGD apps the progress value is the per-clock training loss.
@@ -170,6 +181,138 @@ impl ProgressSummarizer {
     }
 }
 
+/// Always-on progress-slope watchdog (the re-tune plane's trigger).
+///
+/// Feed it every training-clock loss via [`SlopeWatchdog::observe`]; it
+/// keeps a rolling window of log-loss points, summarizes the window
+/// with the §4.1 downsampler, and returns `true` once the slope has
+/// stayed below `fraction` of its trailing best for `windows`
+/// consecutive observations.  Firing disarms the watchdog; the caller
+/// re-arms it with [`SlopeWatchdog::reset`] after adopting a new
+/// setting (or leaves it disarmed, in which case it re-arms itself only
+/// once the slope recovers to half the trailing best — so a run sitting
+/// at its convergence plateau costs at most one speculative re-tune).
+///
+/// Hostile inputs are inert by construction: non-finite losses poison
+/// the window into the Diverged label (no fire), windows below
+/// `min_points` or with fewer than two downsampled windows report
+/// nothing, and a flat or rising trace keeps the trailing best at zero,
+/// which can never be degraded from.
+#[derive(Debug, Clone)]
+pub struct SlopeWatchdog {
+    summarizer: ProgressSummarizer,
+    /// Fire when slope < `fraction` × trailing best…
+    fraction: f64,
+    /// …for this many consecutive observations.
+    windows: u32,
+    /// Minimum points in the rolling window before slopes count.
+    min_points: usize,
+    /// Rolling-window capacity (points beyond it scroll off).
+    cap: usize,
+    window: Vec<ProgressPoint>,
+    best_speed: f64,
+    degraded: u32,
+    armed: bool,
+}
+
+impl SlopeWatchdog {
+    pub fn new(fraction: f64, windows: u32, min_points: usize) -> Self {
+        let summarizer = ProgressSummarizer::default();
+        let min_points = min_points.max(2);
+        SlopeWatchdog {
+            cap: min_points.max(summarizer.k) * 4,
+            summarizer,
+            fraction,
+            windows: windows.max(1),
+            min_points,
+            window: Vec::new(),
+            best_speed: 0.0,
+            degraded: 0,
+            armed: true,
+        }
+    }
+
+    /// Trailing best log-loss slope seen since the last full reset.
+    pub fn best_speed(&self) -> f64 {
+        self.best_speed
+    }
+
+    pub fn is_armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Full re-arm after a re-tune adopted a new setting: the slope
+    /// scale starts over (a recovered run should not be held to the
+    /// pre-drift best forever).
+    pub fn reset(&mut self) {
+        self.window.clear();
+        self.best_speed = 0.0;
+        self.degraded = 0;
+        self.armed = true;
+    }
+
+    /// Soft reset after a re-tune found nothing better: drop the stale
+    /// window (trial time passed between its points and the next) but
+    /// keep the trailing best and stay disarmed until the slope
+    /// genuinely recovers.
+    pub fn reset_window(&mut self) {
+        self.window.clear();
+        self.degraded = 0;
+    }
+
+    /// Observe one training-clock loss at time `t`.  Returns `true`
+    /// when the degradation trigger fires (and disarms itself).
+    pub fn observe(&mut self, t: f64, loss: f64) -> bool {
+        // Log domain: healthy exponential descent has constant slope
+        // there, so "slope fell to a fraction of its best" means the
+        // *rate* collapsed, not that training matured.  Non-finite
+        // losses stay non-finite and poison the window to Diverged.
+        let x = if loss.is_finite() {
+            loss.max(1e-300).ln()
+        } else {
+            f64::NAN
+        };
+        if self.window.len() == self.cap {
+            self.window.remove(0);
+        }
+        self.window.push(ProgressPoint { t, x });
+        if self.window.len() < self.min_points {
+            return false;
+        }
+        let summary = self.summarizer.summarize(&self.window);
+        if summary.label == BranchLabel::Diverged || summary.downsampled.len() < 2 {
+            self.degraded = 0;
+            return false;
+        }
+        let speed = summary.speed;
+        if speed.total_cmp(&self.best_speed) == Ordering::Greater {
+            self.best_speed = speed;
+        }
+        if !self.armed {
+            // recovery re-arm: slope back to half the trailing best
+            if self.best_speed > 0.0
+                && speed.total_cmp(&(0.5 * self.best_speed)) != Ordering::Less
+            {
+                self.armed = true;
+                self.degraded = 0;
+            }
+            return false;
+        }
+        let threshold = self.fraction * self.best_speed;
+        if self.best_speed > 0.0 && speed.total_cmp(&threshold) == Ordering::Less {
+            self.degraded += 1;
+        } else {
+            self.degraded = 0;
+        }
+        if self.degraded >= self.windows {
+            self.degraded = 0;
+            self.armed = false;
+            return true;
+        }
+        false
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -311,5 +454,101 @@ mod tests {
         let ss = s.summarize(&slow);
         let sf = s.summarize(&fast);
         assert!((sf.speed / ss.speed - 10.0).abs() < 1e-6);
+    }
+
+    /// Drive a watchdog over an exponential-descent loss stream with a
+    /// per-step log-rate given by `rate(step)`.
+    fn drive(
+        w: &mut SlopeWatchdog,
+        steps: std::ops::Range<u64>,
+        rate: impl Fn(u64) -> f64,
+    ) -> Option<u64> {
+        let mut ln_loss = 10.0f64;
+        for s in steps {
+            ln_loss -= rate(s);
+            if w.observe(s as f64, ln_loss.exp()) {
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn watchdog_never_fires_on_healthy_exponential_descent() {
+        let mut w = SlopeWatchdog::new(0.25, 3, 8);
+        assert_eq!(drive(&mut w, 0..300, |_| 0.05), None);
+        assert!(w.best_speed() > 0.0);
+        assert!(w.is_armed());
+    }
+
+    #[test]
+    fn watchdog_fires_on_rate_collapse_then_disarms() {
+        let mut w = SlopeWatchdog::new(0.25, 3, 8);
+        assert_eq!(drive(&mut w, 0..100, |_| 0.2), None, "healthy phase must not fire");
+        let fired = drive(&mut w, 100..400, |_| 0.002);
+        assert!(fired.is_some(), "20x rate collapse must fire");
+        assert!(!w.is_armed(), "firing disarms the watchdog");
+        // without a reset it stays disarmed on the degraded slope
+        assert_eq!(drive(&mut w, 400..600, |_| 0.002), None);
+        // a full reset re-arms it and restarts the slope scale: the
+        // degraded rate becomes the new normal and never re-fires
+        w.reset();
+        assert!(w.is_armed());
+        assert_eq!(drive(&mut w, 600..800, |_| 0.002), None);
+    }
+
+    #[test]
+    fn watchdog_rearms_on_recovery_without_reset() {
+        let mut w = SlopeWatchdog::new(0.25, 3, 8);
+        drive(&mut w, 0..100, |_| 0.2);
+        assert!(drive(&mut w, 100..400, |_| 0.002).is_some());
+        assert!(!w.is_armed());
+        // slope recovers to the healthy rate: the watchdog re-arms
+        drive(&mut w, 400..500, |_| 0.2);
+        assert!(w.is_armed());
+    }
+
+    #[test]
+    fn watchdog_all_nan_window_never_fires() {
+        let mut w = SlopeWatchdog::new(0.25, 1, 2);
+        for s in 0..100 {
+            assert!(!w.observe(s as f64, f64::NAN));
+        }
+        // NaNs arriving after an established healthy slope poison the
+        // window to Diverged instead of reading as degradation
+        let mut w = SlopeWatchdog::new(0.25, 3, 8);
+        drive(&mut w, 0..100, |_| 0.2);
+        for s in 100..200 {
+            assert!(!w.observe(s as f64, f64::NAN), "NaN window fired at {s}");
+        }
+    }
+
+    #[test]
+    fn watchdog_single_point_window_never_fires() {
+        // min_points clamps to >= 2, so one observation can never fire
+        let mut w = SlopeWatchdog::new(0.25, 1, 0);
+        assert!(!w.observe(0.0, 5.0));
+        // and a 2-point watchdog still needs a real slope before any
+        // degradation bookkeeping starts
+        let mut w = SlopeWatchdog::new(0.25, 1, 2);
+        assert!(!w.observe(0.0, 5.0));
+    }
+
+    #[test]
+    fn watchdog_flat_zero_slope_never_fires() {
+        // flat loss (zero included): the trailing best stays 0 and
+        // "degraded below a fraction of 0" is unsatisfiable
+        for flat in [0.0f64, 7.5] {
+            let mut w = SlopeWatchdog::new(0.25, 1, 2);
+            for s in 0..200 {
+                assert!(!w.observe(s as f64, flat), "flat {flat} fired at {s}");
+            }
+            assert_eq!(w.best_speed(), 0.0);
+        }
+        // rising loss likewise pins speed (and so best) at 0
+        let mut w = SlopeWatchdog::new(0.25, 1, 2);
+        for s in 0..200 {
+            assert!(!w.observe(s as f64, 1.0 + s as f64));
+        }
     }
 }

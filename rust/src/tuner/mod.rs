@@ -36,7 +36,7 @@ use anyhow::{bail, Result};
 use crate::comm::{BranchId, BranchType, TunerMsg};
 use crate::metrics::RunRecorder;
 use crate::searcher::{Proposal, Searcher, SearcherKind, StoppingCondition};
-use crate::summarizer::{BranchLabel, ProgressPoint, ProgressSummarizer};
+use crate::summarizer::{BranchLabel, ProgressPoint, ProgressSummarizer, SlopeWatchdog};
 use crate::stats::{Snapshot, TrialEvent};
 use crate::training::{MessageDriver, Progress, TrainingSystem};
 use crate::tunable::{TunableSetting, TunableSpace};
@@ -53,6 +53,56 @@ pub enum ConvergenceCriterion {
     LossThreshold { value: f64 },
 }
 
+/// What fired a tuning episode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetuneTrigger {
+    /// The initial tuning stage before training starts (Fig. 2).
+    Initial,
+    /// The §4.4 accuracy-plateau hook, one epoch before convergence.
+    Plateau,
+    /// The always-on progress-slope watchdog: training progress
+    /// degraded mid-run (non-stationary data, load shift, ...).
+    Watchdog,
+}
+
+impl RetuneTrigger {
+    /// Human label for report lines (`mltuner tune` output).
+    pub fn name(self) -> &'static str {
+        match self {
+            RetuneTrigger::Initial => "initial",
+            RetuneTrigger::Plateau => "re-tune",
+            RetuneTrigger::Watchdog => "watchdog re-tune",
+        }
+    }
+}
+
+/// Always-on progress-slope watchdog configuration (the re-tune
+/// trigger that fires at *any* point during training, not just at the
+/// plateau-before-convergence hook).  Gated by [`TunerConfig::retune`]
+/// — `retune = false` disarms this watchdog too.
+#[derive(Debug, Clone, Copy)]
+pub struct WatchdogConfig {
+    pub enabled: bool,
+    /// Fire when the observed slope stays below this fraction of its
+    /// trailing best...
+    pub fraction: f64,
+    /// ...for this many consecutive summarizer windows.
+    pub windows: u32,
+    /// Minimum progress points before the slope is trusted at all.
+    pub min_points: usize,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            enabled: true,
+            fraction: 0.25,
+            windows: 3,
+            min_points: 8,
+        }
+    }
+}
+
 /// MLtuner configuration.  Everything has paper defaults; only the
 /// tunable space is the user's job (§3.1).
 #[derive(Debug, Clone)]
@@ -62,7 +112,10 @@ pub struct TunerConfig {
     pub stopping: StoppingCondition,
     pub convergence: ConvergenceCriterion,
     /// Re-tune on plateau (§4.4)?  Off for the MF app and §5.3 runs.
+    /// Also gates the slope watchdog: `false` disarms all re-tuning.
     pub retune: bool,
+    /// The always-on slope watchdog (see [`WatchdogConfig`]).
+    pub watchdog: WatchdogConfig,
     /// Skip the initial tuning stage and start from this setting
     /// (the Fig. 10 robustness experiments).
     pub initial_setting: Option<TunableSetting>,
@@ -94,6 +147,7 @@ impl TunerConfig {
             stopping: StoppingCondition::default(),
             convergence: ConvergenceCriterion::AccuracyPlateau { epochs: 5 },
             retune: true,
+            watchdog: WatchdogConfig::default(),
             initial_setting: None,
             seed: 0,
             max_epochs: 10_000,
@@ -116,7 +170,7 @@ pub struct TuningRecord {
     pub trial_time: f64,
     pub chosen: Option<TunableSetting>,
     pub best_speed: f64,
-    pub initial: bool,
+    pub trigger: RetuneTrigger,
 }
 
 /// Final report of a tuned training run.
@@ -180,10 +234,19 @@ pub struct MLtuner<S: TrainingSystem> {
     /// Next `decision_log` entry to consume; past the end, decisions
     /// are measured live and appended.
     decision_cursor: usize,
+    /// The always-on slope watchdog (see [`WatchdogConfig`]).  Fire
+    /// decisions go through [`MLtuner::decision_flag`], so a resumed
+    /// session replays the original trigger points bit-exactly.
+    watchdog: SlopeWatchdog,
 }
 
 impl<S: TrainingSystem> MLtuner<S> {
     pub fn new(system: S, cfg: TunerConfig) -> Self {
+        let watchdog = SlopeWatchdog::new(
+            cfg.watchdog.fraction,
+            cfg.watchdog.windows,
+            cfg.watchdog.min_points,
+        );
         MLtuner {
             driver: MessageDriver::new(system),
             cfg,
@@ -197,6 +260,7 @@ impl<S: TrainingSystem> MLtuner<S> {
             last_checkpoint_clock: 0,
             decision_log: Vec::new(),
             decision_cursor: 0,
+            watchdog,
         }
     }
 
@@ -272,6 +336,24 @@ impl<S: TrainingSystem> MLtuner<S> {
             return v;
         }
         self.decision_log.push(measured.to_bits());
+        self.decision_cursor = self.decision_log.len();
+        measured
+    }
+
+    /// A journaled boolean decision, stored in the same log as
+    /// [`MLtuner::decision_time`] (0/1 entries) — the watchdog's fire
+    /// decisions ride the existing session format unchanged.  Consumed
+    /// and appended in the same config-static order on record and
+    /// replay (one flag per armed training clock), so a resumed run
+    /// re-fires at exactly the original clocks even though the
+    /// watchdog re-observes its inputs.
+    fn decision_flag(&mut self, measured: bool) -> bool {
+        if self.decision_cursor < self.decision_log.len() {
+            let v = self.decision_log[self.decision_cursor] != 0;
+            self.decision_cursor += 1;
+            return v;
+        }
+        self.decision_log.push(u64::from(measured));
         self.decision_cursor = self.decision_log.len();
         measured
     }
@@ -424,10 +506,14 @@ impl<S: TrainingSystem> MLtuner<S> {
         trial_time_cap: f64,
         max_trials: usize,
         episode: usize,
-        initial: bool,
+        trigger: RetuneTrigger,
     ) -> Result<(Option<(BranchId, TunableSetting, f64)>, usize)> {
         let started = self.now;
-        let label = if initial { "tuning_start" } else { "retuning_start" };
+        let label = match trigger {
+            RetuneTrigger::Initial => "tuning_start",
+            RetuneTrigger::Plateau => "retuning_start",
+            RetuneTrigger::Watchdog => "watchdog_retuning_start",
+        };
         self.recorder.event(started, label);
         let searcher_seed = self.cfg.seed.wrapping_add(episode as u64 * 7919);
         let mut searcher: Box<dyn Searcher> =
@@ -565,7 +651,7 @@ impl<S: TrainingSystem> MLtuner<S> {
                 trial_time: 0.0,
                 chosen: None,
                 best_speed: 0.0,
-                initial,
+                trigger,
             });
             return Ok((None, trials_forked));
         };
@@ -620,7 +706,7 @@ impl<S: TrainingSystem> MLtuner<S> {
             trial_time,
             chosen: Some(best.setting.clone()),
             best_speed,
-            initial,
+            trigger,
         });
         Ok((Some((best.branch, best.setting, best_speed)), trials_forked))
     }
@@ -653,7 +739,7 @@ impl<S: TrainingSystem> MLtuner<S> {
                         f64::INFINITY,
                         self.cfg.max_trials_per_tuning,
                         episode,
-                        true,
+                        RetuneTrigger::Initial,
                     )?;
                     match best {
                         None => bail!("initial tuning found no converging setting"),
@@ -673,11 +759,18 @@ impl<S: TrainingSystem> MLtuner<S> {
         #[allow(unused_assignments)]
         let mut epoch_time_est = 0.0f64;
 
+        // Config-static arming: the watchdog observes (and journals
+        // one flag per) every training clock iff re-tuning is on at
+        // all — so the decision-log cadence is identical on record and
+        // replay regardless of what the data does.
+        let watchdog_armed = self.cfg.retune && self.cfg.watchdog.enabled;
+
         'training: while epoch < self.cfg.max_epochs {
             let clocks = self.driver.system.clocks_per_epoch(train_branch).max(1);
             let epoch_started = self.now;
             let mut loss_acc = 0.0f64;
             let mut loss_n = 0u64;
+            let mut watchdog_fired = false;
             for _ in 0..clocks {
                 let p = self.schedule(train_branch)?;
                 self.recorder.record_loss(self.now, self.clock, p.value);
@@ -695,6 +788,26 @@ impl<S: TrainingSystem> MLtuner<S> {
                         break 'training;
                     }
                 }
+                if watchdog_armed {
+                    let measured = self.watchdog.observe(self.now, p.value);
+                    if self.decision_flag(measured) {
+                        self.recorder.event(self.now, "watchdog_fire");
+                        // Side-channel observability (never through
+                        // `driver.send`): `mltuner top` shows the
+                        // fired trigger live.
+                        self.driver.system.publish_trial(TrialEvent {
+                            session: 0,
+                            episode: episode as u32,
+                            trial: 0,
+                            branch: train_branch,
+                            clock: self.clock,
+                            progress: p.value,
+                            time: self.now,
+                        });
+                        watchdog_fired = true;
+                        break;
+                    }
+                }
             }
             epoch += 1;
             epoch_time_est = self.now - epoch_started;
@@ -703,6 +816,46 @@ impl<S: TrainingSystem> MLtuner<S> {
             } else {
                 f64::INFINITY
             };
+
+            if watchdog_fired {
+                // §4.4 bounds apply to watchdog episodes too: trial
+                // time ≤ the (possibly partial) epoch just measured,
+                // trial count ≤ the previous tuning's.
+                let cap = if epoch_time_est > 0.0 {
+                    epoch_time_est
+                } else {
+                    f64::INFINITY
+                };
+                let (best, trials) = self.tune_once(
+                    train_branch,
+                    cap,
+                    prev_trials.max(1),
+                    episode,
+                    RetuneTrigger::Watchdog,
+                )?;
+                episode += 1;
+                match best {
+                    Some((b, s, _)) => {
+                        if train_branch != 0 {
+                            self.free(train_branch)?;
+                        }
+                        train_branch = b;
+                        setting = s;
+                        prev_trials = trials;
+                        epochs_since_improve = 0;
+                        // fresh trailing best for the adopted setting
+                        self.watchdog.reset();
+                    }
+                    None => {
+                        // nothing converges better right now — keep
+                        // training; the watchdog stays disarmed until
+                        // progress recovers (hysteresis), so a
+                        // fruitless episode is not retried every clock
+                        self.watchdog.reset_window();
+                    }
+                }
+                continue 'training;
+            }
 
             match self.cfg.convergence {
                 ConvergenceCriterion::LossThreshold { .. } => {
@@ -738,7 +891,7 @@ impl<S: TrainingSystem> MLtuner<S> {
                             cap,
                             prev_trials.max(1),
                             episode,
-                            false,
+                            RetuneTrigger::Plateau,
                         )?;
                         episode += 1;
                         match best {
@@ -752,6 +905,7 @@ impl<S: TrainingSystem> MLtuner<S> {
                                 setting = s;
                                 prev_trials = trials;
                                 epochs_since_improve = 0;
+                                self.watchdog.reset();
                             }
                             None => {
                                 // no converging setting exists anymore:
@@ -807,7 +961,8 @@ mod tests {
     #[test]
     fn initial_tuning_finds_converging_setting() {
         let mut t = tuner_for(SimProfile::alexnet_cifar10(), 3);
-        let (best, trials) = t.tune_once(0, f64::INFINITY, 64, 0, true).unwrap();
+        let (best, trials) =
+            t.tune_once(0, f64::INFINITY, 64, 0, RetuneTrigger::Initial).unwrap();
         let (_, setting, speed) = best.expect("should find a setting");
         assert!(speed > 0.0);
         assert!(
@@ -898,7 +1053,8 @@ mod tests {
         let mut cfg = TunerConfig::new(sys.space.clone());
         cfg.seed = 3;
         let mut t = MLtuner::new(NanSpiking::new(sys), cfg);
-        let (best, trials) = t.tune_once(0, f64::INFINITY, 64, 0, true).unwrap();
+        let (best, trials) =
+            t.tune_once(0, f64::INFINITY, 64, 0, RetuneTrigger::Initial).unwrap();
         let (branch, _setting, speed) = best.expect("good settings exist besides the NaN one");
         assert!(speed > 0.0);
         assert!(trials >= 2, "the NaN trial plus at least one real one");
@@ -923,7 +1079,7 @@ mod tests {
             report.final_accuracy
         );
         assert!(!report.tunings.is_empty());
-        assert!(report.tunings[0].initial);
+        assert_eq!(report.tunings[0].trigger, RetuneTrigger::Initial);
     }
 
     #[test]
@@ -962,7 +1118,7 @@ mod tests {
         let mut t = MLtuner::new(sys, cfg);
         let report = t.run().unwrap();
         // no tuning episode before training started ⇒ first tuning is a re-tune
-        assert!(report.tunings.iter().all(|r| !r.initial));
+        assert!(report.tunings.iter().all(|r| r.trigger != RetuneTrigger::Initial));
         // robustness (Fig. 10): re-tuning recovers decent accuracy
         assert!(
             report.final_accuracy > 0.60,
@@ -986,6 +1142,49 @@ mod tests {
         let report = t.run().unwrap();
         assert!(report.converged, "never reached the loss threshold");
         assert!(report.final_loss <= 8.32e6 * 32.0 * 1.01);
+    }
+
+    #[test]
+    fn retune_false_disarms_watchdog_under_forced_drift() {
+        use crate::data::DriftSchedule;
+        let sys = SimSystem::new(SimProfile::alexnet_cifar10(), 8, 4)
+            .with_drift(DriftSchedule::step(30, 11));
+        let space = sys.space.clone();
+        let mut cfg = TunerConfig::new(space.clone());
+        cfg.retune = false;
+        cfg.seed = 4;
+        cfg.max_epochs = 120;
+        cfg.initial_setting = Some(space.decode(&[0.65, 0.2, 0.9, 0.0]));
+        let mut t = MLtuner::new(sys, cfg);
+        let report = t.run().unwrap();
+        assert!(
+            report.tunings.is_empty(),
+            "retune=false must disarm the watchdog too, got {:?}",
+            report.tunings
+        );
+    }
+
+    #[test]
+    fn watchdog_fires_on_mid_training_drift() {
+        use crate::data::DriftSchedule;
+        let sys = SimSystem::new(SimProfile::alexnet_cifar10(), 8, 7)
+            .with_drift(DriftSchedule::step(40, 5));
+        let space = sys.space.clone();
+        let mut cfg = TunerConfig::new(space.clone());
+        cfg.seed = 7;
+        cfg.max_epochs = 200;
+        cfg.initial_setting = Some(space.decode(&[0.65, 0.2, 0.9, 0.0]));
+        let mut t = MLtuner::new(sys, cfg);
+        let report = t.run().unwrap();
+        assert!(
+            report.tunings.iter().any(|r| r.trigger == RetuneTrigger::Watchdog),
+            "drift must fire the slope watchdog, got {:?}",
+            report.tunings.iter().map(|r| r.trigger).collect::<Vec<_>>()
+        );
+        assert!(
+            report.recorder.events.iter().any(|e| e.label == "watchdog_fire"),
+            "the fire must be journaled as a recorder event"
+        );
     }
 
     #[test]

@@ -30,6 +30,7 @@ use common::{mf_ckpt_script, run_mf_script, store_fingerprint};
 use mltuner::apps::mf::{MfConfig, MfSystem};
 use mltuner::apps::sim::{SimProfile, SimSystem};
 use mltuner::comm::{BranchType, TunerMsg};
+use mltuner::data::DriftSchedule;
 use mltuner::metrics::RunRecorder;
 use mltuner::optim::{Hyper, Optimizer, OptimizerKind};
 use mltuner::ps::checkpoint::{decode_segment, encode_segment, RowRecord};
@@ -37,7 +38,7 @@ use mltuner::ps::{ParamServer, ParamStore};
 use mltuner::training::{MessageDriver, TrainingSystem};
 use mltuner::tunable::TunableSetting;
 use mltuner::tuner::session::{self, CheckpointDir, CheckpointPolicy, SessionHeader};
-use mltuner::tuner::{MLtuner, TunerConfig};
+use mltuner::tuner::{MLtuner, RetuneTrigger, TunerConfig};
 use mltuner::util::rng::Rng;
 
 /// Unique scratch directory, removed on drop (best effort).
@@ -415,6 +416,104 @@ fn sim_tune_killed_mid_initial_tuning_resumes_bit_exact() {
             r.accuracies
                 .iter()
                 .map(|&(t, e, a)| (t.to_bits(), e, a.to_bits()))
+                .collect::<Vec<_>>(),
+            r.events
+                .iter()
+                .map(|e| (e.time.to_bits(), e.label.clone()))
+                .collect::<Vec<_>>(),
+        )
+    };
+    assert_eq!(key(&report1.recorder), key(&report2.recorder), "recorder must be bit-exact");
+}
+
+/// Like [`sim_tuner`] but with a step drift mid-training and a fixed
+/// (so drift-vulnerable) initial setting — the shape that fires the
+/// slope watchdog mid-run.
+fn drift_tuner(
+    seed: u64,
+    ckpt: Option<(PathBuf, u64)>,
+    crash: Option<u64>,
+    resume: bool,
+) -> MLtuner<SimSystem> {
+    let sys = SimSystem::new(SimProfile::alexnet_cifar10(), 8, seed)
+        .with_drift(DriftSchedule::step(40, 5));
+    let space = sys.space.clone();
+    let mut cfg = TunerConfig::new(space.clone());
+    cfg.seed = seed;
+    cfg.max_epochs = 200;
+    cfg.initial_setting = Some(space.decode(&[0.65, 0.2, 0.9, 0.0]));
+    cfg.checkpoint = ckpt.map(|(dir, every_clocks)| CheckpointPolicy { dir, every_clocks });
+    cfg.resume = resume;
+    cfg.crash_after_clocks = crash;
+    MLtuner::new(sys, cfg)
+}
+
+#[test]
+fn sim_tune_killed_mid_watchdog_retune_under_drift_resumes_bit_exact() {
+    // The journaled watchdog fire decisions are the thing under test:
+    // a session killed *inside* a slope-triggered re-tune episode (with
+    // the drift still active) must resume to a report bit-exact with an
+    // uninterrupted run — the replayed decision log re-fires the
+    // watchdog at exactly the original clocks.
+    let seed = 7;
+    let report1 = drift_tuner(seed, None, None, false).run().unwrap();
+    assert!(
+        report1.tunings.iter().any(|t| t.trigger == RetuneTrigger::Watchdog),
+        "reference run must contain a watchdog-fired episode: {:?}",
+        report1.tunings.iter().map(|t| t.trigger).collect::<Vec<_>>()
+    );
+
+    // locate the fire and crash a few clocks into the episode it opens
+    let fire_time = report1
+        .recorder
+        .events
+        .iter()
+        .find(|e| e.label == "watchdog_fire")
+        .expect("fire event journaled")
+        .time;
+    let fire_clock = report1
+        .recorder
+        .losses
+        .iter()
+        .filter(|&&(t, _, _)| t <= fire_time)
+        .map(|&(_, c, _)| c)
+        .last()
+        .expect("losses recorded before the fire");
+    let crash_clock = fire_clock + 5; // each trial runs >= 3 clocks
+
+    let tmp = TempDir::new("sim-drift-resume");
+    let err = drift_tuner(seed, Some((tmp.path().to_path_buf(), 4)), Some(crash_clock), false)
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("crash injection"), "{err}");
+    let step = CheckpointDir::new(tmp.path()).latest().unwrap().expect("checkpoint committed");
+    let loaded = session::load(&step).unwrap();
+    assert!(loaded.header.clock < crash_clock);
+    assert!(
+        !loaded.decisions.is_empty(),
+        "the checkpoint must carry the journaled watchdog decisions"
+    );
+
+    let report2 = drift_tuner(seed, Some((tmp.path().to_path_buf(), 4)), None, true)
+        .run()
+        .unwrap();
+    assert_eq!(report1.clocks, report2.clocks);
+    assert_eq!(report1.epochs, report2.epochs);
+    assert_eq!(report1.converged, report2.converged);
+    assert_eq!(
+        report1.tunings.iter().map(|t| t.trigger).collect::<Vec<_>>(),
+        report2.tunings.iter().map(|t| t.trigger).collect::<Vec<_>>(),
+        "trigger sequence must replay exactly"
+    );
+    assert_eq!(
+        report1.final_accuracy.to_bits(),
+        report2.final_accuracy.to_bits()
+    );
+    let key = |r: &RunRecorder| {
+        (
+            r.losses
+                .iter()
+                .map(|&(t, c, l)| (t.to_bits(), c, l.to_bits()))
                 .collect::<Vec<_>>(),
             r.events
                 .iter()

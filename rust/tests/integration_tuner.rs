@@ -6,7 +6,7 @@ use mltuner::apps::mf::{MfConfig, MfSystem};
 use mltuner::apps::sim::{SimProfile, SimSystem};
 use mltuner::searcher::SearcherKind;
 use mltuner::tunable::TunableSpace;
-use mltuner::tuner::{ConvergenceCriterion, MLtuner, TunerConfig};
+use mltuner::tuner::{ConvergenceCriterion, MLtuner, RetuneTrigger, TunerConfig};
 
 fn sim_tuner(profile: SimProfile, searcher: SearcherKind, seed: u64) -> MLtuner<SimSystem> {
     let sys = SimSystem::new(profile, 8, seed);
@@ -78,7 +78,7 @@ fn large_profile_tuning_overhead_is_small() {
         report.final_accuracy
     );
     let initial = &report.tunings[0];
-    assert!(initial.initial);
+    assert_eq!(initial.trigger, RetuneTrigger::Initial);
     let initial_cost = initial.ended - initial.started;
     assert!(
         initial_cost / report.total_time < 0.25,
@@ -200,7 +200,7 @@ fn zero_retune_budget_stops_after_initial_tuning() {
     let report = MLtuner::new(sys, cfg).run().unwrap();
     assert!(report.converged);
     assert_eq!(report.tunings.len(), 1, "initial tuning only");
-    assert!(report.tunings[0].initial);
+    assert_eq!(report.tunings[0].trigger, RetuneTrigger::Initial);
 }
 
 #[test]

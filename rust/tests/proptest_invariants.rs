@@ -3,6 +3,7 @@
 //! seeded random cases and reports the failing seed).
 
 use mltuner::comm::binwire;
+use mltuner::data::DriftSchedule;
 use mltuner::comm::socket::{decode_length_frame, encode_length_frame, MAX_FRAME_LEN};
 use mltuner::comm::wire::{
     decode_ps_reply, decode_ps_request, encode_ps_reply, encode_ps_request, PsReply, PsRequest,
@@ -1138,6 +1139,112 @@ fn prop_stats_delta_interleavings_merge_to_final_totals() {
         }
         assert_eq!(collector.servers_reporting(), servers);
         assert_eq!(collector.view(), merge_cluster(&finals), "interleaved != final-frame merge");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Data drift generators (non-stationary workload harness)
+// ---------------------------------------------------------------------------
+
+fn random_drift(rng: &mut Rng) -> DriftSchedule {
+    let at = rng.gen_range(0, 200) as u64;
+    let seed = rng.next_u64();
+    match rng.gen_range(0, 3) {
+        0 => DriftSchedule::none(),
+        1 => DriftSchedule::step(at, seed),
+        _ => DriftSchedule::ramp(at, rng.gen_range(1, 100) as u64, seed),
+    }
+}
+
+#[test]
+fn prop_drift_ratings_pure_order_free_and_finite() {
+    // The generator is a pure function of (schedule, clock, user,
+    // item, rating): visiting examples in any order — i.e. under any
+    // shard layout or worker count — yields bit-identical per-example
+    // results, finite outputs for finite inputs, identity before the
+    // onset, and untouched non-finite passthrough.
+    prop(200, |rng| {
+        let d = random_drift(rng);
+        let d2 = d; // Copy: an independent instance of the same schedule
+        let n = rng.gen_range(1, 40);
+        let examples: Vec<(u64, u32, u32, f32)> = (0..n)
+            .map(|_| {
+                (
+                    rng.next_u64() >> 48,
+                    (rng.next_u64() % 1000) as u32,
+                    (rng.next_u64() % 1000) as u32,
+                    (rng.gen_normal() * 2.5) as f32,
+                )
+            })
+            .collect();
+        let forward: Vec<u32> = examples
+            .iter()
+            .map(|&(c, u, i, r)| d.drifted_rating(c, u, i, r).to_bits())
+            .collect();
+        let mut reverse: Vec<u32> = examples
+            .iter()
+            .rev()
+            .map(|&(c, u, i, r)| d2.drifted_rating(c, u, i, r).to_bits())
+            .collect();
+        reverse.reverse();
+        assert_eq!(forward, reverse, "visit order must never change the stream");
+        for (&(clock, _, _, r), &bits) in examples.iter().zip(&forward) {
+            let out = f32::from_bits(bits);
+            assert!(out.is_finite(), "finite in, finite out: {r} -> {out}");
+            // the blend toward a target in [-2, 2] can never escape the
+            // envelope of its two finite endpoints
+            assert!(out.abs() <= r.abs().max(2.0) + 1e-5, "{r} -> {out}");
+            if clock < d.at || !d.is_active() {
+                assert_eq!(bits, r.to_bits(), "identity before the onset");
+            }
+        }
+        // non-finite ratings pass through untouched, whatever the clock
+        let clock = d.at.saturating_add(rng.gen_range(0, 100) as u64);
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            assert_eq!(d.drifted_rating(clock, 1, 2, bad).to_bits(), bad.to_bits());
+        }
+        // the drift factor is bounded and monotone in the clock
+        let mut last = 0.0f64;
+        for c in 0..d.at + 3 * d.ramp_clocks + 4 {
+            let f = d.factor(c);
+            assert!((0.0..=1.0).contains(&f), "factor {f} out of range at {c}");
+            assert!(f >= last, "factor must be monotone: {last} -> {f} at {c}");
+            last = f;
+        }
+    });
+}
+
+#[test]
+fn prop_drift_labels_valid_and_shift_direction_unit_norm() {
+    prop(200, |rng| {
+        let d = random_drift(rng);
+        let classes = rng.gen_range(1, 12);
+        let clock = rng.next_u64() >> 48;
+        for _ in 0..30 {
+            let key = rng.next_u64();
+            let label = rng.gen_range(0, classes) as i32;
+            let out = d.drifted_label(clock, key, label, classes);
+            assert!(
+                (0..classes as i32).contains(&out),
+                "label {out} escaped [0, {classes})"
+            );
+            assert_eq!(out, d.drifted_label(clock, key, label, classes), "bit-reproducible");
+            if d.factor(clock) <= 0.0 {
+                assert_eq!(out, label, "identity before the onset");
+            }
+        }
+        // the covariate-shift direction is reproducible, finite and
+        // unit-norm (within f32 rounding of the f64 normalization)
+        let dim = rng.gen_range(1, 32);
+        let a = d.shift_direction(dim);
+        let b = d.shift_direction(dim);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(a.iter().all(|v| v.is_finite()));
+        let norm: f64 = a.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
     });
 }
 

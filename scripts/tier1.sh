@@ -50,6 +50,16 @@ cargo test --release --test integration_distributed
 # bit-exactness story).
 cargo test --release --test integration_checkpoint
 
+# Non-stationary workload scenarios (mirrors the CI `scenarios` leg):
+# mid-run step drift collapses a fixed setting while the slope watchdog
+# re-tunes and recovers >= 2x sooner; the coupled lr+momentum adaptive
+# adversary stays far from the threshold in the same budget; a 6x load
+# spike mid-tune breaks neither convergence nor determinism; all
+# bit-reproducible per seed, kill-and-resume included (already part of
+# `cargo test -q` above; re-run at release opt-level so optimizations
+# cannot change the bit-exactness story).
+cargo test --release --test integration_scenarios
+
 # Module docs are load-bearing (docs/ARCHITECTURE.md links into them):
 # rustdoc must stay warning-clean (mirrors the CI `docs` leg).
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
